@@ -1,0 +1,72 @@
+//! Heterogeneous-data example (paper Appendix A.2 / C.5): why plain
+//! integer compression blows up on heterogeneous shards and how IntDIANA
+//! fixes it by compressing gradient *differences*.
+//!
+//!   cargo run --release --example logreg_diana
+
+use anyhow::Result;
+
+use intsgd::data::{synth_dataset, DATASETS};
+use intsgd::optim::{Estimator, IntDiana};
+
+fn main() -> Result<()> {
+    let spec = &DATASETS[0]; // a5a geometry: N=6414, d=123
+    let workers = 12;
+    let rounds = 300;
+    println!(
+        "dataset {} (N={}, d={}, lambda={:.0e}), {} heterogeneous shards",
+        spec.name, spec.n_examples, spec.dim, spec.lambda2, workers
+    );
+
+    let ds = synth_dataset(spec, 11);
+    let shards = ds.shards(workers);
+    let global = ds.global();
+
+    // reference optimum by pooled gradient descent
+    let mut x = vec![0.0f32; spec.dim];
+    for _ in 0..2000 {
+        let g = global.grad(&x);
+        for (xi, &gi) in x.iter_mut().zip(&g) {
+            *xi -= 1.0 * gi;
+        }
+    }
+    let f_star = global.loss(&x);
+    println!("f* = {f_star:.6}\n");
+
+    let m = shards[0].examples();
+    let tau = (m / 20).max(1);
+    let runs: Vec<(&str, Estimator, bool, usize)> = vec![
+        ("IntGD (no shifts)", Estimator::Gd, false, 0),
+        ("IntDIANA", Estimator::Gd, true, 0),
+        ("VR-IntDIANA (L-SVRG)", Estimator::LSvrg { p: tau as f64 / m as f64 }, true, tau),
+    ];
+
+    for (name, est, shifts, mb) in runs {
+        let mut opt = IntDiana::new(workers, spec.dim, 0.5, est, shifts, 3);
+        let (xf, recs) = opt.run(
+            &shards,
+            vec![0.0f32; spec.dim],
+            rounds,
+            mb,
+            &global,
+            f_star,
+            rounds / 10,
+        );
+        println!("=== {name} ===");
+        println!("round  objective_gap   max_agg_int   bits/coord");
+        for r in &recs {
+            println!(
+                "{:>5}  {:>13.3e}  {:>12}  {:>10.1}",
+                r.round, r.objective, r.max_abs_int, r.agg_bits_per_coord
+            );
+        }
+        let gap = global.loss(&xf) - f_star;
+        println!("final gap {gap:.3e}\n");
+    }
+    println!(
+        "IntGD's integers explode as x -> x* (alpha ~ 1/||dx|| against a\n\
+         non-vanishing local gradient); IntDIANA's differences g_i - h_i\n\
+         shrink with the steps, keeping the wire a few bits per coordinate."
+    );
+    Ok(())
+}

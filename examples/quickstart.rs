@@ -1,0 +1,118 @@
+//! Quickstart: distributed IntSGD over the full three-layer stack.
+//!
+//! Trains the MLP classifier on synthetic CIFAR-like data with 4 simulated
+//! workers, comparing full-precision SGD against IntSGD with the int8
+//! wire. Gradients are computed by the AOT-compiled JAX/Pallas train step
+//! through PJRT; compression, aggregation and optimization run in rust.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use intsgd::compress::intsgd::{IntSgd, Rounding, WireInt};
+use intsgd::compress::IdentitySgd;
+use intsgd::coordinator::{
+    BatchSpec, Coordinator, GradientSource, LrSchedule, PjrtWorker, TrainConfig,
+    WorkerPool,
+};
+use intsgd::data::{shard_iid, CifarLike};
+use intsgd::netsim::Network;
+use intsgd::runtime::{init_params, Runtime};
+use intsgd::scaling::MovingAverageRule;
+
+fn main() -> Result<()> {
+    let n = 4; // simulated workers
+    let rounds = 40;
+    let artifact_dir =
+        std::env::var("INTSGD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+
+    // inspect the manifest for the classifier model
+    let rt = Runtime::open(&artifact_dir)?;
+    let meta = rt.meta("classifier_train_step").expect("run `make artifacts`").clone();
+    println!(
+        "model: classifier ({} params over {} arrays)",
+        meta.grad_dim,
+        meta.params.len()
+    );
+
+    // shared synthetic dataset, one iid shard per worker
+    let data = Arc::new(CifarLike::generate(2048, 512, 1.2, 0));
+    let batch = meta.extra_usize("batch").unwrap_or(32);
+
+    for algo in ["sgd_fp32", "intsgd_random_int8"] {
+        // spawn the worker pool: each thread owns its own PJRT client
+        let shards = shard_iid(data.train_count(), n, 1);
+        let factories: Vec<Box<dyn FnOnce() -> Box<dyn GradientSource> + Send>> =
+            shards
+                .into_iter()
+                .enumerate()
+                .map(|(i, indices)| {
+                    let data = Arc::clone(&data);
+                    let dir = artifact_dir.clone();
+                    let f: Box<dyn FnOnce() -> Box<dyn GradientSource> + Send> =
+                        Box::new(move || {
+                            Box::new(
+                                PjrtWorker::new(
+                                    &dir,
+                                    "classifier",
+                                    BatchSpec::Classifier { data, indices, batch },
+                                    100 + i as u64,
+                                )
+                                .expect("worker"),
+                            )
+                        });
+                    f
+                })
+                .collect();
+        let mut pool = WorkerPool::spawn(factories);
+
+        // leader state: params from the manifest init specs
+        let init: Vec<f32> = init_params(&meta.params, 42).concat();
+        let block_dims: Vec<usize> = meta.params.iter().map(|p| p.numel()).collect();
+        let mut coord = Coordinator::new(init, block_dims, Network::paper_cluster());
+
+        let mut compressor: Box<dyn intsgd::compress::DistributedCompressor> =
+            match algo {
+                "sgd_fp32" => Box::new(IdentitySgd::allreduce()),
+                _ => Box::new(IntSgd::new(
+                    Rounding::Stochastic,
+                    WireInt::Int8,
+                    Box::new(MovingAverageRule::default_paper()),
+                    n,
+                    7,
+                )),
+            };
+
+        let cfg = TrainConfig {
+            rounds,
+            schedule: LrSchedule::constant(0.1),
+            momentum: 0.9,
+            weight_decay: 1e-4,
+            eval_every: 0,
+        };
+        let res = coord.train(&mut pool, compressor.as_mut(), &cfg, None);
+        pool.shutdown();
+
+        println!("\n=== {algo} ===");
+        println!("round  train_loss  wire_bytes/worker  comm_model_ms");
+        for r in res.records.iter().step_by(8) {
+            println!(
+                "{:>5}  {:>10.4}  {:>17}  {:>13.4}",
+                r.round,
+                r.train_loss,
+                r.wire_bytes_per_worker,
+                r.comm_seconds * 1e3
+            );
+        }
+        let last = res.records.last().unwrap();
+        println!(
+            "final: loss {:.4}, per-round comm {:.4} ms (modeled, 100 Gb/s cluster)",
+            last.train_loss,
+            last.comm_seconds * 1e3
+        );
+    }
+    println!("\nIntSGD ships 4x fewer bytes with the same convergence — the paper's headline.");
+    Ok(())
+}

@@ -1,0 +1,122 @@
+"""L1/L2 performance analysis: static inspection of the lowered artifacts.
+
+interpret=True Pallas gives CPU-numpy wallclock, which is NOT a TPU proxy
+(DESIGN.md §Hardware-Adaptation), so kernel performance is assessed
+structurally:
+
+- **VMEM footprint** per grid step from the BlockSpec tiling (operands +
+  outputs resident per step) — must stay under the ~16 MiB/core budget
+  with double-buffering headroom.
+- **Roofline classification** from the HLO: elementwise kernels are
+  HBM-bandwidth-bound (report bytes moved / FLOP), matmul kernels are
+  MXU-bound (report FLOPs and utilization at the tile shape).
+- **HLO op census** per artifact: fusion count, dot/while/custom-call
+  presence (a Mosaic custom-call would mean a non-portable lowering).
+
+Run: `python -m compile.analysis` (after `make artifacts`), or via pytest
+(python/tests/test_analysis.py) which asserts the budgets.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+from collections import Counter
+
+from .kernels.int_round import BLOCK
+from .kernels.fused_linear import BM, BN
+
+F32 = 4  # bytes
+
+
+def vmem_budget_report():
+    """Static VMEM accounting per Pallas kernel (bytes per grid step)."""
+    reports = {}
+    # int_round_stochastic: g, u tiles in; out tile; two scalars
+    reports["int_round_stochastic"] = {
+        "block": BLOCK,
+        "vmem_bytes": 3 * BLOCK * F32 + 2 * F32,
+        "operands": ["g[BLOCK]", "u[BLOCK]", "alpha[1]", "clip[1]", "out[BLOCK]"],
+        "bound": "HBM bandwidth (elementwise)",
+        "bytes_per_elem": 3 * F32,  # read g, read u, write out
+        "flops_per_elem": 3,  # mul, add, floor(+clip)
+    }
+    reports["int_round_deterministic"] = {
+        "block": BLOCK,
+        "vmem_bytes": 2 * BLOCK * F32 + 2 * F32,
+        "operands": ["g[BLOCK]", "alpha[1]", "clip[1]", "out[BLOCK]"],
+        "bound": "HBM bandwidth (elementwise)",
+        "bytes_per_elem": 2 * F32,
+        "flops_per_elem": 3,
+    }
+    reports["dequant_update"] = {
+        "block": BLOCK,
+        "vmem_bytes": 3 * BLOCK * F32 + 2 * F32,
+        "operands": ["x[BLOCK]", "s[BLOCK]", "alpha[1]", "lr[1]", "out[BLOCK]"],
+        "bound": "HBM bandwidth (elementwise)",
+        "bytes_per_elem": 3 * F32,
+        "flops_per_elem": 3,
+    }
+    # fused_linear with K resident: x(BM x K), w(K x BN), b(BN), out(BM x BN)
+    for name, k in [("fused_linear_k3072", 3072), ("fused_linear_k256", 256)]:
+        reports[name] = {
+            "block": (BM, BN, k),
+            "vmem_bytes": (BM * k + k * BN + BN + BM * BN) * F32,
+            "operands": [f"x[{BM},{k}]", f"w[{k},{BN}]", f"b[{BN}]",
+                         f"out[{BM},{BN}]"],
+            "bound": "MXU (dot)",
+            "flops_per_step": 2 * BM * BN * k,
+            "mxu_tiles_per_step": (BM // 128) * (BN // 128) * max(1, k // 128),
+        }
+    return reports
+
+
+VMEM_LIMIT = 16 * 1024 * 1024  # bytes/core, v4-class
+
+
+def hlo_census(path: str) -> Counter:
+    """Count HLO opcodes in an artifact (text format)."""
+    ops = Counter()
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            # instruction lines look like: `%name = type op(args), ...`
+            m = re.match(r"(ROOT\s+)?%?[\w.\-]+\s*=\s*[\w\[\]{},/ ]+?\s+([a-z][\w\-]*)\(", line)
+            if m:
+                ops[m.group(2)] += 1
+    return ops
+
+
+def analyze(artifact_dir: str):
+    manifest = json.load(open(os.path.join(artifact_dir, "manifest.json")))
+    print("== L1 kernel VMEM/roofline budgets ==")
+    for name, rep in vmem_budget_report().items():
+        frac = rep["vmem_bytes"] / VMEM_LIMIT
+        print(f"  {name}: {rep['vmem_bytes']/1024:.0f} KiB/step "
+              f"({frac*100:.1f}% of VMEM), bound: {rep['bound']}")
+    print("\n== L2 artifact HLO census ==")
+    rows = []
+    for name, entry in sorted(manifest["artifacts"].items()):
+        path = os.path.join(artifact_dir, entry["file"])
+        ops = hlo_census(path)
+        total = sum(ops.values())
+        dots = ops.get("dot", 0)
+        fusions = ops.get("fusion", 0)
+        custom = ops.get("custom-call", 0)
+        whiles = ops.get("while", 0)
+        rows.append((name, total, dots, fusions, whiles, custom))
+        print(f"  {name}: {total} ops, dot={dots}, fusion={fusions}, "
+              f"while={whiles}, custom-call={custom}")
+    bad = [r for r in rows if r[5] > 0]
+    if bad:
+        print("\nWARNING: custom-calls present (non-portable lowering):",
+              [r[0] for r in bad])
+    return rows
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts")
+    analyze(d)

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels (build-time only; interpret=True on CPU)."""
+
+from .int_round import int_round_stochastic, int_round_deterministic
+from .dequant_update import dequant_update
+from .fused_linear import fused_linear
+
+__all__ = [
+    "int_round_stochastic",
+    "int_round_deterministic",
+    "dequant_update",
+    "fused_linear",
+]

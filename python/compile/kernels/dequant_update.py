@@ -1,0 +1,51 @@
+"""Pallas kernel: fused dequantize + SGD update.
+
+Every worker decodes the aggregated integer message and applies the step in
+one pass (paper Alg. 1 lines 12-13):
+
+    x <- x - eta * ( sum_i Int(alpha g_i) ) / (n * alpha)
+
+Fusing the dequantization (divide by n*alpha) with the parameter update
+halves HBM traffic vs materializing g_tilde: one read of x, one read of s,
+one write of x'. Same 1-D VMEM tiling as int_round.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .int_round import BLOCK, _pad_to_block
+
+
+def _kernel(n, x_ref, s_ref, alpha_ref, lr_ref, o_ref):
+    inv = 1.0 / (n * alpha_ref[0])
+    o_ref[...] = x_ref[...] - lr_ref[0] * (s_ref[...] * inv)
+
+
+def dequant_update(x, s, alpha, lr, n):
+    """Fused x - lr * s/(n*alpha); see ref.dequant_update_ref.
+
+    x: f32[d] params, s: f32[d] aggregated ints, alpha: f32[1], lr: f32[1],
+    n: static python int (worker count).
+    """
+    xp, d = _pad_to_block(x)
+    sp, _ = _pad_to_block(s)
+    grid = xp.shape[0] // BLOCK
+    out = pl.pallas_call(
+        functools.partial(_kernel, n),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.float32),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        interpret=True,
+    )(xp, sp, alpha, lr)
+    return out[:d]

@@ -1,0 +1,69 @@
+"""Pallas kernel: tiled fused linear layer y = act(x @ w + b).
+
+This is the model-side MXU hot-spot (DESIGN.md §Hardware-Adaptation): where
+the paper's PyTorch models rely on cuDNN/cuBLAS, we express the dense
+layers as an MXU-tiled Pallas matmul so the whole train step lowers into a
+single HLO module with the compression kernels.
+
+Tiling: grid (M/BM, N/BN); each grid step keeps an x-tile (BM x K) and a
+w-tile (K x BN) resident in VMEM and accumulates in f32. For the model
+sizes in this repo K fits VMEM whole, so no K-loop is needed; the BlockSpec
+already expresses the HBM->VMEM schedule a CUDA kernel would do with
+threadblock staging.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 128
+BN = 128
+
+
+def _kernel(act, x_ref, w_ref, b_ref, o_ref):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...]
+    if act == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def _pad(v, axis, mult):
+    size = v.shape[axis]
+    pad = (-size) % mult
+    if pad:
+        widths = [(0, 0)] * v.ndim
+        widths[axis] = (0, pad)
+        v = jnp.pad(v, widths)
+    return v
+
+
+def fused_linear(x, w, b, act="relu"):
+    """y = act(x @ w + b) with MXU-tiled Pallas; see ref.fused_linear_ref.
+
+    x: f32[m, k], w: f32[k, n], b: f32[n]; act in {'relu', 'none'} (static).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    xp = _pad(x, 0, BM)
+    wp = _pad(w, 1, BN)
+    bp = _pad(b, 0, BN)
+    mp, np_ = xp.shape[0], wp.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_kernel, act),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=(mp // BM, np_ // BN),
+        in_specs=[
+            pl.BlockSpec((BM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BN), lambda i, j: (0, j)),
+            pl.BlockSpec((BN,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]

@@ -1,0 +1,91 @@
+"""Pallas kernel: the IntSGD compression hot-spot.
+
+scale -> (+uniform) -> floor/round -> clip, elementwise over the flattened
+gradient. This is the operator every worker applies every round (paper
+Alg. 1 line 8), so it is the L1 hot-spot of the stack.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the flattened gradient is
+tiled into BLOCK-sized VMEM-resident chunks via a 1-D grid; each grid step
+streams one chunk through the VPU (the op is elementwise, so the roofline is
+HBM bandwidth, not MXU). BLOCK = 8 * 128 * 8 keeps the three live operands
+(g, u, out) well under 2 MiB of VMEM while amortizing grid overhead.
+
+`alpha` (the shared scale) and `clip` (the per-worker clip bound
+(2^{b-1}-1)/n that makes the *aggregate* fit the wire integer type, paper
+§5.1) are runtime scalars, so one artifact serves every worker count and
+bit width.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret-mode lowering produces plain HLO with identical
+numerics (validated against ref.py by pytest and against the rust mirror by
+cargo test).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 8 sublanes x 128 lanes x 8 — aligned to the VPU tile, 32 KiB per f32
+# operand per grid step.
+BLOCK = 8 * 128 * 8
+
+
+def _stoch_kernel(g_ref, u_ref, alpha_ref, clip_ref, o_ref):
+    scaled = g_ref[...] * alpha_ref[0]
+    c = clip_ref[0]
+    o_ref[...] = jnp.clip(jnp.floor(scaled + u_ref[...]), -c, c)
+
+
+def _determ_kernel(g_ref, alpha_ref, clip_ref, o_ref):
+    scaled = g_ref[...] * alpha_ref[0]
+    c = clip_ref[0]
+    o_ref[...] = jnp.clip(jnp.round(scaled), -c, c)
+
+
+def _pad_to_block(v):
+    d = v.shape[0]
+    pad = (-d) % BLOCK
+    if pad:
+        v = jnp.pad(v, (0, pad))
+    return v, d
+
+
+_scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+_block_spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+
+
+def int_round_stochastic(g, u, alpha, clip):
+    """Pallas stochastic integer rounding; see ref.int_round_stochastic_ref.
+
+    g: f32[d], u: f32[d] uniform-[0,1), alpha: f32[1], clip: f32[1].
+    Returns f32[d] of integer values in [-clip, clip].
+    """
+    gp, d = _pad_to_block(g)
+    up, _ = _pad_to_block(u)
+    grid = gp.shape[0] // BLOCK
+    out = pl.pallas_call(
+        _stoch_kernel,
+        out_shape=jax.ShapeDtypeStruct(gp.shape, jnp.float32),
+        grid=(grid,),
+        in_specs=[_block_spec, _block_spec, _scalar_spec, _scalar_spec],
+        out_specs=_block_spec,
+        interpret=True,
+    )(gp, up, alpha, clip)
+    return out[:d]
+
+
+def int_round_deterministic(g, alpha, clip):
+    """Pallas deterministic integer rounding; see ref.int_round_deterministic_ref."""
+    gp, d = _pad_to_block(g)
+    grid = gp.shape[0] // BLOCK
+    out = pl.pallas_call(
+        _determ_kernel,
+        out_shape=jax.ShapeDtypeStruct(gp.shape, jnp.float32),
+        grid=(grid,),
+        in_specs=[_block_spec, _scalar_spec, _scalar_spec],
+        out_specs=_block_spec,
+        interpret=True,
+    )(gp, alpha, clip)
+    return out[:d]

@@ -1,0 +1,70 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has a matching function here with identical
+signature and semantics; pytest (python/tests/) asserts allclose between the
+two, and the rust integration tests cross-check the compiled artifacts
+against the same math re-implemented in rust (rust/src/compress/intsgd.rs).
+
+The rounding semantics follow the paper exactly:
+
+  Int(t) = floor(t) + Bernoulli(t - floor(t))        (randomized, §2)
+         = floor(t + u),  u ~ U[0, 1)                (equivalent form)
+
+  deterministic variant = round-half-to-even (the paper's torch.round).
+
+Values are clipped to [-clip, clip] *after* scaling so that the aggregated
+sum of n workers fits the wire integer type (int8/int32 in the paper §5.1).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def int_round_stochastic_ref(g, u, alpha, clip):
+    """Stochastically round alpha*g to integers, clipped to [-clip, clip].
+
+    Args:
+      g: f32[d] gradient.
+      u: f32[d] uniform-[0,1) randomness (generated outside; see DESIGN.md
+         §Hardware-Adaptation — replayable, no per-thread RNG state).
+      alpha: f32[1] shared scale.
+      clip: f32[1] clip bound (e.g. 127/n for int8 wires).
+
+    Returns: f32[d] holding integer values (kept f32 on the wire format
+    boundary; the rust side reinterprets/casts — XLA CPU all-reduce of f32
+    integers is exact below 2^24).
+    """
+    scaled = g * alpha[0]
+    rounded = jnp.floor(scaled + u)
+    return jnp.clip(rounded, -clip[0], clip[0])
+
+
+def int_round_deterministic_ref(g, alpha, clip):
+    """Deterministic variant: round-half-to-even of alpha*g, clipped."""
+    scaled = g * alpha[0]
+    rounded = jnp.round(scaled)  # jnp.round == round-half-to-even == torch.round
+    return jnp.clip(rounded, -clip[0], clip[0])
+
+
+def dequant_update_ref(x, s, alpha, lr, n):
+    """Fused model update: x <- x - lr * (s / (n * alpha)).
+
+    Args:
+      x: f32[d] current parameters (flattened).
+      s: f32[d] aggregated integer message sum_i Int(alpha * g_i).
+      alpha: f32[1] shared scale used at compression time.
+      lr: f32[1] step size eta_k.
+      n: python int, number of workers (static).
+    """
+    return x - lr[0] * (s / (n * alpha[0]))
+
+
+def fused_linear_ref(x, w, b, act):
+    """y = act(x @ w + b); act in {'relu', 'none'} (static)."""
+    y = x @ w + b
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act != "none":
+        raise ValueError(f"unknown act {act!r}")
+    return y

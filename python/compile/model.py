@@ -1,0 +1,319 @@
+"""Layer-2: JAX model definitions (build-time only).
+
+Each model exposes a `*_train_step(*params, x, y) -> (loss, *grads)` pure
+function that aot.py lowers to one self-contained HLO module. The rust
+coordinator then drives training entirely through PJRT: it owns the
+parameter literals, feeds minibatches, receives per-worker gradients, and
+runs the compression/collective path on them.
+
+Models
+------
+- classifier: 3-layer MLP on 32x32x3 inputs (stands in for ResNet18/CIFAR;
+  see DESIGN.md substitution table). Dense layers run on the Pallas
+  fused_linear kernel via a custom_vjp so the backward pass stays in XLA.
+- lm: 2-layer LSTM character language model with tied embeddings (stands in
+  for the paper's 3-layer LSTM / Wikitext-2).
+- transformer: small pre-LN transformer LM for the end-to-end example.
+- logreg_grad: closed-form minibatch gradient of l2-regularized logistic
+  regression (paper Appendix C.5 / Fig. 6).
+- quantize / dequant wrappers over the L1 kernels, exported per gradient
+  dimension so the rust hot path can run compression on-device.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    dequant_update,
+    fused_linear,
+    int_round_deterministic,
+    int_round_stochastic,
+)
+
+# ---------------------------------------------------------------------------
+# Dense layer: Pallas forward, hand-written VJP (pallas_call has no autodiff
+# rule; the backward matmuls lower to plain XLA dots).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _dense2d(x, w, b, act):
+    return fused_linear(x, w, b, act)
+
+
+def _dense2d_fwd(x, w, b, act):
+    y = fused_linear(x, w, b, act)
+    return y, (x, w, y)
+
+
+def _dense2d_bwd(act, res, dy):
+    x, w, y = res
+    if act == "relu":
+        dy = dy * (y > 0.0)
+    dx = dy @ w.T
+    dw = x.T @ dy
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+_dense2d.defvjp(_dense2d_fwd, _dense2d_bwd)
+
+
+def dense(x, w, b, act="relu"):
+    """act(x @ w + b) on the Pallas fused_linear kernel; x may be >2-D."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = _dense2d(x2, w, b, act)
+    return y.reshape(*lead, w.shape[1])
+
+
+def softmax_xent(logits, targets_onehot):
+    """Mean cross-entropy; numerically stable log-softmax."""
+    logz = jax.nn.logsumexp(logits, axis=-1, keepdims=True)
+    logp = logits - logz
+    return -jnp.mean(jnp.sum(targets_onehot * logp, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Classifier: MLP on flattened 32x32x3 images (CIFAR-like synthetic data).
+# ---------------------------------------------------------------------------
+
+CLS_IN = 3 * 32 * 32
+CLS_HIDDEN = (256, 128)
+CLS_CLASSES = 10
+CLS_BATCH = 32
+
+
+def classifier_params_spec():
+    """[(name, shape, init)] in artifact order."""
+    dims = [CLS_IN, *CLS_HIDDEN, CLS_CLASSES]
+    spec = []
+    for li, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        spec.append((f"w{li}", (din, dout), "glorot"))
+        spec.append((f"b{li}", (dout,), "zeros"))
+    return spec
+
+
+def classifier_loss(params, x, y_onehot):
+    w0, b0, w1, b1, w2, b2 = params
+    h = dense(x, w0, b0, "relu")
+    h = dense(h, w1, b1, "relu")
+    logits = dense(h, w2, b2, "none")
+    return softmax_xent(logits, y_onehot)
+
+
+def classifier_train_step(*args):
+    """(w0,b0,w1,b1,w2,b2, x[B,3072], y[B,10]) -> (loss, 6 grads)."""
+    params, (x, y) = args[:-2], args[-2:]
+    loss, grads = jax.value_and_grad(classifier_loss)(params, x, y)
+    return (loss, *grads)
+
+
+def classifier_eval_step(*args):
+    """(params..., x, y_onehot) -> (loss, accuracy)."""
+    params, (x, y) = args[:-2], args[-2:]
+    w0, b0, w1, b1, w2, b2 = params
+    h = dense(x, w0, b0, "relu")
+    h = dense(h, w1, b1, "relu")
+    logits = dense(h, w2, b2, "none")
+    loss = softmax_xent(logits, y)
+    acc = jnp.mean(
+        (jnp.argmax(logits, axis=-1) == jnp.argmax(y, axis=-1)).astype(jnp.float32)
+    )
+    return loss, acc
+
+
+# ---------------------------------------------------------------------------
+# LSTM character LM (2 layers, tied embedding / softmax weights).
+# ---------------------------------------------------------------------------
+
+LM_VOCAB = 64
+LM_EMBED = 96  # == hidden so the softmax can be tied to the embedding
+LM_HIDDEN = 96
+LM_BATCH = 16
+LM_SEQ = 30
+
+
+def lm_params_spec():
+    v, e, h = LM_VOCAB, LM_EMBED, LM_HIDDEN
+    spec = [("emb", (v, e), "normal0.1")]
+    for li, din in enumerate([e, h]):
+        spec.append((f"l{li}_wih", (din, 4 * h), "glorot"))
+        spec.append((f"l{li}_whh", (h, 4 * h), "glorot"))
+        spec.append((f"l{li}_b", (4 * h,), "zeros"))
+    spec.append(("out_b", (v,), "zeros"))
+    return spec
+
+
+def _lstm_cell(x, h, c, wih, whh, b):
+    gates = x @ wih + h @ whh + b
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f + 1.0), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c = f * c + i * g
+    h = o * jnp.tanh(c)
+    return h, c
+
+
+def lm_loss(params, tokens):
+    """tokens: i32[B, T+1]; next-char cross-entropy averaged over B*T."""
+    emb, w0i, w0h, b0, w1i, w1h, b1, ob = params
+    bsz = tokens.shape[0]
+    xs = emb[tokens[:, :-1]]  # [B, T, E]
+    tgt = tokens[:, 1:]  # [B, T]
+
+    h0 = jnp.zeros((bsz, LM_HIDDEN))
+    state0 = (h0, h0, h0, h0)
+
+    def step(state, x_t):
+        h1, c1, h2, c2 = state
+        h1, c1 = _lstm_cell(x_t, h1, c1, w0i, w0h, b0)
+        h2, c2 = _lstm_cell(h1, h2, c2, w1i, w1h, b1)
+        return (h1, c1, h2, c2), h2
+
+    _, hs = jax.lax.scan(step, state0, jnp.swapaxes(xs, 0, 1))  # [T, B, H]
+    logits = hs @ emb.T + ob  # tied softmax, [T, B, V]
+    tgt_t = jnp.swapaxes(tgt, 0, 1)  # [T, B]
+    onehot = jax.nn.one_hot(tgt_t, LM_VOCAB)
+    return softmax_xent(logits, onehot)
+
+
+def lm_train_step(*args):
+    """(params... x8, tokens i32[B,T+1]) -> (loss, 8 grads)."""
+    params, tokens = args[:-1], args[-1]
+    loss, grads = jax.value_and_grad(lm_loss)(params, tokens)
+    return (loss, *grads)
+
+
+def lm_eval_step(*args):
+    params, tokens = args[:-1], args[-1]
+    return (lm_loss(params, tokens),)
+
+
+# ---------------------------------------------------------------------------
+# Transformer LM (end-to-end example model).
+# ---------------------------------------------------------------------------
+
+TF_VOCAB = 256
+TF_DMODEL = 128
+TF_HEADS = 4
+TF_LAYERS = 2
+TF_BATCH = 8
+TF_SEQ = 64
+
+
+def transformer_params_spec():
+    v, d, t = TF_VOCAB, TF_DMODEL, TF_SEQ
+    spec = [("emb", (v, d), "normal0.02"), ("pos", (t, d), "normal0.02")]
+    for li in range(TF_LAYERS):
+        p = f"blk{li}_"
+        spec += [
+            (p + "ln1_s", (d,), "ones"),
+            (p + "ln1_b", (d,), "zeros"),
+            (p + "wq", (d, d), "glorot"),
+            (p + "wk", (d, d), "glorot"),
+            (p + "wv", (d, d), "glorot"),
+            (p + "wo", (d, d), "glorot"),
+            (p + "ln2_s", (d,), "ones"),
+            (p + "ln2_b", (d,), "zeros"),
+            (p + "w1", (d, 4 * d), "glorot"),
+            (p + "b1", (4 * d,), "zeros"),
+            (p + "w2", (4 * d, d), "glorot"),
+            (p + "b2", (d,), "zeros"),
+        ]
+    spec += [("lnf_s", (d,), "ones"), ("lnf_b", (d,), "zeros")]
+    return spec
+
+
+def _layernorm(x, s, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * s + b
+
+
+def _attention(x, wq, wk, wv, wo):
+    bsz, t, d = x.shape
+    hd = d // TF_HEADS
+
+    def split(z):
+        return jnp.swapaxes(z.reshape(bsz, t, TF_HEADS, hd), 1, 2)
+
+    q, k, v = split(x @ wq), split(x @ wk), split(x @ wv)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = jnp.swapaxes(out, 1, 2).reshape(bsz, t, d)
+    return out @ wo
+
+
+def transformer_loss(params, tokens):
+    """tokens: i32[B, T+1]."""
+    it = iter(params)
+    emb, pos = next(it), next(it)
+    blocks = [[next(it) for _ in range(12)] for _ in range(TF_LAYERS)]
+    lnf_s, lnf_b = next(it), next(it)
+
+    x = emb[tokens[:, :-1]] + pos[None, :, :]
+    for ln1s, ln1b, wq, wk, wv, wo, ln2s, ln2b, w1, b1, w2, b2 in blocks:
+        x = x + _attention(_layernorm(x, ln1s, ln1b), wq, wk, wv, wo)
+        h = dense(_layernorm(x, ln2s, ln2b), w1, b1, "relu")
+        x = x + dense(h, w2, b2, "none")
+    x = _layernorm(x, lnf_s, lnf_b)
+    logits = x @ emb.T  # tied head
+    onehot = jax.nn.one_hot(tokens[:, 1:], TF_VOCAB)
+    return softmax_xent(logits, onehot)
+
+
+def transformer_train_step(*args):
+    params, tokens = args[:-1], args[-1]
+    loss, grads = jax.value_and_grad(transformer_loss)(params, tokens)
+    return (loss, *grads)
+
+
+def transformer_eval_step(*args):
+    params, tokens = args[:-1], args[-1]
+    return (transformer_loss(params, tokens),)
+
+
+# ---------------------------------------------------------------------------
+# Logistic regression (paper Appendix C.5): closed-form minibatch gradient.
+# ---------------------------------------------------------------------------
+
+
+def logreg_grad(x, a, b, lam):
+    """grad of (1/m) sum log(1+exp(-b_i a_i^T x)) + lam/2 ||x||^2.
+
+    x: f32[d]; a: f32[m, d]; b: f32[m] in {-1, +1}; lam: f32[1].
+    """
+    margins = -b * (a @ x)
+    # sigma(-z) = 1/(1+exp(z)) evaluated stably
+    coeff = -b * jax.nn.sigmoid(margins)
+    return (a.T @ coeff) / a.shape[0] + lam[0] * x
+
+
+def logreg_loss(x, a, b, lam):
+    margins = -b * (a @ x)
+    return jnp.mean(jnp.logaddexp(0.0, margins)) + 0.5 * lam[0] * jnp.sum(x * x)
+
+
+# ---------------------------------------------------------------------------
+# Compression wrappers (exported per flattened gradient dimension).
+# ---------------------------------------------------------------------------
+
+
+def quantize_stochastic(g, u, alpha, clip):
+    return (int_round_stochastic(g, u, alpha, clip),)
+
+
+def quantize_deterministic(g, alpha, clip):
+    return (int_round_deterministic(g, alpha, clip),)
+
+
+def dequant_update_step(x, s, alpha, lr, n):
+    return (dequant_update(x, s, alpha, lr, n),)

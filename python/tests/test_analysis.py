@@ -1,0 +1,62 @@
+"""Perf-structure tests: VMEM budgets and HLO portability of artifacts."""
+
+import os
+
+import pytest
+
+from compile import analysis
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_all_kernels_fit_vmem_with_double_buffering():
+    for name, rep in analysis.vmem_budget_report().items():
+        # double buffering needs 2x the working set resident
+        assert 2 * rep["vmem_bytes"] <= analysis.VMEM_LIMIT, (
+            name,
+            rep["vmem_bytes"],
+        )
+
+
+def test_elementwise_kernels_are_bandwidth_bound():
+    reps = analysis.vmem_budget_report()
+    for name in ("int_round_stochastic", "int_round_deterministic", "dequant_update"):
+        r = reps[name]
+        # arithmetic intensity well below 1 FLOP/byte => bandwidth bound
+        assert r["flops_per_elem"] / r["bytes_per_elem"] < 1.0
+
+
+def test_fused_linear_mxu_aligned():
+    reps = analysis.vmem_budget_report()
+    for name, r in reps.items():
+        if name.startswith("fused_linear"):
+            bm, bn, _ = r["block"]
+            assert bm % 128 == 0 and bn % 128 == 0  # MXU tile alignment
+            assert r["mxu_tiles_per_step"] >= 1
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts`",
+)
+def test_artifacts_portable_no_custom_calls():
+    rows = analysis.analyze(ART)
+    assert rows, "no artifacts found"
+    for name, total, _dots, _fus, _wh, custom in rows:
+        assert custom == 0, f"{name} contains custom-calls (Mosaic lowering?)"
+        assert total > 0, f"{name} parsed to zero ops"
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts`",
+)
+def test_train_steps_contain_dots():
+    # artifacts are *pre-optimization* HLO (fusion happens inside the PJRT
+    # compile on the rust side), so we assert on the dots, not fusions
+    rows = {r[0]: r for r in analysis.analyze(ART)}
+    for model in ("classifier", "lm", "transformer"):
+        name = f"{model}_train_step"
+        _, total, dots, _fusions, _, _ = rows[name]
+        assert dots >= 2, f"{name}: expected matmuls in fwd+bwd"
+        assert total > 100, f"{name}: suspiciously small module"

@@ -1,0 +1,78 @@
+"""AOT pipeline tests: manifest consistency and HLO text sanity.
+
+Runs against the artifacts/ directory if `make artifacts` has been run;
+otherwise these tests are skipped (they re-validate outputs, not the
+exporter logic, which test_kernels/test_model already cover).
+"""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+def load():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_format():
+    m = load()
+    assert m["format"] == 1
+    assert len(m["artifacts"]) >= 20
+
+
+def test_all_files_exist_and_parse_as_hlo():
+    m = load()
+    for name, entry in m["artifacts"].items():
+        path = os.path.join(ART, entry["file"])
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_train_steps_have_grad_outputs():
+    m = load()
+    for name, entry in m["artifacts"].items():
+        if entry.get("kind") == "train_step":
+            assert entry["outputs"] == 1 + entry["param_count"]
+            total = sum(
+                int(__import__("math").prod(p["shape"]) or 1)
+                for p in entry["params"]
+            )
+            assert total == entry["grad_dim"], name
+
+
+def test_quantize_dims_match_models():
+    m = load()
+    arts = m["artifacts"]
+    for model in ("classifier", "lm", "transformer"):
+        gd = arts[f"{model}_train_step"]["grad_dim"]
+        assert arts[f"quantize_stoch_{model}"]["inputs"][0]["shape"] == [gd]
+        assert arts[f"quantize_determ_{model}"]["inputs"][0]["shape"] == [gd]
+        for n in (12, 16):
+            assert arts[f"dequant_{model}_n{n}"]["inputs"][0]["shape"] == [gd]
+
+
+def test_input_dtypes_recorded():
+    m = load()
+    for name, entry in m["artifacts"].items():
+        for inp in entry["inputs"]:
+            assert inp["dtype"] in ("f32", "i32"), name
+
+
+def test_param_specs_have_known_inits():
+    m = load()
+    for entry in m["artifacts"].values():
+        for p in entry.get("params", []):
+            assert p["init"] in ("glorot", "zeros", "ones") or p["init"].startswith(
+                "normal"
+            )

@@ -1,0 +1,218 @@
+"""L1 kernel tests: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Includes hypothesis sweeps over shapes/scales so the BlockSpec padding path
+(d not a multiple of BLOCK) and degenerate scales are exercised.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    dequant_update,
+    fused_linear,
+    int_round_deterministic,
+    int_round_stochastic,
+)
+from compile.kernels import ref
+from compile.kernels.int_round import BLOCK
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+def uni(key, shape):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape)
+
+
+def s1(v):
+    return jnp.array([v], jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# int_round_stochastic
+# ---------------------------------------------------------------------------
+
+
+class TestIntRoundStochastic:
+    def test_matches_ref(self):
+        g, u = rand(0, (5000,)), uni(1, (5000,))
+        a, c = s1(37.5), s1(127.0)
+        np.testing.assert_array_equal(
+            int_round_stochastic(g, u, a, c),
+            ref.int_round_stochastic_ref(g, u, a, c),
+        )
+
+    def test_outputs_are_integers(self):
+        g, u = rand(2, (777,), 10.0), uni(3, (777,))
+        out = np.asarray(int_round_stochastic(g, u, s1(3.3), s1(1e9)))
+        np.testing.assert_array_equal(out, np.floor(out))
+
+    def test_clip_bound_respected(self):
+        g, u = rand(4, (1024,), 100.0), uni(5, (1024,))
+        out = np.asarray(int_round_stochastic(g, u, s1(50.0), s1(7.0)))
+        assert out.max() <= 7.0 and out.min() >= -7.0
+
+    def test_unbiased_over_uniform_draws(self):
+        # E_u[floor(a*g + u)] == a*g  (Lemma 1, eq. 3), estimated by
+        # averaging over many uniform draws for a handful of fixed values.
+        g = jnp.array([0.3, -1.7, 2.5, 0.0, -0.49], jnp.float32)
+        a = s1(1.0)
+        draws = []
+        for k in range(4000):
+            u = uni(1000 + k, g.shape)
+            draws.append(np.asarray(int_round_stochastic(g, u, a, s1(1e9))))
+        mean = np.stack(draws).mean(axis=0)
+        np.testing.assert_allclose(mean, np.asarray(g), atol=0.03)
+
+    def test_variance_bound(self):
+        # Var[Int(t)] <= 1/4 per coordinate (Lemma 1, eq. 4).
+        g = rand(6, (64,))
+        a = s1(5.0)
+        draws = np.stack([
+            np.asarray(int_round_stochastic(g, uni(2000 + k, g.shape), a, s1(1e9)))
+            for k in range(2000)
+        ])
+        var = draws.var(axis=0) / float(a[0]) ** 2 * float(a[0]) ** 2  # int-domain var
+        assert (var <= 0.25 + 0.02).all()
+
+    def test_exact_integers_pass_through(self):
+        g = jnp.arange(-5, 6).astype(jnp.float32)
+        u = uni(7, g.shape)
+        out = int_round_stochastic(g, u, s1(1.0), s1(100.0))
+        np.testing.assert_array_equal(out, g)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        d=st.integers(1, 3 * BLOCK + 17),
+        seed=st.integers(0, 2**16),
+        alpha=st.floats(1e-3, 1e3),
+    )
+    def test_hypothesis_shapes_and_scales(self, d, seed, alpha):
+        g, u = rand(seed, (d,), 2.0), uni(seed + 1, (d,))
+        a, c = s1(alpha), s1(127.0)
+        np.testing.assert_array_equal(
+            int_round_stochastic(g, u, a, c),
+            ref.int_round_stochastic_ref(g, u, a, c),
+        )
+
+
+# ---------------------------------------------------------------------------
+# int_round_deterministic
+# ---------------------------------------------------------------------------
+
+
+class TestIntRoundDeterministic:
+    def test_matches_ref(self):
+        g = rand(8, (4097,), 5.0)
+        a, c = s1(12.25), s1(127.0)
+        np.testing.assert_array_equal(
+            int_round_deterministic(g, a, c),
+            ref.int_round_deterministic_ref(g, a, c),
+        )
+
+    def test_half_to_even(self):
+        # torch.round / jnp.round semantics: .5 rounds to the even integer.
+        g = jnp.array([0.5, 1.5, 2.5, -0.5, -1.5], jnp.float32)
+        out = int_round_deterministic(g, s1(1.0), s1(100.0))
+        np.testing.assert_array_equal(out, [0.0, 2.0, 2.0, -0.0, -2.0])
+
+    @settings(max_examples=15, deadline=None)
+    @given(d=st.integers(1, 2 * BLOCK + 5), seed=st.integers(0, 2**16))
+    def test_hypothesis_shapes(self, d, seed):
+        g = rand(seed, (d,), 3.0)
+        a, c = s1(7.7), s1(31.0)
+        np.testing.assert_array_equal(
+            int_round_deterministic(g, a, c),
+            ref.int_round_deterministic_ref(g, a, c),
+        )
+
+
+# ---------------------------------------------------------------------------
+# dequant_update
+# ---------------------------------------------------------------------------
+
+
+class TestDequantUpdate:
+    def test_matches_ref(self):
+        x, s = rand(9, (9999,)), jnp.round(rand(10, (9999,), 20.0))
+        a, lr = s1(3.0), s1(0.05)
+        np.testing.assert_allclose(
+            dequant_update(x, s, a, lr, 16),
+            ref.dequant_update_ref(x, s, a, lr, 16),
+            rtol=1e-5, atol=1e-6,
+        )
+
+    def test_zero_message_is_noop(self):
+        x = rand(11, (500,))
+        out = dequant_update(x, jnp.zeros(500), s1(2.0), s1(0.1), 8)
+        np.testing.assert_array_equal(out, x)
+
+    def test_recovers_average_gradient(self):
+        # With alpha -> huge, quantization is exact and the update equals
+        # plain distributed SGD: x - lr * mean_i(g_i).
+        n, d = 4, 300
+        gs = [rand(20 + i, (d,)) for i in range(n)]
+        a = s1(1e6)
+        msgs = [
+            int_round_deterministic(g, a, s1(1e30)) for g in gs
+        ]
+        ssum = sum(msgs)
+        x = rand(30, (d,))
+        out = dequant_update(x, ssum, a, s1(0.1), n)
+        expect = x - 0.1 * sum(gs) / n
+        np.testing.assert_allclose(out, expect, rtol=1e-3, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(d=st.integers(1, BLOCK + 333), n=st.integers(1, 64),
+           seed=st.integers(0, 2**16))
+    def test_hypothesis(self, d, n, seed):
+        x, s = rand(seed, (d,)), jnp.round(rand(seed + 1, (d,), 50.0))
+        a, lr = s1(2.5), s1(0.01)
+        np.testing.assert_allclose(
+            dequant_update(x, s, a, lr, n),
+            ref.dequant_update_ref(x, s, a, lr, n),
+            rtol=1e-5, atol=1e-6,
+        )
+
+
+# ---------------------------------------------------------------------------
+# fused_linear
+# ---------------------------------------------------------------------------
+
+
+class TestFusedLinear:
+    @pytest.mark.parametrize("act", ["relu", "none"])
+    def test_matches_ref(self, act):
+        x, w, b = rand(40, (57, 90)), rand(41, (90, 33)), rand(42, (33,))
+        np.testing.assert_allclose(
+            fused_linear(x, w, b, act),
+            ref.fused_linear_ref(x, w, b, act),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_exact_tile_sizes(self):
+        x, w, b = rand(43, (128, 64)), rand(44, (64, 256)), rand(45, (256,))
+        np.testing.assert_allclose(
+            fused_linear(x, w, b, "relu"),
+            ref.fused_linear_ref(x, w, b, "relu"),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_relu_nonnegative(self):
+        x, w, b = rand(46, (17, 19)), rand(47, (19, 23)), rand(48, (23,))
+        assert (np.asarray(fused_linear(x, w, b, "relu")) >= 0).all()
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=st.integers(1, 200), k=st.integers(1, 150), n=st.integers(1, 200),
+           seed=st.integers(0, 2**16))
+    def test_hypothesis_shapes(self, m, k, n, seed):
+        x, w, b = rand(seed, (m, k)), rand(seed + 1, (k, n)), rand(seed + 2, (n,))
+        np.testing.assert_allclose(
+            fused_linear(x, w, b, "none"),
+            ref.fused_linear_ref(x, w, b, "none"),
+            rtol=1e-4, atol=1e-4,
+        )

@@ -1,0 +1,174 @@
+"""L2 model tests: shapes, gradient correctness, optimization sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def glorot(key, shape):
+    if len(shape) == 1:
+        return jnp.zeros(shape)
+    lim = np.sqrt(6.0 / (shape[0] + shape[1]))
+    return jax.random.uniform(key, shape, minval=-lim, maxval=lim)
+
+
+def init_params(spec, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(spec))
+    out = []
+    for key, (_, shape, init) in zip(keys, spec):
+        if init == "zeros":
+            out.append(jnp.zeros(shape))
+        elif init == "ones":
+            out.append(jnp.ones(shape))
+        elif init.startswith("normal"):
+            std = float(init[len("normal"):])
+            out.append(std * jax.random.normal(key, shape))
+        else:
+            out.append(glorot(key, shape))
+    return out
+
+
+class TestClassifier:
+    def setup_method(self):
+        self.params = init_params(M.classifier_params_spec(), 1)
+        k = jax.random.PRNGKey(2)
+        self.x = jax.random.normal(k, (M.CLS_BATCH, M.CLS_IN))
+        y = jax.random.randint(jax.random.PRNGKey(3), (M.CLS_BATCH,), 0, 10)
+        self.y = jax.nn.one_hot(y, M.CLS_CLASSES)
+
+    def test_shapes(self):
+        out = M.classifier_train_step(*self.params, self.x, self.y)
+        assert len(out) == 1 + len(self.params)
+        assert out[0].shape == ()
+        for g, p in zip(out[1:], self.params):
+            assert g.shape == p.shape
+
+    def test_initial_loss_near_log10(self):
+        loss = M.classifier_train_step(*self.params, self.x, self.y)[0]
+        assert abs(float(loss) - np.log(10)) < 0.5
+
+    def test_loss_decreases_under_sgd(self):
+        params = self.params
+        first = None
+        for _ in range(20):
+            out = M.classifier_train_step(*params, self.x, self.y)
+            loss, grads = out[0], out[1:]
+            if first is None:
+                first = float(loss)
+            params = [p - 0.1 * g for p, g in zip(params, grads)]
+        assert float(loss) < first - 0.3
+
+    def test_grads_match_autodiff_of_loss(self):
+        out = M.classifier_train_step(*self.params, self.x, self.y)
+        grads_direct = jax.grad(
+            lambda ps: M.classifier_loss(ps, self.x, self.y)
+        )(self.params)
+        for a, b in zip(out[1:], grads_direct):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    def test_eval_step(self):
+        x = jax.random.normal(jax.random.PRNGKey(4), (256, M.CLS_IN))
+        y = jax.nn.one_hot(
+            jax.random.randint(jax.random.PRNGKey(5), (256,), 0, 10), 10
+        )
+        loss, acc = M.classifier_eval_step(*self.params, x, y)
+        assert 0.0 <= float(acc) <= 1.0
+
+
+class TestLM:
+    def setup_method(self):
+        self.params = init_params(M.lm_params_spec(), 10)
+        self.tokens = jax.random.randint(
+            jax.random.PRNGKey(11), (M.LM_BATCH, M.LM_SEQ + 1), 0, M.LM_VOCAB
+        )
+
+    def test_shapes(self):
+        out = M.lm_train_step(*self.params, self.tokens)
+        assert len(out) == 1 + len(self.params)
+        for g, p in zip(out[1:], self.params):
+            assert g.shape == p.shape
+
+    def test_initial_loss_near_log_vocab(self):
+        loss = M.lm_train_step(*self.params, self.tokens)[0]
+        assert abs(float(loss) - np.log(M.LM_VOCAB)) < 0.5
+
+    def test_loss_decreases_under_sgd(self):
+        params = self.params
+        first = None
+        step = jax.jit(M.lm_train_step)
+        # uniform-random tokens: the only signal is memorizing the batch,
+        # so the drop is small but must be strictly positive and material.
+        for _ in range(60):
+            out = step(*params, self.tokens)
+            loss, grads = out[0], out[1:]
+            if first is None:
+                first = float(loss)
+            params = [p - 2.0 * g for p, g in zip(params, grads)]
+        assert float(loss) < first - 0.1, (first, float(loss))
+
+
+class TestTransformer:
+    def setup_method(self):
+        self.params = init_params(M.transformer_params_spec(), 20)
+        self.tokens = jax.random.randint(
+            jax.random.PRNGKey(21), (M.TF_BATCH, M.TF_SEQ + 1), 0, M.TF_VOCAB
+        )
+
+    def test_shapes(self):
+        out = M.transformer_train_step(*self.params, self.tokens)
+        assert len(out) == 1 + len(self.params)
+        for g, p in zip(out[1:], self.params):
+            assert g.shape == p.shape
+
+    def test_initial_loss_near_log_vocab(self):
+        loss = M.transformer_train_step(*self.params, self.tokens)[0]
+        assert abs(float(loss) - np.log(M.TF_VOCAB)) < 1.0
+
+    def test_loss_decreases_under_sgd(self):
+        params = self.params
+        first = None
+        for _ in range(15):
+            out = M.transformer_train_step(*params, self.tokens)
+            loss, grads = out[0], out[1:]
+            if first is None:
+                first = float(loss)
+            params = [p - 0.5 * g for p, g in zip(params, grads)]
+        assert float(loss) < first - 0.2
+
+
+class TestLogreg:
+    def setup_method(self):
+        k = jax.random.PRNGKey(30)
+        self.m, self.d = 40, 17
+        self.a = jax.random.normal(k, (self.m, self.d))
+        self.b = jnp.sign(jax.random.normal(jax.random.PRNGKey(31), (self.m,)))
+        self.x = 0.1 * jax.random.normal(jax.random.PRNGKey(32), (self.d,))
+        self.lam = jnp.array([1e-3])
+
+    def test_grad_matches_autodiff(self):
+        auto = jax.grad(lambda x: M.logreg_loss(x, self.a, self.b, self.lam))(self.x)
+        closed = M.logreg_grad(self.x, self.a, self.b, self.lam)
+        np.testing.assert_allclose(closed, auto, rtol=1e-5, atol=1e-6)
+
+    def test_grad_matches_finite_differences(self):
+        g = M.logreg_grad(self.x, self.a, self.b, self.lam)
+        eps = 1e-4
+        for j in range(0, self.d, 5):
+            e = jnp.zeros(self.d).at[j].set(eps)
+            fd = (
+                M.logreg_loss(self.x + e, self.a, self.b, self.lam)
+                - M.logreg_loss(self.x - e, self.a, self.b, self.lam)
+            ) / (2 * eps)
+            # f32 forward differences are noisy; the autodiff cross-check
+            # above is the tight one.
+            np.testing.assert_allclose(g[j], fd, rtol=1e-2, atol=1e-3)
+
+    def test_gd_converges(self):
+        x = self.x
+        for _ in range(200):
+            x = x - 0.5 * M.logreg_grad(x, self.a, self.b, self.lam)
+        gnorm = float(jnp.linalg.norm(M.logreg_grad(x, self.a, self.b, self.lam)))
+        assert gnorm < 1e-2

@@ -1,0 +1,47 @@
+//! Collective data-plane benchmarks: ring all-reduce (f32), exact integer
+//! all-reduce (i64) and the INA switch pipeline across message sizes.
+
+use std::time::Instant;
+
+use intsgd::collective::{allreduce_i64, ring_allreduce_f32, InaSwitch};
+use intsgd::compress::intsgd::WireInt;
+use intsgd::util::stats::median;
+use intsgd::util::Rng;
+
+fn bench<F: FnMut() -> f64>(name: &str, iters: usize, mut f: F) {
+    f();
+    let samples: Vec<f64> = (0..iters).map(|_| f()).collect();
+    println!("{name:<36} median {:>9.3} ms", median(&samples) * 1e3);
+}
+
+fn main() {
+    let n = 16;
+    for &d in &[1usize << 16, 1 << 20] {
+        let mut rng = Rng::new(0);
+        let f32s: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let i64s: Vec<Vec<i64>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.below(255) as i64 - 127).collect())
+            .collect();
+        let views: Vec<&[i64]> = i64s.iter().map(|v| v.as_slice()).collect();
+
+        bench(&format!("ring_allreduce_f32 d=2^{}", d.trailing_zeros()), 5, || {
+            let t = Instant::now();
+            std::hint::black_box(ring_allreduce_f32(&f32s));
+            t.elapsed().as_secs_f64()
+        });
+        let mut out = Vec::new();
+        bench(&format!("allreduce_i64      d=2^{}", d.trailing_zeros()), 5, || {
+            let t = Instant::now();
+            allreduce_i64(&views, &mut out);
+            std::hint::black_box(&out);
+            t.elapsed().as_secs_f64()
+        });
+        let sw = InaSwitch::default();
+        bench(&format!("ina_switch_int32   d=2^{}", d.trailing_zeros()), 5, || {
+            let t = Instant::now();
+            sw.aggregate_into(&views, WireInt::Int32, &mut out);
+            std::hint::black_box(&out);
+            t.elapsed().as_secs_f64()
+        });
+    }
+}

@@ -1,0 +1,98 @@
+//! Compression hot-path microbenchmarks (the §Perf L3 instrument).
+//!
+//! Measures per-round encode+aggregate+decode wall time of every
+//! compressor at the classifier gradient size (d = 820,874), n = 16
+//! workers — the quantity behind the "Computation Overhead" column of
+//! Tables 2-3. Custom harness: criterion is not in the offline vendor set.
+
+use std::time::Instant;
+
+use intsgd::compress::intsgd::{IntSgd, Rounding, WireInt};
+use intsgd::compress::powersgd::BlockShape;
+use intsgd::compress::{
+    DistributedCompressor, HeuristicIntSgd, IdentitySgd, NatSgd, PowerSgd, Qsgd,
+    SignSgd, TopK,
+};
+use intsgd::coordinator::{BlockInfo, RoundCtx};
+use intsgd::scaling::MovingAverageRule;
+use intsgd::util::stats::median;
+use intsgd::util::Rng;
+
+fn bench<F: FnMut() -> f64>(name: &str, iters: usize, mut f: F) {
+    // warmup
+    f();
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        samples.push(f());
+    }
+    println!(
+        "{name:<28} median {:>9.3} ms  min {:>9.3} ms  ({} iters)",
+        median(&samples) * 1e3,
+        samples.iter().cloned().fold(f64::INFINITY, f64::min) * 1e3,
+        iters
+    );
+}
+
+fn main() {
+    // classifier layout: 3 weight matrices + 3 biases
+    let layout: Vec<Vec<usize>> = vec![
+        vec![3072, 256],
+        vec![256],
+        vec![256, 128],
+        vec![128],
+        vec![128, 10],
+        vec![10],
+    ];
+    let numels: Vec<usize> = layout.iter().map(|s| s.iter().product()).collect();
+    let d: usize = numels.iter().sum();
+    let n = 16;
+    let mut rng = Rng::new(0);
+    let grads: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 0.05)).collect();
+    let ctx = RoundCtx {
+        round: 2,
+        n,
+        d,
+        lr: 0.1,
+        step_norm_sq: 1e-4,
+        blocks: layout
+            .iter()
+            .map(|s| BlockInfo {
+                dim: s.iter().product(),
+                step_norm_sq: 1e-4 / 6.0,
+            })
+            .collect(),
+    };
+    println!("compression round: d = {d}, n = {n} (per-round wall time)\n");
+
+    let mk_int = |r, w| {
+        IntSgd::new(r, w, Box::new(MovingAverageRule::default_paper()), n, 1)
+    };
+    let mut algos: Vec<(&str, Box<dyn DistributedCompressor>)> = vec![
+        ("intsgd_random_int8", Box::new(mk_int(Rounding::Stochastic, WireInt::Int8))),
+        ("intsgd_determ_int8", Box::new(mk_int(Rounding::Deterministic, WireInt::Int8))),
+        ("intsgd_random_int32", Box::new(mk_int(Rounding::Stochastic, WireInt::Int32))),
+        ("heuristic_int8", Box::new(HeuristicIntSgd::new(8))),
+        ("qsgd_64", Box::new(Qsgd::new(64, numels.clone(), n, 2))),
+        ("natsgd", Box::new(NatSgd::new(n, 3))),
+        (
+            "powersgd_rank2",
+            Box::new(PowerSgd::new(
+                2,
+                layout.iter().map(|s| BlockShape { dims: s.clone() }).collect(),
+                n,
+                4,
+            )),
+        ),
+        ("topk_1pct", Box::new(TopK::new(0.01, n))),
+        ("ef_signsgd", Box::new(SignSgd::new(n))),
+        ("sgd_fp32_ring", Box::new(IdentitySgd::allreduce())),
+    ];
+    for (name, comp) in algos.iter_mut() {
+        bench(name, 5, || {
+            let t = Instant::now();
+            let r = comp.round(&grads, &ctx);
+            std::hint::black_box(&r.gtilde);
+            t.elapsed().as_secs_f64()
+        });
+    }
+}

@@ -1,0 +1,30 @@
+//! Figure 1 regeneration bench: an abbreviated end-to-end run of the
+//! fig1 protocol (IntSGD vs Heuristic vs SGD) over the real PJRT path.
+//! `cargo bench` keeps this tractable (2 workers, 12 rounds); the full
+//! protocol is `repro exp fig1 workers=16 rounds=600 seeds=3`.
+
+use intsgd::config::Config;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP bench_fig1: run `make artifacts` first");
+        return;
+    }
+    let mut cfg = Config::new();
+    for kv in [
+        "workers=2",
+        "rounds=12",
+        "seeds=1",
+        "eval_every=6",
+        "train_examples=512",
+        "test_examples=256",
+        "corpus_len=20000",
+        "task=classifier",
+        "out_dir=results/bench",
+    ] {
+        cfg.set_kv(kv).unwrap();
+    }
+    let t = std::time::Instant::now();
+    intsgd::experiments::run("fig1", &cfg).expect("fig1");
+    println!("bench_fig1 (abbreviated): {:.1}s total", t.elapsed().as_secs_f64());
+}

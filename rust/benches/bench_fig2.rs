@@ -1,0 +1,13 @@
+//! Figure 2 regeneration bench: the FP32-vs-Int8 all-reduce time table
+//! from the network cost model (exactly the figure's series).
+
+use intsgd::config::Config;
+
+fn main() {
+    let mut cfg = Config::new();
+    cfg.set_kv("workers=16").unwrap();
+    cfg.set_kv("out_dir=results/bench").unwrap();
+    let t = std::time::Instant::now();
+    intsgd::experiments::run("fig2", &cfg).expect("fig2");
+    println!("bench_fig2: {:.3}s", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,27 @@
+//! Figure 5 regeneration bench: a reduced beta x epsilon sensitivity grid
+//! on the classifier task. Full protocol: `repro exp fig5 rounds=600`.
+
+use intsgd::config::Config;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP bench_fig5: run `make artifacts` first");
+        return;
+    }
+    let mut cfg = Config::new();
+    for kv in [
+        "workers=2",
+        "rounds=8",
+        "seeds=1",
+        "eval_every=4",
+        "train_examples=512",
+        "test_examples=256",
+        "task=classifier",
+        "out_dir=results/bench",
+    ] {
+        cfg.set_kv(kv).unwrap();
+    }
+    let t = std::time::Instant::now();
+    intsgd::experiments::run("fig5", &cfg).expect("fig5");
+    println!("bench_fig5 (abbreviated): {:.1}s total", t.elapsed().as_secs_f64());
+}

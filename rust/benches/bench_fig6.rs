@@ -1,0 +1,22 @@
+//! Figure 6 regeneration bench: IntGD vs IntDIANA vs VR-IntDIANA on the
+//! a5a-geometry dataset (abbreviated). Full protocol:
+//! `repro exp fig6 rounds=400 seeds=3` (all four datasets).
+
+use intsgd::config::Config;
+
+fn main() {
+    let mut cfg = Config::new();
+    for kv in [
+        "workers=12",
+        "rounds=120",
+        "seeds=1",
+        "dataset=a5a",
+        "fstar_iters=800",
+        "out_dir=results/bench",
+    ] {
+        cfg.set_kv(kv).unwrap();
+    }
+    let t = std::time::Instant::now();
+    intsgd::experiments::run("fig6", &cfg).expect("fig6");
+    println!("bench_fig6 (abbreviated): {:.1}s total", t.elapsed().as_secs_f64());
+}

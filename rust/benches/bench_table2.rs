@@ -1,0 +1,27 @@
+//! Table 2 regeneration bench: abbreviated end-to-end runs of all seven
+//! algorithms on the classifier task, printing the paper-style table.
+//! Full protocol: `repro exp table2 workers=16 rounds=600 seeds=3`.
+
+use intsgd::config::Config;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP bench_table2: run `make artifacts` first");
+        return;
+    }
+    let mut cfg = Config::new();
+    for kv in [
+        "workers=2",
+        "rounds=10",
+        "seeds=1",
+        "eval_every=5",
+        "train_examples=512",
+        "test_examples=256",
+        "out_dir=results/bench",
+    ] {
+        cfg.set_kv(kv).unwrap();
+    }
+    let t = std::time::Instant::now();
+    intsgd::experiments::run("table2", &cfg).expect("table2");
+    println!("bench_table2 (abbreviated): {:.1}s total", t.elapsed().as_secs_f64());
+}

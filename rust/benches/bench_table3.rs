@@ -1,0 +1,26 @@
+//! Table 3 regeneration bench: abbreviated end-to-end runs of all seven
+//! algorithms on the LM task, printing the paper-style table.
+//! Full protocol: `repro exp table3 workers=16 rounds=600 seeds=3`.
+
+use intsgd::config::Config;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP bench_table3: run `make artifacts` first");
+        return;
+    }
+    let mut cfg = Config::new();
+    for kv in [
+        "workers=2",
+        "rounds=10",
+        "seeds=1",
+        "eval_every=5",
+        "corpus_len=20000",
+        "out_dir=results/bench",
+    ] {
+        cfg.set_kv(kv).unwrap();
+    }
+    let t = std::time::Instant::now();
+    intsgd::experiments::run("table3", &cfg).expect("table3");
+    println!("bench_table3 (abbreviated): {:.1}s total", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,149 @@
+//! Collective-communication substrate.
+//!
+//! The paper's systems argument hinges on which collective a compressor can
+//! ride on: ring all-reduce (messages summable in-flight), all-gather
+//! (everything shipped, decoded at the edge), or SwitchML's in-network
+//! aggregation (integer adders in the switch pipeline). This module
+//! implements the *data plane* of each primitive faithfully — chunked ring
+//! reduce-scatter/all-gather, INA with saturating integer accumulators —
+//! so overflow/saturation behaviour is exercised exactly where a real
+//! deployment would hit it. The *time* cost of each primitive is modeled
+//! separately in `netsim`.
+
+pub mod switch;
+
+pub use switch::InaSwitch;
+
+/// Exact integer all-reduce: out[j] = sum_i msgs[i][j], accumulated in i64
+/// (never overflows for the wire widths we use: |local| <= 2^31 and n <=
+/// a few thousand).
+pub fn allreduce_i64(msgs: &[&[i64]], out: &mut Vec<i64>) {
+    let n = msgs.len();
+    assert!(n > 0);
+    let d = msgs[0].len();
+    out.clear();
+    out.resize(d, 0);
+    for m in msgs {
+        assert_eq!(m.len(), d, "mismatched message lengths");
+        for (o, &x) in out.iter_mut().zip(*m) {
+            *o += x;
+        }
+    }
+}
+
+/// Ring all-reduce over f32 vectors, implemented as the real algorithm:
+/// reduce-scatter over n-1 steps on n chunks, then all-gather. Returns the
+/// *sum* (callers divide by n). Equivalent to the naive sum up to f32
+/// addition-order differences; `tests` pin the tolerance.
+pub fn ring_allreduce_f32(workers: &[Vec<f32>]) -> Vec<f32> {
+    let n = workers.len();
+    assert!(n > 0);
+    let d = workers[0].len();
+    if n == 1 {
+        return workers[0].clone();
+    }
+    // chunk boundaries: chunk c covers [starts[c], starts[c+1])
+    let starts: Vec<usize> = (0..=n).map(|c| c * d / n).collect();
+    let mut bufs: Vec<Vec<f32>> = workers.to_vec();
+
+    // reduce-scatter: at step s, worker i sends chunk (i - s) to worker i+1
+    for s in 0..n - 1 {
+        // snapshot of the sending state for this step
+        let snapshot: Vec<Vec<f32>> = (0..n)
+            .map(|i| {
+                let c = (i + n - s) % n;
+                bufs[i][starts[c]..starts[c + 1]].to_vec()
+            })
+            .collect();
+        for i in 0..n {
+            let src = (i + n - 1) % n;
+            let c = (src + n - s) % n;
+            let (lo, hi) = (starts[c], starts[c + 1]);
+            for (dst, &x) in bufs[i][lo..hi].iter_mut().zip(&snapshot[src]) {
+                *dst += x;
+            }
+        }
+    }
+    // after reduce-scatter, worker i holds the full sum of chunk (i+1) mod n
+    let mut out = vec![0.0f32; d];
+    for i in 0..n {
+        let c = (i + 1) % n;
+        out[starts[c]..starts[c + 1]].copy_from_slice(&bufs[i][starts[c]..starts[c + 1]]);
+    }
+    out
+}
+
+/// All-gather: every worker receives every message verbatim. Returned as a
+/// clone (the simulation shares memory; byte accounting happens in netsim).
+pub fn allgather<T: Clone>(msgs: &[T]) -> Vec<T> {
+    msgs.to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+    use crate::util::Rng;
+
+    #[test]
+    fn allreduce_i64_sums() {
+        let a = vec![1i64, -2, 3];
+        let b = vec![10i64, 20, -30];
+        let mut out = Vec::new();
+        allreduce_i64(&[&a, &b], &mut out);
+        assert_eq!(out, vec![11, 18, -27]);
+    }
+
+    #[test]
+    fn ring_allreduce_matches_naive_sum() {
+        prop_check(0x2149, 100, |rng| {
+            let n = 1 + rng.usize_below(12);
+            let d = 1 + rng.usize_below(300);
+            let workers: Vec<Vec<f32>> =
+                (0..n).map(|_| rng.normal_vec(d, 1.0)).collect();
+            let ring = ring_allreduce_f32(&workers);
+            for j in 0..d {
+                let naive: f64 =
+                    workers.iter().map(|w| w[j] as f64).sum();
+                prop_assert!(
+                    ((ring[j] as f64) - naive).abs() <= 1e-4 * naive.abs().max(1.0),
+                    "coord {j}: ring {} vs naive {naive} (n={n}, d={d})",
+                    ring[j]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ring_allreduce_exact_on_integers() {
+        // On integer-valued f32 (IntSGD's case) ring order cannot change
+        // the result: f32 addition of small integers is exact.
+        let mut rng = Rng::new(3);
+        let n = 7;
+        let d = 1000;
+        let workers: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| (rng.below(255) as i64 - 127) as f32).collect())
+            .collect();
+        let ring = ring_allreduce_f32(&workers);
+        for j in 0..d {
+            let naive: f32 = workers.iter().map(|w| w[j]).sum();
+            assert_eq!(ring[j], naive);
+        }
+    }
+
+    #[test]
+    fn ring_single_worker_identity() {
+        let w = vec![vec![1.0f32, 2.0, 3.0]];
+        assert_eq!(ring_allreduce_f32(&w), w[0]);
+    }
+
+    #[test]
+    fn ring_d_smaller_than_n() {
+        // degenerate chunking: d < n leaves empty chunks
+        let workers: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32, 1.0]).collect();
+        let out = ring_allreduce_f32(&workers);
+        assert_eq!(out, vec![10.0, 5.0]);
+    }
+}

@@ -1,0 +1,151 @@
+//! SwitchML-style in-network aggregation (INA) simulator.
+//!
+//! The programmable switch of Sapio et al. (2021) exposes a pipeline of
+//! integer adders: workers stream fixed-size chunks of integers; the switch
+//! accumulates each slot across workers and multicasts the result. Two
+//! properties matter for the algorithms in this repo and are modeled
+//! faithfully:
+//!
+//! 1. The switch only has *integer* ALUs — this is why SwitchML (and
+//!    IntSGD) must round to integers before transmission.
+//! 2. The accumulators are fixed-width and *saturate*; a bad scaling factor
+//!    overflows them, which is exactly the failure mode IntSGD's clipping
+//!    and adaptive alpha prevent (paper §1, §5.2).
+
+use crate::compress::intsgd::WireInt;
+
+/// Pipeline model of the switch data plane.
+#[derive(Clone, Debug)]
+pub struct InaSwitch {
+    /// Integers aggregated per pipeline slot-batch (SwitchML uses pools of
+    /// ~128 slots of 32-bit integers per packet).
+    pub chunk_slots: usize,
+}
+
+impl Default for InaSwitch {
+    fn default() -> Self {
+        InaSwitch { chunk_slots: 128 }
+    }
+}
+
+/// Statistics of one aggregation pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct InaStats {
+    /// Number of slots whose accumulator saturated.
+    pub saturated_slots: usize,
+    /// Number of chunks pipelined through the switch.
+    pub chunks: usize,
+}
+
+impl InaSwitch {
+    /// Aggregate per-worker integer vectors with saturating fixed-width
+    /// accumulators, writing the result into `out`.
+    pub fn aggregate_into(
+        &self,
+        msgs: &[&[i64]],
+        wire: WireInt,
+        out: &mut Vec<i64>,
+    ) -> InaStats {
+        let n = msgs.len();
+        assert!(n > 0);
+        let d = msgs[0].len();
+        out.clear();
+        out.resize(d, 0);
+        let cap = wire.max_aggregate();
+        let mut stats = InaStats::default();
+        // process in chunk_slots-sized chunks, as the pipeline would
+        let mut lo = 0;
+        while lo < d {
+            let hi = (lo + self.chunk_slots).min(d);
+            stats.chunks += 1;
+            for j in lo..hi {
+                let mut acc: i64 = 0;
+                let mut saturated = false;
+                for m in msgs {
+                    debug_assert_eq!(m.len(), d);
+                    acc += m[j];
+                    // fixed-width accumulator saturates as it goes
+                    if acc > cap {
+                        acc = cap;
+                        saturated = true;
+                    } else if acc < -cap - 1 {
+                        acc = -cap - 1;
+                        saturated = true;
+                    }
+                }
+                if saturated {
+                    stats.saturated_slots += 1;
+                }
+                out[j] = acc;
+            }
+            lo = hi;
+        }
+        stats
+    }
+
+    /// Convenience wrapper returning the aggregate.
+    pub fn aggregate(&self, msgs: &[&[i64]], wire: WireInt) -> (Vec<i64>, InaStats) {
+        let mut out = Vec::new();
+        let stats = self.aggregate_into(msgs, wire, &mut out);
+        (out, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn matches_exact_sum_when_in_range() {
+        let a = vec![1i64, -2, 3, 100];
+        let b = vec![5i64, 5, -5, 27];
+        let (out, stats) = InaSwitch::default().aggregate(&[&a, &b], WireInt::Int8);
+        assert_eq!(out, vec![6, 3, -2, 127]);
+        assert_eq!(stats.saturated_slots, 0);
+    }
+
+    #[test]
+    fn saturates_on_overflow() {
+        let a = vec![100i64, -100];
+        let b = vec![100i64, -100];
+        let (out, stats) = InaSwitch::default().aggregate(&[&a, &b], WireInt::Int8);
+        assert_eq!(out, vec![127, -128]);
+        assert_eq!(stats.saturated_slots, 2);
+    }
+
+    #[test]
+    fn chunk_count() {
+        let msgs: Vec<Vec<i64>> = vec![vec![0i64; 1000]];
+        let views: Vec<&[i64]> = msgs.iter().map(|v| v.as_slice()).collect();
+        let sw = InaSwitch { chunk_slots: 128 };
+        let (_, stats) = sw.aggregate(&views, WireInt::Int32);
+        assert_eq!(stats.chunks, 8); // ceil(1000/128)
+    }
+
+    #[test]
+    fn int32_headroom_avoids_saturation_for_clipped_inputs() {
+        // Inputs clipped to (2^31-1)/n never saturate the int32 switch.
+        prop_check(0x5A7, 50, |rng| {
+            let n = 1 + rng.usize_below(64);
+            let clip = (i32::MAX as i64) / n as i64;
+            let d = 1 + rng.usize_below(200);
+            let msgs: Vec<Vec<i64>> = (0..n)
+                .map(|_| {
+                    (0..d)
+                        .map(|_| rng.below(2 * clip as u64 + 1) as i64 - clip)
+                        .collect()
+                })
+                .collect();
+            let views: Vec<&[i64]> = msgs.iter().map(|v| v.as_slice()).collect();
+            let (out, stats) = InaSwitch::default().aggregate(&views, WireInt::Int32);
+            prop_assert!(stats.saturated_slots == 0, "saturated");
+            for j in 0..d {
+                let exact: i64 = msgs.iter().map(|m| m[j]).sum();
+                prop_assert!(out[j] == exact, "slot {j}");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,90 @@
+//! Error feedback (EF-SGD) memory, Stich et al. (2018) / Karimireddy et
+//! al. (2019): biased compressors (sign, top-k, PowerSGD) only converge
+//! when each worker accumulates its compression residual and re-injects it
+//! the following round:
+//!
+//!   a_i^k = g_i^k + e_i^k;   msg = C(a_i^k);   e_i^{k+1} = a_i^k - msg.
+//!
+//! The paper's Table 1 "Works without error-feedback" column is exactly
+//! about avoiding the extra O(d) state this module holds per worker.
+
+/// Per-worker residual memories.
+#[derive(Clone, Debug)]
+pub struct ErrorFeedback {
+    mem: Vec<Vec<f32>>,
+}
+
+impl ErrorFeedback {
+    pub fn new(n: usize) -> Self {
+        ErrorFeedback { mem: vec![Vec::new(); n] }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.mem.len()
+    }
+
+    /// a_i = g_i + e_i (allocates e_i lazily as zeros).
+    pub fn corrected(&mut self, rank: usize, grad: &[f32]) -> Vec<f32> {
+        let e = &mut self.mem[rank];
+        if e.len() != grad.len() {
+            e.clear();
+            e.resize(grad.len(), 0.0);
+        }
+        grad.iter().zip(e.iter()).map(|(&g, &m)| g + m).collect()
+    }
+
+    /// e_i <- a_i - compressed(a_i).
+    pub fn store_residual(&mut self, rank: usize, a: &[f32], compressed: &[f32]) {
+        let e = &mut self.mem[rank];
+        e.clear();
+        e.extend(a.iter().zip(compressed).map(|(&x, &c)| x - c));
+    }
+
+    /// Total residual mass (diagnostic).
+    pub fn residual_norm_sq(&self) -> f64 {
+        self.mem
+            .iter()
+            .flat_map(|e| e.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residual_identity_round_trips() {
+        // e + g == a  and  a - c == e'  =>  over two rounds the memory
+        // carries exactly what compression dropped.
+        let mut ef = ErrorFeedback::new(1);
+        let g = vec![1.0f32, -0.5, 0.25];
+        let a = ef.corrected(0, &g);
+        assert_eq!(a, g); // first round: zero memory
+        let c = vec![1.0f32, 0.0, 0.0]; // a crude compressor
+        ef.store_residual(0, &a, &c);
+        let g2 = vec![0.0f32, 0.0, 0.0];
+        let a2 = ef.corrected(0, &g2);
+        assert_eq!(a2, vec![0.0, -0.5, 0.25]);
+    }
+
+    #[test]
+    fn memories_are_per_worker() {
+        let mut ef = ErrorFeedback::new(2);
+        let g = vec![1.0f32];
+        let a0 = ef.corrected(0, &g);
+        ef.store_residual(0, &a0, &[0.0]);
+        // worker 1 unaffected
+        assert_eq!(ef.corrected(1, &g), vec![1.0]);
+        assert_eq!(ef.corrected(0, &g), vec![2.0]);
+    }
+
+    #[test]
+    fn residual_norm_tracks_mass() {
+        let mut ef = ErrorFeedback::new(1);
+        let a = vec![3.0f32, 4.0];
+        ef.store_residual(0, &a, &[0.0, 0.0]);
+        assert!((ef.residual_norm_sq() - 25.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,152 @@
+//! Heuristic IntSGD: the SwitchML scaling rule of Sapio et al. (2021),
+//! the paper's primary point of comparison (§5.2 / Fig. 1).
+//!
+//! The scale is set by a profiling pass over the outgoing package:
+//!
+//!   alpha = (2^nb - 1) / (n * 2^max_exp)
+//!
+//! where `nb` is the wire bit width and `max_exp` the rounded-up exponent
+//! of the largest |value| observed. This provably avoids overflow but has
+//! no convergence guarantee: when a few large coordinates dominate, the
+//! effective resolution (2^nb-1)/2^max_exp crushes small gradients to
+//! zero — which is exactly the failure Fig. 1 shows for the 8-bit wire.
+
+use std::time::Instant;
+
+use crate::collective::allreduce_i64;
+use crate::coordinator::RoundCtx;
+use crate::util::stats::linf_norm;
+
+use super::{CommOp, DistributedCompressor, Primitive, RoundResult};
+
+pub struct HeuristicIntSgd {
+    /// Wire bits per coordinate (8 or 32 in the paper).
+    pub nb: u32,
+    ints: Vec<Vec<i64>>,
+    sum: Vec<i64>,
+}
+
+impl HeuristicIntSgd {
+    pub fn new(nb: u32) -> Self {
+        assert!((2..=32).contains(&nb));
+        HeuristicIntSgd { nb, ints: Vec::new(), sum: Vec::new() }
+    }
+
+    /// The SwitchML profiling step: alpha from the global max exponent.
+    pub fn profile_alpha(&self, grads: &[Vec<f32>]) -> f64 {
+        let n = grads.len() as f64;
+        let max_abs = grads
+            .iter()
+            .map(|g| linf_norm(g))
+            .fold(0.0f32, f32::max) as f64;
+        if max_abs == 0.0 {
+            return 1.0;
+        }
+        let max_exp = max_abs.log2().ceil();
+        ((1u64 << self.nb) - 1) as f64 / (n * max_exp.exp2())
+    }
+}
+
+impl DistributedCompressor for HeuristicIntSgd {
+    fn name(&self) -> String {
+        format!("heuristic_intsgd_{}bit", self.nb)
+    }
+
+    fn supports_allreduce(&self) -> bool {
+        true
+    }
+
+    fn round(&mut self, grads: &[Vec<f32>], _ctx: &RoundCtx) -> RoundResult {
+        let n = grads.len();
+        let d = grads[0].len();
+        let t0 = Instant::now();
+        let alpha = self.profile_alpha(grads);
+        if self.ints.len() != n {
+            self.ints = vec![Vec::new(); n];
+        }
+        for (buf, g) in self.ints.iter_mut().zip(grads) {
+            buf.clear();
+            // SwitchML rounds deterministically (round-to-nearest).
+            buf.extend(g.iter().map(|&x| (x as f64 * alpha).round() as i64));
+        }
+        // per-worker overhead: the n encodes run in parallel in reality
+        let encode_seconds = t0.elapsed().as_secs_f64() / n as f64;
+
+        let views: Vec<&[i64]> = self.ints.iter().map(|v| v.as_slice()).collect();
+        allreduce_i64(&views, &mut self.sum);
+        let max_abs_int = self.sum.iter().map(|&x| x.abs()).max().unwrap_or(0);
+
+        let t1 = Instant::now();
+        let inv = 1.0 / (n as f64 * alpha);
+        let gtilde = self.sum.iter().map(|&s| (s as f64 * inv) as f32).collect();
+        let decode_seconds = t1.elapsed().as_secs_f64();
+
+        RoundResult {
+            gtilde,
+            comm: vec![CommOp {
+                primitive: Primitive::Switch,
+                bytes_per_worker: d * (self.nb as usize).div_ceil(8),
+            }],
+            encode_seconds,
+            decode_seconds,
+            max_abs_int,
+            alpha,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RoundCtx;
+    use crate::util::Rng;
+
+    fn ctx(d: usize, n: usize) -> RoundCtx {
+        RoundCtx { round: 1, n, d, lr: 0.1, step_norm_sq: 0.0, blocks: vec![] }
+    }
+
+    #[test]
+    fn aggregate_never_overflows_wire() {
+        // by construction |alpha * g| <= (2^nb - 1)/n, so |sum| <= 2^nb - 1
+        let mut rng = Rng::new(0);
+        let n = 16;
+        let grads: Vec<Vec<f32>> =
+            (0..n).map(|_| rng.normal_vec(1000, 3.0)).collect();
+        let mut c = HeuristicIntSgd::new(8);
+        let r = c.round(&grads, &ctx(1000, n));
+        assert!(r.max_abs_int <= 255 + n as i64); // rounding slack of <= 1/worker
+    }
+
+    #[test]
+    fn low_bits_crush_small_gradients() {
+        // One huge coordinate forces a tiny alpha; small coords round to 0.
+        let mut g = vec![1e-3f32; 100];
+        g[0] = 1000.0;
+        let grads = vec![g; 4];
+        let mut c = HeuristicIntSgd::new(8);
+        let r = c.round(&grads, &ctx(100, 4));
+        // everything but coordinate 0 got zeroed — the Fig. 1 failure mode
+        assert!(r.gtilde[1..].iter().all(|&x| x == 0.0));
+        assert!(r.gtilde[0] > 0.0);
+    }
+
+    #[test]
+    fn high_bits_preserve_small_gradients() {
+        let mut g = vec![1e-3f32; 100];
+        g[0] = 1000.0;
+        let grads = vec![g; 4];
+        let mut c = HeuristicIntSgd::new(32);
+        let r = c.round(&grads, &ctx(100, 4));
+        for &x in &r.gtilde[1..] {
+            assert!((x - 1e-3).abs() < 1e-5, "{x}");
+        }
+    }
+
+    #[test]
+    fn zero_gradient_safe() {
+        let grads = vec![vec![0.0f32; 10]; 3];
+        let mut c = HeuristicIntSgd::new(8);
+        let r = c.round(&grads, &ctx(10, 3));
+        assert!(r.gtilde.iter().all(|&x| x == 0.0));
+    }
+}

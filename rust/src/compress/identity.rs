@@ -1,0 +1,94 @@
+//! Full-precision SGD baselines: the same fp32 gradients shipped over
+//! either ring all-reduce (paper "SGD (All-reduce)") or all-gather (paper
+//! "SGD (All-gather)") — the two reference rows of Tables 2-3.
+
+use crate::collective::ring_allreduce_f32;
+use crate::coordinator::RoundCtx;
+
+use super::{average, CommOp, DistributedCompressor, Primitive, RoundResult};
+
+pub struct IdentitySgd {
+    pub primitive: Primitive,
+}
+
+impl IdentitySgd {
+    pub fn allreduce() -> Self {
+        IdentitySgd { primitive: Primitive::AllReduce }
+    }
+
+    pub fn allgather() -> Self {
+        IdentitySgd { primitive: Primitive::AllGather }
+    }
+}
+
+impl DistributedCompressor for IdentitySgd {
+    fn name(&self) -> String {
+        match self.primitive {
+            Primitive::AllGather => "sgd_allgather".into(),
+            _ => "sgd_allreduce".into(),
+        }
+    }
+
+    fn supports_allreduce(&self) -> bool {
+        true
+    }
+
+    fn round(&mut self, grads: &[Vec<f32>], _ctx: &RoundCtx) -> RoundResult {
+        let n = grads.len();
+        let d = grads[0].len();
+        let gtilde = match self.primitive {
+            Primitive::AllReduce | Primitive::Switch => {
+                let mut sum = ring_allreduce_f32(grads);
+                let inv = 1.0 / n as f32;
+                for x in &mut sum {
+                    *x *= inv;
+                }
+                sum
+            }
+            Primitive::AllGather => average(grads),
+        };
+        // full-precision SGD has no compression stage: the in-process ring
+        // reduction stands in for the network data plane, whose time is
+        // modeled by netsim — so overhead is genuinely zero here.
+        RoundResult {
+            gtilde,
+            comm: vec![CommOp { primitive: self.primitive, bytes_per_worker: d * 4 }],
+            encode_seconds: 0.0,
+            decode_seconds: 0.0,
+            max_abs_int: 0,
+            alpha: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RoundCtx;
+    use crate::util::Rng;
+
+    fn ctx(d: usize, n: usize) -> RoundCtx {
+        RoundCtx { round: 1, n, d, lr: 0.1, step_norm_sq: 0.0, blocks: vec![] }
+    }
+
+    #[test]
+    fn allreduce_and_allgather_agree() {
+        let mut rng = Rng::new(0);
+        let grads: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(100, 1.0)).collect();
+        let mut ar = IdentitySgd::allreduce();
+        let mut ag = IdentitySgd::allgather();
+        let a = ar.round(&grads, &ctx(100, 5)).gtilde;
+        let b = ag.round(&grads, &ctx(100, 5)).gtilde;
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn wire_bytes_are_full_precision() {
+        let grads = vec![vec![0.0f32; 64]; 2];
+        let mut c = IdentitySgd::allreduce();
+        let r = c.round(&grads, &ctx(64, 2));
+        assert_eq!(r.wire_bytes_per_worker(), 256);
+    }
+}

@@ -1,0 +1,408 @@
+//! IntSGD (paper Alg. 1 / Alg. 2): adaptive integer rounding with a scale
+//! shared by every worker, aggregated by summing integers in-flight.
+//!
+//! This is the rust mirror of the Pallas kernel
+//! (`python/compile/kernels/int_round.py`); `rust/tests/pjrt_roundtrip.rs`
+//! asserts the two produce identical integers for identical inputs, so the
+//! coordinator can run either implementation on the hot path (the rust one
+//! avoids a PJRT host round-trip for the small models used in the
+//! experiments; the artifact path demonstrates the on-device variant).
+
+use std::time::Instant;
+
+use crate::collective::{allreduce_i64, InaSwitch};
+use crate::coordinator::RoundCtx;
+use crate::scaling::AlphaRule;
+use crate::util::Rng;
+
+use super::{average, CommOp, DistributedCompressor, Primitive, RoundResult};
+
+/// Rounding mode (paper §5.1: IntSGD (Random) vs IntSGD (Determ.)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rounding {
+    /// floor(t + u), u ~ U[0,1): unbiased, the analyzed variant.
+    Stochastic,
+    /// round-half-to-even (torch.round): biased but cheaper.
+    Deterministic,
+}
+
+/// Wire integer width (paper tests int8 and int32).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireInt {
+    Int8,
+    Int32,
+}
+
+impl WireInt {
+    pub fn bytes(self) -> usize {
+        match self {
+            WireInt::Int8 => 1,
+            WireInt::Int32 => 4,
+        }
+    }
+
+    /// Largest magnitude the *aggregate* may reach.
+    pub fn max_aggregate(self) -> i64 {
+        match self {
+            WireInt::Int8 => i8::MAX as i64,
+            WireInt::Int32 => i32::MAX as i64,
+        }
+    }
+}
+
+pub struct IntSgd {
+    pub rounding: Rounding,
+    pub wire: WireInt,
+    rule: Box<dyn AlphaRule>,
+    /// Aggregate through the INA switch simulator instead of ring
+    /// all-reduce (same math unless saturation occurs).
+    pub use_switch: bool,
+    /// Per-worker RNG streams for stochastic rounding.
+    rngs: Vec<Rng>,
+    /// Reusable per-round buffers (perf: no allocation after warmup).
+    ints: Vec<Vec<i64>>,
+    sum: Vec<i64>,
+}
+
+impl IntSgd {
+    pub fn new(
+        rounding: Rounding,
+        wire: WireInt,
+        rule: Box<dyn AlphaRule>,
+        n: usize,
+        seed: u64,
+    ) -> Self {
+        let mut root = Rng::new(seed);
+        IntSgd {
+            rounding,
+            wire,
+            rule,
+            use_switch: false,
+            rngs: (0..n).map(|i| root.fork(i as u64)).collect(),
+            ints: Vec::new(),
+            sum: Vec::new(),
+        }
+    }
+
+    /// Per-worker clip bound: each local integer is clipped to
+    /// floor((2^{b-1}-1)/n) so the aggregate of n workers provably fits the
+    /// wire type (paper §5.1 "we clip the local stochastic gradients").
+    pub fn local_clip(&self, n: usize) -> i64 {
+        (self.wire.max_aggregate() / n as i64).max(1)
+    }
+
+    /// Encode one worker's gradient (the Pallas-kernel mirror).
+    ///
+    /// All arithmetic is f32 to match the kernel exactly (`alpha * g`,
+    /// `floor(t + u)` / round-ties-even, clip); the uniform draws come two
+    /// per PRNG step (§Perf: this path is the paper's "computation
+    /// overhead" column and was the top L3 bottleneck before the f32
+    /// rewrite — see EXPERIMENTS.md §Perf).
+    pub fn encode(
+        rounding: Rounding,
+        grad: &[f32],
+        alpha: f64,
+        clip: i64,
+        rng: &mut Rng,
+        out: &mut Vec<i64>,
+    ) {
+        out.clear();
+        out.reserve(grad.len());
+        let a = alpha as f32;
+        let c = clip as f32; // clip <= 2^31: exactly representable ranges we use
+        match rounding {
+            Rounding::Stochastic => {
+                // counter-based randomness: no loop-carried RNG dependency,
+                // so the scale+floor+clip chain auto-vectorizes (§Perf).
+                // One draw from the worker's stream keys this round.
+                let base = rng.next_u64();
+                const SCALE: f32 = 1.0 / (1u32 << 24) as f32;
+                out.extend(grad.iter().enumerate().map(|(j, &g)| {
+                    let u =
+                        (crate::util::rng::splitmix64_at(base, j as u64) >> 40) as f32
+                            * SCALE;
+                    (g * a + u).floor().clamp(-c, c) as i64
+                }));
+            }
+            Rounding::Deterministic => {
+                // f32 round-ties-even mirrors jnp.round in the kernel
+                out.extend(
+                    grad.iter()
+                        .map(|&g| (g * a).round_ties_even().clamp(-c, c) as i64),
+                );
+            }
+        }
+    }
+}
+
+impl DistributedCompressor for IntSgd {
+    fn name(&self) -> String {
+        let r = match self.rounding {
+            Rounding::Stochastic => "random",
+            Rounding::Deterministic => "determ",
+        };
+        let w = match self.wire {
+            WireInt::Int8 => 8,
+            WireInt::Int32 => 32,
+        };
+        format!("intsgd_{r}_{w}bit[{}]", self.rule.name())
+    }
+
+    fn supports_allreduce(&self) -> bool {
+        true
+    }
+
+    fn round(&mut self, grads: &[Vec<f32>], ctx: &RoundCtx) -> RoundResult {
+        let n = grads.len();
+        let d = grads[0].len();
+        assert_eq!(n, self.rngs.len(), "worker count changed mid-run");
+
+        // Paper: "we assume that the first communication is exact" — there
+        // is no alpha_0 (it needs ||x^1 - x^0||).
+        if ctx.round == 0 {
+            return RoundResult {
+                gtilde: average(grads),
+                comm: vec![CommOp {
+                    primitive: Primitive::AllReduce,
+                    bytes_per_worker: d * 4,
+                }],
+                encode_seconds: 0.0,
+                decode_seconds: 0.0,
+                max_abs_int: 0,
+                alpha: 0.0,
+            };
+        }
+
+        let alpha = self.rule.alpha(ctx);
+        let clip = self.local_clip(n);
+
+        // encode every worker (timed: this is the paper's "computation
+        // overhead" column)
+        let t0 = Instant::now();
+        if self.ints.len() != n {
+            self.ints = vec![Vec::new(); n];
+        }
+        for (i, g) in grads.iter().enumerate() {
+            let mut buf = std::mem::take(&mut self.ints[i]);
+            Self::encode(self.rounding, g, alpha, clip, &mut self.rngs[i], &mut buf);
+            self.ints[i] = buf;
+        }
+        // workers encode in parallel in a real deployment; the measured
+        // loop runs them sequentially, so per-worker overhead = total / n
+        let encode_seconds = t0.elapsed().as_secs_f64() / n as f64;
+
+        // aggregate integers in-flight
+        let views: Vec<&[i64]> = self.ints.iter().map(|v| v.as_slice()).collect();
+        if self.use_switch {
+            let switch = InaSwitch::default();
+            switch.aggregate_into(&views, self.wire, &mut self.sum);
+        } else {
+            allreduce_i64(&views, &mut self.sum);
+        }
+        let max_abs_int = self.sum.iter().map(|&x| x.abs()).max().unwrap_or(0);
+
+        // decode: g_tilde = sum / (n * alpha)
+        let t1 = Instant::now();
+        let inv = 1.0 / (n as f64 * alpha);
+        let gtilde: Vec<f32> = self.sum.iter().map(|&s| (s as f64 * inv) as f32).collect();
+        let decode_seconds = t1.elapsed().as_secs_f64();
+
+        RoundResult {
+            gtilde,
+            comm: vec![CommOp {
+                primitive: if self.use_switch {
+                    Primitive::Switch
+                } else {
+                    Primitive::AllReduce
+                },
+                bytes_per_worker: d * self.wire.bytes(),
+            }],
+            encode_seconds,
+            decode_seconds,
+            max_abs_int,
+            alpha,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::BlockInfo;
+    use crate::prop_assert;
+    use crate::scaling::MovingAverageRule;
+    use crate::util::prop::prop_check;
+    use crate::util::stats::l2_norm_sq;
+
+    fn ctx(round: usize, d: usize, n: usize, step_sq: f64) -> RoundCtx {
+        RoundCtx {
+            round,
+            n,
+            d,
+            lr: 0.1,
+            step_norm_sq: step_sq,
+            blocks: vec![BlockInfo { dim: d, step_norm_sq: step_sq }],
+        }
+    }
+
+    fn make(rounding: Rounding, wire: WireInt, n: usize) -> IntSgd {
+        IntSgd::new(
+            rounding,
+            wire,
+            Box::new(MovingAverageRule::default_paper()),
+            n,
+            7,
+        )
+    }
+
+    #[test]
+    fn first_round_is_exact() {
+        let mut c = make(Rounding::Stochastic, WireInt::Int8, 2);
+        let grads = vec![vec![0.123f32, -4.5], vec![0.001f32, 2.5]];
+        let r = c.round(&grads, &ctx(0, 2, 2, 0.0));
+        assert_eq!(r.gtilde, average(&grads));
+        assert_eq!(r.wire_bytes_per_worker(), 2 * 4);
+    }
+
+    #[test]
+    fn int8_wire_bytes() {
+        let mut c = make(Rounding::Deterministic, WireInt::Int8, 4);
+        let grads = vec![vec![0.5f32; 100]; 4];
+        let r = c.round(&grads, &ctx(3, 100, 4, 0.01));
+        assert_eq!(r.wire_bytes_per_worker(), 100);
+        let mut c32 = make(Rounding::Deterministic, WireInt::Int32, 4);
+        let r32 = c32.round(&grads, &ctx(3, 100, 4, 0.01));
+        assert_eq!(r32.wire_bytes_per_worker(), 400);
+    }
+
+    #[test]
+    fn aggregate_fits_wire_type() {
+        // Even with huge gradients the clipping guarantees the aggregate
+        // fits the wire integer.
+        prop_check(0xC11F, 50, |rng| {
+            let n = 1 + rng.usize_below(32);
+            let d = 1 + rng.usize_below(500);
+            let mut c = make(Rounding::Stochastic, WireInt::Int8, n);
+            let grads: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..d).map(|_| 1e6 * rng.normal_f32()).collect())
+                .collect();
+            let r = c.round(&grads, &ctx(1, d, n, 1e-12));
+            prop_assert!(
+                r.max_abs_int <= i8::MAX as i64,
+                "aggregate {} exceeds int8",
+                r.max_abs_int
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_encode_matches_scalar_math() {
+        let grad = [0.04f32, -0.26, 0.25, 1.0];
+        let mut out = Vec::new();
+        let mut rng = Rng::new(0);
+        IntSgd::encode(Rounding::Deterministic, &grad, 10.0, 1000, &mut rng, &mut out);
+        // 0.4 -> 0, -2.6 -> -3, 2.5 -> 2 (ties-even), 10 -> 10
+        assert_eq!(out, vec![0, -3, 2, 10]);
+    }
+
+    #[test]
+    fn stochastic_rounding_is_unbiased() {
+        // E[Int(alpha g)]/alpha == g, estimated over many draws.
+        let g = [0.3f32, -0.7, 0.01, 2.4];
+        let alpha = 1.0;
+        let mut rng = Rng::new(99);
+        let mut acc = [0f64; 4];
+        let trials = 60_000;
+        let mut out = Vec::new();
+        for _ in 0..trials {
+            IntSgd::encode(Rounding::Stochastic, &g, alpha, 1 << 40, &mut rng, &mut out);
+            for (a, &v) in acc.iter_mut().zip(&out) {
+                *a += v as f64;
+            }
+        }
+        for (a, &gi) in acc.iter().zip(&g) {
+            let mean = *a / trials as f64;
+            assert!(
+                (mean - gi as f64).abs() < 0.01,
+                "mean {mean} vs {gi}"
+            );
+        }
+    }
+
+    #[test]
+    fn recovers_average_gradient_at_high_alpha() {
+        // With near-zero rounding error (huge alpha via tiny steps),
+        // gtilde ~= mean(grads).
+        let n = 4;
+        let d = 64;
+        let mut rng = Rng::new(5);
+        let grads: Vec<Vec<f32>> =
+            (0..n).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let mut c = make(Rounding::Stochastic, WireInt::Int32, n);
+        let r = c.round(&grads, &ctx(1, d, n, 1e-14));
+        let avg = average(&grads);
+        let err = l2_norm_sq(
+            &r.gtilde
+                .iter()
+                .zip(&avg)
+                .map(|(&a, &b)| a - b)
+                .collect::<Vec<_>>(),
+        );
+        assert!(err < 1e-6, "err {err}, alpha {}", r.alpha);
+    }
+
+    #[test]
+    fn rounding_error_bounded_by_lemma1() {
+        // || gtilde - avg ||^2 <= d / (4 n alpha^2) * (1/n) ... verify the
+        // per-worker bound E||Q(g)-g||^2 <= d/(4 alpha^2) empirically for
+        // the aggregate: Var <= d/(4 n alpha^2).
+        prop_check(0x1EE7, 20, |rng| {
+            let n = 2 + rng.usize_below(8);
+            let d = 100;
+            let grads: Vec<Vec<f32>> =
+                (0..n).map(|_| rng.normal_vec(d, 1.0)).collect();
+            let avg = average(&grads);
+            let mut c = make(Rounding::Stochastic, WireInt::Int32, n);
+            // moderate alpha via a moderate step norm
+            let cx = ctx(1, d, n, 1e-4);
+            let mut sq = 0.0;
+            let reps = 40;
+            let mut alpha = 0.0;
+            for _ in 0..reps {
+                let r = c.round(&grads, &cx);
+                alpha = r.alpha;
+                sq += r
+                    .gtilde
+                    .iter()
+                    .zip(&avg)
+                    .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>();
+            }
+            let mean_sq = sq / reps as f64;
+            let bound = d as f64 / (4.0 * n as f64 * alpha * alpha);
+            // allow 3x slack for the monte-carlo estimate
+            prop_assert!(
+                mean_sq <= 3.0 * bound + 1e-12,
+                "E err^2 {mean_sq} > bound {bound} (alpha {alpha})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn switch_and_allreduce_agree_without_saturation() {
+        let n = 4;
+        let d = 128;
+        let mut rng = Rng::new(11);
+        let grads: Vec<Vec<f32>> =
+            (0..n).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let mut a = make(Rounding::Deterministic, WireInt::Int32, n);
+        let mut b = make(Rounding::Deterministic, WireInt::Int32, n);
+        b.use_switch = true;
+        let ra = a.round(&grads, &ctx(1, d, n, 1e-3));
+        let rb = b.round(&grads, &ctx(1, d, n, 1e-3));
+        assert_eq!(ra.gtilde, rb.gtilde);
+        assert_eq!(rb.comm[0].primitive, Primitive::Switch);
+    }
+}

@@ -1,0 +1,134 @@
+//! Gradient compression engine: IntSGD and every baseline the paper
+//! evaluates against (Table 1 / §5), behind one trait.
+//!
+//! A `DistributedCompressor` consumes the per-worker gradients of one round
+//! and produces the shared gradient estimate `g_tilde` plus an exact
+//! account of what went on the wire (which collective primitive, how many
+//! bytes per worker) and how long encode/decode took on this machine. The
+//! wire account feeds the network cost model (`netsim`) that regenerates
+//! the paper's Tables 2-3 and Fig. 2; the estimate feeds the optimizer.
+//!
+//! Worker state that a real deployment would keep device-local (error
+//! feedback memories, DIANA shifts, PowerSGD's warm-started Q factors,
+//! per-worker RNG streams) is kept per-rank inside each compressor, so the
+//! arithmetic is bit-identical to a real multi-node run.
+
+pub mod error_feedback;
+pub mod heuristic;
+pub mod identity;
+pub mod intsgd;
+pub mod natsgd;
+pub mod powersgd;
+pub mod qsgd;
+pub mod signsgd;
+pub mod topk;
+pub mod wire;
+
+pub use error_feedback::ErrorFeedback;
+pub use heuristic::HeuristicIntSgd;
+pub use identity::IdentitySgd;
+pub use intsgd::IntSgd;
+pub use natsgd::NatSgd;
+pub use powersgd::PowerSgd;
+pub use qsgd::Qsgd;
+pub use signsgd::SignSgd;
+pub use topk::TopK;
+
+use crate::coordinator::RoundCtx;
+
+/// The collective primitive a message travels over. Which primitives a
+/// compressor supports is the paper's central systems argument (Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Primitive {
+    /// Ring all-reduce: messages must be summable in-flight.
+    AllReduce,
+    /// All-gather: every worker receives every message, then decodes.
+    AllGather,
+    /// SwitchML-style in-network aggregation with integer adders.
+    Switch,
+}
+
+/// One wire transfer within a round.
+#[derive(Clone, Debug)]
+pub struct CommOp {
+    pub primitive: Primitive,
+    /// Payload bytes contributed by each worker.
+    pub bytes_per_worker: usize,
+}
+
+/// Outcome of one compression round.
+#[derive(Clone, Debug)]
+pub struct RoundResult {
+    /// The decoded average-gradient estimate shared by all workers.
+    pub gtilde: Vec<f32>,
+    /// Wire schedule for the network cost model.
+    pub comm: Vec<CommOp>,
+    /// Measured wallclock spent encoding (all workers) + decoding, seconds.
+    pub encode_seconds: f64,
+    pub decode_seconds: f64,
+    /// Largest |integer| in the aggregated message (paper Fig. 6); 0 when
+    /// the algorithm does not produce integers.
+    pub max_abs_int: i64,
+    /// Scale used this round (for diagnostics; 0 when n/a).
+    pub alpha: f64,
+}
+
+impl RoundResult {
+    pub fn wire_bytes_per_worker(&self) -> usize {
+        self.comm.iter().map(|c| c.bytes_per_worker).sum()
+    }
+}
+
+/// A gradient compression + aggregation algorithm.
+pub trait DistributedCompressor: Send {
+    fn name(&self) -> String;
+
+    /// Whether the algorithm's messages can be reduced in-flight
+    /// (all-reduce / INA) or require all-gather (paper Table 1).
+    fn supports_allreduce(&self) -> bool;
+
+    /// Run one round over the per-worker flattened gradients.
+    fn round(&mut self, grads: &[Vec<f32>], ctx: &RoundCtx) -> RoundResult;
+}
+
+/// Average of per-worker gradients (the uncompressed reference reduction).
+pub fn average(grads: &[Vec<f32>]) -> Vec<f32> {
+    let n = grads.len();
+    assert!(n > 0);
+    let d = grads[0].len();
+    let mut out = vec![0.0f32; d];
+    for g in grads {
+        assert_eq!(g.len(), d);
+        for (o, &x) in out.iter_mut().zip(g) {
+            *o += x;
+        }
+    }
+    let inv = 1.0 / n as f32;
+    for o in &mut out {
+        *o *= inv;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn average_of_identical_is_identity() {
+        let g = vec![vec![1.0f32, -2.0, 3.5]; 4];
+        assert_eq!(average(&g), vec![1.0, -2.0, 3.5]);
+    }
+
+    #[test]
+    fn average_basic() {
+        let g = vec![vec![1.0f32, 0.0], vec![3.0f32, 2.0]];
+        assert_eq!(average(&g), vec![2.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn average_rejects_mismatched_dims() {
+        average(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+}

@@ -1,0 +1,213 @@
+//! NatSGD — natural compression (Horváth et al., 2019): every coordinate
+//! is rounded to a signed power of two, stochastically so the operator is
+//! unbiased. The wire format is sign + 8-bit exponent (9 bits/coord; the
+//! authors' implementation ships exponent bytes + a packed sign bitset),
+//! which is NOT summable in flight: like QSGD it needs all-gather — the
+//! very bit-level-manipulation overhead the paper's Tables 2-3 measure.
+
+use std::time::Instant;
+
+use crate::coordinator::RoundCtx;
+use crate::util::Rng;
+
+use super::{CommOp, DistributedCompressor, Primitive, RoundResult};
+
+/// Encoded message: packed sign bits + per-coordinate exponents.
+/// exp == EXP_ZERO encodes exact zero.
+#[derive(Clone, Debug)]
+pub struct NatMsg {
+    pub signs: Vec<u64>,
+    pub exps: Vec<i16>,
+}
+
+pub const EXP_ZERO: i16 = i16::MIN;
+
+pub struct NatSgd {
+    rngs: Vec<Rng>,
+}
+
+impl NatSgd {
+    pub fn new(n: usize, seed: u64) -> Self {
+        let mut root = Rng::new(seed);
+        NatSgd { rngs: (0..n).map(|i| root.fork(i as u64)).collect() }
+    }
+
+    /// Natural compression by direct f32 bit manipulation (this is the
+    /// point of the scheme: exponent extraction is free). For normal
+    /// x = (-1)^s 2^e (1+m), round up to 2^{e+1} with probability m —
+    /// exactly the unbiased rule, with m read straight from the mantissa
+    /// bits. Subnormals are tiny enough to flush to zero.
+    pub fn encode(&mut self, rank: usize, grad: &[f32]) -> NatMsg {
+        let rng = &mut self.rngs[rank];
+        let mut signs = vec![0u64; grad.len().div_ceil(64)];
+        let mut exps = Vec::with_capacity(grad.len());
+        const MANT_SCALE: f32 = 1.0 / (1u32 << 23) as f32;
+        for (j, &x) in grad.iter().enumerate() {
+            let bits = x.to_bits();
+            let biased = (bits >> 23) & 0xFF;
+            if biased == 0 || biased == 0xFF {
+                // zero / subnormal / inf / nan -> 0 on the wire
+                exps.push(EXP_ZERO);
+                continue;
+            }
+            signs[j / 64] |= (((bits >> 31) as u64) & 1) << (j % 64);
+            // P(round up) = mantissa fraction m in [0, 1)
+            let m = (bits & 0x7F_FFFF) as f32 * MANT_SCALE;
+            let e = biased as i16 - 127;
+            let exp = e + (rng.uniform_f32() < m) as i16;
+            exps.push(exp.clamp(-126, 127));
+        }
+        NatMsg { signs, exps }
+    }
+
+    pub fn decode(msg: &NatMsg, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(msg.exps.len());
+        for (j, &e) in msg.exps.iter().enumerate() {
+            if e == EXP_ZERO {
+                out.push(0.0);
+                continue;
+            }
+            // construct +-2^e directly from bits
+            let sign = (msg.signs[j / 64] >> (j % 64) & 1) as u32;
+            let bits = (sign << 31) | (((e + 127) as u32) << 23);
+            out.push(f32::from_bits(bits));
+        }
+    }
+
+    /// 9 bits per coordinate: 1 sign + 8 exponent.
+    pub fn wire_bytes(d: usize) -> usize {
+        (d * 9).div_ceil(8)
+    }
+}
+
+impl DistributedCompressor for NatSgd {
+    fn name(&self) -> String {
+        "natsgd".into()
+    }
+
+    fn supports_allreduce(&self) -> bool {
+        false
+    }
+
+    fn round(&mut self, grads: &[Vec<f32>], _ctx: &RoundCtx) -> RoundResult {
+        let n = grads.len();
+        let d = grads[0].len();
+        let t0 = Instant::now();
+        let msgs: Vec<NatMsg> = (0..n).map(|i| self.encode(i, &grads[i])).collect();
+        // per-worker encode cost (parallel in reality)
+        let encode_seconds = t0.elapsed().as_secs_f64() / n as f64;
+
+        let t1 = Instant::now();
+        let mut gtilde = vec![0.0f32; d];
+        let mut buf = Vec::with_capacity(d);
+        for msg in &msgs {
+            Self::decode(msg, &mut buf);
+            for (o, &x) in gtilde.iter_mut().zip(&buf) {
+                *o += x;
+            }
+        }
+        let inv = 1.0 / n as f32;
+        for o in &mut gtilde {
+            *o *= inv;
+        }
+        let decode_seconds = t1.elapsed().as_secs_f64();
+
+        RoundResult {
+            gtilde,
+            comm: vec![CommOp {
+                primitive: Primitive::AllGather,
+                bytes_per_worker: Self::wire_bytes(d),
+            }],
+            encode_seconds,
+            decode_seconds,
+            max_abs_int: 0,
+            alpha: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn decodes_to_powers_of_two() {
+        let mut c = NatSgd::new(1, 5);
+        let g = vec![0.3f32, -1.7, 0.0, 5.0, -0.001];
+        let msg = c.encode(0, &g);
+        let mut out = Vec::new();
+        NatSgd::decode(&msg, &mut out);
+        for (&o, &x) in out.iter().zip(&g) {
+            if x == 0.0 {
+                assert_eq!(o, 0.0);
+            } else {
+                assert!(o.abs().log2().fract() == 0.0, "{o} not a power of two");
+                assert_eq!(o.signum(), x.signum());
+                // within factor 2
+                assert!(o.abs() >= x.abs() / 2.0 && o.abs() <= x.abs() * 2.0);
+            }
+        }
+    }
+
+    #[test]
+    fn unbiased() {
+        let g = vec![0.3f32, -1.7, 5.1, 0.077];
+        let mut c = NatSgd::new(1, 6);
+        let mut acc = vec![0f64; g.len()];
+        let trials = 60_000;
+        let mut buf = Vec::new();
+        for _ in 0..trials {
+            let msg = c.encode(0, &g);
+            NatSgd::decode(&msg, &mut buf);
+            for (a, &x) in acc.iter_mut().zip(&buf) {
+                *a += x as f64;
+            }
+        }
+        for (a, &x) in acc.iter().zip(&g) {
+            let mean = a / trials as f64;
+            assert!(
+                (mean - x as f64).abs() < 0.02 * x.abs().max(0.1) as f64,
+                "mean {mean} vs {x}"
+            );
+        }
+    }
+
+    #[test]
+    fn wire_is_9_bits_per_coord() {
+        assert_eq!(NatSgd::wire_bytes(8), 9);
+        assert_eq!(NatSgd::wire_bytes(1000), 1125);
+    }
+
+    #[test]
+    fn variance_bounded_relative() {
+        // natural compression has relative variance <= 1/8 ||x||^2
+        prop_check(0xA7, 20, |rng| {
+            let d = 1 + rng.usize_below(100);
+            let g = rng.normal_vec(d, 1.0);
+            let norm_sq: f64 = g.iter().map(|&x| (x as f64).powi(2)).sum();
+            let mut c = NatSgd::new(1, rng.next_u64());
+            let mut buf = Vec::new();
+            let mut err = 0.0;
+            let reps = 200;
+            for _ in 0..reps {
+                let msg = c.encode(0, &g);
+                NatSgd::decode(&msg, &mut buf);
+                err += g
+                    .iter()
+                    .zip(&buf)
+                    .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>();
+            }
+            let mean_err = err / reps as f64;
+            prop_assert!(
+                mean_err <= 0.25 * norm_sq + 1e-9,
+                "err {mean_err} vs bound {}",
+                0.125 * norm_sq
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,163 @@
+//! Top-k sparsification with error feedback (Stich et al., 2018).
+//!
+//! Each worker ships its k largest-magnitude coordinates as (index, value)
+//! pairs. Sparse supports differ across workers, so aggregation needs
+//! all-gather; convergence needs EF (paper Table 1).
+
+use std::time::Instant;
+
+use crate::coordinator::RoundCtx;
+
+use super::{CommOp, DistributedCompressor, ErrorFeedback, Primitive, RoundResult};
+
+pub struct TopK {
+    /// Fraction of coordinates kept (k = max(1, ratio * d)).
+    pub ratio: f64,
+    ef: ErrorFeedback,
+}
+
+impl TopK {
+    pub fn new(ratio: f64, n: usize) -> Self {
+        assert!(ratio > 0.0 && ratio <= 1.0);
+        TopK { ratio, ef: ErrorFeedback::new(n) }
+    }
+
+    pub fn k_of(&self, d: usize) -> usize {
+        ((self.ratio * d as f64).round() as usize).clamp(1, d)
+    }
+
+    /// Select top-k |a| as (idx, val) pairs, O(d) selection via
+    /// `select_nth_unstable`.
+    pub fn select(a: &[f32], k: usize) -> Vec<(u32, f32)> {
+        let mut idx: Vec<u32> = (0..a.len() as u32).collect();
+        if k < a.len() {
+            idx.select_nth_unstable_by(k, |&i, &j| {
+                a[j as usize]
+                    .abs()
+                    .partial_cmp(&a[i as usize].abs())
+                    .unwrap()
+            });
+            idx.truncate(k);
+        }
+        idx.into_iter().map(|i| (i, a[i as usize])).collect()
+    }
+}
+
+impl DistributedCompressor for TopK {
+    fn name(&self) -> String {
+        format!("topk_{}", self.ratio)
+    }
+
+    fn supports_allreduce(&self) -> bool {
+        false
+    }
+
+    fn round(&mut self, grads: &[Vec<f32>], _ctx: &RoundCtx) -> RoundResult {
+        let n = grads.len();
+        let d = grads[0].len();
+        let k = self.k_of(d);
+
+        let t0 = Instant::now();
+        let mut msgs = Vec::with_capacity(n);
+        for (i, g) in grads.iter().enumerate() {
+            let a = self.ef.corrected(i, g);
+            let sel = Self::select(&a, k);
+            // dense image of the compressed message for the EF update
+            let mut dense = vec![0.0f32; d];
+            for &(j, v) in &sel {
+                dense[j as usize] = v;
+            }
+            self.ef.store_residual(i, &a, &dense);
+            msgs.push(sel);
+        }
+        // per-worker encode cost (parallel in reality)
+        let encode_seconds = t0.elapsed().as_secs_f64() / n as f64;
+
+        let t1 = Instant::now();
+        let mut gtilde = vec![0.0f32; d];
+        for sel in &msgs {
+            for &(j, v) in sel {
+                gtilde[j as usize] += v;
+            }
+        }
+        let inv = 1.0 / n as f32;
+        for x in &mut gtilde {
+            *x *= inv;
+        }
+        let decode_seconds = t1.elapsed().as_secs_f64();
+
+        RoundResult {
+            gtilde,
+            comm: vec![CommOp {
+                primitive: Primitive::AllGather,
+                bytes_per_worker: k * 8, // u32 index + f32 value
+            }],
+            encode_seconds,
+            decode_seconds,
+            max_abs_int: 0,
+            alpha: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RoundCtx;
+    use crate::util::Rng;
+
+    fn ctx(d: usize, n: usize) -> RoundCtx {
+        RoundCtx { round: 1, n, d, lr: 0.1, step_norm_sq: 0.0, blocks: vec![] }
+    }
+
+    #[test]
+    fn selects_largest_magnitudes() {
+        let a = [0.1f32, -5.0, 0.3, 2.0, -0.2];
+        let mut sel = TopK::select(&a, 2);
+        sel.sort_by_key(|&(i, _)| i);
+        assert_eq!(sel, vec![(1, -5.0), (3, 2.0)]);
+    }
+
+    #[test]
+    fn k_equals_d_is_lossless() {
+        let mut rng = Rng::new(0);
+        let grads: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(50, 1.0)).collect();
+        let mut c = TopK::new(1.0, 3);
+        let r = c.round(&grads, &ctx(50, 3));
+        let avg = super::super::average(&grads);
+        for (a, b) in r.gtilde.iter().zip(&avg) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ef_preserves_total_mass_over_time() {
+        let mut rng = Rng::new(1);
+        let g = rng.normal_vec(100, 1.0);
+        let grads = vec![g.clone(); 2];
+        let mut c = TopK::new(0.1, 2);
+        let mut acc = vec![0.0f64; 100];
+        let rounds = 300;
+        for _ in 0..rounds {
+            let r = c.round(&grads, &ctx(100, 2));
+            for (a, &x) in acc.iter_mut().zip(&r.gtilde) {
+                *a += x as f64;
+            }
+        }
+        for (a, &x) in acc.iter().zip(&g) {
+            assert!(
+                (a / rounds as f64 - x as f64).abs() < 0.05,
+                "{} vs {x}",
+                a / rounds as f64
+            );
+        }
+    }
+
+    #[test]
+    fn wire_bytes_scale_with_k() {
+        let grads = vec![vec![1.0f32; 1000]; 2];
+        let mut c = TopK::new(0.01, 2);
+        let r = c.round(&grads, &ctx(1000, 2));
+        assert_eq!(r.wire_bytes_per_worker(), 10 * 8);
+    }
+}

@@ -1,0 +1,126 @@
+//! Configuration: `key = value` config files + CLI overrides.
+//!
+//! The offline vendor set has no clap/serde, so the launcher uses a small
+//! layered config system: defaults <- config file (`--config path`) <-
+//! `key=value` CLI overrides. Keys are flat dotted names, e.g.
+//! `train.lr = 0.1`, `net.bandwidth_gbps = 100`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    map: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Config::default()
+    }
+
+    /// Parse `key = value` lines; `#` starts a comment; blank lines ok.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("config line {}: expected key = value", lineno + 1))?;
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Config { map })
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
+        Self::parse(&text)
+    }
+
+    /// Apply one `key=value` override (CLI form).
+    pub fn set_kv(&mut self, kv: &str) -> Result<()> {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow!("override {kv:?}: expected key=value"))?;
+        self.map.insert(k.trim().to_string(), v.trim().to_string());
+        Ok(())
+    }
+
+    /// Merge `other` on top of `self`.
+    pub fn merge(&mut self, other: Config) {
+        self.map.extend(other.map);
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            _ => default,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_typed_access() {
+        let c = Config::parse(
+            "train.lr = 0.1\n# comment\nworkers = 16  # trailing\nname = fig1\nflag = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.f32_or("train.lr", 0.0), 0.1);
+        assert_eq!(c.usize_or("workers", 0), 16);
+        assert_eq!(c.str_or("name", ""), "fig1");
+        assert!(c.bool_or("flag", false));
+        assert_eq!(c.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::parse("a = 1\nb = 2\n").unwrap();
+        c.set_kv("b=20").unwrap();
+        assert_eq!(c.usize_or("a", 0), 1);
+        assert_eq!(c.usize_or("b", 0), 20);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("no equals sign\n").is_err());
+        let mut c = Config::new();
+        assert!(c.set_kv("noequals").is_err());
+    }
+}

@@ -1,0 +1,191 @@
+//! PJRT-backed gradient workers: each worker thread owns a PJRT CPU client
+//! with the AOT train-step executable and computes gradients on its local
+//! shard — the L3 <-> L2 boundary of the stack.
+//!
+//! Construction happens inside the worker thread (`WorkerPool::spawn`
+//! factories): PJRT clients are Rc-backed and must not cross threads.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::{CifarLike, MarkovText};
+use crate::runtime::{lit_f32, lit_i32, Dtype, Runtime};
+use crate::util::Rng;
+
+use super::GradientSource;
+
+/// Which minibatch stream feeds the train step.
+pub enum BatchSpec {
+    /// Classifier: (x[B, D], one-hot y[B, C]) sampled from shard indices.
+    Classifier { data: Arc<CifarLike>, indices: Vec<usize>, batch: usize },
+    /// LM: token windows [B, T+1] sampled from a shard of the corpus.
+    Lm { tokens: Arc<Vec<u32>>, batch: usize, seq: usize },
+}
+
+/// A worker executing `<model>_train_step` through PJRT.
+pub struct PjrtWorker {
+    rt: Runtime,
+    exe_name: String,
+    batch: BatchSpec,
+    rng: Rng,
+    /// Parameter array boundaries (numels in artifact order).
+    param_numels: Vec<usize>,
+    param_shapes: Vec<Vec<usize>>,
+    grad_dim: usize,
+}
+
+impl PjrtWorker {
+    /// Build inside the worker thread. `model` is "classifier" | "lm" |
+    /// "transformer".
+    pub fn new(artifact_dir: &str, model: &str, batch: BatchSpec, seed: u64) -> Result<Self> {
+        let mut rt = Runtime::open(artifact_dir)?;
+        let exe_name = format!("{model}_train_step");
+        rt.load(&exe_name)?; // compile now, fail fast
+        let meta = rt.meta(&exe_name).ok_or_else(|| anyhow!("missing meta"))?;
+        let param_numels: Vec<usize> = meta.params.iter().map(|p| p.numel()).collect();
+        let param_shapes: Vec<Vec<usize>> =
+            meta.params.iter().map(|p| p.shape.clone()).collect();
+        let grad_dim = meta.grad_dim;
+        Ok(PjrtWorker {
+            rt,
+            exe_name,
+            batch,
+            rng: Rng::new(seed),
+            param_numels,
+            param_shapes,
+            grad_dim,
+        })
+    }
+
+    fn param_literals(&self, flat: &[f32]) -> Result<Vec<xla::Literal>> {
+        split_params(flat, &self.param_numels, &self.param_shapes)
+    }
+
+    fn batch_literals(&mut self) -> Result<Vec<xla::Literal>> {
+        match &self.batch {
+            BatchSpec::Classifier { data, indices, batch } => {
+                let idx: Vec<usize> = (0..*batch)
+                    .map(|_| indices[self.rng.usize_below(indices.len())])
+                    .collect();
+                let (x, y) = data.batch(&idx);
+                Ok(vec![
+                    lit_f32(&x, &[*batch, data.dim])?,
+                    lit_f32(&y, &[*batch, data.classes])?,
+                ])
+            }
+            BatchSpec::Lm { tokens, batch, seq } => {
+                let w = MarkovText::batch_windows(tokens, *batch, *seq, &mut self.rng);
+                Ok(vec![lit_i32(&w, &[*batch, *seq + 1])?])
+            }
+        }
+    }
+}
+
+/// Split a flat parameter vector into per-array literals.
+pub fn split_params(
+    flat: &[f32],
+    numels: &[usize],
+    shapes: &[Vec<usize>],
+) -> Result<Vec<xla::Literal>> {
+    let total: usize = numels.iter().sum();
+    if flat.len() != total {
+        return Err(anyhow!("flat params {} != manifest total {total}", flat.len()));
+    }
+    let mut out = Vec::with_capacity(numels.len());
+    let mut off = 0;
+    for (numel, shape) in numels.iter().zip(shapes) {
+        out.push(lit_f32(&flat[off..off + numel], shape)?);
+        off += numel;
+    }
+    Ok(out)
+}
+
+impl GradientSource for PjrtWorker {
+    fn dim(&self) -> usize {
+        self.grad_dim
+    }
+
+    fn grad(&mut self, params: &[f32], _round: usize) -> (f32, Vec<f32>) {
+        let mut run = || -> Result<(f32, Vec<f32>)> {
+            let mut inputs = self.param_literals(params)?;
+            inputs.extend(self.batch_literals()?);
+            let exe = self.rt.load(&self.exe_name)?;
+            let outs = exe.run(&inputs)?;
+            let loss = outs[0].get_first_element::<f32>()?;
+            let mut grad = Vec::with_capacity(self.grad_dim);
+            for o in &outs[1..] {
+                grad.extend(o.to_vec::<f32>()?);
+            }
+            debug_assert_eq!(grad.len(), self.grad_dim);
+            Ok((loss, grad))
+        };
+        run().expect("pjrt train step")
+    }
+}
+
+/// Leader-side evaluation through the `<model>_eval_step` artifact.
+pub struct PjrtEvaluator {
+    rt: Runtime,
+    exe_name: String,
+    param_numels: Vec<usize>,
+    param_shapes: Vec<Vec<usize>>,
+    data_inputs: Vec<(Vec<usize>, Dtype)>,
+}
+
+impl PjrtEvaluator {
+    pub fn new(artifact_dir: &str, model: &str) -> Result<Self> {
+        let mut rt = Runtime::open(artifact_dir)?;
+        let exe_name = format!("{model}_eval_step");
+        rt.load(&exe_name)?;
+        let train_meta = rt
+            .meta(&format!("{model}_train_step"))
+            .ok_or_else(|| anyhow!("missing train meta"))?;
+        let param_numels: Vec<usize> =
+            train_meta.params.iter().map(|p| p.numel()).collect();
+        let param_shapes: Vec<Vec<usize>> =
+            train_meta.params.iter().map(|p| p.shape.clone()).collect();
+        let eval_meta = rt.meta(&exe_name).unwrap();
+        let data_inputs: Vec<(Vec<usize>, Dtype)> = eval_meta.inputs
+            [param_numels.len()..]
+            .iter()
+            .map(|i| (i.shape.clone(), i.dtype))
+            .collect();
+        Ok(PjrtEvaluator { rt, exe_name, param_numels, param_shapes, data_inputs })
+    }
+
+    /// Expected data-input shapes (after the params).
+    pub fn data_shapes(&self) -> &[(Vec<usize>, Dtype)] {
+        &self.data_inputs
+    }
+
+    /// Run eval; returns the raw outputs as f32 scalars.
+    pub fn eval(&mut self, params: &[f32], data: Vec<xla::Literal>) -> Result<Vec<f32>> {
+        let mut inputs = split_params(params, &self.param_numels, &self.param_shapes)?;
+        inputs.extend(data);
+        let exe = self.rt.load(&self.exe_name)?;
+        let outs = exe.run(&inputs)?;
+        outs.iter()
+            .map(|o| Ok(o.get_first_element::<f32>()?))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_params_boundaries() {
+        let flat: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let lits = split_params(&flat, &[4, 6], &[vec![2, 2], vec![6]]).unwrap();
+        assert_eq!(lits.len(), 2);
+        assert_eq!(lits[0].to_vec::<f32>().unwrap(), vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(lits[1].element_count(), 6);
+    }
+
+    #[test]
+    fn split_params_rejects_mismatch() {
+        assert!(split_params(&[0.0; 5], &[4], &[vec![4]]).is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! Worker pool: one OS thread per simulated device.
+//!
+//! PJRT clients are `Rc`-backed (not `Send`), so each worker *constructs*
+//! its gradient source inside its own thread from a `Send` factory — the
+//! same pattern a real multi-process launcher would use (each rank opens
+//! its own device).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// What a worker computes each round: the local stochastic gradient.
+pub trait GradientSource {
+    fn dim(&self) -> usize;
+
+    /// (local loss, flattened gradient) at `params` for round `round`.
+    fn grad(&mut self, params: &[f32], round: usize) -> (f32, Vec<f32>);
+}
+
+enum ToWorker {
+    Round { params: Arc<Vec<f32>>, round: usize },
+    Stop,
+}
+
+struct FromWorker {
+    rank: usize,
+    loss: f32,
+    grad: Vec<f32>,
+    seconds: f64,
+}
+
+pub struct WorkerPool {
+    senders: Vec<Sender<ToWorker>>,
+    receiver: Receiver<FromWorker>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn one thread per factory; each factory builds that rank's
+    /// gradient source in-thread.
+    pub fn spawn(
+        factories: Vec<Box<dyn FnOnce() -> Box<dyn GradientSource> + Send>>,
+    ) -> Self {
+        let (tx_out, rx_out) = channel::<FromWorker>();
+        let mut senders = Vec::new();
+        let mut handles = Vec::new();
+        for (rank, factory) in factories.into_iter().enumerate() {
+            let (tx_in, rx_in) = channel::<ToWorker>();
+            let tx_out = tx_out.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("worker-{rank}"))
+                .spawn(move || {
+                    let mut source = factory();
+                    while let Ok(msg) = rx_in.recv() {
+                        match msg {
+                            ToWorker::Stop => break,
+                            ToWorker::Round { params, round } => {
+                                let t0 = Instant::now();
+                                let (loss, grad) = source.grad(&params, round);
+                                let seconds = t0.elapsed().as_secs_f64();
+                                if tx_out
+                                    .send(FromWorker { rank, loss, grad, seconds })
+                                    .is_err()
+                                {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                })
+                .expect("spawn worker thread");
+            senders.push(tx_in);
+            handles.push(handle);
+        }
+        WorkerPool { senders, receiver: rx_out, handles }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Broadcast params, wait for all gradients. Returns per-rank grads &
+    /// losses plus the straggler (max) compute time — what a synchronous
+    /// round actually costs.
+    pub fn compute_round(
+        &mut self,
+        params: &[f32],
+        round: usize,
+    ) -> (Vec<Vec<f32>>, Vec<f32>, f64) {
+        let n = self.workers();
+        let shared = Arc::new(params.to_vec());
+        for tx in &self.senders {
+            tx.send(ToWorker::Round { params: Arc::clone(&shared), round })
+                .expect("worker alive");
+        }
+        let mut grads: Vec<Option<Vec<f32>>> = (0..n).map(|_| None).collect();
+        let mut losses = vec![0.0f32; n];
+        let mut max_seconds = 0.0f64;
+        for _ in 0..n {
+            let msg = self.receiver.recv().expect("worker result");
+            losses[msg.rank] = msg.loss;
+            max_seconds = max_seconds.max(msg.seconds);
+            grads[msg.rank] = Some(msg.grad);
+        }
+        (
+            grads.into_iter().map(|g| g.expect("all ranks reported")).collect(),
+            losses,
+            max_seconds,
+        )
+    }
+
+    /// Stop all workers and join their threads.
+    pub fn shutdown(&mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(ToWorker::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        self.senders.clear();
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        if !self.handles.is_empty() {
+            self.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Echo {
+        rank: usize,
+        d: usize,
+    }
+
+    impl GradientSource for Echo {
+        fn dim(&self) -> usize {
+            self.d
+        }
+
+        fn grad(&mut self, params: &[f32], round: usize) -> (f32, Vec<f32>) {
+            // grad[j] = rank + round + params[j], loss = rank
+            let g = params
+                .iter()
+                .map(|&p| self.rank as f32 + round as f32 + p)
+                .collect();
+            (self.rank as f32, g)
+        }
+    }
+
+    fn echo_pool(n: usize, d: usize) -> WorkerPool {
+        let factories: Vec<_> = (0..n)
+            .map(|rank| {
+                let f: Box<dyn FnOnce() -> Box<dyn GradientSource> + Send> =
+                    Box::new(move || Box::new(Echo { rank, d }) as _);
+                f
+            })
+            .collect();
+        WorkerPool::spawn(factories)
+    }
+
+    #[test]
+    fn results_arrive_in_rank_order() {
+        let mut pool = echo_pool(5, 3);
+        let (grads, losses, secs) = pool.compute_round(&[1.0, 2.0, 3.0], 7);
+        pool.shutdown();
+        assert!(secs >= 0.0);
+        for rank in 0..5 {
+            assert_eq!(losses[rank], rank as f32);
+            assert_eq!(
+                grads[rank],
+                vec![rank as f32 + 8.0, rank as f32 + 9.0, rank as f32 + 10.0]
+            );
+        }
+    }
+
+    #[test]
+    fn multiple_rounds() {
+        let mut pool = echo_pool(2, 1);
+        for round in 0..10 {
+            let (grads, _, _) = pool.compute_round(&[0.0], round);
+            assert_eq!(grads[0][0], round as f32);
+            assert_eq!(grads[1][0], 1.0 + round as f32);
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_drop_safe() {
+        let mut pool = echo_pool(3, 1);
+        pool.shutdown();
+        pool.shutdown();
+        drop(pool);
+    }
+}

@@ -1,0 +1,162 @@
+//! Synthetic CIFAR-like classification data.
+//!
+//! Ten Gaussian class-conditional distributions over 32*32*3 = 3072
+//! dimensions: x = mu_c + sigma * eps with well-separated random unit-norm
+//! class means. This preserves what the compression experiments actually
+//! probe — gradient-scale drift, adaptive-alpha tracking, int8 clipping
+//! pressure over a real optimization trajectory — at laptop scale (see
+//! DESIGN.md substitution table).
+
+use crate::util::Rng;
+
+pub const DIM: usize = 3 * 32 * 32;
+pub const CLASSES: usize = 10;
+
+pub struct CifarLike {
+    pub train_x: Vec<f32>, // row-major [train, DIM]
+    pub train_y: Vec<u32>,
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<u32>,
+    pub dim: usize,
+    pub classes: usize,
+}
+
+impl CifarLike {
+    /// Generate `train` + `test` examples. `margin` scales class-mean
+    /// separation relative to the noise (1.0 = moderately hard).
+    pub fn generate(train: usize, test: usize, margin: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        // random unit-norm class means, scaled
+        let means: Vec<Vec<f32>> = (0..CLASSES)
+            .map(|_| {
+                let mut v = rng.normal_vec(DIM, 1.0);
+                let norm = crate::util::stats::l2_norm(&v) as f32;
+                for x in &mut v {
+                    *x *= margin / norm * (DIM as f32).sqrt() * 0.05;
+                }
+                v
+            })
+            .collect();
+        let gen = |count: usize, rng: &mut Rng| {
+            let mut xs = Vec::with_capacity(count * DIM);
+            let mut ys = Vec::with_capacity(count);
+            for _ in 0..count {
+                let c = rng.usize_below(CLASSES);
+                ys.push(c as u32);
+                for j in 0..DIM {
+                    xs.push(means[c][j] + 0.3 * rng.normal_f32());
+                }
+            }
+            (xs, ys)
+        };
+        let (train_x, train_y) = gen(train, &mut rng);
+        let (test_x, test_y) = gen(test, &mut rng);
+        CifarLike { train_x, train_y, test_x, test_y, dim: DIM, classes: CLASSES }
+    }
+
+    pub fn train_count(&self) -> usize {
+        self.train_y.len()
+    }
+
+    /// Copy a batch by indices: (x row-major, one-hot y).
+    pub fn batch(&self, idx: &[usize]) -> (Vec<f32>, Vec<f32>) {
+        let mut x = Vec::with_capacity(idx.len() * self.dim);
+        let mut y = vec![0.0f32; idx.len() * self.classes];
+        for (bi, &i) in idx.iter().enumerate() {
+            x.extend_from_slice(&self.train_x[i * self.dim..(i + 1) * self.dim]);
+            y[bi * self.classes + self.train_y[i] as usize] = 1.0;
+        }
+        (x, y)
+    }
+
+    /// Test batch by range.
+    pub fn test_batch(&self, lo: usize, count: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut x = Vec::with_capacity(count * self.dim);
+        let mut y = vec![0.0f32; count * self.classes];
+        for bi in 0..count {
+            let i = (lo + bi) % self.test_y.len();
+            x.extend_from_slice(&self.test_x[i * self.dim..(i + 1) * self.dim]);
+            y[bi * self.classes + self.test_y[i] as usize] = 1.0;
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_labels() {
+        let d = CifarLike::generate(64, 16, 1.0, 0);
+        assert_eq!(d.train_x.len(), 64 * DIM);
+        assert_eq!(d.test_x.len(), 16 * DIM);
+        assert!(d.train_y.iter().all(|&y| (y as usize) < CLASSES));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = CifarLike::generate(8, 2, 1.0, 7);
+        let b = CifarLike::generate(8, 2, 1.0, 7);
+        assert_eq!(a.train_x, b.train_x);
+        assert_eq!(a.train_y, b.train_y);
+    }
+
+    #[test]
+    fn batch_is_onehot() {
+        let d = CifarLike::generate(10, 2, 1.0, 1);
+        let (x, y) = d.batch(&[0, 3, 5]);
+        assert_eq!(x.len(), 3 * DIM);
+        assert_eq!(y.len(), 3 * CLASSES);
+        for r in 0..3 {
+            let row = &y[r * CLASSES..(r + 1) * CLASSES];
+            assert_eq!(row.iter().filter(|&&v| v == 1.0).count(), 1);
+            assert_eq!(row.iter().filter(|&&v| v == 0.0).count(), CLASSES - 1);
+        }
+    }
+
+    #[test]
+    fn classes_are_separable_in_mean() {
+        // nearest-class-mean classification on the train set should beat
+        // chance by a wide margin
+        let d = CifarLike::generate(200, 50, 1.5, 3);
+        // estimate class means from train data
+        let mut means = vec![vec![0.0f64; DIM]; CLASSES];
+        let mut counts = vec![0usize; CLASSES];
+        for i in 0..d.train_count() {
+            let c = d.train_y[i] as usize;
+            counts[c] += 1;
+            for j in 0..DIM {
+                means[c][j] += d.train_x[i * DIM + j] as f64;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c.max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..50 {
+            let x = &d.test_x[i * DIM..(i + 1) * DIM];
+            let best = (0..CLASSES)
+                .min_by(|&a, &b| {
+                    let da: f64 = x
+                        .iter()
+                        .zip(&means[a])
+                        .map(|(&xi, &mi)| (xi as f64 - mi).powi(2))
+                        .sum();
+                    let db: f64 = x
+                        .iter()
+                        .zip(&means[b])
+                        .map(|(&xi, &mi)| (xi as f64 - mi).powi(2))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == d.test_y[i] as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct > 25, "accuracy {correct}/50 should beat chance");
+    }
+}

@@ -1,0 +1,66 @@
+//! Data substrate: synthetic stand-ins for the paper's datasets plus a
+//! real LibSVM parser (DESIGN.md substitution table).
+//!
+//! - `cifar_like`: Gaussian class-conditional 32x32x3 images, 10 classes
+//!   (for the ResNet18/CIFAR-10 classification task).
+//! - `markov_text`: an order-1 Markov character corpus (for the
+//!   LSTM/Wikitext-2 language-modeling task).
+//! - `libsvm`: parser for the real LibSVM format + synthetic generators
+//!   matched to the Table-4 dataset geometries (a5a, mushrooms, w8a,
+//!   real-sim), including a sparse generator for the real-sim scale.
+//! - `shard`: index-order (heterogeneous) and shuffled (iid) sharding.
+
+pub mod cifar_like;
+pub mod libsvm;
+pub mod markov_text;
+
+pub use cifar_like::CifarLike;
+pub use libsvm::{synth_dataset, LibsvmDataset, DATASETS};
+pub use markov_text::MarkovText;
+
+/// Split `count` example indices into `n` contiguous shards (the paper's
+/// heterogeneous split: "the whole dataset is split according to its
+/// original indices into n folds").
+pub fn shard_contiguous(count: usize, n: usize) -> Vec<std::ops::Range<usize>> {
+    (0..n)
+        .map(|i| {
+            let lo = i * count / n;
+            let hi = (i + 1) * count / n;
+            lo..hi
+        })
+        .collect()
+}
+
+/// IID sharding: shuffle indices then split contiguously.
+pub fn shard_iid(count: usize, n: usize, seed: u64) -> Vec<Vec<usize>> {
+    let mut idx: Vec<usize> = (0..count).collect();
+    crate::util::Rng::new(seed).shuffle(&mut idx);
+    shard_contiguous(count, n)
+        .into_iter()
+        .map(|r| idx[r].to_vec())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_shards_tile() {
+        let shards = shard_contiguous(103, 4);
+        assert_eq!(shards.len(), 4);
+        assert_eq!(shards[0].start, 0);
+        assert_eq!(shards[3].end, 103);
+        for w in shards.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+    }
+
+    #[test]
+    fn iid_shards_partition() {
+        let shards = shard_iid(100, 3, 0);
+        let mut all: Vec<usize> = shards.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,59 @@
+//! Ablations over IntSGD design choices called out in DESIGN.md:
+//! scaling rule (moving-average vs Prop. 3 vs per-block), transport
+//! (ring all-reduce vs INA switch), and rounding mode — all on the
+//! classifier task.
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::metrics::Csv;
+use crate::util::stats::mean;
+
+use super::common::{run_task, setup, Task};
+
+pub const VARIANTS: &[&str] = &[
+    "intsgd_random8",   // Alg. 1 default (moving average, eps safeguard)
+    "intsgd_prop3_32",  // Prop. 3 scale (beta=0, eps=0) — needs 32-bit head-room
+    "intsgd_block8",    // Alg. 2 per-block scales
+    "intsgd_switch8",   // INA switch transport with saturating adders
+    "intsgd_determ8",   // deterministic rounding
+];
+
+pub fn run(cfg: &Config) -> Result<()> {
+    let s = setup(cfg, 160, 0.1);
+    let path = format!("{}/ablation_intsgd.csv", s.out_dir);
+    let mut csv = Csv::create(
+        &path,
+        &["variant", "seed", "test_loss", "test_acc", "mean_alpha", "max_int"],
+    )?;
+    println!("{:<20} {:>10} {:>10} {:>12} {:>10}", "variant", "loss", "acc", "alpha", "max_int");
+    for v in VARIANTS {
+        for &seed in &s.seeds {
+            eprintln!("[ablation] {v} / seed {seed}");
+            let out = run_task(Task::Classifier, v, &s, 0.9, 1e-8, seed, cfg)?;
+            let alphas: Vec<f64> = out
+                .result
+                .records
+                .iter()
+                .filter(|r| r.alpha > 0.0 && r.alpha.is_finite())
+                .map(|r| r.alpha)
+                .collect();
+            let max_int = out.result.records.iter().map(|r| r.max_abs_int).max().unwrap_or(0);
+            csv.row(&[
+                v.to_string(),
+                seed.to_string(),
+                format!("{:.4}", out.test.0),
+                format!("{:.4}", out.test.1),
+                format!("{:.4e}", mean(&alphas)),
+                max_int.to_string(),
+            ])?;
+            println!(
+                "{:<20} {:>10.4} {:>10.4} {:>12.3e} {:>10}",
+                v, out.test.0, out.test.1, mean(&alphas), max_int
+            );
+        }
+    }
+    csv.flush()?;
+    println!("wrote {path}");
+    Ok(())
+}

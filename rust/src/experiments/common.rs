@@ -1,0 +1,389 @@
+//! Shared experiment infrastructure: algorithm factory, task builders, and
+//! the generic "train task X with algorithm Y" runner used by every
+//! table/figure driver.
+//!
+//! Scale note: the paper ran 16 V100s for 90-300 epochs; this repo runs
+//! synthetic stand-ins on CPU (see DESIGN.md). Experiment defaults are
+//! sized for a single-core box; every knob (workers, rounds, seeds) is a
+//! config key, so `workers=16 rounds=600 seeds=3` reproduces the full
+//! protocol when given the hardware.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::compress::{
+    powersgd::BlockShape, DistributedCompressor, HeuristicIntSgd, IdentitySgd, IntSgd,
+    NatSgd, PowerSgd, Qsgd, SignSgd, TopK,
+};
+use crate::compress::intsgd::{Rounding, WireInt};
+use crate::config::Config;
+use crate::coordinator::{
+    BatchSpec, Coordinator, LrSchedule, PjrtEvaluator, PjrtWorker, TrainConfig,
+    TrainResult, WorkerPool,
+};
+use crate::data::{shard_iid, CifarLike, MarkovText};
+use crate::netsim::Network;
+use crate::runtime::{init_params, lit_f32, lit_i32, Runtime};
+use crate::scaling::{BlockRule, MovingAverageRule, Prop3Rule};
+
+/// The two deep-learning tasks of §5.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Classifier,
+    Lm,
+    Transformer,
+}
+
+impl Task {
+    pub fn model_name(self) -> &'static str {
+        match self {
+            Task::Classifier => "classifier",
+            Task::Lm => "lm",
+            Task::Transformer => "transformer",
+        }
+    }
+}
+
+/// Resolved experiment geometry from config.
+pub struct Setup {
+    pub artifact_dir: String,
+    pub workers: usize,
+    pub rounds: usize,
+    pub seeds: Vec<u64>,
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub eval_every: usize,
+    pub out_dir: String,
+}
+
+pub fn setup(cfg: &Config, default_rounds: usize, default_lr: f32) -> Setup {
+    let seed_count = cfg.usize_or("seeds", 1);
+    Setup {
+        artifact_dir: cfg.str_or("artifacts", "artifacts").to_string(),
+        workers: cfg.usize_or("workers", 8),
+        rounds: cfg.usize_or("rounds", default_rounds),
+        seeds: (0..seed_count as u64).collect(),
+        lr: cfg.f32_or("lr", default_lr),
+        momentum: cfg.f32_or("momentum", 0.9),
+        weight_decay: cfg.f32_or("weight_decay", 1e-4),
+        eval_every: cfg.usize_or("eval_every", 25),
+        out_dir: cfg.str_or("out_dir", "results").to_string(),
+    }
+}
+
+/// Parameter layout (shapes in flattening order) for a model.
+pub fn model_layout(rt: &Runtime, model: &str) -> Result<Vec<Vec<usize>>> {
+    let meta = rt
+        .meta(&format!("{model}_train_step"))
+        .ok_or_else(|| anyhow!("{model}: no train_step artifact"))?;
+    Ok(meta.params.iter().map(|p| p.shape.clone()).collect())
+}
+
+/// Build a compressor by its experiment id.
+pub fn make_compressor(
+    name: &str,
+    n: usize,
+    layout: &[Vec<usize>],
+    beta: f64,
+    eps: f64,
+    seed: u64,
+) -> Result<Box<dyn DistributedCompressor>> {
+    let numels: Vec<usize> = layout
+        .iter()
+        .map(|s| s.iter().product::<usize>().max(1))
+        .collect();
+    Ok(match name {
+        "sgd_ar" => Box::new(IdentitySgd::allreduce()),
+        "sgd_ag" => Box::new(IdentitySgd::allgather()),
+        "intsgd_random8" => Box::new(IntSgd::new(
+            Rounding::Stochastic,
+            WireInt::Int8,
+            Box::new(MovingAverageRule::new(beta, eps)),
+            n,
+            seed,
+        )),
+        "intsgd_random32" => Box::new(IntSgd::new(
+            Rounding::Stochastic,
+            WireInt::Int32,
+            Box::new(MovingAverageRule::new(beta, eps)),
+            n,
+            seed,
+        )),
+        "intsgd_determ8" => Box::new(IntSgd::new(
+            Rounding::Deterministic,
+            WireInt::Int8,
+            Box::new(MovingAverageRule::new(beta, eps)),
+            n,
+            seed,
+        )),
+        "intsgd_determ32" => Box::new(IntSgd::new(
+            Rounding::Deterministic,
+            WireInt::Int32,
+            Box::new(MovingAverageRule::new(beta, eps)),
+            n,
+            seed,
+        )),
+        "intsgd_prop3_32" => Box::new(IntSgd::new(
+            Rounding::Stochastic,
+            WireInt::Int32,
+            Box::new(Prop3Rule),
+            n,
+            seed,
+        )),
+        "intsgd_block8" => Box::new({
+            let mut c = IntSgd::new(
+                Rounding::Stochastic,
+                WireInt::Int8,
+                Box::new(BlockRule::new(beta, eps)),
+                n,
+                seed,
+            );
+            c.use_switch = false;
+            c
+        }),
+        "intsgd_switch8" => Box::new({
+            let mut c = IntSgd::new(
+                Rounding::Stochastic,
+                WireInt::Int8,
+                Box::new(MovingAverageRule::new(beta, eps)),
+                n,
+                seed,
+            );
+            c.use_switch = true;
+            c
+        }),
+        "heuristic8" => Box::new(HeuristicIntSgd::new(8)),
+        "heuristic32" => Box::new(HeuristicIntSgd::new(32)),
+        "qsgd" => Box::new(Qsgd::new(64, numels, n, seed)),
+        "natsgd" => Box::new(NatSgd::new(n, seed)),
+        "powersgd" => Box::new(PowerSgd::new(
+            2,
+            layout.iter().map(|s| BlockShape { dims: s.clone() }).collect(),
+            n,
+            seed,
+        )),
+        "powersgd_rank4" => Box::new(PowerSgd::new(
+            4,
+            layout.iter().map(|s| BlockShape { dims: s.clone() }).collect(),
+            n,
+            seed,
+        )),
+        "topk" => Box::new(TopK::new(0.01, n)),
+        "signsgd" => Box::new(SignSgd::new(n)),
+        other => return Err(anyhow!("unknown algorithm {other:?}")),
+    })
+}
+
+/// The display names used in the paper's tables.
+pub fn paper_name(algo: &str) -> &'static str {
+    match algo {
+        "sgd_ag" => "SGD (All-gather)",
+        "sgd_ar" => "SGD (All-reduce)",
+        "qsgd" => "QSGD",
+        "natsgd" => "NatSGD",
+        "powersgd" | "powersgd_rank4" => "PowerSGD (EF)",
+        "intsgd_determ8" | "intsgd_determ32" => "IntSGD (Determ.)",
+        "intsgd_random8" | "intsgd_random32" => "IntSGD (Random)",
+        "heuristic8" => "Heuristic IntSGD (8-bit)",
+        "heuristic32" => "Heuristic IntSGD (32-bit)",
+        "topk" => "Top-k (EF)",
+        "signsgd" => "SignSGD (EF)",
+        _ => "?",
+    }
+}
+
+/// Output of one (task, algorithm, seed) run.
+pub struct RunOutput {
+    pub result: TrainResult,
+    /// Final test metric: (loss, accuracy) — accuracy 0 for LM tasks.
+    pub test: (f64, f64),
+}
+
+/// Train `task` with `algo` for one seed; the full L3-over-PJRT path.
+#[allow(clippy::too_many_arguments)]
+pub fn run_task(
+    task: Task,
+    algo: &str,
+    s: &Setup,
+    beta: f64,
+    eps: f64,
+    seed: u64,
+    cfg: &Config,
+) -> Result<RunOutput> {
+    let model = task.model_name();
+    let rt = Runtime::open(&s.artifact_dir)?;
+    let layout = model_layout(&rt, model)?;
+    let meta = rt.meta(&format!("{model}_train_step")).unwrap().clone();
+
+    // -- data ----------------------------------------------------------
+    let n = s.workers;
+    let factories: Vec<Box<dyn FnOnce() -> Box<dyn crate::coordinator::GradientSource> + Send>> =
+        match task {
+            Task::Classifier => {
+                let train = cfg.usize_or("train_examples", 4096);
+                let test = cfg.usize_or("test_examples", 1024);
+                let margin = cfg.f32_or("margin", 1.2);
+                let data = Arc::new(CifarLike::generate(train, test, margin, 1000 + seed));
+                let shards = shard_iid(data.train_count(), n, 2000 + seed);
+                let batch = meta.extra_usize("batch").unwrap_or(32);
+                let dir = s.artifact_dir.clone();
+                shards
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, indices)| {
+                        let data = Arc::clone(&data);
+                        let dir = dir.clone();
+                        let f: Box<dyn FnOnce() -> Box<dyn crate::coordinator::GradientSource> + Send> =
+                            Box::new(move || {
+                                Box::new(
+                                    PjrtWorker::new(
+                                        &dir,
+                                        "classifier",
+                                        BatchSpec::Classifier { data, indices, batch },
+                                        seed * 1000 + i as u64,
+                                    )
+                                    .expect("pjrt worker"),
+                                )
+                            });
+                        f
+                    })
+                    .collect()
+            }
+            Task::Lm | Task::Transformer => {
+                let vocab = meta.extra_usize("vocab").unwrap_or(64);
+                let corpus_len = cfg.usize_or("corpus_len", 200_000);
+                let text = Arc::new(MarkovText::generate(
+                    vocab,
+                    corpus_len,
+                    corpus_len / 10,
+                    0.08,
+                    3000 + seed,
+                ));
+                let batch = meta.extra_usize("batch").unwrap_or(16);
+                let seq = meta.extra_usize("seq").unwrap_or(30);
+                let dir = s.artifact_dir.clone();
+                let shard_len = text.train.len() / n;
+                (0..n)
+                    .map(|i| {
+                        let shard: Arc<Vec<u32>> = Arc::new(
+                            text.train[i * shard_len..(i + 1) * shard_len].to_vec(),
+                        );
+                        let dir = dir.clone();
+                        let model = model.to_string();
+                        let f: Box<dyn FnOnce() -> Box<dyn crate::coordinator::GradientSource> + Send> =
+                            Box::new(move || {
+                                Box::new(
+                                    PjrtWorker::new(
+                                        &dir,
+                                        &model,
+                                        BatchSpec::Lm { tokens: shard, batch, seq },
+                                        seed * 1000 + i as u64,
+                                    )
+                                    .expect("pjrt worker"),
+                                )
+                            });
+                        f
+                    })
+                    .collect()
+            }
+        };
+
+    // -- eval hook -------------------------------------------------------
+    let mut evaluator = PjrtEvaluator::new(&s.artifact_dir, model)?;
+    let mut eval_data_provider = make_eval_provider(task, &meta, cfg, seed)?;
+
+    // -- leader ----------------------------------------------------------
+    let specs = meta.params.clone();
+    let init: Vec<f32> = init_params(&specs, 42 + seed).concat();
+    let block_dims: Vec<usize> = layout
+        .iter()
+        .map(|s| s.iter().product::<usize>().max(1))
+        .collect();
+    let mut coord = Coordinator::new(init, block_dims, Network::paper_cluster());
+    let mut comp = make_compressor(algo, n, &layout, beta, eps, 77 + seed)?;
+    let mut pool = WorkerPool::spawn(factories);
+    let warmup = cfg.usize_or("warmup_rounds", s.rounds / 20);
+    let cfg_train = TrainConfig {
+        rounds: s.rounds,
+        schedule: LrSchedule {
+            base: s.lr,
+            warmup_rounds: warmup,
+            milestones: vec![
+                (s.rounds / 2, 0.1),
+                (s.rounds * 5 / 6, 0.1),
+            ],
+        },
+        momentum: s.momentum,
+        weight_decay: s.weight_decay,
+        eval_every: s.eval_every,
+    };
+    let mut eval_hook = |params: &[f32]| -> (f64, f64) {
+        let data = eval_data_provider();
+        match evaluator.eval(params, data) {
+            Ok(outs) => (
+                outs.first().copied().unwrap_or(f32::NAN) as f64,
+                outs.get(1).copied().unwrap_or(0.0) as f64,
+            ),
+            Err(e) => {
+                eprintln!("eval failed: {e}");
+                (f64::NAN, 0.0)
+            }
+        }
+    };
+    let result = coord.train(&mut pool, comp.as_mut(), &cfg_train, Some(&mut eval_hook));
+    pool.shutdown();
+
+    let test = result
+        .evals
+        .last()
+        .map(|&(_, l, a)| (l, a))
+        .unwrap_or((f64::NAN, 0.0));
+    Ok(RunOutput { result, test })
+}
+
+/// Builds a closure producing fresh eval-batch literals each call.
+fn make_eval_provider(
+    task: Task,
+    meta: &crate::runtime::ArtifactMeta,
+    cfg: &Config,
+    seed: u64,
+) -> Result<Box<dyn FnMut() -> Vec<xla::Literal>>> {
+    match task {
+        Task::Classifier => {
+            let test = cfg.usize_or("test_examples", 1024);
+            let train = cfg.usize_or("train_examples", 4096);
+            let margin = cfg.f32_or("margin", 1.2);
+            let data = CifarLike::generate(train, test, margin, 1000 + seed);
+            let eval_batch = 256;
+            let mut cursor = 0usize;
+            Ok(Box::new(move || {
+                let (x, y) = data.test_batch(cursor, eval_batch);
+                cursor = (cursor + eval_batch) % data.test_y.len().max(1);
+                vec![
+                    lit_f32(&x, &[eval_batch, data.dim]).unwrap(),
+                    lit_f32(&y, &[eval_batch, data.classes]).unwrap(),
+                ]
+            }))
+        }
+        Task::Lm | Task::Transformer => {
+            let vocab = meta.extra_usize("vocab").unwrap_or(64);
+            let corpus_len = cfg.usize_or("corpus_len", 200_000);
+            let text = MarkovText::generate(
+                vocab,
+                corpus_len,
+                corpus_len / 10,
+                0.08,
+                3000 + seed,
+            );
+            let batch = meta.extra_usize("batch").unwrap_or(16);
+            let seq = meta.extra_usize("seq").unwrap_or(30);
+            let mut rng = crate::util::Rng::new(9000 + seed);
+            Ok(Box::new(move || {
+                let w = MarkovText::batch_windows(&text.test, batch, seq, &mut rng);
+                vec![lit_i32(&w, &[batch, seq + 1]).unwrap()]
+            }))
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Figure 1: IntSGD (8/32-bit) vs Heuristic IntSGD (8/32-bit) vs
+//! full-precision SGD on the classification and LM tasks.
+//!
+//! Paper claim to reproduce: adaptive IntSGD matches full-precision SGD at
+//! both widths, while Heuristic IntSGD (notably the 8-bit wire) fails to
+//! match test performance.
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::metrics::Csv;
+
+use super::common::{run_task, setup, Task};
+
+pub const ALGOS: &[&str] =
+    &["sgd_ar", "intsgd_random8", "intsgd_random32", "heuristic8", "heuristic32"];
+
+pub fn run(cfg: &Config) -> Result<()> {
+    let s = setup(cfg, 240, 0.1);
+    let tasks: Vec<Task> = match cfg.str_or("task", "both") {
+        "classifier" => vec![Task::Classifier],
+        "lm" => vec![Task::Lm],
+        _ => vec![Task::Classifier, Task::Lm],
+    };
+    for task in tasks {
+        let lr = if task == Task::Lm { cfg.f32_or("lr", 1.25) } else { s.lr };
+        let s = super::common::Setup { lr, ..setup(cfg, 240, 0.1) };
+        let path = format!("{}/fig1_{}.csv", s.out_dir, task.model_name());
+        let mut csv = Csv::create(
+            &path,
+            &["algo", "seed", "round", "train_loss", "eval_loss", "eval_acc", "alpha"],
+        )?;
+        for algo in ALGOS {
+            for &seed in &s.seeds {
+                eprintln!("[fig1] {} / {algo} / seed {seed}", task.model_name());
+                let out = run_task(task, algo, &s, 0.9, 1e-8, seed, cfg)?;
+                let mut evals = out.result.evals.iter().peekable();
+                for r in &out.result.records {
+                    let (el, ea) = match evals.peek() {
+                        Some(&&(er, l, a)) if er == r.round => {
+                            evals.next();
+                            (l, a)
+                        }
+                        _ => (f64::NAN, f64::NAN),
+                    };
+                    csv.row(&[
+                        algo.to_string(),
+                        seed.to_string(),
+                        r.round.to_string(),
+                        format!("{:.6}", r.train_loss),
+                        format!("{el:.6}"),
+                        format!("{ea:.6}"),
+                        format!("{:.4e}", r.alpha),
+                    ])?;
+                }
+                eprintln!(
+                    "[fig1]   final test: loss {:.4} acc {:.4}",
+                    out.test.0, out.test.1
+                );
+            }
+        }
+        csv.flush()?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

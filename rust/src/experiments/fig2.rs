@@ -1,0 +1,40 @@
+//! Figure 2 (Appendix C.2): all-reduce time of FP32 vs Int8 messages as a
+//! function of message size, from the network cost model.
+//!
+//! Shape to reproduce: Int8 ~4x cheaper at large sizes; both flat (latency
+//! dominated) at small sizes.
+
+use anyhow::Result;
+
+use crate::compress::Primitive;
+use crate::config::Config;
+use crate::metrics::Csv;
+use crate::netsim::Network;
+
+pub fn run(cfg: &Config) -> Result<()> {
+    let out_dir = cfg.str_or("out_dir", "results");
+    let n = cfg.usize_or("workers", 16);
+    let net = Network::paper_cluster();
+    let path = format!("{out_dir}/fig2_comm_times.csv");
+    let mut csv = Csv::create(
+        &path,
+        &["num_coords", "fp32_ms", "int8_ms", "speedup"],
+    )?;
+    println!("{:>12} {:>12} {:>12} {:>9}", "coords", "fp32 (ms)", "int8 (ms)", "ratio");
+    for log2 in 12..=27 {
+        let d = 1usize << log2;
+        let t32 = net.primitive_seconds(Primitive::AllReduce, 4 * d, n);
+        let t8 = net.primitive_seconds(Primitive::AllReduce, d, n);
+        csv.rowf(&[d as f64, t32 * 1e3, t8 * 1e3, t32 / t8])?;
+        println!(
+            "{:>12} {:>12.4} {:>12.4} {:>9.2}",
+            d,
+            t32 * 1e3,
+            t8 * 1e3,
+            t32 / t8
+        );
+    }
+    csv.flush()?;
+    println!("wrote {path}");
+    Ok(())
+}

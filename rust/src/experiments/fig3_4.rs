@@ -1,0 +1,59 @@
+//! Figures 3 & 4 (Appendix C.3): full convergence curves for all
+//! algorithms on the classification (Fig. 3) and LM (Fig. 4) tasks.
+//!
+//! Shape to reproduce: IntSGD variants track SGD; PowerSGD (EF) converges
+//! visibly slower in the early epochs of the classifier (non-smooth
+//! activations); all-gather baselines match statistically but cost more
+//! time per round (captured in the time column).
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::metrics::Csv;
+
+use super::common::{run_task, setup, Task};
+use super::table2_3::ALGOS;
+
+pub fn run(fig: u32, cfg: &Config) -> Result<()> {
+    let task = if fig == 3 { Task::Classifier } else { Task::Lm };
+    let default_lr = if fig == 3 { 0.1 } else { 1.25 };
+    let s = setup(cfg, 240, default_lr);
+    let path = format!("{}/fig{fig}_{}_curves.csv", s.out_dir, task.model_name());
+    let mut csv = Csv::create(
+        &path,
+        &[
+            "algo", "seed", "round", "train_loss", "eval_loss", "eval_acc",
+            "cum_time_ms",
+        ],
+    )?;
+    for algo in ALGOS {
+        for &seed in &s.seeds {
+            eprintln!("[fig{fig}] {algo} / seed {seed}");
+            let out = run_task(task, algo, &s, 0.9, 1e-8, seed, cfg)?;
+            let mut cum = 0.0f64;
+            let mut evals = out.result.evals.iter().peekable();
+            for r in &out.result.records {
+                cum += r.compute_seconds + r.overhead_seconds + r.comm_seconds;
+                let (el, ea) = match evals.peek() {
+                    Some(&&(er, l, a)) if er == r.round => {
+                        evals.next();
+                        (l, a)
+                    }
+                    _ => (f64::NAN, f64::NAN),
+                };
+                csv.row(&[
+                    algo.to_string(),
+                    seed.to_string(),
+                    r.round.to_string(),
+                    format!("{:.6}", r.train_loss),
+                    format!("{el:.6}"),
+                    format!("{ea:.6}"),
+                    format!("{:.3}", cum * 1e3),
+                ])?;
+            }
+        }
+    }
+    csv.flush()?;
+    println!("wrote {path}");
+    Ok(())
+}

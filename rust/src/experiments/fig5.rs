@@ -1,0 +1,49 @@
+//! Figure 5 (Appendix C.4): sensitivity of IntSGD to the moving-average
+//! factor beta and the safeguard epsilon.
+//!
+//! Shape to reproduce: performance is flat across beta in {0, .3, .6, .9}
+//! and eps in {1e-4, 1e-6, 1e-8}; beta=0.9, eps=1e-8 is a good default.
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::metrics::Csv;
+
+use super::common::{run_task, setup, Task};
+
+pub fn run(cfg: &Config) -> Result<()> {
+    let betas = [0.0, 0.3, 0.6, 0.9];
+    let epss = [1e-4, 1e-6, 1e-8];
+    let tasks: Vec<Task> = match cfg.str_or("task", "classifier") {
+        "lm" => vec![Task::Lm],
+        "both" => vec![Task::Classifier, Task::Lm],
+        _ => vec![Task::Classifier],
+    };
+    for task in tasks {
+        let default_lr = if task == Task::Lm { 1.25 } else { 0.1 };
+        let s = setup(cfg, 160, default_lr);
+        let path = format!("{}/fig5_{}.csv", s.out_dir, task.model_name());
+        let mut csv = Csv::create(
+            &path,
+            &["beta", "eps", "seed", "test_loss", "test_acc"],
+        )?;
+        println!("beta\\eps sensitivity ({}):", task.model_name());
+        for &beta in &betas {
+            for &eps in &epss {
+                for &seed in &s.seeds {
+                    eprintln!("[fig5] beta={beta} eps={eps:.0e} seed={seed}");
+                    let out =
+                        run_task(task, "intsgd_random8", &s, beta, eps, seed, cfg)?;
+                    csv.rowf(&[beta, eps, seed as f64, out.test.0, out.test.1])?;
+                    println!(
+                        "  beta={beta:.1} eps={eps:.0e}: loss {:.4} acc {:.4}",
+                        out.test.0, out.test.1
+                    );
+                }
+            }
+        }
+        csv.flush()?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! Experiment drivers: one module per paper table/figure (DESIGN.md §4).
+
+pub mod ablation;
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3_4;
+pub mod fig5;
+pub mod fig6;
+pub mod registry;
+pub mod table2_3;
+pub mod train_cmd;
+
+pub use registry::{list, run};

@@ -1,0 +1,49 @@
+//! Experiment registry: maps experiment ids to drivers (DESIGN.md §4).
+//! Each driver writes `results/<id>_*.csv` and prints a paper-style
+//! summary. All knobs are `key=value` config entries.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+
+pub fn list() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("fig1", "IntSGD vs Heuristic IntSGD vs SGD convergence (classifier + LM)"),
+        ("fig2", "FP32 vs Int8 all-reduce time vs message size (cost model)"),
+        ("fig3", "convergence curves, all algorithms, classifier task"),
+        ("fig4", "convergence curves, all algorithms, LM task"),
+        ("fig5", "IntSGD sensitivity to beta and epsilon"),
+        ("fig6", "logistic regression: IntGD vs IntDIANA vs VR-IntDIANA"),
+        ("table2", "test accuracy + time breakdown, classifier task"),
+        ("table3", "test loss + time breakdown, LM task"),
+        ("ablation", "IntSGD design ablations (scaling rule, switch, block)"),
+        ("all", "run every experiment with current config"),
+    ]
+}
+
+pub fn run(id: &str, cfg: &Config) -> Result<()> {
+    match id {
+        "fig1" => super::fig1::run(cfg),
+        "fig2" => super::fig2::run(cfg),
+        "fig3" => super::fig3_4::run(3, cfg),
+        "fig4" => super::fig3_4::run(4, cfg),
+        "fig5" => super::fig5::run(cfg),
+        "fig6" => super::fig6::run(cfg),
+        "table2" => super::table2_3::run(2, cfg),
+        "table3" => super::table2_3::run(3, cfg),
+        "ablation" => super::ablation::run(cfg),
+        "all" => {
+            for (eid, _) in list() {
+                if eid == "all" {
+                    continue;
+                }
+                println!("=== {eid} ===");
+                run(eid, cfg)?;
+            }
+            Ok(())
+        }
+        other => Err(anyhow!(
+            "unknown experiment {other:?}; `repro list` shows the index"
+        )),
+    }
+}

@@ -1,0 +1,76 @@
+//! `repro train` — the generic launcher: train any model with any
+//! algorithm, with checkpointing. This is the "framework" entrypoint
+//! (experiment drivers are canned protocols on top of the same API).
+//!
+//!   repro train model=classifier algo=intsgd_random8 rounds=200 \
+//!        workers=8 lr=0.1 save=ckpt/cls.intsgd resume=ckpt/cls.intsgd
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+use crate::metrics::Csv;
+use crate::runtime::{Checkpoint, Runtime};
+
+use super::common::{run_task, setup, Task};
+
+pub fn run(cfg: &Config) -> Result<()> {
+    let model = cfg.str_or("model", "classifier");
+    let task = match model {
+        "classifier" => Task::Classifier,
+        "lm" => Task::Lm,
+        "transformer" => Task::Transformer,
+        other => return Err(anyhow!("unknown model {other:?}")),
+    };
+    let algo = cfg.str_or("algo", "intsgd_random8");
+    let default_lr = if task == Task::Classifier { 0.1 } else { 1.25 };
+    let s = setup(cfg, 200, default_lr);
+    let beta = cfg.f64_or("beta", 0.9);
+    let eps = cfg.f64_or("eps", 1e-8);
+    let seed = cfg.u64_or("seed", 0);
+
+    eprintln!("[train] {model} / {algo} / {} workers / {} rounds", s.workers, s.rounds);
+    let out = run_task(task, algo, &s, beta, eps, seed, cfg)?;
+
+    // training log
+    let log_path = format!("{}/train_{model}_{algo}.csv", s.out_dir);
+    let mut csv = Csv::create(
+        &log_path,
+        &["round", "train_loss", "lr", "alpha", "wire_bytes", "comm_ms"],
+    )?;
+    for r in &out.result.records {
+        csv.rowf(&[
+            r.round as f64,
+            r.train_loss,
+            r.lr as f64,
+            r.alpha,
+            r.wire_bytes_per_worker as f64,
+            r.comm_seconds * 1e3,
+        ])?;
+    }
+    csv.flush()?;
+    println!("final train loss {:.4}; test (loss, acc) = ({:.4}, {:.4})",
+        out.result.records.last().map(|r| r.train_loss).unwrap_or(f64::NAN),
+        out.test.0, out.test.1);
+    println!("wrote {log_path}");
+
+    // checkpoint
+    if let Some(path) = cfg.get("save") {
+        let rt = Runtime::open(&s.artifact_dir)?;
+        let meta = rt
+            .meta(&format!("{model}_train_step"))
+            .ok_or_else(|| anyhow!("missing artifact meta"))?;
+        let layout: Vec<(String, u64)> = meta
+            .params
+            .iter()
+            .map(|p| (p.name.clone(), p.numel() as u64))
+            .collect();
+        let ck = Checkpoint::new(
+            s.rounds as u64,
+            layout,
+            out.result.final_params.clone(),
+        )?;
+        ck.save(path)?;
+        println!("saved checkpoint {path} ({} params)", out.result.final_params.len());
+    }
+    Ok(())
+}

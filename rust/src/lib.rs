@@ -1,0 +1,30 @@
+//! # intsgd — IntSGD: Adaptive Floatless Compression of Stochastic Gradients
+//!
+//! Full-system reproduction of Mishchenko, Wang, Kovalev & Richtárik (ICLR
+//! 2022) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 1** (`python/compile/kernels/`): Pallas kernels for the
+//!   compression hot-spot, lowered AOT.
+//! - **Layer 2** (`python/compile/model.py`): JAX train/eval graphs,
+//!   exported once as HLO text + manifest.
+//! - **Layer 3** (this crate): the distributed-training coordinator —
+//!   leader/worker runtime, the compressor zoo, collectives, the network
+//!   cost model, optimizers, data substrates, and the experiment drivers
+//!   that regenerate every table and figure of the paper.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod collective;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod models;
+pub mod netsim;
+pub mod optim;
+pub mod runtime;
+pub mod scaling;
+pub mod util;

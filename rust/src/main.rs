@@ -1,0 +1,77 @@
+//! `repro` — the IntSGD reproduction launcher.
+
+use anyhow::Result;
+
+use intsgd::config::Config;
+
+const USAGE: &str = "\
+intsgd repro — IntSGD (ICLR 2022) full-system reproduction
+
+USAGE:
+  repro exp <id> [key=value ...] [--config file]   run an experiment
+  repro train [key=value ...] [--config file]      generic launcher
+        (model=classifier|lm|transformer algo=... rounds=... workers=...
+         lr=... save=path.ckpt)
+  repro list                                       list experiments
+  repro artifacts                                  show artifact manifest
+
+Experiments write results/<id>*.csv; see DESIGN.md §4 for the index.
+";
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("exp") => {
+            let id = args.get(1).map(|s| s.as_str()).unwrap_or("");
+            let mut cfg = Config::new();
+            let mut i = 2;
+            while i < args.len() {
+                if args[i] == "--config" {
+                    i += 1;
+                    cfg.merge(Config::load(&args[i])?);
+                } else {
+                    cfg.set_kv(&args[i])?;
+                }
+                i += 1;
+            }
+            intsgd::experiments::run(id, &cfg)
+        }
+        Some("train") => {
+            let mut cfg = Config::new();
+            let mut i = 1;
+            while i < args.len() {
+                if args[i] == "--config" {
+                    i += 1;
+                    cfg.merge(Config::load(&args[i])?);
+                } else {
+                    cfg.set_kv(&args[i])?;
+                }
+                i += 1;
+            }
+            intsgd::experiments::train_cmd::run(&cfg)
+        }
+        Some("list") => {
+            for (id, desc) in intsgd::experiments::list() {
+                println!("{id:12} {desc}");
+            }
+            Ok(())
+        }
+        Some("artifacts") => {
+            let rt = intsgd::runtime::Runtime::open_default()?;
+            for (name, meta) in &rt.manifest.artifacts {
+                println!(
+                    "{name}: kind={} inputs={} outputs={} grad_dim={}",
+                    meta.kind,
+                    meta.inputs.len(),
+                    meta.outputs,
+                    meta.grad_dim
+                );
+            }
+            Ok(())
+        }
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}

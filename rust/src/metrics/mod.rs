@@ -1,0 +1,91 @@
+//! Metrics: CSV writers for experiment outputs (results/*.csv) so every
+//! table/figure can be regenerated and re-plotted from plain files.
+
+use std::fs::{create_dir_all, File};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A simple CSV writer with a fixed header.
+pub struct Csv {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl Csv {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<Self> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
+        }
+        let f = File::create(path).with_context(|| format!("create {path:?}"))?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(Csv { w, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> Result<()> {
+        assert_eq!(values.len(), self.cols, "column count mismatch");
+        writeln!(self.w, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    pub fn rowf(&mut self, values: &[f64]) -> Result<()> {
+        let v: Vec<String> = values.iter().map(|x| format!("{x}")).collect();
+        self.row(&v)
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Format seconds as milliseconds with 2 decimals (the paper's unit).
+pub fn ms(seconds: f64) -> String {
+    format!("{:.2}", seconds * 1e3)
+}
+
+/// mean ± std formatter used in the table printers.
+pub fn pm(values: &[f64]) -> String {
+    format!(
+        "{:.2} ± {:.2}",
+        crate::util::stats::mean(values),
+        crate::util::stats::std_dev(values)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_csv() {
+        let dir = std::env::temp_dir().join("intsgd_test_metrics");
+        let path = dir.join("t.csv");
+        {
+            let mut c = Csv::create(&path, &["a", "b"]).unwrap();
+            c.rowf(&[1.0, 2.5]).unwrap();
+            c.row(&["x".into(), "y".into()]).unwrap();
+            c.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\nx,y\n");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn rejects_wrong_arity() {
+        let dir = std::env::temp_dir().join("intsgd_test_metrics2");
+        let mut c = Csv::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        let _ = c.row(&["only one".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(ms(0.06495), "64.95");
+        assert_eq!(pm(&[1.0, 2.0, 3.0]), "2.00 ± 1.00");
+    }
+}

@@ -1,0 +1,272 @@
+//! l2-regularized logistic regression over CSR sparse data.
+//!
+//!   f(x) = (1/m) sum_l log(1 + exp(-b_l a_l^T x)) + (lambda/2) ||x||^2
+//!
+//! Matches `python/compile/model.py::logreg_loss/grad` (labels in {-1,+1});
+//! the sparse representation also covers the real-sim-scale dataset that a
+//! dense [m, d] operand could not.
+
+/// CSR sparse matrix of examples (rows) x features (cols).
+#[derive(Clone, Debug)]
+pub struct SparseMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl SparseMatrix {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        SparseMatrix { rows, cols, indptr: vec![0], indices: vec![], values: vec![] }
+    }
+
+    /// Append a row given (col, value) pairs (cols need not be sorted).
+    pub fn push_row(&mut self, entries: &[(u32, f32)]) {
+        for &(c, v) in entries {
+            assert!((c as usize) < self.cols);
+            self.indices.push(c);
+            self.values.push(v);
+        }
+        self.indptr.push(self.indices.len());
+        self.rows += usize::from(self.indptr.len() - 1 > self.rows);
+        // keep rows consistent when constructed via new(0, cols)
+        self.rows = self.indptr.len() - 1;
+    }
+
+    pub fn from_dense(data: &[Vec<f32>], cols: usize) -> Self {
+        let mut m = SparseMatrix::new(0, cols);
+        for row in data {
+            assert_eq!(row.len(), cols);
+            let entries: Vec<(u32, f32)> = row
+                .iter()
+                .enumerate()
+                .filter(|&(_, &v)| v != 0.0)
+                .map(|(j, &v)| (j as u32, v))
+                .collect();
+            m.push_row(&entries);
+        }
+        m
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// row . x
+    #[inline]
+    pub fn row_dot(&self, r: usize, x: &[f32]) -> f64 {
+        let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+        let mut acc = 0.0f64;
+        for k in lo..hi {
+            acc += self.values[k] as f64 * x[self.indices[k] as usize] as f64;
+        }
+        acc
+    }
+
+    /// out += s * row
+    #[inline]
+    pub fn row_axpy(&self, r: usize, s: f64, out: &mut [f64]) {
+        let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+        for k in lo..hi {
+            out[self.indices[k] as usize] += s * self.values[k] as f64;
+        }
+    }
+}
+
+/// The model: data shard + labels + regularizer.
+#[derive(Clone, Debug)]
+pub struct LogReg {
+    pub a: SparseMatrix,
+    /// labels in {-1.0, +1.0}
+    pub b: Vec<f32>,
+    pub lambda: f64,
+}
+
+#[inline]
+fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[inline]
+fn log1pexp(z: f64) -> f64 {
+    // stable log(1 + exp(z))
+    if z > 30.0 {
+        z
+    } else if z < -30.0 {
+        z.exp()
+    } else {
+        z.exp().ln_1p()
+    }
+}
+
+impl LogReg {
+    pub fn dim(&self) -> usize {
+        self.a.cols
+    }
+
+    pub fn examples(&self) -> usize {
+        self.a.rows
+    }
+
+    /// Full loss over the shard.
+    pub fn loss(&self, x: &[f32]) -> f64 {
+        let m = self.examples();
+        let mut acc = 0.0;
+        for r in 0..m {
+            let margin = -(self.b[r] as f64) * self.a.row_dot(r, x);
+            acc += log1pexp(margin);
+        }
+        let reg: f64 =
+            x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() * 0.5 * self.lambda;
+        acc / m as f64 + reg
+    }
+
+    /// Gradient over a subset of rows (all rows when `rows` is None).
+    pub fn grad_rows(&self, x: &[f32], rows: Option<&[usize]>) -> Vec<f32> {
+        let mut acc = vec![0.0f64; self.dim()];
+        let iterate: Box<dyn Iterator<Item = usize>> = match rows {
+            Some(rs) => Box::new(rs.iter().copied()),
+            None => Box::new(0..self.examples()),
+        };
+        let mut count = 0usize;
+        for r in iterate {
+            let br = self.b[r] as f64;
+            let margin = -br * self.a.row_dot(r, x);
+            let coeff = -br * sigmoid(margin);
+            self.a.row_axpy(r, coeff, &mut acc);
+            count += 1;
+        }
+        let inv = 1.0 / count.max(1) as f64;
+        acc.iter()
+            .zip(x)
+            .map(|(&a, &xi)| (a * inv + self.lambda * xi as f64) as f32)
+            .collect()
+    }
+
+    pub fn grad(&self, x: &[f32]) -> Vec<f32> {
+        self.grad_rows(x, None)
+    }
+
+    /// Gradient of one example (for L-SVRG).
+    pub fn grad_one(&self, x: &[f32], row: usize, out: &mut [f64]) {
+        out.fill(0.0);
+        let br = self.b[row] as f64;
+        let margin = -br * self.a.row_dot(row, x);
+        let coeff = -br * sigmoid(margin);
+        self.a.row_axpy(row, coeff, out);
+        for (o, &xi) in out.iter_mut().zip(x) {
+            *o += self.lambda * xi as f64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn toy() -> LogReg {
+        // two separable points
+        let a = SparseMatrix::from_dense(
+            &[vec![1.0, 0.0], vec![-1.0, 0.5]],
+            2,
+        );
+        LogReg { a, b: vec![1.0, -1.0], lambda: 0.1 }
+    }
+
+    #[test]
+    fn loss_at_zero_is_log2() {
+        let m = toy();
+        assert!((m.loss(&[0.0, 0.0]) - (2.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let mut rng = Rng::new(0);
+        let d = 8;
+        let rows: Vec<Vec<f32>> = (0..20).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let b: Vec<f32> = (0..20)
+            .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+            .collect();
+        let m = LogReg { a: SparseMatrix::from_dense(&rows, d), b, lambda: 0.01 };
+        let x = rng.normal_vec(d, 0.5);
+        let g = m.grad(&x);
+        let eps = 1e-4;
+        for j in 0..d {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            xp[j] += eps;
+            xm[j] -= eps;
+            let fd = (m.loss(&xp) - m.loss(&xm)) / (2.0 * eps as f64);
+            assert!(
+                (g[j] as f64 - fd).abs() < 1e-3,
+                "coord {j}: {g:?} vs fd {fd}"
+            );
+        }
+    }
+
+    #[test]
+    fn minibatch_grads_average_to_full() {
+        let mut rng = Rng::new(1);
+        let d = 5;
+        let rows: Vec<Vec<f32>> = (0..12).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let b: Vec<f32> = (0..12)
+            .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+            .collect();
+        let m = LogReg { a: SparseMatrix::from_dense(&rows, d), b, lambda: 0.0 };
+        let x = rng.normal_vec(d, 1.0);
+        let full = m.grad(&x);
+        // average of single-row grads == full grad (lambda = 0)
+        let mut acc = vec![0.0f64; d];
+        let mut tmp = vec![0.0f64; d];
+        for r in 0..12 {
+            m.grad_one(&x, r, &mut tmp);
+            for (a, &t) in acc.iter_mut().zip(&tmp) {
+                *a += t;
+            }
+        }
+        for (a, &f) in acc.iter().zip(&full) {
+            assert!((a / 12.0 - f as f64).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gd_converges_and_gradient_vanishes() {
+        let mut rng = Rng::new(2);
+        let d = 10;
+        let rows: Vec<Vec<f32>> = (0..50).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let b: Vec<f32> = rows
+            .iter()
+            .map(|r| if r[0] + 0.3 * r[1] > 0.0 { 1.0 } else { -1.0 })
+            .collect();
+        let m = LogReg { a: SparseMatrix::from_dense(&rows, d), b, lambda: 1e-3 };
+        let mut x = vec![0.0f32; d];
+        for _ in 0..500 {
+            let g = m.grad(&x);
+            for (xi, &gi) in x.iter_mut().zip(&g) {
+                *xi -= 1.0 * gi;
+            }
+        }
+        let gnorm: f64 = m.grad(&x).iter().map(|&v| (v as f64).powi(2)).sum();
+        // f32 parameter storage floors the reachable gradient norm
+        assert!(gnorm < 1e-4, "grad norm sq {gnorm}");
+    }
+
+    #[test]
+    fn sparse_matches_dense_path() {
+        // rows with explicit zeros compress away but compute identically
+        let dense = vec![vec![0.0f32, 2.0, 0.0, -1.0], vec![1.0, 0.0, 0.0, 0.0]];
+        let m = SparseMatrix::from_dense(&dense, 4);
+        assert_eq!(m.nnz(), 3);
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        assert_eq!(m.row_dot(0, &x), 0.0); // 2*2 + (-1)*4
+
+        assert_eq!(m.row_dot(1, &x), 1.0);
+    }
+}

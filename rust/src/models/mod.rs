@@ -1,0 +1,9 @@
+//! Rust-native model oracles.
+//!
+//! `logreg` is the workhorse of the paper's Appendix C.5 experiments
+//! (Fig. 6) and doubles as the numeric cross-check for the PJRT logistic-
+//! regression artifacts (`rust/tests/pjrt_roundtrip.rs`).
+
+pub mod logreg;
+
+pub use logreg::{LogReg, SparseMatrix};

@@ -1,0 +1,199 @@
+//! Checkpointing: save/restore flattened parameters + optimizer round.
+//!
+//! Binary format (little-endian), no external deps:
+//!
+//!   magic "INTSGDCK" | version u32 | round u64 | param_count u64 |
+//!   for each param: name_len u32, name bytes, numel u64 |
+//!   payload: all params concatenated as f32 LE |
+//!   crc: FNV-1a over the payload, u64
+//!
+//! The manifest of names/shapes travels with the file so a checkpoint is
+//! rejected when loaded against a different model layout.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+const MAGIC: &[u8; 8] = b"INTSGDCK";
+const VERSION: u32 = 1;
+
+/// One checkpoint in memory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub round: u64,
+    /// (name, numel) per parameter, in flattening order.
+    pub layout: Vec<(String, u64)>,
+    pub flat: Vec<f32>,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl Checkpoint {
+    pub fn new(round: u64, layout: Vec<(String, u64)>, flat: Vec<f32>) -> Result<Self> {
+        let total: u64 = layout.iter().map(|(_, n)| n).sum();
+        if total as usize != flat.len() {
+            return Err(anyhow!(
+                "layout totals {total} but params have {}",
+                flat.len()
+            ));
+        }
+        Ok(Checkpoint { round, layout, flat })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut w =
+            std::io::BufWriter::new(std::fs::File::create(path).with_context(|| {
+                format!("create checkpoint {path:?}")
+            })?);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&self.round.to_le_bytes())?;
+        w.write_all(&(self.layout.len() as u64).to_le_bytes())?;
+        for (name, numel) in &self.layout {
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            w.write_all(&numel.to_le_bytes())?;
+        }
+        let mut payload = Vec::with_capacity(self.flat.len() * 4);
+        for &x in &self.flat {
+            payload.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&payload)?;
+        w.write_all(&fnv1a(&payload).to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(anyhow!("{path:?}: not an intsgd checkpoint"));
+        }
+        let mut b4 = [0u8; 4];
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b4)?;
+        let version = u32::from_le_bytes(b4);
+        if version != VERSION {
+            return Err(anyhow!("unsupported checkpoint version {version}"));
+        }
+        r.read_exact(&mut b8)?;
+        let round = u64::from_le_bytes(b8);
+        r.read_exact(&mut b8)?;
+        let count = u64::from_le_bytes(b8) as usize;
+        let mut layout = Vec::with_capacity(count);
+        let mut total = 0u64;
+        for _ in 0..count {
+            r.read_exact(&mut b4)?;
+            let len = u32::from_le_bytes(b4) as usize;
+            if len > 4096 {
+                return Err(anyhow!("corrupt checkpoint: name length {len}"));
+            }
+            let mut name = vec![0u8; len];
+            r.read_exact(&mut name)?;
+            r.read_exact(&mut b8)?;
+            let numel = u64::from_le_bytes(b8);
+            total += numel;
+            layout.push((String::from_utf8(name).context("param name")?, numel));
+        }
+        let mut payload = vec![0u8; (total * 4) as usize];
+        r.read_exact(&mut payload)?;
+        r.read_exact(&mut b8)?;
+        let crc = u64::from_le_bytes(b8);
+        if crc != fnv1a(&payload) {
+            return Err(anyhow!("checkpoint payload CRC mismatch"));
+        }
+        let flat: Vec<f32> = payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Checkpoint { round, layout, flat })
+    }
+
+    /// Verify compatibility against a manifest layout.
+    pub fn check_layout(&self, expected: &[(String, u64)]) -> Result<()> {
+        if self.layout != expected {
+            return Err(anyhow!(
+                "checkpoint layout mismatch: file has {} params, model wants {}",
+                self.layout.len(),
+                expected.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("intsgd_ck_{name}_{}", std::process::id()))
+    }
+
+    fn sample() -> Checkpoint {
+        Checkpoint::new(
+            42,
+            vec![("w".into(), 4), ("b".into(), 2)],
+            vec![1.0, -2.0, 3.5, 0.0, 9.0, -0.125],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = tmp("rt");
+        let ck = sample();
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_layout_mismatch_at_construction() {
+        assert!(Checkpoint::new(0, vec![("w".into(), 3)], vec![0.0; 2]).is_err());
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let p = tmp("corrupt");
+        sample().save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let n = bytes.len();
+        bytes[n - 12] ^= 0xFF; // flip a payload byte
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let p = tmp("magic");
+        std::fs::write(&p, b"NOTACKPTxxxxxxxxxxxxxxxx").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn check_layout_catches_model_mismatch() {
+        let ck = sample();
+        assert!(ck.check_layout(&[("w".into(), 4), ("b".into(), 2)]).is_ok());
+        assert!(ck.check_layout(&[("w".into(), 4)]).is_err());
+    }
+}

@@ -1,0 +1,221 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime, parsed with the in-tree JSON parser.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::Json;
+
+/// Dtype of one artifact input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl InputSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: usize,
+    pub param_count: usize,
+    pub params: Vec<ParamSpec>,
+    pub grad_dim: usize,
+    /// Raw manifest entry for model-specific fields (batch, seq, vocab...).
+    pub extra: Json,
+}
+
+impl ArtifactMeta {
+    pub fn extra_usize(&self, key: &str) -> Option<usize> {
+        self.extra.get(key).and_then(|v| v.as_usize())
+    }
+
+    pub fn extra_f64(&self, key: &str) -> Option<f64> {
+        self.extra.get(key).and_then(|v| v.as_f64())
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+fn parse_shape(v: &Json) -> Result<Vec<usize>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("shape not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let format = root
+            .get("format")
+            .and_then(|f| f.as_usize())
+            .ok_or_else(|| anyhow!("manifest missing format"))?;
+        if format != 1 {
+            return Err(anyhow!("unsupported manifest format {format}"));
+        }
+        let arts = root
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in arts {
+            let file = entry
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("{name}: missing file"))?
+                .to_string();
+            let inputs = entry
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+                .iter()
+                .map(|i| {
+                    let shape = parse_shape(
+                        i.get("shape").ok_or_else(|| anyhow!("{name}: input shape"))?,
+                    )?;
+                    let dtype = match i.get("dtype").and_then(|d| d.as_str()) {
+                        Some("f32") => Dtype::F32,
+                        Some("i32") => Dtype::I32,
+                        other => return Err(anyhow!("{name}: bad dtype {other:?}")),
+                    };
+                    Ok(InputSpec { shape, dtype })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let params = entry
+                .get("params")
+                .and_then(|p| p.as_arr())
+                .map(|arr| {
+                    arr.iter()
+                        .map(|p| {
+                            Ok(ParamSpec {
+                                name: p
+                                    .get("name")
+                                    .and_then(|n| n.as_str())
+                                    .ok_or_else(|| anyhow!("param name"))?
+                                    .to_string(),
+                                shape: parse_shape(
+                                    p.get("shape").ok_or_else(|| anyhow!("param shape"))?,
+                                )?,
+                                init: p
+                                    .get("init")
+                                    .and_then(|i| i.as_str())
+                                    .unwrap_or("glorot")
+                                    .to_string(),
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()
+                })
+                .transpose()?
+                .unwrap_or_default();
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file,
+                    kind: entry
+                        .get("kind")
+                        .and_then(|k| k.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    inputs,
+                    outputs: entry.get("outputs").and_then(|o| o.as_usize()).unwrap_or(1),
+                    param_count: entry
+                        .get("param_count")
+                        .and_then(|p| p.as_usize())
+                        .unwrap_or(0),
+                    params,
+                    grad_dim: entry.get("grad_dim").and_then(|g| g.as_usize()).unwrap_or(0),
+                    extra: entry.clone(),
+                },
+            );
+        }
+        Ok(Manifest { artifacts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "artifacts": {
+        "m_train_step": {
+          "file": "m.hlo.txt", "kind": "train_step", "outputs": 3,
+          "param_count": 2, "grad_dim": 8, "batch": 4,
+          "inputs": [
+            {"shape": [2, 3], "dtype": "f32"},
+            {"shape": [2], "dtype": "f32"},
+            {"shape": [4, 3], "dtype": "i32"}
+          ],
+          "params": [
+            {"name": "w", "shape": [2, 3], "init": "glorot"},
+            {"name": "b", "shape": [2], "init": "zeros"}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = &m.artifacts["m_train_step"];
+        assert_eq!(a.file, "m.hlo.txt");
+        assert_eq!(a.kind, "train_step");
+        assert_eq!(a.outputs, 3);
+        assert_eq!(a.param_count, 2);
+        assert_eq!(a.grad_dim, 8);
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[2].dtype, Dtype::I32);
+        assert_eq!(a.inputs[2].shape, vec![4, 3]);
+        assert_eq!(a.params[1].init, "zeros");
+        assert_eq!(a.extra_usize("batch"), Some(4));
+    }
+
+    #[test]
+    fn param_numel() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = &m.artifacts["m_train_step"];
+        let total: usize = a.params.iter().map(|p| p.numel()).sum();
+        assert_eq!(total, a.grad_dim);
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        assert!(Manifest::parse(r#"{"format": 2, "artifacts": {}}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

@@ -1,0 +1,220 @@
+//! PJRT runtime: load AOT artifacts (HLO text + manifest) and execute them
+//! from the rust hot path.
+//!
+//! `make artifacts` (python, build-time only) writes `artifacts/*.hlo.txt`
+//! and `artifacts/manifest.json`; this module parses the manifest with the
+//! in-tree JSON parser, compiles each HLO module once on a PJRT CPU
+//! client, and exposes typed execution. HLO *text* is the interchange
+//! format (xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id protos — see
+//! DESIGN.md §2).
+
+pub mod checkpoint;
+pub mod manifest;
+
+pub use checkpoint::Checkpoint;
+pub use manifest::{ArtifactMeta, Dtype, InputSpec, Manifest, ParamSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// A compiled artifact bound to a client.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.meta.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} output", self.meta.name))?;
+        // aot.py lowers with return_tuple=True: output is always a tuple
+        Ok(out.to_tuple()?)
+    }
+}
+
+/// One PJRT CPU client + the executables compiled on it. NOT `Send` (the
+/// client is Rc-backed): construct inside the thread that uses it.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (or the dir named by INTSGD_ARTIFACTS).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    /// Default artifact dir: $INTSGD_ARTIFACTS or ./artifacts.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("INTSGD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(dir)
+    }
+
+    /// Compile (once) and return the named artifact.
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .manifest
+                .artifacts
+                .get(name)
+                .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+                .clone();
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.cache.insert(name.to_string(), Executable { meta, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.artifacts.get(name)
+    }
+}
+
+/// Build an f32 literal of the given dims from a flat slice.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = dims.iter().product();
+    if numel != data.len() {
+        return Err(anyhow!("literal shape {dims:?} != data len {}", data.len()));
+    }
+    let l = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(l);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(l.reshape(&dims_i64)?)
+}
+
+/// Build an i32 literal.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = dims.iter().product();
+    if numel != data.len() {
+        return Err(anyhow!("literal shape {dims:?} != data len {}", data.len()));
+    }
+    let l = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(l);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(l.reshape(&dims_i64)?)
+}
+
+/// Fetch an f32 literal as a vec.
+pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+/// Fetch a scalar f32.
+pub fn scalar_f32(l: &xla::Literal) -> Result<f32> {
+    Ok(l.get_first_element::<f32>()?)
+}
+
+/// Glorot-uniform / zeros / ones initialization from the manifest's param
+/// specs (matches python/tests/test_model.py::init_params semantics).
+pub fn init_params(specs: &[ParamSpec], seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = crate::util::Rng::new(seed);
+    specs
+        .iter()
+        .map(|p| {
+            let numel: usize = p.shape.iter().product::<usize>().max(1);
+            match p.init.as_str() {
+                "zeros" => vec![0.0; numel],
+                "ones" => vec![1.0; numel],
+                s if s.starts_with("normal") => {
+                    let std: f32 = s["normal".len()..].parse().unwrap_or(0.02);
+                    rng.normal_vec(numel, std)
+                }
+                _ => {
+                    // glorot-uniform over the first two dims
+                    if p.shape.len() >= 2 {
+                        let fan_in = p.shape[0] as f32;
+                        let fan_out: f32 =
+                            p.shape[1..].iter().product::<usize>() as f32;
+                        let lim = (6.0 / (fan_in + fan_out)).sqrt();
+                        (0..numel)
+                            .map(|_| rng.range(-lim as f64, lim as f64) as f32)
+                            .collect()
+                    } else {
+                        vec![0.0; numel]
+                    }
+                }
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_params_respects_specs() {
+        let specs = vec![
+            ParamSpec { name: "w".into(), shape: vec![10, 20], init: "glorot".into() },
+            ParamSpec { name: "b".into(), shape: vec![20], init: "zeros".into() },
+            ParamSpec { name: "s".into(), shape: vec![5], init: "ones".into() },
+            ParamSpec { name: "e".into(), shape: vec![4, 4], init: "normal0.1".into() },
+        ];
+        let ps = init_params(&specs, 0);
+        assert_eq!(ps[0].len(), 200);
+        let lim = (6.0f32 / 30.0).sqrt();
+        assert!(ps[0].iter().all(|&x| x.abs() <= lim));
+        assert!(ps[0].iter().any(|&x| x != 0.0));
+        assert!(ps[1].iter().all(|&x| x == 0.0));
+        assert!(ps[2].iter().all(|&x| x == 1.0));
+        let std = crate::util::stats::std_dev(
+            &ps[3].iter().map(|&x| x as f64).collect::<Vec<_>>(),
+        );
+        assert!((std - 0.1).abs() < 0.05, "std {std}");
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let specs = vec![ParamSpec {
+            name: "w".into(),
+            shape: vec![3, 3],
+            init: "glorot".into(),
+        }];
+        assert_eq!(init_params(&specs, 42), init_params(&specs, 42));
+    }
+
+    #[test]
+    fn lit_helpers_validate_shape() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+        assert!(lit_i32(&[1, 2], &[2]).is_ok());
+    }
+}

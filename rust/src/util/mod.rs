@@ -1,0 +1,12 @@
+//! Shared infrastructure: PRNG, JSON, numerics, property-test harness.
+//!
+//! These modules exist because the offline vendor set carries no `rand`,
+//! `serde`/`serde_json`, or `proptest`; the repository is self-contained.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;

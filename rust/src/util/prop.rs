@@ -1,0 +1,81 @@
+//! Mini property-testing harness (the vendored crate set has no proptest).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check(123, 200, |rng| {
+//!     let d = 1 + rng.usize_below(5000);
+//!     let v = rng.normal_vec(d, 1.0);
+//!     // ... assert the invariant, returning Err(msg) on violation
+//!     Ok(())
+//! });
+//! ```
+//! On failure it reports the case index and the derived seed so the exact
+//! case can be replayed with `prop_replay`.
+
+use super::rng::Rng;
+
+/// Run `cases` random test cases; panic with a replayable seed on failure.
+pub fn prop_check<F>(seed: u64, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for i in 0..cases {
+        let case_seed = seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property failed on case {i}/{cases} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by its reported seed.
+pub fn prop_replay<F>(case_seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(case_seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("replayed property failure (seed {case_seed:#x}): {msg}");
+    }
+}
+
+/// Assert helper producing `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err(format!($($arg)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        prop_check(1, 50, |rng| {
+            let x = rng.uniform();
+            prop_assert!((0.0..1.0).contains(&x), "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        prop_check(2, 50, |rng| {
+            let x = rng.uniform();
+            prop_assert!(x < 0.5, "x={x}");
+            Ok(())
+        });
+    }
+}

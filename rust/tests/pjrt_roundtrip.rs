@@ -1,0 +1,245 @@
+//! Integration tests across the python/rust boundary: every AOT artifact
+//! is executed through PJRT and cross-checked against the rust mirrors.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use intsgd::compress::intsgd::{IntSgd, Rounding};
+use intsgd::data::{synth_dataset, DATASETS};
+use intsgd::models::{LogReg, SparseMatrix};
+use intsgd::runtime::{init_params, lit_f32, Runtime};
+use intsgd::util::stats::l2_norm;
+use intsgd::util::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn quantize_stoch_artifact_matches_rust_mirror() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let meta = rt.meta("quantize_stoch_classifier").unwrap().clone();
+    let d = meta.grad_dim;
+    let mut rng = Rng::new(0);
+    let g = rng.normal_vec(d, 1.0);
+    let u = rng.uniform_vec(d);
+    let alpha = 37.5f32;
+    let clip = 7.0f32;
+
+    let exe = rt.load("quantize_stoch_classifier").unwrap();
+    let outs = exe
+        .run(&[
+            lit_f32(&g, &[d]).unwrap(),
+            lit_f32(&u, &[d]).unwrap(),
+            lit_f32(&[alpha], &[1]).unwrap(),
+            lit_f32(&[clip], &[1]).unwrap(),
+        ])
+        .unwrap();
+    let kernel_out = outs[0].to_vec::<f32>().unwrap();
+
+    // rust mirror of the same math: clip(floor(alpha*g + u))
+    for j in 0..d {
+        let expect = ((g[j] * alpha + u[j]).floor()).clamp(-clip, clip);
+        assert_eq!(
+            kernel_out[j], expect,
+            "coord {j}: kernel {} vs rust {expect} (g={}, u={})",
+            kernel_out[j], g[j], u[j]
+        );
+    }
+}
+
+#[test]
+fn quantize_determ_artifact_matches_rust_encode() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let meta = rt.meta("quantize_determ_classifier").unwrap().clone();
+    let d = meta.grad_dim;
+    let mut rng = Rng::new(1);
+    let g = rng.normal_vec(d, 2.0);
+    let alpha = 12.25f64;
+    let clip = 127i64;
+
+    let exe = rt.load("quantize_determ_classifier").unwrap();
+    let outs = exe
+        .run(&[
+            lit_f32(&g, &[d]).unwrap(),
+            lit_f32(&[alpha as f32], &[1]).unwrap(),
+            lit_f32(&[clip as f32], &[1]).unwrap(),
+        ])
+        .unwrap();
+    let kernel_out = outs[0].to_vec::<f32>().unwrap();
+
+    let mut ints = Vec::new();
+    let mut dummy = Rng::new(0);
+    IntSgd::encode(Rounding::Deterministic, &g, alpha, clip, &mut dummy, &mut ints);
+    let mut mismatches = 0;
+    for j in 0..d {
+        if kernel_out[j] as i64 != ints[j] {
+            mismatches += 1;
+        }
+    }
+    // f32-vs-f64 scaling may flip exact .5 ties on a handful of coords
+    assert!(
+        mismatches * 100_000 < d,
+        "{mismatches}/{d} mismatches between kernel and rust mirror"
+    );
+}
+
+#[test]
+fn dequant_artifact_applies_update() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let meta = rt.meta("dequant_classifier_n16").unwrap().clone();
+    let d = meta.grad_dim;
+    let mut rng = Rng::new(2);
+    let x = rng.normal_vec(d, 1.0);
+    let s: Vec<f32> = (0..d).map(|_| (rng.below(255) as i64 - 127) as f32).collect();
+    let alpha = 3.0f32;
+    let lr = 0.05f32;
+
+    let exe = rt.load("dequant_classifier_n16").unwrap();
+    let outs = exe
+        .run(&[
+            lit_f32(&x, &[d]).unwrap(),
+            lit_f32(&s, &[d]).unwrap(),
+            lit_f32(&[alpha], &[1]).unwrap(),
+            lit_f32(&[lr], &[1]).unwrap(),
+        ])
+        .unwrap();
+    let got = outs[0].to_vec::<f32>().unwrap();
+    for j in (0..d).step_by(997) {
+        let expect = x[j] - lr * s[j] / (16.0 * alpha);
+        assert!(
+            (got[j] - expect).abs() < 1e-5 * expect.abs().max(1.0),
+            "coord {j}: {} vs {expect}",
+            got[j]
+        );
+    }
+}
+
+#[test]
+fn logreg_grad_artifact_matches_rust_model() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let spec = &DATASETS[0]; // a5a
+    let meta = rt.meta("logreg_grad_a5a").unwrap().clone();
+    let d = spec.dim;
+    let tau = meta.extra_usize("minibatch").unwrap();
+    let lam = spec.lambda2 as f32;
+
+    // dense random minibatch
+    let mut rng = Rng::new(3);
+    let rows: Vec<Vec<f32>> = (0..tau).map(|_| rng.normal_vec(d, 1.0)).collect();
+    let b: Vec<f32> = (0..tau)
+        .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+        .collect();
+    let x = rng.normal_vec(d, 0.3);
+
+    // PJRT
+    let a_flat: Vec<f32> = rows.concat();
+    let exe = rt.load("logreg_grad_a5a").unwrap();
+    let outs = exe
+        .run(&[
+            lit_f32(&x, &[d]).unwrap(),
+            lit_f32(&a_flat, &[tau, d]).unwrap(),
+            lit_f32(&b, &[tau]).unwrap(),
+            lit_f32(&[lam], &[1]).unwrap(),
+        ])
+        .unwrap();
+    let pjrt_grad = outs[0].to_vec::<f32>().unwrap();
+
+    // rust model on the same data
+    let model = LogReg {
+        a: SparseMatrix::from_dense(&rows, d),
+        b,
+        lambda: lam as f64,
+    };
+    let rust_grad = model.grad(&x);
+
+    let scale = l2_norm(&rust_grad).max(1e-9);
+    for j in 0..d {
+        assert!(
+            ((pjrt_grad[j] - rust_grad[j]) as f64).abs() < 1e-4 * scale,
+            "coord {j}: pjrt {} vs rust {}",
+            pjrt_grad[j],
+            rust_grad[j]
+        );
+    }
+}
+
+#[test]
+fn logreg_loss_artifact_matches_rust_model() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let spec = &DATASETS[1]; // mushrooms
+    let meta = rt.meta("logreg_loss_mushrooms").unwrap().clone();
+    let d = spec.dim;
+    let tau = meta
+        .extra
+        .get("inputs")
+        .and_then(|i| i.as_arr())
+        .and_then(|a| a[1].get("shape"))
+        .and_then(|s| s.as_arr())
+        .and_then(|s| s[0].as_usize())
+        .unwrap();
+    let mut rng = Rng::new(4);
+    let rows: Vec<Vec<f32>> = (0..tau).map(|_| rng.normal_vec(d, 1.0)).collect();
+    let b: Vec<f32> = (0..tau)
+        .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+        .collect();
+    let x = rng.normal_vec(d, 0.3);
+    let lam = spec.lambda2 as f32;
+
+    let exe = rt.load("logreg_loss_mushrooms").unwrap();
+    let outs = exe
+        .run(&[
+            lit_f32(&x, &[d]).unwrap(),
+            lit_f32(&rows.concat(), &[tau, d]).unwrap(),
+            lit_f32(&b, &[tau]).unwrap(),
+            lit_f32(&[lam], &[1]).unwrap(),
+        ])
+        .unwrap();
+    let pjrt_loss = outs[0].get_first_element::<f32>().unwrap() as f64;
+
+    let model = LogReg { a: SparseMatrix::from_dense(&rows, d), b, lambda: lam as f64 };
+    let rust_loss = model.loss(&x);
+    assert!(
+        (pjrt_loss - rust_loss).abs() < 1e-4 * rust_loss.max(1.0),
+        "pjrt {pjrt_loss} vs rust {rust_loss}"
+    );
+}
+
+#[test]
+fn synth_dataset_runs_through_pjrt_grad() {
+    // the synthetic a5a stand-in, densified, flows through the artifact
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let spec = &DATASETS[0];
+    let ds = synth_dataset(spec, 5);
+    let meta = rt.meta("logreg_grad_a5a").unwrap().clone();
+    let tau = meta.extra_usize("minibatch").unwrap();
+    let d = spec.dim;
+
+    // densify the first tau rows
+    let mut a_flat = vec![0.0f32; tau * d];
+    for r in 0..tau {
+        let (lo, hi) = (ds.a.indptr[r], ds.a.indptr[r + 1]);
+        for k in lo..hi {
+            a_flat[r * d + ds.a.indices[k] as usize] = ds.a.values[k];
+        }
+    }
+    let x = vec![0.01f32; d];
+    let exe = rt.load("logreg_grad_a5a").unwrap();
+    let outs = exe
+        .run(&[
+            lit_f32(&x, &[d]).unwrap(),
+            lit_f32(&a_flat, &[tau, d]).unwrap(),
+            lit_f32(&ds.b[..tau], &[tau]).unwrap(),
+            lit_f32(&[spec.lambda2 as f32], &[1]).unwrap(),
+        ])
+        .unwrap();
+    let g = outs[0].to_vec::<f32>().unwrap();
+    assert_eq!(g.len(), d);
+    assert!(g.iter().all(|v| v.is_finite()));
+    assert!(l2_norm(&g) > 0.0);
+}

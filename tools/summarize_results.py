@@ -1,0 +1,135 @@
+#!/usr/bin/env python3
+"""Summarize results/*.csv into the paper-style tables.
+
+Usage: python tools/summarize_results.py [results_dir]
+
+Reads the CSVs written by the experiment drivers (`repro exp ...`) and
+prints compact tables mirroring the paper's figures — handy after a
+long run, and usable as a plotting frontend (each block is a tidy
+dataframe-shaped CSV already).
+"""
+
+import csv
+import math
+import os
+import sys
+from collections import defaultdict
+
+
+def mean(xs):
+    return sum(xs) / len(xs) if xs else float("nan")
+
+
+def std(xs):
+    if len(xs) < 2:
+        return 0.0
+    m = mean(xs)
+    return math.sqrt(sum((x - m) ** 2 for x in xs) / (len(xs) - 1))
+
+
+def load(path):
+    with open(path) as f:
+        return list(csv.DictReader(f))
+
+
+def fnum(s):
+    try:
+        return float(s)
+    except (TypeError, ValueError):
+        return float("nan")
+
+
+def summarize_curves(path, metric="train_loss", probe=(5, 20, 60, -1)):
+    rows = load(path)
+    by = defaultdict(list)
+    for r in rows:
+        by[(r["algo"], r["seed"])].append(fnum(r[metric]))
+    algos = sorted({a for a, _ in by})
+    print(f"  {'algo':<18}" + "".join(f"{('r'+str(p)) if p>=0 else 'final':>12}" for p in probe))
+    for a in algos:
+        seeds = [v for (aa, _), v in by.items() if aa == a]
+        cols = []
+        for p in probe:
+            vals = [s[p] for s in seeds if len(s) > abs(p)]
+            cols.append(f"{mean(vals):>12.4f}")
+        print(f"  {a:<18}" + "".join(cols))
+
+
+def summarize_table(path, metric_cols):
+    rows = load(path)
+    by = defaultdict(lambda: defaultdict(list))
+    for r in rows:
+        for c in metric_cols:
+            by[r.get("paper_name", r["algo"])][c].append(fnum(r[c]))
+    width = max(len(a) for a in by) + 2
+    print(f"  {'algorithm':<{width}}" + "".join(f"{c:>16}" for c in metric_cols))
+    for a, cols in by.items():
+        cells = "".join(
+            f"{mean(v):>9.3f}±{std(v):<6.3f}" for v in (cols[c] for c in metric_cols)
+        )
+        print(f"  {a:<{width}}{cells}")
+
+
+def summarize_fig6(path):
+    rows = load(path)
+    final = {}
+    for r in rows:
+        key = (r["dataset"], r["algo"], r["seed"])
+        final[key] = r  # last row per key wins (rounds ascending)
+    agg = defaultdict(list)
+    for (ds, algo, _), r in final.items():
+        agg[(ds, algo)].append((fnum(r["objective_gap"]), fnum(r["max_abs_int"]), fnum(r["agg_bits"])))
+    print(f"  {'dataset':<12}{'algo':<14}{'gap':>12}{'max_int':>10}{'bits':>8}")
+    for (ds, algo), vals in sorted(agg.items()):
+        gaps = [v[0] for v in vals]
+        ints = [v[1] for v in vals]
+        bits = [v[2] for v in vals]
+        print(f"  {ds:<12}{algo:<14}{mean(gaps):>12.3e}{max(ints):>10.0f}{mean(bits):>8.1f}")
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results"
+    sections = [
+        ("Figure 1 (classifier)", "fig1_classifier.csv", lambda p: summarize_curves(p)),
+        ("Figure 1 (LM)", "fig1_lm.csv", lambda p: summarize_curves(p)),
+        ("Figure 2", "fig2_comm_times.csv", _fig2),
+        ("Table 2", "table2_classifier.csv", lambda p: summarize_table(p, ["test_acc", "overhead_ms", "comm_ms", "total_ms"])),
+        ("Table 3", "table3_lm.csv", lambda p: summarize_table(p, ["test_loss", "overhead_ms", "comm_ms", "total_ms"])),
+        ("Figure 3", "fig3_classifier_curves.csv", lambda p: summarize_curves(p)),
+        ("Figure 4", "fig4_lm_curves.csv", lambda p: summarize_curves(p)),
+        ("Figure 5", "fig5_classifier.csv", lambda p: summarize_table(p, ["test_loss", "test_acc"])),
+        ("Figure 6", "fig6_logreg.csv", summarize_fig6),
+        ("Ablation", "ablation_intsgd.csv", lambda p: summarize_table(p, ["test_loss", "test_acc", "max_int"])),
+        ("E2E transformer", "e2e_transformer.csv", _e2e),
+    ]
+    for title, fname, fn in sections:
+        path = os.path.join(d, fname)
+        print(f"== {title} ==")
+        if not os.path.exists(path):
+            print(f"  (missing {path}; run the driver)")
+            continue
+        try:
+            fn(path)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"  error summarizing: {e}")
+        print()
+
+
+def _fig2(path):
+    rows = load(path)
+    print(f"  {'coords':>12}{'fp32 ms':>10}{'int8 ms':>10}{'ratio':>8}")
+    for r in rows[:: max(1, len(rows) // 6)]:
+        print(
+            f"  {int(fnum(r['num_coords'])):>12}{fnum(r['fp32_ms']):>10.3f}"
+            f"{fnum(r['int8_ms']):>10.3f}{fnum(r['speedup']):>8.2f}"
+        )
+
+
+def _e2e(path):
+    rows = load(path)
+    losses = [fnum(r["train_loss"]) for r in rows]
+    print(f"  steps {len(rows)}: train loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()
