@@ -9,8 +9,8 @@ use anyhow::Result;
 use intsgd::compress::{
     intsgd::{IntSgd, Rounding, WireInt},
     powersgd::BlockShape,
-    DistributedCompressor, HeuristicIntSgd, IdentitySgd, NatSgd, PowerSgd, Qsgd,
-    SignSgd, TopK,
+    HeuristicIntSgd, IdentitySgd, NatSgd, PhasedCompressor, PowerSgd, Qsgd,
+    RoundEngine, SignSgd, TopK,
 };
 use intsgd::coordinator::{BlockInfo, RoundCtx};
 use intsgd::netsim::Network;
@@ -51,7 +51,7 @@ fn main() -> Result<()> {
     let shapes: Vec<BlockShape> =
         layout.iter().map(|s| BlockShape { dims: s.clone() }).collect();
 
-    let mut algos: Vec<(&str, Box<dyn DistributedCompressor>)> = vec![
+    let algos: Vec<(&str, Box<dyn PhasedCompressor>)> = vec![
         ("SGD fp32 (all-reduce)", Box::new(IdentitySgd::allreduce())),
         ("SGD fp32 (all-gather)", Box::new(IdentitySgd::allgather())),
         (
@@ -77,8 +77,9 @@ fn main() -> Result<()> {
         "{:<24} {:>12} {:>8} {:>12} {:>14} {:>12}",
         "algorithm", "bytes/worker", "vs fp32", "primitive", "comm model", "overhead"
     );
-    for (name, comp) in algos.iter_mut() {
-        let r = comp.round(&grads, &ctx);
+    for (name, comp) in algos {
+        let mut engine = RoundEngine::new(comp);
+        let r = engine.round_sequential(&grads, &ctx);
         let bytes = r.wire_bytes_per_worker();
         let comm = net.comm_seconds(&r.comm, n);
         let prim = format!("{:?}", r.comm[0].primitive);

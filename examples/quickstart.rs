@@ -73,7 +73,9 @@ fn main() -> Result<()> {
         let block_dims: Vec<usize> = meta.params.iter().map(|p| p.numel()).collect();
         let mut coord = Coordinator::new(init, block_dims, Network::paper_cluster());
 
-        let mut compressor: Box<dyn intsgd::compress::DistributedCompressor> =
+        // phased compressor behind the round engine: encode runs on the
+        // worker threads, reduce + decode on this (leader) thread
+        let compressor: Box<dyn intsgd::compress::PhasedCompressor> =
             match algo {
                 "sgd_fp32" => Box::new(IdentitySgd::allreduce()),
                 _ => Box::new(IntSgd::new(
@@ -84,6 +86,7 @@ fn main() -> Result<()> {
                     7,
                 )),
             };
+        let mut engine = intsgd::compress::RoundEngine::new(compressor);
 
         let cfg = TrainConfig {
             rounds,
@@ -92,7 +95,7 @@ fn main() -> Result<()> {
             weight_decay: 1e-4,
             eval_every: 0,
         };
-        let res = coord.train(&mut pool, compressor.as_mut(), &cfg, None);
+        let res = coord.train(&mut pool, &mut engine, &cfg, None);
         pool.shutdown();
 
         println!("\n=== {algo} ===");

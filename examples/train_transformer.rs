@@ -79,13 +79,13 @@ fn main() -> Result<()> {
     let init: Vec<f32> = init_params(&meta.params, 7).concat();
     let block_dims: Vec<usize> = meta.params.iter().map(|p| p.numel()).collect();
     let mut coord = Coordinator::new(init, block_dims, Network::paper_cluster());
-    let mut comp = IntSgd::new(
+    let mut engine = intsgd::compress::RoundEngine::new(Box::new(IntSgd::new(
         Rounding::Stochastic,
         WireInt::Int8,
         Box::new(MovingAverageRule::default_paper()),
         n,
         13,
-    );
+    )));
 
     let mut evaluator = PjrtEvaluator::new(&artifact_dir, "transformer")?;
     let test = Arc::clone(&text);
@@ -111,7 +111,7 @@ fn main() -> Result<()> {
         eval_every: (steps / 20).max(1),
     };
     let t0 = std::time::Instant::now();
-    let res = coord.train(&mut pool, &mut comp, &cfg, Some(&mut eval_hook));
+    let res = coord.train(&mut pool, &mut engine, &cfg, Some(&mut eval_hook));
     let wall = t0.elapsed().as_secs_f64();
     pool.shutdown();
 

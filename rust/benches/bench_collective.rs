@@ -19,6 +19,7 @@ fn main() {
     for &d in &[1usize << 16, 1 << 20] {
         let mut rng = Rng::new(0);
         let f32s: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let f32_views: Vec<&[f32]> = f32s.iter().map(|v| v.as_slice()).collect();
         let i64s: Vec<Vec<i64>> = (0..n)
             .map(|_| (0..d).map(|_| rng.below(255) as i64 - 127).collect())
             .collect();
@@ -26,7 +27,7 @@ fn main() {
 
         bench(&format!("ring_allreduce_f32 d=2^{}", d.trailing_zeros()), 5, || {
             let t = Instant::now();
-            std::hint::black_box(ring_allreduce_f32(&f32s));
+            std::hint::black_box(ring_allreduce_f32(&f32_views));
             t.elapsed().as_secs_f64()
         });
         let mut out = Vec::new();

@@ -1,39 +1,44 @@
 //! Compression hot-path microbenchmarks (the §Perf L3 instrument).
 //!
-//! Measures per-round encode+aggregate+decode wall time of every
+//! Part 1 measures per-round encode+reduce+decode wall time of every
 //! compressor at the classifier gradient size (d = 820,874), n = 16
 //! workers — the quantity behind the "Computation Overhead" column of
-//! Tables 2-3. Custom harness: criterion is not in the offline vendor set.
+//! Tables 2-3. Part 2 is the parallel-round engine measurement: IntSGD at
+//! d = 2^20, n = 4, sequential reference vs encode-on-worker-threads,
+//! reporting the wallclock speedup (the refactor's acceptance number).
+//! Custom harness: criterion is not in the offline vendor set.
 
 use std::time::Instant;
 
 use intsgd::compress::intsgd::{IntSgd, Rounding, WireInt};
 use intsgd::compress::powersgd::BlockShape;
 use intsgd::compress::{
-    DistributedCompressor, HeuristicIntSgd, IdentitySgd, NatSgd, PowerSgd, Qsgd,
-    SignSgd, TopK,
+    HeuristicIntSgd, IdentitySgd, NatSgd, PhasedCompressor, PowerSgd, Qsgd,
+    RoundEngine, SignSgd, TopK,
 };
-use intsgd::coordinator::{BlockInfo, RoundCtx};
+use intsgd::coordinator::{BlockInfo, RoundCtx, WorkerPool};
 use intsgd::scaling::MovingAverageRule;
 use intsgd::util::stats::median;
 use intsgd::util::Rng;
 
-fn bench<F: FnMut() -> f64>(name: &str, iters: usize, mut f: F) {
+fn bench<F: FnMut() -> f64>(name: &str, iters: usize, mut f: F) -> f64 {
     // warmup
     f();
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
         samples.push(f());
     }
+    let med = median(&samples);
     println!(
         "{name:<28} median {:>9.3} ms  min {:>9.3} ms  ({} iters)",
-        median(&samples) * 1e3,
+        med * 1e3,
         samples.iter().cloned().fold(f64::INFINITY, f64::min) * 1e3,
         iters
     );
+    med
 }
 
-fn main() {
+fn zoo_rounds() {
     // classifier layout: 3 weight matrices + 3 biases
     let layout: Vec<Vec<usize>> = vec![
         vec![3072, 256],
@@ -62,12 +67,12 @@ fn main() {
             })
             .collect(),
     };
-    println!("compression round: d = {d}, n = {n} (per-round wall time)\n");
+    println!("compression round: d = {d}, n = {n} (per-round wall time, sequential)\n");
 
     let mk_int = |r, w| {
         IntSgd::new(r, w, Box::new(MovingAverageRule::default_paper()), n, 1)
     };
-    let mut algos: Vec<(&str, Box<dyn DistributedCompressor>)> = vec![
+    let algos: Vec<(&str, Box<dyn PhasedCompressor>)> = vec![
         ("intsgd_random_int8", Box::new(mk_int(Rounding::Stochastic, WireInt::Int8))),
         ("intsgd_determ_int8", Box::new(mk_int(Rounding::Deterministic, WireInt::Int8))),
         ("intsgd_random_int32", Box::new(mk_int(Rounding::Stochastic, WireInt::Int32))),
@@ -87,12 +92,92 @@ fn main() {
         ("ef_signsgd", Box::new(SignSgd::new(n))),
         ("sgd_fp32_ring", Box::new(IdentitySgd::allreduce())),
     ];
-    for (name, comp) in algos.iter_mut() {
+    for (name, comp) in algos {
+        let mut engine = RoundEngine::new(comp);
         bench(name, 5, || {
             let t = Instant::now();
-            let r = comp.round(&grads, &ctx);
+            let r = engine.round_sequential(&grads, &ctx);
             std::hint::black_box(&r.gtilde);
             t.elapsed().as_secs_f64()
         });
     }
+}
+
+/// The refactor's acceptance measurement: one IntSGD round at d = 2^20
+/// with n = 4 workers, sequential (leader encodes all ranks) vs parallel
+/// (each rank encodes on its worker thread).
+fn parallel_vs_sequential() {
+    let d = 1 << 20;
+    let n = 4;
+    let mut rng = Rng::new(7);
+    let grads: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 0.05)).collect();
+    let ctx = RoundCtx {
+        round: 2,
+        n,
+        d,
+        lr: 0.1,
+        step_norm_sq: 1e-4,
+        blocks: vec![BlockInfo { dim: d, step_norm_sq: 1e-4 }],
+    };
+    let mk = || {
+        Box::new(IntSgd::new(
+            Rounding::Stochastic,
+            WireInt::Int8,
+            Box::new(MovingAverageRule::default_paper()),
+            n,
+            1,
+        )) as Box<dyn PhasedCompressor>
+    };
+    println!("\nparallel round engine: intsgd_random_int8, d = 2^20, n = {n}\n");
+
+    let mut seq = RoundEngine::new(mk());
+    let mut seq_encode_samples = Vec::new();
+    let seq_wall = bench("round sequential", 9, || {
+        let t = Instant::now();
+        let r = seq.round_sequential(&grads, &ctx);
+        std::hint::black_box(&r.gtilde);
+        seq_encode_samples.push(r.encode_seconds); // per-worker share: total / n
+        t.elapsed().as_secs_f64()
+    });
+
+    let mut par = RoundEngine::new(mk());
+    let mut pool = WorkerPool::for_encode(n);
+    let mut par_encode_samples = Vec::new();
+    let mut owned = grads.clone();
+    let par_wall = bench("round parallel (pool)", 9, || {
+        let t = Instant::now();
+        let r = par.round_parallel(&mut pool, &mut owned, &ctx);
+        std::hint::black_box(&r.gtilde);
+        par_encode_samples.push(r.encode_seconds); // straggler max across ranks
+        t.elapsed().as_secs_f64()
+    });
+    pool.shutdown();
+    // bench() runs one untimed warmup call whose encode sample also lands
+    // in the vec; drop it so the encode medians cover the same iterations
+    // as the wall-clock medians.
+    let seq_encode = median(&seq_encode_samples[1..]);
+    let par_encode = median(&par_encode_samples[1..]);
+
+    // the sequential path serializes n encodes on the leader: its encode
+    // wallclock is n * (per-worker share); the parallel path pays the
+    // straggler max once.
+    let seq_encode_wall = seq_encode * n as f64;
+    println!(
+        "\nencode wallclock: sequential {:.3} ms (n x per-worker share) vs \
+         parallel straggler {:.3} ms  => {:.2}x",
+        seq_encode_wall * 1e3,
+        par_encode * 1e3,
+        seq_encode_wall / par_encode.max(1e-12)
+    );
+    println!(
+        "round wallclock:  sequential {:.3} ms vs parallel {:.3} ms  => {:.2}x",
+        seq_wall * 1e3,
+        par_wall * 1e3,
+        seq_wall / par_wall.max(1e-12)
+    );
+}
+
+fn main() {
+    zoo_rounds();
+    parallel_vs_sequential();
 }

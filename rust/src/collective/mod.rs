@@ -34,17 +34,18 @@ pub fn allreduce_i64(msgs: &[&[i64]], out: &mut Vec<i64>) {
 /// Ring all-reduce over f32 vectors, implemented as the real algorithm:
 /// reduce-scatter over n-1 steps on n chunks, then all-gather. Returns the
 /// *sum* (callers divide by n). Equivalent to the naive sum up to f32
-/// addition-order differences; `tests` pin the tolerance.
-pub fn ring_allreduce_f32(workers: &[Vec<f32>]) -> Vec<f32> {
+/// addition-order differences; `tests` pin the tolerance. Takes slices so
+/// callers can reduce message views without copying into owned vectors.
+pub fn ring_allreduce_f32(workers: &[&[f32]]) -> Vec<f32> {
     let n = workers.len();
     assert!(n > 0);
     let d = workers[0].len();
     if n == 1 {
-        return workers[0].clone();
+        return workers[0].to_vec();
     }
     // chunk boundaries: chunk c covers [starts[c], starts[c+1])
     let starts: Vec<usize> = (0..=n).map(|c| c * d / n).collect();
-    let mut bufs: Vec<Vec<f32>> = workers.to_vec();
+    let mut bufs: Vec<Vec<f32>> = workers.iter().map(|w| w.to_vec()).collect();
 
     // reduce-scatter: at step s, worker i sends chunk (i - s) to worker i+1
     for s in 0..n - 1 {
@@ -102,7 +103,8 @@ mod tests {
             let d = 1 + rng.usize_below(300);
             let workers: Vec<Vec<f32>> =
                 (0..n).map(|_| rng.normal_vec(d, 1.0)).collect();
-            let ring = ring_allreduce_f32(&workers);
+            let views: Vec<&[f32]> = workers.iter().map(|w| w.as_slice()).collect();
+            let ring = ring_allreduce_f32(&views);
             for j in 0..d {
                 let naive: f64 =
                     workers.iter().map(|w| w[j] as f64).sum();
@@ -126,7 +128,8 @@ mod tests {
         let workers: Vec<Vec<f32>> = (0..n)
             .map(|_| (0..d).map(|_| (rng.below(255) as i64 - 127) as f32).collect())
             .collect();
-        let ring = ring_allreduce_f32(&workers);
+        let views: Vec<&[f32]> = workers.iter().map(|w| w.as_slice()).collect();
+        let ring = ring_allreduce_f32(&views);
         for j in 0..d {
             let naive: f32 = workers.iter().map(|w| w[j]).sum();
             assert_eq!(ring[j], naive);
@@ -135,15 +138,16 @@ mod tests {
 
     #[test]
     fn ring_single_worker_identity() {
-        let w = vec![vec![1.0f32, 2.0, 3.0]];
-        assert_eq!(ring_allreduce_f32(&w), w[0]);
+        let w = [1.0f32, 2.0, 3.0];
+        assert_eq!(ring_allreduce_f32(&[&w]), w.to_vec());
     }
 
     #[test]
     fn ring_d_smaller_than_n() {
         // degenerate chunking: d < n leaves empty chunks
         let workers: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32, 1.0]).collect();
-        let out = ring_allreduce_f32(&workers);
+        let views: Vec<&[f32]> = workers.iter().map(|w| w.as_slice()).collect();
+        let out = ring_allreduce_f32(&views);
         assert_eq!(out, vec![10.0, 5.0]);
     }
 }

@@ -1,0 +1,485 @@
+//! Phase-based compression engine: per-rank **encode**, leader-side
+//! **reduce**, leader-side **decode**.
+//!
+//! The monolithic `round(&[Vec<f32>])` entry point hid a real systems
+//! property: every rank's encode is independent and runs concurrently on a
+//! real cluster, while the reduction is the collective's job and the decode
+//! is cheap leader/edge work. This module makes that split explicit:
+//!
+//! - [`RankEncoder`] — one rank's `Send` encode state (its RNG stream,
+//!   error-feedback memory, PowerSGD scratch). `encode` is pure with
+//!   respect to the other ranks, so encoders can hop to worker threads.
+//! - [`PhasedCompressor`] — the leader half: it plans each pass
+//!   ([`PassPlan`], shared read-only with all ranks), folds the rank
+//!   messages ([`PhasedCompressor::reduce`], which may request further
+//!   passes — PowerSGD needs three), and decodes the final estimate.
+//! - [`RoundEngine`] — the driver. [`RoundEngine::round_parallel`] ships
+//!   each rank's encoder to its `WorkerPool` thread, so the measured
+//!   encode cost is the true straggler max and scales with cores;
+//!   [`RoundEngine::round_sequential`] runs the same phases inline on the
+//!   caller thread (the parity reference, also what the old
+//!   `DistributedCompressor::round` shape adapts to).
+//!
+//! Per-block scales (paper Alg. 2) thread through the plan: `RoundCtx.
+//! blocks` becomes [`BlockSpan`]s + per-block alphas inside
+//! `PassPlan::IntBlocks`, and the decode divides block-wise.
+//!
+//! Both drivers produce bit-identical results: encoders consume only their
+//! own state and the shared plan, and reduction folds messages in rank
+//! order (`tests/engine_parity.rs` pins this for the whole zoo).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::worker::{EncodeTask, WorkerPool};
+use crate::coordinator::RoundCtx;
+
+use super::intsgd::Rounding;
+use super::natsgd::NatMsg;
+use super::qsgd::QsgdBucket;
+use super::signsgd::SignMsg;
+use super::{DistributedCompressor, RoundResult};
+
+/// One contiguous parameter block of the flattened gradient.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockSpan {
+    pub offset: usize,
+    pub dim: usize,
+}
+
+impl BlockSpan {
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.offset..self.offset + self.dim
+    }
+}
+
+/// Block geometry for a round: the ctx blocks when given, otherwise one
+/// span covering the whole gradient.
+pub fn spans_from_ctx(ctx: &RoundCtx) -> Vec<BlockSpan> {
+    if ctx.blocks.is_empty() {
+        return vec![BlockSpan { offset: 0, dim: ctx.d }];
+    }
+    let mut out = Vec::with_capacity(ctx.blocks.len());
+    let mut offset = 0;
+    for b in &ctx.blocks {
+        out.push(BlockSpan { offset, dim: b.dim });
+        offset += b.dim;
+    }
+    assert_eq!(offset, ctx.d, "blocks must tile the gradient");
+    out
+}
+
+/// The immutable instruction the leader broadcasts for one encode pass.
+/// Shared read-only (`Arc`) with every rank's encoder.
+#[derive(Clone, Debug)]
+pub enum PassPlan {
+    /// Ship the raw fp32 gradient (identity SGD; IntSGD's exact round 0).
+    Dense,
+    /// Nothing shared is needed (EF-sign, top-k, natural compression).
+    Plain,
+    /// IntSGD: per-block integer rounding at the given alphas, clipped so
+    /// the aggregate provably fits the wire type.
+    IntBlocks {
+        rounding: Rounding,
+        blocks: Vec<BlockSpan>,
+        alphas: Vec<f64>,
+        clip: i64,
+    },
+    /// Heuristic IntSGD pass 1: report per-block max |g| for profiling.
+    Profile { blocks: Vec<BlockSpan> },
+    /// Heuristic IntSGD pass 2: per-block f64 scale-and-round (the
+    /// SwitchML rule has no clipping; the profiled alpha prevents
+    /// overflow by construction).
+    ScaledRound { blocks: Vec<BlockSpan>, alphas: Vec<f64> },
+    /// QSGD: stochastic level quantization per bucket.
+    Buckets { spans: Vec<BlockSpan>, levels: u16 },
+    /// PowerSGD pass 1: P_i = M_i Q per matrix block (+ raw vector
+    /// blocks). Factor sets are `Arc`-shared with the leader state — a
+    /// plan costs a pointer copy, not a per-round deep clone.
+    PowerP { qs: Arc<Vec<Vec<f32>>> },
+    /// PowerSGD pass 2: Q_i = M_i^T P_hat per matrix block.
+    PowerQ { ps: Arc<Vec<Vec<f32>>> },
+    /// PowerSGD pass 3: update EF memory from the decoded factors (every
+    /// rank holds P_hat and Q_hat after the all-reduces and reconstructs
+    /// the approximation locally).
+    PowerEf { ps: Arc<Vec<Vec<f32>>>, qs: Arc<Vec<Vec<f32>>> },
+}
+
+/// A rank's encoded payload for one pass.
+#[derive(Clone, Debug)]
+pub enum Message {
+    Empty,
+    Dense(Vec<f32>),
+    Ints(Vec<i64>),
+    Scalars(Vec<f32>),
+    Buckets(Vec<QsgdBucket>),
+    Sign(SignMsg),
+    Nat(NatMsg),
+    Sparse(Vec<(u32, f32)>),
+}
+
+impl Message {
+    /// Reusable dense slot (keeps capacity across rounds).
+    pub fn dense_mut(&mut self) -> &mut Vec<f32> {
+        if !matches!(self, Message::Dense(_)) {
+            *self = Message::Dense(Vec::new());
+        }
+        match self {
+            Message::Dense(v) => v,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn ints_mut(&mut self) -> &mut Vec<i64> {
+        if !matches!(self, Message::Ints(_)) {
+            *self = Message::Ints(Vec::new());
+        }
+        match self {
+            Message::Ints(v) => v,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn scalars_mut(&mut self) -> &mut Vec<f32> {
+        if !matches!(self, Message::Scalars(_)) {
+            *self = Message::Scalars(Vec::new());
+        }
+        match self {
+            Message::Scalars(v) => v,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn buckets_mut(&mut self) -> &mut Vec<QsgdBucket> {
+        if !matches!(self, Message::Buckets(_)) {
+            *self = Message::Buckets(Vec::new());
+        }
+        match self {
+            Message::Buckets(v) => v,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn sparse_mut(&mut self) -> &mut Vec<(u32, f32)> {
+        if !matches!(self, Message::Sparse(_)) {
+            *self = Message::Sparse(Vec::new());
+        }
+        match self {
+            Message::Sparse(v) => v,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn as_dense(&self) -> &[f32] {
+        match self {
+            Message::Dense(v) => v,
+            _ => panic!("expected dense message"),
+        }
+    }
+
+    pub fn as_ints(&self) -> &[i64] {
+        match self {
+            Message::Ints(v) => v,
+            _ => panic!("expected integer message"),
+        }
+    }
+
+    pub fn as_scalars(&self) -> &[f32] {
+        match self {
+            Message::Scalars(v) => v,
+            _ => panic!("expected scalar message"),
+        }
+    }
+
+    pub fn as_buckets(&self) -> &[QsgdBucket] {
+        match self {
+            Message::Buckets(v) => v,
+            _ => panic!("expected bucket message"),
+        }
+    }
+
+    pub fn as_sign(&self) -> &SignMsg {
+        match self {
+            Message::Sign(m) => m,
+            _ => panic!("expected sign message"),
+        }
+    }
+
+    pub fn as_nat(&self) -> &NatMsg {
+        match self {
+            Message::Nat(m) => m,
+            _ => panic!("expected natural-compression message"),
+        }
+    }
+
+    pub fn as_sparse(&self) -> &[(u32, f32)] {
+        match self {
+            Message::Sparse(v) => v,
+            _ => panic!("expected sparse message"),
+        }
+    }
+}
+
+/// One rank's encode state. `Send` so the engine can ship it to the rank's
+/// worker thread and back; all buffers are owned and reused across rounds.
+pub trait RankEncoder: Send {
+    /// Run one encode pass over this rank's gradient. The result stays
+    /// readable via [`RankEncoder::message`] until the next call.
+    fn encode(&mut self, grad: &[f32], plan: &PassPlan);
+
+    /// The payload produced by the last `encode` call.
+    fn message(&self) -> &Message;
+}
+
+/// What the leader does with a pass's messages.
+pub enum PassOutcome {
+    /// The round's aggregate is complete; `decode` may run.
+    Done,
+    /// Another encode pass is required (e.g. PowerSGD's Q and EF passes).
+    Next(PassPlan),
+}
+
+/// The leader half of a compression algorithm, split into phases so the
+/// per-rank encode can execute on worker threads.
+pub trait PhasedCompressor: Send {
+    fn name(&self) -> String;
+
+    /// Whether the messages can be reduced in-flight (paper Table 1).
+    fn supports_allreduce(&self) -> bool;
+
+    /// Build rank `rank`'s encoder (called lazily, once per rank).
+    fn make_encoder(&mut self, rank: usize) -> Box<dyn RankEncoder>;
+
+    /// Parked per-rank encoders; the engine checks them out per pass.
+    fn encoders(&mut self) -> &mut Vec<Box<dyn RankEncoder>>;
+
+    /// Plan the round's first encode pass.
+    fn begin(&mut self, ctx: &RoundCtx) -> PassPlan;
+
+    /// Fold the n rank messages of one pass (in rank order — this is what
+    /// makes the parallel and sequential drivers bit-identical), either
+    /// finishing the round or requesting another pass.
+    fn reduce(&mut self, msgs: &[&Message], plan: &PassPlan, ctx: &RoundCtx) -> PassOutcome;
+
+    /// Produce the round result from the reduced state. Timing fields are
+    /// filled in by the driver.
+    fn decode(&mut self, ctx: &RoundCtx) -> RoundResult;
+}
+
+fn ensure_encoders(comp: &mut dyn PhasedCompressor, n: usize) {
+    let have = comp.encoders().len();
+    if have == n {
+        return;
+    }
+    assert!(
+        have == 0,
+        "worker count changed mid-run: {have} encoders, {n} ranks"
+    );
+    for rank in 0..n {
+        let enc = comp.make_encoder(rank);
+        comp.encoders().push(enc);
+    }
+}
+
+/// Sum dense rank messages elementwise into `out` and divide by n — the
+/// shared fold for every "average the fp32 payloads" reduction (identity
+/// all-gather, IntSGD's exact round 0, PowerSGD's factor means). Folds in
+/// rank order, which the parity guarantee depends on.
+pub(crate) fn mean_dense_into(msgs: &[&Message], out: &mut Vec<f32>) {
+    let len = msgs[0].as_dense().len();
+    out.clear();
+    out.resize(len, 0.0);
+    for m in msgs {
+        let v = m.as_dense();
+        assert_eq!(v.len(), len, "rank messages disagree on length");
+        for (o, &x) in out.iter_mut().zip(v) {
+            *o += x;
+        }
+    }
+    let inv = 1.0 / msgs.len() as f32;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+/// g_tilde = sum / (n * alpha_l), block by block — the Alg. 2 decode,
+/// shared by IntSGD and Heuristic IntSGD so the two cannot drift.
+pub(crate) fn decode_block_ints(
+    sum: &[i64],
+    blocks: &[BlockSpan],
+    alphas: &[f64],
+    n: usize,
+) -> Vec<f32> {
+    let mut gtilde = Vec::with_capacity(sum.len());
+    for (span, &alpha) in blocks.iter().zip(alphas) {
+        let inv = 1.0 / (n as f64 * alpha);
+        gtilde.extend(sum[span.range()].iter().map(|&s| (s as f64 * inv) as f32));
+    }
+    gtilde
+}
+
+/// Drive one round with every phase on the caller thread — the sequential
+/// reference path. Encode cost is reported as the per-worker share
+/// (total / n), mirroring what the old monolithic `round` estimated.
+///
+/// Timing policy (both drivers): the reduce fold is charged as decode
+/// time only for all-gather algorithms, where it IS the per-worker edge
+/// decode; for all-reduce/INA algorithms the in-process fold stands in
+/// for the network data plane, whose cost is modeled by `netsim` —
+/// timing it here would double-count against the comm model.
+pub fn sequential_round(
+    comp: &mut dyn PhasedCompressor,
+    grads: &[Vec<f32>],
+    ctx: &RoundCtx,
+) -> RoundResult {
+    let n = grads.len();
+    assert!(n > 0, "at least one rank");
+    assert_eq!(n, ctx.n, "ctx.n must match the gradient count (decode scales by it)");
+    ensure_encoders(comp, n);
+    let edge_decode = !comp.supports_allreduce();
+    let mut plan = comp.begin(ctx);
+    let mut encode_total = 0.0f64;
+    let mut leader_seconds = 0.0f64;
+    loop {
+        let mut encs = std::mem::take(comp.encoders());
+        let t0 = Instant::now();
+        for (enc, grad) in encs.iter_mut().zip(grads) {
+            enc.encode(grad, &plan);
+        }
+        // Dense passes stage the raw fp32 buffer for the data plane — a
+        // real deployment hands the gradient pointer straight to the
+        // collective, so the staging copy is not compression overhead.
+        if !matches!(plan, PassPlan::Dense) {
+            encode_total += t0.elapsed().as_secs_f64();
+        }
+        let msgs: Vec<&Message> = encs.iter().map(|e| e.message()).collect();
+        let t1 = Instant::now();
+        let outcome = comp.reduce(&msgs, &plan, ctx);
+        if edge_decode {
+            leader_seconds += t1.elapsed().as_secs_f64();
+        }
+        drop(msgs);
+        *comp.encoders() = encs;
+        match outcome {
+            PassOutcome::Done => break,
+            PassOutcome::Next(next) => plan = next,
+        }
+    }
+    let t2 = Instant::now();
+    let mut result = comp.decode(ctx);
+    leader_seconds += t2.elapsed().as_secs_f64();
+    result.encode_seconds = encode_total / n as f64;
+    result.decode_seconds = leader_seconds;
+    result
+}
+
+/// Every phased compressor is also usable through the old call shape; the
+/// adapter runs the sequential driver, so existing call sites and the
+/// parity tests keep working unchanged.
+impl<T: PhasedCompressor> DistributedCompressor for T {
+    fn name(&self) -> String {
+        PhasedCompressor::name(self)
+    }
+
+    fn supports_allreduce(&self) -> bool {
+        PhasedCompressor::supports_allreduce(self)
+    }
+
+    fn round(&mut self, grads: &[Vec<f32>], ctx: &RoundCtx) -> RoundResult {
+        sequential_round(self, grads, ctx)
+    }
+}
+
+/// The round driver owning a phased compressor.
+pub struct RoundEngine {
+    comp: Box<dyn PhasedCompressor>,
+}
+
+impl RoundEngine {
+    pub fn new(comp: Box<dyn PhasedCompressor>) -> Self {
+        RoundEngine { comp }
+    }
+
+    pub fn name(&self) -> String {
+        self.comp.name()
+    }
+
+    pub fn supports_allreduce(&self) -> bool {
+        self.comp.supports_allreduce()
+    }
+
+    pub fn compressor_mut(&mut self) -> &mut dyn PhasedCompressor {
+        self.comp.as_mut()
+    }
+
+    /// One round with every phase inline on this thread.
+    pub fn round_sequential(&mut self, grads: &[Vec<f32>], ctx: &RoundCtx) -> RoundResult {
+        sequential_round(self.comp.as_mut(), grads, ctx)
+    }
+
+    /// One round with the encode phase executed inside the worker pool's
+    /// threads: rank i's encoder and gradient travel to worker i, encode
+    /// there, and come back with the pass's message. `encode_seconds` is
+    /// the straggler max over ranks, summed over passes — the quantity a
+    /// synchronous data-parallel round actually pays.
+    pub fn round_parallel(
+        &mut self,
+        pool: &mut WorkerPool,
+        grads: &mut [Vec<f32>],
+        ctx: &RoundCtx,
+    ) -> RoundResult {
+        let n = grads.len();
+        assert!(n > 0, "at least one rank");
+        assert_eq!(pool.workers(), n, "one worker thread per rank");
+        assert_eq!(n, ctx.n, "ctx.n must match the gradient count (decode scales by it)");
+        let comp = self.comp.as_mut();
+        ensure_encoders(comp, n);
+        let edge_decode = !comp.supports_allreduce();
+        let mut plan = comp.begin(ctx);
+        let mut encode_seconds = 0.0f64;
+        let mut leader_seconds = 0.0f64;
+        loop {
+            let shared = Arc::new(plan);
+            let mut encs = std::mem::take(comp.encoders());
+            let tasks: Vec<EncodeTask> = encs
+                .drain(..)
+                .zip(grads.iter_mut())
+                .enumerate()
+                .map(|(rank, (encoder, grad))| EncodeTask {
+                    rank,
+                    encoder,
+                    grad: std::mem::take(grad),
+                    plan: Arc::clone(&shared),
+                })
+                .collect();
+            let (done, straggler) = pool.encode_round(tasks);
+            // Dense staging is data-plane work, not compression overhead
+            // (see sequential_round) — keep the drivers' accounting equal.
+            if !matches!(&*shared, PassPlan::Dense) {
+                encode_seconds += straggler;
+            }
+            for (item, grad) in done.into_iter().zip(grads.iter_mut()) {
+                *grad = item.grad;
+                encs.push(item.encoder);
+            }
+            let msgs: Vec<&Message> = encs.iter().map(|e| e.message()).collect();
+            let t0 = Instant::now();
+            let outcome = comp.reduce(&msgs, &shared, ctx);
+            if edge_decode {
+                leader_seconds += t0.elapsed().as_secs_f64();
+            }
+            drop(msgs);
+            *comp.encoders() = encs;
+            match outcome {
+                PassOutcome::Done => break,
+                PassOutcome::Next(next) => plan = next,
+            }
+        }
+        let t1 = Instant::now();
+        let mut result = comp.decode(ctx);
+        leader_seconds += t1.elapsed().as_secs_f64();
+        result.encode_seconds = encode_seconds;
+        result.decode_seconds = leader_seconds;
+        result
+    }
+}

@@ -7,46 +7,51 @@
 //!
 //! The paper's Table 1 "Works without error-feedback" column is exactly
 //! about avoiding the extra O(d) state this module holds per worker.
+//!
+//! One `ErrorFeedback` is ONE rank's memory: it lives inside the rank's
+//! `RankEncoder` (`compress::engine`), is `Send`, and travels with the
+//! encoder to the rank's worker thread — exactly where a real deployment
+//! keeps it (device-local, never communicated).
 
-/// Per-worker residual memories.
-#[derive(Clone, Debug)]
+/// One rank's residual memory.
+#[derive(Clone, Debug, Default)]
 pub struct ErrorFeedback {
-    mem: Vec<Vec<f32>>,
+    mem: Vec<f32>,
 }
 
 impl ErrorFeedback {
-    pub fn new(n: usize) -> Self {
-        ErrorFeedback { mem: vec![Vec::new(); n] }
+    pub fn new() -> Self {
+        ErrorFeedback { mem: Vec::new() }
     }
 
-    pub fn workers(&self) -> usize {
-        self.mem.len()
-    }
-
-    /// a_i = g_i + e_i (allocates e_i lazily as zeros).
-    pub fn corrected(&mut self, rank: usize, grad: &[f32]) -> Vec<f32> {
-        let e = &mut self.mem[rank];
-        if e.len() != grad.len() {
-            e.clear();
-            e.resize(grad.len(), 0.0);
+    /// out = g + e, reusing `out`'s capacity (the memory is lazily sized
+    /// to the gradient's dimension on first use).
+    pub fn corrected_into(&mut self, grad: &[f32], out: &mut Vec<f32>) {
+        if self.mem.len() != grad.len() {
+            self.mem.clear();
+            self.mem.resize(grad.len(), 0.0);
         }
-        grad.iter().zip(e.iter()).map(|(&g, &m)| g + m).collect()
+        out.clear();
+        out.extend(grad.iter().zip(&self.mem).map(|(&g, &m)| g + m));
     }
 
-    /// e_i <- a_i - compressed(a_i).
-    pub fn store_residual(&mut self, rank: usize, a: &[f32], compressed: &[f32]) {
-        let e = &mut self.mem[rank];
-        e.clear();
-        e.extend(a.iter().zip(compressed).map(|(&x, &c)| x - c));
+    /// a = g + e as a fresh vector (convenience for tests and callers
+    /// without a reusable buffer).
+    pub fn corrected(&mut self, grad: &[f32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.corrected_into(grad, &mut out);
+        out
     }
 
-    /// Total residual mass (diagnostic).
+    /// e <- a - compressed(a).
+    pub fn store_residual(&mut self, a: &[f32], compressed: &[f32]) {
+        self.mem.clear();
+        self.mem.extend(a.iter().zip(compressed).map(|(&x, &c)| x - c));
+    }
+
+    /// Residual mass (diagnostic).
     pub fn residual_norm_sq(&self) -> f64 {
-        self.mem
-            .iter()
-            .flat_map(|e| e.iter())
-            .map(|&x| (x as f64) * (x as f64))
-            .sum()
+        self.mem.iter().map(|&x| (x as f64) * (x as f64)).sum()
     }
 }
 
@@ -58,33 +63,47 @@ mod tests {
     fn residual_identity_round_trips() {
         // e + g == a  and  a - c == e'  =>  over two rounds the memory
         // carries exactly what compression dropped.
-        let mut ef = ErrorFeedback::new(1);
+        let mut ef = ErrorFeedback::new();
         let g = vec![1.0f32, -0.5, 0.25];
-        let a = ef.corrected(0, &g);
+        let a = ef.corrected(&g);
         assert_eq!(a, g); // first round: zero memory
         let c = vec![1.0f32, 0.0, 0.0]; // a crude compressor
-        ef.store_residual(0, &a, &c);
+        ef.store_residual(&a, &c);
         let g2 = vec![0.0f32, 0.0, 0.0];
-        let a2 = ef.corrected(0, &g2);
+        let a2 = ef.corrected(&g2);
         assert_eq!(a2, vec![0.0, -0.5, 0.25]);
     }
 
     #[test]
-    fn memories_are_per_worker() {
-        let mut ef = ErrorFeedback::new(2);
+    fn memories_are_per_rank() {
+        // each rank owns an independent instance — state cannot leak
+        let mut ef0 = ErrorFeedback::new();
+        let mut ef1 = ErrorFeedback::new();
         let g = vec![1.0f32];
-        let a0 = ef.corrected(0, &g);
-        ef.store_residual(0, &a0, &[0.0]);
-        // worker 1 unaffected
-        assert_eq!(ef.corrected(1, &g), vec![1.0]);
-        assert_eq!(ef.corrected(0, &g), vec![2.0]);
+        let a0 = ef0.corrected(&g);
+        ef0.store_residual(&a0, &[0.0]);
+        // rank 1 unaffected
+        assert_eq!(ef1.corrected(&g), vec![1.0]);
+        assert_eq!(ef0.corrected(&g), vec![2.0]);
     }
 
     #[test]
     fn residual_norm_tracks_mass() {
-        let mut ef = ErrorFeedback::new(1);
+        let mut ef = ErrorFeedback::new();
         let a = vec![3.0f32, 4.0];
-        ef.store_residual(0, &a, &[0.0, 0.0]);
+        ef.store_residual(&a, &[0.0, 0.0]);
         assert!((ef.residual_norm_sq() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn corrected_into_reuses_buffer_and_resizes_memory() {
+        let mut ef = ErrorFeedback::new();
+        let mut buf = Vec::new();
+        ef.corrected_into(&[1.0, 2.0], &mut buf);
+        assert_eq!(buf, vec![1.0, 2.0]);
+        // dimension change resets the memory to zeros of the new size
+        ef.store_residual(&[1.0, 2.0], &[0.0, 0.0]);
+        ef.corrected_into(&[5.0, 5.0, 5.0], &mut buf);
+        assert_eq!(buf, vec![5.0, 5.0, 5.0]);
     }
 }

@@ -10,44 +10,95 @@
 //! no convergence guarantee: when a few large coordinates dominate, the
 //! effective resolution (2^nb-1)/2^max_exp crushes small gradients to
 //! zero — which is exactly the failure Fig. 1 shows for the 8-bit wire.
-
-use std::time::Instant;
+//!
+//! Phase split: pass 1 is the profiling collective (each rank reports its
+//! per-block max |g|, reduced by max — a handful of floats on the wire),
+//! pass 2 rounds at the profiled per-block alphas. Profiling per block
+//! follows the same Alg. 2 geometry the adaptive rule uses, so a single
+//! outlier layer no longer crushes every other layer's resolution.
 
 use crate::collective::allreduce_i64;
 use crate::coordinator::RoundCtx;
 use crate::util::stats::linf_norm;
 
-use super::{CommOp, DistributedCompressor, Primitive, RoundResult};
+use super::engine::{
+    decode_block_ints, spans_from_ctx, BlockSpan, Message, PassOutcome, PassPlan,
+    PhasedCompressor, RankEncoder,
+};
+use super::{CommOp, Primitive, RoundResult};
 
 pub struct HeuristicIntSgd {
     /// Wire bits per coordinate (8 or 32 in the paper).
     pub nb: u32,
-    ints: Vec<Vec<i64>>,
+    encoders: Vec<Box<dyn RankEncoder>>,
+    // -- leader round state ------------------------------------------------
     sum: Vec<i64>,
+    blocks: Vec<BlockSpan>,
+    alphas: Vec<f64>,
+    max_abs_int: i64,
+    d: usize,
 }
 
 impl HeuristicIntSgd {
     pub fn new(nb: u32) -> Self {
         assert!((2..=32).contains(&nb));
-        HeuristicIntSgd { nb, ints: Vec::new(), sum: Vec::new() }
+        HeuristicIntSgd {
+            nb,
+            encoders: Vec::new(),
+            sum: Vec::new(),
+            blocks: Vec::new(),
+            alphas: Vec::new(),
+            max_abs_int: 0,
+            d: 0,
+        }
     }
 
-    /// The SwitchML profiling step: alpha from the global max exponent.
-    pub fn profile_alpha(&self, grads: &[Vec<f32>]) -> f64 {
-        let n = grads.len() as f64;
-        let max_abs = grads
-            .iter()
-            .map(|g| linf_norm(g))
-            .fold(0.0f32, f32::max) as f64;
+    /// The SwitchML profiling rule: alpha from the global max exponent.
+    pub fn alpha_for_max(nb: u32, n: usize, max_abs: f64) -> f64 {
         if max_abs == 0.0 {
             return 1.0;
         }
         let max_exp = max_abs.log2().ceil();
-        ((1u64 << self.nb) - 1) as f64 / (n * max_exp.exp2())
+        ((1u64 << nb) - 1) as f64 / (n as f64 * max_exp.exp2())
     }
 }
 
-impl DistributedCompressor for HeuristicIntSgd {
+/// SwitchML ranks are stateless: profile, then round deterministically.
+struct HeuristicEncoder {
+    msg: Message,
+}
+
+impl RankEncoder for HeuristicEncoder {
+    fn encode(&mut self, grad: &[f32], plan: &PassPlan) {
+        match plan {
+            PassPlan::Profile { blocks } => {
+                let out = self.msg.scalars_mut();
+                out.clear();
+                out.extend(blocks.iter().map(|span| linf_norm(&grad[span.range()])));
+            }
+            PassPlan::ScaledRound { blocks, alphas } => {
+                let out = self.msg.ints_mut();
+                out.clear();
+                out.reserve(grad.len());
+                for (span, &alpha) in blocks.iter().zip(alphas) {
+                    // SwitchML rounds deterministically (round-to-nearest)
+                    out.extend(
+                        grad[span.range()]
+                            .iter()
+                            .map(|&x| (x as f64 * alpha).round() as i64),
+                    );
+                }
+            }
+            _ => panic!("HeuristicIntSgd encoder: unexpected plan"),
+        }
+    }
+
+    fn message(&self) -> &Message {
+        &self.msg
+    }
+}
+
+impl PhasedCompressor for HeuristicIntSgd {
     fn name(&self) -> String {
         format!("heuristic_intsgd_{}bit", self.nb)
     }
@@ -56,41 +107,66 @@ impl DistributedCompressor for HeuristicIntSgd {
         true
     }
 
-    fn round(&mut self, grads: &[Vec<f32>], _ctx: &RoundCtx) -> RoundResult {
-        let n = grads.len();
-        let d = grads[0].len();
-        let t0 = Instant::now();
-        let alpha = self.profile_alpha(grads);
-        if self.ints.len() != n {
-            self.ints = vec![Vec::new(); n];
+    fn make_encoder(&mut self, _rank: usize) -> Box<dyn RankEncoder> {
+        Box::new(HeuristicEncoder { msg: Message::Empty })
+    }
+
+    fn encoders(&mut self) -> &mut Vec<Box<dyn RankEncoder>> {
+        &mut self.encoders
+    }
+
+    fn begin(&mut self, ctx: &RoundCtx) -> PassPlan {
+        self.d = ctx.d;
+        self.blocks = spans_from_ctx(ctx);
+        PassPlan::Profile { blocks: self.blocks.clone() }
+    }
+
+    fn reduce(&mut self, msgs: &[&Message], plan: &PassPlan, _ctx: &RoundCtx) -> PassOutcome {
+        match plan {
+            PassPlan::Profile { .. } => {
+                let n = msgs.len();
+                self.alphas.clear();
+                for b in 0..self.blocks.len() {
+                    let max_abs = msgs
+                        .iter()
+                        .map(|m| m.as_scalars()[b])
+                        .fold(0.0f32, f32::max) as f64;
+                    self.alphas.push(Self::alpha_for_max(self.nb, n, max_abs));
+                }
+                PassOutcome::Next(PassPlan::ScaledRound {
+                    blocks: self.blocks.clone(),
+                    alphas: self.alphas.clone(),
+                })
+            }
+            PassPlan::ScaledRound { .. } => {
+                let views: Vec<&[i64]> = msgs.iter().map(|m| m.as_ints()).collect();
+                allreduce_i64(&views, &mut self.sum);
+                self.max_abs_int = self.sum.iter().map(|&x| x.abs()).max().unwrap_or(0);
+                PassOutcome::Done
+            }
+            _ => unreachable!("HeuristicIntSgd planned no such pass"),
         }
-        for (buf, g) in self.ints.iter_mut().zip(grads) {
-            buf.clear();
-            // SwitchML rounds deterministically (round-to-nearest).
-            buf.extend(g.iter().map(|&x| (x as f64 * alpha).round() as i64));
-        }
-        // per-worker overhead: the n encodes run in parallel in reality
-        let encode_seconds = t0.elapsed().as_secs_f64() / n as f64;
+    }
 
-        let views: Vec<&[i64]> = self.ints.iter().map(|v| v.as_slice()).collect();
-        allreduce_i64(&views, &mut self.sum);
-        let max_abs_int = self.sum.iter().map(|&x| x.abs()).max().unwrap_or(0);
-
-        let t1 = Instant::now();
-        let inv = 1.0 / (n as f64 * alpha);
-        let gtilde = self.sum.iter().map(|&s| (s as f64 * inv) as f32).collect();
-        let decode_seconds = t1.elapsed().as_secs_f64();
-
+    fn decode(&mut self, ctx: &RoundCtx) -> RoundResult {
+        let gtilde = decode_block_ints(&self.sum, &self.blocks, &self.alphas, ctx.n);
         RoundResult {
             gtilde,
-            comm: vec![CommOp {
-                primitive: Primitive::Switch,
-                bytes_per_worker: d * (self.nb as usize).div_ceil(8),
-            }],
-            encode_seconds,
-            decode_seconds,
-            max_abs_int,
-            alpha,
+            comm: vec![
+                CommOp {
+                    primitive: Primitive::Switch,
+                    bytes_per_worker: self.d * (self.nb as usize).div_ceil(8),
+                },
+                // the profiling collective: one fp32 max per block
+                CommOp {
+                    primitive: Primitive::AllReduce,
+                    bytes_per_worker: 4 * self.blocks.len(),
+                },
+            ],
+            encode_seconds: 0.0,
+            decode_seconds: 0.0,
+            max_abs_int: self.max_abs_int,
+            alpha: self.alphas.iter().copied().fold(f64::INFINITY, f64::min),
         }
     }
 }
@@ -98,6 +174,7 @@ impl DistributedCompressor for HeuristicIntSgd {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::DistributedCompressor;
     use crate::coordinator::RoundCtx;
     use crate::util::Rng;
 
@@ -148,5 +225,34 @@ mod tests {
         let mut c = HeuristicIntSgd::new(8);
         let r = c.round(&grads, &ctx(10, 3));
         assert!(r.gtilde.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn per_block_profiling_isolates_outlier_layers() {
+        // With the outlier in its own block, the other block keeps full
+        // resolution — the improvement over whole-tensor SwitchML.
+        use crate::coordinator::BlockInfo;
+        let mut g = vec![1e-3f32; 100];
+        g[0] = 1000.0;
+        let grads = vec![g; 4];
+        let cx = RoundCtx {
+            round: 1,
+            n: 4,
+            d: 100,
+            lr: 0.1,
+            step_norm_sq: 0.0,
+            blocks: vec![
+                BlockInfo { dim: 10, step_norm_sq: 0.0 },
+                BlockInfo { dim: 90, step_norm_sq: 0.0 },
+            ],
+        };
+        let mut c = HeuristicIntSgd::new(8);
+        let r = c.round(&grads, &cx);
+        // coords 10.. live in the outlier-free block and survive
+        for &x in &r.gtilde[10..] {
+            assert!(x > 0.0, "small gradient crushed despite block profiling");
+        }
+        // coords 1..10 share the outlier's block and are crushed
+        assert!(r.gtilde[1..10].iter().all(|&x| x == 0.0));
     }
 }

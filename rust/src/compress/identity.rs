@@ -5,23 +5,61 @@
 use crate::collective::ring_allreduce_f32;
 use crate::coordinator::RoundCtx;
 
-use super::{average, CommOp, DistributedCompressor, Primitive, RoundResult};
+use super::engine::{
+    mean_dense_into, Message, PassOutcome, PassPlan, PhasedCompressor, RankEncoder,
+};
+use super::{CommOp, Primitive, RoundResult};
 
 pub struct IdentitySgd {
     pub primitive: Primitive,
+    encoders: Vec<Box<dyn RankEncoder>>,
+    gtilde: Vec<f32>,
+    d: usize,
 }
 
 impl IdentitySgd {
     pub fn allreduce() -> Self {
-        IdentitySgd { primitive: Primitive::AllReduce }
+        IdentitySgd {
+            primitive: Primitive::AllReduce,
+            encoders: Vec::new(),
+            gtilde: Vec::new(),
+            d: 0,
+        }
     }
 
     pub fn allgather() -> Self {
-        IdentitySgd { primitive: Primitive::AllGather }
+        IdentitySgd {
+            primitive: Primitive::AllGather,
+            encoders: Vec::new(),
+            gtilde: Vec::new(),
+            d: 0,
+        }
     }
 }
 
-impl DistributedCompressor for IdentitySgd {
+/// Identity "encoding": the rank ships its raw fp32 gradient.
+struct DenseEncoder {
+    msg: Message,
+}
+
+impl RankEncoder for DenseEncoder {
+    fn encode(&mut self, grad: &[f32], plan: &PassPlan) {
+        match plan {
+            PassPlan::Dense => {
+                let out = self.msg.dense_mut();
+                out.clear();
+                out.extend_from_slice(grad);
+            }
+            _ => panic!("IdentitySgd encoder: unexpected plan"),
+        }
+    }
+
+    fn message(&self) -> &Message {
+        &self.msg
+    }
+}
+
+impl PhasedCompressor for IdentitySgd {
     fn name(&self) -> String {
         match self.primitive {
             Primitive::AllGather => "sgd_allgather".into(),
@@ -33,26 +71,43 @@ impl DistributedCompressor for IdentitySgd {
         true
     }
 
-    fn round(&mut self, grads: &[Vec<f32>], _ctx: &RoundCtx) -> RoundResult {
-        let n = grads.len();
-        let d = grads[0].len();
-        let gtilde = match self.primitive {
+    fn make_encoder(&mut self, _rank: usize) -> Box<dyn RankEncoder> {
+        Box::new(DenseEncoder { msg: Message::Empty })
+    }
+
+    fn encoders(&mut self) -> &mut Vec<Box<dyn RankEncoder>> {
+        &mut self.encoders
+    }
+
+    fn begin(&mut self, ctx: &RoundCtx) -> PassPlan {
+        self.d = ctx.d;
+        PassPlan::Dense
+    }
+
+    fn reduce(&mut self, msgs: &[&Message], _plan: &PassPlan, _ctx: &RoundCtx) -> PassOutcome {
+        let n = msgs.len();
+        let inv = 1.0 / n as f32;
+        match self.primitive {
             Primitive::AllReduce | Primitive::Switch => {
-                let mut sum = ring_allreduce_f32(grads);
-                let inv = 1.0 / n as f32;
-                for x in &mut sum {
+                // the in-process ring reduction stands in for the network
+                // data plane, whose time is modeled by netsim
+                let views: Vec<&[f32]> = msgs.iter().map(|m| m.as_dense()).collect();
+                self.gtilde = ring_allreduce_f32(&views);
+                for x in &mut self.gtilde {
                     *x *= inv;
                 }
-                sum
             }
-            Primitive::AllGather => average(grads),
-        };
-        // full-precision SGD has no compression stage: the in-process ring
-        // reduction stands in for the network data plane, whose time is
-        // modeled by netsim — so overhead is genuinely zero here.
+            Primitive::AllGather => {
+                mean_dense_into(msgs, &mut self.gtilde);
+            }
+        }
+        PassOutcome::Done
+    }
+
+    fn decode(&mut self, _ctx: &RoundCtx) -> RoundResult {
         RoundResult {
-            gtilde,
-            comm: vec![CommOp { primitive: self.primitive, bytes_per_worker: d * 4 }],
+            gtilde: std::mem::take(&mut self.gtilde),
+            comm: vec![CommOp { primitive: self.primitive, bytes_per_worker: self.d * 4 }],
             encode_seconds: 0.0,
             decode_seconds: 0.0,
             max_abs_int: 0,
@@ -64,6 +119,7 @@ impl DistributedCompressor for IdentitySgd {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::DistributedCompressor;
     use crate::coordinator::RoundCtx;
     use crate::util::Rng;
 

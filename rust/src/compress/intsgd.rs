@@ -7,15 +7,24 @@
 //! coordinator can run either implementation on the hot path (the rust one
 //! avoids a PJRT host round-trip for the small models used in the
 //! experiments; the artifact path demonstrates the on-device variant).
-
-use std::time::Instant;
+//!
+//! Phase split (`compress::engine`): the leader derives per-block alphas
+//! from the `AlphaRule` (Alg. 2 when the ctx carries a block layout), each
+//! rank's [`RankEncoder`] rounds its gradient with its own RNG stream, and
+//! the reduce phase sums integers through ring all-reduce or the INA
+//! switch simulator.
 
 use crate::collective::{allreduce_i64, InaSwitch};
-use crate::coordinator::RoundCtx;
+use crate::coordinator::{BlockInfo, RoundCtx};
 use crate::scaling::AlphaRule;
+use crate::util::rng::splitmix64_at;
 use crate::util::Rng;
 
-use super::{average, CommOp, DistributedCompressor, Primitive, RoundResult};
+use super::engine::{
+    decode_block_ints, mean_dense_into, spans_from_ctx, BlockSpan, Message,
+    PassOutcome, PassPlan, PhasedCompressor, RankEncoder,
+};
+use super::{CommOp, Primitive, RoundResult};
 
 /// Rounding mode (paper §5.1: IntSGD (Random) vs IntSGD (Determ.)).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -57,11 +66,21 @@ pub struct IntSgd {
     /// Aggregate through the INA switch simulator instead of ring
     /// all-reduce (same math unless saturation occurs).
     pub use_switch: bool,
-    /// Per-worker RNG streams for stochastic rounding.
-    rngs: Vec<Rng>,
-    /// Reusable per-round buffers (perf: no allocation after warmup).
-    ints: Vec<Vec<i64>>,
+    /// Configured worker count (the wire-fit proof depends on it).
+    n: usize,
+    /// Pre-forked per-worker RNG streams, handed to encoders on creation.
+    streams: Vec<Option<Rng>>,
+    encoders: Vec<Box<dyn RankEncoder>>,
+    // -- leader round state ------------------------------------------------
+    /// Reusable integer-aggregate buffer (perf: no allocation after warmup).
     sum: Vec<i64>,
+    /// Exact-round (round 0) average.
+    exact: Vec<f32>,
+    blocks: Vec<BlockSpan>,
+    alphas: Vec<f64>,
+    max_abs_int: i64,
+    exact_round: bool,
+    d: usize,
 }
 
 impl IntSgd {
@@ -72,32 +91,54 @@ impl IntSgd {
         n: usize,
         seed: u64,
     ) -> Self {
+        assert!(n >= 1, "at least one worker");
+        assert!(
+            (n as i64) <= wire.max_aggregate(),
+            "{n} workers exceed the {wire:?} wire budget: even clip 1 lets the \
+             aggregate reach {n} > {}",
+            wire.max_aggregate()
+        );
         let mut root = Rng::new(seed);
         IntSgd {
             rounding,
             wire,
             rule,
             use_switch: false,
-            rngs: (0..n).map(|i| root.fork(i as u64)).collect(),
-            ints: Vec::new(),
+            n,
+            streams: (0..n).map(|i| Some(root.fork(i as u64))).collect(),
+            encoders: Vec::new(),
             sum: Vec::new(),
+            exact: Vec::new(),
+            blocks: Vec::new(),
+            alphas: Vec::new(),
+            max_abs_int: 0,
+            exact_round: false,
+            d: 0,
         }
     }
 
-    /// Per-worker clip bound: each local integer is clipped to
-    /// floor((2^{b-1}-1)/n) so the aggregate of n workers provably fits the
-    /// wire type (paper §5.1 "we clip the local stochastic gradients").
+    /// Per-worker clip bound: floor((2^{b-1}-1)/n), so the aggregate of n
+    /// workers provably fits the wire type (paper §5.1 "we clip the local
+    /// stochastic gradients"). The constructor rejects configurations
+    /// where even clip 1 would overflow (n workers > wire budget), so the
+    /// bound here is always >= 1 without a silent floor.
     pub fn local_clip(&self, n: usize) -> i64 {
-        (self.wire.max_aggregate() / n as i64).max(1)
+        let clip = self.wire.max_aggregate() / n as i64;
+        assert!(
+            clip >= 1,
+            "{n} workers exceed the {:?} wire budget",
+            self.wire
+        );
+        clip
     }
 
     /// Encode one worker's gradient (the Pallas-kernel mirror).
     ///
     /// All arithmetic is f32 to match the kernel exactly (`alpha * g`,
-    /// `floor(t + u)` / round-ties-even, clip); the uniform draws come two
-    /// per PRNG step (§Perf: this path is the paper's "computation
-    /// overhead" column and was the top L3 bottleneck before the f32
-    /// rewrite — see EXPERIMENTS.md §Perf).
+    /// `floor(t + u)` / round-ties-even, clip); the uniform draws are
+    /// counter-based off one generator step (§Perf: this path is the
+    /// paper's "computation overhead" column and was the top L3 bottleneck
+    /// before the f32 rewrite — see EXPERIMENTS.md §Perf).
     pub fn encode(
         rounding: Rounding,
         grad: &[f32],
@@ -108,34 +149,100 @@ impl IntSgd {
     ) {
         out.clear();
         out.reserve(grad.len());
-        let a = alpha as f32;
-        let c = clip as f32; // clip <= 2^31: exactly representable ranges we use
         match rounding {
             Rounding::Stochastic => {
                 // counter-based randomness: no loop-carried RNG dependency,
                 // so the scale+floor+clip chain auto-vectorizes (§Perf).
                 // One draw from the worker's stream keys this round.
                 let base = rng.next_u64();
-                const SCALE: f32 = 1.0 / (1u32 << 24) as f32;
-                out.extend(grad.iter().enumerate().map(|(j, &g)| {
-                    let u =
-                        (crate::util::rng::splitmix64_at(base, j as u64) >> 40) as f32
-                            * SCALE;
-                    (g * a + u).floor().clamp(-c, c) as i64
-                }));
+                encode_span(rounding, grad, alpha, clip, base, 0, out);
             }
             Rounding::Deterministic => {
-                // f32 round-ties-even mirrors jnp.round in the kernel
-                out.extend(
-                    grad.iter()
-                        .map(|&g| (g * a).round_ties_even().clamp(-c, c) as i64),
-                );
+                encode_span(rounding, grad, alpha, clip, 0, 0, out);
             }
         }
     }
 }
 
-impl DistributedCompressor for IntSgd {
+/// Round one block of coordinates. `base` keys the counter-based uniform
+/// stream and `offset` is the block's absolute coordinate offset, so a
+/// multi-block encode with equal alphas is bit-identical to a single-block
+/// encode of the whole gradient.
+fn encode_span(
+    rounding: Rounding,
+    grad: &[f32],
+    alpha: f64,
+    clip: i64,
+    base: u64,
+    offset: usize,
+    out: &mut Vec<i64>,
+) {
+    let a = alpha as f32;
+    let c = clip as f32; // clip <= 2^31: exactly representable ranges we use
+    match rounding {
+        Rounding::Stochastic => {
+            const SCALE: f32 = 1.0 / (1u32 << 24) as f32;
+            out.extend(grad.iter().enumerate().map(|(k, &g)| {
+                let j = (offset + k) as u64;
+                let u = (splitmix64_at(base, j) >> 40) as f32 * SCALE;
+                (g * a + u).floor().clamp(-c, c) as i64
+            }));
+        }
+        Rounding::Deterministic => {
+            // f32 round-ties-even mirrors jnp.round in the kernel
+            out.extend(
+                grad.iter()
+                    .map(|&g| (g * a).round_ties_even().clamp(-c, c) as i64),
+            );
+        }
+    }
+}
+
+/// One rank's IntSGD state: its RNG stream and reusable message buffer.
+struct IntEncoder {
+    rng: Rng,
+    msg: Message,
+}
+
+impl RankEncoder for IntEncoder {
+    fn encode(&mut self, grad: &[f32], plan: &PassPlan) {
+        match plan {
+            PassPlan::Dense => {
+                // exact first communication: ship the raw fp32 gradient
+                let out = self.msg.dense_mut();
+                out.clear();
+                out.extend_from_slice(grad);
+            }
+            PassPlan::IntBlocks { rounding, blocks, alphas, clip } => {
+                let out = self.msg.ints_mut();
+                out.clear();
+                out.reserve(grad.len());
+                let base = match rounding {
+                    Rounding::Stochastic => self.rng.next_u64(),
+                    Rounding::Deterministic => 0,
+                };
+                for (span, &alpha) in blocks.iter().zip(alphas) {
+                    encode_span(
+                        *rounding,
+                        &grad[span.range()],
+                        alpha,
+                        *clip,
+                        base,
+                        span.offset,
+                        out,
+                    );
+                }
+            }
+            _ => panic!("IntSgd encoder: unexpected plan"),
+        }
+    }
+
+    fn message(&self) -> &Message {
+        &self.msg
+    }
+}
+
+impl PhasedCompressor for IntSgd {
     fn name(&self) -> String {
         let r = match self.rounding {
             Rounding::Stochastic => "random",
@@ -152,19 +259,79 @@ impl DistributedCompressor for IntSgd {
         true
     }
 
-    fn round(&mut self, grads: &[Vec<f32>], ctx: &RoundCtx) -> RoundResult {
-        let n = grads.len();
-        let d = grads[0].len();
-        assert_eq!(n, self.rngs.len(), "worker count changed mid-run");
+    fn make_encoder(&mut self, rank: usize) -> Box<dyn RankEncoder> {
+        let rng = self
+            .streams
+            .get_mut(rank)
+            .and_then(|s| s.take())
+            .unwrap_or_else(|| {
+                panic!("rank {rank} exceeds the configured worker count {}", self.n)
+            });
+        Box::new(IntEncoder { rng, msg: Message::Empty })
+    }
 
+    fn encoders(&mut self) -> &mut Vec<Box<dyn RankEncoder>> {
+        &mut self.encoders
+    }
+
+    fn begin(&mut self, ctx: &RoundCtx) -> PassPlan {
+        self.d = ctx.d;
         // Paper: "we assume that the first communication is exact" — there
         // is no alpha_0 (it needs ||x^1 - x^0||).
         if ctx.round == 0 {
+            self.exact_round = true;
+            return PassPlan::Dense;
+        }
+        self.exact_round = false;
+        self.blocks = spans_from_ctx(ctx);
+        // Alpha rules consume ctx.blocks; normalize block-less contexts to
+        // one block covering the whole gradient so BlockRule stays valid.
+        self.alphas = if ctx.blocks.is_empty() {
+            let norm = RoundCtx {
+                blocks: vec![BlockInfo { dim: ctx.d, step_norm_sq: ctx.step_norm_sq }],
+                ..ctx.clone()
+            };
+            self.rule.block_alphas(&norm)
+        } else {
+            self.rule.block_alphas(ctx)
+        };
+        assert_eq!(self.alphas.len(), self.blocks.len(), "one alpha per block");
+        PassPlan::IntBlocks {
+            rounding: self.rounding,
+            blocks: self.blocks.clone(),
+            alphas: self.alphas.clone(),
+            clip: self.local_clip(ctx.n),
+        }
+    }
+
+    fn reduce(&mut self, msgs: &[&Message], plan: &PassPlan, _ctx: &RoundCtx) -> PassOutcome {
+        match plan {
+            PassPlan::Dense => {
+                mean_dense_into(msgs, &mut self.exact);
+                self.max_abs_int = 0;
+            }
+            PassPlan::IntBlocks { .. } => {
+                let views: Vec<&[i64]> = msgs.iter().map(|m| m.as_ints()).collect();
+                if self.use_switch {
+                    let switch = InaSwitch::default();
+                    switch.aggregate_into(&views, self.wire, &mut self.sum);
+                } else {
+                    allreduce_i64(&views, &mut self.sum);
+                }
+                self.max_abs_int = self.sum.iter().map(|&x| x.abs()).max().unwrap_or(0);
+            }
+            _ => unreachable!("IntSgd planned no such pass"),
+        }
+        PassOutcome::Done
+    }
+
+    fn decode(&mut self, ctx: &RoundCtx) -> RoundResult {
+        if self.exact_round {
             return RoundResult {
-                gtilde: average(grads),
+                gtilde: std::mem::take(&mut self.exact),
                 comm: vec![CommOp {
                     primitive: Primitive::AllReduce,
-                    bytes_per_worker: d * 4,
+                    bytes_per_worker: self.d * 4,
                 }],
                 encode_seconds: 0.0,
                 decode_seconds: 0.0,
@@ -172,41 +339,7 @@ impl DistributedCompressor for IntSgd {
                 alpha: 0.0,
             };
         }
-
-        let alpha = self.rule.alpha(ctx);
-        let clip = self.local_clip(n);
-
-        // encode every worker (timed: this is the paper's "computation
-        // overhead" column)
-        let t0 = Instant::now();
-        if self.ints.len() != n {
-            self.ints = vec![Vec::new(); n];
-        }
-        for (i, g) in grads.iter().enumerate() {
-            let mut buf = std::mem::take(&mut self.ints[i]);
-            Self::encode(self.rounding, g, alpha, clip, &mut self.rngs[i], &mut buf);
-            self.ints[i] = buf;
-        }
-        // workers encode in parallel in a real deployment; the measured
-        // loop runs them sequentially, so per-worker overhead = total / n
-        let encode_seconds = t0.elapsed().as_secs_f64() / n as f64;
-
-        // aggregate integers in-flight
-        let views: Vec<&[i64]> = self.ints.iter().map(|v| v.as_slice()).collect();
-        if self.use_switch {
-            let switch = InaSwitch::default();
-            switch.aggregate_into(&views, self.wire, &mut self.sum);
-        } else {
-            allreduce_i64(&views, &mut self.sum);
-        }
-        let max_abs_int = self.sum.iter().map(|&x| x.abs()).max().unwrap_or(0);
-
-        // decode: g_tilde = sum / (n * alpha)
-        let t1 = Instant::now();
-        let inv = 1.0 / (n as f64 * alpha);
-        let gtilde: Vec<f32> = self.sum.iter().map(|&s| (s as f64 * inv) as f32).collect();
-        let decode_seconds = t1.elapsed().as_secs_f64();
-
+        let gtilde = decode_block_ints(&self.sum, &self.blocks, &self.alphas, ctx.n);
         RoundResult {
             gtilde,
             comm: vec![CommOp {
@@ -215,12 +348,12 @@ impl DistributedCompressor for IntSgd {
                 } else {
                     Primitive::AllReduce
                 },
-                bytes_per_worker: d * self.wire.bytes(),
+                bytes_per_worker: self.d * self.wire.bytes(),
             }],
-            encode_seconds,
-            decode_seconds,
-            max_abs_int,
-            alpha,
+            encode_seconds: 0.0,
+            decode_seconds: 0.0,
+            max_abs_int: self.max_abs_int,
+            alpha: self.alphas.iter().copied().fold(f64::INFINITY, f64::min),
         }
     }
 }
@@ -228,9 +361,10 @@ impl DistributedCompressor for IntSgd {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::{average, DistributedCompressor};
     use crate::coordinator::BlockInfo;
     use crate::prop_assert;
-    use crate::scaling::MovingAverageRule;
+    use crate::scaling::{BlockRule, MovingAverageRule};
     use crate::util::prop::prop_check;
     use crate::util::stats::l2_norm_sq;
 
@@ -278,22 +412,39 @@ mod tests {
     #[test]
     fn aggregate_fits_wire_type() {
         // Even with huge gradients the clipping guarantees the aggregate
-        // fits the wire integer.
+        // fits the wire integer — including large fleets (n up to 512,
+        // which forces the int32 wire: int8 tops out at 127 workers).
         prop_check(0xC11F, 50, |rng| {
-            let n = 1 + rng.usize_below(32);
+            let n = 1 + rng.usize_below(512);
             let d = 1 + rng.usize_below(500);
-            let mut c = make(Rounding::Stochastic, WireInt::Int8, n);
+            let wire = if n <= i8::MAX as usize { WireInt::Int8 } else { WireInt::Int32 };
+            let mut c = make(Rounding::Stochastic, wire, n);
             let grads: Vec<Vec<f32>> = (0..n)
                 .map(|_| (0..d).map(|_| 1e6 * rng.normal_f32()).collect())
                 .collect();
             let r = c.round(&grads, &ctx(1, d, n, 1e-12));
             prop_assert!(
-                r.max_abs_int <= i8::MAX as i64,
-                "aggregate {} exceeds int8",
-                r.max_abs_int
+                r.max_abs_int <= wire.max_aggregate(),
+                "aggregate {} exceeds {:?} (n={n})",
+                r.max_abs_int,
+                wire
             );
             Ok(())
         });
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed")]
+    fn int8_wire_rejects_too_many_workers() {
+        // 128 workers cannot fit the int8 aggregate even at clip 1; the
+        // old `.max(1)` floor silently violated the wire-fit guarantee.
+        let _ = make(Rounding::Stochastic, WireInt::Int8, 128);
+    }
+
+    #[test]
+    fn int8_wire_accepts_exactly_127_workers() {
+        let c = make(Rounding::Stochastic, WireInt::Int8, 127);
+        assert_eq!(c.local_clip(127), 1);
     }
 
     #[test]
@@ -404,5 +555,37 @@ mod tests {
         let rb = b.round(&grads, &ctx(1, d, n, 1e-3));
         assert_eq!(ra.gtilde, rb.gtilde);
         assert_eq!(rb.comm[0].primitive, Primitive::Switch);
+    }
+
+    #[test]
+    fn per_block_alphas_decode_blockwise() {
+        // Two blocks with very different step norms get different alphas
+        // under BlockRule (Alg. 2), and the decode divides block-wise: a
+        // gradient that is identical in both blocks decodes to (nearly)
+        // the same values in both, because each block's alpha cancels.
+        let n = 2;
+        let d = 8;
+        let blocks = vec![
+            BlockInfo { dim: 4, step_norm_sq: 1e-2 },
+            BlockInfo { dim: 4, step_norm_sq: 1e-8 },
+        ];
+        let cx = RoundCtx { round: 1, n, d, lr: 0.1, step_norm_sq: 1e-2 + 1e-8, blocks };
+        let mut c = IntSgd::new(
+            Rounding::Deterministic,
+            WireInt::Int32,
+            Box::new(BlockRule::new(0.9, 1e-8)),
+            n,
+            3,
+        );
+        let g = vec![vec![0.5f32, -0.25, 0.125, 1.0, 0.5, -0.25, 0.125, 1.0]; n];
+        let r = c.round(&g, &cx);
+        // the second block's tiny step norm means a much larger alpha
+        // there, i.e. far finer resolution: its decode error is smaller
+        for j in 0..4 {
+            let coarse = (r.gtilde[j] - g[0][j]).abs();
+            let fine = (r.gtilde[j + 4] - g[0][j + 4]).abs();
+            assert!(fine <= coarse + 1e-6, "coord {j}: fine {fine} coarse {coarse}");
+        }
+        assert!(r.alpha.is_finite());
     }
 }

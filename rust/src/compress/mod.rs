@@ -1,18 +1,29 @@
 //! Gradient compression engine: IntSGD and every baseline the paper
-//! evaluates against (Table 1 / §5), behind one trait.
+//! evaluates against (Table 1 / §5).
 //!
-//! A `DistributedCompressor` consumes the per-worker gradients of one round
-//! and produces the shared gradient estimate `g_tilde` plus an exact
+//! Since the parallel-round refactor the zoo is organized around the
+//! **phase API** in [`engine`]: every algorithm is a [`PhasedCompressor`]
+//! whose per-rank **encode** state ([`engine::RankEncoder`] — RNG stream,
+//! error-feedback memory, PowerSGD scratch) is `Send` and executes inside
+//! the coordinator's worker threads, while **reduce** (the collective:
+//! integer all-reduce, ring all-reduce, all-gather folds) and **decode**
+//! run on the leader. `RoundCtx.blocks` threads per-parameter-block
+//! geometry through the whole pipeline, so IntSGD and Heuristic IntSGD
+//! scale each block with its own alpha (paper Alg. 2).
+//!
+//! The original monolithic entry point survives as a thin adapter: every
+//! `PhasedCompressor` automatically implements [`DistributedCompressor`],
+//! whose `round(&[Vec<f32>], &RoundCtx)` drives the same phases
+//! sequentially on the caller thread. `tests/engine_parity.rs` pins that
+//! the two drivers are bit-identical for the whole zoo.
+//!
+//! A round produces the shared gradient estimate `g_tilde` plus an exact
 //! account of what went on the wire (which collective primitive, how many
 //! bytes per worker) and how long encode/decode took on this machine. The
 //! wire account feeds the network cost model (`netsim`) that regenerates
 //! the paper's Tables 2-3 and Fig. 2; the estimate feeds the optimizer.
-//!
-//! Worker state that a real deployment would keep device-local (error
-//! feedback memories, DIANA shifts, PowerSGD's warm-started Q factors,
-//! per-worker RNG streams) is kept per-rank inside each compressor, so the
-//! arithmetic is bit-identical to a real multi-node run.
 
+pub mod engine;
 pub mod error_feedback;
 pub mod heuristic;
 pub mod identity;
@@ -24,6 +35,10 @@ pub mod signsgd;
 pub mod topk;
 pub mod wire;
 
+pub use engine::{
+    sequential_round, BlockSpan, Message, PassOutcome, PassPlan, PhasedCompressor,
+    RankEncoder, RoundEngine,
+};
 pub use error_feedback::ErrorFeedback;
 pub use heuristic::HeuristicIntSgd;
 pub use identity::IdentitySgd;
@@ -63,13 +78,19 @@ pub struct RoundResult {
     pub gtilde: Vec<f32>,
     /// Wire schedule for the network cost model.
     pub comm: Vec<CommOp>,
-    /// Measured wallclock spent encoding (all workers) + decoding, seconds.
+    /// Measured encode wallclock, seconds: the straggler max across ranks
+    /// on the parallel path, the per-worker share (total / n) on the
+    /// sequential reference.
     pub encode_seconds: f64,
+    /// Measured decode wallclock, seconds: the final decode plus — for
+    /// all-gather algorithms only — the per-worker fold over the n
+    /// messages. In-flight reductions (all-reduce / INA) are untimed:
+    /// their cost belongs to the `netsim` comm model.
     pub decode_seconds: f64,
     /// Largest |integer| in the aggregated message (paper Fig. 6); 0 when
     /// the algorithm does not produce integers.
     pub max_abs_int: i64,
-    /// Scale used this round (for diagnostics; 0 when n/a).
+    /// Scale used this round (min over blocks under Alg. 2; 0 when n/a).
     pub alpha: f64,
 }
 
@@ -79,7 +100,10 @@ impl RoundResult {
     }
 }
 
-/// A gradient compression + aggregation algorithm.
+/// The classic single-call shape: one round over the per-worker flattened
+/// gradients, every phase on the caller thread. Automatically implemented
+/// for every [`PhasedCompressor`]; kept as the parity reference and for
+/// call sites that have no worker pool at hand.
 pub trait DistributedCompressor: Send {
     fn name(&self) -> String;
 

@@ -5,16 +5,15 @@
 //! which is NOT summable in flight: like QSGD it needs all-gather — the
 //! very bit-level-manipulation overhead the paper's Tables 2-3 measure.
 
-use std::time::Instant;
-
 use crate::coordinator::RoundCtx;
 use crate::util::Rng;
 
-use super::{CommOp, DistributedCompressor, Primitive, RoundResult};
+use super::engine::{Message, PassOutcome, PassPlan, PhasedCompressor, RankEncoder};
+use super::{CommOp, Primitive, RoundResult};
 
 /// Encoded message: packed sign bits + per-coordinate exponents.
 /// exp == EXP_ZERO encodes exact zero.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct NatMsg {
     pub signs: Vec<u64>,
     pub exps: Vec<i16>,
@@ -23,13 +22,25 @@ pub struct NatMsg {
 pub const EXP_ZERO: i16 = i16::MIN;
 
 pub struct NatSgd {
-    rngs: Vec<Rng>,
+    n: usize,
+    streams: Vec<Option<Rng>>,
+    encoders: Vec<Box<dyn RankEncoder>>,
+    acc: Vec<f32>,
+    scratch: Vec<f32>,
+    d: usize,
 }
 
 impl NatSgd {
     pub fn new(n: usize, seed: u64) -> Self {
         let mut root = Rng::new(seed);
-        NatSgd { rngs: (0..n).map(|i| root.fork(i as u64)).collect() }
+        NatSgd {
+            n,
+            streams: (0..n).map(|i| Some(root.fork(i as u64))).collect(),
+            encoders: Vec::new(),
+            acc: Vec::new(),
+            scratch: Vec::new(),
+            d: 0,
+        }
     }
 
     /// Natural compression by direct f32 bit manipulation (this is the
@@ -37,27 +48,27 @@ impl NatSgd {
     /// x = (-1)^s 2^e (1+m), round up to 2^{e+1} with probability m —
     /// exactly the unbiased rule, with m read straight from the mantissa
     /// bits. Subnormals are tiny enough to flush to zero.
-    pub fn encode(&mut self, rank: usize, grad: &[f32]) -> NatMsg {
-        let rng = &mut self.rngs[rank];
-        let mut signs = vec![0u64; grad.len().div_ceil(64)];
-        let mut exps = Vec::with_capacity(grad.len());
+    pub fn encode_into(rng: &mut Rng, grad: &[f32], out: &mut NatMsg) {
+        out.signs.clear();
+        out.signs.resize(grad.len().div_ceil(64), 0);
+        out.exps.clear();
+        out.exps.reserve(grad.len());
         const MANT_SCALE: f32 = 1.0 / (1u32 << 23) as f32;
         for (j, &x) in grad.iter().enumerate() {
             let bits = x.to_bits();
             let biased = (bits >> 23) & 0xFF;
             if biased == 0 || biased == 0xFF {
                 // zero / subnormal / inf / nan -> 0 on the wire
-                exps.push(EXP_ZERO);
+                out.exps.push(EXP_ZERO);
                 continue;
             }
-            signs[j / 64] |= (((bits >> 31) as u64) & 1) << (j % 64);
+            out.signs[j / 64] |= (((bits >> 31) as u64) & 1) << (j % 64);
             // P(round up) = mantissa fraction m in [0, 1)
             let m = (bits & 0x7F_FFFF) as f32 * MANT_SCALE;
             let e = biased as i16 - 127;
             let exp = e + (rng.uniform_f32() < m) as i16;
-            exps.push(exp.clamp(-126, 127));
+            out.exps.push(exp.clamp(-126, 127));
         }
-        NatMsg { signs, exps }
     }
 
     pub fn decode(msg: &NatMsg, out: &mut Vec<f32>) {
@@ -81,7 +92,32 @@ impl NatSgd {
     }
 }
 
-impl DistributedCompressor for NatSgd {
+/// One rank's state: its RNG stream and reusable message.
+struct NatEncoder {
+    rng: Rng,
+    msg: Message,
+}
+
+impl RankEncoder for NatEncoder {
+    fn encode(&mut self, grad: &[f32], plan: &PassPlan) {
+        match plan {
+            PassPlan::Plain => {
+                if !matches!(self.msg, Message::Nat(_)) {
+                    self.msg = Message::Nat(NatMsg::default());
+                }
+                let Message::Nat(msg) = &mut self.msg else { unreachable!() };
+                NatSgd::encode_into(&mut self.rng, grad, msg);
+            }
+            _ => panic!("NatSgd encoder: unexpected plan"),
+        }
+    }
+
+    fn message(&self) -> &Message {
+        &self.msg
+    }
+}
+
+impl PhasedCompressor for NatSgd {
     fn name(&self) -> String {
         "natsgd".into()
     }
@@ -90,37 +126,52 @@ impl DistributedCompressor for NatSgd {
         false
     }
 
-    fn round(&mut self, grads: &[Vec<f32>], _ctx: &RoundCtx) -> RoundResult {
-        let n = grads.len();
-        let d = grads[0].len();
-        let t0 = Instant::now();
-        let msgs: Vec<NatMsg> = (0..n).map(|i| self.encode(i, &grads[i])).collect();
-        // per-worker encode cost (parallel in reality)
-        let encode_seconds = t0.elapsed().as_secs_f64() / n as f64;
+    fn make_encoder(&mut self, rank: usize) -> Box<dyn RankEncoder> {
+        let rng = self
+            .streams
+            .get_mut(rank)
+            .and_then(|s| s.take())
+            .unwrap_or_else(|| {
+                panic!("rank {rank} exceeds the configured worker count {}", self.n)
+            });
+        Box::new(NatEncoder { rng, msg: Message::Empty })
+    }
 
-        let t1 = Instant::now();
-        let mut gtilde = vec![0.0f32; d];
-        let mut buf = Vec::with_capacity(d);
-        for msg in &msgs {
-            Self::decode(msg, &mut buf);
-            for (o, &x) in gtilde.iter_mut().zip(&buf) {
+    fn encoders(&mut self) -> &mut Vec<Box<dyn RankEncoder>> {
+        &mut self.encoders
+    }
+
+    fn begin(&mut self, ctx: &RoundCtx) -> PassPlan {
+        self.d = ctx.d;
+        PassPlan::Plain
+    }
+
+    fn reduce(&mut self, msgs: &[&Message], _plan: &PassPlan, ctx: &RoundCtx) -> PassOutcome {
+        let d = ctx.d;
+        self.acc.clear();
+        self.acc.resize(d, 0.0);
+        for m in msgs {
+            NatSgd::decode(m.as_nat(), &mut self.scratch);
+            for (o, &x) in self.acc.iter_mut().zip(&self.scratch) {
                 *o += x;
             }
         }
-        let inv = 1.0 / n as f32;
-        for o in &mut gtilde {
+        let inv = 1.0 / msgs.len() as f32;
+        for o in &mut self.acc {
             *o *= inv;
         }
-        let decode_seconds = t1.elapsed().as_secs_f64();
+        PassOutcome::Done
+    }
 
+    fn decode(&mut self, _ctx: &RoundCtx) -> RoundResult {
         RoundResult {
-            gtilde,
+            gtilde: std::mem::take(&mut self.acc),
             comm: vec![CommOp {
                 primitive: Primitive::AllGather,
-                bytes_per_worker: Self::wire_bytes(d),
+                bytes_per_worker: Self::wire_bytes(self.d),
             }],
-            encode_seconds,
-            decode_seconds,
+            encode_seconds: 0.0,
+            decode_seconds: 0.0,
             max_abs_int: 0,
             alpha: 0.0,
         }
@@ -135,9 +186,10 @@ mod tests {
 
     #[test]
     fn decodes_to_powers_of_two() {
-        let mut c = NatSgd::new(1, 5);
+        let mut rng = Rng::new(5);
         let g = vec![0.3f32, -1.7, 0.0, 5.0, -0.001];
-        let msg = c.encode(0, &g);
+        let mut msg = NatMsg::default();
+        NatSgd::encode_into(&mut rng, &g, &mut msg);
         let mut out = Vec::new();
         NatSgd::decode(&msg, &mut out);
         for (&o, &x) in out.iter().zip(&g) {
@@ -155,12 +207,13 @@ mod tests {
     #[test]
     fn unbiased() {
         let g = vec![0.3f32, -1.7, 5.1, 0.077];
-        let mut c = NatSgd::new(1, 6);
+        let mut rng = Rng::new(6);
         let mut acc = vec![0f64; g.len()];
         let trials = 60_000;
+        let mut msg = NatMsg::default();
         let mut buf = Vec::new();
         for _ in 0..trials {
-            let msg = c.encode(0, &g);
+            NatSgd::encode_into(&mut rng, &g, &mut msg);
             NatSgd::decode(&msg, &mut buf);
             for (a, &x) in acc.iter_mut().zip(&buf) {
                 *a += x as f64;
@@ -188,12 +241,13 @@ mod tests {
             let d = 1 + rng.usize_below(100);
             let g = rng.normal_vec(d, 1.0);
             let norm_sq: f64 = g.iter().map(|&x| (x as f64).powi(2)).sum();
-            let mut c = NatSgd::new(1, rng.next_u64());
+            let mut stream = Rng::new(rng.next_u64());
+            let mut msg = NatMsg::default();
             let mut buf = Vec::new();
             let mut err = 0.0;
             let reps = 200;
             for _ in 0..reps {
-                let msg = c.encode(0, &g);
+                NatSgd::encode_into(&mut stream, &g, &mut msg);
                 NatSgd::decode(&msg, &mut buf);
                 err += g
                     .iter()

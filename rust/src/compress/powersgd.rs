@@ -13,13 +13,22 @@
 //! implementation. Both reductions are plain sums, so PowerSGD keeps
 //! all-reduce compatibility — the property Table 1 credits it with — at
 //! the cost of EF state and a rank hyperparameter (its footnote (2)).
+//!
+//! Phase split: this is the zoo's genuinely multi-pass algorithm. Pass 1
+//! computes P_i per rank, pass 2 Q_i against the orthonormalized mean,
+//! and pass 3 is the rank-local EF update: after the two all-reduces every
+//! worker holds P^ and Q^, reconstructs the approximation locally, and
+//! subtracts it from its own corrected gradient — no extra communication.
 
-use std::time::Instant;
+use std::sync::Arc;
 
 use crate::coordinator::RoundCtx;
 use crate::util::Rng;
 
-use super::{average, CommOp, DistributedCompressor, Primitive, RoundResult};
+use super::engine::{
+    mean_dense_into, Message, PassOutcome, PassPlan, PhasedCompressor, RankEncoder,
+};
+use super::{CommOp, ErrorFeedback, Primitive, RoundResult};
 
 /// Shape of one parameter block in the flattened gradient.
 #[derive(Clone, Debug)]
@@ -46,24 +55,42 @@ impl BlockShape {
 
 pub struct PowerSgd {
     pub rank: usize,
-    layout: Vec<BlockShape>,
+    layout: Arc<Vec<BlockShape>>,
     /// Warm-started Q per matrix block (shared across workers: it is the
-    /// output of the previous round's all-reduce).
-    qs: Vec<Vec<f32>>, // cols x r, row-major
-    /// EF memory per worker over the full flattened gradient.
-    errors: Vec<Vec<f32>>,
+    /// output of the previous round's all-reduce). Arc-shared with the
+    /// pass plans; mutated via copy-on-write only when a plan no longer
+    /// holds it, i.e. in-place in steady state.
+    qs: Arc<Vec<Vec<f32>>>, // cols x r, row-major
+    encoders: Vec<Box<dyn RankEncoder>>,
+    // -- leader round state ------------------------------------------------
+    /// Elementwise mean of the rank messages of the current pass.
+    mean: Vec<f32>,
+    /// Orthonormalized P^ per matrix block.
+    phat: Arc<Vec<Vec<f32>>>,
+    gtilde: Vec<f32>,
+    bytes: usize,
 }
 
 impl PowerSgd {
-    pub fn new(rank: usize, layout: Vec<BlockShape>, n: usize, seed: u64) -> Self {
+    pub fn new(rank: usize, layout: Vec<BlockShape>, _n: usize, seed: u64) -> Self {
         assert!(rank >= 1);
         let mut rng = Rng::new(seed);
-        let qs = layout
+        let qs: Vec<Vec<f32>> = layout
             .iter()
             .filter_map(|b| b.matrix())
             .map(|(_, cols)| rng.normal_vec(cols * rank, 1.0))
             .collect();
-        PowerSgd { rank, layout, qs, errors: vec![Vec::new(); n] }
+        let nmat = qs.len();
+        PowerSgd {
+            rank,
+            layout: Arc::new(layout),
+            qs: Arc::new(qs),
+            encoders: Vec::new(),
+            mean: Vec::new(),
+            phat: Arc::new(vec![Vec::new(); nmat]),
+            gtilde: Vec::new(),
+            bytes: 0,
+        }
     }
 
     /// Gram-Schmidt orthonormalization of the r columns of a (rows x r)
@@ -122,9 +149,132 @@ impl PowerSgd {
             }
         }
     }
+
+    /// Sum the rank messages elementwise into `self.mean` and divide by n.
+    fn mean_of(&mut self, msgs: &[&Message]) {
+        mean_dense_into(msgs, &mut self.mean);
+    }
 }
 
-impl DistributedCompressor for PowerSgd {
+/// One rank's state: EF memory plus the corrected gradient, which
+/// persists across the round's passes (pass 2 and the EF pass reuse it),
+/// and a scratch buffer for the low-rank approximation image.
+struct PowerEncoder {
+    r: usize,
+    layout: Arc<Vec<BlockShape>>,
+    ef: ErrorFeedback,
+    corrected: Vec<f32>,
+    approx: Vec<f32>,
+    msg: Message,
+}
+
+impl RankEncoder for PowerEncoder {
+    fn encode(&mut self, grad: &[f32], plan: &PassPlan) {
+        match plan {
+            PassPlan::PowerP { qs } => {
+                let d = grad.len();
+                self.ef.corrected_into(grad, &mut self.corrected);
+                let r = self.r;
+                let layout = Arc::clone(&self.layout);
+                let out = self.msg.dense_mut();
+                out.clear();
+                let mut offset = 0;
+                let mut mat = 0;
+                for block in layout.iter() {
+                    let numel = block.numel();
+                    match block.matrix() {
+                        // vector blocks travel uncompressed (and bypass EF:
+                        // they are exact), straight from the raw gradient
+                        None => out.extend_from_slice(&grad[offset..offset + numel]),
+                        Some((rows, cols)) => {
+                            let start = out.len();
+                            out.resize(start + rows * r, 0.0);
+                            PowerSgd::matmul(
+                                &self.corrected[offset..offset + numel],
+                                &qs[mat],
+                                rows,
+                                cols,
+                                r,
+                                &mut out[start..],
+                            );
+                            mat += 1;
+                        }
+                    }
+                    offset += numel;
+                }
+                assert_eq!(offset, d, "layout must tile the gradient");
+            }
+            PassPlan::PowerQ { ps } => {
+                let r = self.r;
+                let layout = Arc::clone(&self.layout);
+                let out = self.msg.dense_mut();
+                out.clear();
+                let mut offset = 0;
+                let mut mat = 0;
+                for block in layout.iter() {
+                    let numel = block.numel();
+                    if let Some((rows, cols)) = block.matrix() {
+                        let start = out.len();
+                        out.resize(start + cols * r, 0.0);
+                        PowerSgd::matmul_t(
+                            &self.corrected[offset..offset + numel],
+                            &ps[mat],
+                            rows,
+                            cols,
+                            r,
+                            &mut out[start..],
+                        );
+                        mat += 1;
+                    }
+                    offset += numel;
+                }
+            }
+            PassPlan::PowerEf { ps, qs } => {
+                // rank-local EF update: reconstruct approx = P^ Q^T from
+                // the all-reduced factors; vector blocks are exact, so
+                // their approx equals the corrected value (zero residual)
+                let d = grad.len();
+                let r = self.r;
+                let layout = Arc::clone(&self.layout);
+                self.approx.clear();
+                self.approx.resize(d, 0.0);
+                let mut offset = 0;
+                let mut mat = 0;
+                for block in layout.iter() {
+                    let numel = block.numel();
+                    match block.matrix() {
+                        None => self.approx[offset..offset + numel]
+                            .copy_from_slice(&self.corrected[offset..offset + numel]),
+                        Some((rows, cols)) => {
+                            let p = &ps[mat];
+                            let q = &qs[mat];
+                            for i in 0..rows {
+                                for k in 0..cols {
+                                    let mut acc = 0.0f32;
+                                    for c in 0..r {
+                                        acc += p[i * r + c] * q[k * r + c];
+                                    }
+                                    self.approx[offset + i * cols + k] = acc;
+                                }
+                            }
+                            mat += 1;
+                        }
+                    }
+                    offset += numel;
+                }
+                self.ef.store_residual(&self.corrected, &self.approx);
+                // nothing to communicate; leave the previous message alone
+            }
+            _ => panic!("PowerSgd encoder: unexpected plan"),
+        }
+    }
+
+    fn message(&self) -> &Message {
+        &self.msg
+    }
+}
+
+impl PhasedCompressor for PowerSgd {
     fn name(&self) -> String {
         format!("powersgd_rank{}", self.rank)
     }
@@ -133,107 +283,121 @@ impl DistributedCompressor for PowerSgd {
         true
     }
 
-    fn round(&mut self, grads: &[Vec<f32>], _ctx: &RoundCtx) -> RoundResult {
-        let n = grads.len();
-        let d = grads[0].len();
+    fn make_encoder(&mut self, _rank: usize) -> Box<dyn RankEncoder> {
+        Box::new(PowerEncoder {
+            r: self.rank,
+            layout: Arc::clone(&self.layout),
+            ef: ErrorFeedback::new(),
+            corrected: Vec::new(),
+            approx: Vec::new(),
+            msg: Message::Empty,
+        })
+    }
+
+    fn encoders(&mut self) -> &mut Vec<Box<dyn RankEncoder>> {
+        &mut self.encoders
+    }
+
+    fn begin(&mut self, _ctx: &RoundCtx) -> PassPlan {
+        PassPlan::PowerP { qs: Arc::clone(&self.qs) }
+    }
+
+    fn reduce(&mut self, msgs: &[&Message], plan: &PassPlan, ctx: &RoundCtx) -> PassOutcome {
         let r = self.rank;
-        let t0 = Instant::now();
-
-        // EF-corrected inputs
-        for e in &mut self.errors {
-            if e.len() != d {
-                e.clear();
-                e.resize(d, 0.0);
-            }
-        }
-        let corrected: Vec<Vec<f32>> = grads
-            .iter()
-            .zip(&self.errors)
-            .map(|(g, e)| g.iter().zip(e).map(|(&a, &b)| a + b).collect())
-            .collect();
-
-        let mut gtilde = vec![0.0f32; d];
-        let mut bytes = 0usize;
-        let mut offset = 0usize;
-        let mut mat_idx = 0usize;
-        // rank-1 (vector) blocks: uncompressed all-reduce of the raw grads
-        for block in &self.layout.clone() {
-            let numel = block.numel();
-            let range = offset..offset + numel;
-            match block.matrix() {
-                None => {
-                    let slices: Vec<Vec<f32>> =
-                        grads.iter().map(|g| g[range.clone()].to_vec()).collect();
-                    let avg = average(&slices);
-                    gtilde[range.clone()].copy_from_slice(&avg);
-                    bytes += numel * 4;
-                    // vector blocks bypass EF (they are exact)
-                    for e in &mut self.errors {
-                        e[range.clone()].fill(0.0);
+        match plan {
+            PassPlan::PowerP { .. } => {
+                self.mean_of(msgs);
+                self.gtilde.clear();
+                self.gtilde.resize(ctx.d, 0.0);
+                self.bytes = 0;
+                let layout = Arc::clone(&self.layout);
+                // steady state: no plan holds phat here, so make_mut is
+                // an in-place borrow, not a copy
+                let phat = Arc::make_mut(&mut self.phat);
+                let mut pos = 0;
+                let mut offset = 0;
+                let mut mat = 0;
+                for block in layout.iter() {
+                    let numel = block.numel();
+                    match block.matrix() {
+                        None => {
+                            // uncompressed vector block: the mean IS gtilde
+                            self.gtilde[offset..offset + numel]
+                                .copy_from_slice(&self.mean[pos..pos + numel]);
+                            self.bytes += numel * 4;
+                            pos += numel;
+                        }
+                        Some((rows, cols)) => {
+                            let plen = rows * r;
+                            let pb = &mut phat[mat];
+                            pb.clear();
+                            pb.extend_from_slice(&self.mean[pos..pos + plen]);
+                            Self::orthonormalize(pb, rows, r);
+                            self.bytes += (rows + cols) * r * 4;
+                            pos += plen;
+                            mat += 1;
+                        }
                     }
+                    offset += numel;
                 }
-                Some((rows, cols)) => {
-                    let q = &mut self.qs[mat_idx];
-                    // P = mean_i M_i Q
-                    let mut p = vec![0.0f32; rows * r];
-                    let mut tmp = vec![0.0f32; rows * r];
-                    for c in &corrected {
-                        Self::matmul(&c[range.clone()], q, rows, cols, r, &mut tmp);
-                        for (pp, &t) in p.iter_mut().zip(&tmp) {
-                            *pp += t;
-                        }
-                    }
-                    let inv = 1.0 / n as f32;
-                    for pp in &mut p {
-                        *pp *= inv;
-                    }
-                    Self::orthonormalize(&mut p, rows, r);
-                    // Q = mean_i M_i^T P^
-                    let mut qnew = vec![0.0f32; cols * r];
-                    let mut tmpq = vec![0.0f32; cols * r];
-                    for c in &corrected {
-                        Self::matmul_t(&c[range.clone()], &p, rows, cols, r, &mut tmpq);
-                        for (qq, &t) in qnew.iter_mut().zip(&tmpq) {
-                            *qq += t;
-                        }
-                    }
-                    for qq in &mut qnew {
-                        *qq *= inv;
-                    }
-                    // approx = P^ Q^T, write into gtilde; EF residuals
-                    for i in 0..rows {
-                        for k in 0..cols {
-                            let mut acc = 0.0f32;
-                            for c in 0..r {
-                                acc += p[i * r + c] * qnew[k * r + c];
+                assert_eq!(offset, ctx.d, "layout must tile the gradient");
+                if mat == 0 {
+                    PassOutcome::Done
+                } else {
+                    PassOutcome::Next(PassPlan::PowerQ { ps: Arc::clone(&self.phat) })
+                }
+            }
+            PassPlan::PowerQ { .. } => {
+                self.mean_of(msgs);
+                let layout = Arc::clone(&self.layout);
+                // the PowerQ plan holds phat (read-only) but not qs, so
+                // this too is in-place in steady state
+                let qs = Arc::make_mut(&mut self.qs);
+                let mut pos = 0;
+                let mut offset = 0;
+                let mut mat = 0;
+                for block in layout.iter() {
+                    let numel = block.numel();
+                    if let Some((rows, cols)) = block.matrix() {
+                        let qlen = cols * r;
+                        // warm start for the next round
+                        let q = &mut qs[mat];
+                        q.clear();
+                        q.extend_from_slice(&self.mean[pos..pos + qlen]);
+                        // approx = P^ Q^T into gtilde
+                        let p = &self.phat[mat];
+                        for i in 0..rows {
+                            for k in 0..cols {
+                                let mut acc = 0.0f32;
+                                for c in 0..r {
+                                    acc += p[i * r + c] * q[k * r + c];
+                                }
+                                self.gtilde[offset + i * cols + k] = acc;
                             }
-                            gtilde[offset + i * cols + k] = acc;
                         }
+                        pos += qlen;
+                        mat += 1;
                     }
-                    for (ei, ci) in self.errors.iter_mut().zip(&corrected) {
-                        for j in range.clone() {
-                            ei[j] = ci[j] - gtilde[j];
-                        }
-                    }
-                    *q = qnew;
-                    bytes += (rows + cols) * r * 4;
-                    mat_idx += 1;
+                    offset += numel;
                 }
+                PassOutcome::Next(PassPlan::PowerEf {
+                    ps: Arc::clone(&self.phat),
+                    qs: Arc::clone(&self.qs),
+                })
             }
-            offset += numel;
+            PassPlan::PowerEf { .. } => PassOutcome::Done,
+            _ => unreachable!("PowerSgd planned no such pass"),
         }
-        assert_eq!(offset, d, "layout must tile the gradient");
-        // dominant cost (the per-worker M_i Q / M_i^T P matmuls) runs in
-        // parallel across real workers: report per-worker time.
-        let encode_seconds = t0.elapsed().as_secs_f64() / n as f64;
+    }
 
+    fn decode(&mut self, _ctx: &RoundCtx) -> RoundResult {
         RoundResult {
-            gtilde,
+            gtilde: std::mem::take(&mut self.gtilde),
             comm: vec![
                 // two all-reduce rounds (P then Q) + uncompressed vectors
-                CommOp { primitive: Primitive::AllReduce, bytes_per_worker: bytes },
+                CommOp { primitive: Primitive::AllReduce, bytes_per_worker: self.bytes },
             ],
-            encode_seconds,
+            encode_seconds: 0.0,
             decode_seconds: 0.0,
             max_abs_int: 0,
             alpha: 0.0,
@@ -244,9 +408,9 @@ impl DistributedCompressor for PowerSgd {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::DistributedCompressor;
     use crate::coordinator::RoundCtx;
     use crate::util::stats::l2_norm_sq;
-    use crate::util::Rng;
 
     fn ctx(d: usize, n: usize) -> RoundCtx {
         RoundCtx { round: 1, n, d, lr: 0.1, step_norm_sq: 0.0, blocks: vec![] }

@@ -7,14 +7,20 @@
 //! the norms differ per worker, the messages are NOT summable in-flight:
 //! QSGD requires all-gather + per-worker decompression, which is the
 //! systems cost Tables 2-3 demonstrate.
-
-use std::time::Instant;
+//!
+//! Bucket geometry: the configured `bucket_dims` when non-empty, otherwise
+//! the round's parameter-block layout from `RoundCtx.blocks` (one bucket
+//! per layer, the paper's setting).
 
 use crate::coordinator::RoundCtx;
 use crate::util::stats::l2_norm;
 use crate::util::Rng;
 
-use super::{CommOp, DistributedCompressor, Primitive, RoundResult};
+use super::engine::{
+    spans_from_ctx, BlockSpan, Message, PassOutcome, PassPlan, PhasedCompressor,
+    RankEncoder,
+};
+use super::{CommOp, Primitive, RoundResult};
 
 /// One encoded bucket.
 #[derive(Clone, Debug)]
@@ -27,9 +33,15 @@ pub struct QsgdBucket {
 pub struct Qsgd {
     /// Quantization levels (paper: 64, i.e. ~6 bits + sign).
     pub levels: u16,
-    /// Bucket boundaries = parameter-block dims; a single bucket when empty.
+    /// Bucket boundaries = parameter-block dims; the ctx layout (or a
+    /// single bucket) when empty.
     pub bucket_dims: Vec<usize>,
-    rngs: Vec<Rng>,
+    n: usize,
+    streams: Vec<Option<Rng>>,
+    encoders: Vec<Box<dyn RankEncoder>>,
+    acc: Vec<f32>,
+    nbuckets: usize,
+    d: usize,
 }
 
 impl Qsgd {
@@ -39,75 +51,115 @@ impl Qsgd {
         Qsgd {
             levels,
             bucket_dims,
-            rngs: (0..n).map(|i| root.fork(i as u64)).collect(),
+            n,
+            streams: (0..n).map(|i| Some(root.fork(i as u64))).collect(),
+            encoders: Vec::new(),
+            acc: Vec::new(),
+            nbuckets: 1,
+            d: 0,
         }
     }
 
-    fn buckets_of(&self, d: usize) -> Vec<(usize, usize)> {
-        if self.bucket_dims.is_empty() {
-            return vec![(0, d)];
+    /// Bucket spans for dims tiling a d-dimensional gradient.
+    pub fn spans_of(dims: &[usize], d: usize) -> Vec<BlockSpan> {
+        if dims.is_empty() {
+            return vec![BlockSpan { offset: 0, dim: d }];
         }
-        let mut out = Vec::with_capacity(self.bucket_dims.len());
-        let mut lo = 0;
-        for &bd in &self.bucket_dims {
-            out.push((lo, lo + bd));
-            lo += bd;
+        let mut out = Vec::with_capacity(dims.len());
+        let mut offset = 0;
+        for &bd in dims {
+            out.push(BlockSpan { offset, dim: bd });
+            offset += bd;
         }
-        assert_eq!(lo, d, "bucket dims must tile the gradient");
+        assert_eq!(offset, d, "bucket dims must tile the gradient");
         out
     }
 
-    /// Encode one worker's gradient.
-    pub fn encode(&mut self, rank: usize, grad: &[f32]) -> Vec<QsgdBucket> {
-        let s = self.levels as f64;
-        let buckets = self.buckets_of(grad.len());
-        let rng = &mut self.rngs[rank];
-        buckets
-            .iter()
-            .map(|&(lo, hi)| {
-                let v = &grad[lo..hi];
-                let norm = l2_norm(v) as f32;
-                let levels = if norm == 0.0 {
-                    vec![0i16; v.len()]
-                } else {
-                    v.iter()
-                        .map(|&x| {
-                            let r = (x.abs() as f64 / norm as f64) * s;
-                            let base = r.floor();
-                            let l = base as i16
-                                + (rng.uniform() < r - base) as i16;
-                            if x < 0.0 {
-                                -l
-                            } else {
-                                l
-                            }
-                        })
-                        .collect()
-                };
-                QsgdBucket { norm, levels }
-            })
-            .collect()
+    /// Quantize one gradient into per-bucket messages, reusing `out`.
+    pub fn encode_buckets(
+        levels: u16,
+        spans: &[BlockSpan],
+        grad: &[f32],
+        rng: &mut Rng,
+        out: &mut Vec<QsgdBucket>,
+    ) {
+        let s = levels as f64;
+        while out.len() < spans.len() {
+            out.push(QsgdBucket { norm: 0.0, levels: Vec::new() });
+        }
+        out.truncate(spans.len());
+        for (bucket, span) in out.iter_mut().zip(spans) {
+            let v = &grad[span.range()];
+            let norm = l2_norm(v) as f32;
+            bucket.norm = norm;
+            bucket.levels.clear();
+            if norm == 0.0 {
+                bucket.levels.resize(v.len(), 0);
+            } else {
+                bucket.levels.extend(v.iter().map(|&x| {
+                    let r = (x.abs() as f64 / norm as f64) * s;
+                    let base = r.floor();
+                    let l = base as i16 + (rng.uniform() < r - base) as i16;
+                    if x < 0.0 {
+                        -l
+                    } else {
+                        l
+                    }
+                }));
+            }
+        }
     }
 
     /// Decode one worker's message.
-    pub fn decode(&self, msg: &[QsgdBucket], out: &mut Vec<f32>) {
+    pub fn decode_buckets(levels: u16, msg: &[QsgdBucket], out: &mut Vec<f32>) {
         out.clear();
-        let s = self.levels as f32;
+        let s = levels as f32;
         for b in msg {
             out.extend(b.levels.iter().map(|&l| b.norm * l as f32 / s));
         }
     }
 
-    /// Wire bytes: one byte per coordinate (sign + 6-bit level packs into
-    /// 7 bits; we charge 1 byte as the GRACE implementation does) + the
-    /// fp32 norm per bucket.
-    pub fn wire_bytes(&self, d: usize) -> usize {
-        let nbuckets = if self.bucket_dims.is_empty() { 1 } else { self.bucket_dims.len() };
+    /// Wire bytes for a given bucket count: one byte per coordinate (sign
+    /// + 6-bit level packs into 7 bits; we charge 1 byte as the GRACE
+    /// implementation does) + the fp32 norm per bucket. `RoundResult`
+    /// charges the round's actual layout through this.
+    pub fn wire_bytes_for(d: usize, nbuckets: usize) -> usize {
         d + 4 * nbuckets
+    }
+
+    /// Wire bytes for the *configured* layout (a single bucket when
+    /// `bucket_dims` is empty; ctx-derived layouts are charged per round
+    /// via [`Qsgd::wire_bytes_for`]).
+    pub fn wire_bytes(&self, d: usize) -> usize {
+        let nbuckets =
+            if self.bucket_dims.is_empty() { 1 } else { self.bucket_dims.len() };
+        Self::wire_bytes_for(d, nbuckets)
     }
 }
 
-impl DistributedCompressor for Qsgd {
+/// One rank's state: its RNG stream and reusable bucket buffers.
+struct QsgdEncoder {
+    rng: Rng,
+    msg: Message,
+}
+
+impl RankEncoder for QsgdEncoder {
+    fn encode(&mut self, grad: &[f32], plan: &PassPlan) {
+        match plan {
+            PassPlan::Buckets { spans, levels } => {
+                let out = self.msg.buckets_mut();
+                Qsgd::encode_buckets(*levels, spans, grad, &mut self.rng, out);
+            }
+            _ => panic!("Qsgd encoder: unexpected plan"),
+        }
+    }
+
+    fn message(&self) -> &Message {
+        &self.msg
+    }
+}
+
+impl PhasedCompressor for Qsgd {
     fn name(&self) -> String {
         format!("qsgd_{}levels", self.levels)
     }
@@ -116,42 +168,65 @@ impl DistributedCompressor for Qsgd {
         false // per-worker norms: not summable in flight
     }
 
-    fn round(&mut self, grads: &[Vec<f32>], _ctx: &RoundCtx) -> RoundResult {
-        let n = grads.len();
-        let d = grads[0].len();
+    fn make_encoder(&mut self, rank: usize) -> Box<dyn RankEncoder> {
+        let rng = self
+            .streams
+            .get_mut(rank)
+            .and_then(|s| s.take())
+            .unwrap_or_else(|| {
+                panic!("rank {rank} exceeds the configured worker count {}", self.n)
+            });
+        Box::new(QsgdEncoder { rng, msg: Message::Empty })
+    }
 
-        let t0 = Instant::now();
-        let msgs: Vec<Vec<QsgdBucket>> = (0..n)
-            .map(|i| self.encode(i, &grads[i]))
-            .collect();
-        // per-worker encode cost: the n encodes run in parallel in reality
-        let encode_seconds = t0.elapsed().as_secs_f64() / n as f64;
+    fn encoders(&mut self) -> &mut Vec<Box<dyn RankEncoder>> {
+        &mut self.encoders
+    }
 
+    fn begin(&mut self, ctx: &RoundCtx) -> PassPlan {
+        self.d = ctx.d;
+        let spans = if self.bucket_dims.is_empty() {
+            spans_from_ctx(ctx)
+        } else {
+            Self::spans_of(&self.bucket_dims, ctx.d)
+        };
+        self.nbuckets = spans.len();
+        PassPlan::Buckets { spans, levels: self.levels }
+    }
+
+    fn reduce(&mut self, msgs: &[&Message], _plan: &PassPlan, ctx: &RoundCtx) -> PassOutcome {
         // all-gather + decode + average at every worker (this n-message
         // decode loop IS the per-worker cost: every worker decodes all n)
-        let t1 = Instant::now();
-        let mut gtilde = vec![0.0f32; d];
-        let mut buf = Vec::with_capacity(d);
-        for msg in &msgs {
-            self.decode(msg, &mut buf);
-            for (o, &x) in gtilde.iter_mut().zip(&buf) {
-                *o += x;
+        let d = ctx.d;
+        let s = self.levels as f32;
+        self.acc.clear();
+        self.acc.resize(d, 0.0);
+        for m in msgs {
+            let mut j = 0;
+            for b in m.as_buckets() {
+                for &l in &b.levels {
+                    self.acc[j] += b.norm * l as f32 / s;
+                    j += 1;
+                }
             }
+            debug_assert_eq!(j, d);
         }
-        let inv = 1.0 / n as f32;
-        for o in &mut gtilde {
+        let inv = 1.0 / msgs.len() as f32;
+        for o in &mut self.acc {
             *o *= inv;
         }
-        let decode_seconds = t1.elapsed().as_secs_f64();
+        PassOutcome::Done
+    }
 
+    fn decode(&mut self, _ctx: &RoundCtx) -> RoundResult {
         RoundResult {
-            gtilde,
+            gtilde: std::mem::take(&mut self.acc),
             comm: vec![CommOp {
                 primitive: Primitive::AllGather,
-                bytes_per_worker: self.wire_bytes(d),
+                bytes_per_worker: Self::wire_bytes_for(self.d, self.nbuckets),
             }],
-            encode_seconds,
-            decode_seconds,
+            encode_seconds: 0.0,
+            decode_seconds: 0.0,
             max_abs_int: 0,
             alpha: 0.0,
         }
@@ -161,21 +236,19 @@ impl DistributedCompressor for Qsgd {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::RoundCtx;
-    use crate::prop_assert;
-    use crate::util::prop::prop_check;
 
-    fn ctx(d: usize, n: usize) -> RoundCtx {
-        RoundCtx { round: 1, n, d, lr: 0.1, step_norm_sq: 0.0, blocks: vec![] }
+    fn single_span(d: usize) -> Vec<BlockSpan> {
+        vec![BlockSpan { offset: 0, dim: d }]
     }
 
     #[test]
     fn roundtrip_preserves_signs_and_bounds() {
-        let mut q = Qsgd::new(64, vec![], 1, 3);
+        let mut rng = Rng::new(3);
         let g = vec![0.5f32, -0.3, 0.0, 1.0, -1.0];
-        let msg = q.encode(0, &g);
+        let mut msg = Vec::new();
+        Qsgd::encode_buckets(64, &single_span(5), &g, &mut rng, &mut msg);
         let mut out = Vec::new();
-        q.decode(&msg, &mut out);
+        Qsgd::decode_buckets(64, &msg, &mut out);
         assert_eq!(out.len(), g.len());
         for (&o, &x) in out.iter().zip(&g) {
             assert!(o.signum() * x.signum() >= 0.0, "sign flip {o} vs {x}");
@@ -187,13 +260,14 @@ mod tests {
     #[test]
     fn unbiased_estimator() {
         let g = vec![0.37f32, -0.81, 0.12, 0.55];
-        let mut q = Qsgd::new(4, vec![], 1, 44);
+        let mut rng = Rng::new(44);
         let mut acc = vec![0f64; g.len()];
         let trials = 40_000;
+        let mut msg = Vec::new();
         let mut buf = Vec::new();
         for _ in 0..trials {
-            let msg = q.encode(0, &g);
-            q.decode(&msg, &mut buf);
+            Qsgd::encode_buckets(4, &single_span(4), &g, &mut rng, &mut msg);
+            Qsgd::decode_buckets(4, &msg, &mut buf);
             for (a, &x) in acc.iter_mut().zip(&buf) {
                 *a += x as f64;
             }
@@ -206,9 +280,11 @@ mod tests {
 
     #[test]
     fn buckets_tile_gradient() {
-        let mut q = Qsgd::new(64, vec![3, 5, 2], 1, 0);
+        let mut rng = Rng::new(0);
         let g: Vec<f32> = (0..10).map(|i| i as f32 / 10.0).collect();
-        let msg = q.encode(0, &g);
+        let spans = Qsgd::spans_of(&[3, 5, 2], 10);
+        let mut msg = Vec::new();
+        Qsgd::encode_buckets(64, &spans, &g, &mut rng, &mut msg);
         assert_eq!(msg.len(), 3);
         assert_eq!(msg[0].levels.len(), 3);
         assert_eq!(msg[1].levels.len(), 5);
@@ -218,8 +294,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "tile")]
     fn mismatched_buckets_rejected() {
-        let mut q = Qsgd::new(64, vec![3, 3], 1, 0);
-        q.encode(0, &[0.0; 10]);
+        Qsgd::spans_of(&[3, 3], 10);
     }
 
     #[test]
@@ -230,19 +305,27 @@ mod tests {
 
     #[test]
     fn quantization_error_vanishes_with_levels() {
+        use crate::prop_assert;
+        use crate::util::prop::prop_check;
         prop_check(0x05D, 30, |rng| {
             let d = 1 + rng.usize_below(200);
             let g = rng.normal_vec(d, 1.0);
-            let mut coarse = Qsgd::new(4, vec![], 1, 1);
-            let mut fine = Qsgd::new(1024, vec![], 1, 1);
+            // identical uniform draws for both level counts: the finer
+            // grid can then never do worse coordinate-wise
+            let mut coarse_rng = Rng::new(1);
+            let mut fine_rng = Rng::new(1);
+            let mut mc = Vec::new();
+            let mut mf = Vec::new();
             let mut bc = Vec::new();
             let mut bf = Vec::new();
-            let mc = coarse.encode(0, &g);
-            coarse.decode(&mc, &mut bc);
-            let mf = fine.encode(0, &g);
-            fine.decode(&mf, &mut bf);
-            let ec: f64 = g.iter().zip(&bc).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
-            let ef: f64 = g.iter().zip(&bf).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+            Qsgd::encode_buckets(4, &single_span(d), &g, &mut coarse_rng, &mut mc);
+            Qsgd::decode_buckets(4, &mc, &mut bc);
+            Qsgd::encode_buckets(1024, &single_span(d), &g, &mut fine_rng, &mut mf);
+            Qsgd::decode_buckets(1024, &mf, &mut bf);
+            let ec: f64 =
+                g.iter().zip(&bc).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+            let ef: f64 =
+                g.iter().zip(&bf).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
             prop_assert!(ef <= ec + 1e-9, "fine {ef} vs coarse {ec}");
             Ok(())
         });

@@ -3,32 +3,40 @@
 //! one fp32 scale. Sign messages carry per-worker scales, so aggregation is
 //! all-gather (majority-vote variants change the estimator, not the
 //! transport).
-
-use std::time::Instant;
+//!
+//! Phase split: each rank's encoder owns its EF memory and scratch
+//! buffers; the whole EF update (correct, compress, self-decode, store
+//! residual) is rank-local and runs on the rank's worker thread.
 
 use crate::coordinator::RoundCtx;
 
-use super::{CommOp, DistributedCompressor, ErrorFeedback, Primitive, RoundResult};
+use super::engine::{Message, PassOutcome, PassPlan, PhasedCompressor, RankEncoder};
+use super::{CommOp, ErrorFeedback, Primitive, RoundResult};
 
 pub struct SignSgd {
-    ef: ErrorFeedback,
+    encoders: Vec<Box<dyn RankEncoder>>,
+    acc: Vec<f32>,
+    scratch: Vec<f32>,
+    d: usize,
 }
 
 /// Encoded message: packed sign bits + the l1/d scale.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct SignMsg {
     pub bits: Vec<u64>,
     pub scale: f32,
 }
 
 impl SignSgd {
-    pub fn new(n: usize) -> Self {
-        SignSgd { ef: ErrorFeedback::new(n) }
+    pub fn new(_n: usize) -> Self {
+        SignSgd { encoders: Vec::new(), acc: Vec::new(), scratch: Vec::new(), d: 0 }
     }
 
-    pub fn encode(a: &[f32]) -> SignMsg {
+    /// C(a) into a reusable message slot.
+    pub fn encode_into(a: &[f32], msg: &mut SignMsg) {
         let d = a.len();
-        let mut bits = vec![0u64; d.div_ceil(64)];
+        msg.bits.clear();
+        msg.bits.resize(d.div_ceil(64), 0);
         let mut l1 = 0.0f64;
         // branch-free: sign bit straight from the f32 representation,
         // 64 coordinates per word (§Perf)
@@ -39,10 +47,16 @@ impl SignSgd {
                 word |= ((x.to_bits() >> 31) as u64) << j;
                 acc += x.abs();
             }
-            bits[w] = word;
+            msg.bits[w] = word;
             l1 += acc as f64;
         }
-        SignMsg { bits, scale: (l1 / d as f64) as f32 }
+        msg.scale = (l1 / d as f64) as f32;
+    }
+
+    pub fn encode(a: &[f32]) -> SignMsg {
+        let mut msg = SignMsg::default();
+        Self::encode_into(a, &mut msg);
+        msg
     }
 
     pub fn decode(msg: &SignMsg, d: usize, out: &mut Vec<f32>) {
@@ -59,7 +73,38 @@ impl SignSgd {
     }
 }
 
-impl DistributedCompressor for SignSgd {
+/// One rank's state: EF memory + scratch for the corrected gradient and
+/// the self-decoded message (both needed for the residual update).
+struct SignEncoder {
+    ef: ErrorFeedback,
+    a: Vec<f32>,
+    dense: Vec<f32>,
+    msg: Message,
+}
+
+impl RankEncoder for SignEncoder {
+    fn encode(&mut self, grad: &[f32], plan: &PassPlan) {
+        match plan {
+            PassPlan::Plain => {
+                self.ef.corrected_into(grad, &mut self.a);
+                if !matches!(self.msg, Message::Sign(_)) {
+                    self.msg = Message::Sign(SignMsg::default());
+                }
+                let Message::Sign(msg) = &mut self.msg else { unreachable!() };
+                SignSgd::encode_into(&self.a, msg);
+                SignSgd::decode(msg, grad.len(), &mut self.dense);
+                self.ef.store_residual(&self.a, &self.dense);
+            }
+            _ => panic!("SignSgd encoder: unexpected plan"),
+        }
+    }
+
+    fn message(&self) -> &Message {
+        &self.msg
+    }
+}
+
+impl PhasedCompressor for SignSgd {
     fn name(&self) -> String {
         "ef_signsgd".into()
     }
@@ -68,45 +113,51 @@ impl DistributedCompressor for SignSgd {
         false
     }
 
-    fn round(&mut self, grads: &[Vec<f32>], _ctx: &RoundCtx) -> RoundResult {
-        let n = grads.len();
-        let d = grads[0].len();
+    fn make_encoder(&mut self, _rank: usize) -> Box<dyn RankEncoder> {
+        Box::new(SignEncoder {
+            ef: ErrorFeedback::new(),
+            a: Vec::new(),
+            dense: Vec::new(),
+            msg: Message::Empty,
+        })
+    }
 
-        let t0 = Instant::now();
-        let mut msgs = Vec::with_capacity(n);
-        let mut dense = Vec::with_capacity(d);
-        for (i, g) in grads.iter().enumerate() {
-            let a = self.ef.corrected(i, g);
-            let msg = Self::encode(&a);
-            Self::decode(&msg, d, &mut dense);
-            self.ef.store_residual(i, &a, &dense);
-            msgs.push(msg);
-        }
-        // per-worker encode cost (parallel in reality)
-        let encode_seconds = t0.elapsed().as_secs_f64() / n as f64;
+    fn encoders(&mut self) -> &mut Vec<Box<dyn RankEncoder>> {
+        &mut self.encoders
+    }
 
-        let t1 = Instant::now();
-        let mut gtilde = vec![0.0f32; d];
-        for msg in &msgs {
-            Self::decode(msg, d, &mut dense);
-            for (o, &x) in gtilde.iter_mut().zip(&dense) {
+    fn begin(&mut self, ctx: &RoundCtx) -> PassPlan {
+        self.d = ctx.d;
+        PassPlan::Plain
+    }
+
+    fn reduce(&mut self, msgs: &[&Message], _plan: &PassPlan, ctx: &RoundCtx) -> PassOutcome {
+        // all-gather: every worker decodes all n messages and averages
+        let d = ctx.d;
+        self.acc.clear();
+        self.acc.resize(d, 0.0);
+        for m in msgs {
+            SignSgd::decode(m.as_sign(), d, &mut self.scratch);
+            for (o, &x) in self.acc.iter_mut().zip(&self.scratch) {
                 *o += x;
             }
         }
-        let inv = 1.0 / n as f32;
-        for x in &mut gtilde {
+        let inv = 1.0 / msgs.len() as f32;
+        for x in &mut self.acc {
             *x *= inv;
         }
-        let decode_seconds = t1.elapsed().as_secs_f64();
+        PassOutcome::Done
+    }
 
+    fn decode(&mut self, _ctx: &RoundCtx) -> RoundResult {
         RoundResult {
-            gtilde,
+            gtilde: std::mem::take(&mut self.acc),
             comm: vec![CommOp {
                 primitive: Primitive::AllGather,
-                bytes_per_worker: Self::wire_bytes(d),
+                bytes_per_worker: Self::wire_bytes(self.d),
             }],
-            encode_seconds,
-            decode_seconds,
+            encode_seconds: 0.0,
+            decode_seconds: 0.0,
             max_abs_int: 0,
             alpha: 0.0,
         }
@@ -116,6 +167,7 @@ impl DistributedCompressor for SignSgd {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::DistributedCompressor;
     use crate::coordinator::RoundCtx;
     use crate::util::Rng;
 

@@ -2,34 +2,43 @@
 //!
 //! Each worker ships its k largest-magnitude coordinates as (index, value)
 //! pairs. Sparse supports differ across workers, so aggregation needs
-//! all-gather; convergence needs EF (paper Table 1).
-
-use std::time::Instant;
+//! all-gather; convergence needs EF (paper Table 1). The EF memory and the
+//! O(d) selection scratch live in the rank's encoder and run on the rank's
+//! worker thread.
 
 use crate::coordinator::RoundCtx;
 
-use super::{CommOp, DistributedCompressor, ErrorFeedback, Primitive, RoundResult};
+use super::engine::{Message, PassOutcome, PassPlan, PhasedCompressor, RankEncoder};
+use super::{CommOp, ErrorFeedback, Primitive, RoundResult};
 
 pub struct TopK {
     /// Fraction of coordinates kept (k = max(1, ratio * d)).
     pub ratio: f64,
-    ef: ErrorFeedback,
+    encoders: Vec<Box<dyn RankEncoder>>,
+    acc: Vec<f32>,
+    d: usize,
 }
 
 impl TopK {
-    pub fn new(ratio: f64, n: usize) -> Self {
+    pub fn new(ratio: f64, _n: usize) -> Self {
         assert!(ratio > 0.0 && ratio <= 1.0);
-        TopK { ratio, ef: ErrorFeedback::new(n) }
+        TopK { ratio, encoders: Vec::new(), acc: Vec::new(), d: 0 }
     }
 
     pub fn k_of(&self, d: usize) -> usize {
-        ((self.ratio * d as f64).round() as usize).clamp(1, d)
+        k_for(self.ratio, d)
     }
 
-    /// Select top-k |a| as (idx, val) pairs, O(d) selection via
-    /// `select_nth_unstable`.
-    pub fn select(a: &[f32], k: usize) -> Vec<(u32, f32)> {
-        let mut idx: Vec<u32> = (0..a.len() as u32).collect();
+    /// Select top-k |a| into (idx, val) pairs, O(d) selection via
+    /// `select_nth_unstable`, reusing both buffers.
+    pub fn select_into(
+        a: &[f32],
+        k: usize,
+        idx: &mut Vec<u32>,
+        out: &mut Vec<(u32, f32)>,
+    ) {
+        idx.clear();
+        idx.extend(0..a.len() as u32);
         if k < a.len() {
             idx.select_nth_unstable_by(k, |&i, &j| {
                 a[j as usize]
@@ -39,11 +48,63 @@ impl TopK {
             });
             idx.truncate(k);
         }
-        idx.into_iter().map(|i| (i, a[i as usize])).collect()
+        out.clear();
+        out.extend(idx.iter().map(|&i| (i, a[i as usize])));
+    }
+
+    /// Convenience wrapper allocating fresh buffers.
+    pub fn select(a: &[f32], k: usize) -> Vec<(u32, f32)> {
+        let mut idx = Vec::new();
+        let mut out = Vec::new();
+        Self::select_into(a, k, &mut idx, &mut out);
+        out
     }
 }
 
-impl DistributedCompressor for TopK {
+/// k = max(1, round(ratio * d)) — one definition shared by the encoder's
+/// selection and the leader's wire accounting, so they cannot drift.
+fn k_for(ratio: f64, d: usize) -> usize {
+    ((ratio * d as f64).round() as usize).clamp(1, d)
+}
+
+/// One rank's state: EF memory, corrected-gradient scratch, the dense
+/// image of the selection (for the residual), and the index scratch.
+struct TopKEncoder {
+    ratio: f64,
+    ef: ErrorFeedback,
+    a: Vec<f32>,
+    dense: Vec<f32>,
+    idx: Vec<u32>,
+    msg: Message,
+}
+
+impl RankEncoder for TopKEncoder {
+    fn encode(&mut self, grad: &[f32], plan: &PassPlan) {
+        match plan {
+            PassPlan::Plain => {
+                let d = grad.len();
+                let k = k_for(self.ratio, d);
+                self.ef.corrected_into(grad, &mut self.a);
+                let sel = self.msg.sparse_mut();
+                TopK::select_into(&self.a, k, &mut self.idx, sel);
+                // dense image of the compressed message for the EF update
+                self.dense.clear();
+                self.dense.resize(d, 0.0);
+                for &(j, v) in sel.iter() {
+                    self.dense[j as usize] = v;
+                }
+                self.ef.store_residual(&self.a, &self.dense);
+            }
+            _ => panic!("TopK encoder: unexpected plan"),
+        }
+    }
+
+    fn message(&self) -> &Message {
+        &self.msg
+    }
+}
+
+impl PhasedCompressor for TopK {
     fn name(&self) -> String {
         format!("topk_{}", self.ratio)
     }
@@ -52,48 +113,50 @@ impl DistributedCompressor for TopK {
         false
     }
 
-    fn round(&mut self, grads: &[Vec<f32>], _ctx: &RoundCtx) -> RoundResult {
-        let n = grads.len();
-        let d = grads[0].len();
-        let k = self.k_of(d);
+    fn make_encoder(&mut self, _rank: usize) -> Box<dyn RankEncoder> {
+        Box::new(TopKEncoder {
+            ratio: self.ratio,
+            ef: ErrorFeedback::new(),
+            a: Vec::new(),
+            dense: Vec::new(),
+            idx: Vec::new(),
+            msg: Message::Empty,
+        })
+    }
 
-        let t0 = Instant::now();
-        let mut msgs = Vec::with_capacity(n);
-        for (i, g) in grads.iter().enumerate() {
-            let a = self.ef.corrected(i, g);
-            let sel = Self::select(&a, k);
-            // dense image of the compressed message for the EF update
-            let mut dense = vec![0.0f32; d];
-            for &(j, v) in &sel {
-                dense[j as usize] = v;
-            }
-            self.ef.store_residual(i, &a, &dense);
-            msgs.push(sel);
-        }
-        // per-worker encode cost (parallel in reality)
-        let encode_seconds = t0.elapsed().as_secs_f64() / n as f64;
+    fn encoders(&mut self) -> &mut Vec<Box<dyn RankEncoder>> {
+        &mut self.encoders
+    }
 
-        let t1 = Instant::now();
-        let mut gtilde = vec![0.0f32; d];
-        for sel in &msgs {
-            for &(j, v) in sel {
-                gtilde[j as usize] += v;
+    fn begin(&mut self, ctx: &RoundCtx) -> PassPlan {
+        self.d = ctx.d;
+        PassPlan::Plain
+    }
+
+    fn reduce(&mut self, msgs: &[&Message], _plan: &PassPlan, ctx: &RoundCtx) -> PassOutcome {
+        self.acc.clear();
+        self.acc.resize(ctx.d, 0.0);
+        for m in msgs {
+            for &(j, v) in m.as_sparse() {
+                self.acc[j as usize] += v;
             }
         }
-        let inv = 1.0 / n as f32;
-        for x in &mut gtilde {
+        let inv = 1.0 / msgs.len() as f32;
+        for x in &mut self.acc {
             *x *= inv;
         }
-        let decode_seconds = t1.elapsed().as_secs_f64();
+        PassOutcome::Done
+    }
 
+    fn decode(&mut self, _ctx: &RoundCtx) -> RoundResult {
         RoundResult {
-            gtilde,
+            gtilde: std::mem::take(&mut self.acc),
             comm: vec![CommOp {
                 primitive: Primitive::AllGather,
-                bytes_per_worker: k * 8, // u32 index + f32 value
+                bytes_per_worker: self.k_of(self.d) * 8, // u32 index + f32 value
             }],
-            encode_seconds,
-            decode_seconds,
+            encode_seconds: 0.0,
+            decode_seconds: 0.0,
             max_abs_int: 0,
             alpha: 0.0,
         }
@@ -103,6 +166,7 @@ impl DistributedCompressor for TopK {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::DistributedCompressor;
     use crate::coordinator::RoundCtx;
     use crate::util::Rng;
 

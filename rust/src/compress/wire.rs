@@ -357,8 +357,9 @@ mod tests {
         let mut rng = Rng::new(0);
         let d = 1000;
         let g = rng.normal_vec(d, 2.0);
-        let mut nat = NatSgd::new(1, 1);
-        let msg = nat.encode(0, &g);
+        let mut stream = Rng::new(1);
+        let mut msg = NatMsg::default();
+        NatSgd::encode_into(&mut stream, &g, &mut msg);
         let bytes = encode_nat(&msg);
         assert_eq!(bytes.len(), (d * 9).div_ceil(8));
         let back = decode_nat(&bytes, d).unwrap();
@@ -370,8 +371,9 @@ mod tests {
     fn qsgd_wire_roundtrip() {
         let mut rng = Rng::new(1);
         let g = rng.normal_vec(500, 1.0);
-        let mut q = Qsgd::new(64, vec![100, 400], 1, 2);
-        let msg = q.encode(0, &g);
+        let mut stream = Rng::new(2);
+        let mut msg = Vec::new();
+        Qsgd::encode_buckets(64, &Qsgd::spans_of(&[100, 400], 500), &g, &mut stream, &mut msg);
         let bytes = encode_qsgd(&msg).unwrap();
         let back = decode_qsgd(&bytes).unwrap();
         assert_eq!(back.len(), msg.len());

@@ -10,8 +10,15 @@
 //!   ------                         -------------------
 //!   broadcast x^k     ──────────▶  compute g_i^k on local shard
 //!   collect g_i^k     ◀──────────  send gradient
-//!   compress + aggregate (compress::DistributedCompressor)
+//!   ship encoders     ──────────▶  encode phase (rank-local state)
+//!   collect messages  ◀──────────  send encoded message
+//!   reduce + decode (compress::engine::RoundEngine)
 //!   optimizer step -> x^{k+1}; account comm time via netsim
+//!
+//! The encode phase of each compression round runs *inside the worker
+//! threads* (`RoundEngine::round_parallel`), so the recorded overhead is
+//! the straggler max a real synchronous round pays — not an n-fold
+//! serialization on the leader divided by n after the fact.
 //!
 //! Workers that need non-Send resources (PJRT clients are Rc-backed)
 //! construct them inside their own thread from a `Send` factory.
@@ -20,12 +27,12 @@ pub mod pjrt_worker;
 pub mod worker;
 
 pub use pjrt_worker::{BatchSpec, PjrtEvaluator, PjrtWorker};
-pub use worker::{GradientSource, WorkerPool};
+pub use worker::{EncodeDone, EncodeTask, GradientSource, WorkerPool};
 
-use crate::compress::DistributedCompressor;
+use crate::compress::engine::RoundEngine;
 use crate::netsim::Network;
 use crate::optim::Sgd;
-use crate::util::stats::l2_norm_sq;
+use crate::util::stats::l2_diff_norm_sq;
 
 /// Per-parameter-block geometry handed to scaling rules (Alg. 2).
 #[derive(Clone, Debug)]
@@ -90,7 +97,8 @@ pub struct RoundRecord {
     pub max_abs_int: i64,
     pub wire_bytes_per_worker: usize,
     /// Measured seconds: worker compute (max across workers), compression
-    /// encode+decode.
+    /// encode (straggler max across workers) + decode (edge folds and the
+    /// final decode; in-flight reductions are charged to `comm_seconds`).
     pub compute_seconds: f64,
     pub overhead_seconds: f64,
     /// Modeled seconds from the network cost model.
@@ -142,28 +150,34 @@ impl Coordinator {
         Coordinator { params: init_params, prev_params: prev, block_dims, network }
     }
 
-    fn block_infos(&self) -> Vec<BlockInfo> {
-        let mut out = Vec::with_capacity(self.block_dims.len());
+    /// Per-block step norms, fused over the param/prev pair — no
+    /// temporary diff vectors (this runs every round).
+    fn block_infos(&self, out: &mut Vec<BlockInfo>) {
+        out.clear();
+        if self.block_dims.is_empty() {
+            out.push(BlockInfo {
+                dim: self.params.len(),
+                step_norm_sq: l2_diff_norm_sq(&self.params, &self.prev_params),
+            });
+            return;
+        }
         let mut off = 0;
         for &dim in &self.block_dims {
-            let sq = l2_norm_sq(
-                &self.params[off..off + dim]
-                    .iter()
-                    .zip(&self.prev_params[off..off + dim])
-                    .map(|(&a, &b)| a - b)
-                    .collect::<Vec<_>>(),
+            let sq = l2_diff_norm_sq(
+                &self.params[off..off + dim],
+                &self.prev_params[off..off + dim],
             );
             out.push(BlockInfo { dim, step_norm_sq: sq });
             off += dim;
         }
-        out
+        debug_assert_eq!(off, self.params.len(), "block dims must tile the params");
     }
 
     /// Run the synchronous training loop.
     pub fn train(
         &mut self,
         pool: &mut WorkerPool,
-        compressor: &mut dyn DistributedCompressor,
+        engine: &mut RoundEngine,
         cfg: &TrainConfig,
         mut eval: Option<&mut dyn FnMut(&[f32]) -> (f64, f64)>,
     ) -> TrainResult {
@@ -172,31 +186,30 @@ impl Coordinator {
         let mut opt = Sgd::new(d, cfg.momentum, cfg.weight_decay);
         let mut records = Vec::with_capacity(cfg.rounds);
         let mut evals = Vec::new();
+        let mut blocks = Vec::with_capacity(self.block_dims.len().max(1));
 
         for round in 0..cfg.rounds {
             let lr = cfg.schedule.lr_at(round);
 
             // 1. broadcast params, collect worker gradients (threads)
-            let (grads, losses, compute_seconds) = pool.compute_round(&self.params, round);
+            let (mut grads, losses, compute_seconds) =
+                pool.compute_round(&self.params, round);
 
-            // 2. compress + aggregate
-            let step_norm_sq = l2_norm_sq(
-                &self
-                    .params
-                    .iter()
-                    .zip(&self.prev_params)
-                    .map(|(&a, &b)| a - b)
-                    .collect::<Vec<_>>(),
-            );
+            // 2. compress + aggregate: encode back on the worker threads,
+            //    reduce + decode on the leader. The blocks tile the params,
+            //    so the global step norm is their fused sum.
+            self.block_infos(&mut blocks);
+            let step_norm_sq = blocks.iter().map(|b| b.step_norm_sq).sum();
             let ctx = RoundCtx {
                 round,
                 n,
                 d,
                 lr,
                 step_norm_sq,
-                blocks: self.block_infos(),
+                blocks: std::mem::take(&mut blocks),
             };
-            let result = compressor.round(&grads, &ctx);
+            let result = engine.round_parallel(pool, &mut grads, &ctx);
+            blocks = ctx.blocks; // reclaim the buffer for the next round
 
             // 3. optimizer step
             self.prev_params.copy_from_slice(&self.params);
@@ -216,9 +229,7 @@ impl Coordinator {
                 comm_seconds,
             });
 
-            if cfg.eval_every > 0
-                && (round + 1) % cfg.eval_every == 0
-            {
+            if cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0 {
                 if let Some(f) = eval.as_deref_mut() {
                     let (l, a) = f(&self.params);
                     evals.push((round, l, a));
@@ -282,6 +293,10 @@ mod tests {
         WorkerPool::spawn(factories)
     }
 
+    fn identity_engine() -> RoundEngine {
+        RoundEngine::new(Box::new(IdentitySgd::allreduce()))
+    }
+
     #[test]
     fn sgd_converges_on_quadratic() {
         // heterogeneous centers: the optimum is their mean, with a positive
@@ -291,13 +306,13 @@ mod tests {
         let mut pool = quad_pool(n, d, 0.0);
         let mut coord =
             Coordinator::new(vec![0.0; d], vec![d], Network::paper_cluster());
-        let mut comp = IdentitySgd::allreduce();
+        let mut engine = identity_engine();
         let cfg = TrainConfig {
             rounds: 200,
             schedule: LrSchedule::constant(0.5),
             ..Default::default()
         };
-        let res = coord.train(&mut pool, &mut comp, &cfg, None);
+        let res = coord.train(&mut pool, &mut engine, &cfg, None);
         pool.shutdown();
         // recompute the centers the factories used
         let centers: Vec<Vec<f32>> = (0..n)
@@ -349,9 +364,9 @@ mod tests {
         let mut pool = quad_pool(2, d, 0.1);
         let mut coord =
             Coordinator::new(vec![0.0; d], vec![d], Network::paper_cluster());
-        let mut comp = IdentitySgd::allreduce();
+        let mut engine = identity_engine();
         let cfg = TrainConfig { rounds: 5, ..Default::default() };
-        let res = coord.train(&mut pool, &mut comp, &cfg, None);
+        let res = coord.train(&mut pool, &mut engine, &cfg, None);
         pool.shutdown();
         assert_eq!(res.records.len(), 5);
         for (i, r) in res.records.iter().enumerate() {
@@ -367,16 +382,53 @@ mod tests {
         let mut pool = quad_pool(2, d, 0.0);
         let mut coord =
             Coordinator::new(vec![0.0; d], vec![d], Network::paper_cluster());
-        let mut comp = IdentitySgd::allreduce();
+        let mut engine = identity_engine();
         let cfg = TrainConfig { rounds: 10, eval_every: 3, ..Default::default() };
         let mut calls = 0;
         let mut hook = |_p: &[f32]| {
             calls += 1;
             (0.0, 0.0)
         };
-        let res = coord.train(&mut pool, &mut comp, &cfg, Some(&mut hook));
+        let res = coord.train(&mut pool, &mut engine, &cfg, Some(&mut hook));
         pool.shutdown();
         assert_eq!(res.evals.len(), 3);
         assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn intsgd_trains_with_per_block_alphas_through_the_pool() {
+        // Multi-block layout + IntSGD through the parallel engine: the
+        // end-to-end Alg. 2 path the refactor exists for.
+        use crate::compress::intsgd::{IntSgd, Rounding, WireInt};
+        use crate::scaling::BlockRule;
+        let d = 48;
+        let n = 3;
+        let mut pool = quad_pool(n, d, 0.0);
+        let mut coord = Coordinator::new(
+            vec![0.0; d],
+            vec![16, 24, 8],
+            Network::paper_cluster(),
+        );
+        let mut engine = RoundEngine::new(Box::new(IntSgd::new(
+            Rounding::Stochastic,
+            WireInt::Int8,
+            Box::new(BlockRule::new(0.9, 1e-8)),
+            n,
+            13,
+        )));
+        let cfg = TrainConfig {
+            rounds: 150,
+            schedule: LrSchedule::constant(0.4),
+            ..Default::default()
+        };
+        let res = coord.train(&mut pool, &mut engine, &cfg, None);
+        pool.shutdown();
+        let first = res.records[0].train_loss;
+        let last = res.records.last().unwrap().train_loss;
+        assert!(last < first, "no progress: {first} -> {last}");
+        // int8 aggregate budget respected every round
+        assert!(res.records.iter().all(|r| r.max_abs_int <= 127));
+        // after round 0 the wire is one byte per coordinate
+        assert_eq!(res.records[1].wire_bytes_per_worker, d);
     }
 }

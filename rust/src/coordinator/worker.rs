@@ -4,11 +4,19 @@
 //! its gradient source inside its own thread from a `Send` factory — the
 //! same pattern a real multi-process launcher would use (each rank opens
 //! its own device).
+//!
+//! Besides gradient rounds, the pool executes the compression engine's
+//! **encode phase**: the leader ships each rank its encoder (the rank's
+//! `Send` compression state), the worker thread encodes its own gradient,
+//! and the message travels back. This is what makes the reported encode
+//! cost a true straggler max instead of a leader-thread serialization.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+use crate::compress::engine::{PassPlan, RankEncoder};
 
 /// What a worker computes each round: the local stochastic gradient.
 pub trait GradientSource {
@@ -18,16 +26,33 @@ pub trait GradientSource {
     fn grad(&mut self, params: &[f32], round: usize) -> (f32, Vec<f32>);
 }
 
+/// One rank's encode job: its encoder, its gradient, and the round plan
+/// shared by all ranks. Everything owned moves back in [`EncodeDone`].
+pub struct EncodeTask {
+    pub rank: usize,
+    pub encoder: Box<dyn RankEncoder>,
+    pub grad: Vec<f32>,
+    pub plan: Arc<PassPlan>,
+}
+
+/// The completed encode job: encoder (holding its message) and gradient
+/// return to the leader, plus the measured encode wallclock.
+pub struct EncodeDone {
+    pub rank: usize,
+    pub encoder: Box<dyn RankEncoder>,
+    pub grad: Vec<f32>,
+    pub seconds: f64,
+}
+
 enum ToWorker {
     Round { params: Arc<Vec<f32>>, round: usize },
+    Encode(EncodeTask),
     Stop,
 }
 
-struct FromWorker {
-    rank: usize,
-    loss: f32,
-    grad: Vec<f32>,
-    seconds: f64,
+enum FromWorker {
+    Grad { rank: usize, loss: f32, grad: Vec<f32>, seconds: f64 },
+    Encoded(EncodeDone),
 }
 
 pub struct WorkerPool {
@@ -60,9 +85,23 @@ impl WorkerPool {
                                 let (loss, grad) = source.grad(&params, round);
                                 let seconds = t0.elapsed().as_secs_f64();
                                 if tx_out
-                                    .send(FromWorker { rank, loss, grad, seconds })
+                                    .send(FromWorker::Grad { rank, loss, grad, seconds })
                                     .is_err()
                                 {
+                                    break;
+                                }
+                            }
+                            ToWorker::Encode(mut task) => {
+                                let t0 = Instant::now();
+                                task.encoder.encode(&task.grad, &task.plan);
+                                let seconds = t0.elapsed().as_secs_f64();
+                                let done = EncodeDone {
+                                    rank: task.rank,
+                                    encoder: task.encoder,
+                                    grad: task.grad,
+                                    seconds,
+                                };
+                                if tx_out.send(FromWorker::Encoded(done)).is_err() {
                                     break;
                                 }
                             }
@@ -74,6 +113,28 @@ impl WorkerPool {
             handles.push(handle);
         }
         WorkerPool { senders, receiver: rx_out, handles }
+    }
+
+    /// A pool whose workers only serve the encode phase (benchmarks and
+    /// parity tests that feed gradients from outside).
+    pub fn for_encode(n: usize) -> Self {
+        struct Null;
+        impl GradientSource for Null {
+            fn dim(&self) -> usize {
+                0
+            }
+            fn grad(&mut self, _params: &[f32], _round: usize) -> (f32, Vec<f32>) {
+                (0.0, Vec::new())
+            }
+        }
+        let factories: Vec<Box<dyn FnOnce() -> Box<dyn GradientSource> + Send>> = (0..n)
+            .map(|_| {
+                let f: Box<dyn FnOnce() -> Box<dyn GradientSource> + Send> =
+                    Box::new(|| Box::new(Null) as Box<dyn GradientSource>);
+                f
+            })
+            .collect();
+        Self::spawn(factories)
     }
 
     pub fn workers(&self) -> usize {
@@ -98,15 +159,54 @@ impl WorkerPool {
         let mut losses = vec![0.0f32; n];
         let mut max_seconds = 0.0f64;
         for _ in 0..n {
-            let msg = self.receiver.recv().expect("worker result");
-            losses[msg.rank] = msg.loss;
-            max_seconds = max_seconds.max(msg.seconds);
-            grads[msg.rank] = Some(msg.grad);
+            match self.receiver.recv().expect("worker result") {
+                FromWorker::Grad { rank, loss, grad, seconds } => {
+                    losses[rank] = loss;
+                    max_seconds = max_seconds.max(seconds);
+                    grads[rank] = Some(grad);
+                }
+                FromWorker::Encoded(_) => {
+                    panic!("unexpected encode result during compute phase")
+                }
+            }
         }
         (
             grads.into_iter().map(|g| g.expect("all ranks reported")).collect(),
             losses,
             max_seconds,
+        )
+    }
+
+    /// Run one encode pass: task i executes on worker thread i. Returns
+    /// the completed jobs in rank order plus the straggler (max) encode
+    /// time across ranks.
+    pub fn encode_round(&mut self, tasks: Vec<EncodeTask>) -> (Vec<EncodeDone>, f64) {
+        let n = tasks.len();
+        assert_eq!(n, self.workers(), "one encode task per worker");
+        for task in tasks {
+            let rank = task.rank;
+            self.senders[rank]
+                .send(ToWorker::Encode(task))
+                .expect("worker alive");
+        }
+        let mut done: Vec<Option<EncodeDone>> = (0..n).map(|_| None).collect();
+        let mut straggler = 0.0f64;
+        for _ in 0..n {
+            match self.receiver.recv().expect("worker result") {
+                FromWorker::Encoded(item) => {
+                    straggler = straggler.max(item.seconds);
+                    let rank = item.rank;
+                    assert!(done[rank].is_none(), "duplicate encode result");
+                    done[rank] = Some(item);
+                }
+                FromWorker::Grad { .. } => {
+                    panic!("unexpected gradient during encode phase")
+                }
+            }
+        }
+        (
+            done.into_iter().map(|d| d.expect("all ranks encoded")).collect(),
+            straggler,
         )
     }
 
@@ -133,6 +233,7 @@ impl Drop for WorkerPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::engine::Message;
 
     struct Echo {
         rank: usize,
@@ -197,5 +298,75 @@ mod tests {
         pool.shutdown();
         pool.shutdown();
         drop(pool);
+    }
+
+    /// An encoder that scales its gradient by its rank — enough to prove
+    /// the encode phase runs on the right thread with the right data and
+    /// that encoder + gradient round-trip intact.
+    struct ScaleByRank {
+        rank: usize,
+        msg: Message,
+    }
+
+    impl RankEncoder for ScaleByRank {
+        fn encode(&mut self, grad: &[f32], _plan: &PassPlan) {
+            let out = self.msg.dense_mut();
+            out.clear();
+            out.extend(grad.iter().map(|&g| g * self.rank as f32));
+        }
+
+        fn message(&self) -> &Message {
+            &self.msg
+        }
+    }
+
+    #[test]
+    fn encode_round_runs_each_rank_and_returns_state() {
+        let n = 4;
+        let mut pool = WorkerPool::for_encode(n);
+        let plan = Arc::new(PassPlan::Plain);
+        for round in 0..3 {
+            let tasks: Vec<EncodeTask> = (0..n)
+                .map(|rank| EncodeTask {
+                    rank,
+                    encoder: Box::new(ScaleByRank { rank, msg: Message::Empty }),
+                    grad: vec![1.0 + round as f32; 2],
+                    plan: Arc::clone(&plan),
+                })
+                .collect();
+            let (done, straggler) = pool.encode_round(tasks);
+            assert!(straggler >= 0.0);
+            for (rank, item) in done.iter().enumerate() {
+                assert_eq!(item.rank, rank);
+                assert_eq!(item.grad, vec![1.0 + round as f32; 2]);
+                let expect = (1.0 + round as f32) * rank as f32;
+                assert_eq!(item.encoder.message().as_dense(), &[expect, expect]);
+            }
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn compute_and_encode_interleave() {
+        let mut pool = echo_pool(2, 2);
+        let (grads, _, _) = pool.compute_round(&[0.0, 0.0], 1);
+        let plan = Arc::new(PassPlan::Plain);
+        let tasks: Vec<EncodeTask> = grads
+            .into_iter()
+            .enumerate()
+            .map(|(rank, grad)| EncodeTask {
+                rank,
+                encoder: Box::new(ScaleByRank { rank, msg: Message::Empty }),
+                grad,
+                plan: Arc::clone(&plan),
+            })
+            .collect();
+        let (done, _) = pool.encode_round(tasks);
+        // rank 1's gradient was [2.0, 2.0]; scaled by rank 1 stays [2.0, 2.0]
+        assert_eq!(done[1].encoder.message().as_dense(), &[2.0, 2.0]);
+        // and the pool still computes gradients afterwards
+        let (grads, _, _) = pool.compute_round(&[0.0, 0.0], 2);
+        assert_eq!(grads[0], vec![2.0, 2.0]);
+        pool.shutdown();
     }
 }

@@ -13,8 +13,8 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::compress::{
-    powersgd::BlockShape, DistributedCompressor, HeuristicIntSgd, IdentitySgd, IntSgd,
-    NatSgd, PowerSgd, Qsgd, SignSgd, TopK,
+    powersgd::BlockShape, HeuristicIntSgd, IdentitySgd, IntSgd, NatSgd,
+    PhasedCompressor, PowerSgd, Qsgd, RoundEngine, SignSgd, TopK,
 };
 use crate::compress::intsgd::{Rounding, WireInt};
 use crate::config::Config;
@@ -81,7 +81,9 @@ pub fn model_layout(rt: &Runtime, model: &str) -> Result<Vec<Vec<usize>>> {
     Ok(meta.params.iter().map(|p| p.shape.clone()).collect())
 }
 
-/// Build a compressor by its experiment id.
+/// Build a compressor by its experiment id. The result drives either
+/// `RoundEngine` entry point (parallel in `run_task`, sequential in the
+/// standalone examples).
 pub fn make_compressor(
     name: &str,
     n: usize,
@@ -89,7 +91,7 @@ pub fn make_compressor(
     beta: f64,
     eps: f64,
     seed: u64,
-) -> Result<Box<dyn DistributedCompressor>> {
+) -> Result<Box<dyn PhasedCompressor>> {
     let numels: Vec<usize> = layout
         .iter()
         .map(|s| s.iter().product::<usize>().max(1))
@@ -302,7 +304,7 @@ pub fn run_task(
         .map(|s| s.iter().product::<usize>().max(1))
         .collect();
     let mut coord = Coordinator::new(init, block_dims, Network::paper_cluster());
-    let mut comp = make_compressor(algo, n, &layout, beta, eps, 77 + seed)?;
+    let mut engine = RoundEngine::new(make_compressor(algo, n, &layout, beta, eps, 77 + seed)?);
     let mut pool = WorkerPool::spawn(factories);
     let warmup = cfg.usize_or("warmup_rounds", s.rounds / 20);
     let cfg_train = TrainConfig {
@@ -332,7 +334,7 @@ pub fn run_task(
             }
         }
     };
-    let result = coord.train(&mut pool, comp.as_mut(), &cfg_train, Some(&mut eval_hook));
+    let result = coord.train(&mut pool, &mut engine, &cfg_train, Some(&mut eval_hook));
     pool.shutdown();
 
     let test = result

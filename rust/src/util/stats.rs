@@ -28,6 +28,20 @@ pub fn l2_norm_sq(v: &[f32]) -> f64 {
     v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
 }
 
+/// Squared euclidean distance ||a - b||^2, accumulated in f64 with the
+/// difference fused into the pass — no temporary diff vector (this runs
+/// on the coordinator hot path every round).
+pub fn l2_diff_norm_sq(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum()
+}
+
 /// Max |x|.
 pub fn linf_norm(v: &[f32]) -> f32 {
     v.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
@@ -103,6 +117,17 @@ mod tests {
         assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-9);
         assert!((l2_norm_sq(&[3.0, 4.0]) - 25.0).abs() < 1e-9);
         assert_eq!(linf_norm(&[-7.0, 2.0]), 7.0);
+    }
+
+    #[test]
+    fn diff_norm_matches_explicit_subtraction() {
+        let a = [1.0f32, -2.0, 0.5];
+        let b = [0.0f32, 1.0, 0.5];
+        assert!((l2_diff_norm_sq(&a, &b) - (1.0 + 9.0)).abs() < 1e-12);
+        // fused form must equal the two-pass form bit-for-bit (f32
+        // subtraction first, f64 accumulation second)
+        let diff: Vec<f32> = a.iter().zip(&b).map(|(&x, &y)| x - y).collect();
+        assert_eq!(l2_diff_norm_sq(&a, &b), l2_norm_sq(&diff));
     }
 
     #[test]

@@ -1,0 +1,255 @@
+//! Golden parity: the parallel engine (encode on worker threads) must be
+//! bit-identical to the sequential reference for every compressor in the
+//! zoo, across worker counts and rounds — including the per-block alpha
+//! path (paper Alg. 2).
+//!
+//! The guarantee rests on two design rules pinned here: encoders consume
+//! only their own state plus the shared plan, and reduction folds
+//! messages in rank order regardless of thread arrival order.
+
+use intsgd::compress::intsgd::{IntSgd, Rounding, WireInt};
+use intsgd::compress::powersgd::BlockShape;
+use intsgd::compress::{
+    HeuristicIntSgd, IdentitySgd, NatSgd, PhasedCompressor, PowerSgd, Qsgd,
+    RoundEngine, SignSgd, TopK,
+};
+use intsgd::coordinator::{BlockInfo, RoundCtx, WorkerPool};
+use intsgd::scaling::{BlockRule, MovingAverageRule, Prop3Rule};
+use intsgd::util::Rng;
+
+/// Block dims used for every multi-block case (they tile `d`).
+fn block_dims(d: usize) -> Vec<usize> {
+    assert!(d >= 8 && d % 4 == 0);
+    vec![d / 2, d / 4, d / 4]
+}
+
+fn ctx_for(round: usize, d: usize, n: usize, blocked: bool) -> RoundCtx {
+    let dims = if blocked { block_dims(d) } else { vec![d] };
+    let blocks: Vec<BlockInfo> = dims
+        .iter()
+        .enumerate()
+        .map(|(l, &dim)| BlockInfo {
+            dim,
+            // varies per block and per round so per-block alphas differ
+            step_norm_sq: 1e-4 / (l + 1) as f64 * (round as f64 + 1.0),
+        })
+        .collect();
+    let step_norm_sq = blocks.iter().map(|b| b.step_norm_sq).sum();
+    RoundCtx { round, n, d, lr: 0.1, step_norm_sq, blocks }
+}
+
+/// Run `rounds` rounds through both drivers and require bit-identical
+/// results every round (state evolves, so every round must match for the
+/// next one to).
+fn assert_parity(
+    label: &str,
+    mk: impl Fn() -> Box<dyn PhasedCompressor>,
+    n: usize,
+    d: usize,
+    blocked: bool,
+) {
+    let mut seq = RoundEngine::new(mk());
+    let mut par = RoundEngine::new(mk());
+    let mut pool = WorkerPool::for_encode(n);
+    let mut rng = Rng::new(0xE11 + n as u64);
+    for round in 0..4 {
+        let grads: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 0.5)).collect();
+        let ctx = ctx_for(round, d, n, blocked);
+        let a = seq.round_sequential(&grads, &ctx);
+        let mut owned = grads.clone();
+        let b = par.round_parallel(&mut pool, &mut owned, &ctx);
+        // gradients come back to the leader untouched
+        assert_eq!(owned, grads, "{label} n={n} round {round}: grads mutated");
+        assert_eq!(
+            a.gtilde, b.gtilde,
+            "{label} n={n} round {round}: gtilde differs"
+        );
+        assert_eq!(
+            a.max_abs_int, b.max_abs_int,
+            "{label} n={n} round {round}: max_abs_int differs"
+        );
+        assert_eq!(
+            a.alpha.to_bits(),
+            b.alpha.to_bits(),
+            "{label} n={n} round {round}: alpha differs"
+        );
+        assert_eq!(
+            a.wire_bytes_per_worker(),
+            b.wire_bytes_per_worker(),
+            "{label} n={n} round {round}: wire bytes differ"
+        );
+        assert_eq!(a.comm.len(), b.comm.len(), "{label}: comm schedule length");
+        for (ca, cb) in a.comm.iter().zip(&b.comm) {
+            assert_eq!(ca.primitive, cb.primitive, "{label}: primitive differs");
+        }
+    }
+    pool.shutdown();
+}
+
+fn zoo(n: usize, d: usize) -> Vec<(&'static str, Box<dyn Fn() -> Box<dyn PhasedCompressor>>)> {
+    let dims = block_dims(d);
+    let qsgd_dims = dims.clone();
+    let power_layout: Vec<BlockShape> = vec![
+        // a matrix block covering d/2, then two vector blocks
+        BlockShape { dims: vec![4, d / 8] },
+        BlockShape { dims: vec![d / 4] },
+        BlockShape { dims: vec![d / 4] },
+    ];
+    vec![
+        (
+            "sgd_allreduce",
+            Box::new(|| Box::new(IdentitySgd::allreduce()) as Box<dyn PhasedCompressor>),
+        ),
+        (
+            "sgd_allgather",
+            Box::new(|| Box::new(IdentitySgd::allgather()) as Box<dyn PhasedCompressor>),
+        ),
+        (
+            "intsgd_random8",
+            Box::new(move || {
+                Box::new(IntSgd::new(
+                    Rounding::Stochastic,
+                    WireInt::Int8,
+                    Box::new(MovingAverageRule::default_paper()),
+                    n,
+                    41,
+                )) as Box<dyn PhasedCompressor>
+            }),
+        ),
+        (
+            "intsgd_determ32",
+            Box::new(move || {
+                Box::new(IntSgd::new(
+                    Rounding::Deterministic,
+                    WireInt::Int32,
+                    Box::new(MovingAverageRule::default_paper()),
+                    n,
+                    42,
+                )) as Box<dyn PhasedCompressor>
+            }),
+        ),
+        (
+            "intsgd_prop3",
+            Box::new(move || {
+                Box::new(IntSgd::new(
+                    Rounding::Stochastic,
+                    WireInt::Int32,
+                    Box::new(Prop3Rule),
+                    n,
+                    43,
+                )) as Box<dyn PhasedCompressor>
+            }),
+        ),
+        (
+            "intsgd_block8",
+            Box::new(move || {
+                Box::new(IntSgd::new(
+                    Rounding::Stochastic,
+                    WireInt::Int8,
+                    Box::new(BlockRule::new(0.9, 1e-8)),
+                    n,
+                    44,
+                )) as Box<dyn PhasedCompressor>
+            }),
+        ),
+        (
+            "intsgd_switch8",
+            Box::new(move || {
+                let mut c = IntSgd::new(
+                    Rounding::Stochastic,
+                    WireInt::Int8,
+                    Box::new(MovingAverageRule::default_paper()),
+                    n,
+                    45,
+                );
+                c.use_switch = true;
+                Box::new(c) as Box<dyn PhasedCompressor>
+            }),
+        ),
+        (
+            "heuristic8",
+            Box::new(|| Box::new(HeuristicIntSgd::new(8)) as Box<dyn PhasedCompressor>),
+        ),
+        (
+            "qsgd64",
+            Box::new(move || {
+                Box::new(Qsgd::new(64, qsgd_dims.clone(), n, 46)) as Box<dyn PhasedCompressor>
+            }),
+        ),
+        (
+            "natsgd",
+            Box::new(move || Box::new(NatSgd::new(n, 47)) as Box<dyn PhasedCompressor>),
+        ),
+        (
+            "topk10",
+            Box::new(move || Box::new(TopK::new(0.1, n)) as Box<dyn PhasedCompressor>),
+        ),
+        (
+            "ef_signsgd",
+            Box::new(move || Box::new(SignSgd::new(n)) as Box<dyn PhasedCompressor>),
+        ),
+        (
+            "powersgd_rank2",
+            Box::new(move || {
+                Box::new(PowerSgd::new(2, power_layout.clone(), n, 48))
+                    as Box<dyn PhasedCompressor>
+            }),
+        ),
+    ]
+}
+
+#[test]
+fn parallel_engine_is_bit_identical_for_the_whole_zoo() {
+    let d = 96; // block dims [48, 24, 24]; powersgd matrix 4 x 12
+    for &n in &[1usize, 4, 7] {
+        for (label, mk) in zoo(n, d) {
+            assert_parity(label, mk.as_ref(), n, d, true);
+        }
+    }
+}
+
+#[test]
+fn parity_holds_without_block_layout_too() {
+    // single-block ctx (blocks = [d]): the scalar-alpha path
+    let d = 64;
+    for &n in &[1usize, 4] {
+        for (label, mk) in zoo(n, d) {
+            assert_parity(label, mk.as_ref(), n, d, false);
+        }
+    }
+}
+
+#[test]
+fn per_block_alphas_differ_and_still_match() {
+    // sanity that the Alg. 2 path is actually exercised: BlockRule with
+    // distinct per-block step norms produces a non-uniform alpha vector
+    // (reported alpha = min), and the parallel path reproduces it exactly.
+    let n = 4;
+    let d = 96;
+    let mut seq = RoundEngine::new(Box::new(IntSgd::new(
+        Rounding::Stochastic,
+        WireInt::Int8,
+        Box::new(BlockRule::new(0.9, 1e-8)),
+        n,
+        7,
+    )) as Box<dyn PhasedCompressor>);
+    let mut par = RoundEngine::new(Box::new(IntSgd::new(
+        Rounding::Stochastic,
+        WireInt::Int8,
+        Box::new(BlockRule::new(0.9, 1e-8)),
+        n,
+        7,
+    )) as Box<dyn PhasedCompressor>);
+    let mut pool = WorkerPool::for_encode(n);
+    let mut rng = Rng::new(99);
+    for round in 1..4 {
+        let grads: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 0.5)).collect();
+        let ctx = ctx_for(round, d, n, true);
+        let a = seq.round_sequential(&grads, &ctx);
+        let mut owned = grads.clone();
+        let b = par.round_parallel(&mut pool, &mut owned, &ctx);
+        assert_eq!(a.gtilde, b.gtilde, "round {round}");
+        assert!(a.alpha.is_finite() && a.alpha > 0.0);
+    }
+    pool.shutdown();
+}

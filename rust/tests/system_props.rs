@@ -5,8 +5,8 @@
 use intsgd::compress::intsgd::{IntSgd, Rounding, WireInt};
 use intsgd::compress::powersgd::BlockShape;
 use intsgd::compress::{
-    average, DistributedCompressor, HeuristicIntSgd, IdentitySgd, NatSgd, PowerSgd,
-    Qsgd, SignSgd, TopK,
+    average, DistributedCompressor, HeuristicIntSgd, IdentitySgd, NatSgd,
+    PhasedCompressor, PowerSgd, Qsgd, RoundEngine, SignSgd, TopK,
 };
 use intsgd::coordinator::{
     BlockInfo, Coordinator, GradientSource, LrSchedule, RoundCtx, TrainConfig,
@@ -207,24 +207,23 @@ fn intsgd_training_tracks_uncompressed_on_quadratic() {
         ..Default::default()
     };
 
-    let run = |comp: &mut dyn DistributedCompressor| {
+    let run = |comp: Box<dyn PhasedCompressor>| {
         let mut pool = mk_pool();
         let mut coord =
             Coordinator::new(vec![0.0; d], vec![d], Network::paper_cluster());
-        let res = coord.train(&mut pool, comp, &cfg, None);
+        let mut engine = RoundEngine::new(comp);
+        let res = coord.train(&mut pool, &mut engine, &cfg, None);
         pool.shutdown();
         res.final_params
     };
-    let mut sgd = IdentitySgd::allreduce();
-    let x_sgd = run(&mut sgd);
-    let mut int8 = IntSgd::new(
+    let x_sgd = run(Box::new(IdentitySgd::allreduce()));
+    let x_int = run(Box::new(IntSgd::new(
         Rounding::Stochastic,
         WireInt::Int8,
         Box::new(MovingAverageRule::default_paper()),
         n,
         11,
-    );
-    let x_int = run(&mut int8);
+    )));
     let dist = l2_norm(
         &x_sgd.iter().zip(&x_int).map(|(&a, &b)| a - b).collect::<Vec<_>>(),
     );

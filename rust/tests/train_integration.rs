@@ -7,7 +7,7 @@
 use std::sync::Arc;
 
 use intsgd::compress::intsgd::{IntSgd, Rounding, WireInt};
-use intsgd::compress::{DistributedCompressor, HeuristicIntSgd, IdentitySgd};
+use intsgd::compress::{HeuristicIntSgd, IdentitySgd, PhasedCompressor, RoundEngine};
 use intsgd::coordinator::{
     BatchSpec, Coordinator, GradientSource, LrSchedule, PjrtEvaluator, PjrtWorker,
     TrainConfig, WorkerPool,
@@ -52,7 +52,7 @@ fn classifier_pool(n: usize, data: &Arc<CifarLike>, batch: usize) -> WorkerPool 
 }
 
 fn train_classifier(
-    comp: &mut dyn DistributedCompressor,
+    comp: Box<dyn PhasedCompressor>,
     n: usize,
     rounds: usize,
 ) -> (f64, f64, Vec<intsgd::coordinator::RoundRecord>) {
@@ -70,7 +70,8 @@ fn train_classifier(
         weight_decay: 1e-4,
         eval_every: 0,
     };
-    let res = coord.train(&mut pool, comp, &cfg, None);
+    let mut engine = RoundEngine::new(comp);
+    let res = coord.train(&mut pool, &mut engine, &cfg, None);
     pool.shutdown();
     let first = res.records[..3].iter().map(|r| r.train_loss).sum::<f64>() / 3.0;
     let lastn = &res.records[res.records.len() - 3..];
@@ -83,8 +84,7 @@ fn classifier_learns_with_identity_sgd() {
     if !artifacts_ready() {
         return;
     }
-    let mut comp = IdentitySgd::allreduce();
-    let (first, last, _) = train_classifier(&mut comp, 2, 25);
+    let (first, last, _) = train_classifier(Box::new(IdentitySgd::allreduce()), 2, 25);
     assert!(last < first - 0.3, "loss {first:.3} -> {last:.3}");
 }
 
@@ -93,14 +93,14 @@ fn classifier_learns_with_intsgd_int8() {
     if !artifacts_ready() {
         return;
     }
-    let mut comp = IntSgd::new(
+    let comp = Box::new(IntSgd::new(
         Rounding::Stochastic,
         WireInt::Int8,
         Box::new(MovingAverageRule::default_paper()),
         2,
         7,
-    );
-    let (first, last, recs) = train_classifier(&mut comp, 2, 25);
+    ));
+    let (first, last, recs) = train_classifier(comp, 2, 25);
     assert!(last < first - 0.3, "loss {first:.3} -> {last:.3}");
     // int8 wire accounting: 1 byte/coordinate after the exact first round
     let d = recs[1].wire_bytes_per_worker;
@@ -114,16 +114,15 @@ fn intsgd_tracks_sgd_loss_closely() {
     if !artifacts_ready() {
         return;
     }
-    let mut sgd = IdentitySgd::allreduce();
-    let (_, sgd_last, _) = train_classifier(&mut sgd, 2, 30);
-    let mut int8 = IntSgd::new(
+    let (_, sgd_last, _) = train_classifier(Box::new(IdentitySgd::allreduce()), 2, 30);
+    let int8 = Box::new(IntSgd::new(
         Rounding::Stochastic,
         WireInt::Int8,
         Box::new(MovingAverageRule::default_paper()),
         2,
         7,
-    );
-    let (_, int_last, _) = train_classifier(&mut int8, 2, 30);
+    ));
+    let (_, int_last, _) = train_classifier(int8, 2, 30);
     // the paper's Fig. 1: IntSGD matches full precision
     assert!(
         (int_last - sgd_last).abs() < 0.35,
@@ -136,8 +135,7 @@ fn heuristic_int8_loses_small_gradients() {
     if !artifacts_ready() {
         return;
     }
-    let mut h8 = HeuristicIntSgd::new(8);
-    let (first, last, _) = train_classifier(&mut h8, 2, 25);
+    let (first, last, _) = train_classifier(Box::new(HeuristicIntSgd::new(8)), 2, 25);
     // it still moves, but the quantization floor is visible in the rate;
     // this asserts the run completes and records the coarse alpha
     assert!(last <= first + 0.1, "diverged: {first} -> {last}");
@@ -179,13 +177,13 @@ fn lm_learns_through_pjrt() {
     let init: Vec<f32> = init_params(&meta.params, 3).concat();
     let block_dims: Vec<usize> = meta.params.iter().map(|p| p.numel()).collect();
     let mut coord = Coordinator::new(init, block_dims, Network::paper_cluster());
-    let mut comp = IntSgd::new(
+    let mut engine = RoundEngine::new(Box::new(IntSgd::new(
         Rounding::Stochastic,
         WireInt::Int8,
         Box::new(MovingAverageRule::default_paper()),
         n,
         5,
-    );
+    )));
     let cfg = TrainConfig {
         rounds: 200,
         schedule: LrSchedule::constant(1.25),
@@ -193,7 +191,7 @@ fn lm_learns_through_pjrt() {
         weight_decay: 0.0,
         eval_every: 0,
     };
-    let res = coord.train(&mut pool, &mut comp, &cfg, None);
+    let res = coord.train(&mut pool, &mut engine, &cfg, None);
     pool.shutdown();
     let first = res.records[0].train_loss;
     let last = res.records.last().unwrap().train_loss;

@@ -1,0 +1,213 @@
+//! Minimal in-tree stand-in for the `xla` (xla_extension 0.5.x) bindings.
+//!
+//! The offline build environment carries no PJRT runtime, but the L3
+//! coordinator only touches a thin slice of the bindings. This crate
+//! implements that slice with the same API surface:
+//!
+//! - [`Literal`] is REAL: host-side tensor plumbing (`vec1`, `reshape`,
+//!   `to_vec`, `get_first_element`, `element_count`) works exactly, so
+//!   parameter splitting, batch construction, and their tests run.
+//! - Everything that would touch a PJRT device ([`PjRtClient::cpu`],
+//!   `compile`, `execute`) returns a descriptive [`Error`]. Callers
+//!   already treat a failed `Runtime::open` as "artifacts unavailable"
+//!   and skip, so the artifact-dependent tests degrade gracefully.
+//!
+//! To run the on-device path, point the workspace's `xla` dependency at
+//! the real xla_extension bindings — no source change needed.
+
+use std::fmt;
+
+/// Binding-level error (mirrors xla_extension's stringly errors).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} requires the PJRT runtime, which this build stubs out \
+         (in-tree `xla` stand-in; point the workspace dependency at \
+         xla_extension to enable device execution)"
+    ))
+}
+
+/// Element storage for host literals.
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Element types the repo moves across the boundary.
+pub trait NativeType: Copy + 'static {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn slice(d: &Data) -> Result<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<f32>) -> Data {
+        Data::F32(v)
+    }
+    fn slice(d: &Data) -> Result<&[f32]> {
+        match d {
+            Data::F32(v) => Ok(v),
+            _ => Err(Error::new("literal element type is not f32")),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<i32>) -> Data {
+        Data::I32(v)
+    }
+    fn slice(d: &Data) -> Result<&[i32]> {
+        match d {
+            Data::I32(v) => Ok(v),
+            _ => Err(Error::new("literal element type is not i32")),
+        }
+    }
+}
+
+/// Host-side tensor: storage + dims. Fully functional.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { data: T::wrap(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = dims.iter().product();
+        if numel as usize != self.element_count() {
+            return Err(Error::new(format!(
+                "reshape to {dims:?} mismatches {} elements",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(T::slice(&self.data)?.to_vec())
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::slice(&self.data)?
+            .first()
+            .copied()
+            .ok_or_else(|| Error::new("empty literal"))
+    }
+
+    /// Decompose a tuple literal. Only device executions produce tuples,
+    /// and the stub cannot execute — unreachable in practice.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module handle (opaque in the stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Computation handle (opaque in the stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle produced by executions.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn literal_type_checks() {
+        let l = Literal::vec1(&[1i32, 2]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn device_paths_error_descriptively() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("PJRT"));
+    }
+}
