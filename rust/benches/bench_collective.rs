@@ -1,10 +1,12 @@
 //! Collective data-plane benchmarks: ring all-reduce (f32), exact integer
-//! all-reduce (i64) and the INA switch pipeline across message sizes.
+//! all-reduce (widened i64 vs typed wire lanes) and the INA switch
+//! pipeline across message sizes.
 
 use std::time::Instant;
 
-use intsgd::collective::{allreduce_i64, ring_allreduce_f32, InaSwitch};
+use intsgd::collective::{allreduce_i64, allreduce_intvec, ring_allreduce_f32, InaSwitch};
 use intsgd::compress::intsgd::WireInt;
+use intsgd::compress::intvec::{IntVec, Lanes};
 use intsgd::util::stats::median;
 use intsgd::util::Rng;
 
@@ -34,6 +36,16 @@ fn main() {
         bench(&format!("allreduce_i64      d=2^{}", d.trailing_zeros()), 5, || {
             let t = Instant::now();
             allreduce_i64(&views, &mut out);
+            std::hint::black_box(&out);
+            t.elapsed().as_secs_f64()
+        });
+        // same values stored at wire width: an eighth of the read traffic
+        let i8s: Vec<IntVec> =
+            i64s.iter().map(|v| IntVec::from_i64(v, Lanes::I8)).collect();
+        let i8_views: Vec<&IntVec> = i8s.iter().collect();
+        bench(&format!("allreduce_int8lane d=2^{}", d.trailing_zeros()), 5, || {
+            let t = Instant::now();
+            allreduce_intvec(&i8_views, &mut out);
             std::hint::black_box(&out);
             t.elapsed().as_secs_f64()
         });

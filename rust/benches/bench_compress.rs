@@ -1,15 +1,26 @@
 //! Compression hot-path microbenchmarks (the §Perf L3 instrument).
 //!
-//! Part 1 measures per-round encode+reduce+decode wall time of every
-//! compressor at the classifier gradient size (d = 820,874), n = 16
-//! workers — the quantity behind the "Computation Overhead" column of
-//! Tables 2-3. Part 2 is the parallel-round engine measurement: IntSGD at
-//! d = 2^20, n = 4, sequential reference vs encode-on-worker-threads,
-//! reporting the wallclock speedup (the refactor's acceptance number).
+//! Part 1 measures per-round wall time AND the per-phase breakdown
+//! (encode / reduce / decode, from `RoundResult`) of every compressor at
+//! the classifier gradient size, n = 16 workers — the quantity behind the
+//! "Computation Overhead" column of Tables 2-3. Part 2 pits the typed
+//! zero-allocation hot path against a widened-`i64` baseline that
+//! reproduces the pre-typed-buffer data layout (IntSGD int8, d = 2^20,
+//! n = 16) — the acceptance measurement of the typed-buffer refactor.
+//! Part 3 is the parallel-round engine measurement (sequential reference
+//! vs encode-on-worker-threads + chunked reduce).
+//!
+//! Every number is also written to `BENCH_compress.json` (machine
+//! readable, schema documented in DESIGN.md §5) so future PRs have a perf
+//! trajectory to compare against. Set `BENCH_SMOKE=1` for a seconds-long
+//! CI smoke run (tiny d, 1 iteration) that only keeps the targets honest.
+//!
 //! Custom harness: criterion is not in the offline vendor set.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
+use intsgd::collective::allreduce_i64;
 use intsgd::compress::intsgd::{IntSgd, Rounding, WireInt};
 use intsgd::compress::powersgd::BlockShape;
 use intsgd::compress::{
@@ -17,40 +28,96 @@ use intsgd::compress::{
     RoundEngine, SignSgd, TopK,
 };
 use intsgd::coordinator::{BlockInfo, RoundCtx, WorkerPool};
+use intsgd::netsim::Network;
 use intsgd::scaling::MovingAverageRule;
+use intsgd::util::json::{self, Json};
 use intsgd::util::stats::median;
 use intsgd::util::Rng;
 
-fn bench<F: FnMut() -> f64>(name: &str, iters: usize, mut f: F) -> f64 {
-    // warmup
-    f();
-    let mut samples = Vec::with_capacity(iters);
-    for _ in 0..iters {
-        samples.push(f());
-    }
-    let med = median(&samples);
-    println!(
-        "{name:<28} median {:>9.3} ms  min {:>9.3} ms  ({} iters)",
-        med * 1e3,
-        samples.iter().cloned().fold(f64::INFINITY, f64::min) * 1e3,
-        iters
-    );
-    med
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
 }
 
-fn zoo_rounds() {
-    // classifier layout: 3 weight matrices + 3 biases
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+/// Medians of one benched round configuration, milliseconds.
+#[derive(Clone, Copy, Default)]
+struct Phases {
+    wall: f64,
+    encode: f64,
+    reduce: f64,
+    decode: f64,
+}
+
+impl Phases {
+    fn json(&self) -> Json {
+        obj(vec![
+            ("wall_ms", num(self.wall)),
+            ("encode_ms", num(self.encode)),
+            ("reduce_ms", num(self.reduce)),
+            ("decode_ms", num(self.decode)),
+        ])
+    }
+}
+
+fn print_phases(name: &str, p: &Phases, iters: usize) {
+    println!(
+        "{name:<28} wall {:>9.3} ms  encode {:>9.3} ms  reduce {:>9.3} ms  \
+         decode {:>9.3} ms  ({iters} iters)",
+        p.wall, p.encode, p.reduce, p.decode
+    );
+}
+
+/// Run `iters` timed engine rounds (after one warmup) and return the
+/// per-phase medians in milliseconds.
+fn bench_rounds<F>(iters: usize, mut round: F) -> Phases
+where
+    F: FnMut() -> (f64, f64, f64, f64), // wall, encode, reduce, decode (s)
+{
+    round(); // warmup
+    let mut wall = Vec::with_capacity(iters);
+    let mut enc = Vec::with_capacity(iters);
+    let mut red = Vec::with_capacity(iters);
+    let mut dec = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let (w, e, r, d) = round();
+        wall.push(w);
+        enc.push(e);
+        red.push(r);
+        dec.push(d);
+    }
+    Phases {
+        wall: median(&wall) * 1e3,
+        encode: median(&enc) * 1e3,
+        reduce: median(&red) * 1e3,
+        decode: median(&dec) * 1e3,
+    }
+}
+
+fn zoo_rounds(iters: usize, shrink: usize) -> Json {
+    // classifier layout: 3 weight matrices + 3 biases (shrunk in smoke)
     let layout: Vec<Vec<usize>> = vec![
-        vec![3072, 256],
-        vec![256],
-        vec![256, 128],
-        vec![128],
-        vec![128, 10],
+        vec![3072 / shrink, 256 / shrink.min(16)],
+        vec![256 / shrink.min(16)],
+        vec![256 / shrink.min(16), 128 / shrink.min(16)],
+        vec![128 / shrink.min(16)],
+        vec![128 / shrink.min(16), 10],
         vec![10],
     ];
     let numels: Vec<usize> = layout.iter().map(|s| s.iter().product()).collect();
     let d: usize = numels.iter().sum();
     let n = 16;
+    let net = Network::paper_cluster();
     let mut rng = Rng::new(0);
     let grads: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 0.05)).collect();
     let ctx = RoundCtx {
@@ -67,7 +134,7 @@ fn zoo_rounds() {
             })
             .collect(),
     };
-    println!("compression round: d = {d}, n = {n} (per-round wall time, sequential)\n");
+    println!("compression round: d = {d}, n = {n} (per-phase medians, sequential)\n");
 
     let mk_int = |r, w| {
         IntSgd::new(r, w, Box::new(MovingAverageRule::default_paper()), n, 1)
@@ -92,22 +159,155 @@ fn zoo_rounds() {
         ("ef_signsgd", Box::new(SignSgd::new(n))),
         ("sgd_fp32_ring", Box::new(IdentitySgd::allreduce())),
     ];
+    let mut rows = Vec::new();
     for (name, comp) in algos {
         let mut engine = RoundEngine::new(comp);
-        bench(name, 5, || {
+        let mut comm_model = 0.0;
+        let phases = bench_rounds(iters, || {
             let t = Instant::now();
             let r = engine.round_sequential(&grads, &ctx);
+            let wall = t.elapsed().as_secs_f64();
             std::hint::black_box(&r.gtilde);
-            t.elapsed().as_secs_f64()
+            let out = (wall, r.encode_seconds, r.reduce_seconds, r.decode_seconds);
+            comm_model = net.round_breakdown(&r, n).comm_model;
+            engine.reclaim(r);
+            out
         });
+        print_phases(name, &phases, iters);
+        let mut row = phases.json();
+        if let Json::Obj(m) = &mut row {
+            m.insert("name".into(), Json::Str(name.into()));
+            m.insert("comm_model_ms".into(), num(comm_model * 1e3));
+        }
+        rows.push(row);
     }
+    obj(vec![
+        ("d", num(d as f64)),
+        ("n", num(n as f64)),
+        ("algos", Json::Arr(rows)),
+    ])
 }
 
-/// The refactor's acceptance measurement: one IntSGD round at d = 2^20
-/// with n = 4 workers, sequential (leader encodes all ranks) vs parallel
-/// (each rank encodes on its worker thread).
-fn parallel_vs_sequential() {
-    let d = 1 << 20;
+/// The typed-buffer acceptance measurement: IntSGD int8 at d = 2^20,
+/// n = 16, typed fused hot path (sequential and pool-parallel) vs a
+/// widened-i64 baseline reproducing the pre-typed data layout (i64
+/// message vectors, per-round view slices, i64 reduce reads).
+fn hotpath(iters: usize, d: usize) -> Json {
+    let n = 16;
+    let mut rng = Rng::new(7);
+    let grads: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 0.05)).collect();
+    let ctx = RoundCtx {
+        round: 2,
+        n,
+        d,
+        lr: 0.1,
+        step_norm_sq: 1e-4,
+        blocks: vec![BlockInfo { dim: d, step_norm_sq: 1e-4 }],
+    };
+    let mk = || {
+        Box::new(IntSgd::new(
+            Rounding::Stochastic,
+            WireInt::Int8,
+            Box::new(MovingAverageRule::default_paper()),
+            n,
+            1,
+        )) as Box<dyn PhasedCompressor>
+    };
+    println!("\nintsgd int8 hot path: d = {d}, n = {n}\n");
+
+    // --- typed fused path, sequential engine ------------------------------
+    let mut seq = RoundEngine::new(mk());
+    let mut alpha = 0.0f64;
+    let typed_seq = bench_rounds(iters, || {
+        let t = Instant::now();
+        let r = seq.round_sequential(&grads, &ctx);
+        let wall = t.elapsed().as_secs_f64();
+        std::hint::black_box(&r.gtilde);
+        alpha = r.alpha;
+        let out = (wall, r.encode_seconds, r.reduce_seconds, r.decode_seconds);
+        seq.reclaim(r);
+        out
+    });
+    print_phases("typed fused (seq)", &typed_seq, iters);
+
+    // --- typed fused path, worker-pool engine -----------------------------
+    let mut par = RoundEngine::new(mk());
+    let mut pool = WorkerPool::for_encode(n);
+    let typed_par = bench_rounds(iters, || {
+        let t = Instant::now();
+        let r = par.round_parallel(&mut pool, &grads, &ctx);
+        let wall = t.elapsed().as_secs_f64();
+        std::hint::black_box(&r.gtilde);
+        let out = (wall, r.encode_seconds, r.reduce_seconds, r.decode_seconds);
+        par.reclaim(r);
+        out
+    });
+    pool.shutdown();
+    print_phases("typed fused (pool)", &typed_par, iters);
+
+    // --- widened-i64 baseline (pre-typed-buffer data layout) --------------
+    // encode: the reference i64 API (same arithmetic, 8x the lane width);
+    // reduce: per-round view vec + i64 reads; decode: identical divide.
+    let clip = i8::MAX as i64 / n as i64;
+    let mut streams: Vec<Rng> = {
+        let mut root = Rng::new(1);
+        (0..n).map(|i| root.fork(i as u64)).collect()
+    };
+    let mut msgs: Vec<Vec<i64>> = vec![Vec::new(); n];
+    let mut sum: Vec<i64> = Vec::new();
+    let mut gtilde: Vec<f32> = Vec::new();
+    let baseline = bench_rounds(iters, || {
+        let t0 = Instant::now();
+        for (rank, grad) in grads.iter().enumerate() {
+            IntSgd::encode(
+                Rounding::Stochastic,
+                grad,
+                alpha,
+                clip,
+                &mut streams[rank],
+                &mut msgs[rank],
+            );
+        }
+        let t1 = Instant::now();
+        let views: Vec<&[i64]> = msgs.iter().map(|m| m.as_slice()).collect();
+        allreduce_i64(&views, &mut sum);
+        let t2 = Instant::now();
+        let inv = 1.0 / (n as f64 * alpha);
+        gtilde.clear();
+        gtilde.extend(sum.iter().map(|&s| (s as f64 * inv) as f32));
+        std::hint::black_box(&gtilde);
+        let t3 = Instant::now();
+        (
+            (t3 - t0).as_secs_f64(),
+            // per-worker share, mirroring the sequential engine's account
+            (t1 - t0).as_secs_f64() / n as f64,
+            (t2 - t1).as_secs_f64(),
+            (t3 - t2).as_secs_f64(),
+        )
+    });
+    print_phases("widened i64 baseline", &baseline, iters);
+
+    let speedup_seq = baseline.wall / typed_seq.wall.max(1e-9);
+    let speedup_par = baseline.wall / typed_par.wall.max(1e-9);
+    println!(
+        "\nencode+reduce+decode speedup vs widened-i64 baseline: \
+         {speedup_seq:.2}x sequential, {speedup_par:.2}x pool-parallel"
+    );
+    obj(vec![
+        ("d", num(d as f64)),
+        ("n", num(n as f64)),
+        ("typed_sequential", typed_seq.json()),
+        ("typed_parallel", typed_par.json()),
+        ("widened_baseline", baseline.json()),
+        ("speedup_sequential", num(speedup_seq)),
+        ("speedup_parallel", num(speedup_par)),
+    ])
+}
+
+/// The parallel-round engine measurement: sequential (leader encodes all
+/// ranks) vs parallel (each rank encodes on its worker thread, integer
+/// reduce chunked across the pool) at n = 4.
+fn parallel_vs_sequential(iters: usize, d: usize) -> Json {
     let n = 4;
     let mut rng = Rng::new(7);
     let grads: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 0.05)).collect();
@@ -128,56 +328,81 @@ fn parallel_vs_sequential() {
             1,
         )) as Box<dyn PhasedCompressor>
     };
-    println!("\nparallel round engine: intsgd_random_int8, d = 2^20, n = {n}\n");
+    println!("\nparallel round engine: intsgd_random_int8, d = {d}, n = {n}\n");
 
     let mut seq = RoundEngine::new(mk());
-    let mut seq_encode_samples = Vec::new();
-    let seq_wall = bench("round sequential", 9, || {
+    let seq_phases = bench_rounds(iters, || {
         let t = Instant::now();
         let r = seq.round_sequential(&grads, &ctx);
+        let wall = t.elapsed().as_secs_f64();
         std::hint::black_box(&r.gtilde);
-        seq_encode_samples.push(r.encode_seconds); // per-worker share: total / n
-        t.elapsed().as_secs_f64()
+        let out = (wall, r.encode_seconds, r.reduce_seconds, r.decode_seconds);
+        seq.reclaim(r);
+        out
     });
+    print_phases("round sequential", &seq_phases, iters);
 
     let mut par = RoundEngine::new(mk());
     let mut pool = WorkerPool::for_encode(n);
-    let mut par_encode_samples = Vec::new();
-    let mut owned = grads.clone();
-    let par_wall = bench("round parallel (pool)", 9, || {
+    let par_phases = bench_rounds(iters, || {
         let t = Instant::now();
-        let r = par.round_parallel(&mut pool, &mut owned, &ctx);
+        let r = par.round_parallel(&mut pool, &grads, &ctx);
+        let wall = t.elapsed().as_secs_f64();
         std::hint::black_box(&r.gtilde);
-        par_encode_samples.push(r.encode_seconds); // straggler max across ranks
-        t.elapsed().as_secs_f64()
+        let out = (wall, r.encode_seconds, r.reduce_seconds, r.decode_seconds);
+        par.reclaim(r);
+        out
     });
     pool.shutdown();
-    // bench() runs one untimed warmup call whose encode sample also lands
-    // in the vec; drop it so the encode medians cover the same iterations
-    // as the wall-clock medians.
-    let seq_encode = median(&seq_encode_samples[1..]);
-    let par_encode = median(&par_encode_samples[1..]);
+    print_phases("round parallel (pool)", &par_phases, iters);
 
     // the sequential path serializes n encodes on the leader: its encode
     // wallclock is n * (per-worker share); the parallel path pays the
     // straggler max once.
-    let seq_encode_wall = seq_encode * n as f64;
+    let seq_encode_wall = seq_phases.encode * n as f64;
     println!(
         "\nencode wallclock: sequential {:.3} ms (n x per-worker share) vs \
          parallel straggler {:.3} ms  => {:.2}x",
-        seq_encode_wall * 1e3,
-        par_encode * 1e3,
-        seq_encode_wall / par_encode.max(1e-12)
+        seq_encode_wall,
+        par_phases.encode,
+        seq_encode_wall / par_phases.encode.max(1e-9)
     );
     println!(
         "round wallclock:  sequential {:.3} ms vs parallel {:.3} ms  => {:.2}x",
-        seq_wall * 1e3,
-        par_wall * 1e3,
-        seq_wall / par_wall.max(1e-12)
+        seq_phases.wall,
+        par_phases.wall,
+        seq_phases.wall / par_phases.wall.max(1e-9)
     );
+    obj(vec![
+        ("d", num(d as f64)),
+        ("n", num(n as f64)),
+        ("sequential", seq_phases.json()),
+        ("parallel", par_phases.json()),
+        ("wall_speedup", num(seq_phases.wall / par_phases.wall.max(1e-9))),
+    ])
 }
 
 fn main() {
-    zoo_rounds();
-    parallel_vs_sequential();
+    let smoke = smoke();
+    let (iters, shrink, d_hot) = if smoke {
+        (1, 16, 1 << 12)
+    } else {
+        (9, 1, 1 << 20)
+    };
+    if smoke {
+        println!("BENCH_SMOKE: tiny sizes, 1 iteration (CI rot check only)\n");
+    }
+    let zoo = zoo_rounds(if smoke { 1 } else { 5 }, shrink);
+    let hot = hotpath(iters, d_hot);
+    let par = parallel_vs_sequential(iters, d_hot);
+    let report = obj(vec![
+        ("bench", Json::Str("bench_compress".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("zoo", zoo),
+        ("intsgd_int8_hotpath", hot),
+        ("parallel_engine", par),
+    ]);
+    let path = "BENCH_compress.json";
+    std::fs::write(path, json::to_string(&report)).expect("write bench report");
+    println!("\nwrote {path}");
 }

@@ -14,6 +14,8 @@ pub mod switch;
 
 pub use switch::InaSwitch;
 
+use crate::compress::intvec::IntVec;
+
 /// Exact integer all-reduce: out[j] = sum_i msgs[i][j], accumulated in i64
 /// (never overflows for the wire widths we use: |local| <= 2^31 and n <=
 /// a few thousand).
@@ -29,6 +31,36 @@ pub fn allreduce_i64(msgs: &[&[i64]], out: &mut Vec<i64>) {
             *o += x;
         }
     }
+}
+
+/// Exact integer all-reduce over typed wire buffers: each message's lanes
+/// are read at wire width and widened once into the i64 accumulator —
+/// an i8 message costs an eighth of the memory traffic of the widened
+/// fold above (`benches/bench_collective.rs` measures the difference).
+///
+/// This is THE serial rank-order fold body: the engine's `SerialReducer`
+/// delegates here, so the benchmark and the production reduce cannot
+/// drift apart. Folds in rank order (the parity guarantee); reuses
+/// `out`'s capacity (the zero-allocation guarantee).
+pub fn allreduce_intvec_iter<'a, I>(msgs: I, out: &mut Vec<i64>)
+where
+    I: IntoIterator<Item = &'a IntVec>,
+{
+    let mut iter = msgs.into_iter();
+    let first = iter.next().expect("at least one message");
+    let d = first.len();
+    out.clear();
+    out.resize(d, 0);
+    first.add_range_to(0, out);
+    for m in iter {
+        assert_eq!(m.len(), d, "mismatched message lengths");
+        m.add_range_to(0, out);
+    }
+}
+
+/// Slice-of-views wrapper around [`allreduce_intvec_iter`].
+pub fn allreduce_intvec(msgs: &[&IntVec], out: &mut Vec<i64>) {
+    allreduce_intvec_iter(msgs.iter().copied(), out);
 }
 
 /// Ring all-reduce over f32 vectors, implemented as the real algorithm:
@@ -94,6 +126,22 @@ mod tests {
         let mut out = Vec::new();
         allreduce_i64(&[&a, &b], &mut out);
         assert_eq!(out, vec![11, 18, -27]);
+    }
+
+    #[test]
+    fn allreduce_intvec_matches_widened_fold() {
+        use crate::compress::intvec::Lanes;
+        let vals_a = vec![1i64, -2, 3, 100];
+        let vals_b = vec![10i64, 20, -30, -100];
+        for lanes in [Lanes::I8, Lanes::I32, Lanes::I64] {
+            let a = IntVec::from_i64(&vals_a, lanes);
+            let b = IntVec::from_i64(&vals_b, lanes);
+            let mut typed = Vec::new();
+            allreduce_intvec(&[&a, &b], &mut typed);
+            let mut widened = Vec::new();
+            allreduce_i64(&[&vals_a, &vals_b], &mut widened);
+            assert_eq!(typed, widened, "{lanes:?}");
+        }
     }
 
     #[test]

@@ -11,8 +11,14 @@
 //! 2. The accumulators are fixed-width and *saturate*; a bad scaling factor
 //!    overflows them, which is exactly the failure mode IntSGD's clipping
 //!    and adaptive alpha prevent (paper §1, §5.2).
+//!
+//! Saturation makes the accumulation order-sensitive, so unlike the exact
+//! integer all-reduce this fold is never parallelized: every slot folds
+//! the workers in rank order on the caller thread.
 
+use crate::compress::engine::RankMessages;
 use crate::compress::intsgd::WireInt;
+use crate::compress::intvec::IntVec;
 
 /// Pipeline model of the switch data plane.
 #[derive(Clone, Debug)]
@@ -38,17 +44,22 @@ pub struct InaStats {
 }
 
 impl InaSwitch {
-    /// Aggregate per-worker integer vectors with saturating fixed-width
-    /// accumulators, writing the result into `out`.
-    pub fn aggregate_into(
+    /// Core fold: slot j accumulates `get(rank, j)` over ranks in order,
+    /// saturating at the wire width as it goes. Accessor-based so callers
+    /// can aggregate plain slices or typed wire buffers without
+    /// materializing `&[i64]` views.
+    pub fn aggregate_with<F>(
         &self,
-        msgs: &[&[i64]],
+        n: usize,
+        d: usize,
+        get: F,
         wire: WireInt,
         out: &mut Vec<i64>,
-    ) -> InaStats {
-        let n = msgs.len();
+    ) -> InaStats
+    where
+        F: Fn(usize, usize) -> i64,
+    {
         assert!(n > 0);
-        let d = msgs[0].len();
         out.clear();
         out.resize(d, 0);
         let cap = wire.max_aggregate();
@@ -61,9 +72,8 @@ impl InaSwitch {
             for j in lo..hi {
                 let mut acc: i64 = 0;
                 let mut saturated = false;
-                for m in msgs {
-                    debug_assert_eq!(m.len(), d);
-                    acc += m[j];
+                for rank in 0..n {
+                    acc += get(rank, j);
                     // fixed-width accumulator saturates as it goes
                     if acc > cap {
                         acc = cap;
@@ -81,6 +91,79 @@ impl InaSwitch {
             lo = hi;
         }
         stats
+    }
+
+    /// Aggregate per-worker integer vectors with saturating fixed-width
+    /// accumulators, writing the result into `out`.
+    pub fn aggregate_into(
+        &self,
+        msgs: &[&[i64]],
+        wire: WireInt,
+        out: &mut Vec<i64>,
+    ) -> InaStats {
+        let n = msgs.len();
+        assert!(n > 0);
+        let d = msgs[0].len();
+        for m in msgs {
+            assert_eq!(m.len(), d, "mismatched message lengths");
+        }
+        self.aggregate_with(n, d, |rank, j| msgs[rank][j], wire, out)
+    }
+
+    /// Aggregate the ranks' typed integer messages (the engine's reduce
+    /// path when `IntSgd::use_switch` is set). The per-rank payload views
+    /// are hoisted to typed slices once, so the per-slot inner loop is a
+    /// plain indexed read — no virtual call or enum dispatch per element.
+    pub fn aggregate_messages(
+        &self,
+        msgs: &RankMessages,
+        wire: WireInt,
+        out: &mut Vec<i64>,
+    ) -> InaStats {
+        let n = msgs.len();
+        assert!(n > 0);
+        let first = msgs.get(0).as_ints();
+        let d = first.len();
+        for m in msgs.iter() {
+            assert_eq!(m.as_ints().len(), d, "mismatched message lengths");
+            assert_eq!(
+                m.as_ints().lanes(),
+                first.lanes(),
+                "mixed lane widths in one pass"
+            );
+        }
+        match first {
+            IntVec::I8(_) => {
+                let views: Vec<&[i8]> = msgs
+                    .iter()
+                    .map(|m| match m.as_ints() {
+                        IntVec::I8(v) => v.as_slice(),
+                        _ => unreachable!("lanes checked above"),
+                    })
+                    .collect();
+                self.aggregate_with(n, d, |rank, j| views[rank][j] as i64, wire, out)
+            }
+            IntVec::I32(_) => {
+                let views: Vec<&[i32]> = msgs
+                    .iter()
+                    .map(|m| match m.as_ints() {
+                        IntVec::I32(v) => v.as_slice(),
+                        _ => unreachable!("lanes checked above"),
+                    })
+                    .collect();
+                self.aggregate_with(n, d, |rank, j| views[rank][j] as i64, wire, out)
+            }
+            IntVec::I64(_) => {
+                let views: Vec<&[i64]> = msgs
+                    .iter()
+                    .map(|m| match m.as_ints() {
+                        IntVec::I64(v) => v.as_slice(),
+                        _ => unreachable!("lanes checked above"),
+                    })
+                    .collect();
+                self.aggregate_with(n, d, |rank, j| views[rank][j], wire, out)
+            }
+        }
     }
 
     /// Convenience wrapper returning the aggregate.

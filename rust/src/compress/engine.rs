@@ -6,39 +6,53 @@
 //! real cluster, while the reduction is the collective's job and the decode
 //! is cheap leader/edge work. This module makes that split explicit:
 //!
-//! - [`RankEncoder`] — one rank's `Send` encode state (its RNG stream,
+//! - [`RankEncoder`] — one rank's encode state (its RNG stream,
 //!   error-feedback memory, PowerSGD scratch). `encode` is pure with
-//!   respect to the other ranks, so encoders can hop to worker threads.
+//!   respect to the other ranks, so encoders can hop to worker threads
+//!   (`Send`), and their finished messages can be read by several reduce
+//!   workers at once (`Sync`).
 //! - [`PhasedCompressor`] — the leader half: it plans each pass
 //!   ([`PassPlan`], shared read-only with all ranks), folds the rank
 //!   messages ([`PhasedCompressor::reduce`], which may request further
 //!   passes — PowerSGD needs three), and decodes the final estimate.
-//! - [`RoundEngine`] — the driver. [`RoundEngine::round_parallel`] ships
-//!   each rank's encoder to its `WorkerPool` thread, so the measured
-//!   encode cost is the true straggler max and scales with cores;
+//! - [`RoundEngine`] — the driver. [`RoundEngine::round_parallel`] runs
+//!   each rank's encode inside its `WorkerPool` thread and hands integer
+//!   reductions to the pool's coordinate-chunked fold;
 //!   [`RoundEngine::round_sequential`] runs the same phases inline on the
 //!   caller thread (the parity reference, also what the old
 //!   `DistributedCompressor::round` shape adapts to).
 //!
-//! Per-block scales (paper Alg. 2) thread through the plan: `RoundCtx.
-//! blocks` becomes [`BlockSpan`]s + per-block alphas inside
-//! `PassPlan::IntBlocks`, and the decode divides block-wise.
+//! **Zero-allocation hot path.** Three pieces keep steady-state rounds off
+//! the allocator (pinned by `tests/zero_alloc.rs`):
 //!
-//! Both drivers produce bit-identical results: encoders consume only their
-//! own state and the shared plan, and reduction folds messages in rank
-//! order (`tests/engine_parity.rs` pins this for the whole zoo).
+//! - integer payloads live in typed, reused [`IntVec`] buffers
+//!   (`compress::intvec`) instead of fresh `Vec<i64>`s;
+//! - pass plans share their geometry (`Arc<Vec<BlockSpan>>`,
+//!   `Arc<Vec<f64>>`) with the leader state, rebuilt in place via
+//!   `Arc::make_mut` once the previous round's plan is gone;
+//! - [`RoundArena`] recycles the round outputs (`gtilde`, the comm
+//!   schedule) that `RoundResult` moves out to the caller — callers hand
+//!   them back via [`RoundEngine::reclaim`].
+//!
+//! Reduction order: [`Reducer::sum_ints`] folds every coordinate over the
+//! ranks in rank order, whether it runs serially ([`SerialReducer`]) or
+//! chunked across the worker pool ([`PoolReducer`]) — integer addition is
+//! exactly associative, so the two are bit-identical
+//! (`tests/engine_parity.rs` pins this for the whole zoo; fp32 folds keep
+//! their fixed pairwise order and never go through a parallel reducer).
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::worker::{EncodeTask, WorkerPool};
+use crate::coordinator::worker::WorkerPool;
 use crate::coordinator::RoundCtx;
 
 use super::intsgd::Rounding;
+use super::intvec::{IntVec, Lanes};
 use super::natsgd::NatMsg;
 use super::qsgd::QsgdBucket;
 use super::signsgd::SignMsg;
-use super::{DistributedCompressor, RoundResult};
+use super::{CommOp, DistributedCompressor, RoundResult};
 
 /// One contiguous parameter block of the flattened gradient.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -53,24 +67,33 @@ impl BlockSpan {
     }
 }
 
-/// Block geometry for a round: the ctx blocks when given, otherwise one
-/// span covering the whole gradient.
-pub fn spans_from_ctx(ctx: &RoundCtx) -> Vec<BlockSpan> {
+/// Block geometry for a round, written into a reused buffer: the ctx
+/// blocks when given, otherwise one span covering the whole gradient.
+pub fn spans_from_ctx_into(ctx: &RoundCtx, out: &mut Vec<BlockSpan>) {
+    out.clear();
     if ctx.blocks.is_empty() {
-        return vec![BlockSpan { offset: 0, dim: ctx.d }];
+        out.push(BlockSpan { offset: 0, dim: ctx.d });
+        return;
     }
-    let mut out = Vec::with_capacity(ctx.blocks.len());
     let mut offset = 0;
     for b in &ctx.blocks {
         out.push(BlockSpan { offset, dim: b.dim });
         offset += b.dim;
     }
     assert_eq!(offset, ctx.d, "blocks must tile the gradient");
+}
+
+/// Allocating convenience wrapper around [`spans_from_ctx_into`].
+pub fn spans_from_ctx(ctx: &RoundCtx) -> Vec<BlockSpan> {
+    let mut out = Vec::with_capacity(ctx.blocks.len().max(1));
+    spans_from_ctx_into(ctx, &mut out);
     out
 }
 
 /// The immutable instruction the leader broadcasts for one encode pass.
-/// Shared read-only (`Arc`) with every rank's encoder.
+/// Shared read-only with every rank's encoder; block geometry and alphas
+/// are `Arc`-shared with the leader state, so a plan costs pointer copies,
+/// not per-round buffer clones.
 #[derive(Clone, Debug)]
 pub enum PassPlan {
     /// Ship the raw fp32 gradient (identity SGD; IntSGD's exact round 0).
@@ -78,19 +101,25 @@ pub enum PassPlan {
     /// Nothing shared is needed (EF-sign, top-k, natural compression).
     Plain,
     /// IntSGD: per-block integer rounding at the given alphas, clipped so
-    /// the aggregate provably fits the wire type.
+    /// the aggregate provably fits the wire type. `lanes` is the storage
+    /// width implied by the clip — every clipped value fits it.
     IntBlocks {
         rounding: Rounding,
-        blocks: Vec<BlockSpan>,
-        alphas: Vec<f64>,
+        blocks: Arc<Vec<BlockSpan>>,
+        alphas: Arc<Vec<f64>>,
         clip: i64,
+        lanes: Lanes,
     },
     /// Heuristic IntSGD pass 1: report per-block max |g| for profiling.
-    Profile { blocks: Vec<BlockSpan> },
+    Profile { blocks: Arc<Vec<BlockSpan>> },
     /// Heuristic IntSGD pass 2: per-block f64 scale-and-round (the
-    /// SwitchML rule has no clipping; the profiled alpha prevents
-    /// overflow by construction).
-    ScaledRound { blocks: Vec<BlockSpan>, alphas: Vec<f64> },
+    /// SwitchML rule has no clipping; the profiled alpha bounds every
+    /// value by construction, which is what sizes `lanes`).
+    ScaledRound {
+        blocks: Arc<Vec<BlockSpan>>,
+        alphas: Arc<Vec<f64>>,
+        lanes: Lanes,
+    },
     /// QSGD: stochastic level quantization per bucket.
     Buckets { spans: Vec<BlockSpan>, levels: u16 },
     /// PowerSGD pass 1: P_i = M_i Q per matrix block (+ raw vector
@@ -110,7 +139,7 @@ pub enum PassPlan {
 pub enum Message {
     Empty,
     Dense(Vec<f32>),
-    Ints(Vec<i64>),
+    Ints(IntVec),
     Scalars(Vec<f32>),
     Buckets(Vec<QsgdBucket>),
     Sign(SignMsg),
@@ -130,12 +159,17 @@ impl Message {
         }
     }
 
-    pub fn ints_mut(&mut self) -> &mut Vec<i64> {
+    /// Reusable integer slot at the given lane width, emptied and ready
+    /// to fill (the buffer survives across rounds at a fixed width).
+    pub fn ints_mut(&mut self, lanes: Lanes) -> &mut IntVec {
         if !matches!(self, Message::Ints(_)) {
-            *self = Message::Ints(Vec::new());
+            *self = Message::Ints(IntVec::new(lanes));
         }
         match self {
-            Message::Ints(v) => v,
+            Message::Ints(v) => {
+                v.reset(lanes);
+                v
+            }
             _ => unreachable!(),
         }
     }
@@ -177,7 +211,7 @@ impl Message {
         }
     }
 
-    pub fn as_ints(&self) -> &[i64] {
+    pub fn as_ints(&self) -> &IntVec {
         match self {
             Message::Ints(v) => v,
             _ => panic!("expected integer message"),
@@ -220,15 +254,156 @@ impl Message {
     }
 }
 
-/// One rank's encode state. `Send` so the engine can ship it to the rank's
-/// worker thread and back; all buffers are owned and reused across rounds.
-pub trait RankEncoder: Send {
+/// One rank's encode state. `Send` so the engine can run it on the rank's
+/// worker thread, `Sync` so several reduce workers can read its finished
+/// message concurrently; all buffers are owned and reused across rounds.
+pub trait RankEncoder: Send + Sync {
     /// Run one encode pass over this rank's gradient. The result stays
     /// readable via [`RankEncoder::message`] until the next call.
     fn encode(&mut self, grad: &[f32], plan: &PassPlan);
 
     /// The payload produced by the last `encode` call.
     fn message(&self) -> &Message;
+}
+
+/// The n rank messages of one pass, viewed straight through the parked
+/// encoders — no per-pass `Vec<&Message>` (or `Vec<&[i64]>`) is ever
+/// materialized.
+#[derive(Clone, Copy)]
+pub struct RankMessages<'a> {
+    encs: &'a [Box<dyn RankEncoder>],
+}
+
+impl<'a> RankMessages<'a> {
+    pub fn new(encs: &'a [Box<dyn RankEncoder>]) -> Self {
+        RankMessages { encs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.encs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.encs.is_empty()
+    }
+
+    pub fn get(&self, rank: usize) -> &'a Message {
+        self.encs[rank].message()
+    }
+
+    /// Messages in rank order (Clone so multi-sweep folds can re-iterate).
+    pub fn iter(&self) -> impl Iterator<Item = &'a Message> + Clone {
+        self.encs.iter().map(|e| e.message())
+    }
+
+    /// The raw encoder slice (the pool's chunked reduce reads messages on
+    /// its worker threads through this).
+    pub fn encoders(&self) -> &'a [Box<dyn RankEncoder>] {
+        self.encs
+    }
+}
+
+/// Strategy for the integer-sum reduction. Both implementations produce
+/// the rank-order fold bit for bit: per coordinate the ranks are always
+/// added in order, and integer addition is exactly associative, so
+/// coordinate-chunking across threads cannot change a single bit.
+pub trait Reducer {
+    /// out[j] = sum over ranks of msgs[rank].ints[j], out resized to the
+    /// message length.
+    fn sum_ints(&mut self, msgs: &RankMessages, out: &mut Vec<i64>);
+}
+
+/// Rank-order fold on the calling thread (the parity reference). The fold
+/// body lives in `collective::allreduce_intvec_iter`, shared with the
+/// collective benchmarks so they measure the production kernel.
+pub struct SerialReducer;
+
+impl Reducer for SerialReducer {
+    fn sum_ints(&mut self, msgs: &RankMessages, out: &mut Vec<i64>) {
+        assert!(!msgs.is_empty(), "at least one rank message");
+        crate::collective::allreduce_intvec_iter(msgs.iter().map(|m| m.as_ints()), out);
+    }
+}
+
+/// Coordinate-chunked fold across the worker pool's threads: worker w
+/// sums all ranks (in rank order) over its contiguous coordinate chunk.
+pub struct PoolReducer<'a> {
+    pool: &'a mut WorkerPool,
+}
+
+impl<'a> PoolReducer<'a> {
+    pub fn new(pool: &'a mut WorkerPool) -> Self {
+        PoolReducer { pool }
+    }
+}
+
+impl Reducer for PoolReducer<'_> {
+    fn sum_ints(&mut self, msgs: &RankMessages, out: &mut Vec<i64>) {
+        let d = prepare_sum(msgs, out);
+        self.pool.sum_ints_round(msgs.encoders(), &mut out[..d]);
+    }
+}
+
+/// Precondition of the chunked reducer: consistent message lengths, `out`
+/// zeroed to the message length (capacity reused across rounds) before
+/// the disjoint chunks fan out.
+fn prepare_sum(msgs: &RankMessages, out: &mut Vec<i64>) -> usize {
+    assert!(!msgs.is_empty(), "at least one rank message");
+    let d = msgs.get(0).as_ints().len();
+    for m in msgs.iter() {
+        assert_eq!(m.as_ints().len(), d, "mismatched message lengths");
+    }
+    out.clear();
+    out.resize(d, 0);
+    d
+}
+
+/// Recycled round outputs. `RoundResult` moves `gtilde` and the comm
+/// schedule out to the caller each round; the arena takes them back
+/// ([`RoundArena::reclaim`]) so steady-state rounds never touch the
+/// allocator. Compressors draw their output buffers from here in `decode`.
+#[derive(Default)]
+pub struct RoundArena {
+    f32_bufs: Vec<Vec<f32>>,
+    comm_bufs: Vec<Vec<CommOp>>,
+}
+
+/// Cap on pooled buffers per kind — one round produces one of each, so
+/// anything beyond a small margin is a caller that never reclaims.
+const ARENA_POOL_CAP: usize = 8;
+
+impl RoundArena {
+    /// An empty (cleared) f32 buffer, with capacity when one was
+    /// reclaimed.
+    pub fn take_f32(&mut self) -> Vec<f32> {
+        let mut v = self.f32_bufs.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    pub fn put_f32(&mut self, v: Vec<f32>) {
+        if self.f32_bufs.len() < ARENA_POOL_CAP {
+            self.f32_bufs.push(v);
+        }
+    }
+
+    pub fn take_comm(&mut self) -> Vec<CommOp> {
+        let mut v = self.comm_bufs.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    pub fn put_comm(&mut self, v: Vec<CommOp>) {
+        if self.comm_bufs.len() < ARENA_POOL_CAP {
+            self.comm_bufs.push(v);
+        }
+    }
+
+    /// Take a finished round's buffers back for reuse.
+    pub fn reclaim(&mut self, result: RoundResult) {
+        self.put_f32(result.gtilde);
+        self.put_comm(result.comm);
+    }
 }
 
 /// What the leader does with a pass's messages.
@@ -256,14 +431,20 @@ pub trait PhasedCompressor: Send {
     /// Plan the round's first encode pass.
     fn begin(&mut self, ctx: &RoundCtx) -> PassPlan;
 
-    /// Fold the n rank messages of one pass (in rank order — this is what
-    /// makes the parallel and sequential drivers bit-identical), either
-    /// finishing the round or requesting another pass.
-    fn reduce(&mut self, msgs: &[&Message], plan: &PassPlan, ctx: &RoundCtx) -> PassOutcome;
+    /// Fold the n rank messages of one pass — integer sums through the
+    /// provided [`Reducer`], everything else in rank order on the caller
+    /// thread — either finishing the round or requesting another pass.
+    fn reduce(
+        &mut self,
+        msgs: &RankMessages,
+        plan: &PassPlan,
+        ctx: &RoundCtx,
+        red: &mut dyn Reducer,
+    ) -> PassOutcome;
 
-    /// Produce the round result from the reduced state. Timing fields are
-    /// filled in by the driver.
-    fn decode(&mut self, ctx: &RoundCtx) -> RoundResult;
+    /// Produce the round result from the reduced state, drawing output
+    /// buffers from the arena. Timing fields are filled by the driver.
+    fn decode(&mut self, ctx: &RoundCtx, arena: &mut RoundArena) -> RoundResult;
 }
 
 fn ensure_encoders(comp: &mut dyn PhasedCompressor, n: usize) {
@@ -285,37 +466,41 @@ fn ensure_encoders(comp: &mut dyn PhasedCompressor, n: usize) {
 /// shared fold for every "average the fp32 payloads" reduction (identity
 /// all-gather, IntSGD's exact round 0, PowerSGD's factor means). Folds in
 /// rank order, which the parity guarantee depends on.
-pub(crate) fn mean_dense_into(msgs: &[&Message], out: &mut Vec<f32>) {
-    let len = msgs[0].as_dense().len();
+pub(crate) fn mean_dense_into(msgs: &RankMessages, out: &mut Vec<f32>) {
+    let n = msgs.len();
+    assert!(n > 0);
+    let len = msgs.get(0).as_dense().len();
     out.clear();
     out.resize(len, 0.0);
-    for m in msgs {
+    for m in msgs.iter() {
         let v = m.as_dense();
         assert_eq!(v.len(), len, "rank messages disagree on length");
         for (o, &x) in out.iter_mut().zip(v) {
             *o += x;
         }
     }
-    let inv = 1.0 / msgs.len() as f32;
+    let inv = 1.0 / n as f32;
     for o in out.iter_mut() {
         *o *= inv;
     }
 }
 
-/// g_tilde = sum / (n * alpha_l), block by block — the Alg. 2 decode,
-/// shared by IntSGD and Heuristic IntSGD so the two cannot drift.
+/// g_tilde = sum / (n * alpha_l), block by block, into a reused buffer —
+/// the Alg. 2 decode, shared by IntSGD and Heuristic IntSGD so the two
+/// cannot drift.
 pub(crate) fn decode_block_ints(
     sum: &[i64],
     blocks: &[BlockSpan],
     alphas: &[f64],
     n: usize,
-) -> Vec<f32> {
-    let mut gtilde = Vec::with_capacity(sum.len());
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.reserve(sum.len());
     for (span, &alpha) in blocks.iter().zip(alphas) {
         let inv = 1.0 / (n as f64 * alpha);
-        gtilde.extend(sum[span.range()].iter().map(|&s| (s as f64 * inv) as f32));
+        out.extend(sum[span.range()].iter().map(|&s| (s as f64 * inv) as f32));
     }
-    gtilde
 }
 
 /// Drive one round with every phase on the caller thread — the sequential
@@ -326,11 +511,14 @@ pub(crate) fn decode_block_ints(
 /// time only for all-gather algorithms, where it IS the per-worker edge
 /// decode; for all-reduce/INA algorithms the in-process fold stands in
 /// for the network data plane, whose cost is modeled by `netsim` —
-/// timing it here would double-count against the comm model.
+/// timing it there would double-count against the comm model. The raw
+/// fold wallclock is always reported separately as
+/// `RoundResult::reduce_seconds` for the per-phase benchmarks.
 pub fn sequential_round(
     comp: &mut dyn PhasedCompressor,
     grads: &[Vec<f32>],
     ctx: &RoundCtx,
+    arena: &mut RoundArena,
 ) -> RoundResult {
     let n = grads.len();
     assert!(n > 0, "at least one rank");
@@ -339,6 +527,7 @@ pub fn sequential_round(
     let edge_decode = !comp.supports_allreduce();
     let mut plan = comp.begin(ctx);
     let mut encode_total = 0.0f64;
+    let mut reduce_total = 0.0f64;
     let mut leader_seconds = 0.0f64;
     loop {
         let mut encs = std::mem::take(comp.encoders());
@@ -352,13 +541,17 @@ pub fn sequential_round(
         if !matches!(plan, PassPlan::Dense) {
             encode_total += t0.elapsed().as_secs_f64();
         }
-        let msgs: Vec<&Message> = encs.iter().map(|e| e.message()).collect();
-        let t1 = Instant::now();
-        let outcome = comp.reduce(&msgs, &plan, ctx);
-        if edge_decode {
-            leader_seconds += t1.elapsed().as_secs_f64();
-        }
-        drop(msgs);
+        let outcome = {
+            let msgs = RankMessages::new(&encs);
+            let t1 = Instant::now();
+            let outcome = comp.reduce(&msgs, &plan, ctx, &mut SerialReducer);
+            let dt = t1.elapsed().as_secs_f64();
+            reduce_total += dt;
+            if edge_decode {
+                leader_seconds += dt;
+            }
+            outcome
+        };
         *comp.encoders() = encs;
         match outcome {
             PassOutcome::Done => break,
@@ -366,16 +559,17 @@ pub fn sequential_round(
         }
     }
     let t2 = Instant::now();
-    let mut result = comp.decode(ctx);
+    let mut result = comp.decode(ctx, arena);
     leader_seconds += t2.elapsed().as_secs_f64();
     result.encode_seconds = encode_total / n as f64;
+    result.reduce_seconds = reduce_total;
     result.decode_seconds = leader_seconds;
     result
 }
 
 /// Every phased compressor is also usable through the old call shape; the
-/// adapter runs the sequential driver, so existing call sites and the
-/// parity tests keep working unchanged.
+/// adapter runs the sequential driver with a throwaway arena, so existing
+/// call sites and the parity tests keep working unchanged.
 impl<T: PhasedCompressor> DistributedCompressor for T {
     fn name(&self) -> String {
         PhasedCompressor::name(self)
@@ -386,18 +580,20 @@ impl<T: PhasedCompressor> DistributedCompressor for T {
     }
 
     fn round(&mut self, grads: &[Vec<f32>], ctx: &RoundCtx) -> RoundResult {
-        sequential_round(self, grads, ctx)
+        let mut arena = RoundArena::default();
+        sequential_round(self, grads, ctx, &mut arena)
     }
 }
 
-/// The round driver owning a phased compressor.
+/// The round driver owning a phased compressor and the round arena.
 pub struct RoundEngine {
     comp: Box<dyn PhasedCompressor>,
+    arena: RoundArena,
 }
 
 impl RoundEngine {
     pub fn new(comp: Box<dyn PhasedCompressor>) -> Self {
-        RoundEngine { comp }
+        RoundEngine { comp, arena: RoundArena::default() }
     }
 
     pub fn name(&self) -> String {
@@ -412,63 +608,62 @@ impl RoundEngine {
         self.comp.as_mut()
     }
 
+    /// Hand a finished round's buffers back for reuse. Optional — skipping
+    /// it only costs fresh allocations next round.
+    pub fn reclaim(&mut self, result: RoundResult) {
+        self.arena.reclaim(result);
+    }
+
     /// One round with every phase inline on this thread.
     pub fn round_sequential(&mut self, grads: &[Vec<f32>], ctx: &RoundCtx) -> RoundResult {
-        sequential_round(self.comp.as_mut(), grads, ctx)
+        let RoundEngine { comp, arena } = self;
+        sequential_round(comp.as_mut(), grads, ctx, arena)
     }
 
     /// One round with the encode phase executed inside the worker pool's
-    /// threads: rank i's encoder and gradient travel to worker i, encode
-    /// there, and come back with the pass's message. `encode_seconds` is
-    /// the straggler max over ranks, summed over passes — the quantity a
-    /// synchronous data-parallel round actually pays.
+    /// threads — rank i's encoder works on worker thread i directly over
+    /// the leader's gradient slice — and integer reductions chunked across
+    /// the same threads. `encode_seconds` is the straggler max over ranks,
+    /// summed over passes — the quantity a synchronous data-parallel round
+    /// actually pays.
     pub fn round_parallel(
         &mut self,
         pool: &mut WorkerPool,
-        grads: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
         ctx: &RoundCtx,
     ) -> RoundResult {
         let n = grads.len();
         assert!(n > 0, "at least one rank");
         assert_eq!(pool.workers(), n, "one worker thread per rank");
         assert_eq!(n, ctx.n, "ctx.n must match the gradient count (decode scales by it)");
-        let comp = self.comp.as_mut();
+        let RoundEngine { comp, arena } = self;
+        let comp = comp.as_mut();
         ensure_encoders(comp, n);
         let edge_decode = !comp.supports_allreduce();
         let mut plan = comp.begin(ctx);
         let mut encode_seconds = 0.0f64;
+        let mut reduce_total = 0.0f64;
         let mut leader_seconds = 0.0f64;
         loop {
-            let shared = Arc::new(plan);
             let mut encs = std::mem::take(comp.encoders());
-            let tasks: Vec<EncodeTask> = encs
-                .drain(..)
-                .zip(grads.iter_mut())
-                .enumerate()
-                .map(|(rank, (encoder, grad))| EncodeTask {
-                    rank,
-                    encoder,
-                    grad: std::mem::take(grad),
-                    plan: Arc::clone(&shared),
-                })
-                .collect();
-            let (done, straggler) = pool.encode_round(tasks);
+            let straggler = pool.encode_round(&plan, &mut encs, grads);
             // Dense staging is data-plane work, not compression overhead
             // (see sequential_round) — keep the drivers' accounting equal.
-            if !matches!(&*shared, PassPlan::Dense) {
+            if !matches!(plan, PassPlan::Dense) {
                 encode_seconds += straggler;
             }
-            for (item, grad) in done.into_iter().zip(grads.iter_mut()) {
-                *grad = item.grad;
-                encs.push(item.encoder);
-            }
-            let msgs: Vec<&Message> = encs.iter().map(|e| e.message()).collect();
-            let t0 = Instant::now();
-            let outcome = comp.reduce(&msgs, &shared, ctx);
-            if edge_decode {
-                leader_seconds += t0.elapsed().as_secs_f64();
-            }
-            drop(msgs);
+            let outcome = {
+                let msgs = RankMessages::new(&encs);
+                let mut red = PoolReducer::new(pool);
+                let t0 = Instant::now();
+                let outcome = comp.reduce(&msgs, &plan, ctx, &mut red);
+                let dt = t0.elapsed().as_secs_f64();
+                reduce_total += dt;
+                if edge_decode {
+                    leader_seconds += dt;
+                }
+                outcome
+            };
             *comp.encoders() = encs;
             match outcome {
                 PassOutcome::Done => break,
@@ -476,9 +671,10 @@ impl RoundEngine {
             }
         }
         let t1 = Instant::now();
-        let mut result = comp.decode(ctx);
+        let mut result = comp.decode(ctx, arena);
         leader_seconds += t1.elapsed().as_secs_f64();
         result.encode_seconds = encode_seconds;
+        result.reduce_seconds = reduce_total;
         result.decode_seconds = leader_seconds;
         result
     }

@@ -13,18 +13,24 @@
 //!
 //! Phase split: pass 1 is the profiling collective (each rank reports its
 //! per-block max |g|, reduced by max — a handful of floats on the wire),
-//! pass 2 rounds at the profiled per-block alphas. Profiling per block
-//! follows the same Alg. 2 geometry the adaptive rule uses, so a single
-//! outlier layer no longer crushes every other layer's resolution.
+//! pass 2 rounds at the profiled per-block alphas into typed wire buffers
+//! sized by the rule's own bound: |alpha * g| <= (2^nb - 1)/n, so the
+//! leader picks the narrowest lane that holds that budget (plus rounding
+//! slack). Profiling per block follows the same Alg. 2 geometry the
+//! adaptive rule uses, so a single outlier layer no longer crushes every
+//! other layer's resolution.
 
-use crate::collective::allreduce_i64;
+use std::sync::Arc;
+
 use crate::coordinator::RoundCtx;
 use crate::util::stats::linf_norm;
 
 use super::engine::{
-    decode_block_ints, spans_from_ctx, BlockSpan, Message, PassOutcome, PassPlan,
-    PhasedCompressor, RankEncoder,
+    decode_block_ints, spans_from_ctx_into, BlockSpan, Message, PassOutcome, PassPlan,
+    PhasedCompressor, RankEncoder, RankMessages, Reducer, RoundArena,
 };
+use super::intsgd::WireLane;
+use super::intvec::{IntVec, Lanes};
 use super::{CommOp, Primitive, RoundResult};
 
 pub struct HeuristicIntSgd {
@@ -33,8 +39,9 @@ pub struct HeuristicIntSgd {
     encoders: Vec<Box<dyn RankEncoder>>,
     // -- leader round state ------------------------------------------------
     sum: Vec<i64>,
-    blocks: Vec<BlockSpan>,
-    alphas: Vec<f64>,
+    /// Plan geometry, `Arc`-shared with the in-flight plan (see IntSgd).
+    blocks: Arc<Vec<BlockSpan>>,
+    alphas: Arc<Vec<f64>>,
     max_abs_int: i64,
     d: usize,
 }
@@ -46,8 +53,8 @@ impl HeuristicIntSgd {
             nb,
             encoders: Vec::new(),
             sum: Vec::new(),
-            blocks: Vec::new(),
-            alphas: Vec::new(),
+            blocks: Arc::new(Vec::new()),
+            alphas: Arc::new(Vec::new()),
             max_abs_int: 0,
             d: 0,
         }
@@ -60,6 +67,33 @@ impl HeuristicIntSgd {
         }
         let max_exp = max_abs.log2().ceil();
         ((1u64 << nb) - 1) as f64 / (n as f64 * max_exp.exp2())
+    }
+
+    /// Per-worker value budget the profiled alpha guarantees:
+    /// |alpha * g| <= (2^nb - 1)/n, plus 1 for round-to-nearest slack —
+    /// the bound that sizes the wire lane.
+    pub fn lane_bound(nb: u32, n: usize) -> i64 {
+        (((1u64 << nb) - 1) / n as u64 + 1) as i64
+    }
+}
+
+/// The SwitchML round: deterministic round-to-nearest in f64, per block.
+/// The profiled alpha bounds every value by the lane budget
+/// ([`HeuristicIntSgd::lane_bound`]), so the lane cast is
+/// value-preserving — one generic body instead of a copy per lane width.
+fn scaled_round_blocks<T: WireLane>(
+    blocks: &[BlockSpan],
+    alphas: &[f64],
+    grad: &[f32],
+    out: &mut Vec<T>,
+) {
+    out.reserve(grad.len());
+    for (span, &alpha) in blocks.iter().zip(alphas) {
+        out.extend(
+            grad[span.range()]
+                .iter()
+                .map(|&x| T::of_f64((x as f64 * alpha).round())),
+        );
     }
 }
 
@@ -76,17 +110,12 @@ impl RankEncoder for HeuristicEncoder {
                 out.clear();
                 out.extend(blocks.iter().map(|span| linf_norm(&grad[span.range()])));
             }
-            PassPlan::ScaledRound { blocks, alphas } => {
-                let out = self.msg.ints_mut();
-                out.clear();
-                out.reserve(grad.len());
-                for (span, &alpha) in blocks.iter().zip(alphas) {
-                    // SwitchML rounds deterministically (round-to-nearest)
-                    out.extend(
-                        grad[span.range()]
-                            .iter()
-                            .map(|&x| (x as f64 * alpha).round() as i64),
-                    );
+            PassPlan::ScaledRound { blocks, alphas, lanes } => {
+                let out = self.msg.ints_mut(*lanes);
+                match out {
+                    IntVec::I8(v) => scaled_round_blocks(blocks, alphas, grad, v),
+                    IntVec::I32(v) => scaled_round_blocks(blocks, alphas, grad, v),
+                    IntVec::I64(v) => scaled_round_blocks(blocks, alphas, grad, v),
                 }
             }
             _ => panic!("HeuristicIntSgd encoder: unexpected plan"),
@@ -117,30 +146,38 @@ impl PhasedCompressor for HeuristicIntSgd {
 
     fn begin(&mut self, ctx: &RoundCtx) -> PassPlan {
         self.d = ctx.d;
-        self.blocks = spans_from_ctx(ctx);
-        PassPlan::Profile { blocks: self.blocks.clone() }
+        let blocks = Arc::make_mut(&mut self.blocks);
+        spans_from_ctx_into(ctx, blocks);
+        PassPlan::Profile { blocks: Arc::clone(&self.blocks) }
     }
 
-    fn reduce(&mut self, msgs: &[&Message], plan: &PassPlan, _ctx: &RoundCtx) -> PassOutcome {
+    fn reduce(
+        &mut self,
+        msgs: &RankMessages,
+        plan: &PassPlan,
+        _ctx: &RoundCtx,
+        red: &mut dyn Reducer,
+    ) -> PassOutcome {
         match plan {
             PassPlan::Profile { .. } => {
                 let n = msgs.len();
-                self.alphas.clear();
+                let alphas = Arc::make_mut(&mut self.alphas);
+                alphas.clear();
                 for b in 0..self.blocks.len() {
                     let max_abs = msgs
                         .iter()
                         .map(|m| m.as_scalars()[b])
                         .fold(0.0f32, f32::max) as f64;
-                    self.alphas.push(Self::alpha_for_max(self.nb, n, max_abs));
+                    alphas.push(Self::alpha_for_max(self.nb, n, max_abs));
                 }
                 PassOutcome::Next(PassPlan::ScaledRound {
-                    blocks: self.blocks.clone(),
-                    alphas: self.alphas.clone(),
+                    blocks: Arc::clone(&self.blocks),
+                    alphas: Arc::clone(&self.alphas),
+                    lanes: Lanes::for_bound(Self::lane_bound(self.nb, n)),
                 })
             }
             PassPlan::ScaledRound { .. } => {
-                let views: Vec<&[i64]> = msgs.iter().map(|m| m.as_ints()).collect();
-                allreduce_i64(&views, &mut self.sum);
+                red.sum_ints(msgs, &mut self.sum);
                 self.max_abs_int = self.sum.iter().map(|&x| x.abs()).max().unwrap_or(0);
                 PassOutcome::Done
             }
@@ -148,22 +185,24 @@ impl PhasedCompressor for HeuristicIntSgd {
         }
     }
 
-    fn decode(&mut self, ctx: &RoundCtx) -> RoundResult {
-        let gtilde = decode_block_ints(&self.sum, &self.blocks, &self.alphas, ctx.n);
+    fn decode(&mut self, ctx: &RoundCtx, arena: &mut RoundArena) -> RoundResult {
+        let mut gtilde = arena.take_f32();
+        decode_block_ints(&self.sum, &self.blocks, &self.alphas, ctx.n, &mut gtilde);
+        let mut comm = arena.take_comm();
+        comm.push(CommOp {
+            primitive: Primitive::Switch,
+            bytes_per_worker: self.d * (self.nb as usize).div_ceil(8),
+        });
+        // the profiling collective: one fp32 max per block
+        comm.push(CommOp {
+            primitive: Primitive::AllReduce,
+            bytes_per_worker: 4 * self.blocks.len(),
+        });
         RoundResult {
             gtilde,
-            comm: vec![
-                CommOp {
-                    primitive: Primitive::Switch,
-                    bytes_per_worker: self.d * (self.nb as usize).div_ceil(8),
-                },
-                // the profiling collective: one fp32 max per block
-                CommOp {
-                    primitive: Primitive::AllReduce,
-                    bytes_per_worker: 4 * self.blocks.len(),
-                },
-            ],
+            comm,
             encode_seconds: 0.0,
+            reduce_seconds: 0.0,
             decode_seconds: 0.0,
             max_abs_int: self.max_abs_int,
             alpha: self.alphas.iter().copied().fold(f64::INFINITY, f64::min),
@@ -192,6 +231,16 @@ mod tests {
         let mut c = HeuristicIntSgd::new(8);
         let r = c.round(&grads, &ctx(1000, n));
         assert!(r.max_abs_int <= 255 + n as i64); // rounding slack of <= 1/worker
+    }
+
+    #[test]
+    fn lane_bound_covers_rule_budget() {
+        // nb=8, n=1: values reach 255 -> needs i32 lanes; n=4 -> 64 fits i8
+        assert_eq!(Lanes::for_bound(HeuristicIntSgd::lane_bound(8, 1)), Lanes::I32);
+        assert_eq!(Lanes::for_bound(HeuristicIntSgd::lane_bound(8, 4)), Lanes::I8);
+        // nb=32, n=1: budget 2^32 - 1 -> i64 escape hatch
+        assert_eq!(Lanes::for_bound(HeuristicIntSgd::lane_bound(32, 1)), Lanes::I64);
+        assert_eq!(Lanes::for_bound(HeuristicIntSgd::lane_bound(32, 4)), Lanes::I32);
     }
 
     #[test]

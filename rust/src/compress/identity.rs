@@ -7,6 +7,7 @@ use crate::coordinator::RoundCtx;
 
 use super::engine::{
     mean_dense_into, Message, PassOutcome, PassPlan, PhasedCompressor, RankEncoder,
+    RankMessages, Reducer, RoundArena,
 };
 use super::{CommOp, Primitive, RoundResult};
 
@@ -84,13 +85,21 @@ impl PhasedCompressor for IdentitySgd {
         PassPlan::Dense
     }
 
-    fn reduce(&mut self, msgs: &[&Message], _plan: &PassPlan, _ctx: &RoundCtx) -> PassOutcome {
+    fn reduce(
+        &mut self,
+        msgs: &RankMessages,
+        _plan: &PassPlan,
+        _ctx: &RoundCtx,
+        _red: &mut dyn Reducer,
+    ) -> PassOutcome {
         let n = msgs.len();
         let inv = 1.0 / n as f32;
         match self.primitive {
             Primitive::AllReduce | Primitive::Switch => {
                 // the in-process ring reduction stands in for the network
-                // data plane, whose time is modeled by netsim
+                // data plane, whose time is modeled by netsim; its fixed
+                // pairwise order is part of the parity guarantee, so fp32
+                // never goes through the parallel reducer
                 let views: Vec<&[f32]> = msgs.iter().map(|m| m.as_dense()).collect();
                 self.gtilde = ring_allreduce_f32(&views);
                 for x in &mut self.gtilde {
@@ -104,11 +113,16 @@ impl PhasedCompressor for IdentitySgd {
         PassOutcome::Done
     }
 
-    fn decode(&mut self, _ctx: &RoundCtx) -> RoundResult {
+    fn decode(&mut self, _ctx: &RoundCtx, arena: &mut RoundArena) -> RoundResult {
+        let mut gtilde = arena.take_f32();
+        std::mem::swap(&mut gtilde, &mut self.gtilde);
+        let mut comm = arena.take_comm();
+        comm.push(CommOp { primitive: self.primitive, bytes_per_worker: self.d * 4 });
         RoundResult {
-            gtilde: std::mem::take(&mut self.gtilde),
-            comm: vec![CommOp { primitive: self.primitive, bytes_per_worker: self.d * 4 }],
+            gtilde,
+            comm,
             encode_seconds: 0.0,
+            reduce_seconds: 0.0,
             decode_seconds: 0.0,
             max_abs_int: 0,
             alpha: 0.0,

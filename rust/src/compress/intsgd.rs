@@ -11,19 +11,30 @@
 //! Phase split (`compress::engine`): the leader derives per-block alphas
 //! from the `AlphaRule` (Alg. 2 when the ctx carries a block layout), each
 //! rank's [`RankEncoder`] rounds its gradient with its own RNG stream, and
-//! the reduce phase sums integers through ring all-reduce or the INA
-//! switch simulator.
+//! the reduce phase sums integers through the engine's [`Reducer`] (serial
+//! or coordinate-chunked across the worker pool — bit-identical) or the
+//! INA switch simulator.
+//!
+//! §Perf: the encoder is *fused and typed* — one pass over the gradient
+//! does scale → stochastic-round → clip → pack, writing the wire lane
+//! (`i8` for the int8 wire) directly into the rank's reused [`IntVec`]
+//! buffer. Same arithmetic as before (f32, counter-based uniforms), an
+//! eighth of the write traffic, zero steady-state allocation.
 
-use crate::collective::{allreduce_i64, InaSwitch};
+use crate::collective::InaSwitch;
 use crate::coordinator::{BlockInfo, RoundCtx};
 use crate::scaling::AlphaRule;
 use crate::util::rng::splitmix64_at;
 use crate::util::Rng;
 
+use std::sync::Arc;
+
 use super::engine::{
-    decode_block_ints, mean_dense_into, spans_from_ctx, BlockSpan, Message,
-    PassOutcome, PassPlan, PhasedCompressor, RankEncoder,
+    decode_block_ints, mean_dense_into, spans_from_ctx_into, BlockSpan, Message,
+    PassOutcome, PassPlan, PhasedCompressor, RankEncoder, RankMessages, Reducer,
+    RoundArena,
 };
+use super::intvec::{IntVec, Lanes};
 use super::{CommOp, Primitive, RoundResult};
 
 /// Rounding mode (paper §5.1: IntSGD (Random) vs IntSGD (Determ.)).
@@ -59,6 +70,135 @@ impl WireInt {
     }
 }
 
+/// A lane type the fused encoders can pack into. The value handed to
+/// `of_f32`/`of_f64` is already rounded and bounded to the lane's range
+/// by the caller's clip/budget proof, so the `as` casts are
+/// value-preserving (NaN maps to 0, same as the old `as i64` path).
+pub trait WireLane: Copy + Send {
+    fn of_f32(x: f32) -> Self;
+    fn of_f64(x: f64) -> Self;
+}
+
+impl WireLane for i8 {
+    #[inline]
+    fn of_f32(x: f32) -> i8 {
+        x as i8
+    }
+    #[inline]
+    fn of_f64(x: f64) -> i8 {
+        x as i8
+    }
+}
+
+impl WireLane for i32 {
+    #[inline]
+    fn of_f32(x: f32) -> i32 {
+        x as i32
+    }
+    #[inline]
+    fn of_f64(x: f64) -> i32 {
+        x as i32
+    }
+}
+
+impl WireLane for i64 {
+    #[inline]
+    fn of_f32(x: f32) -> i64 {
+        x as i64
+    }
+    #[inline]
+    fn of_f64(x: f64) -> i64 {
+        x as i64
+    }
+}
+
+/// Coordinates per fused-encode chunk: enough for the auto-vectorizer to
+/// amortize the loop, small enough that a chunk's lanes stay in L1.
+const ENCODE_CHUNK: usize = 1024;
+
+/// Round one block of coordinates into a typed lane buffer — the fused
+/// scale → round → clip → pack pass. `base` keys the counter-based uniform
+/// stream and `offset` is the block's absolute coordinate offset, so a
+/// multi-block encode with equal alphas is bit-identical to a single-block
+/// encode of the whole gradient (and independent of the block layout).
+///
+/// All arithmetic is f32 to match the Pallas kernel exactly (`alpha * g`,
+/// `floor(t + u)` / round-ties-even, clip); the uniform draws are
+/// counter-based off one generator step per round, so there is no
+/// loop-carried RNG dependency and the whole chain auto-vectorizes
+/// (§Perf: this path is the paper's "computation overhead" column).
+fn encode_span<T: WireLane>(
+    rounding: Rounding,
+    grad: &[f32],
+    alpha: f64,
+    clip: i64,
+    base: u64,
+    offset: usize,
+    out: &mut Vec<T>,
+) {
+    let a = alpha as f32;
+    let c = clip as f32; // clip <= 2^31: exactly representable ranges we use
+    match rounding {
+        Rounding::Stochastic => {
+            const SCALE: f32 = 1.0 / (1u32 << 24) as f32;
+            let mut j = offset as u64;
+            for chunk in grad.chunks(ENCODE_CHUNK) {
+                let start = j;
+                out.extend(chunk.iter().enumerate().map(|(k, &g)| {
+                    let u = (splitmix64_at(base, start + k as u64) >> 40) as f32 * SCALE;
+                    T::of_f32((g * a + u).floor().clamp(-c, c))
+                }));
+                j += chunk.len() as u64;
+            }
+        }
+        Rounding::Deterministic => {
+            for chunk in grad.chunks(ENCODE_CHUNK) {
+                // f32 round-ties-even mirrors jnp.round in the kernel
+                out.extend(
+                    chunk
+                        .iter()
+                        .map(|&g| T::of_f32((g * a).round_ties_even().clamp(-c, c))),
+                );
+            }
+        }
+    }
+}
+
+/// [`encode_span`] over every block of one gradient, into one lane type.
+fn encode_blocks_typed<T: WireLane>(
+    rounding: Rounding,
+    blocks: &[BlockSpan],
+    alphas: &[f64],
+    clip: i64,
+    grad: &[f32],
+    base: u64,
+    out: &mut Vec<T>,
+) {
+    out.reserve(grad.len());
+    for (span, &alpha) in blocks.iter().zip(alphas) {
+        encode_span(rounding, &grad[span.range()], alpha, clip, base, span.offset, out);
+    }
+}
+
+/// Encode a full gradient (per-block alphas) into the typed wire buffer.
+/// Public so the fused-vs-reference property tests can drive it with a
+/// fixed counter base.
+pub fn encode_blocks(
+    rounding: Rounding,
+    blocks: &[BlockSpan],
+    alphas: &[f64],
+    clip: i64,
+    grad: &[f32],
+    base: u64,
+    out: &mut IntVec,
+) {
+    match out {
+        IntVec::I8(v) => encode_blocks_typed(rounding, blocks, alphas, clip, grad, base, v),
+        IntVec::I32(v) => encode_blocks_typed(rounding, blocks, alphas, clip, grad, base, v),
+        IntVec::I64(v) => encode_blocks_typed(rounding, blocks, alphas, clip, grad, base, v),
+    }
+}
+
 pub struct IntSgd {
     pub rounding: Rounding,
     pub wire: WireInt,
@@ -76,8 +216,13 @@ pub struct IntSgd {
     sum: Vec<i64>,
     /// Exact-round (round 0) average.
     exact: Vec<f32>,
-    blocks: Vec<BlockSpan>,
-    alphas: Vec<f64>,
+    /// Plan geometry, `Arc`-shared with the in-flight plan and rebuilt in
+    /// place each round once the previous plan is gone (`Arc::make_mut`).
+    blocks: Arc<Vec<BlockSpan>>,
+    alphas: Arc<Vec<f64>>,
+    /// Reused normalized ctx for block-less callers (one whole-gradient
+    /// block), so that path is as allocation-free as the blocked one.
+    norm_ctx: RoundCtx,
     max_abs_int: i64,
     exact_round: bool,
     d: usize,
@@ -109,8 +254,16 @@ impl IntSgd {
             encoders: Vec::new(),
             sum: Vec::new(),
             exact: Vec::new(),
-            blocks: Vec::new(),
-            alphas: Vec::new(),
+            blocks: Arc::new(Vec::new()),
+            alphas: Arc::new(Vec::new()),
+            norm_ctx: RoundCtx {
+                round: 0,
+                n,
+                d: 0,
+                lr: 0.0,
+                step_norm_sq: 0.0,
+                blocks: Vec::new(),
+            },
             max_abs_int: 0,
             exact_round: false,
             d: 0,
@@ -132,13 +285,10 @@ impl IntSgd {
         clip
     }
 
-    /// Encode one worker's gradient (the Pallas-kernel mirror).
-    ///
-    /// All arithmetic is f32 to match the kernel exactly (`alpha * g`,
-    /// `floor(t + u)` / round-ties-even, clip); the uniform draws are
-    /// counter-based off one generator step (§Perf: this path is the
-    /// paper's "computation overhead" column and was the top L3 bottleneck
-    /// before the f32 rewrite — see EXPERIMENTS.md §Perf).
+    /// Encode one worker's gradient into widened integers (the Pallas
+    /// kernel mirror and the reference shape for tests; the engine's hot
+    /// path packs wire lanes via [`encode_blocks`] instead — same
+    /// arithmetic, `tests/fused_encode.rs` pins the bit-identity).
     pub fn encode(
         rounding: Rounding,
         grad: &[f32],
@@ -149,56 +299,18 @@ impl IntSgd {
     ) {
         out.clear();
         out.reserve(grad.len());
-        match rounding {
-            Rounding::Stochastic => {
-                // counter-based randomness: no loop-carried RNG dependency,
-                // so the scale+floor+clip chain auto-vectorizes (§Perf).
-                // One draw from the worker's stream keys this round.
-                let base = rng.next_u64();
-                encode_span(rounding, grad, alpha, clip, base, 0, out);
-            }
-            Rounding::Deterministic => {
-                encode_span(rounding, grad, alpha, clip, 0, 0, out);
-            }
-        }
+        let base = match rounding {
+            // counter-based randomness: one draw from the worker's stream
+            // keys this round, `splitmix64_at` indexes the coordinates.
+            Rounding::Stochastic => rng.next_u64(),
+            Rounding::Deterministic => 0,
+        };
+        encode_span(rounding, grad, alpha, clip, base, 0, out);
     }
 }
 
-/// Round one block of coordinates. `base` keys the counter-based uniform
-/// stream and `offset` is the block's absolute coordinate offset, so a
-/// multi-block encode with equal alphas is bit-identical to a single-block
-/// encode of the whole gradient.
-fn encode_span(
-    rounding: Rounding,
-    grad: &[f32],
-    alpha: f64,
-    clip: i64,
-    base: u64,
-    offset: usize,
-    out: &mut Vec<i64>,
-) {
-    let a = alpha as f32;
-    let c = clip as f32; // clip <= 2^31: exactly representable ranges we use
-    match rounding {
-        Rounding::Stochastic => {
-            const SCALE: f32 = 1.0 / (1u32 << 24) as f32;
-            out.extend(grad.iter().enumerate().map(|(k, &g)| {
-                let j = (offset + k) as u64;
-                let u = (splitmix64_at(base, j) >> 40) as f32 * SCALE;
-                (g * a + u).floor().clamp(-c, c) as i64
-            }));
-        }
-        Rounding::Deterministic => {
-            // f32 round-ties-even mirrors jnp.round in the kernel
-            out.extend(
-                grad.iter()
-                    .map(|&g| (g * a).round_ties_even().clamp(-c, c) as i64),
-            );
-        }
-    }
-}
-
-/// One rank's IntSGD state: its RNG stream and reusable message buffer.
+/// One rank's IntSGD state: its RNG stream and reusable typed message
+/// buffer.
 struct IntEncoder {
     rng: Rng,
     msg: Message,
@@ -213,25 +325,13 @@ impl RankEncoder for IntEncoder {
                 out.clear();
                 out.extend_from_slice(grad);
             }
-            PassPlan::IntBlocks { rounding, blocks, alphas, clip } => {
-                let out = self.msg.ints_mut();
-                out.clear();
-                out.reserve(grad.len());
+            PassPlan::IntBlocks { rounding, blocks, alphas, clip, lanes } => {
                 let base = match rounding {
                     Rounding::Stochastic => self.rng.next_u64(),
                     Rounding::Deterministic => 0,
                 };
-                for (span, &alpha) in blocks.iter().zip(alphas) {
-                    encode_span(
-                        *rounding,
-                        &grad[span.range()],
-                        alpha,
-                        *clip,
-                        base,
-                        span.offset,
-                        out,
-                    );
-                }
+                let out = self.msg.ints_mut(*lanes);
+                encode_blocks(*rounding, blocks, alphas, *clip, grad, base, out);
             }
             _ => panic!("IntSgd encoder: unexpected plan"),
         }
@@ -283,40 +383,60 @@ impl PhasedCompressor for IntSgd {
             return PassPlan::Dense;
         }
         self.exact_round = false;
-        self.blocks = spans_from_ctx(ctx);
+        // steady state: the previous round's plan is gone, so make_mut
+        // rebuilds both geometry buffers in place (no allocation)
+        let blocks = Arc::make_mut(&mut self.blocks);
+        spans_from_ctx_into(ctx, blocks);
+        let alphas = Arc::make_mut(&mut self.alphas);
         // Alpha rules consume ctx.blocks; normalize block-less contexts to
-        // one block covering the whole gradient so BlockRule stays valid.
-        self.alphas = if ctx.blocks.is_empty() {
-            let norm = RoundCtx {
-                blocks: vec![BlockInfo { dim: ctx.d, step_norm_sq: ctx.step_norm_sq }],
-                ..ctx.clone()
-            };
-            self.rule.block_alphas(&norm)
+        // one block covering the whole gradient so BlockRule stays valid
+        // (into the reused scratch ctx — this path allocates nothing).
+        if ctx.blocks.is_empty() {
+            let norm = &mut self.norm_ctx;
+            norm.round = ctx.round;
+            norm.n = ctx.n;
+            norm.d = ctx.d;
+            norm.lr = ctx.lr;
+            norm.step_norm_sq = ctx.step_norm_sq;
+            norm.blocks.clear();
+            norm.blocks.push(BlockInfo { dim: ctx.d, step_norm_sq: ctx.step_norm_sq });
+            self.rule.block_alphas_into(&self.norm_ctx, alphas);
         } else {
-            self.rule.block_alphas(ctx)
-        };
+            self.rule.block_alphas_into(ctx, alphas);
+        }
         assert_eq!(self.alphas.len(), self.blocks.len(), "one alpha per block");
+        let clip = self.local_clip(ctx.n);
         PassPlan::IntBlocks {
             rounding: self.rounding,
-            blocks: self.blocks.clone(),
-            alphas: self.alphas.clone(),
-            clip: self.local_clip(ctx.n),
+            blocks: Arc::clone(&self.blocks),
+            alphas: Arc::clone(&self.alphas),
+            clip,
+            // every clipped value fits the clip-implied lane, which never
+            // exceeds the wire width (clip <= max_aggregate)
+            lanes: Lanes::for_bound(clip),
         }
     }
 
-    fn reduce(&mut self, msgs: &[&Message], plan: &PassPlan, _ctx: &RoundCtx) -> PassOutcome {
+    fn reduce(
+        &mut self,
+        msgs: &RankMessages,
+        plan: &PassPlan,
+        _ctx: &RoundCtx,
+        red: &mut dyn Reducer,
+    ) -> PassOutcome {
         match plan {
             PassPlan::Dense => {
                 mean_dense_into(msgs, &mut self.exact);
                 self.max_abs_int = 0;
             }
             PassPlan::IntBlocks { .. } => {
-                let views: Vec<&[i64]> = msgs.iter().map(|m| m.as_ints()).collect();
                 if self.use_switch {
+                    // saturating accumulation is order-sensitive; the
+                    // switch data plane stays a leader-side simulation
                     let switch = InaSwitch::default();
-                    switch.aggregate_into(&views, self.wire, &mut self.sum);
+                    switch.aggregate_messages(msgs, self.wire, &mut self.sum);
                 } else {
-                    allreduce_i64(&views, &mut self.sum);
+                    red.sum_ints(msgs, &mut self.sum);
                 }
                 self.max_abs_int = self.sum.iter().map(|&x| x.abs()).max().unwrap_or(0);
             }
@@ -325,32 +445,40 @@ impl PhasedCompressor for IntSgd {
         PassOutcome::Done
     }
 
-    fn decode(&mut self, ctx: &RoundCtx) -> RoundResult {
+    fn decode(&mut self, ctx: &RoundCtx, arena: &mut RoundArena) -> RoundResult {
+        let mut comm = arena.take_comm();
         if self.exact_round {
+            let mut gtilde = arena.take_f32();
+            std::mem::swap(&mut gtilde, &mut self.exact);
+            comm.push(CommOp {
+                primitive: Primitive::AllReduce,
+                bytes_per_worker: self.d * 4,
+            });
             return RoundResult {
-                gtilde: std::mem::take(&mut self.exact),
-                comm: vec![CommOp {
-                    primitive: Primitive::AllReduce,
-                    bytes_per_worker: self.d * 4,
-                }],
+                gtilde,
+                comm,
                 encode_seconds: 0.0,
+                reduce_seconds: 0.0,
                 decode_seconds: 0.0,
                 max_abs_int: 0,
                 alpha: 0.0,
             };
         }
-        let gtilde = decode_block_ints(&self.sum, &self.blocks, &self.alphas, ctx.n);
+        let mut gtilde = arena.take_f32();
+        decode_block_ints(&self.sum, &self.blocks, &self.alphas, ctx.n, &mut gtilde);
+        comm.push(CommOp {
+            primitive: if self.use_switch {
+                Primitive::Switch
+            } else {
+                Primitive::AllReduce
+            },
+            bytes_per_worker: self.d * self.wire.bytes(),
+        });
         RoundResult {
             gtilde,
-            comm: vec![CommOp {
-                primitive: if self.use_switch {
-                    Primitive::Switch
-                } else {
-                    Primitive::AllReduce
-                },
-                bytes_per_worker: self.d * self.wire.bytes(),
-            }],
+            comm,
             encode_seconds: 0.0,
+            reduce_seconds: 0.0,
             decode_seconds: 0.0,
             max_abs_int: self.max_abs_int,
             alpha: self.alphas.iter().copied().fold(f64::INFINITY, f64::min),
@@ -445,6 +573,14 @@ mod tests {
     fn int8_wire_accepts_exactly_127_workers() {
         let c = make(Rounding::Stochastic, WireInt::Int8, 127);
         assert_eq!(c.local_clip(127), 1);
+    }
+
+    #[test]
+    fn int8_clip_implies_i8_lanes() {
+        let c = make(Rounding::Stochastic, WireInt::Int8, 4);
+        assert_eq!(Lanes::for_bound(c.local_clip(4)), Lanes::I8);
+        let c32 = make(Rounding::Stochastic, WireInt::Int32, 4);
+        assert_eq!(Lanes::for_bound(c32.local_clip(4)), Lanes::I32);
     }
 
     #[test]

@@ -1,0 +1,263 @@
+//! Typed integer wire buffers: the payload of every integer-compression
+//! message, stored at its *wire width* instead of widened to `i64`.
+//!
+//! IntSGD's systems pitch is that integer codecs are computationally
+//! cheaper than float schemes; storing an int8 wire message in a
+//! `Vec<i64>` threw that advantage away — 8x the write traffic on encode,
+//! 8x the read traffic on reduce, and a `try_from` per element at the wire
+//! codec. [`IntVec`] keeps the lanes native (`i8` / `i32`, with an `i64`
+//! escape hatch for the SwitchML rule's widest setting), so:
+//!
+//! - the fused encoder writes one wire-width lane per coordinate,
+//! - the reduce fold reads wire-width lanes and widens once into the
+//!   `i64` accumulator (`IntVec::add_range_to` — the kernel both the
+//!   serial fold and the worker-pool chunked fold call), and
+//! - `compress::wire::encode_int8` is a memcpy.
+//!
+//! The lane width of a round is chosen by the leader from the proved
+//! per-worker bound (IntSGD's clip, SwitchML's profiled budget), so lane
+//! stores never saturate: every value fits by construction.
+
+use super::intsgd::WireInt;
+
+/// Native storage width of one integer message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lanes {
+    I8,
+    I32,
+    I64,
+}
+
+impl Lanes {
+    /// Bytes per coordinate at this width.
+    pub fn bytes(self) -> usize {
+        match self {
+            Lanes::I8 => 1,
+            Lanes::I32 => 4,
+            Lanes::I64 => 8,
+        }
+    }
+
+    /// Narrowest lane that can hold any value with |v| <= bound.
+    pub fn for_bound(bound: i64) -> Lanes {
+        if bound <= i8::MAX as i64 {
+            Lanes::I8
+        } else if bound <= i32::MAX as i64 {
+            Lanes::I32
+        } else {
+            Lanes::I64
+        }
+    }
+
+    /// The lane matching a wire integer type.
+    pub fn of_wire(wire: WireInt) -> Lanes {
+        match wire {
+            WireInt::Int8 => Lanes::I8,
+            WireInt::Int32 => Lanes::I32,
+        }
+    }
+}
+
+/// A vector of integers stored at wire width. All mutation paths reuse the
+/// underlying buffer when the lane width is unchanged, so steady-state
+/// rounds never reallocate.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum IntVec {
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+impl Default for IntVec {
+    fn default() -> Self {
+        IntVec::I8(Vec::new())
+    }
+}
+
+impl IntVec {
+    pub fn new(lanes: Lanes) -> IntVec {
+        match lanes {
+            Lanes::I8 => IntVec::I8(Vec::new()),
+            Lanes::I32 => IntVec::I32(Vec::new()),
+            Lanes::I64 => IntVec::I64(Vec::new()),
+        }
+    }
+
+    pub fn lanes(&self) -> Lanes {
+        match self {
+            IntVec::I8(_) => Lanes::I8,
+            IntVec::I32(_) => Lanes::I32,
+            IntVec::I64(_) => Lanes::I64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            IntVec::I8(v) => v.len(),
+            IntVec::I32(v) => v.len(),
+            IntVec::I64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Empty the buffer, switching lane width only when it changed (the
+    /// allocation survives otherwise).
+    pub fn reset(&mut self, lanes: Lanes) {
+        if self.lanes() != lanes {
+            *self = IntVec::new(lanes);
+            return;
+        }
+        match self {
+            IntVec::I8(v) => v.clear(),
+            IntVec::I32(v) => v.clear(),
+            IntVec::I64(v) => v.clear(),
+        }
+    }
+
+    /// Widened read of one coordinate (tests, the saturating switch
+    /// simulator; hot loops use [`IntVec::add_range_to`] instead).
+    #[inline]
+    pub fn get(&self, j: usize) -> i64 {
+        match self {
+            IntVec::I8(v) => v[j] as i64,
+            IntVec::I32(v) => v[j] as i64,
+            IntVec::I64(v) => v[j],
+        }
+    }
+
+    /// Largest |value| (paper Fig. 6 diagnostics).
+    pub fn max_abs(&self) -> i64 {
+        match self {
+            IntVec::I8(v) => v.iter().map(|&x| (x as i64).abs()).max().unwrap_or(0),
+            IntVec::I32(v) => v.iter().map(|&x| (x as i64).abs()).max().unwrap_or(0),
+            IntVec::I64(v) => v.iter().map(|&x| x.abs()).max().unwrap_or(0),
+        }
+    }
+
+    /// out[k] += self[lo + k]: the widening accumulate at the heart of the
+    /// integer reduce. One tight loop per lane width — no per-element
+    /// `try_from`, no dispatch inside the loop — so LLVM vectorizes the
+    /// widen+add chain.
+    #[inline]
+    pub fn add_range_to(&self, lo: usize, out: &mut [i64]) {
+        assert!(
+            lo + out.len() <= self.len(),
+            "reduce range {}..{} exceeds message length {}",
+            lo,
+            lo + out.len(),
+            self.len()
+        );
+        match self {
+            IntVec::I8(v) => {
+                for (o, &x) in out.iter_mut().zip(&v[lo..]) {
+                    *o += x as i64;
+                }
+            }
+            IntVec::I32(v) => {
+                for (o, &x) in out.iter_mut().zip(&v[lo..]) {
+                    *o += x as i64;
+                }
+            }
+            IntVec::I64(v) => {
+                for (o, &x) in out.iter_mut().zip(&v[lo..]) {
+                    *o += x;
+                }
+            }
+        }
+    }
+
+    /// Widened copy (tests and diagnostics).
+    pub fn to_i64_vec(&self) -> Vec<i64> {
+        match self {
+            IntVec::I8(v) => v.iter().map(|&x| x as i64).collect(),
+            IntVec::I32(v) => v.iter().map(|&x| x as i64).collect(),
+            IntVec::I64(v) => v.clone(),
+        }
+    }
+
+    /// Build from widened values, panicking if one does not fit the lane
+    /// (tests; production paths write lanes directly via the fused
+    /// encoders, whose clip guarantees the fit).
+    pub fn from_i64(vals: &[i64], lanes: Lanes) -> IntVec {
+        match lanes {
+            Lanes::I8 => IntVec::I8(
+                vals.iter().map(|&x| i8::try_from(x).expect("fits i8")).collect(),
+            ),
+            Lanes::I32 => IntVec::I32(
+                vals.iter().map(|&x| i32::try_from(x).expect("fits i32")).collect(),
+            ),
+            Lanes::I64 => IntVec::I64(vals.to_vec()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_selection_matches_bounds() {
+        assert_eq!(Lanes::for_bound(0), Lanes::I8);
+        assert_eq!(Lanes::for_bound(127), Lanes::I8);
+        assert_eq!(Lanes::for_bound(128), Lanes::I32);
+        assert_eq!(Lanes::for_bound(i32::MAX as i64), Lanes::I32);
+        assert_eq!(Lanes::for_bound(i32::MAX as i64 + 1), Lanes::I64);
+        assert_eq!(Lanes::of_wire(WireInt::Int8), Lanes::I8);
+        assert_eq!(Lanes::of_wire(WireInt::Int32), Lanes::I32);
+    }
+
+    #[test]
+    fn reset_keeps_capacity_on_same_lanes() {
+        let mut v = IntVec::from_i64(&[1, 2, 3], Lanes::I8);
+        let cap_before = match &v {
+            IntVec::I8(b) => b.capacity(),
+            _ => unreachable!(),
+        };
+        v.reset(Lanes::I8);
+        assert_eq!(v.len(), 0);
+        let cap_after = match &v {
+            IntVec::I8(b) => b.capacity(),
+            _ => unreachable!(),
+        };
+        assert_eq!(cap_before, cap_after);
+        // switching lanes swaps the representation
+        v.reset(Lanes::I32);
+        assert_eq!(v.lanes(), Lanes::I32);
+    }
+
+    #[test]
+    fn add_range_widens_each_lane() {
+        for lanes in [Lanes::I8, Lanes::I32, Lanes::I64] {
+            let v = IntVec::from_i64(&[1, -2, 3, -4], lanes);
+            let mut out = vec![10i64; 2];
+            v.add_range_to(1, &mut out);
+            assert_eq!(out, vec![8, 13], "{lanes:?}");
+        }
+    }
+
+    #[test]
+    fn max_abs_and_roundtrip() {
+        let vals = vec![-128i64, 5, 127];
+        let v = IntVec::from_i64(&vals, Lanes::I8);
+        assert_eq!(v.max_abs(), 128);
+        assert_eq!(v.to_i64_vec(), vals);
+        assert_eq!(v.get(0), -128);
+    }
+
+    #[test]
+    #[should_panic(expected = "fits i8")]
+    fn from_i64_rejects_lane_overflow() {
+        IntVec::from_i64(&[200], Lanes::I8);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds message length")]
+    fn add_range_rejects_overrun() {
+        let v = IntVec::from_i64(&[1, 2], Lanes::I32);
+        let mut out = vec![0i64; 2];
+        v.add_range_to(1, &mut out);
+    }
+}

@@ -11,6 +11,13 @@
 //! geometry through the whole pipeline, so IntSGD and Heuristic IntSGD
 //! scale each block with its own alpha (paper Alg. 2).
 //!
+//! Integer payloads live in typed wire buffers ([`intvec::IntVec`]: `i8` /
+//! `i32` lanes instead of widened `i64`), the encode is a fused
+//! scale→round→clip→pack pass, and the round outputs recycle through the
+//! engine's [`engine::RoundArena`] — steady-state rounds perform zero heap
+//! allocation (`tests/zero_alloc.rs`; the INA switch *simulator* is the
+//! one exempt reduce path — it hoists per-rank slice views each round).
+//!
 //! The original monolithic entry point survives as a thin adapter: every
 //! `PhasedCompressor` automatically implements [`DistributedCompressor`],
 //! whose `round(&[Vec<f32>], &RoundCtx)` drives the same phases
@@ -28,6 +35,7 @@ pub mod error_feedback;
 pub mod heuristic;
 pub mod identity;
 pub mod intsgd;
+pub mod intvec;
 pub mod natsgd;
 pub mod powersgd;
 pub mod qsgd;
@@ -37,8 +45,10 @@ pub mod wire;
 
 pub use engine::{
     sequential_round, BlockSpan, Message, PassOutcome, PassPlan, PhasedCompressor,
-    RankEncoder, RoundEngine,
+    PoolReducer, RankEncoder, RankMessages, Reducer, RoundArena, RoundEngine,
+    SerialReducer,
 };
+pub use intvec::{IntVec, Lanes};
 pub use error_feedback::ErrorFeedback;
 pub use heuristic::HeuristicIntSgd;
 pub use identity::IdentitySgd;
@@ -82,10 +92,14 @@ pub struct RoundResult {
     /// on the parallel path, the per-worker share (total / n) on the
     /// sequential reference.
     pub encode_seconds: f64,
+    /// Measured wallclock of the in-process reduce folds, seconds, summed
+    /// over passes. Reported for the per-phase benchmarks regardless of
+    /// how the fold is *charged* (see `decode_seconds`).
+    pub reduce_seconds: f64,
     /// Measured decode wallclock, seconds: the final decode plus — for
     /// all-gather algorithms only — the per-worker fold over the n
-    /// messages. In-flight reductions (all-reduce / INA) are untimed:
-    /// their cost belongs to the `netsim` comm model.
+    /// messages. In-flight reductions (all-reduce / INA) are not charged
+    /// here: their cost belongs to the `netsim` comm model.
     pub decode_seconds: f64,
     /// Largest |integer| in the aggregated message (paper Fig. 6); 0 when
     /// the algorithm does not produce integers.

@@ -8,7 +8,10 @@
 use crate::coordinator::RoundCtx;
 use crate::util::Rng;
 
-use super::engine::{Message, PassOutcome, PassPlan, PhasedCompressor, RankEncoder};
+use super::engine::{
+    Message, PassOutcome, PassPlan, PhasedCompressor, RankEncoder, RankMessages,
+    Reducer, RoundArena,
+};
 use super::{CommOp, Primitive, RoundResult};
 
 /// Encoded message: packed sign bits + per-coordinate exponents.
@@ -146,11 +149,17 @@ impl PhasedCompressor for NatSgd {
         PassPlan::Plain
     }
 
-    fn reduce(&mut self, msgs: &[&Message], _plan: &PassPlan, ctx: &RoundCtx) -> PassOutcome {
+    fn reduce(
+        &mut self,
+        msgs: &RankMessages,
+        _plan: &PassPlan,
+        ctx: &RoundCtx,
+        _red: &mut dyn Reducer,
+    ) -> PassOutcome {
         let d = ctx.d;
         self.acc.clear();
         self.acc.resize(d, 0.0);
-        for m in msgs {
+        for m in msgs.iter() {
             NatSgd::decode(m.as_nat(), &mut self.scratch);
             for (o, &x) in self.acc.iter_mut().zip(&self.scratch) {
                 *o += x;
@@ -163,14 +172,19 @@ impl PhasedCompressor for NatSgd {
         PassOutcome::Done
     }
 
-    fn decode(&mut self, _ctx: &RoundCtx) -> RoundResult {
+    fn decode(&mut self, _ctx: &RoundCtx, arena: &mut RoundArena) -> RoundResult {
+        let mut gtilde = arena.take_f32();
+        std::mem::swap(&mut gtilde, &mut self.acc);
+        let mut comm = arena.take_comm();
+        comm.push(CommOp {
+            primitive: Primitive::AllGather,
+            bytes_per_worker: Self::wire_bytes(self.d),
+        });
         RoundResult {
-            gtilde: std::mem::take(&mut self.acc),
-            comm: vec![CommOp {
-                primitive: Primitive::AllGather,
-                bytes_per_worker: Self::wire_bytes(self.d),
-            }],
+            gtilde,
+            comm,
             encode_seconds: 0.0,
+            reduce_seconds: 0.0,
             decode_seconds: 0.0,
             max_abs_int: 0,
             alpha: 0.0,

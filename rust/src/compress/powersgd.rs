@@ -27,6 +27,7 @@ use crate::util::Rng;
 
 use super::engine::{
     mean_dense_into, Message, PassOutcome, PassPlan, PhasedCompressor, RankEncoder,
+    RankMessages, Reducer, RoundArena,
 };
 use super::{CommOp, ErrorFeedback, Primitive, RoundResult};
 
@@ -151,7 +152,7 @@ impl PowerSgd {
     }
 
     /// Sum the rank messages elementwise into `self.mean` and divide by n.
-    fn mean_of(&mut self, msgs: &[&Message]) {
+    fn mean_of(&mut self, msgs: &RankMessages) {
         mean_dense_into(msgs, &mut self.mean);
     }
 }
@@ -302,7 +303,13 @@ impl PhasedCompressor for PowerSgd {
         PassPlan::PowerP { qs: Arc::clone(&self.qs) }
     }
 
-    fn reduce(&mut self, msgs: &[&Message], plan: &PassPlan, ctx: &RoundCtx) -> PassOutcome {
+    fn reduce(
+        &mut self,
+        msgs: &RankMessages,
+        plan: &PassPlan,
+        ctx: &RoundCtx,
+        _red: &mut dyn Reducer,
+    ) -> PassOutcome {
         let r = self.rank;
         match plan {
             PassPlan::PowerP { .. } => {
@@ -390,14 +397,17 @@ impl PhasedCompressor for PowerSgd {
         }
     }
 
-    fn decode(&mut self, _ctx: &RoundCtx) -> RoundResult {
+    fn decode(&mut self, _ctx: &RoundCtx, arena: &mut RoundArena) -> RoundResult {
+        let mut gtilde = arena.take_f32();
+        std::mem::swap(&mut gtilde, &mut self.gtilde);
+        let mut comm = arena.take_comm();
+        // two all-reduce rounds (P then Q) + uncompressed vectors
+        comm.push(CommOp { primitive: Primitive::AllReduce, bytes_per_worker: self.bytes });
         RoundResult {
-            gtilde: std::mem::take(&mut self.gtilde),
-            comm: vec![
-                // two all-reduce rounds (P then Q) + uncompressed vectors
-                CommOp { primitive: Primitive::AllReduce, bytes_per_worker: self.bytes },
-            ],
+            gtilde,
+            comm,
             encode_seconds: 0.0,
+            reduce_seconds: 0.0,
             decode_seconds: 0.0,
             max_abs_int: 0,
             alpha: 0.0,

@@ -18,7 +18,7 @@ use crate::util::Rng;
 
 use super::engine::{
     spans_from_ctx, BlockSpan, Message, PassOutcome, PassPlan, PhasedCompressor,
-    RankEncoder,
+    RankEncoder, RankMessages, Reducer, RoundArena,
 };
 use super::{CommOp, Primitive, RoundResult};
 
@@ -194,14 +194,20 @@ impl PhasedCompressor for Qsgd {
         PassPlan::Buckets { spans, levels: self.levels }
     }
 
-    fn reduce(&mut self, msgs: &[&Message], _plan: &PassPlan, ctx: &RoundCtx) -> PassOutcome {
+    fn reduce(
+        &mut self,
+        msgs: &RankMessages,
+        _plan: &PassPlan,
+        ctx: &RoundCtx,
+        _red: &mut dyn Reducer,
+    ) -> PassOutcome {
         // all-gather + decode + average at every worker (this n-message
         // decode loop IS the per-worker cost: every worker decodes all n)
         let d = ctx.d;
         let s = self.levels as f32;
         self.acc.clear();
         self.acc.resize(d, 0.0);
-        for m in msgs {
+        for m in msgs.iter() {
             let mut j = 0;
             for b in m.as_buckets() {
                 for &l in &b.levels {
@@ -218,14 +224,19 @@ impl PhasedCompressor for Qsgd {
         PassOutcome::Done
     }
 
-    fn decode(&mut self, _ctx: &RoundCtx) -> RoundResult {
+    fn decode(&mut self, _ctx: &RoundCtx, arena: &mut RoundArena) -> RoundResult {
+        let mut gtilde = arena.take_f32();
+        std::mem::swap(&mut gtilde, &mut self.acc);
+        let mut comm = arena.take_comm();
+        comm.push(CommOp {
+            primitive: Primitive::AllGather,
+            bytes_per_worker: Self::wire_bytes_for(self.d, self.nbuckets),
+        });
         RoundResult {
-            gtilde: std::mem::take(&mut self.acc),
-            comm: vec![CommOp {
-                primitive: Primitive::AllGather,
-                bytes_per_worker: Self::wire_bytes_for(self.d, self.nbuckets),
-            }],
+            gtilde,
+            comm,
             encode_seconds: 0.0,
+            reduce_seconds: 0.0,
             decode_seconds: 0.0,
             max_abs_int: 0,
             alpha: 0.0,

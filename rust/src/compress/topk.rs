@@ -8,7 +8,10 @@
 
 use crate::coordinator::RoundCtx;
 
-use super::engine::{Message, PassOutcome, PassPlan, PhasedCompressor, RankEncoder};
+use super::engine::{
+    Message, PassOutcome, PassPlan, PhasedCompressor, RankEncoder, RankMessages,
+    Reducer, RoundArena,
+};
 use super::{CommOp, ErrorFeedback, Primitive, RoundResult};
 
 pub struct TopK {
@@ -133,10 +136,16 @@ impl PhasedCompressor for TopK {
         PassPlan::Plain
     }
 
-    fn reduce(&mut self, msgs: &[&Message], _plan: &PassPlan, ctx: &RoundCtx) -> PassOutcome {
+    fn reduce(
+        &mut self,
+        msgs: &RankMessages,
+        _plan: &PassPlan,
+        ctx: &RoundCtx,
+        _red: &mut dyn Reducer,
+    ) -> PassOutcome {
         self.acc.clear();
         self.acc.resize(ctx.d, 0.0);
-        for m in msgs {
+        for m in msgs.iter() {
             for &(j, v) in m.as_sparse() {
                 self.acc[j as usize] += v;
             }
@@ -148,14 +157,19 @@ impl PhasedCompressor for TopK {
         PassOutcome::Done
     }
 
-    fn decode(&mut self, _ctx: &RoundCtx) -> RoundResult {
+    fn decode(&mut self, _ctx: &RoundCtx, arena: &mut RoundArena) -> RoundResult {
+        let mut gtilde = arena.take_f32();
+        std::mem::swap(&mut gtilde, &mut self.acc);
+        let mut comm = arena.take_comm();
+        comm.push(CommOp {
+            primitive: Primitive::AllGather,
+            bytes_per_worker: self.k_of(self.d) * 8, // u32 index + f32 value
+        });
         RoundResult {
-            gtilde: std::mem::take(&mut self.acc),
-            comm: vec![CommOp {
-                primitive: Primitive::AllGather,
-                bytes_per_worker: self.k_of(self.d) * 8, // u32 index + f32 value
-            }],
+            gtilde,
+            comm,
             encode_seconds: 0.0,
+            reduce_seconds: 0.0,
             decode_seconds: 0.0,
             max_abs_int: 0,
             alpha: 0.0,

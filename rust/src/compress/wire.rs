@@ -10,9 +10,16 @@
 
 use anyhow::{anyhow, Result};
 
+use super::intvec::{IntVec, Lanes};
 use super::natsgd::{NatMsg, EXP_ZERO};
 use super::qsgd::QsgdBucket;
 use super::signsgd::SignMsg;
+
+/// Both bitstream halves move at most 57 bits per call: the 64-bit
+/// staging word holds up to 7 residual bits, so a 58-bit-plus operand
+/// would shift data off its top end (and `(1u64 << 64)` is not even a
+/// defined mask). The writer asserts, the reader reports a decode error.
+pub const MAX_BITS_PER_OP: u32 = 57;
 
 /// Little-endian bit writer.
 #[derive(Default)]
@@ -28,7 +35,10 @@ impl BitWriter {
     }
 
     pub fn push(&mut self, value: u64, nbits: u32) {
-        debug_assert!(nbits <= 57, "push up to 57 bits at a time");
+        assert!(
+            nbits <= MAX_BITS_PER_OP,
+            "push up to {MAX_BITS_PER_OP} bits at a time (got {nbits})"
+        );
         self.cur |= value << self.bits;
         self.bits += nbits;
         while self.bits >= 8 {
@@ -60,6 +70,14 @@ impl<'a> BitReader<'a> {
     }
 
     pub fn pull(&mut self, nbits: u32) -> Result<u64> {
+        // A 64-bit pull used to slip past this point and silently return
+        // a zero mask in release builds ((1u64 << 64) - 1 wraps to 0);
+        // reject anything beyond the staging word's guaranteed headroom.
+        if nbits > MAX_BITS_PER_OP {
+            return Err(anyhow!(
+                "pull up to {MAX_BITS_PER_OP} bits at a time (got {nbits})"
+            ));
+        }
         while self.bits < nbits {
             let byte = *self
                 .buf
@@ -121,39 +139,73 @@ pub fn unzigzag(v: u64) -> i64 {
 // IntSGD payloads
 // ---------------------------------------------------------------------------
 
-/// Pack clipped integers as int8 (caller guarantees |v| <= 127).
-pub fn encode_int8(ints: &[i64]) -> Result<Vec<u8>> {
-    ints.iter()
-        .map(|&v| {
-            i8::try_from(v)
-                .map(|x| x as u8)
-                .map_err(|_| anyhow!("{v} out of int8 range"))
-        })
-        .collect()
-}
-
-pub fn decode_int8(bytes: &[u8]) -> Vec<i64> {
-    bytes.iter().map(|&b| b as i8 as i64).collect()
-}
-
-/// Pack as int32 LE.
-pub fn encode_int32(ints: &[i64]) -> Result<Vec<u8>> {
-    let mut out = Vec::with_capacity(ints.len() * 4);
-    for &v in ints {
-        let x = i32::try_from(v).map_err(|_| anyhow!("{v} out of int32 range"))?;
-        out.extend_from_slice(&x.to_le_bytes());
+/// Pack an integer message as int8. When the payload already lives in i8
+/// lanes — the IntSGD int8 hot path — this is a memcpy-shaped pass (cast
+/// each lane to its byte, no range check: the lane *is* the proof); wider
+/// lanes are range-checked per element.
+pub fn encode_int8(ints: &IntVec) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(ints.len());
+    match ints {
+        IntVec::I8(v) => out.extend(v.iter().map(|&x| x as u8)),
+        _ => {
+            for j in 0..ints.len() {
+                let v = ints.get(j);
+                let x =
+                    i8::try_from(v).map_err(|_| anyhow!("{v} out of int8 range"))?;
+                out.push(x as u8);
+            }
+        }
     }
     Ok(out)
 }
 
-pub fn decode_int32(bytes: &[u8]) -> Result<Vec<i64>> {
+pub fn decode_int8(bytes: &[u8]) -> IntVec {
+    IntVec::I8(bytes.iter().map(|&b| b as i8).collect())
+}
+
+/// Pack an integer message as int32 LE; i8/i32 lanes need no range check.
+pub fn encode_int32(ints: &IntVec) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(ints.len() * 4);
+    match ints {
+        IntVec::I8(v) => {
+            for &x in v {
+                out.extend_from_slice(&(x as i32).to_le_bytes());
+            }
+        }
+        IntVec::I32(v) => {
+            for &x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        IntVec::I64(v) => {
+            for &x in v {
+                let y =
+                    i32::try_from(x).map_err(|_| anyhow!("{x} out of int32 range"))?;
+                out.extend_from_slice(&y.to_le_bytes());
+            }
+        }
+    }
+    Ok(out)
+}
+
+pub fn decode_int32(bytes: &[u8]) -> Result<IntVec> {
     if bytes.len() % 4 != 0 {
         return Err(anyhow!("int32 payload not 4-aligned"));
     }
-    Ok(bytes
-        .chunks_exact(4)
-        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as i64)
-        .collect())
+    Ok(IntVec::I32(
+        bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect(),
+    ))
+}
+
+/// Round-trip helper: encode at the message's own lane width.
+pub fn encode_ints(ints: &IntVec) -> Result<Vec<u8>> {
+    match ints.lanes() {
+        Lanes::I8 => encode_int8(ints),
+        _ => encode_int32(ints),
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -237,19 +289,37 @@ pub fn decode_qsgd(bytes: &[u8]) -> Result<Vec<QsgdBucket>> {
 // Sparse (top-k): varint-delta indices + f32 values
 // ---------------------------------------------------------------------------
 
-pub fn encode_sparse(entries: &[(u32, f32)]) -> Vec<u8> {
-    let mut sorted = entries.to_vec();
-    sorted.sort_by_key(|&(i, _)| i);
-    let mut out = Vec::new();
-    write_varint(&mut out, sorted.len() as u64);
+/// Delta-varint encode into reused buffers: `order` holds the index
+/// permutation (sorted by coordinate — entries are never copied, only the
+/// u32 permutation is sorted) and `out` receives the byte stream. Indices
+/// are unique per message (a top-k support), so the unstable sort is
+/// deterministic.
+pub fn encode_sparse_with(
+    entries: &[(u32, f32)],
+    order: &mut Vec<u32>,
+    out: &mut Vec<u8>,
+) {
+    order.clear();
+    order.extend(0..entries.len() as u32);
+    order.sort_unstable_by_key(|&k| entries[k as usize].0);
+    out.clear();
+    write_varint(out, entries.len() as u64);
     let mut prev = 0u32;
-    for &(i, _) in &sorted {
-        write_varint(&mut out, (i - prev) as u64);
+    for &k in order.iter() {
+        let i = entries[k as usize].0;
+        write_varint(out, (i - prev) as u64);
         prev = i;
     }
-    for &(_, v) in &sorted {
-        out.extend_from_slice(&v.to_le_bytes());
+    for &k in order.iter() {
+        out.extend_from_slice(&entries[k as usize].1.to_le_bytes());
     }
+}
+
+/// Allocating convenience wrapper around [`encode_sparse_with`].
+pub fn encode_sparse(entries: &[(u32, f32)]) -> Vec<u8> {
+    let mut order = Vec::new();
+    let mut out = Vec::new();
+    encode_sparse_with(entries, &mut order, &mut out);
     out
 }
 
@@ -314,7 +384,15 @@ mod tests {
     #[test]
     fn bitstream_roundtrip() {
         let mut w = BitWriter::new();
-        let vals = [(5u64, 3u32), (1, 1), (511, 9), (0, 9), (123456, 17)];
+        let vals = [
+            (5u64, 3u32),
+            (1, 1),
+            (511, 9),
+            (0, 9),
+            (123456, 17),
+            // the widest legal operand, with its top bit set
+            ((1u64 << 56) | 12345, MAX_BITS_PER_OP),
+        ];
         for &(v, n) in &vals {
             w.push(v, n);
         }
@@ -323,7 +401,32 @@ mod tests {
         for &(v, n) in &vals {
             assert_eq!(r.pull(n).unwrap(), v);
         }
-        assert!(r.pull(64).is_err() || bytes.len() * 8 >= 39 + 64);
+    }
+
+    #[test]
+    fn bitstream_rejects_oversized_pulls() {
+        // 64-bit pulls used to wrap the mask to zero in release builds;
+        // now every oversized width is an explicit decode error, even when
+        // the stream holds plenty of data.
+        let mut w = BitWriter::new();
+        for _ in 0..4 {
+            w.push(u32::MAX as u64, 32);
+        }
+        let bytes = w.finish();
+        for nbits in [MAX_BITS_PER_OP + 1, 63, 64] {
+            let mut r = BitReader::new(&bytes);
+            let err = r.pull(nbits).expect_err("oversized pull must fail");
+            assert!(err.to_string().contains("57"), "{err}");
+        }
+        // and the cap itself still works
+        let mut r = BitReader::new(&bytes);
+        assert!(r.pull(MAX_BITS_PER_OP).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "57 bits")]
+    fn bitstream_writer_rejects_oversized_pushes() {
+        BitWriter::new().push(1, 64);
     }
 
     #[test]
@@ -344,12 +447,25 @@ mod tests {
 
     #[test]
     fn int8_int32_roundtrip_and_range_checks() {
+        use crate::compress::intvec::Lanes;
         let ints = vec![-128i64, -1, 0, 1, 127];
-        assert_eq!(decode_int8(&encode_int8(&ints).unwrap()), ints);
-        assert!(encode_int8(&[200]).is_err());
+        // native i8 lanes: the memcpy path
+        let typed = IntVec::from_i64(&ints, Lanes::I8);
+        assert_eq!(decode_int8(&encode_int8(&typed).unwrap()).to_i64_vec(), ints);
+        // widened lanes carrying int8-range values: the checked path
+        let widened = IntVec::from_i64(&ints, Lanes::I64);
+        assert_eq!(decode_int8(&encode_int8(&widened).unwrap()).to_i64_vec(), ints);
+        assert!(encode_int8(&IntVec::from_i64(&[200], Lanes::I64)).is_err());
         let big = vec![i32::MIN as i64, -7, 0, i32::MAX as i64];
-        assert_eq!(decode_int32(&encode_int32(&big).unwrap()).unwrap(), big);
-        assert!(encode_int32(&[i64::MAX]).is_err());
+        let typed32 = IntVec::from_i64(&big, Lanes::I32);
+        assert_eq!(
+            decode_int32(&encode_int32(&typed32).unwrap()).unwrap().to_i64_vec(),
+            big
+        );
+        assert!(encode_int32(&IntVec::from_i64(&[i64::MAX], Lanes::I64)).is_err());
+        // lane-dispatching helper agrees with the direct codecs
+        assert_eq!(encode_ints(&typed).unwrap(), encode_int8(&typed).unwrap());
+        assert_eq!(encode_ints(&typed32).unwrap(), encode_int32(&typed32).unwrap());
     }
 
     #[test]

@@ -10,15 +10,17 @@
 //!   ------                         -------------------
 //!   broadcast x^k     ──────────▶  compute g_i^k on local shard
 //!   collect g_i^k     ◀──────────  send gradient
-//!   ship encoders     ──────────▶  encode phase (rank-local state)
-//!   collect messages  ◀──────────  send encoded message
-//!   reduce + decode (compress::engine::RoundEngine)
-//!   optimizer step -> x^{k+1}; account comm time via netsim
+//!   share grad views  ──────────▶  encode in place (rank-local state)
+//!   collect acks      ◀──────────  typed wire message ready
+//!   reduce (integer sums chunked back across the pool) + decode
+//!   optimizer step -> x^{k+1}; account comm time via netsim;
+//!   hand round buffers back (RoundEngine::reclaim)
 //!
 //! The encode phase of each compression round runs *inside the worker
 //! threads* (`RoundEngine::round_parallel`), so the recorded overhead is
 //! the straggler max a real synchronous round pays — not an n-fold
-//! serialization on the leader divided by n after the fact.
+//! serialization on the leader divided by n after the fact. Steady-state
+//! compression rounds are allocation-free (see `compress::engine`).
 //!
 //! Workers that need non-Send resources (PJRT clients are Rc-backed)
 //! construct them inside their own thread from a `Send` factory.
@@ -27,7 +29,7 @@ pub mod pjrt_worker;
 pub mod worker;
 
 pub use pjrt_worker::{BatchSpec, PjrtEvaluator, PjrtWorker};
-pub use worker::{EncodeDone, EncodeTask, GradientSource, WorkerPool};
+pub use worker::{GradientSource, WorkerPool};
 
 use crate::compress::engine::RoundEngine;
 use crate::netsim::Network;
@@ -192,7 +194,7 @@ impl Coordinator {
             let lr = cfg.schedule.lr_at(round);
 
             // 1. broadcast params, collect worker gradients (threads)
-            let (mut grads, losses, compute_seconds) =
+            let (grads, losses, compute_seconds) =
                 pool.compute_round(&self.params, round);
 
             // 2. compress + aggregate: encode back on the worker threads,
@@ -208,7 +210,7 @@ impl Coordinator {
                 step_norm_sq,
                 blocks: std::mem::take(&mut blocks),
             };
-            let result = engine.round_parallel(pool, &mut grads, &ctx);
+            let result = engine.round_parallel(pool, &grads, &ctx);
             blocks = ctx.blocks; // reclaim the buffer for the next round
 
             // 3. optimizer step
@@ -228,6 +230,9 @@ impl Coordinator {
                 overhead_seconds: result.encode_seconds + result.decode_seconds,
                 comm_seconds,
             });
+            // hand the round's buffers back so steady-state rounds stay
+            // off the allocator
+            engine.reclaim(result);
 
             if cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0 {
                 if let Some(f) = eval.as_deref_mut() {

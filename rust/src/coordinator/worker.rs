@@ -5,14 +5,33 @@
 //! same pattern a real multi-process launcher would use (each rank opens
 //! its own device).
 //!
-//! Besides gradient rounds, the pool executes the compression engine's
-//! **encode phase**: the leader ships each rank its encoder (the rank's
-//! `Send` compression state), the worker thread encodes its own gradient,
-//! and the message travels back. This is what makes the reported encode
-//! cost a true straggler max instead of a leader-thread serialization.
+//! Besides gradient rounds, the pool executes two phases of the
+//! compression engine:
+//!
+//! - **encode**: rank i's encoder runs on worker thread i, in place over
+//!   the leader's gradient slice — the reported encode cost is a true
+//!   straggler max instead of a leader-thread serialization;
+//! - **integer reduce**: the rank messages are summed coordinate-chunk by
+//!   coordinate-chunk across the worker threads, each chunk folding the
+//!   ranks in rank order (bit-identical to the serial fold — integer
+//!   addition is exactly associative).
+//!
+//! **Plumbing.** Each worker owns a pair of fixed single-slot mailboxes
+//! (job in, reply out) built on `Mutex<Option<T>>` + `Condvar` — unlike an
+//! mpsc channel, posting a message writes a slot instead of allocating a
+//! list node, which keeps steady-state engine rounds allocation-free
+//! (`tests/zero_alloc.rs`). The protocol is strictly fan-out/fan-in: the
+//! leader posts at most one job per worker, then blocks until it has
+//! collected every reply. That blocking discipline is also what makes the
+//! borrowed-data jobs sound: encode and reduce jobs carry raw views into
+//! leader-owned state (gradients, encoders, the shared plan, disjoint
+//! output chunks), and the leader provably does not move, mutate, or free
+//! any of it until all acks are in. Worker panics are caught and reported
+//! as a reply, so a failing encoder surfaces as a leader panic instead of
+//! a deadlocked mailbox.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -26,39 +45,155 @@ pub trait GradientSource {
     fn grad(&mut self, params: &[f32], round: usize) -> (f32, Vec<f32>);
 }
 
-/// One rank's encode job: its encoder, its gradient, and the round plan
-/// shared by all ranks. Everything owned moves back in [`EncodeDone`].
-pub struct EncodeTask {
-    pub rank: usize,
-    pub encoder: Box<dyn RankEncoder>,
-    pub grad: Vec<f32>,
-    pub plan: Arc<PassPlan>,
+/// One-message mailbox. `put` blocks while the slot is full (never, under
+/// the fan-out/fan-in protocol), `take` blocks until a message arrives.
+struct Slot<T> {
+    inner: Mutex<Option<T>>,
+    cv: Condvar,
 }
 
-/// The completed encode job: encoder (holding its message) and gradient
-/// return to the leader, plus the measured encode wallclock.
-pub struct EncodeDone {
-    pub rank: usize,
-    pub encoder: Box<dyn RankEncoder>,
-    pub grad: Vec<f32>,
-    pub seconds: f64,
+impl<T> Slot<T> {
+    fn new() -> Self {
+        Slot { inner: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn put(&self, value: T) {
+        let mut guard = self.inner.lock().expect("mailbox poisoned");
+        while guard.is_some() {
+            guard = self.cv.wait(guard).expect("mailbox poisoned");
+        }
+        *guard = Some(value);
+        self.cv.notify_all();
+    }
+
+    fn take(&self) -> T {
+        let mut guard = self.inner.lock().expect("mailbox poisoned");
+        loop {
+            if let Some(value) = guard.take() {
+                self.cv.notify_all();
+                return value;
+            }
+            guard = self.cv.wait(guard).expect("mailbox poisoned");
+        }
+    }
 }
+
+/// Borrowed view of one rank's encoder, valid for the duration of one
+/// blocking round (see the module docs for the soundness argument).
+#[derive(Clone, Copy)]
+struct EncoderMut(*mut Box<dyn RankEncoder>);
+// SAFETY: points at leader-owned memory that only the receiving worker
+// touches until the leader has collected that worker's ack.
+unsafe impl Send for EncoderMut {}
+
+/// Borrowed view of the full encoder slice (shared, read-only).
+#[derive(Clone, Copy)]
+struct EncodersRef {
+    ptr: *const Box<dyn RankEncoder>,
+    len: usize,
+}
+// SAFETY: shared read-only view of leader-owned memory, live until every
+// worker acks; `RankEncoder: Sync` makes the concurrent reads legal.
+unsafe impl Send for EncodersRef {}
+
+/// Borrowed view of one rank's gradient (shared, read-only).
+#[derive(Clone, Copy)]
+struct GradRef {
+    ptr: *const f32,
+    len: usize,
+}
+// SAFETY: as EncodersRef.
+unsafe impl Send for GradRef {}
+
+/// Borrowed view of the pass plan (shared, read-only).
+#[derive(Clone, Copy)]
+struct PlanRef(*const PassPlan);
+// SAFETY: as EncodersRef.
+unsafe impl Send for PlanRef {}
+
+/// Borrowed view of one worker's exclusive output chunk.
+#[derive(Clone, Copy)]
+struct SumChunk {
+    ptr: *mut i64,
+    len: usize,
+    /// Coordinate offset of the chunk within the messages.
+    lo: usize,
+}
+// SAFETY: chunks handed to different workers are disjoint, and the leader
+// does not touch the buffer until every worker acks.
+unsafe impl Send for SumChunk {}
 
 enum ToWorker {
     Round { params: Arc<Vec<f32>>, round: usize },
-    Encode(EncodeTask),
+    Encode { enc: EncoderMut, grad: GradRef, plan: PlanRef },
+    SumInts { encs: EncodersRef, chunk: SumChunk },
     Stop,
 }
 
 enum FromWorker {
-    Grad { rank: usize, loss: f32, grad: Vec<f32>, seconds: f64 },
-    Encoded(EncodeDone),
+    Grad { loss: f32, grad: Vec<f32>, seconds: f64 },
+    Encoded { seconds: f64 },
+    Summed,
+    Panicked(String),
+}
+
+struct WorkerLink {
+    job: Arc<Slot<ToWorker>>,
+    reply: Arc<Slot<FromWorker>>,
 }
 
 pub struct WorkerPool {
-    senders: Vec<Sender<ToWorker>>,
-    receiver: Receiver<FromWorker>,
+    links: Vec<WorkerLink>,
     handles: Vec<JoinHandle<()>>,
+}
+
+/// Below this coordinate count the fan-out overhead of a chunked reduce
+/// exceeds the fold itself; the leader sums inline instead. Chunking is
+/// a pure execution-strategy choice — results are bit-identical.
+const PARALLEL_SUM_MIN_D: usize = 1 << 15;
+
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+/// Execute one job on the worker thread.
+fn run_job(source: &mut dyn GradientSource, job: ToWorker) -> FromWorker {
+    match job {
+        ToWorker::Round { params, round } => {
+            let t0 = Instant::now();
+            let (loss, grad) = source.grad(&params, round);
+            FromWorker::Grad { loss, grad, seconds: t0.elapsed().as_secs_f64() }
+        }
+        ToWorker::Encode { enc, grad, plan } => {
+            // SAFETY: leader-owned borrows, live until this worker's ack
+            // is collected; the encoder pointer is exclusive to this
+            // worker (module docs).
+            let enc = unsafe { &mut *enc.0 };
+            let grad = unsafe { std::slice::from_raw_parts(grad.ptr, grad.len) };
+            let plan = unsafe { &*plan.0 };
+            let t0 = Instant::now();
+            enc.encode(grad, plan);
+            FromWorker::Encoded { seconds: t0.elapsed().as_secs_f64() }
+        }
+        ToWorker::SumInts { encs, chunk } => {
+            // SAFETY: shared read-only encoder slice; the output chunk is
+            // exclusive to this worker and disjoint from every other
+            // worker's chunk (module docs).
+            let encs = unsafe { std::slice::from_raw_parts(encs.ptr, encs.len) };
+            let out = unsafe { std::slice::from_raw_parts_mut(chunk.ptr, chunk.len) };
+            for enc in encs {
+                enc.message().as_ints().add_range_to(chunk.lo, out);
+            }
+            FromWorker::Summed
+        }
+        ToWorker::Stop => unreachable!("Stop is handled by the worker loop"),
+    }
 }
 
 impl WorkerPool {
@@ -67,56 +202,49 @@ impl WorkerPool {
     pub fn spawn(
         factories: Vec<Box<dyn FnOnce() -> Box<dyn GradientSource> + Send>>,
     ) -> Self {
-        let (tx_out, rx_out) = channel::<FromWorker>();
-        let mut senders = Vec::new();
+        let mut links = Vec::new();
         let mut handles = Vec::new();
         for (rank, factory) in factories.into_iter().enumerate() {
-            let (tx_in, rx_in) = channel::<ToWorker>();
-            let tx_out = tx_out.clone();
+            let job = Arc::new(Slot::new());
+            let reply = Arc::new(Slot::new());
+            let job_w = Arc::clone(&job);
+            let reply_w = Arc::clone(&reply);
             let handle = std::thread::Builder::new()
                 .name(format!("worker-{rank}"))
                 .spawn(move || {
-                    let mut source = factory();
-                    while let Ok(msg) = rx_in.recv() {
-                        match msg {
-                            ToWorker::Stop => break,
-                            ToWorker::Round { params, round } => {
-                                let t0 = Instant::now();
-                                let (loss, grad) = source.grad(&params, round);
-                                let seconds = t0.elapsed().as_secs_f64();
-                                if tx_out
-                                    .send(FromWorker::Grad { rank, loss, grad, seconds })
-                                    .is_err()
-                                {
-                                    break;
-                                }
-                            }
-                            ToWorker::Encode(mut task) => {
-                                let t0 = Instant::now();
-                                task.encoder.encode(&task.grad, &task.plan);
-                                let seconds = t0.elapsed().as_secs_f64();
-                                let done = EncodeDone {
-                                    rank: task.rank,
-                                    encoder: task.encoder,
-                                    grad: task.grad,
-                                    seconds,
-                                };
-                                if tx_out.send(FromWorker::Encoded(done)).is_err() {
-                                    break;
-                                }
-                            }
+                    // A factory panic must not kill the thread before the
+                    // job loop: a dead mailbox would hang the leader's
+                    // fan-in forever. Keep serving the protocol, answering
+                    // every job with the construction failure instead.
+                    let mut source = catch_unwind(AssertUnwindSafe(factory))
+                        .map_err(|p| format!(
+                            "gradient source construction panicked: {}",
+                            panic_text(&*p)
+                        ));
+                    loop {
+                        let msg = job_w.take();
+                        if matches!(msg, ToWorker::Stop) {
+                            break;
                         }
+                        let reply = match &mut source {
+                            Ok(src) => catch_unwind(AssertUnwindSafe(|| {
+                                run_job(src.as_mut(), msg)
+                            }))
+                            .unwrap_or_else(|p| FromWorker::Panicked(panic_text(&*p))),
+                            Err(why) => FromWorker::Panicked(why.clone()),
+                        };
+                        reply_w.put(reply);
                     }
                 })
                 .expect("spawn worker thread");
-            senders.push(tx_in);
+            links.push(WorkerLink { job, reply });
             handles.push(handle);
         }
-        WorkerPool { senders, receiver: rx_out, handles }
+        WorkerPool { links, handles }
     }
 
-    /// A pool whose workers only serve the encode phase (benchmarks and
-    /// parity tests that feed gradients from outside).
+    /// A pool whose workers only serve the compression phases (benchmarks
+    /// and parity tests that feed gradients from outside).
     pub fn for_encode(n: usize) -> Self {
         struct Null;
         impl GradientSource for Null {
@@ -138,7 +266,7 @@ impl WorkerPool {
     }
 
     pub fn workers(&self) -> usize {
-        self.senders.len()
+        self.links.len()
     }
 
     /// Broadcast params, wait for all gradients. Returns per-rank grads &
@@ -149,76 +277,132 @@ impl WorkerPool {
         params: &[f32],
         round: usize,
     ) -> (Vec<Vec<f32>>, Vec<f32>, f64) {
-        let n = self.workers();
         let shared = Arc::new(params.to_vec());
-        for tx in &self.senders {
-            tx.send(ToWorker::Round { params: Arc::clone(&shared), round })
-                .expect("worker alive");
+        for link in &self.links {
+            link.job.put(ToWorker::Round { params: Arc::clone(&shared), round });
         }
-        let mut grads: Vec<Option<Vec<f32>>> = (0..n).map(|_| None).collect();
-        let mut losses = vec![0.0f32; n];
+        let n = self.workers();
+        let mut grads = Vec::with_capacity(n);
+        let mut losses = Vec::with_capacity(n);
         let mut max_seconds = 0.0f64;
-        for _ in 0..n {
-            match self.receiver.recv().expect("worker result") {
-                FromWorker::Grad { rank, loss, grad, seconds } => {
-                    losses[rank] = loss;
+        let mut failed: Option<(usize, String)> = None;
+        for (rank, link) in self.links.iter().enumerate() {
+            match link.reply.take() {
+                FromWorker::Grad { loss, grad, seconds } => {
+                    losses.push(loss);
                     max_seconds = max_seconds.max(seconds);
-                    grads[rank] = Some(grad);
+                    grads.push(grad);
                 }
-                FromWorker::Encoded(_) => {
-                    panic!("unexpected encode result during compute phase")
+                FromWorker::Panicked(msg) => {
+                    if failed.is_none() {
+                        failed = Some((rank, msg));
+                    }
+                    grads.push(Vec::new());
+                    losses.push(0.0);
                 }
+                _ => panic!("unexpected encode/reduce reply during compute phase"),
             }
         }
-        (
-            grads.into_iter().map(|g| g.expect("all ranks reported")).collect(),
-            losses,
-            max_seconds,
-        )
+        if let Some((rank, msg)) = failed {
+            panic!("worker result unavailable: rank {rank} compute panicked: {msg}");
+        }
+        (grads, losses, max_seconds)
     }
 
-    /// Run one encode pass: task i executes on worker thread i. Returns
-    /// the completed jobs in rank order plus the straggler (max) encode
-    /// time across ranks.
-    pub fn encode_round(&mut self, tasks: Vec<EncodeTask>) -> (Vec<EncodeDone>, f64) {
-        let n = tasks.len();
-        assert_eq!(n, self.workers(), "one encode task per worker");
-        for task in tasks {
-            let rank = task.rank;
-            self.senders[rank]
-                .send(ToWorker::Encode(task))
-                .expect("worker alive");
+    /// Run one encode pass: rank i's encoder executes on worker thread i,
+    /// in place, reading the leader's gradient slice and the shared plan.
+    /// Returns the straggler (max) encode time across ranks. Blocks until
+    /// every worker has acked (the soundness contract of the borrowed
+    /// views — see the module docs).
+    pub fn encode_round(
+        &mut self,
+        plan: &PassPlan,
+        encoders: &mut [Box<dyn RankEncoder>],
+        grads: &[Vec<f32>],
+    ) -> f64 {
+        let n = self.workers();
+        assert_eq!(encoders.len(), n, "one encoder per worker");
+        assert_eq!(grads.len(), n, "one gradient per worker");
+        let plan_ref = PlanRef(plan as *const PassPlan);
+        // iter_mut hands out disjoint element borrows, so each worker's
+        // raw encoder pointer derives from its own borrow (no slice-wide
+        // re-borrow between iterations)
+        for ((enc_slot, grad), link) in
+            encoders.iter_mut().zip(grads.iter()).zip(self.links.iter())
+        {
+            let enc = EncoderMut(enc_slot as *mut Box<dyn RankEncoder>);
+            let grad = GradRef { ptr: grad.as_ptr(), len: grad.len() };
+            link.job.put(ToWorker::Encode { enc, grad, plan: plan_ref });
         }
-        let mut done: Vec<Option<EncodeDone>> = (0..n).map(|_| None).collect();
         let mut straggler = 0.0f64;
-        for _ in 0..n {
-            match self.receiver.recv().expect("worker result") {
-                FromWorker::Encoded(item) => {
-                    straggler = straggler.max(item.seconds);
-                    let rank = item.rank;
-                    assert!(done[rank].is_none(), "duplicate encode result");
-                    done[rank] = Some(item);
+        let mut failed: Option<(usize, String)> = None;
+        // Collect EVERY ack before reporting a failure: the borrowed views
+        // must not outlive this call while a worker still holds them.
+        for (rank, link) in self.links.iter().enumerate() {
+            match link.reply.take() {
+                FromWorker::Encoded { seconds } => straggler = straggler.max(seconds),
+                FromWorker::Panicked(msg) => {
+                    if failed.is_none() {
+                        failed = Some((rank, msg));
+                    }
                 }
-                FromWorker::Grad { .. } => {
-                    panic!("unexpected gradient during encode phase")
-                }
+                _ => panic!("unexpected gradient reply during encode phase"),
             }
         }
-        (
-            done.into_iter().map(|d| d.expect("all ranks encoded")).collect(),
-            straggler,
-        )
+        if let Some((rank, msg)) = failed {
+            panic!("worker result unavailable: encode rank {rank} panicked: {msg}");
+        }
+        straggler
+    }
+
+    /// Sum the encoders' integer messages into `out` (already zeroed by
+    /// the caller), coordinate-chunked across the worker threads; each
+    /// chunk folds the ranks in rank order, so the result is bit-identical
+    /// to a serial fold. Small reductions run inline on the leader.
+    pub fn sum_ints_round(&mut self, encs: &[Box<dyn RankEncoder>], out: &mut [i64]) {
+        let d = out.len();
+        let n = self.workers();
+        if n <= 1 || d < PARALLEL_SUM_MIN_D {
+            for enc in encs {
+                enc.message().as_ints().add_range_to(0, out);
+            }
+            return;
+        }
+        let encs_ref = EncodersRef { ptr: encs.as_ptr(), len: encs.len() };
+        let base = out.as_mut_ptr();
+        for (w, link) in self.links.iter().enumerate() {
+            let lo = w * d / n;
+            let hi = (w + 1) * d / n;
+            // SAFETY: [lo, hi) ranges tile [0, d) disjointly across workers.
+            let chunk = SumChunk { ptr: unsafe { base.add(lo) }, len: hi - lo, lo };
+            link.job.put(ToWorker::SumInts { encs: encs_ref, chunk });
+        }
+        let mut failed: Option<(usize, String)> = None;
+        for (rank, link) in self.links.iter().enumerate() {
+            match link.reply.take() {
+                FromWorker::Summed => {}
+                FromWorker::Panicked(msg) => {
+                    if failed.is_none() {
+                        failed = Some((rank, msg));
+                    }
+                }
+                _ => panic!("unexpected reply during reduce phase"),
+            }
+        }
+        if let Some((rank, msg)) = failed {
+            panic!("worker result unavailable: reduce chunk {rank} panicked: {msg}");
+        }
     }
 
     /// Stop all workers and join their threads.
     pub fn shutdown(&mut self) {
-        for tx in &self.senders {
-            let _ = tx.send(ToWorker::Stop);
+        for link in &self.links {
+            link.job.put(ToWorker::Stop);
         }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
-        self.senders.clear();
+        self.links.clear();
     }
 }
 
@@ -234,6 +418,7 @@ impl Drop for WorkerPool {
 mod tests {
     use super::*;
     use crate::compress::engine::Message;
+    use crate::compress::intvec::{IntVec, Lanes};
 
     struct Echo {
         rank: usize,
@@ -301,8 +486,8 @@ mod tests {
     }
 
     /// An encoder that scales its gradient by its rank — enough to prove
-    /// the encode phase runs on the right thread with the right data and
-    /// that encoder + gradient round-trip intact.
+    /// the encode phase runs on the right thread over the right data and
+    /// that the in-place encoder state survives.
     struct ScaleByRank {
         rank: usize,
         msg: Message,
@@ -321,52 +506,115 @@ mod tests {
     }
 
     #[test]
-    fn encode_round_runs_each_rank_and_returns_state() {
+    fn encode_round_runs_each_rank_in_place() {
         let n = 4;
         let mut pool = WorkerPool::for_encode(n);
-        let plan = Arc::new(PassPlan::Plain);
+        let plan = PassPlan::Plain;
+        let mut encoders: Vec<Box<dyn RankEncoder>> = (0..n)
+            .map(|rank| {
+                Box::new(ScaleByRank { rank, msg: Message::Empty }) as Box<dyn RankEncoder>
+            })
+            .collect();
         for round in 0..3 {
-            let tasks: Vec<EncodeTask> = (0..n)
-                .map(|rank| EncodeTask {
-                    rank,
-                    encoder: Box::new(ScaleByRank { rank, msg: Message::Empty }),
-                    grad: vec![1.0 + round as f32; 2],
-                    plan: Arc::clone(&plan),
-                })
-                .collect();
-            let (done, straggler) = pool.encode_round(tasks);
+            let grads: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0 + round as f32; 2]).collect();
+            let straggler = pool.encode_round(&plan, &mut encoders, &grads);
             assert!(straggler >= 0.0);
-            for (rank, item) in done.iter().enumerate() {
-                assert_eq!(item.rank, rank);
-                assert_eq!(item.grad, vec![1.0 + round as f32; 2]);
+            for (rank, enc) in encoders.iter().enumerate() {
                 let expect = (1.0 + round as f32) * rank as f32;
-                assert_eq!(item.encoder.message().as_dense(), &[expect, expect]);
+                assert_eq!(enc.message().as_dense(), &[expect, expect]);
             }
         }
         pool.shutdown();
+    }
+
+    /// An encoder whose message is a fixed integer vector (for the
+    /// chunked-reduce test).
+    struct FixedInts {
+        msg: Message,
+    }
+
+    impl RankEncoder for FixedInts {
+        fn encode(&mut self, _grad: &[f32], _plan: &PassPlan) {}
+
+        fn message(&self) -> &Message {
+            &self.msg
+        }
+    }
+
+    #[test]
+    fn chunked_sum_matches_serial_fold() {
+        let n = 3;
+        // force the parallel path despite a small-ish d by using a size
+        // above the threshold
+        let d = PARALLEL_SUM_MIN_D + 17;
+        let encoders: Vec<Box<dyn RankEncoder>> = (0..n)
+            .map(|rank| {
+                let vals: Vec<i64> =
+                    (0..d).map(|j| ((j as i64 % 11) - 5) * (rank as i64 + 1)).collect();
+                Box::new(FixedInts {
+                    msg: Message::Ints(IntVec::from_i64(&vals, Lanes::I32)),
+                }) as Box<dyn RankEncoder>
+            })
+            .collect();
+        let mut serial = vec![0i64; d];
+        for enc in &encoders {
+            enc.message().as_ints().add_range_to(0, &mut serial);
+        }
+        let mut pool = WorkerPool::for_encode(n);
+        let mut chunked = vec![0i64; d];
+        pool.sum_ints_round(&encoders, &mut chunked);
+        pool.shutdown();
+        assert_eq!(serial, chunked);
     }
 
     #[test]
     fn compute_and_encode_interleave() {
         let mut pool = echo_pool(2, 2);
         let (grads, _, _) = pool.compute_round(&[0.0, 0.0], 1);
-        let plan = Arc::new(PassPlan::Plain);
-        let tasks: Vec<EncodeTask> = grads
-            .into_iter()
-            .enumerate()
-            .map(|(rank, grad)| EncodeTask {
-                rank,
-                encoder: Box::new(ScaleByRank { rank, msg: Message::Empty }),
-                grad,
-                plan: Arc::clone(&plan),
+        let plan = PassPlan::Plain;
+        let mut encoders: Vec<Box<dyn RankEncoder>> = (0..2)
+            .map(|rank| {
+                Box::new(ScaleByRank { rank, msg: Message::Empty }) as Box<dyn RankEncoder>
             })
             .collect();
-        let (done, _) = pool.encode_round(tasks);
+        let _ = pool.encode_round(&plan, &mut encoders, &grads);
         // rank 1's gradient was [2.0, 2.0]; scaled by rank 1 stays [2.0, 2.0]
-        assert_eq!(done[1].encoder.message().as_dense(), &[2.0, 2.0]);
+        assert_eq!(encoders[1].message().as_dense(), &[2.0, 2.0]);
         // and the pool still computes gradients afterwards
         let (grads, _, _) = pool.compute_round(&[0.0, 0.0], 2);
         assert_eq!(grads[0], vec![2.0, 2.0]);
         pool.shutdown();
+    }
+
+    #[test]
+    #[should_panic(expected = "worker result unavailable")]
+    fn factory_panic_fails_loudly_instead_of_deadlocking() {
+        // The thread must survive a factory panic and answer jobs with the
+        // failure — a silently dead mailbox would hang the leader forever.
+        let factories: Vec<Box<dyn FnOnce() -> Box<dyn GradientSource> + Send>> =
+            vec![Box::new(|| panic!("injected factory failure"))];
+        let mut pool = WorkerPool::spawn(factories);
+        let _ = pool.compute_round(&[0.0], 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker result unavailable")]
+    fn encode_panic_surfaces_on_leader() {
+        struct Exploding {
+            msg: Message,
+        }
+        impl RankEncoder for Exploding {
+            fn encode(&mut self, _grad: &[f32], _plan: &PassPlan) {
+                panic!("injected encode failure");
+            }
+            fn message(&self) -> &Message {
+                &self.msg
+            }
+        }
+        let mut pool = WorkerPool::for_encode(1);
+        let mut encoders: Vec<Box<dyn RankEncoder>> =
+            vec![Box::new(Exploding { msg: Message::Empty })];
+        let grads = vec![vec![0.0f32; 4]];
+        let _ = pool.encode_round(&PassPlan::Plain, &mut encoders, &grads);
     }
 }

@@ -13,10 +13,21 @@ pub trait AlphaRule: Send {
     /// Scalar alpha for the whole gradient.
     fn alpha(&mut self, ctx: &RoundCtx) -> f64;
 
-    /// Per-block alphas (default: the scalar broadcast over all blocks).
-    fn block_alphas(&mut self, ctx: &RoundCtx) -> Vec<f64> {
+    /// Per-block alphas written into a reused buffer (default: the scalar
+    /// broadcast over all blocks). This is the engine's entry point — it
+    /// runs every round, so implementations must not allocate in steady
+    /// state.
+    fn block_alphas_into(&mut self, ctx: &RoundCtx, out: &mut Vec<f64>) {
         let a = self.alpha(ctx);
-        vec![a; ctx.blocks.len().max(1)]
+        out.clear();
+        out.resize(ctx.blocks.len().max(1), a);
+    }
+
+    /// Allocating convenience wrapper around [`AlphaRule::block_alphas_into`].
+    fn block_alphas(&mut self, ctx: &RoundCtx) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.block_alphas_into(ctx, &mut out);
+        out
     }
 
     fn name(&self) -> String;
@@ -113,7 +124,7 @@ impl AlphaRule for BlockRule {
         alphas.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
-    fn block_alphas(&mut self, ctx: &RoundCtx) -> Vec<f64> {
+    fn block_alphas_into(&mut self, ctx: &RoundCtx, out: &mut Vec<f64>) {
         if self.r.len() != ctx.blocks.len() {
             self.r = vec![0.0; ctx.blocks.len()];
             self.initialized = false;
@@ -130,21 +141,19 @@ impl AlphaRule for BlockRule {
         }
         let eta = ctx.lr as f64;
         let d = ctx.d as f64;
-        ctx.blocks
-            .iter()
-            .zip(&self.r)
-            .map(|(b, &r)| {
-                let dl = b.dim as f64;
-                let denom =
-                    (2.0 * ctx.n as f64 * r + eta * eta * (dl / d) * self.eps * self.eps)
-                        .sqrt();
-                if denom == 0.0 {
-                    f64::INFINITY
-                } else {
-                    eta * dl.sqrt() / denom
-                }
-            })
-            .collect()
+        out.clear();
+        out.reserve(ctx.blocks.len());
+        for (b, &r) in ctx.blocks.iter().zip(&self.r) {
+            let dl = b.dim as f64;
+            let denom =
+                (2.0 * ctx.n as f64 * r + eta * eta * (dl / d) * self.eps * self.eps)
+                    .sqrt();
+            out.push(if denom == 0.0 {
+                f64::INFINITY
+            } else {
+                eta * dl.sqrt() / denom
+            });
+        }
     }
 
     fn name(&self) -> String {

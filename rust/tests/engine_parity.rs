@@ -1,11 +1,13 @@
-//! Golden parity: the parallel engine (encode on worker threads) must be
-//! bit-identical to the sequential reference for every compressor in the
-//! zoo, across worker counts and rounds — including the per-block alpha
-//! path (paper Alg. 2).
+//! Golden parity: the parallel engine (encode on worker threads, integer
+//! reduce coordinate-chunked across the pool) must be bit-identical to the
+//! sequential reference for every compressor in the zoo, across worker
+//! counts and rounds — including the per-block alpha path (paper Alg. 2).
 //!
 //! The guarantee rests on two design rules pinned here: encoders consume
-//! only their own state plus the shared plan, and reduction folds
-//! messages in rank order regardless of thread arrival order.
+//! only their own state plus the shared plan, and every reduce fold
+//! processes each coordinate's ranks in rank order — chunking coordinates
+//! across threads cannot change a bit because integer addition is exactly
+//! associative (fp32 folds never run chunked).
 
 use intsgd::compress::intsgd::{IntSgd, Rounding, WireInt};
 use intsgd::compress::powersgd::BlockShape;
@@ -56,10 +58,9 @@ fn assert_parity(
         let grads: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 0.5)).collect();
         let ctx = ctx_for(round, d, n, blocked);
         let a = seq.round_sequential(&grads, &ctx);
-        let mut owned = grads.clone();
-        let b = par.round_parallel(&mut pool, &mut owned, &ctx);
-        // gradients come back to the leader untouched
-        assert_eq!(owned, grads, "{label} n={n} round {round}: grads mutated");
+        // the parallel engine encodes in place over the leader's slices,
+        // so the gradients are shared read-only, not round-tripped
+        let b = par.round_parallel(&mut pool, &grads, &ctx);
         assert_eq!(
             a.gtilde, b.gtilde,
             "{label} n={n} round {round}: gtilde differs"
@@ -246,10 +247,45 @@ fn per_block_alphas_differ_and_still_match() {
         let grads: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 0.5)).collect();
         let ctx = ctx_for(round, d, n, true);
         let a = seq.round_sequential(&grads, &ctx);
-        let mut owned = grads.clone();
-        let b = par.round_parallel(&mut pool, &mut owned, &ctx);
+        let b = par.round_parallel(&mut pool, &grads, &ctx);
         assert_eq!(a.gtilde, b.gtilde, "round {round}");
         assert!(a.alpha.is_finite() && a.alpha > 0.0);
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn chunked_pool_reduce_is_bit_identical_at_large_d() {
+    // d large enough that round_parallel's integer reduce actually fans
+    // out across the worker threads (the small-d cases above fold inline).
+    // Integer addition is exactly associative, so the chunked fold must
+    // reproduce the sequential rank-order fold bit for bit.
+    let n = 4;
+    let d = 1 << 16;
+    let mk = |seed: u64| {
+        RoundEngine::new(Box::new(IntSgd::new(
+            Rounding::Stochastic,
+            WireInt::Int8,
+            Box::new(MovingAverageRule::default_paper()),
+            n,
+            seed,
+        )) as Box<dyn PhasedCompressor>)
+    };
+    let mut seq = mk(21);
+    let mut par = mk(21);
+    let mut pool = WorkerPool::for_encode(n);
+    let mut rng = Rng::new(0xBEEF);
+    for round in 0..3 {
+        let grads: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 0.5)).collect();
+        let blocks: Vec<BlockInfo> = vec![
+            BlockInfo { dim: d / 2, step_norm_sq: 1e-4 },
+            BlockInfo { dim: d / 2, step_norm_sq: 2e-4 },
+        ];
+        let ctx = RoundCtx { round, n, d, lr: 0.1, step_norm_sq: 3e-4, blocks };
+        let a = seq.round_sequential(&grads, &ctx);
+        let b = par.round_parallel(&mut pool, &grads, &ctx);
+        assert_eq!(a.gtilde, b.gtilde, "round {round}: gtilde differs");
+        assert_eq!(a.max_abs_int, b.max_abs_int, "round {round}");
     }
     pool.shutdown();
 }

@@ -1,0 +1,165 @@
+//! Fused-encoder golden parity: the typed, fused scale → round → clip →
+//! pack pass (`compress::intsgd::encode_blocks`) must be bit-identical to
+//! a naive scale-then-round-then-clip reference, for both roundings, both
+//! wire lane widths, and across block layouts.
+//!
+//! The reference below is written in the most literal style possible —
+//! one coordinate at a time, widened i64 output — precisely so it cannot
+//! share a bug with the chunked, lane-typed production path.
+
+use intsgd::compress::intsgd::{IntSgd, Rounding};
+use intsgd::compress::intvec::{IntVec, Lanes};
+use intsgd::compress::BlockSpan;
+use intsgd::prop_assert;
+use intsgd::util::prop::prop_check;
+use intsgd::util::rng::splitmix64_at;
+use intsgd::util::Rng;
+
+/// The paper's rounding, spelled out coordinate by coordinate.
+fn naive_reference(
+    rounding: Rounding,
+    grad: &[f32],
+    blocks: &[BlockSpan],
+    alphas: &[f64],
+    clip: i64,
+    base: u64,
+) -> Vec<i64> {
+    const SCALE: f32 = 1.0 / (1u32 << 24) as f32;
+    let mut out = Vec::with_capacity(grad.len());
+    for (span, &alpha) in blocks.iter().zip(alphas) {
+        let a = alpha as f32;
+        let c = clip as f32;
+        for (k, &g) in grad[span.range()].iter().enumerate() {
+            let t = g * a;
+            let rounded = match rounding {
+                Rounding::Stochastic => {
+                    let j = (span.offset + k) as u64;
+                    let u = (splitmix64_at(base, j) >> 40) as f32 * SCALE;
+                    (t + u).floor()
+                }
+                Rounding::Deterministic => t.round_ties_even(),
+            };
+            out.push(rounded.clamp(-c, c) as i64);
+        }
+    }
+    out
+}
+
+/// A random tiling of [0, d) into 1..=4 blocks.
+fn random_layout(rng: &mut Rng, d: usize) -> Vec<BlockSpan> {
+    let nblocks = 1 + rng.usize_below(4.min(d));
+    let mut cuts: Vec<usize> = (0..nblocks - 1).map(|_| 1 + rng.usize_below(d - 1)).collect();
+    cuts.push(0);
+    cuts.push(d);
+    cuts.sort_unstable();
+    cuts.dedup();
+    cuts.windows(2)
+        .map(|w| BlockSpan { offset: w[0], dim: w[1] - w[0] })
+        .collect()
+}
+
+#[test]
+fn fused_encode_matches_naive_reference() {
+    prop_check(0xF05ED, 60, |rng| {
+        let d = 1 + rng.usize_below(2000);
+        let sigma = 10f32.powf(rng.range(-3.0, 2.0) as f32);
+        let grad = rng.normal_vec(d, sigma);
+        let blocks = random_layout(rng, d);
+        let alphas: Vec<f64> =
+            blocks.iter().map(|_| 10f64.powf(rng.range(-2.0, 3.0))).collect();
+        let base = rng.next_u64();
+        for rounding in [Rounding::Stochastic, Rounding::Deterministic] {
+            for (clip, lanes) in [
+                (127i64, Lanes::I8),
+                (i32::MAX as i64 / 4, Lanes::I32),
+                // the SwitchML-widest escape hatch (clip exactly
+                // representable in f32, like the production bounds)
+                (1i64 << 40, Lanes::I64),
+            ] {
+                let mut fused = IntVec::new(lanes);
+                intsgd::compress::intsgd::encode_blocks(
+                    rounding, &blocks, &alphas, clip, &grad, base, &mut fused,
+                );
+                let reference =
+                    naive_reference(rounding, &grad, &blocks, &alphas, clip, base);
+                prop_assert!(
+                    fused.len() == reference.len(),
+                    "length {} vs {} ({rounding:?}, {lanes:?})",
+                    fused.len(),
+                    reference.len()
+                );
+                for j in 0..reference.len() {
+                    prop_assert!(
+                        fused.get(j) == reference[j],
+                        "coord {j}: fused {} vs naive {} \
+                         ({rounding:?}, {lanes:?}, d={d})",
+                        fused.get(j),
+                        reference[j]
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn block_layout_is_transparent_under_equal_alphas() {
+    // The counter-based uniform stream is indexed by absolute coordinate,
+    // so splitting the gradient into blocks (with one shared alpha) cannot
+    // change a single integer.
+    prop_check(0xB10C, 40, |rng| {
+        let d = 8 + rng.usize_below(1500);
+        let grad = rng.normal_vec(d, 1.0);
+        let alpha = 10f64.powf(rng.range(-1.0, 2.0));
+        let base = rng.next_u64();
+        let whole = vec![BlockSpan { offset: 0, dim: d }];
+        let split = random_layout(rng, d);
+        let alphas_whole = vec![alpha];
+        let alphas_split = vec![alpha; split.len()];
+        for rounding in [Rounding::Stochastic, Rounding::Deterministic] {
+            let mut a = IntVec::new(Lanes::I8);
+            let mut b = IntVec::new(Lanes::I8);
+            intsgd::compress::intsgd::encode_blocks(
+                rounding, &whole, &alphas_whole, 127, &grad, base, &mut a,
+            );
+            intsgd::compress::intsgd::encode_blocks(
+                rounding, &split, &alphas_split, 127, &grad, base, &mut b,
+            );
+            prop_assert!(
+                a == b,
+                "block layout changed the encode ({rounding:?}, d={d}, \
+                 {} blocks)",
+                split.len()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn reference_api_matches_naive_reference() {
+    // `IntSgd::encode` (the Pallas-kernel mirror shape) draws its counter
+    // base from the stream; replaying the same stream must reproduce it.
+    prop_check(0xA91, 30, |rng| {
+        let d = 1 + rng.usize_below(500);
+        let grad = rng.normal_vec(d, 1.0);
+        let alpha = 10f64.powf(rng.range(-1.0, 2.0));
+        let clip = 1 << 20;
+        let seed = rng.next_u64();
+        for rounding in [Rounding::Stochastic, Rounding::Deterministic] {
+            let mut stream = Rng::new(seed);
+            let mut out = Vec::new();
+            IntSgd::encode(rounding, &grad, alpha, clip, &mut stream, &mut out);
+            let base = match rounding {
+                Rounding::Stochastic => Rng::new(seed).next_u64(),
+                Rounding::Deterministic => 0,
+            };
+            let blocks = vec![BlockSpan { offset: 0, dim: d }];
+            let reference =
+                naive_reference(rounding, &grad, &blocks, &[alpha], clip, base);
+            prop_assert!(out == reference, "reference API drifted ({rounding:?})");
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,150 @@
+//! Steady-state zero-allocation: after warmup, an IntSGD round — encode,
+//! reduce, decode — touches the allocator exactly zero times, through both
+//! engine drivers.
+//!
+//! This pins the whole recycling chain at once: typed `IntVec` message
+//! buffers, the `Arc::make_mut` plan geometry, the reused integer
+//! aggregate, the `RoundArena` round outputs (returned via
+//! `RoundEngine::reclaim`), and the worker pool's fixed-slot mailboxes
+//! (an mpsc channel would allocate a node per send).
+//!
+//! The file contains a single test: the counter is process-global, so a
+//! concurrently running sibling test would pollute the measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use intsgd::compress::intsgd::{IntSgd, Rounding, WireInt};
+use intsgd::compress::{PhasedCompressor, RoundEngine};
+use intsgd::coordinator::{BlockInfo, RoundCtx, WorkerPool};
+use intsgd::scaling::MovingAverageRule;
+use intsgd::util::Rng;
+
+struct CountingAllocator;
+
+static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+fn allocations() -> usize {
+    ALLOCATIONS.load(Ordering::SeqCst)
+}
+
+fn engine(n: usize, seed: u64) -> RoundEngine {
+    RoundEngine::new(Box::new(IntSgd::new(
+        Rounding::Stochastic,
+        WireInt::Int8,
+        Box::new(MovingAverageRule::default_paper()),
+        n,
+        seed,
+    )) as Box<dyn PhasedCompressor>)
+}
+
+#[test]
+fn steady_state_intsgd_rounds_allocate_nothing() {
+    let n = 4;
+    // large enough that the parallel driver's integer reduce fans out
+    // across the pool threads (instead of the small-d inline path)
+    let d = 1 << 16;
+    let mut rng = Rng::new(0x2E20);
+    let grads: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 0.1)).collect();
+    let blocks = vec![
+        BlockInfo { dim: d / 2, step_norm_sq: 1e-4 },
+        BlockInfo { dim: d / 2, step_norm_sq: 3e-4 },
+    ];
+    let mut ctx = RoundCtx { round: 0, n, d, lr: 0.1, step_norm_sq: 4e-4, blocks };
+
+    // --- sequential driver ------------------------------------------------
+    let mut seq = engine(n, 11);
+    // warmup: the dense round 0 plus enough int rounds to size every
+    // buffer (messages, aggregate, plan geometry, arena outputs)
+    for round in 0..5 {
+        ctx.round = round;
+        let r = seq.round_sequential(&grads, &ctx);
+        seq.reclaim(r);
+    }
+    let before = allocations();
+    for round in 5..25 {
+        ctx.round = round;
+        let r = seq.round_sequential(&grads, &ctx);
+        assert_eq!(r.gtilde.len(), d);
+        seq.reclaim(r);
+    }
+    let seq_allocs = allocations() - before;
+    assert_eq!(
+        seq_allocs, 0,
+        "sequential steady-state rounds hit the allocator {seq_allocs} times"
+    );
+
+    // --- parallel driver (worker pool: encode + chunked reduce) -----------
+    let mut par = engine(n, 11);
+    let mut pool = WorkerPool::for_encode(n);
+    for round in 0..5 {
+        ctx.round = round;
+        let r = par.round_parallel(&mut pool, &grads, &ctx);
+        par.reclaim(r);
+    }
+    let before = allocations();
+    for round in 5..25 {
+        ctx.round = round;
+        let r = par.round_parallel(&mut pool, &grads, &ctx);
+        assert_eq!(r.gtilde.len(), d);
+        par.reclaim(r);
+    }
+    let par_allocs = allocations() - before;
+    pool.shutdown();
+    assert_eq!(
+        par_allocs, 0,
+        "parallel steady-state rounds hit the allocator {par_allocs} times"
+    );
+
+    // --- block-less contexts (the normalized whole-gradient path) ---------
+    let mut ctx_plain = RoundCtx {
+        round: 0,
+        n,
+        d,
+        lr: 0.1,
+        step_norm_sq: 4e-4,
+        blocks: vec![],
+    };
+    let mut plain = engine(n, 11);
+    for round in 0..5 {
+        ctx_plain.round = round;
+        let r = plain.round_sequential(&grads, &ctx_plain);
+        plain.reclaim(r);
+    }
+    let before = allocations();
+    for round in 5..25 {
+        ctx_plain.round = round;
+        let r = plain.round_sequential(&grads, &ctx_plain);
+        assert_eq!(r.gtilde.len(), d);
+        plain.reclaim(r);
+    }
+    let plain_allocs = allocations() - before;
+    assert_eq!(
+        plain_allocs, 0,
+        "block-less steady-state rounds hit the allocator {plain_allocs} times"
+    );
+}
