@@ -1,24 +1,65 @@
-//! Collective data-plane benchmarks: ring all-reduce (f32), exact integer
-//! all-reduce (widened i64 vs typed wire lanes) and the INA switch
-//! pipeline across message sizes.
+//! Collective data-plane benchmarks.
+//!
+//! Part 1 (legacy): ring all-reduce (f32), exact integer all-reduce
+//! (widened i64 vs typed wire lanes) and the INA switch pipeline.
+//!
+//! Part 2 (the `net` subsystem measurement): **leader-fold vs staged-ring
+//! vs transport-ring** at d = 2^20, n in {4, 16} — the in-process
+//! rank-order fold (`allreduce_intvec`), the staged ring schedule over
+//! in-process channels (schedule cost without socket cost), and the same
+//! schedule over real loopback TCP sockets (`net::TcpTransport`). All
+//! three produce bit-identical aggregates (asserted each iteration); the
+//! wall-clock spread between them is what the paper's "tailored for
+//! all-reduce" claim costs on a real wire. Results land in
+//! `BENCH_net.json` next to the modeled loopback cost
+//! (`netsim::Network::tcp_loopback`), so measured-vs-modeled drift is
+//! machine-checkable across PRs. `BENCH_SMOKE=1` runs tiny sizes for CI
+//! rot-checking.
+//!
+//! Custom harness: criterion is not in the offline vendor set.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use intsgd::collective::{allreduce_i64, allreduce_intvec, ring_allreduce_f32, InaSwitch};
 use intsgd::compress::intsgd::WireInt;
 use intsgd::compress::intvec::{IntVec, Lanes};
+use intsgd::compress::Primitive;
+use intsgd::net::staged::{ring_allreduce_ints, StagedScratch};
+use intsgd::net::{ChannelTransport, TcpTransport, Transport};
+use intsgd::netsim::Network;
+use intsgd::util::json::{self, Json};
 use intsgd::util::stats::median;
 use intsgd::util::Rng;
 
-fn bench<F: FnMut() -> f64>(name: &str, iters: usize, mut f: F) {
-    f();
-    let samples: Vec<f64> = (0..iters).map(|_| f()).collect();
-    println!("{name:<36} median {:>9.3} ms", median(&samples) * 1e3);
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
 }
 
-fn main() {
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn bench<F: FnMut() -> f64>(name: &str, iters: usize, mut f: F) -> f64 {
+    f();
+    let samples: Vec<f64> = (0..iters).map(|_| f()).collect();
+    let med = median(&samples);
+    println!("{name:<40} median {:>9.3} ms", med * 1e3);
+    med
+}
+
+/// Part 1: the in-process data-plane kernels (legacy cases).
+fn legacy_cases(iters: usize, sizes: &[usize]) {
     let n = 16;
-    for &d in &[1usize << 16, 1 << 20] {
+    for &d in sizes {
         let mut rng = Rng::new(0);
         let f32s: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 1.0)).collect();
         let f32_views: Vec<&[f32]> = f32s.iter().map(|v| v.as_slice()).collect();
@@ -27,13 +68,13 @@ fn main() {
             .collect();
         let views: Vec<&[i64]> = i64s.iter().map(|v| v.as_slice()).collect();
 
-        bench(&format!("ring_allreduce_f32 d=2^{}", d.trailing_zeros()), 5, || {
+        bench(&format!("ring_allreduce_f32 d=2^{}", d.trailing_zeros()), iters, || {
             let t = Instant::now();
             std::hint::black_box(ring_allreduce_f32(&f32_views));
             t.elapsed().as_secs_f64()
         });
         let mut out = Vec::new();
-        bench(&format!("allreduce_i64      d=2^{}", d.trailing_zeros()), 5, || {
+        bench(&format!("allreduce_i64      d=2^{}", d.trailing_zeros()), iters, || {
             let t = Instant::now();
             allreduce_i64(&views, &mut out);
             std::hint::black_box(&out);
@@ -43,18 +84,134 @@ fn main() {
         let i8s: Vec<IntVec> =
             i64s.iter().map(|v| IntVec::from_i64(v, Lanes::I8)).collect();
         let i8_views: Vec<&IntVec> = i8s.iter().collect();
-        bench(&format!("allreduce_int8lane d=2^{}", d.trailing_zeros()), 5, || {
+        bench(&format!("allreduce_int8lane d=2^{}", d.trailing_zeros()), iters, || {
             let t = Instant::now();
             allreduce_intvec(&i8_views, &mut out);
             std::hint::black_box(&out);
             t.elapsed().as_secs_f64()
         });
         let sw = InaSwitch::default();
-        bench(&format!("ina_switch_int32   d=2^{}", d.trailing_zeros()), 5, || {
+        bench(&format!("ina_switch_int32   d=2^{}", d.trailing_zeros()), iters, || {
             let t = Instant::now();
             sw.aggregate_into(&views, WireInt::Int32, &mut out);
             std::hint::black_box(&out);
             t.elapsed().as_secs_f64()
         });
     }
+}
+
+/// One timed staged ring all-reduce across n endpoint threads; returns
+/// wall seconds (straggler-inclusive: the scope joins every rank).
+fn staged_round<T: Transport>(
+    endpoints: &mut [T],
+    msgs: &[IntVec],
+    states: &mut [(StagedScratch, Vec<i64>)],
+    round: u32,
+) -> f64 {
+    let t = Instant::now();
+    std::thread::scope(|s| {
+        for ((ep, msg), state) in endpoints.iter_mut().zip(msgs).zip(states.iter_mut()) {
+            s.spawn(move || {
+                let (scratch, out) = state;
+                ring_allreduce_ints(ep, msg, Lanes::I8, round, scratch, out)
+                    .expect("staged ring");
+            });
+        }
+    });
+    t.elapsed().as_secs_f64()
+}
+
+/// Part 2: leader-fold vs staged-ring (channels) vs transport-ring (TCP).
+fn net_cases(iters: usize, d: usize, worlds: &[usize]) -> Json {
+    let net = Network::tcp_loopback();
+    let mut rows = Vec::new();
+    for &n in worlds {
+        // clipped like IntSGD int8: partial sums provably fit the i8 wire
+        let clip = (i8::MAX as usize / n) as u64;
+        let mut rng = Rng::new(7);
+        let msgs: Vec<IntVec> = (0..n)
+            .map(|_| {
+                let vals: Vec<i64> = (0..d)
+                    .map(|_| rng.below(2 * clip + 1) as i64 - clip as i64)
+                    .collect();
+                IntVec::from_i64(&vals, Lanes::I8)
+            })
+            .collect();
+        let views: Vec<&IntVec> = msgs.iter().collect();
+        let mut want = Vec::new();
+        allreduce_intvec(&views, &mut want);
+        println!("\nstaged vs fold: d = 2^{}, n = {n}", d.trailing_zeros());
+
+        let mut out = Vec::new();
+        let fold_s =
+            bench(&format!("leader_fold        n={n}"), iters, || {
+                let t = Instant::now();
+                allreduce_intvec(&views, &mut out);
+                std::hint::black_box(&out);
+                t.elapsed().as_secs_f64()
+            });
+        assert_eq!(out, want);
+
+        let mut chan = ChannelTransport::mesh(n);
+        let mut chan_states: Vec<(StagedScratch, Vec<i64>)> =
+            (0..n).map(|_| Default::default()).collect();
+        let mut round = 0u32;
+        let chan_s = bench(&format!("staged_ring_chan   n={n}"), iters, || {
+            let s = staged_round(&mut chan, &msgs, &mut chan_states, round);
+            round += 1;
+            s
+        });
+        assert_eq!(chan_states[0].1, want);
+
+        let mut tcp = TcpTransport::loopback_mesh(n).expect("tcp mesh");
+        let mut tcp_states: Vec<(StagedScratch, Vec<i64>)> =
+            (0..n).map(|_| Default::default()).collect();
+        let mut round = 0u32;
+        let tcp_s = bench(&format!("transport_ring_tcp n={n}"), iters, || {
+            let s = staged_round(&mut tcp, &msgs, &mut tcp_states, round);
+            round += 1;
+            s
+        });
+        assert_eq!(tcp_states[0].1, want);
+
+        // modeled loopback cost of the same transfer (d bytes/worker, i8)
+        let model_s = net.primitive_seconds(Primitive::AllReduce, d, n);
+        println!(
+            "modeled tcp_loopback all-reduce: {:.3} ms (measured/modeled {:.2})",
+            model_s * 1e3,
+            tcp_s / model_s.max(1e-12)
+        );
+        rows.push(obj(vec![
+            ("d", num(d as f64)),
+            ("n", num(n as f64)),
+            ("leader_fold_ms", num(fold_s * 1e3)),
+            ("staged_ring_channel_ms", num(chan_s * 1e3)),
+            ("transport_ring_tcp_ms", num(tcp_s * 1e3)),
+            ("tcp_model_ms", num(model_s * 1e3)),
+            ("tcp_measured_over_model", num(tcp_s / model_s.max(1e-12))),
+        ]));
+    }
+    Json::Arr(rows)
+}
+
+fn main() {
+    let smoke = smoke();
+    let (iters, d_net, legacy_sizes): (usize, usize, Vec<usize>) = if smoke {
+        (1, 1 << 12, vec![1 << 12])
+    } else {
+        (5, 1 << 20, vec![1 << 16, 1 << 20])
+    };
+    if smoke {
+        println!("BENCH_SMOKE: tiny sizes, 1 iteration (CI rot check only)\n");
+    }
+    legacy_cases(iters, &legacy_sizes);
+    let cases = net_cases(iters, d_net, &[4, 16]);
+    let report = obj(vec![
+        ("bench", Json::Str("bench_collective".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("net", cases),
+    ]);
+    let path = "BENCH_net.json";
+    std::fs::write(path, json::to_string(&report)).expect("write bench report");
+    println!("\nwrote {path}");
 }

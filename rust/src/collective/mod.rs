@@ -106,10 +106,26 @@ pub fn ring_allreduce_f32(workers: &[&[f32]]) -> Vec<f32> {
     out
 }
 
-/// All-gather: every worker receives every message verbatim. Returned as a
-/// clone (the simulation shares memory; byte accounting happens in netsim).
-pub fn allgather<T: Clone>(msgs: &[T]) -> Vec<T> {
-    msgs.to_vec()
+/// All-gather: every worker receives every message verbatim, written into
+/// the caller's buffer. The copies are the primitive's semantics (every
+/// worker owns a replica; byte accounting happens in netsim), but the
+/// *allocations* are not: existing slots are reused via `clone_from`, so
+/// nested buffers (message vectors, codec byte streams) keep their
+/// capacity across rounds — the zero-alloc-hot-path rule of the engine.
+/// Note the in-process compressor simulators share memory and skip the
+/// replication entirely; this is the edge-replication primitive for
+/// callers that materialize per-worker replicas (the old by-value
+/// signature forced a fresh `Vec` per call on exactly those paths).
+/// `net::staged::ring_allgather_bytes` is its over-the-wire counterpart.
+pub fn allgather<T: Clone>(msgs: &[T], out: &mut Vec<T>) {
+    out.truncate(msgs.len());
+    let reused = out.len();
+    for (o, m) in out.iter_mut().zip(msgs) {
+        o.clone_from(m);
+    }
+    for m in &msgs[reused..] {
+        out.push(m.clone());
+    }
 }
 
 #[cfg(test)]
@@ -182,6 +198,23 @@ mod tests {
             let naive: f32 = workers.iter().map(|w| w[j]).sum();
             assert_eq!(ring[j], naive);
         }
+    }
+
+    #[test]
+    fn allgather_reuses_caller_buffers() {
+        let msgs: Vec<Vec<u8>> = vec![vec![1, 2, 3], vec![4], vec![5, 6]];
+        let mut out: Vec<Vec<u8>> = vec![Vec::with_capacity(64); 4];
+        let caps: Vec<usize> = out.iter().map(|v| v.capacity()).collect();
+        allgather(&msgs, &mut out);
+        assert_eq!(out, msgs);
+        // shrunk to msgs.len(), surviving slots kept their capacity
+        for (o, &cap) in out.iter().zip(&caps) {
+            assert_eq!(o.capacity(), cap);
+        }
+        // growing again appends fresh clones
+        let more: Vec<Vec<u8>> = (0..5).map(|i| vec![i as u8]).collect();
+        allgather(&more, &mut out);
+        assert_eq!(out, more);
     }
 
     #[test]

@@ -585,6 +585,15 @@ impl<T: PhasedCompressor> DistributedCompressor for T {
     }
 }
 
+/// Where the parallel driver sends integer reductions: the pool's
+/// coordinate-chunked fold (the in-process default) or an external
+/// reducer (a transport running staged collectives). Either way the
+/// result is the rank-order fold bit for bit — the `Reducer` contract.
+enum ReduceVia<'a> {
+    Pool,
+    External(&'a mut dyn Reducer),
+}
+
 /// The round driver owning a phased compressor and the round arena.
 pub struct RoundEngine {
     comp: Box<dyn PhasedCompressor>,
@@ -632,6 +641,31 @@ impl RoundEngine {
         grads: &[Vec<f32>],
         ctx: &RoundCtx,
     ) -> RoundResult {
+        self.round_parallel_via(pool, ReduceVia::Pool, grads, ctx)
+    }
+
+    /// [`RoundEngine::round_parallel`] with the integer reduce phase
+    /// handed to an external [`Reducer`] — the hook a
+    /// `net::TransportReducer` plugs into so the aggregation runs as a
+    /// staged collective over real sockets (encode still executes on the
+    /// pool's threads; fp32 folds stay on the leader as ever).
+    pub fn round_parallel_over(
+        &mut self,
+        pool: &mut WorkerPool,
+        red: &mut dyn Reducer,
+        grads: &[Vec<f32>],
+        ctx: &RoundCtx,
+    ) -> RoundResult {
+        self.round_parallel_via(pool, ReduceVia::External(red), grads, ctx)
+    }
+
+    fn round_parallel_via(
+        &mut self,
+        pool: &mut WorkerPool,
+        mut via: ReduceVia<'_>,
+        grads: &[Vec<f32>],
+        ctx: &RoundCtx,
+    ) -> RoundResult {
         let n = grads.len();
         assert!(n > 0, "at least one rank");
         assert_eq!(pool.workers(), n, "one worker thread per rank");
@@ -654,9 +688,14 @@ impl RoundEngine {
             }
             let outcome = {
                 let msgs = RankMessages::new(&encs);
-                let mut red = PoolReducer::new(pool);
                 let t0 = Instant::now();
-                let outcome = comp.reduce(&msgs, &plan, ctx, &mut red);
+                let outcome = match &mut via {
+                    ReduceVia::Pool => {
+                        let mut red = PoolReducer::new(pool);
+                        comp.reduce(&msgs, &plan, ctx, &mut red)
+                    }
+                    ReduceVia::External(red) => comp.reduce(&msgs, &plan, ctx, &mut **red),
+                };
                 let dt = t0.elapsed().as_secs_f64();
                 reduce_total += dt;
                 if edge_decode {

@@ -263,10 +263,22 @@ pub fn encode_qsgd(msg: &[QsgdBucket]) -> Result<Vec<u8>> {
 
 pub fn decode_qsgd(bytes: &[u8]) -> Result<Vec<QsgdBucket>> {
     let mut pos = 0usize;
-    let nbuckets = read_varint(bytes, &mut pos)? as usize;
+    // Counts arrive from the wire and size allocations: bound them by
+    // what the remaining bytes could possibly hold (a bucket is at least
+    // a length byte + 4 norm bytes) so a hostile count is a decode
+    // error, not a multi-gigabyte `with_capacity`.
+    let nbuckets = read_varint(bytes, &mut pos)?;
+    if nbuckets > ((bytes.len() - pos) / 5) as u64 {
+        return Err(anyhow!("qsgd bucket count {nbuckets} exceeds the buffer"));
+    }
+    let nbuckets = nbuckets as usize;
     let mut out = Vec::with_capacity(nbuckets);
     for _ in 0..nbuckets {
-        let len = read_varint(bytes, &mut pos)? as usize;
+        let len = read_varint(bytes, &mut pos)?;
+        if len > (bytes.len() - pos) as u64 {
+            return Err(anyhow!("qsgd bucket length {len} exceeds the buffer"));
+        }
+        let len = len as usize;
         let norm_bytes = bytes
             .get(pos..pos + 4)
             .ok_or_else(|| anyhow!("qsgd underrun"))?;
@@ -325,13 +337,26 @@ pub fn encode_sparse(entries: &[(u32, f32)]) -> Vec<u8> {
 
 pub fn decode_sparse(bytes: &[u8]) -> Result<Vec<(u32, f32)>> {
     let mut pos = 0usize;
-    let k = read_varint(bytes, &mut pos)? as usize;
+    // every entry costs at least one delta byte + 4 value bytes; a count
+    // beyond that is hostile (see decode_qsgd)
+    let k = read_varint(bytes, &mut pos)?;
+    if k > ((bytes.len() - pos) / 5) as u64 {
+        return Err(anyhow!("sparse entry count {k} exceeds the buffer"));
+    }
+    let k = k as usize;
     let mut idx = Vec::with_capacity(k);
     let mut prev = 0u64;
     for i in 0..k {
         let delta = read_varint(bytes, &mut pos)?;
-        // first index is absolute (delta from 0)
-        prev = if i == 0 { delta } else { prev + delta };
+        // first index is absolute (delta from 0); the accumulation must
+        // be checked — a hostile delta would wrap u64 in release builds
+        // and fabricate a small-but-bogus index instead of erroring
+        prev = if i == 0 {
+            delta
+        } else {
+            prev.checked_add(delta)
+                .ok_or_else(|| anyhow!("sparse index overflow"))?
+        };
         idx.push(u32::try_from(prev).map_err(|_| anyhow!("index overflow"))?);
     }
     let mut out = Vec::with_capacity(k);

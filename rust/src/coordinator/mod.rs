@@ -25,13 +25,14 @@
 //! Workers that need non-Send resources (PJRT clients are Rc-backed)
 //! construct them inside their own thread from a `Send` factory.
 
+pub mod net_driver;
 pub mod pjrt_worker;
 pub mod worker;
 
 pub use pjrt_worker::{BatchSpec, PjrtEvaluator, PjrtWorker};
 pub use worker::{GradientSource, WorkerPool};
 
-use crate::compress::engine::RoundEngine;
+use crate::compress::engine::{Reducer, RoundEngine};
 use crate::netsim::Network;
 use crate::optim::Sgd;
 use crate::util::stats::l2_diff_norm_sq;
@@ -175,11 +176,39 @@ impl Coordinator {
         debug_assert_eq!(off, self.params.len(), "block dims must tile the params");
     }
 
-    /// Run the synchronous training loop.
+    /// Run the synchronous training loop (integer reductions on the
+    /// pool's coordinate-chunked fold).
     pub fn train(
         &mut self,
         pool: &mut WorkerPool,
         engine: &mut RoundEngine,
+        cfg: &TrainConfig,
+        eval: Option<&mut dyn FnMut(&[f32]) -> (f64, f64)>,
+    ) -> TrainResult {
+        self.train_impl(pool, engine, None, cfg, eval)
+    }
+
+    /// [`Coordinator::train`] with the integer reduce phase handed to an
+    /// external [`Reducer`] — how `repro net-bench` runs full IntSGD
+    /// rounds over a real transport (`net::TransportReducer`): gradients
+    /// and encodes stay on the worker threads, the aggregation leaves the
+    /// process boundary behind and moves framed bytes between ranks.
+    pub fn train_over(
+        &mut self,
+        pool: &mut WorkerPool,
+        engine: &mut RoundEngine,
+        red: &mut dyn Reducer,
+        cfg: &TrainConfig,
+        eval: Option<&mut dyn FnMut(&[f32]) -> (f64, f64)>,
+    ) -> TrainResult {
+        self.train_impl(pool, engine, Some(red), cfg, eval)
+    }
+
+    fn train_impl(
+        &mut self,
+        pool: &mut WorkerPool,
+        engine: &mut RoundEngine,
+        mut red: Option<&mut dyn Reducer>,
         cfg: &TrainConfig,
         mut eval: Option<&mut dyn FnMut(&[f32]) -> (f64, f64)>,
     ) -> TrainResult {
@@ -210,7 +239,10 @@ impl Coordinator {
                 step_norm_sq,
                 blocks: std::mem::take(&mut blocks),
             };
-            let result = engine.round_parallel(pool, &grads, &ctx);
+            let result = match &mut red {
+                Some(r) => engine.round_parallel_over(pool, &mut **r, &grads, &ctx),
+                None => engine.round_parallel(pool, &grads, &ctx),
+            };
             blocks = ctx.blocks; // reclaim the buffer for the next round
 
             // 3. optimizer step
@@ -252,50 +284,10 @@ mod tests {
     use crate::netsim::Network;
     use crate::util::Rng;
 
-    /// Quadratic oracle: f_i(x) = 0.5||x - c_i||^2, grad = x - c_i + noise.
-    struct Quad {
-        center: Vec<f32>,
-        noise: f32,
-        rng: Rng,
-    }
-
-    impl GradientSource for Quad {
-        fn dim(&self) -> usize {
-            self.center.len()
-        }
-
-        fn grad(&mut self, params: &[f32], _round: usize) -> (f32, Vec<f32>) {
-            let g: Vec<f32> = params
-                .iter()
-                .zip(&self.center)
-                .map(|(&x, &c)| x - c + self.noise * self.rng.normal_f32())
-                .collect();
-            let loss = 0.5
-                * params
-                    .iter()
-                    .zip(&self.center)
-                    .map(|(&x, &c)| (x - c) * (x - c))
-                    .sum::<f32>();
-            (loss, g)
-        }
-    }
-
+    /// The shared quadratic oracle (`net_driver::quad_pool`), centers
+    /// drawn from `Rng::new(100 + i)` so tests can recompute the optimum.
     fn quad_pool(n: usize, d: usize, noise: f32) -> WorkerPool {
-        let factories: Vec<_> = (0..n)
-            .map(|i| {
-                let f: Box<dyn FnOnce() -> Box<dyn GradientSource> + Send> =
-                    Box::new(move || {
-                        let mut rng = Rng::new(100 + i as u64);
-                        Box::new(Quad {
-                            center: rng.normal_vec(d, 1.0),
-                            noise,
-                            rng,
-                        }) as Box<dyn GradientSource>
-                    });
-                f
-            })
-            .collect();
-        WorkerPool::spawn(factories)
+        net_driver::quad_pool(n, d, 100, noise)
     }
 
     fn identity_engine() -> RoundEngine {

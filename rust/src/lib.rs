@@ -23,6 +23,7 @@ pub mod data;
 pub mod experiments;
 pub mod metrics;
 pub mod models;
+pub mod net;
 pub mod netsim;
 pub mod optim;
 pub mod runtime;

@@ -12,6 +12,9 @@ USAGE:
   repro train [key=value ...] [--config file]      generic launcher
         (model=classifier|lm|transformer algo=... rounds=... workers=...
          lr=... save=path.ckpt)
+  repro net-bench [key=value ...] [--config file]  IntSGD rounds over a
+        real transport (transport=tcp|channel algo=ring|halving
+        workers=... d=... rounds=...), measured-vs-modeled wire time
   repro list                                       list experiments
   repro artifacts                                  show artifact manifest
 
@@ -49,6 +52,20 @@ fn main() -> Result<()> {
                 i += 1;
             }
             intsgd::experiments::train_cmd::run(&cfg)
+        }
+        Some("net-bench") => {
+            let mut cfg = Config::new();
+            let mut i = 1;
+            while i < args.len() {
+                if args[i] == "--config" {
+                    i += 1;
+                    cfg.merge(Config::load(&args[i])?);
+                } else {
+                    cfg.set_kv(&args[i])?;
+                }
+                i += 1;
+            }
+            intsgd::coordinator::net_driver::run(&cfg)
         }
         Some("list") => {
             for (id, desc) in intsgd::experiments::list() {

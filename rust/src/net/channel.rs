@@ -1,0 +1,130 @@
+//! In-process transport: one unbounded mpsc mailbox per ordered rank
+//! pair.
+//!
+//! This is the tier-1-testable implementation — no sockets, no syscalls,
+//! deterministic under `cargo test -q` — and the reference a
+//! [`super::TcpTransport`] run must agree with byte for byte (both move
+//! the same `frame` bytes; only the delivery mechanism differs). Sends
+//! never block (the channel is unbounded), which trivially satisfies the
+//! [`super::Transport`] deadlock contract; the per-message `Vec` the
+//! channel carries is the price of in-process message passing and is
+//! documented as off the zero-alloc hot path (the engine's in-proc
+//! reducers remain the allocation-free default).
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::Transport;
+
+/// Give up on a recv after this long: a rank that panicked mid-schedule
+/// without dropping its transport must fail the collective, not hang the
+/// surviving ranks forever (mirrors `TcpTransport`'s IO timeout).
+const RECV_TIMEOUT: Duration = Duration::from_secs(30);
+
+pub struct ChannelTransport {
+    rank: usize,
+    /// `to[j]`: sender delivering into rank j's mailbox from this rank
+    /// (`None` at j = rank).
+    to: Vec<Option<Sender<Vec<u8>>>>,
+    /// `from[i]`: this rank's mailbox for messages sent by rank i
+    /// (`None` at i = rank).
+    from: Vec<Option<Receiver<Vec<u8>>>>,
+}
+
+impl ChannelTransport {
+    /// Build a fully-connected mesh of `n` endpoints; endpoint r is the
+    /// transport for rank r (move each to its rank's thread).
+    pub fn mesh(n: usize) -> Vec<ChannelTransport> {
+        assert!(n >= 1, "at least one rank");
+        // pairs[src][dst]: the channel carrying src -> dst messages
+        let mut senders: Vec<Vec<Option<Sender<Vec<u8>>>>> = Vec::with_capacity(n);
+        let mut receivers: Vec<Vec<Option<Receiver<Vec<u8>>>>> =
+            (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+        for src in 0..n {
+            let mut row = Vec::with_capacity(n);
+            for dst in 0..n {
+                if src == dst {
+                    row.push(None);
+                } else {
+                    let (tx, rx) = channel();
+                    row.push(Some(tx));
+                    receivers[dst][src] = Some(rx);
+                }
+            }
+            senders.push(row);
+        }
+        senders
+            .into_iter()
+            .zip(receivers)
+            .enumerate()
+            .map(|(rank, (to, from))| ChannelTransport { rank, to, from })
+            .collect()
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.to.len()
+    }
+
+    fn send(&mut self, to: usize, frame: &[u8]) -> Result<()> {
+        let tx = self.to[to]
+            .as_ref()
+            .unwrap_or_else(|| panic!("rank {} sending to itself", self.rank));
+        tx.send(frame.to_vec())
+            .map_err(|_| anyhow!("rank {to} hung up (its transport was dropped)"))
+    }
+
+    fn recv(&mut self, from: usize, out: &mut Vec<u8>) -> Result<()> {
+        let rx = self.from[from]
+            .as_ref()
+            .unwrap_or_else(|| panic!("rank {} receiving from itself", self.rank));
+        let msg = rx.recv_timeout(RECV_TIMEOUT).map_err(|e| match e {
+            RecvTimeoutError::Disconnected => {
+                anyhow!("rank {from} hung up (its transport was dropped)")
+            }
+            RecvTimeoutError::Timeout => {
+                anyhow!("timed out waiting on a message from rank {from}")
+            }
+        })?;
+        // hand the message's buffer over rather than copying it
+        *out = msg;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::exercise_mesh;
+    use super::*;
+
+    #[test]
+    fn mesh_delivers_ordered_and_isolated() {
+        for n in [2usize, 3, 5] {
+            exercise_mesh(ChannelTransport::mesh(n));
+        }
+    }
+
+    #[test]
+    fn single_rank_mesh_is_valid_but_mute() {
+        let mesh = ChannelTransport::mesh(1);
+        assert_eq!(mesh[0].world(), 1);
+        assert_eq!(mesh[0].rank(), 0);
+    }
+
+    #[test]
+    fn dropped_peer_is_an_error_not_a_hang() {
+        let mut mesh = ChannelTransport::mesh(2);
+        let b = mesh.pop().unwrap();
+        drop(b);
+        let a = &mut mesh[0];
+        assert!(a.send(1, &[1, 2, 3]).is_err());
+        assert!(a.recv(1, &mut Vec::new()).is_err());
+    }
+}

@@ -1,0 +1,338 @@
+//! Frame format: the self-describing header every transported message
+//! carries, plus the payload packers the staged collectives use.
+//!
+//! A frame is `header ++ payload`:
+//!
+//! ```text
+//!   offset  size  field
+//!   0       4     round id (u32 LE)   — collective-call sequence number
+//!   4       1     payload kind        — lane width or opaque codec bytes
+//!   5       4     element count (u32) — coordinates (lane kinds) or bytes
+//!   9       4     checksum (u32 LE)   — FNV-1a over the payload
+//!   13      ...   payload
+//! ```
+//!
+//! The length prefix that delimits frames on a byte stream is *transport*
+//! framing, not message framing — `TcpTransport` adds it, the in-process
+//! channel (message-oriented) does not — so the same frame bytes flow over
+//! both. Every decode path returns `Err` rather than panicking: these
+//! bytes arrive from a socket and must be treated as hostile
+//! (`compress::wire` follows the same rule).
+
+use anyhow::{anyhow, Result};
+
+use crate::compress::intvec::Lanes;
+
+/// Header bytes preceding every payload.
+pub const HEADER_BYTES: usize = 13;
+
+/// What a frame's payload holds: a lane width for integer partial sums,
+/// or opaque codec bytes (sparse / sign / QSGD / NatSGD wire streams,
+/// which only the edge decodes). fp32 passes never travel these
+/// collectives — exact fp32 folds stay on the leader (DESIGN.md §3) — so
+/// there is deliberately no float kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PayloadKind {
+    I8,
+    I32,
+    I64,
+    Bytes,
+}
+
+impl PayloadKind {
+    pub fn of_lanes(lanes: Lanes) -> PayloadKind {
+        match lanes {
+            Lanes::I8 => PayloadKind::I8,
+            Lanes::I32 => PayloadKind::I32,
+            Lanes::I64 => PayloadKind::I64,
+        }
+    }
+
+    fn tag(self) -> u8 {
+        match self {
+            PayloadKind::I8 => 0,
+            PayloadKind::I32 => 1,
+            PayloadKind::I64 => 2,
+            PayloadKind::Bytes => 3,
+        }
+    }
+
+    fn of_tag(tag: u8) -> Result<PayloadKind> {
+        Ok(match tag {
+            0 => PayloadKind::I8,
+            1 => PayloadKind::I32,
+            2 => PayloadKind::I64,
+            3 => PayloadKind::Bytes,
+            other => return Err(anyhow!("unknown payload kind tag {other}")),
+        })
+    }
+
+    /// Payload bytes per element (1 for `Bytes`: elements *are* bytes).
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            PayloadKind::I8 | PayloadKind::Bytes => 1,
+            PayloadKind::I32 => 4,
+            PayloadKind::I64 => 8,
+        }
+    }
+}
+
+/// The decoded header of one frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub round: u32,
+    pub kind: PayloadKind,
+    pub elems: u32,
+}
+
+/// FNV-1a over the payload: cheap, order-sensitive, and enough to catch
+/// the framing bugs a length-prefixed stream can produce (offset slips,
+/// truncation, interleaving). Not cryptographic — the threat model is a
+/// coding error, not an adversary on loopback.
+pub fn checksum(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Serialize `header ++ payload` into `out` (cleared first; capacity is
+/// reused across rounds).
+pub fn encode_frame(header: FrameHeader, payload: &[u8], out: &mut Vec<u8>) {
+    debug_assert_eq!(
+        payload.len(),
+        header.elems as usize * header.kind.bytes_per_elem(),
+        "element count disagrees with payload size"
+    );
+    out.clear();
+    out.reserve(HEADER_BYTES + payload.len());
+    out.extend_from_slice(&header.round.to_le_bytes());
+    out.push(header.kind.tag());
+    out.extend_from_slice(&header.elems.to_le_bytes());
+    out.extend_from_slice(&checksum(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+/// Parse and verify one frame, returning the header and a view of the
+/// payload. Rejects short frames, unknown kinds, element counts that
+/// disagree with the payload size, and checksum mismatches.
+pub fn decode_frame(frame: &[u8]) -> Result<(FrameHeader, &[u8])> {
+    if frame.len() < HEADER_BYTES {
+        return Err(anyhow!(
+            "frame underrun: {} bytes < {HEADER_BYTES}-byte header",
+            frame.len()
+        ));
+    }
+    let round = u32::from_le_bytes([frame[0], frame[1], frame[2], frame[3]]);
+    let kind = PayloadKind::of_tag(frame[4])?;
+    let elems = u32::from_le_bytes([frame[5], frame[6], frame[7], frame[8]]);
+    let want_sum = u32::from_le_bytes([frame[9], frame[10], frame[11], frame[12]]);
+    let payload = &frame[HEADER_BYTES..];
+    let want_len = elems as usize * kind.bytes_per_elem();
+    if payload.len() != want_len {
+        return Err(anyhow!(
+            "frame payload {} bytes, header promises {want_len} ({elems} x {kind:?})",
+            payload.len()
+        ));
+    }
+    let got_sum = checksum(payload);
+    if got_sum != want_sum {
+        return Err(anyhow!(
+            "frame checksum mismatch: payload {got_sum:#010x}, header {want_sum:#010x}"
+        ));
+    }
+    Ok((FrameHeader { round, kind, elems }, payload))
+}
+
+/// Expect a frame of exactly this shape (the collectives know the kind,
+/// element count, and round of every message they await).
+pub fn expect_frame<'a>(
+    frame: &'a [u8],
+    round: u32,
+    kind: PayloadKind,
+    elems: usize,
+) -> Result<&'a [u8]> {
+    let (h, payload) = decode_frame(frame)?;
+    if h.round != round {
+        return Err(anyhow!("frame from round {} during round {round}", h.round));
+    }
+    if h.kind != kind {
+        return Err(anyhow!("expected {kind:?} payload, got {:?}", h.kind));
+    }
+    if h.elems as usize != elems {
+        return Err(anyhow!("expected {elems} elements, got {}", h.elems));
+    }
+    Ok(payload)
+}
+
+/// Pack a range of widened partial sums at the given wire width, with a
+/// per-element range check: the caller proves the bound (IntSGD's clip
+/// guarantee), the packer refuses to let a violated proof corrupt the
+/// stream silently.
+pub fn pack_partials(sums: &[i64], wire: Lanes, out: &mut Vec<u8>) -> Result<()> {
+    out.clear();
+    out.reserve(sums.len() * wire.bytes());
+    match wire {
+        Lanes::I8 => {
+            for &s in sums {
+                let v = i8::try_from(s)
+                    .map_err(|_| anyhow!("partial sum {s} exceeds the i8 wire"))?;
+                out.push(v as u8);
+            }
+        }
+        Lanes::I32 => {
+            for &s in sums {
+                let v = i32::try_from(s)
+                    .map_err(|_| anyhow!("partial sum {s} exceeds the i32 wire"))?;
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Lanes::I64 => {
+            for &s in sums {
+                out.extend_from_slice(&s.to_le_bytes());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Widen a received partial-sum payload and **add** it into `acc`
+/// (reduce-scatter's combine step).
+pub fn add_partials(payload: &[u8], wire: Lanes, acc: &mut [i64]) -> Result<()> {
+    check_payload(payload, wire, acc.len())?;
+    match wire {
+        Lanes::I8 => {
+            for (a, &b) in acc.iter_mut().zip(payload) {
+                *a += (b as i8) as i64;
+            }
+        }
+        Lanes::I32 => {
+            for (a, c) in acc.iter_mut().zip(payload.chunks_exact(4)) {
+                *a += i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as i64;
+            }
+        }
+        Lanes::I64 => {
+            for (a, c) in acc.iter_mut().zip(payload.chunks_exact(8)) {
+                *a += i64::from_le_bytes([
+                    c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+                ]);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Widen a received payload of **final** sums and overwrite `dst`
+/// (all-gather's distribute step).
+pub fn copy_partials(payload: &[u8], wire: Lanes, dst: &mut [i64]) -> Result<()> {
+    check_payload(payload, wire, dst.len())?;
+    match wire {
+        Lanes::I8 => {
+            for (a, &b) in dst.iter_mut().zip(payload) {
+                *a = (b as i8) as i64;
+            }
+        }
+        Lanes::I32 => {
+            for (a, c) in dst.iter_mut().zip(payload.chunks_exact(4)) {
+                *a = i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as i64;
+            }
+        }
+        Lanes::I64 => {
+            for (a, c) in dst.iter_mut().zip(payload.chunks_exact(8)) {
+                *a = i64::from_le_bytes([
+                    c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+                ]);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn check_payload(payload: &[u8], wire: Lanes, elems: usize) -> Result<()> {
+    let want = elems * wire.bytes();
+    if payload.len() != want {
+        return Err(anyhow!(
+            "payload {} bytes, expected {want} ({elems} x {wire:?})",
+            payload.len()
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let payload: Vec<u8> = (0..=255u8).collect();
+        let h = FrameHeader { round: 7, kind: PayloadKind::Bytes, elems: 256 };
+        let mut buf = Vec::new();
+        encode_frame(h, &payload, &mut buf);
+        assert_eq!(buf.len(), HEADER_BYTES + 256);
+        let (back, body) = decode_frame(&buf).unwrap();
+        assert_eq!(back, h);
+        assert_eq!(body, &payload[..]);
+        assert_eq!(expect_frame(&buf, 7, PayloadKind::Bytes, 256).unwrap(), &payload[..]);
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected_not_panicked() {
+        let payload = [1u8, 2, 3, 4];
+        let h = FrameHeader { round: 1, kind: PayloadKind::I32, elems: 1 };
+        let mut buf = Vec::new();
+        encode_frame(h, &payload, &mut buf);
+        // short frame
+        assert!(decode_frame(&buf[..HEADER_BYTES - 1]).is_err());
+        // flipped payload bit -> checksum mismatch
+        let mut bad = buf.clone();
+        bad[HEADER_BYTES] ^= 0x40;
+        assert!(decode_frame(&bad).unwrap_err().to_string().contains("checksum"));
+        // unknown kind tag
+        let mut bad = buf.clone();
+        bad[4] = 99;
+        assert!(decode_frame(&bad).is_err());
+        // truncated payload vs promised element count
+        let mut bad = buf.clone();
+        bad.truncate(HEADER_BYTES + 2);
+        assert!(decode_frame(&bad).is_err());
+        // wrong expectations
+        assert!(expect_frame(&buf, 2, PayloadKind::I32, 1).is_err());
+        assert!(expect_frame(&buf, 1, PayloadKind::I8, 4).is_err());
+        assert!(expect_frame(&buf, 1, PayloadKind::I32, 2).is_err());
+    }
+
+    #[test]
+    fn partial_pack_widen_roundtrip() {
+        use crate::compress::intvec::Lanes;
+        let sums = vec![-128i64, -1, 0, 1, 127];
+        for wire in [Lanes::I8, Lanes::I32, Lanes::I64] {
+            let mut bytes = Vec::new();
+            pack_partials(&sums, wire, &mut bytes).unwrap();
+            assert_eq!(bytes.len(), sums.len() * wire.bytes());
+            let mut acc = vec![10i64; sums.len()];
+            add_partials(&bytes, wire, &mut acc).unwrap();
+            for (a, &s) in acc.iter().zip(&sums) {
+                assert_eq!(*a, 10 + s, "{wire:?}");
+            }
+            let mut dst = vec![0i64; sums.len()];
+            copy_partials(&bytes, wire, &mut dst).unwrap();
+            assert_eq!(dst, sums, "{wire:?}");
+        }
+    }
+
+    #[test]
+    fn pack_partials_enforces_the_wire_bound() {
+        assert!(pack_partials(&[128], Lanes::I8, &mut Vec::new()).is_err());
+        assert!(pack_partials(&[i32::MAX as i64 + 1], Lanes::I32, &mut Vec::new()).is_err());
+        assert!(pack_partials(&[i64::MAX], Lanes::I64, &mut Vec::new()).is_ok());
+    }
+
+    #[test]
+    fn checksum_detects_reorder() {
+        assert_ne!(checksum(&[1, 2, 3]), checksum(&[3, 2, 1]));
+        assert_ne!(checksum(&[0, 0]), checksum(&[0]));
+    }
+}

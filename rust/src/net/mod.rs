@@ -1,0 +1,136 @@
+//! `net` — a real transport layer + staged collectives, so IntSGD rounds
+//! move actual bytes between ranks instead of folding borrowed slices in
+//! one address space.
+//!
+//! The paper's headline systems claim is that IntSGD "can be tailored for
+//! the popular all-reduce primitive" because every message is integers.
+//! Until this module, the repository only *simulated* that property: the
+//! collectives were leader-side folds over `&[&IntVec]`, and `netsim`
+//! modeled wire time with alpha-beta costs. This subsystem closes the
+//! loop:
+//!
+//! - [`Transport`] — point-to-point framed messages between ranks, with
+//!   two implementations: [`ChannelTransport`] (in-process mailboxes,
+//!   tier-1 testable, no syscalls) and [`TcpTransport`] (loopback
+//!   `std::net` sockets, length-prefixed frames, no extra crates).
+//! - [`staged`] — ring all-reduce and recursive halving-doubling
+//!   all-reduce for integer messages, plus ring all-gather for the codec
+//!   byte streams. Integer addition is exactly associative, so every
+//!   staged schedule is **bit-identical** to the leader-side rank-order
+//!   fold (`collective::allreduce_intvec`) — `tests/net_parity.rs` pins
+//!   this over real sockets for the whole compressor zoo.
+//! - [`TransportReducer`] — plugs the staged collectives into the engine's
+//!   reduce phase next to `SerialReducer` / the pool reducer, so a full
+//!   training round (`Coordinator::train_over`, `repro net-bench`) runs
+//!   its integer aggregation over the wire.
+//!
+//! Frames are self-describing (`frame`: round id, lane width, element
+//! count, FNV-1a checksum over the payload) and reuse the byte layouts of
+//! `compress::wire` for codec payloads — the wire format here is the one
+//! the paper's byte counts are derived from, so `netsim`'s modeled bytes
+//! and the measured socket time compare like with like
+//! (`netsim::Network::round_breakdown_measured`).
+//!
+//! **Deadlock discipline.** Staged collectives make every rank send before
+//! it receives within a step. `ChannelTransport` mailboxes are unbounded,
+//! so sends never block. `TcpTransport` sockets are finite: its `send`
+//! keeps draining inbound frames into per-peer inboxes whenever the kernel
+//! applies backpressure, so a full mesh of mutually-sending ranks always
+//! makes progress (see `tcp.rs`).
+
+pub mod channel;
+pub mod frame;
+pub mod reducer;
+pub mod staged;
+pub mod tcp;
+
+pub use channel::ChannelTransport;
+pub use frame::{FrameHeader, PayloadKind, HEADER_BYTES};
+pub use reducer::{StagedAlgo, TransportReducer};
+pub use tcp::TcpTransport;
+
+use anyhow::Result;
+
+/// Point-to-point message transport between the `world()` ranks of one
+/// job. A message is one frame (`frame::encode_frame` bytes); transports
+/// deliver frames whole, in order, per ordered (sender, receiver) pair.
+///
+/// Contract for implementations:
+/// - `send` may apply backpressure but must keep consuming inbound frames
+///   while blocked (the staged collectives' deadlock-freedom rests on it);
+/// - `recv` blocks until the next frame *from that peer* arrives, leaving
+///   frames from other peers queued;
+/// - sending to or receiving from `self.rank()` is a caller bug
+///   (collectives never schedule self-messages) and may panic.
+pub trait Transport: Send {
+    /// This endpoint's rank in `[0, world)`.
+    fn rank(&self) -> usize;
+
+    /// Number of ranks in the job.
+    fn world(&self) -> usize;
+
+    /// Ship one framed message to `to`.
+    fn send(&mut self, to: usize, frame: &[u8]) -> Result<()>;
+
+    /// Receive the next framed message from `from` into `out`. The
+    /// previous contents of `out` are discarded; implementations may
+    /// replace the buffer outright (handing over the arrival buffer)
+    /// rather than copying into it.
+    fn recv(&mut self, from: usize, out: &mut Vec<u8>) -> Result<()>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::frame::{encode_frame, expect_frame, FrameHeader, PayloadKind};
+    use super::*;
+
+    /// Shared transport conformance check: ordering per pair, peer
+    /// isolation, and frame integrity end to end. Drives a full mesh from
+    /// n scoped threads, one per endpoint.
+    pub(crate) fn exercise_mesh<T: Transport>(mut endpoints: Vec<T>) {
+        let n = endpoints.len();
+        std::thread::scope(|s| {
+            for (rank, ep) in endpoints.iter_mut().enumerate() {
+                s.spawn(move || {
+                    let mut buf = Vec::new();
+                    let mut rx = Vec::new();
+                    // every ordered pair exchanges two messages; payload
+                    // encodes (sender, receiver, sequence) so misrouting
+                    // or reordering is visible
+                    for seq in 0..2u32 {
+                        for peer in 0..n {
+                            if peer == rank {
+                                continue;
+                            }
+                            let payload =
+                                vec![rank as u8, peer as u8, seq as u8, 0xAB];
+                            encode_frame(
+                                FrameHeader {
+                                    round: seq,
+                                    kind: PayloadKind::Bytes,
+                                    elems: 4,
+                                },
+                                &payload,
+                                &mut buf,
+                            );
+                            ep.send(peer, &buf).expect("send");
+                        }
+                        for peer in 0..n {
+                            if peer == rank {
+                                continue;
+                            }
+                            ep.recv(peer, &mut rx).expect("recv");
+                            let body = expect_frame(&rx, seq, PayloadKind::Bytes, 4)
+                                .expect("frame");
+                            assert_eq!(
+                                body,
+                                &[peer as u8, rank as u8, seq as u8, 0xAB],
+                                "rank {rank} <- peer {peer} seq {seq}"
+                            );
+                        }
+                    }
+                });
+            }
+        });
+    }
+}

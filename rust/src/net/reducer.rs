@@ -1,0 +1,265 @@
+//! [`TransportReducer`]: the engine's integer reduce phase executed as a
+//! staged collective over a real transport.
+//!
+//! The third [`Reducer`] implementation next to `SerialReducer` (leader
+//! fold) and `PoolReducer` (coordinate-chunked fold): here each rank's
+//! message leaves its address space — rank r's endpoint runs the staged
+//! schedule on its own thread, exchanging framed byte messages with its
+//! peers, and every rank independently materializes the identical
+//! aggregate (the collective's defining postcondition; a `debug_assert`
+//! cross-checks it). Bit-parity with the in-process folds is inherited
+//! from `net::staged` (exact integer associativity) and pinned end to
+//! end by `tests/net_parity.rs`.
+//!
+//! The partial-sum wire width is derived per round from the messages
+//! themselves ([`partial_sum_lanes`]): for IntSGD's clipped int8 wire the
+//! per-rank magnitudes sum within i8, so the staged schedule ships one
+//! byte per coordinate per hop — the byte count the paper's all-reduce
+//! argument is about.
+//!
+//! Rank threads are spawned per call via `std::thread::scope` (the
+//! borrowed messages make this sound); at ~10 us per spawn this is noise
+//! against real socket time, and the transport path is deliberately NOT
+//! part of the zero-allocation guarantee — it is the measured-wire
+//! reference the in-process paths are compared against
+//! (`RoundBreakdown::comm_measured`). A transport failure panics the
+//! round: a training loop must not silently continue on a torn
+//! collective.
+
+use std::time::Instant;
+
+use crate::compress::engine::{RankMessages, Reducer};
+use crate::compress::intvec::Lanes;
+
+use super::staged::{
+    halving_allreduce_ints, partial_sum_lanes, ring_allreduce_ints, StagedScratch,
+};
+use super::{ChannelTransport, TcpTransport, Transport};
+
+/// Which staged schedule the reducer runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StagedAlgo {
+    /// Reduce-scatter + all-gather around the ring (bandwidth-optimal,
+    /// the NCCL default the paper's cluster numbers assume).
+    Ring,
+    /// Recursive halving-doubling (latency-optimal; power-of-two worlds,
+    /// ring fallback otherwise).
+    Halving,
+}
+
+/// Per-rank state the reducer owns across rounds.
+struct RankState<T> {
+    endpoint: T,
+    scratch: StagedScratch,
+    /// This rank's aggregate (every rank computes the full vector).
+    acc: Vec<i64>,
+}
+
+pub struct TransportReducer<T: Transport> {
+    ranks: Vec<RankState<T>>,
+    algo: StagedAlgo,
+    /// Collective-call sequence number, stamped into every frame header.
+    round: u32,
+    wire_seconds: f64,
+    calls: u64,
+    last_wire: Option<Lanes>,
+}
+
+impl TransportReducer<ChannelTransport> {
+    /// An n-rank reducer over in-process channels.
+    pub fn channel_mesh(n: usize, algo: StagedAlgo) -> Self {
+        Self::new(ChannelTransport::mesh(n), algo)
+    }
+}
+
+impl TransportReducer<TcpTransport> {
+    /// An n-rank reducer over loopback TCP sockets.
+    pub fn tcp_loopback(n: usize, algo: StagedAlgo) -> anyhow::Result<Self> {
+        Ok(Self::new(TcpTransport::loopback_mesh(n)?, algo))
+    }
+}
+
+impl<T: Transport> TransportReducer<T> {
+    /// Endpoint r becomes rank r's end of every staged collective.
+    pub fn new(endpoints: Vec<T>, algo: StagedAlgo) -> Self {
+        assert!(!endpoints.is_empty(), "at least one endpoint");
+        for (r, ep) in endpoints.iter().enumerate() {
+            assert_eq!(ep.rank(), r, "endpoint order must match rank order");
+        }
+        TransportReducer {
+            ranks: endpoints
+                .into_iter()
+                .map(|endpoint| RankState {
+                    endpoint,
+                    scratch: StagedScratch::default(),
+                    acc: Vec::new(),
+                })
+                .collect(),
+            algo,
+            round: 0,
+            wire_seconds: 0.0,
+            calls: 0,
+            last_wire: None,
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        self.ranks.len()
+    }
+
+    pub fn algo(&self) -> StagedAlgo {
+        self.algo
+    }
+
+    /// Wall-clock seconds spent inside staged collectives since the last
+    /// [`TransportReducer::take_wire_seconds`] — the *measured* side of
+    /// `netsim`'s measured-vs-modeled comparison.
+    pub fn wire_seconds(&self) -> f64 {
+        self.wire_seconds
+    }
+
+    /// Read and reset the measured wire time (drivers call this once per
+    /// training round to attribute socket time round by round).
+    pub fn take_wire_seconds(&mut self) -> f64 {
+        std::mem::take(&mut self.wire_seconds)
+    }
+
+    /// Staged collectives executed so far.
+    pub fn calls(&self) -> u64 {
+        self.calls
+    }
+
+    /// Wire width the last collective shipped its partial sums at.
+    pub fn last_wire(&self) -> Option<Lanes> {
+        self.last_wire
+    }
+}
+
+impl<T: Transport> Reducer for TransportReducer<T> {
+    fn sum_ints(&mut self, msgs: &RankMessages, out: &mut Vec<i64>) {
+        let n = self.ranks.len();
+        assert!(!msgs.is_empty(), "at least one rank message");
+        assert_eq!(msgs.len(), n, "one transport endpoint per rank");
+        let d = msgs.get(0).as_ints().len();
+        for m in msgs.iter() {
+            assert_eq!(m.as_ints().len(), d, "mismatched message lengths");
+        }
+        // Narrowest width every partial sum provably fits: for IntSGD's
+        // clipped messages this recovers the aggregate wire type itself.
+        let wire = partial_sum_lanes(msgs.iter().map(|m| m.as_ints()));
+        self.last_wire = Some(wire);
+        let round = self.round;
+        self.round = self.round.wrapping_add(1);
+        let algo = self.algo;
+
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for (rank, state) in self.ranks.iter_mut().enumerate() {
+                let msg = msgs.get(rank).as_ints();
+                s.spawn(move || {
+                    let run = match algo {
+                        StagedAlgo::Ring => ring_allreduce_ints,
+                        StagedAlgo::Halving => halving_allreduce_ints,
+                    };
+                    run(
+                        &mut state.endpoint,
+                        msg,
+                        wire,
+                        round,
+                        &mut state.scratch,
+                        &mut state.acc,
+                    )
+                    .unwrap_or_else(|e| {
+                        panic!("staged reduce failed on rank {rank}: {e}")
+                    });
+                });
+            }
+        });
+        self.wire_seconds += t0.elapsed().as_secs_f64();
+        self.calls += 1;
+
+        // every rank holds the identical aggregate; rank 0's is the result
+        out.clear();
+        out.extend_from_slice(&self.ranks[0].acc);
+        debug_assert!(
+            self.ranks.iter().all(|r| r.acc == self.ranks[0].acc),
+            "ranks disagree on the aggregate — the collective is torn"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::engine::{Message, PassPlan, RankEncoder, SerialReducer};
+    use crate::compress::intvec::IntVec;
+    use crate::util::Rng;
+
+    struct Fixed {
+        msg: Message,
+    }
+
+    impl RankEncoder for Fixed {
+        fn encode(&mut self, _grad: &[f32], _plan: &PassPlan) {}
+        fn message(&self) -> &Message {
+            &self.msg
+        }
+    }
+
+    fn fixed_encoders(n: usize, d: usize, seed: u64) -> Vec<Box<dyn RankEncoder>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let vals: Vec<i64> =
+                    (0..d).map(|_| rng.below(15) as i64 - 7).collect();
+                Box::new(Fixed { msg: Message::Ints(IntVec::from_i64(&vals, Lanes::I8)) })
+                    as Box<dyn RankEncoder>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_serial_reducer_over_channels() {
+        for algo in [StagedAlgo::Ring, StagedAlgo::Halving] {
+            for n in [1usize, 3, 4] {
+                let encs = fixed_encoders(n, 129, 3 + n as u64);
+                let msgs = RankMessages::new(&encs);
+                let mut want = Vec::new();
+                SerialReducer.sum_ints(&msgs, &mut want);
+                let mut red = TransportReducer::channel_mesh(n, algo);
+                let mut got = Vec::new();
+                // repeated rounds reuse endpoints and scratch
+                for _ in 0..3 {
+                    red.sum_ints(&msgs, &mut got);
+                    assert_eq!(got, want, "{algo:?} n={n}");
+                }
+                assert_eq!(red.calls(), 3);
+                assert!(red.wire_seconds() >= 0.0);
+                // |v| <= 7 per rank, so partials fit i8 up to n = 18
+                assert_eq!(red.last_wire(), Some(Lanes::I8), "{algo:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn take_wire_seconds_resets() {
+        let encs = fixed_encoders(2, 32, 9);
+        let msgs = RankMessages::new(&encs);
+        let mut red = TransportReducer::channel_mesh(2, StagedAlgo::Ring);
+        let mut out = Vec::new();
+        red.sum_ints(&msgs, &mut out);
+        let t = red.take_wire_seconds();
+        assert!(t >= 0.0);
+        assert_eq!(red.wire_seconds(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "one transport endpoint per rank")]
+    fn world_size_mismatch_is_rejected() {
+        let encs = fixed_encoders(3, 8, 1);
+        let msgs = RankMessages::new(&encs);
+        let mut red = TransportReducer::channel_mesh(2, StagedAlgo::Ring);
+        let mut out = Vec::new();
+        red.sum_ints(&msgs, &mut out);
+    }
+}

@@ -1,0 +1,427 @@
+//! Staged collectives: the real multi-step schedules of ring all-reduce,
+//! recursive halving-doubling all-reduce, and ring all-gather, executed
+//! over any [`Transport`].
+//!
+//! **Bit-parity argument.** Every integer collective here computes, per
+//! coordinate, a sum of the same n rank values the leader-side fold
+//! (`collective::allreduce_intvec`) computes — just associated in the
+//! schedule's order instead of rank order. The accumulator is `i64` end
+//! to end, the summands are wire-bounded (|aggregate| fits the caller's
+//! `wire` lane, so no i64 overflow is reachable), and i64 addition is
+//! exactly associative and commutative — therefore any schedule produces
+//! the identical bit pattern. `tests/net_parity.rs` pins this over real
+//! TCP sockets for the whole compressor zoo.
+//!
+//! **Wire width of partial sums.** The caller passes the lane every
+//! *partial* sum provably fits. For IntSGD this is the aggregate wire
+//! type itself: each rank clips to `floor((2^{b-1}-1)/n)`, so any subset
+//! of ranks sums within the full-aggregate bound (the paper's wire-fit
+//! proof, `IntSgd::local_clip`). `pack_partials` range-checks every
+//! element, so a violated proof is a loud decode error, never silent
+//! corruption. [`partial_sum_lanes`] derives a safe width from the
+//! messages themselves when no proof is at hand.
+//!
+//! Scratch buffers are taken from a per-call [`StagedScratch`] so a
+//! steady-state caller (the [`super::TransportReducer`]) reuses payload /
+//! frame / receive buffers across rounds.
+
+use anyhow::{anyhow, Result};
+
+use crate::compress::intvec::{IntVec, Lanes};
+
+use super::frame::{
+    add_partials, copy_partials, decode_frame, encode_frame, expect_frame, pack_partials,
+    FrameHeader, PayloadKind,
+};
+use super::Transport;
+
+/// Reused buffers for one endpoint's staged collectives.
+#[derive(Default)]
+pub struct StagedScratch {
+    payload: Vec<u8>,
+    frame: Vec<u8>,
+    rx: Vec<u8>,
+    starts: Vec<usize>,
+    /// Halving-doubling step log: (partner, keep_lo, keep_hi, give_lo,
+    /// give_hi), replayed in reverse for the all-gather phase.
+    steps: Vec<(usize, usize, usize, usize, usize)>,
+}
+
+/// Narrowest lane provably holding every partial sum of `msgs` — the sum
+/// of per-rank magnitudes bounds any subset's sum. Callers with a
+/// stronger proof (IntSGD's clip) pass their wire lane directly.
+pub fn partial_sum_lanes<'a, I>(msgs: I) -> Lanes
+where
+    I: IntoIterator<Item = &'a IntVec>,
+{
+    let bound: i64 = msgs
+        .into_iter()
+        .map(|m| m.max_abs())
+        .fold(0i64, |acc, x| acc.saturating_add(x));
+    Lanes::for_bound(bound)
+}
+
+/// Ring all-reduce of one integer message: reduce-scatter over n-1 steps
+/// on n chunks, then ring all-gather of the finished chunks. On return
+/// `out` holds the exact integer sum over all ranks — bit-identical to
+/// `collective::allreduce_intvec` (module docs) — and every rank holds
+/// the same vector.
+pub fn ring_allreduce_ints(
+    t: &mut dyn Transport,
+    msg: &IntVec,
+    wire: Lanes,
+    round: u32,
+    scratch: &mut StagedScratch,
+    out: &mut Vec<i64>,
+) -> Result<()> {
+    let n = t.world();
+    let r = t.rank();
+    let d = msg.len();
+    out.clear();
+    out.resize(d, 0);
+    msg.add_range_to(0, out);
+    if n == 1 {
+        return Ok(());
+    }
+    let kind = PayloadKind::of_lanes(wire);
+    let right = (r + 1) % n;
+    let left = (r + n - 1) % n;
+    // chunk c covers starts[c]..starts[c + 1]
+    scratch.starts.clear();
+    scratch.starts.extend((0..=n).map(|c| c * d / n));
+
+    // reduce-scatter: at step s, send accumulated chunk (r - s) right,
+    // fold received chunk (r - 1 - s) from the left
+    for s in 0..n - 1 {
+        let send_c = (r + n - s) % n;
+        let recv_c = (r + 2 * n - 1 - s) % n;
+        let (slo, shi) = (scratch.starts[send_c], scratch.starts[send_c + 1]);
+        pack_partials(&out[slo..shi], wire, &mut scratch.payload)?;
+        encode_frame(
+            FrameHeader { round, kind, elems: (shi - slo) as u32 },
+            &scratch.payload,
+            &mut scratch.frame,
+        );
+        t.send(right, &scratch.frame)?;
+        t.recv(left, &mut scratch.rx)?;
+        let (rlo, rhi) = (scratch.starts[recv_c], scratch.starts[recv_c + 1]);
+        let body = expect_frame(&scratch.rx, round, kind, rhi - rlo)?;
+        add_partials(body, wire, &mut out[rlo..rhi])?;
+    }
+    // all-gather: rank r owns the finished chunk (r + 1); circulate the
+    // finished chunks around the ring
+    for s in 0..n - 1 {
+        let send_c = (r + 1 + n - s) % n;
+        let recv_c = (r + n - s) % n;
+        let (slo, shi) = (scratch.starts[send_c], scratch.starts[send_c + 1]);
+        pack_partials(&out[slo..shi], wire, &mut scratch.payload)?;
+        encode_frame(
+            FrameHeader { round, kind, elems: (shi - slo) as u32 },
+            &scratch.payload,
+            &mut scratch.frame,
+        );
+        t.send(right, &scratch.frame)?;
+        t.recv(left, &mut scratch.rx)?;
+        let (rlo, rhi) = (scratch.starts[recv_c], scratch.starts[recv_c + 1]);
+        let body = expect_frame(&scratch.rx, round, kind, rhi - rlo)?;
+        copy_partials(body, wire, &mut out[rlo..rhi])?;
+    }
+    Ok(())
+}
+
+/// Recursive halving-doubling all-reduce (Rabenseifner): reduce-scatter
+/// by vector halving with doubling distances, then all-gather by vector
+/// doubling — log2(n) rounds of half-sized exchanges instead of the
+/// ring's n-1 chunk hops, the latency-optimal schedule for small
+/// messages. Requires a power-of-two world; other sizes fall back to the
+/// ring schedule (same bits either way — module docs).
+pub fn halving_allreduce_ints(
+    t: &mut dyn Transport,
+    msg: &IntVec,
+    wire: Lanes,
+    round: u32,
+    scratch: &mut StagedScratch,
+    out: &mut Vec<i64>,
+) -> Result<()> {
+    let n = t.world();
+    if !n.is_power_of_two() {
+        return ring_allreduce_ints(t, msg, wire, round, scratch, out);
+    }
+    let r = t.rank();
+    let d = msg.len();
+    out.clear();
+    out.resize(d, 0);
+    msg.add_range_to(0, out);
+    if n == 1 {
+        return Ok(());
+    }
+    let kind = PayloadKind::of_lanes(wire);
+
+    // reduce-scatter: each step, partner pairs split their common segment;
+    // each sends the half it gives up and folds the half it keeps
+    scratch.steps.clear();
+    let (mut lo, mut hi) = (0usize, d);
+    let mut dist = n / 2;
+    while dist >= 1 {
+        let partner = r ^ dist;
+        let mid = lo + (hi - lo) / 2;
+        let (keep, give) = if r & dist == 0 {
+            ((lo, mid), (mid, hi))
+        } else {
+            ((mid, hi), (lo, mid))
+        };
+        pack_partials(&out[give.0..give.1], wire, &mut scratch.payload)?;
+        encode_frame(
+            FrameHeader { round, kind, elems: (give.1 - give.0) as u32 },
+            &scratch.payload,
+            &mut scratch.frame,
+        );
+        t.send(partner, &scratch.frame)?;
+        t.recv(partner, &mut scratch.rx)?;
+        let body = expect_frame(&scratch.rx, round, kind, keep.1 - keep.0)?;
+        add_partials(body, wire, &mut out[keep.0..keep.1])?;
+        scratch.steps.push((partner, keep.0, keep.1, give.0, give.1));
+        lo = keep.0;
+        hi = keep.1;
+        dist /= 2;
+    }
+    // all-gather: replay in reverse; I own my keep segment fully summed,
+    // the partner owns the give segment — exchange to own their union
+    for step in (0..scratch.steps.len()).rev() {
+        let (partner, klo, khi, glo, ghi) = scratch.steps[step];
+        pack_partials(&out[klo..khi], wire, &mut scratch.payload)?;
+        encode_frame(
+            FrameHeader { round, kind, elems: (khi - klo) as u32 },
+            &scratch.payload,
+            &mut scratch.frame,
+        );
+        t.send(partner, &scratch.frame)?;
+        t.recv(partner, &mut scratch.rx)?;
+        let body = expect_frame(&scratch.rx, round, kind, ghi - glo)?;
+        copy_partials(body, wire, &mut out[glo..ghi])?;
+    }
+    Ok(())
+}
+
+/// Ring all-gather of opaque codec payloads (sparse / sign / QSGD /
+/// NatSGD byte streams from `compress::wire`): after n-1 steps every rank
+/// holds every rank's bytes. `out[i]` receives rank i's payload into a
+/// reused buffer; payload sizes may differ per rank (the header carries
+/// each frame's own length).
+pub fn ring_allgather_bytes(
+    t: &mut dyn Transport,
+    mine: &[u8],
+    round: u32,
+    scratch: &mut StagedScratch,
+    out: &mut Vec<Vec<u8>>,
+) -> Result<()> {
+    let n = t.world();
+    let r = t.rank();
+    out.resize_with(n, Vec::new);
+    out[r].clear();
+    out[r].extend_from_slice(mine);
+    if n == 1 {
+        return Ok(());
+    }
+    let right = (r + 1) % n;
+    let left = (r + n - 1) % n;
+    for s in 0..n - 1 {
+        let send_origin = (r + n - s) % n;
+        let recv_origin = (r + 2 * n - 1 - s) % n;
+        let payload = &out[send_origin];
+        if payload.len() > u32::MAX as usize {
+            return Err(anyhow!("payload too large for a frame"));
+        }
+        encode_frame(
+            FrameHeader {
+                round,
+                kind: PayloadKind::Bytes,
+                elems: payload.len() as u32,
+            },
+            payload,
+            &mut scratch.frame,
+        );
+        t.send(right, &scratch.frame)?;
+        t.recv(left, &mut scratch.rx)?;
+        let (h, body) = decode_frame(&scratch.rx)?;
+        if h.round != round || h.kind != PayloadKind::Bytes {
+            return Err(anyhow!(
+                "unexpected frame (round {}, {:?}) during all-gather round {round}",
+                h.round,
+                h.kind
+            ));
+        }
+        let dst = &mut out[recv_origin];
+        dst.clear();
+        dst.extend_from_slice(body);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ChannelTransport;
+    use super::*;
+    use crate::collective::allreduce_intvec;
+    use crate::util::Rng;
+
+    type Staged = fn(
+        &mut dyn Transport,
+        &IntVec,
+        Lanes,
+        u32,
+        &mut StagedScratch,
+        &mut Vec<i64>,
+    ) -> Result<()>;
+
+    /// Run one staged all-reduce across n threads and require every
+    /// rank's result to be bit-identical to the leader-side fold.
+    fn assert_staged_matches_fold(algo: Staged, n: usize, d: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let msgs: Vec<IntVec> = (0..n)
+            .map(|_| {
+                let vals: Vec<i64> =
+                    (0..d).map(|_| rng.below(255) as i64 - 127).collect();
+                IntVec::from_i64(&vals, Lanes::I32)
+            })
+            .collect();
+        let views: Vec<&IntVec> = msgs.iter().collect();
+        let mut want = Vec::new();
+        allreduce_intvec(&views, &mut want);
+        let wire = partial_sum_lanes(msgs.iter());
+
+        let mut endpoints = ChannelTransport::mesh(n);
+        let results: Vec<Vec<i64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = endpoints
+                .iter_mut()
+                .zip(&msgs)
+                .map(|(ep, msg)| {
+                    s.spawn(move || {
+                        let mut scratch = StagedScratch::default();
+                        let mut out = Vec::new();
+                        // two rounds over the same endpoints: scratch and
+                        // sequencing must survive reuse
+                        for round in 0..2 {
+                            algo(ep, msg, wire, round, &mut scratch, &mut out)
+                                .expect("staged all-reduce");
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (rank, got) in results.iter().enumerate() {
+            assert_eq!(got, &want, "rank {rank} (n={n}, d={d})");
+        }
+    }
+
+    #[test]
+    fn ring_matches_leader_fold() {
+        for (n, d) in [(1usize, 40usize), (2, 64), (3, 65), (4, 7), (5, 1000), (8, 0)] {
+            assert_staged_matches_fold(ring_allreduce_ints, n, d, 11 + n as u64);
+        }
+    }
+
+    #[test]
+    fn halving_matches_leader_fold() {
+        // power-of-two worlds take the halving schedule; 3 and 5 exercise
+        // the documented ring fallback
+        for (n, d) in [(1usize, 16usize), (2, 33), (4, 100), (8, 257), (3, 50), (5, 64)] {
+            assert_staged_matches_fold(halving_allreduce_ints, n, d, 77 + n as u64);
+        }
+    }
+
+    #[test]
+    fn i8_wire_carries_clipped_partials() {
+        // IntSGD's invariant: per-rank |v| <= clip = floor(127 / n) keeps
+        // every partial sum in i8 — the staged ring must accept that wire
+        let n = 4;
+        let d = 100;
+        let clip = 127 / n as i64;
+        let mut rng = Rng::new(5);
+        let msgs: Vec<IntVec> = (0..n)
+            .map(|_| {
+                let vals: Vec<i64> =
+                    (0..d).map(|_| rng.below(2 * clip as u64 + 1) as i64 - clip).collect();
+                IntVec::from_i64(&vals, Lanes::I8)
+            })
+            .collect();
+        let views: Vec<&IntVec> = msgs.iter().collect();
+        let mut want = Vec::new();
+        allreduce_intvec(&views, &mut want);
+        assert_eq!(partial_sum_lanes(msgs.iter()), Lanes::I8);
+
+        let mut endpoints = ChannelTransport::mesh(n);
+        std::thread::scope(|s| {
+            for (ep, msg) in endpoints.iter_mut().zip(&msgs) {
+                let want = &want;
+                s.spawn(move || {
+                    let mut scratch = StagedScratch::default();
+                    let mut out = Vec::new();
+                    ring_allreduce_ints(ep, msg, Lanes::I8, 0, &mut scratch, &mut out)
+                        .expect("i8 ring");
+                    assert_eq!(&out, want);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn violated_wire_proof_is_a_loud_error() {
+        // partial sums exceeding the claimed lane must fail the pack
+        // range check, not wrap into garbage
+        let n = 2;
+        let msgs: Vec<IntVec> =
+            (0..n).map(|_| IntVec::from_i64(&[100i64; 8], Lanes::I8)).collect();
+        let mut endpoints = ChannelTransport::mesh(n);
+        let errs: Vec<bool> = std::thread::scope(|s| {
+            let handles: Vec<_> = endpoints
+                .iter_mut()
+                .zip(&msgs)
+                .map(|(ep, msg)| {
+                    s.spawn(move || {
+                        let mut scratch = StagedScratch::default();
+                        let mut out = Vec::new();
+                        // claim i8 although the sum reaches 200
+                        ring_allreduce_ints(ep, msg, Lanes::I8, 0, &mut scratch, &mut out)
+                            .is_err()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(errs.iter().any(|&e| e), "overflow went unnoticed");
+    }
+
+    #[test]
+    fn allgather_bytes_distributes_every_payload() {
+        let n = 5;
+        let payloads: Vec<Vec<u8>> = (0..n)
+            .map(|r| (0..(10 + 17 * r)).map(|k| (r * 31 + k) as u8).collect())
+            .collect();
+        let mut endpoints = ChannelTransport::mesh(n);
+        std::thread::scope(|s| {
+            for (ep, mine) in endpoints.iter_mut().zip(&payloads) {
+                let payloads = &payloads;
+                s.spawn(move || {
+                    let mut scratch = StagedScratch::default();
+                    let mut out = Vec::new();
+                    for round in 0..2 {
+                        ring_allgather_bytes(ep, mine, round, &mut scratch, &mut out)
+                            .expect("all-gather");
+                        assert_eq!(&out, payloads, "round {round}");
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn partial_sum_lanes_is_conservative() {
+        let a = IntVec::from_i64(&[100], Lanes::I8);
+        let b = IntVec::from_i64(&[100], Lanes::I8);
+        // 100 + 100 = 200 does not fit i8
+        assert_eq!(partial_sum_lanes([&a, &b]), Lanes::I32);
+    }
+}

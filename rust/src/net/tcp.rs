@@ -1,0 +1,356 @@
+//! Loopback TCP transport: `std::net` sockets, length-prefixed frames,
+//! no crates beyond std.
+//!
+//! **Mesh setup.** `loopback_mesh(n)` binds one ephemeral listener per
+//! rank, then connects every ordered pair `i < j` (rank i dials rank j's
+//! listener). Loopback connects complete into the listen backlog without
+//! an `accept`, so the whole mesh is built single-threaded; a 4-byte
+//! hello carrying the dialer's rank lets the acceptor attribute each
+//! inbound stream to its peer. Streams are full-duplex: the pair (i, j)
+//! shares one TCP connection, each side holding its own handle.
+//!
+//! **Stream framing.** Each message is `[u32 LE length][frame bytes]`
+//! (the frame bytes being `net::frame`'s header + payload — the length
+//! prefix is transport framing, absent on the message-oriented channel
+//! transport).
+//!
+//! **Deadlock freedom.** Kernel socket buffers are finite, and a staged
+//! collective has every rank sending before it receives: if `send`
+//! blocked in `write` while every peer also blocked in `write`, nobody
+//! would drain and the mesh would wedge. All streams therefore run
+//! nonblocking; whenever a write hits `WouldBlock`, the transport first
+//! **pumps** — drains every peer's inbound bytes into per-peer frame
+//! inboxes — before retrying. A rank applying backpressure is thus always
+//! also consuming, so some write in the mesh can always complete. `recv`
+//! pumps the same way while waiting, serving frames from the requested
+//! peer's inbox in arrival order and leaving other peers' frames queued.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::Transport;
+
+/// Upper bound on one frame's length prefix — a corrupt prefix must
+/// produce an error, not a multi-gigabyte allocation.
+pub const MAX_FRAME_BYTES: usize = 1 << 26; // 64 MiB
+
+/// Give up on a blocked send/recv after this long: a dead or wedged peer
+/// (e.g. a rank that panicked mid-schedule without dropping its
+/// transport) must fail the collective, not hang the surviving ranks.
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// After this many fruitless nonblocking spins, start yielding the CPU
+/// between polls (latency-first at the start, cores-first when idle).
+const SPIN_BEFORE_YIELD: u32 = 128;
+
+struct Peer {
+    stream: TcpStream,
+    /// Raw inbound bytes, possibly ending mid-frame.
+    rbuf: Vec<u8>,
+    /// Complete frames, in arrival order.
+    inbox: VecDeque<Vec<u8>>,
+    /// Peer closed its end (EOF seen).
+    closed: bool,
+}
+
+impl Peer {
+    fn new(stream: TcpStream) -> Result<Peer> {
+        stream.set_nodelay(true).context("set_nodelay")?;
+        stream.set_nonblocking(true).context("set_nonblocking")?;
+        Ok(Peer { stream, rbuf: Vec::new(), inbox: VecDeque::new(), closed: false })
+    }
+
+    /// Drain whatever the kernel has buffered for this peer (one pass of
+    /// nonblocking reads), slicing complete frames into the inbox.
+    fn pump(&mut self) -> Result<()> {
+        if self.closed {
+            return Ok(());
+        }
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.closed = true;
+                    break;
+                }
+                Ok(k) => {
+                    self.rbuf.extend_from_slice(&chunk[..k]);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(anyhow!("socket read: {e}")),
+            }
+        }
+        // Slice complete frames off with a cursor and drain the consumed
+        // prefix once — a per-frame drain would memmove the whole tail
+        // for every frame, O(frames x buffered bytes) on the very path
+        // the transport benchmark measures.
+        let mut consumed = 0usize;
+        let mut bad_prefix = None;
+        loop {
+            let rem = &self.rbuf[consumed..];
+            if rem.len() < 4 {
+                break;
+            }
+            let len = u32::from_le_bytes([rem[0], rem[1], rem[2], rem[3]]) as usize;
+            if len > MAX_FRAME_BYTES {
+                // error AFTER draining what was already sliced: bailing
+                // here with the cursor unapplied would re-parse (and
+                // duplicate) those frames on the next pump
+                bad_prefix = Some(len);
+                break;
+            }
+            if rem.len() < 4 + len {
+                break;
+            }
+            self.inbox.push_back(rem[4..4 + len].to_vec());
+            consumed += 4 + len;
+        }
+        if consumed > 0 {
+            self.rbuf.drain(..consumed);
+        }
+        if let Some(len) = bad_prefix {
+            return Err(anyhow!(
+                "frame length prefix {len} exceeds the {MAX_FRAME_BYTES}-byte cap"
+            ));
+        }
+        Ok(())
+    }
+}
+
+pub struct TcpTransport {
+    rank: usize,
+    peers: Vec<Option<Peer>>,
+    /// Staging buffer for the length-prefixed write (reused per send).
+    wbuf: Vec<u8>,
+}
+
+impl TcpTransport {
+    /// Build a fully-connected loopback mesh of `n` endpoints on
+    /// 127.0.0.1 ephemeral ports; endpoint r is rank r's transport (move
+    /// each to its rank's thread).
+    pub fn loopback_mesh(n: usize) -> Result<Vec<TcpTransport>> {
+        // user-reachable knob (repro net-bench workers=...): clean errors,
+        // not asserts
+        if n < 1 {
+            return Err(anyhow!("at least one rank"));
+        }
+        if n > 64 {
+            return Err(anyhow!(
+                "loopback mesh caps at 64 ranks (n^2 sockets; listen backlog), got {n}"
+            ));
+        }
+        let listeners: Vec<TcpListener> = (0..n)
+            .map(|_| TcpListener::bind("127.0.0.1:0").context("bind loopback listener"))
+            .collect::<Result<_>>()?;
+        let addrs: Vec<_> = listeners
+            .iter()
+            .map(|l| l.local_addr().context("listener addr"))
+            .collect::<Result<_>>()?;
+
+        let mut peers: Vec<Vec<Option<Peer>>> =
+            (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+
+        // dial every pair i < j; the connect completes into j's listen
+        // backlog, so no concurrent accept loop is needed on loopback
+        for i in 0..n {
+            for j in i + 1..n {
+                let mut stream =
+                    TcpStream::connect(addrs[j]).with_context(|| format!("rank {i} -> {j}"))?;
+                stream
+                    .write_all(&(i as u32).to_le_bytes())
+                    .context("send hello")?;
+                peers[i][j] = Some(Peer::new(stream)?);
+            }
+        }
+        // accept rank j's inbound streams (one per dialer i < j) and
+        // attribute each by its hello
+        for (j, listener) in listeners.iter().enumerate() {
+            for _ in 0..j {
+                let (mut stream, _) = listener.accept().context("accept")?;
+                let mut hello = [0u8; 4];
+                stream.read_exact(&mut hello).context("read hello")?;
+                let i = u32::from_le_bytes(hello) as usize;
+                if i >= n || peers[j][i].is_some() {
+                    return Err(anyhow!("bogus hello rank {i} at listener {j}"));
+                }
+                peers[j][i] = Some(Peer::new(stream)?);
+            }
+        }
+        Ok(peers
+            .into_iter()
+            .enumerate()
+            .map(|(rank, peers)| TcpTransport { rank, peers, wbuf: Vec::new() })
+            .collect())
+    }
+
+    /// One nonblocking drain pass over every connected peer — the
+    /// progress guarantee both `send` and `recv` lean on.
+    fn pump_all(peers: &mut [Option<Peer>]) -> Result<()> {
+        for peer in peers.iter_mut().flatten() {
+            peer.pump()?;
+        }
+        Ok(())
+    }
+
+    fn backoff(spins: &mut u32) {
+        *spins += 1;
+        if *spins > SPIN_BEFORE_YIELD {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.peers.len()
+    }
+
+    fn send(&mut self, to: usize, frame: &[u8]) -> Result<()> {
+        assert!(to != self.rank, "rank {} sending to itself", self.rank);
+        if frame.len() > MAX_FRAME_BYTES {
+            return Err(anyhow!(
+                "frame of {} bytes exceeds the {MAX_FRAME_BYTES}-byte cap",
+                frame.len()
+            ));
+        }
+        self.wbuf.clear();
+        self.wbuf.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+        self.wbuf.extend_from_slice(frame);
+        let deadline = Instant::now() + IO_TIMEOUT;
+        let mut written = 0usize;
+        let mut spins = 0u32;
+        while written < self.wbuf.len() {
+            let peer = self.peers[to]
+                .as_mut()
+                .unwrap_or_else(|| panic!("no stream to rank {to}"));
+            match peer.stream.write(&self.wbuf[written..]) {
+                Ok(0) => return Err(anyhow!("rank {to} closed the connection")),
+                Ok(k) => written += k,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    // backpressure: drain inbound so the mesh keeps moving
+                    Self::pump_all(&mut self.peers)?;
+                    if Instant::now() > deadline {
+                        return Err(anyhow!(
+                            "timed out sending to rank {to} (peer not draining)"
+                        ));
+                    }
+                    Self::backoff(&mut spins);
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(anyhow!("socket write to rank {to}: {e}")),
+            }
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self, from: usize, out: &mut Vec<u8>) -> Result<()> {
+        assert!(from != self.rank, "rank {} receiving from itself", self.rank);
+        let deadline = Instant::now() + IO_TIMEOUT;
+        let mut spins = 0u32;
+        loop {
+            {
+                let peer = self.peers[from]
+                    .as_mut()
+                    .unwrap_or_else(|| panic!("no stream from rank {from}"));
+                if let Some(frame) = peer.inbox.pop_front() {
+                    // hand the inbox's buffer over instead of memcpying a
+                    // megabyte-scale frame on the measured wire path
+                    *out = frame;
+                    return Ok(());
+                }
+                if peer.closed {
+                    return Err(anyhow!("rank {from} closed the connection"));
+                }
+            }
+            Self::pump_all(&mut self.peers)?;
+            if Instant::now() > deadline {
+                return Err(anyhow!("timed out waiting on a frame from rank {from}"));
+            }
+            Self::backoff(&mut spins);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::exercise_mesh;
+    use super::*;
+
+    #[test]
+    fn mesh_delivers_ordered_and_isolated() {
+        for n in [2usize, 4] {
+            exercise_mesh(TcpTransport::loopback_mesh(n).expect("mesh"));
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected() {
+        let mut mesh = TcpTransport::loopback_mesh(2).unwrap();
+        let b = mesh.pop().unwrap();
+        let mut a = mesh.pop().unwrap();
+        // write a hostile prefix directly on the raw stream
+        let mut raw = &a.peers[1].as_ref().unwrap().stream;
+        raw.write_all(&(u32::MAX).to_le_bytes()).unwrap();
+        raw.write_all(&[0u8; 8]).unwrap();
+        drop(a);
+        let mut b = b;
+        let err = b.recv(0, &mut Vec::new()).expect_err("cap must trip");
+        assert!(err.to_string().contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn closed_peer_errors_instead_of_hanging() {
+        let mut mesh = TcpTransport::loopback_mesh(2).unwrap();
+        let b = mesh.pop().unwrap();
+        let mut a = mesh.pop().unwrap();
+        drop(b);
+        let err = a.recv(1, &mut Vec::new()).expect_err("EOF must surface");
+        assert!(err.to_string().contains("closed"), "{err}");
+    }
+
+    #[test]
+    fn backpressure_makes_progress_not_deadlock() {
+        // Both ranks send a burst far beyond any socket buffer before
+        // either receives — exactly the pattern that wedges a blocking
+        // mesh. The pump-on-WouldBlock discipline must drain it.
+        let mut mesh = TcpTransport::loopback_mesh(2).unwrap();
+        let mut b = mesh.pop().unwrap();
+        let mut a = mesh.pop().unwrap();
+        let frame = vec![0x5Au8; 1 << 20]; // 1 MiB per message
+        let msgs = 8;
+        std::thread::scope(|s| {
+            let ha = s.spawn(move || {
+                let mut rx = Vec::new();
+                for _ in 0..msgs {
+                    a.send(1, &frame).unwrap();
+                }
+                for _ in 0..msgs {
+                    a.recv(1, &mut rx).unwrap();
+                    assert_eq!(rx.len(), 1 << 20);
+                }
+            });
+            let frame_b = vec![0x5Au8; 1 << 20];
+            let hb = s.spawn(move || {
+                let mut rx = Vec::new();
+                for _ in 0..msgs {
+                    b.send(0, &frame_b).unwrap();
+                }
+                for _ in 0..msgs {
+                    b.recv(0, &mut rx).unwrap();
+                    assert_eq!(rx.len(), 1 << 20);
+                }
+            });
+            ha.join().unwrap();
+            hb.join().unwrap();
+        });
+    }
+}

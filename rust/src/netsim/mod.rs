@@ -50,6 +50,26 @@ impl Network {
         }
     }
 
+    /// Parameters matched to loopback TCP on a developer machine — the
+    /// fabric `net::TcpTransport` actually runs on, so the modeled column
+    /// of [`Network::round_breakdown_measured`] can be sanity-checked
+    /// against the measured one (`repro net-bench`, `BENCH_net.json`).
+    /// Single-stream loopback sustains a few GB/s; the per-message cost
+    /// is dominated by syscalls and the transport's poll loop rather
+    /// than port-to-port latency, hence the fat alpha terms. These are
+    /// order-of-magnitude anchors (loopback varies wildly across
+    /// machines and kernels), not calibrated constants — the measured
+    /// column exists precisely because they drift.
+    pub fn tcp_loopback() -> Self {
+        Network {
+            bandwidth: 5.0e9, // bytes/s, single-stream memcpy-bound
+            latency: 20.0e-6,
+            per_call_overhead: 50.0e-6,
+            switch_chunk_ints: 128,
+            switch_chunk_overhead: 0.15e-6,
+        }
+    }
+
     /// Seconds for one collective moving `bytes` per worker across `n`
     /// ranks.
     pub fn primitive_seconds(&self, p: Primitive, bytes: usize, n: usize) -> f64 {
@@ -95,11 +115,30 @@ impl Network {
     /// measured under `reduce` but *charged* to the model, see
     /// `compress::RoundResult`).
     pub fn round_breakdown(&self, result: &RoundResult, n: usize) -> RoundBreakdown {
+        self.round_breakdown_measured(result, n, 0.0)
+    }
+
+    /// [`Network::round_breakdown`] with the measured-vs-modeled column
+    /// filled in: `comm_measured` is real wall-clock spent moving the
+    /// round's bytes over an actual transport
+    /// (`net::TransportReducer::take_wire_seconds`), sitting next to the
+    /// alpha-beta `comm_model` of the same schedule. This is how the cost
+    /// model is validated: on the loopback fabric
+    /// ([`Network::tcp_loopback`]) the two columns should agree to within
+    /// a small factor, and a drift is a model bug, not noise to average
+    /// away.
+    pub fn round_breakdown_measured(
+        &self,
+        result: &RoundResult,
+        n: usize,
+        comm_measured: f64,
+    ) -> RoundBreakdown {
         RoundBreakdown {
             encode: result.encode_seconds,
             reduce: result.reduce_seconds,
             decode: result.decode_seconds,
             comm_model: self.comm_seconds(&result.comm, n),
+            comm_measured,
         }
     }
 }
@@ -111,6 +150,10 @@ pub struct RoundBreakdown {
     pub reduce: f64,
     pub decode: f64,
     pub comm_model: f64,
+    /// Measured transport wall-clock for the round's collectives (0 when
+    /// the round ran on an in-process reducer — the model then stands in
+    /// for a fabric that was never exercised).
+    pub comm_measured: f64,
 }
 
 impl RoundBreakdown {
@@ -208,6 +251,24 @@ mod tests {
         assert_eq!(b.reduce, 2.0);
         let model = net.primitive_seconds(Primitive::AllReduce, 1000, 8);
         assert!((b.comm_model - model).abs() < 1e-15);
+        // in-process reducers have no measured wire column
+        assert_eq!(b.comm_measured, 0.0);
+        let m = net.round_breakdown_measured(&r, 8, 0.5);
+        assert_eq!(m.comm_measured, 0.5);
+        assert!((m.comm_model - model).abs() < 1e-15);
+    }
+
+    #[test]
+    fn tcp_loopback_preset_is_slower_fabric_than_the_paper_cluster() {
+        // loopback has fatter per-call overheads and thinner bandwidth
+        // than 100 Gb/s HDR; a large all-reduce must cost more there
+        let lo = Network::tcp_loopback();
+        let hdr = Network::paper_cluster();
+        let b = 1 << 20;
+        assert!(
+            lo.primitive_seconds(Primitive::AllReduce, b, 4)
+                > hdr.primitive_seconds(Primitive::AllReduce, b, 4)
+        );
     }
 
     #[test]

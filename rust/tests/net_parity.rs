@@ -1,0 +1,366 @@
+//! Net parity: the staged collectives over **real TCP sockets** must be
+//! bit-identical to the in-process leader fold — for raw IntSGD wire
+//! messages, for full engine rounds across the whole compressor zoo, and
+//! for end-to-end training.
+//!
+//! The argument (pinned here, stated in `net::staged`): every staged
+//! schedule sums the same n integers per coordinate in a different
+//! association order, the accumulator is `i64` throughout, and integer
+//! addition is exactly associative — so sockets, frames, and schedule
+//! order cannot change a single bit relative to
+//! `collective::allreduce_intvec`'s rank-order fold.
+
+use intsgd::collective::allreduce_intvec;
+use intsgd::compress::intsgd::{IntSgd, Rounding, WireInt};
+use intsgd::compress::intvec::{IntVec, Lanes};
+use intsgd::compress::powersgd::BlockShape;
+use intsgd::compress::{
+    HeuristicIntSgd, IdentitySgd, NatSgd, PhasedCompressor, PowerSgd, Qsgd,
+    RoundEngine, SignSgd, TopK,
+};
+use intsgd::coordinator::{BlockInfo, Coordinator, RoundCtx, WorkerPool};
+use intsgd::coordinator::{LrSchedule, TrainConfig};
+use intsgd::net::staged::{ring_allgather_bytes, ring_allreduce_ints, StagedScratch};
+use intsgd::net::{StagedAlgo, TcpTransport, TransportReducer};
+use intsgd::netsim::Network;
+use intsgd::scaling::{BlockRule, MovingAverageRule};
+use intsgd::util::Rng;
+
+/// Real IntSGD wire messages: encode each rank's gradient with the
+/// paper's clip so partial sums provably fit the int8 wire.
+fn intsgd_messages(n: usize, d: usize, seed: u64) -> Vec<IntVec> {
+    let clip = i8::MAX as i64 / n as i64;
+    let mut root = Rng::new(seed);
+    let mut streams: Vec<Rng> = (0..n).map(|i| root.fork(i as u64)).collect();
+    let mut grad_rng = Rng::new(seed ^ 0xD1CE);
+    (0..n)
+        .map(|rank| {
+            let grad = grad_rng.normal_vec(d, 1.0);
+            let mut widened = Vec::new();
+            IntSgd::encode(
+                Rounding::Stochastic,
+                &grad,
+                25.0,
+                clip,
+                &mut streams[rank],
+                &mut widened,
+            );
+            IntVec::from_i64(&widened, Lanes::I8)
+        })
+        .collect()
+}
+
+#[test]
+fn staged_ring_over_tcp_is_bit_identical_to_the_leader_fold() {
+    let n = 4;
+    let d = 5000;
+    let msgs = intsgd_messages(n, d, 0xAB);
+    let views: Vec<&IntVec> = msgs.iter().collect();
+    let mut want = Vec::new();
+    allreduce_intvec(&views, &mut want);
+
+    let mut endpoints = TcpTransport::loopback_mesh(n).expect("mesh");
+    let results: Vec<Vec<i64>> = std::thread::scope(|s| {
+        let handles: Vec<_> = endpoints
+            .iter_mut()
+            .zip(&msgs)
+            .map(|(ep, msg)| {
+                s.spawn(move || {
+                    let mut scratch = StagedScratch::default();
+                    let mut out = Vec::new();
+                    for round in 0..2 {
+                        ring_allreduce_ints(ep, msg, Lanes::I8, round, &mut scratch, &mut out)
+                            .expect("tcp ring");
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (rank, got) in results.iter().enumerate() {
+        assert_eq!(got, &want, "rank {rank}");
+    }
+}
+
+#[test]
+fn codec_allgather_over_tcp_roundtrips_every_payload() {
+    // the all-gather compressors' byte streams (compress::wire formats)
+    // survive the socket verbatim: every rank decodes every rank's bytes
+    use intsgd::compress::wire::{
+        decode_sign, decode_sparse, encode_sign, encode_sparse,
+    };
+    let n = 3;
+    let d = 200;
+    let mut rng = Rng::new(9);
+    let payloads: Vec<Vec<u8>> = (0..n)
+        .map(|r| {
+            if r % 2 == 0 {
+                let g = rng.normal_vec(d, 1.0);
+                encode_sign(&SignSgd::encode(&g), d)
+            } else {
+                let entries: Vec<(u32, f32)> = (0..20)
+                    .map(|k| (k * 7 + r as u32, rng.normal_f32()))
+                    .collect();
+                encode_sparse(&entries)
+            }
+        })
+        .collect();
+    let mut endpoints = TcpTransport::loopback_mesh(n).expect("mesh");
+    let gathered: Vec<Vec<Vec<u8>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = endpoints
+            .iter_mut()
+            .zip(&payloads)
+            .map(|(ep, mine)| {
+                s.spawn(move || {
+                    let mut scratch = StagedScratch::default();
+                    let mut out = Vec::new();
+                    ring_allgather_bytes(ep, mine, 0, &mut scratch, &mut out)
+                        .expect("tcp all-gather");
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (rank, got) in gathered.iter().enumerate() {
+        assert_eq!(got, &payloads, "rank {rank} gathered set");
+        // and the bytes still decode (sign on even origins, sparse on odd)
+        for (origin, bytes) in got.iter().enumerate() {
+            if origin % 2 == 0 {
+                decode_sign(bytes, d).expect("sign decode after transport");
+            } else {
+                decode_sparse(bytes).expect("sparse decode after transport");
+            }
+        }
+    }
+}
+
+// --- full engine rounds over the transport, whole zoo ---------------------
+
+fn ctx_for(round: usize, d: usize, n: usize) -> RoundCtx {
+    let dims = [d / 2, d / 4, d / 4];
+    let blocks: Vec<BlockInfo> = dims
+        .iter()
+        .enumerate()
+        .map(|(l, &dim)| BlockInfo {
+            dim,
+            step_norm_sq: 1e-4 / (l + 1) as f64 * (round as f64 + 1.0),
+        })
+        .collect();
+    let step_norm_sq = blocks.iter().map(|b| b.step_norm_sq).sum();
+    RoundCtx { round, n, d, lr: 0.1, step_norm_sq, blocks }
+}
+
+fn zoo(n: usize, d: usize) -> Vec<(&'static str, Box<dyn Fn() -> Box<dyn PhasedCompressor>>)> {
+    let power_layout: Vec<BlockShape> = vec![
+        BlockShape { dims: vec![4, d / 8] },
+        BlockShape { dims: vec![d / 4] },
+        BlockShape { dims: vec![d / 4] },
+    ];
+    let qsgd_dims = vec![d / 2, d / 4, d / 4];
+    vec![
+        (
+            "sgd_allreduce",
+            Box::new(|| Box::new(IdentitySgd::allreduce()) as Box<dyn PhasedCompressor>),
+        ),
+        (
+            "intsgd_random8",
+            Box::new(move || {
+                Box::new(IntSgd::new(
+                    Rounding::Stochastic,
+                    WireInt::Int8,
+                    Box::new(MovingAverageRule::default_paper()),
+                    n,
+                    61,
+                )) as Box<dyn PhasedCompressor>
+            }),
+        ),
+        (
+            "intsgd_determ32",
+            Box::new(move || {
+                Box::new(IntSgd::new(
+                    Rounding::Deterministic,
+                    WireInt::Int32,
+                    Box::new(MovingAverageRule::default_paper()),
+                    n,
+                    62,
+                )) as Box<dyn PhasedCompressor>
+            }),
+        ),
+        (
+            "intsgd_block8",
+            Box::new(move || {
+                Box::new(IntSgd::new(
+                    Rounding::Stochastic,
+                    WireInt::Int8,
+                    Box::new(BlockRule::new(0.9, 1e-8)),
+                    n,
+                    63,
+                )) as Box<dyn PhasedCompressor>
+            }),
+        ),
+        (
+            "heuristic8",
+            Box::new(|| Box::new(HeuristicIntSgd::new(8)) as Box<dyn PhasedCompressor>),
+        ),
+        (
+            "qsgd64",
+            Box::new(move || {
+                Box::new(Qsgd::new(64, qsgd_dims.clone(), n, 64)) as Box<dyn PhasedCompressor>
+            }),
+        ),
+        (
+            "natsgd",
+            Box::new(move || Box::new(NatSgd::new(n, 65)) as Box<dyn PhasedCompressor>),
+        ),
+        (
+            "topk10",
+            Box::new(move || Box::new(TopK::new(0.1, n)) as Box<dyn PhasedCompressor>),
+        ),
+        (
+            "ef_signsgd",
+            Box::new(move || Box::new(SignSgd::new(n)) as Box<dyn PhasedCompressor>),
+        ),
+        (
+            "powersgd_rank2",
+            Box::new(move || {
+                Box::new(PowerSgd::new(2, power_layout.clone(), n, 66))
+                    as Box<dyn PhasedCompressor>
+            }),
+        ),
+    ]
+}
+
+#[test]
+fn engine_rounds_over_tcp_match_the_sequential_reference_for_the_zoo() {
+    // One TCP mesh serves every compressor in sequence: the integer
+    // algorithms aggregate over sockets, the rest exercise the same
+    // engine path with the reducer parked — results must equal the
+    // sequential reference bit for bit either way.
+    let n = 4;
+    let d = 96;
+    let mut pool = WorkerPool::for_encode(n);
+    let mut red =
+        TransportReducer::tcp_loopback(n, StagedAlgo::Ring).expect("tcp reducer");
+    for (label, mk) in zoo(n, d) {
+        let mut seq = RoundEngine::new(mk());
+        let mut net = RoundEngine::new(mk());
+        let mut rng = Rng::new(0x7C9);
+        for round in 0..3 {
+            let grads: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 0.5)).collect();
+            let ctx = ctx_for(round, d, n);
+            let a = seq.round_sequential(&grads, &ctx);
+            let b = net.round_parallel_over(&mut pool, &mut red, &grads, &ctx);
+            assert_eq!(a.gtilde, b.gtilde, "{label} round {round}: gtilde differs");
+            assert_eq!(
+                a.max_abs_int, b.max_abs_int,
+                "{label} round {round}: max_abs_int differs"
+            );
+            assert_eq!(
+                a.alpha.to_bits(),
+                b.alpha.to_bits(),
+                "{label} round {round}: alpha differs"
+            );
+            assert_eq!(
+                a.wire_bytes_per_worker(),
+                b.wire_bytes_per_worker(),
+                "{label} round {round}: wire bytes differ"
+            );
+        }
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn halving_reducer_matches_ring_reducer_bitwise() {
+    // two transports, two schedules, one answer
+    let n = 4;
+    let d = 4096;
+    let mut pool = WorkerPool::for_encode(n);
+    let mk = |seed| {
+        RoundEngine::new(Box::new(IntSgd::new(
+            Rounding::Stochastic,
+            WireInt::Int8,
+            Box::new(MovingAverageRule::default_paper()),
+            n,
+            seed,
+        )) as Box<dyn PhasedCompressor>)
+    };
+    let mut ring_engine = mk(5);
+    let mut halving_engine = mk(5);
+    let mut ring = TransportReducer::channel_mesh(n, StagedAlgo::Ring);
+    let mut halving = TransportReducer::channel_mesh(n, StagedAlgo::Halving);
+    let mut rng = Rng::new(0xFA11);
+    for round in 0..3 {
+        let grads: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 0.5)).collect();
+        let ctx = RoundCtx {
+            round,
+            n,
+            d,
+            lr: 0.1,
+            step_norm_sq: 1e-4,
+            blocks: vec![BlockInfo { dim: d, step_norm_sq: 1e-4 }],
+        };
+        let a = ring_engine.round_parallel_over(&mut pool, &mut ring, &grads, &ctx);
+        let b = halving_engine.round_parallel_over(&mut pool, &mut halving, &grads, &ctx);
+        assert_eq!(a.gtilde, b.gtilde, "round {round}");
+    }
+    pool.shutdown();
+}
+
+// --- end-to-end training over the transport -------------------------------
+
+/// The shared deterministic quadratic oracle (same seeds both runs).
+fn quad_pool(n: usize, d: usize) -> WorkerPool {
+    intsgd::coordinator::net_driver::quad_pool(n, d, 300, 0.01)
+}
+
+#[test]
+fn training_over_tcp_matches_pool_training_bitwise() {
+    // The whole loop — gradients, encode, staged TCP aggregation, decode,
+    // optimizer — must reproduce the in-process run exactly: same seeds,
+    // same integers, same f32 updates, bit for bit.
+    let n = 3;
+    let d = 256;
+    let rounds = 12;
+    let mk_engine = || {
+        RoundEngine::new(Box::new(IntSgd::new(
+            Rounding::Stochastic,
+            WireInt::Int8,
+            Box::new(MovingAverageRule::default_paper()),
+            n,
+            17,
+        )) as Box<dyn PhasedCompressor>)
+    };
+    let cfg = TrainConfig {
+        rounds,
+        schedule: LrSchedule::constant(0.3),
+        ..Default::default()
+    };
+
+    let mut pool_a = quad_pool(n, d);
+    let mut coord_a = Coordinator::new(vec![0.0; d], vec![d], Network::paper_cluster());
+    let mut engine_a = mk_engine();
+    let res_a = coord_a.train(&mut pool_a, &mut engine_a, &cfg, None);
+    pool_a.shutdown();
+
+    let mut pool_b = quad_pool(n, d);
+    let mut coord_b = Coordinator::new(vec![0.0; d], vec![d], Network::tcp_loopback());
+    let mut engine_b = mk_engine();
+    let mut red = TransportReducer::tcp_loopback(n, StagedAlgo::Ring).expect("reducer");
+    let res_b = coord_b.train_over(&mut pool_b, &mut engine_b, &mut red, &cfg, None);
+    pool_b.shutdown();
+
+    assert_eq!(res_a.final_params, res_b.final_params, "final params diverge");
+    for (ra, rb) in res_a.records.iter().zip(&res_b.records) {
+        assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits(), "round {}", ra.round);
+        assert_eq!(ra.max_abs_int, rb.max_abs_int, "round {}", ra.round);
+        assert_eq!(ra.alpha.to_bits(), rb.alpha.to_bits(), "round {}", ra.round);
+    }
+    // the transport actually ran: one staged collective per integer round
+    assert_eq!(red.calls(), (rounds - 1) as u64);
+    assert!(red.wire_seconds() > 0.0, "no wire time recorded");
+    // IntSGD int8 partial sums ride the one-byte wire
+    assert_eq!(red.last_wire(), Some(Lanes::I8));
+}

@@ -1,0 +1,258 @@
+//! Wire-codec robustness properties: every `compress::wire` codec now
+//! parses bytes that arrived from a socket (`net::TcpTransport`), so the
+//! decoders must treat their input as hostile — truncated buffers,
+//! max-magnitude lanes, empty vectors, and corrupt counts must produce
+//! `Err` (or a shorter-but-valid decode for the length-inferred codecs),
+//! **never** a panic or a count-driven giant allocation.
+
+use intsgd::compress::intvec::{IntVec, Lanes};
+use intsgd::compress::natsgd::{NatMsg, NatSgd};
+use intsgd::compress::qsgd::Qsgd;
+use intsgd::compress::signsgd::SignSgd;
+use intsgd::compress::wire::{
+    decode_int32, decode_int8, decode_nat, decode_qsgd, decode_sign, decode_sparse,
+    encode_int32, encode_int8, encode_ints, encode_nat, encode_qsgd, encode_sign,
+    encode_sparse, read_varint, BitReader, BitWriter, MAX_BITS_PER_OP,
+};
+use intsgd::prop_assert;
+use intsgd::util::prop::prop_check;
+use intsgd::util::Rng;
+
+/// Random lane-extreme integer vector (empty with small probability).
+fn adversarial_ints(rng: &mut Rng, lanes: Lanes) -> IntVec {
+    let d = rng.usize_below(40); // includes d = 0
+    let vals: Vec<i64> = (0..d)
+        .map(|_| match rng.below(4) {
+            0 => match lanes {
+                Lanes::I8 => i8::MIN as i64,
+                Lanes::I32 => i32::MIN as i64,
+                Lanes::I64 => i32::MIN as i64, // int32 codec ceiling
+            },
+            1 => match lanes {
+                Lanes::I8 => i8::MAX as i64,
+                Lanes::I32 => i32::MAX as i64,
+                Lanes::I64 => i32::MAX as i64,
+            },
+            2 => 0,
+            _ => rng.below(255) as i64 - 127,
+        })
+        .collect();
+    IntVec::from_i64(&vals, lanes)
+}
+
+#[test]
+fn int_codecs_roundtrip_at_lane_extremes() {
+    prop_check(0x1A7E, 200, |rng| {
+        for lanes in [Lanes::I8, Lanes::I32, Lanes::I64] {
+            let v = adversarial_ints(rng, lanes);
+            let bytes = encode_ints(&v).map_err(|e| e.to_string())?;
+            let back = match lanes {
+                Lanes::I8 => decode_int8(&bytes),
+                _ => decode_int32(&bytes).map_err(|e| e.to_string())?,
+            };
+            prop_assert!(
+                back.to_i64_vec() == v.to_i64_vec(),
+                "{lanes:?} roundtrip (d = {})",
+                v.len()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn int_codec_truncation_never_panics() {
+    prop_check(0x7211, 200, |rng| {
+        let v = adversarial_ints(rng, Lanes::I32);
+        let bytes = encode_int32(&v).unwrap();
+        let cut = rng.usize_below(bytes.len() + 1);
+        // 4-aligned prefixes legally decode to a shorter vector; the
+        // rest must error — either way, no panic
+        if let Ok(back) = decode_int32(&bytes[..cut]) {
+            prop_assert!(back.len() <= v.len(), "grew on truncation");
+        }
+        // int8 has no internal structure: every prefix decodes, shorter
+        let b8 = encode_int8(&adversarial_ints(rng, Lanes::I8)).unwrap();
+        let cut8 = rng.usize_below(b8.len() + 1);
+        prop_assert!(decode_int8(&b8[..cut8]).len() == cut8, "int8 prefix length");
+        Ok(())
+    });
+}
+
+#[test]
+fn sparse_roundtrips_and_rejects_every_strict_prefix() {
+    prop_check(0x59A2, 150, |rng| {
+        let k = rng.usize_below(30); // includes the empty support
+        let mut used = std::collections::BTreeSet::new();
+        let entries: Vec<(u32, f32)> = (0..k)
+            .filter_map(|_| {
+                let i = rng.below(1 << 20) as u32;
+                used.insert(i).then(|| (i, rng.normal_f32() * 1e6))
+            })
+            .collect();
+        let bytes = encode_sparse(&entries);
+        let back = decode_sparse(&bytes).map_err(|e| e.to_string())?;
+        let mut want = entries.clone();
+        want.sort_unstable_by_key(|&(i, _)| i);
+        prop_assert!(back == want, "sparse roundtrip k = {}", entries.len());
+        // the codec is self-delimiting: every strict prefix must fail
+        let cut = rng.usize_below(bytes.len());
+        prop_assert!(
+            decode_sparse(&bytes[..cut]).is_err(),
+            "prefix {cut}/{} decoded",
+            bytes.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn qsgd_roundtrip_and_truncation() {
+    prop_check(0x95D1, 100, |rng| {
+        let d = 1 + rng.usize_below(300);
+        let g = rng.normal_vec(d, 2.0);
+        let mut stream = Rng::new(rng.next_u64());
+        let mut msg = Vec::new();
+        let spans = if d >= 2 {
+            let b1 = 1 + rng.usize_below(d - 1); // both buckets nonempty
+            Qsgd::spans_of(&[b1, d - b1], d)
+        } else {
+            Qsgd::spans_of(&[d], d)
+        };
+        Qsgd::encode_buckets(64, &spans, &g, &mut stream, &mut msg);
+        let bytes = encode_qsgd(&msg).map_err(|e| e.to_string())?;
+        let back = decode_qsgd(&bytes).map_err(|e| e.to_string())?;
+        prop_assert!(back.len() == msg.len(), "bucket count");
+        for (a, b) in back.iter().zip(&msg) {
+            prop_assert!(a.norm.to_bits() == b.norm.to_bits(), "norm bits");
+            prop_assert!(a.levels == b.levels, "levels");
+        }
+        let cut = rng.usize_below(bytes.len());
+        prop_assert!(decode_qsgd(&bytes[..cut]).is_err(), "prefix {cut} decoded");
+        Ok(())
+    });
+}
+
+#[test]
+fn hostile_counts_error_instead_of_allocating() {
+    // varint counts in the hundreds of millions backed by a 3-byte
+    // buffer: the old decoders fed them straight to `with_capacity`
+    let huge_count = {
+        let mut b = Vec::new();
+        intsgd::compress::wire::write_varint(&mut b, u32::MAX as u64);
+        b.extend_from_slice(&[1, 2, 3]);
+        b
+    };
+    let err = decode_sparse(&huge_count).expect_err("sparse count");
+    assert!(err.to_string().contains("exceeds"), "{err}");
+    let err = decode_qsgd(&huge_count).expect_err("qsgd count");
+    assert!(err.to_string().contains("exceeds"), "{err}");
+    // a plausible outer count with a hostile inner bucket length
+    let mut nested = Vec::new();
+    intsgd::compress::wire::write_varint(&mut nested, 1);
+    intsgd::compress::wire::write_varint(&mut nested, u32::MAX as u64);
+    nested.extend_from_slice(&[0u8; 16]);
+    let err = decode_qsgd(&nested).expect_err("bucket length");
+    assert!(err.to_string().contains("exceeds"), "{err}");
+    // a delta that wraps the u64 index accumulator: must be an Err, not a
+    // debug-build panic or a release-build wrap to a bogus small index
+    let mut wrap = Vec::new();
+    intsgd::compress::wire::write_varint(&mut wrap, 2);
+    intsgd::compress::wire::write_varint(&mut wrap, 1);
+    intsgd::compress::wire::write_varint(&mut wrap, u64::MAX);
+    wrap.extend_from_slice(&[0u8; 8]);
+    let err = decode_sparse(&wrap).expect_err("index wrap");
+    assert!(err.to_string().contains("overflow"), "{err}");
+}
+
+#[test]
+fn nat_and_sign_roundtrip_and_reject_truncation() {
+    prop_check(0xA751, 100, |rng| {
+        let d = 1 + rng.usize_below(500);
+        let g = rng.normal_vec(d, 1.5);
+        // NatSGD
+        let mut stream = Rng::new(rng.next_u64());
+        let mut msg = NatMsg::default();
+        NatSgd::encode_into(&mut stream, &g, &mut msg);
+        let bytes = encode_nat(&msg);
+        let back = decode_nat(&bytes, d).map_err(|e| e.to_string())?;
+        prop_assert!(back.exps == msg.exps && back.signs == msg.signs, "nat roundtrip");
+        // a prefix that cannot hold the 9d bits must fail; byte-aligned
+        // slack at the end can legally satisfy the reader
+        let need = (d * 9).div_ceil(8);
+        let cut = rng.usize_below(need);
+        if cut * 8 < d * 9 {
+            prop_assert!(decode_nat(&bytes[..cut], d).is_err(), "nat prefix {cut}");
+        }
+        // SignSGD
+        let smsg = SignSgd::encode(&g);
+        let sbytes = encode_sign(&smsg, d);
+        let sback = decode_sign(&sbytes, d).map_err(|e| e.to_string())?;
+        prop_assert!(
+            sback.scale.to_bits() == smsg.scale.to_bits() && sback.bits == smsg.bits,
+            "sign roundtrip"
+        );
+        let scut = rng.usize_below(sbytes.len());
+        if (scut.saturating_sub(4)) * 8 < d {
+            prop_assert!(decode_sign(&sbytes[..scut], d).is_err(), "sign prefix {scut}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn varint_and_bitreader_survive_arbitrary_bytes() {
+    prop_check(0xB17E, 300, |rng| {
+        let len = rng.usize_below(24);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        // read_varint: any byte soup either decodes or errors
+        let mut pos = 0usize;
+        while pos < bytes.len() {
+            if read_varint(&bytes, &mut pos).is_err() {
+                break;
+            }
+        }
+        // all-0xFF streams longer than 10 bytes must overflow, not wrap
+        let all_ff = vec![0xFFu8; 11];
+        let mut p = 0;
+        prop_assert!(read_varint(&all_ff, &mut p).is_err(), "varint overflow");
+        // BitReader: random pull widths over random bytes never panic;
+        // oversized widths and exhausted streams error
+        let mut r = BitReader::new(&bytes);
+        loop {
+            let n = 1 + rng.below(MAX_BITS_PER_OP as u64 + 8) as u32;
+            match r.pull(n) {
+                Ok(v) => {
+                    prop_assert!(n <= MAX_BITS_PER_OP, "oversized pull succeeded");
+                    prop_assert!(n == 64 || v < (1u64 << n), "pull exceeded width");
+                }
+                Err(_) => break,
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn bitstream_roundtrips_random_schedules() {
+    prop_check(0xB175, 200, |rng| {
+        let ops: Vec<(u64, u32)> = (0..rng.usize_below(40))
+            .map(|_| {
+                let n = 1 + rng.below(MAX_BITS_PER_OP as u64) as u32;
+                let v = rng.next_u64() & ((1u64 << n) - 1);
+                (v, n)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(v, n) in &ops {
+            w.push(v, n);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &ops {
+            let got = r.pull(n).map_err(|e| e.to_string())?;
+            prop_assert!(got == v, "pull({n}) = {got}, pushed {v}");
+        }
+        Ok(())
+    });
+}
