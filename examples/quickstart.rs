@@ -90,6 +90,7 @@ fn main() -> Result<()> {
 
         let cfg = TrainConfig {
             rounds,
+            start_round: 0,
             schedule: LrSchedule::constant(0.1),
             momentum: 0.9,
             weight_decay: 1e-4,

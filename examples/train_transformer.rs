@@ -101,6 +101,7 @@ fn main() -> Result<()> {
 
     let cfg = TrainConfig {
         rounds: steps,
+        start_round: 0,
         schedule: LrSchedule {
             base: 0.5,
             warmup_rounds: steps / 20,

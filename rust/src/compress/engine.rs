@@ -44,8 +44,11 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use anyhow::{anyhow, Result};
+
 use crate::coordinator::worker::WorkerPool;
 use crate::coordinator::RoundCtx;
+use crate::net::NetError;
 
 use super::intsgd::Rounding;
 use super::intvec::{IntVec, Lanes};
@@ -102,13 +105,17 @@ pub enum PassPlan {
     Plain,
     /// IntSGD: per-block integer rounding at the given alphas, clipped so
     /// the aggregate provably fits the wire type. `lanes` is the storage
-    /// width implied by the clip — every clipped value fits it.
+    /// width implied by the clip — every clipped value fits it. `round`
+    /// keys the stochastic-rounding draw: a failover re-encode of the
+    /// same round reuses the rank's counter base, so the re-run is
+    /// bit-identical to a fresh run that encoded the round once.
     IntBlocks {
         rounding: Rounding,
         blocks: Arc<Vec<BlockSpan>>,
         alphas: Arc<Vec<f64>>,
         clip: i64,
         lanes: Lanes,
+        round: usize,
     },
     /// Heuristic IntSGD pass 1: report per-block max |g| for profiling.
     Profile { blocks: Arc<Vec<BlockSpan>> },
@@ -264,6 +271,31 @@ pub trait RankEncoder: Send + Sync {
 
     /// The payload produced by the last `encode` call.
     fn message(&self) -> &Message;
+
+    /// Error-feedback residual memory, if this encoder carries one
+    /// (checkpoint v2 persists it — dropping the residual silently breaks
+    /// the EF convergence argument on resume). EF encoders return
+    /// `Some(&[])` before their first round.
+    fn ef_memory(&self) -> Option<&[f32]> {
+        None
+    }
+
+    /// Restore the error-feedback residual (checkpoint resume). Returns
+    /// whether this encoder accepted it.
+    fn set_ef_memory(&mut self, _mem: &[f32]) -> bool {
+        false
+    }
+
+    /// This rank's RNG stream state (stochastic encoders), for bit-exact
+    /// resume.
+    fn rng_state(&self) -> Option<[u64; 6]> {
+        None
+    }
+
+    /// Restore this rank's RNG stream. Returns whether accepted.
+    fn set_rng_state(&mut self, _state: [u64; 6]) -> bool {
+        false
+    }
 }
 
 /// The n rank messages of one pass, viewed straight through the parked
@@ -303,14 +335,25 @@ impl<'a> RankMessages<'a> {
     }
 }
 
-/// Strategy for the integer-sum reduction. Both implementations produce
+/// Strategy for the integer-sum reduction. Every implementation produces
 /// the rank-order fold bit for bit: per coordinate the ranks are always
 /// added in order, and integer addition is exactly associative, so
 /// coordinate-chunking across threads cannot change a single bit.
+///
+/// In-process reducers are infallible (they fold leader-owned slices); a
+/// transport-backed reducer (`net::TransportReducer`) retries recoverable
+/// faults internally and surfaces only what retry cannot fix — above all
+/// [`NetError::PeerDead`], which the `Coordinator` answers by shrinking
+/// the world ([`Reducer::remove_rank`]) and re-running the round.
 pub trait Reducer {
     /// out[j] = sum over ranks of msgs[rank].ints[j], out resized to the
     /// message length.
-    fn sum_ints(&mut self, msgs: &RankMessages, out: &mut Vec<i64>);
+    fn sum_ints(&mut self, msgs: &RankMessages, out: &mut Vec<i64>) -> Result<(), NetError>;
+
+    /// Drop a permanently failed rank from the reduction world (failover).
+    /// In-process reducers fold whatever messages they are handed, so the
+    /// default is a no-op; transport reducers re-key their endpoints.
+    fn remove_rank(&mut self, _rank: usize) {}
 }
 
 /// Rank-order fold on the calling thread (the parity reference). The fold
@@ -319,9 +362,10 @@ pub trait Reducer {
 pub struct SerialReducer;
 
 impl Reducer for SerialReducer {
-    fn sum_ints(&mut self, msgs: &RankMessages, out: &mut Vec<i64>) {
+    fn sum_ints(&mut self, msgs: &RankMessages, out: &mut Vec<i64>) -> Result<(), NetError> {
         assert!(!msgs.is_empty(), "at least one rank message");
         crate::collective::allreduce_intvec_iter(msgs.iter().map(|m| m.as_ints()), out);
+        Ok(())
     }
 }
 
@@ -338,9 +382,10 @@ impl<'a> PoolReducer<'a> {
 }
 
 impl Reducer for PoolReducer<'_> {
-    fn sum_ints(&mut self, msgs: &RankMessages, out: &mut Vec<i64>) {
+    fn sum_ints(&mut self, msgs: &RankMessages, out: &mut Vec<i64>) -> Result<(), NetError> {
         let d = prepare_sum(msgs, out);
         self.pool.sum_ints_round(msgs.encoders(), &mut out[..d]);
+        Ok(())
     }
 }
 
@@ -428,23 +473,101 @@ pub trait PhasedCompressor: Send {
     /// Parked per-rank encoders; the engine checks them out per pass.
     fn encoders(&mut self) -> &mut Vec<Box<dyn RankEncoder>>;
 
-    /// Plan the round's first encode pass.
+    /// Plan the round's first encode pass. Must be **idempotent per
+    /// `ctx.round`**: a failover re-runs the round at a smaller world, so
+    /// `begin` may be called twice for the same round and any per-round
+    /// state update (e.g. the alpha rule's moving average) must apply
+    /// exactly once (`scaling::AlphaRule` implements this).
     fn begin(&mut self, ctx: &RoundCtx) -> PassPlan;
 
     /// Fold the n rank messages of one pass — integer sums through the
     /// provided [`Reducer`], everything else in rank order on the caller
     /// thread — either finishing the round or requesting another pass.
+    /// Fallible only through the reducer (a transport collective that
+    /// could not be retried into success).
     fn reduce(
         &mut self,
         msgs: &RankMessages,
         plan: &PassPlan,
         ctx: &RoundCtx,
         red: &mut dyn Reducer,
-    ) -> PassOutcome;
+    ) -> Result<PassOutcome, NetError>;
 
     /// Produce the round result from the reduced state, drawing output
     /// buffers from the arena. Timing fields are filled by the driver.
     fn decode(&mut self, ctx: &RoundCtx, arena: &mut RoundArena) -> RoundResult;
+
+    /// Opaque scaling-rule state for checkpoint v2 (None = no such
+    /// state). IntSGD's moving average lives here — dropping it on resume
+    /// silently changes the alpha sequence the proof is about.
+    fn export_rule_state(&self) -> Option<Vec<f64>> {
+        None
+    }
+
+    /// Restore scaling-rule state saved by [`Self::export_rule_state`].
+    fn import_rule_state(&mut self, _state: &[f64]) -> Result<()> {
+        Err(anyhow!("this compressor carries no scaling-rule state"))
+    }
+
+    /// Per-rank error-feedback residuals (rank order, EF encoders only).
+    fn export_ef(&mut self) -> Vec<Vec<f32>> {
+        self.encoders()
+            .iter()
+            .filter_map(|e| e.ef_memory().map(<[f32]>::to_vec))
+            .collect()
+    }
+
+    /// Restore per-rank EF residuals (encoders must already be built).
+    fn import_ef(&mut self, mems: &[Vec<f32>]) -> Result<()> {
+        let mut used = 0usize;
+        for enc in self.encoders().iter_mut() {
+            if enc.ef_memory().is_some() {
+                let mem = mems.get(used).ok_or_else(|| {
+                    anyhow!("checkpoint carries {} EF residuals, model wants more", used)
+                })?;
+                if !enc.set_ef_memory(mem) {
+                    return Err(anyhow!("encoder refused its EF residual"));
+                }
+                used += 1;
+            }
+        }
+        if used != mems.len() {
+            return Err(anyhow!(
+                "checkpoint carries {} EF residuals, model holds {used}",
+                mems.len()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Per-rank encoder RNG stream states (rank order, stochastic
+    /// encoders only) — what makes a resumed stochastic run bit-exact.
+    fn export_rng_streams(&mut self) -> Vec<[u64; 6]> {
+        self.encoders().iter().filter_map(|e| e.rng_state()).collect()
+    }
+
+    /// Restore per-rank RNG streams (encoders must already be built).
+    fn import_rng_streams(&mut self, states: &[[u64; 6]]) -> Result<()> {
+        let mut used = 0usize;
+        for enc in self.encoders().iter_mut() {
+            if enc.rng_state().is_some() {
+                let st = states.get(used).ok_or_else(|| {
+                    anyhow!("checkpoint carries {} RNG streams, model wants more", used)
+                })?;
+                if !enc.set_rng_state(*st) {
+                    return Err(anyhow!("encoder refused its RNG stream"));
+                }
+                used += 1;
+            }
+        }
+        if used != states.len() {
+            return Err(anyhow!(
+                "checkpoint carries {} RNG streams, model holds {used}",
+                states.len()
+            ));
+        }
+        Ok(())
+    }
 }
 
 fn ensure_encoders(comp: &mut dyn PhasedCompressor, n: usize) {
@@ -553,7 +676,7 @@ pub fn sequential_round(
             outcome
         };
         *comp.encoders() = encs;
-        match outcome {
+        match outcome.expect("the serial in-process reduce cannot fail") {
             PassOutcome::Done => break,
             PassOutcome::Next(next) => plan = next,
         }
@@ -623,6 +746,49 @@ impl RoundEngine {
         self.arena.reclaim(result);
     }
 
+    /// Drop a permanently failed rank's encoder (failover: the world
+    /// shrank to the survivors, and the dead rank's encode state — EF
+    /// memory, RNG stream — dies with it, exactly as on a real cluster).
+    pub fn remove_rank(&mut self, rank: usize) {
+        let encs = self.comp.encoders();
+        if rank < encs.len() {
+            encs.remove(rank);
+        }
+    }
+
+    /// Build the per-rank encoders for an n-rank world without running a
+    /// round — required before importing per-rank checkpoint state
+    /// (EF residuals, RNG streams) into a fresh engine.
+    pub fn ensure_world(&mut self, n: usize) {
+        ensure_encoders(self.comp.as_mut(), n);
+    }
+
+    /// Checkpoint v2 plumbing (see `runtime::checkpoint`): the
+    /// compression state a bit-exact resume needs.
+    pub fn export_rule_state(&self) -> Option<Vec<f64>> {
+        self.comp.export_rule_state()
+    }
+
+    pub fn import_rule_state(&mut self, state: &[f64]) -> anyhow::Result<()> {
+        self.comp.import_rule_state(state)
+    }
+
+    pub fn export_ef(&mut self) -> Vec<Vec<f32>> {
+        self.comp.export_ef()
+    }
+
+    pub fn import_ef(&mut self, mems: &[Vec<f32>]) -> anyhow::Result<()> {
+        self.comp.import_ef(mems)
+    }
+
+    pub fn export_rng_streams(&mut self) -> Vec<[u64; 6]> {
+        self.comp.export_rng_streams()
+    }
+
+    pub fn import_rng_streams(&mut self, states: &[[u64; 6]]) -> anyhow::Result<()> {
+        self.comp.import_rng_streams(states)
+    }
+
     /// One round with every phase inline on this thread.
     pub fn round_sequential(&mut self, grads: &[Vec<f32>], ctx: &RoundCtx) -> RoundResult {
         let RoundEngine { comp, arena } = self;
@@ -642,6 +808,7 @@ impl RoundEngine {
         ctx: &RoundCtx,
     ) -> RoundResult {
         self.round_parallel_via(pool, ReduceVia::Pool, grads, ctx)
+            .expect("the in-process pool reduce cannot fail")
     }
 
     /// [`RoundEngine::round_parallel`] with the integer reduce phase
@@ -649,13 +816,19 @@ impl RoundEngine {
     /// `net::TransportReducer` plugs into so the aggregation runs as a
     /// staged collective over real sockets (encode still executes on the
     /// pool's threads; fp32 folds stay on the leader as ever).
+    ///
+    /// Fallible: a transport collective that retry could not fix surfaces
+    /// here as a typed [`NetError`] (above all `PeerDead`, which the
+    /// `Coordinator` answers with a world shrink + round re-run). On
+    /// `Err` the engine is left consistent — encoders parked, arena
+    /// untouched — so the very next round call is valid.
     pub fn round_parallel_over(
         &mut self,
         pool: &mut WorkerPool,
         red: &mut dyn Reducer,
         grads: &[Vec<f32>],
         ctx: &RoundCtx,
-    ) -> RoundResult {
+    ) -> Result<RoundResult, NetError> {
         self.round_parallel_via(pool, ReduceVia::External(red), grads, ctx)
     }
 
@@ -665,7 +838,7 @@ impl RoundEngine {
         mut via: ReduceVia<'_>,
         grads: &[Vec<f32>],
         ctx: &RoundCtx,
-    ) -> RoundResult {
+    ) -> Result<RoundResult, NetError> {
         let n = grads.len();
         assert!(n > 0, "at least one rank");
         assert_eq!(pool.workers(), n, "one worker thread per rank");
@@ -703,8 +876,12 @@ impl RoundEngine {
                 }
                 outcome
             };
+            // park the encoders BEFORE propagating a failure: an erroring
+            // round must not strand the per-rank state (streams, EF
+            // memory) or the reused message buffers — the retry/failover
+            // path runs the next round over the same engine
             *comp.encoders() = encs;
-            match outcome {
+            match outcome? {
                 PassOutcome::Done => break,
                 PassOutcome::Next(next) => plan = next,
             }
@@ -715,6 +892,6 @@ impl RoundEngine {
         result.encode_seconds = encode_seconds;
         result.reduce_seconds = reduce_total;
         result.decode_seconds = leader_seconds;
-        result
+        Ok(result)
     }
 }

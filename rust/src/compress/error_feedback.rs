@@ -53,6 +53,18 @@ impl ErrorFeedback {
     pub fn residual_norm_sq(&self) -> f64 {
         self.mem.iter().map(|&x| (x as f64) * (x as f64)).sum()
     }
+
+    /// The raw residual memory (checkpoint v2 persists it — a resume that
+    /// zeroes the residual is not the run the EF analysis covers).
+    pub fn memory(&self) -> &[f32] {
+        &self.mem
+    }
+
+    /// Restore residual memory saved by [`ErrorFeedback::memory`].
+    pub fn set_memory(&mut self, mem: &[f32]) {
+        self.mem.clear();
+        self.mem.extend_from_slice(mem);
+    }
 }
 
 #[cfg(test)]

@@ -157,8 +157,8 @@ impl PhasedCompressor for HeuristicIntSgd {
         plan: &PassPlan,
         _ctx: &RoundCtx,
         red: &mut dyn Reducer,
-    ) -> PassOutcome {
-        match plan {
+    ) -> Result<PassOutcome, crate::net::NetError> {
+        Ok(match plan {
             PassPlan::Profile { .. } => {
                 let n = msgs.len();
                 let alphas = Arc::make_mut(&mut self.alphas);
@@ -177,12 +177,12 @@ impl PhasedCompressor for HeuristicIntSgd {
                 })
             }
             PassPlan::ScaledRound { .. } => {
-                red.sum_ints(msgs, &mut self.sum);
+                red.sum_ints(msgs, &mut self.sum)?;
                 self.max_abs_int = self.sum.iter().map(|&x| x.abs()).max().unwrap_or(0);
                 PassOutcome::Done
             }
             _ => unreachable!("HeuristicIntSgd planned no such pass"),
-        }
+        })
     }
 
     fn decode(&mut self, ctx: &RoundCtx, arena: &mut RoundArena) -> RoundResult {

@@ -91,7 +91,7 @@ impl PhasedCompressor for IdentitySgd {
         _plan: &PassPlan,
         _ctx: &RoundCtx,
         _red: &mut dyn Reducer,
-    ) -> PassOutcome {
+    ) -> Result<PassOutcome, crate::net::NetError> {
         let n = msgs.len();
         let inv = 1.0 / n as f32;
         match self.primitive {
@@ -110,7 +110,7 @@ impl PhasedCompressor for IdentitySgd {
                 mean_dense_into(msgs, &mut self.gtilde);
             }
         }
-        PassOutcome::Done
+        Ok(PassOutcome::Done)
     }
 
     fn decode(&mut self, _ctx: &RoundCtx, arena: &mut RoundArena) -> RoundResult {

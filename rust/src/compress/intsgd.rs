@@ -314,6 +314,11 @@ impl IntSgd {
 struct IntEncoder {
     rng: Rng,
     msg: Message,
+    /// Counter base of the last stochastic encode, keyed by its round: a
+    /// failover re-encode of the SAME round reuses the base instead of
+    /// drawing again, so the rank's stream position after the round is
+    /// identical to a run that encoded it once (DESIGN.md §7).
+    base: Option<(usize, u64)>,
 }
 
 impl RankEncoder for IntEncoder {
@@ -325,9 +330,16 @@ impl RankEncoder for IntEncoder {
                 out.clear();
                 out.extend_from_slice(grad);
             }
-            PassPlan::IntBlocks { rounding, blocks, alphas, clip, lanes } => {
+            PassPlan::IntBlocks { rounding, blocks, alphas, clip, lanes, round } => {
                 let base = match rounding {
-                    Rounding::Stochastic => self.rng.next_u64(),
+                    Rounding::Stochastic => match self.base {
+                        Some((at, base)) if at == *round => base,
+                        _ => {
+                            let base = self.rng.next_u64();
+                            self.base = Some((*round, base));
+                            base
+                        }
+                    },
                     Rounding::Deterministic => 0,
                 };
                 let out = self.msg.ints_mut(*lanes);
@@ -339,6 +351,17 @@ impl RankEncoder for IntEncoder {
 
     fn message(&self) -> &Message {
         &self.msg
+    }
+
+    // checkpoint v2: the stochastic-rounding stream travels with the
+    // checkpoint so a resumed run draws the identical uniforms
+    fn rng_state(&self) -> Option<[u64; 6]> {
+        Some(self.rng.export_state())
+    }
+
+    fn set_rng_state(&mut self, state: [u64; 6]) -> bool {
+        self.rng = Rng::from_state(state);
+        true
     }
 }
 
@@ -367,7 +390,7 @@ impl PhasedCompressor for IntSgd {
             .unwrap_or_else(|| {
                 panic!("rank {rank} exceeds the configured worker count {}", self.n)
             });
-        Box::new(IntEncoder { rng, msg: Message::Empty })
+        Box::new(IntEncoder { rng, msg: Message::Empty, base: None })
     }
 
     fn encoders(&mut self) -> &mut Vec<Box<dyn RankEncoder>> {
@@ -414,6 +437,7 @@ impl PhasedCompressor for IntSgd {
             // every clipped value fits the clip-implied lane, which never
             // exceeds the wire width (clip <= max_aggregate)
             lanes: Lanes::for_bound(clip),
+            round: ctx.round,
         }
     }
 
@@ -423,7 +447,7 @@ impl PhasedCompressor for IntSgd {
         plan: &PassPlan,
         _ctx: &RoundCtx,
         red: &mut dyn Reducer,
-    ) -> PassOutcome {
+    ) -> Result<PassOutcome, crate::net::NetError> {
         match plan {
             PassPlan::Dense => {
                 mean_dense_into(msgs, &mut self.exact);
@@ -436,13 +460,13 @@ impl PhasedCompressor for IntSgd {
                     let switch = InaSwitch::default();
                     switch.aggregate_messages(msgs, self.wire, &mut self.sum);
                 } else {
-                    red.sum_ints(msgs, &mut self.sum);
+                    red.sum_ints(msgs, &mut self.sum)?;
                 }
                 self.max_abs_int = self.sum.iter().map(|&x| x.abs()).max().unwrap_or(0);
             }
             _ => unreachable!("IntSgd planned no such pass"),
         }
-        PassOutcome::Done
+        Ok(PassOutcome::Done)
     }
 
     fn decode(&mut self, ctx: &RoundCtx, arena: &mut RoundArena) -> RoundResult {
@@ -483,6 +507,17 @@ impl PhasedCompressor for IntSgd {
             max_abs_int: self.max_abs_int,
             alpha: self.alphas.iter().copied().fold(f64::INFINITY, f64::min),
         }
+    }
+
+    // checkpoint v2: the scaling rule's moving-average state is part of
+    // the algorithm the proof analyzes — a resume that drops it is a
+    // different run
+    fn export_rule_state(&self) -> Option<Vec<f64>> {
+        self.rule.export_state()
+    }
+
+    fn import_rule_state(&mut self, state: &[f64]) -> anyhow::Result<()> {
+        self.rule.import_state(state)
     }
 }
 
@@ -651,12 +686,14 @@ mod tests {
                 (0..n).map(|_| rng.normal_vec(d, 1.0)).collect();
             let avg = average(&grads);
             let mut c = make(Rounding::Stochastic, WireInt::Int32, n);
-            // moderate alpha via a moderate step norm
-            let cx = ctx(1, d, n, 1e-4);
             let mut sq = 0.0;
             let reps = 40;
             let mut alpha = 0.0;
-            for _ in 0..reps {
+            for rep in 0..reps {
+                // fresh round per rep: the stochastic base is round-keyed
+                // (same-round re-encodes are deliberately bit-identical),
+                // and the constant step norm keeps alpha fixed across reps
+                let cx = ctx(1 + rep, d, n, 1e-4);
                 let r = c.round(&grads, &cx);
                 alpha = r.alpha;
                 sq += r

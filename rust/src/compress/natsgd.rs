@@ -155,7 +155,7 @@ impl PhasedCompressor for NatSgd {
         _plan: &PassPlan,
         ctx: &RoundCtx,
         _red: &mut dyn Reducer,
-    ) -> PassOutcome {
+    ) -> Result<PassOutcome, crate::net::NetError> {
         let d = ctx.d;
         self.acc.clear();
         self.acc.resize(d, 0.0);
@@ -169,7 +169,7 @@ impl PhasedCompressor for NatSgd {
         for o in &mut self.acc {
             *o *= inv;
         }
-        PassOutcome::Done
+        Ok(PassOutcome::Done)
     }
 
     fn decode(&mut self, _ctx: &RoundCtx, arena: &mut RoundArena) -> RoundResult {

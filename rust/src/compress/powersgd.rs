@@ -273,6 +273,17 @@ impl RankEncoder for PowerEncoder {
     fn message(&self) -> &Message {
         &self.msg
     }
+
+    // checkpoint v2: the EF residual is the algorithm's convergence-
+    // critical state (module docs of compress::error_feedback)
+    fn ef_memory(&self) -> Option<&[f32]> {
+        Some(self.ef.memory())
+    }
+
+    fn set_ef_memory(&mut self, mem: &[f32]) -> bool {
+        self.ef.set_memory(mem);
+        true
+    }
 }
 
 impl PhasedCompressor for PowerSgd {
@@ -309,9 +320,9 @@ impl PhasedCompressor for PowerSgd {
         plan: &PassPlan,
         ctx: &RoundCtx,
         _red: &mut dyn Reducer,
-    ) -> PassOutcome {
+    ) -> Result<PassOutcome, crate::net::NetError> {
         let r = self.rank;
-        match plan {
+        Ok(match plan {
             PassPlan::PowerP { .. } => {
                 self.mean_of(msgs);
                 self.gtilde.clear();
@@ -394,7 +405,7 @@ impl PhasedCompressor for PowerSgd {
             }
             PassPlan::PowerEf { .. } => PassOutcome::Done,
             _ => unreachable!("PowerSgd planned no such pass"),
-        }
+        })
     }
 
     fn decode(&mut self, _ctx: &RoundCtx, arena: &mut RoundArena) -> RoundResult {

@@ -200,7 +200,7 @@ impl PhasedCompressor for Qsgd {
         _plan: &PassPlan,
         ctx: &RoundCtx,
         _red: &mut dyn Reducer,
-    ) -> PassOutcome {
+    ) -> Result<PassOutcome, crate::net::NetError> {
         // all-gather + decode + average at every worker (this n-message
         // decode loop IS the per-worker cost: every worker decodes all n)
         let d = ctx.d;
@@ -221,7 +221,7 @@ impl PhasedCompressor for Qsgd {
         for o in &mut self.acc {
             *o *= inv;
         }
-        PassOutcome::Done
+        Ok(PassOutcome::Done)
     }
 
     fn decode(&mut self, _ctx: &RoundCtx, arena: &mut RoundArena) -> RoundResult {

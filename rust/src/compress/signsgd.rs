@@ -105,6 +105,17 @@ impl RankEncoder for SignEncoder {
     fn message(&self) -> &Message {
         &self.msg
     }
+
+    // checkpoint v2: the EF residual is the algorithm's convergence-
+    // critical state (module docs of compress::error_feedback)
+    fn ef_memory(&self) -> Option<&[f32]> {
+        Some(self.ef.memory())
+    }
+
+    fn set_ef_memory(&mut self, mem: &[f32]) -> bool {
+        self.ef.set_memory(mem);
+        true
+    }
 }
 
 impl PhasedCompressor for SignSgd {
@@ -140,7 +151,7 @@ impl PhasedCompressor for SignSgd {
         _plan: &PassPlan,
         ctx: &RoundCtx,
         _red: &mut dyn Reducer,
-    ) -> PassOutcome {
+    ) -> Result<PassOutcome, crate::net::NetError> {
         // all-gather: every worker decodes all n messages and averages
         let d = ctx.d;
         self.acc.clear();
@@ -155,7 +166,7 @@ impl PhasedCompressor for SignSgd {
         for x in &mut self.acc {
             *x *= inv;
         }
-        PassOutcome::Done
+        Ok(PassOutcome::Done)
     }
 
     fn decode(&mut self, _ctx: &RoundCtx, arena: &mut RoundArena) -> RoundResult {

@@ -105,6 +105,17 @@ impl RankEncoder for TopKEncoder {
     fn message(&self) -> &Message {
         &self.msg
     }
+
+    // checkpoint v2: the EF residual is the algorithm's convergence-
+    // critical state (module docs of compress::error_feedback)
+    fn ef_memory(&self) -> Option<&[f32]> {
+        Some(self.ef.memory())
+    }
+
+    fn set_ef_memory(&mut self, mem: &[f32]) -> bool {
+        self.ef.set_memory(mem);
+        true
+    }
 }
 
 impl PhasedCompressor for TopK {
@@ -142,7 +153,7 @@ impl PhasedCompressor for TopK {
         _plan: &PassPlan,
         ctx: &RoundCtx,
         _red: &mut dyn Reducer,
-    ) -> PassOutcome {
+    ) -> Result<PassOutcome, crate::net::NetError> {
         self.acc.clear();
         self.acc.resize(ctx.d, 0.0);
         for m in msgs.iter() {
@@ -154,7 +165,7 @@ impl PhasedCompressor for TopK {
         for x in &mut self.acc {
             *x *= inv;
         }
-        PassOutcome::Done
+        Ok(PassOutcome::Done)
     }
 
     fn decode(&mut self, _ctx: &RoundCtx, arena: &mut RoundArena) -> RoundResult {

@@ -35,6 +35,7 @@ pub use worker::{GradientSource, WorkerPool};
 use crate::compress::engine::{Reducer, RoundEngine};
 use crate::netsim::Network;
 use crate::optim::Sgd;
+use crate::runtime::Checkpoint;
 use crate::util::stats::l2_diff_norm_sq;
 
 /// Per-parameter-block geometry handed to scaling rules (Alg. 2).
@@ -111,6 +112,9 @@ pub struct RoundRecord {
 /// Training driver configuration.
 pub struct TrainConfig {
     pub rounds: usize,
+    /// First round to run (nonzero when resuming from a checkpoint: the
+    /// loop covers `start_round..rounds` and the schedule stays aligned).
+    pub start_round: usize,
     pub schedule: LrSchedule,
     pub momentum: f32,
     pub weight_decay: f32,
@@ -122,6 +126,7 @@ impl Default for TrainConfig {
     fn default() -> Self {
         TrainConfig {
             rounds: 100,
+            start_round: 0,
             schedule: LrSchedule::constant(0.1),
             momentum: 0.0,
             weight_decay: 0.0,
@@ -136,6 +141,9 @@ pub struct TrainResult {
     /// (round, eval metric(s)) — model-specific: (loss, accuracy?) pairs.
     pub evals: Vec<(usize, f64, f64)>,
     pub final_params: Vec<f32>,
+    /// World shrinks that happened mid-run: (round, dead rank at the time
+    /// of death). Empty on a healthy fabric.
+    pub failovers: Vec<(usize, usize)>,
 }
 
 /// The leader: drives `rounds` synchronous rounds over the worker pool.
@@ -212,38 +220,67 @@ impl Coordinator {
         cfg: &TrainConfig,
         mut eval: Option<&mut dyn FnMut(&[f32]) -> (f64, f64)>,
     ) -> TrainResult {
-        let n = pool.workers();
         let d = self.params.len();
         let mut opt = Sgd::new(d, cfg.momentum, cfg.weight_decay);
-        let mut records = Vec::with_capacity(cfg.rounds);
+        let mut records = Vec::with_capacity(cfg.rounds.saturating_sub(cfg.start_round));
         let mut evals = Vec::new();
+        let mut failovers = Vec::new();
         let mut blocks = Vec::with_capacity(self.block_dims.len().max(1));
 
-        for round in 0..cfg.rounds {
+        for round in cfg.start_round..cfg.rounds {
             let lr = cfg.schedule.lr_at(round);
 
-            // 1. broadcast params, collect worker gradients (threads)
-            let (grads, losses, compute_seconds) =
-                pool.compute_round(&self.params, round);
+            // Run the round; on a permanent rank death, shrink the world
+            // to the survivors and re-run the SAME round at the smaller n.
+            // The re-run is exactly a fresh round at n-1 (tests/chaos.rs):
+            // the alpha rules are round-idempotent, the stochastic-
+            // rounding base is round-keyed (a re-encode reuses it), and
+            // the dead rank's gradient simply leaves the average. Caveat:
+            // a *stateful noisy* GradientSource advances its noise stream
+            // on the recompute — survivor-parity is exact for the
+            // compression state, and for the data too whenever sources
+            // are deterministic functions of (params, round).
+            let (result, losses, compute_seconds, n) = loop {
+                let n = pool.workers();
 
-            // 2. compress + aggregate: encode back on the worker threads,
-            //    reduce + decode on the leader. The blocks tile the params,
-            //    so the global step norm is their fused sum.
-            self.block_infos(&mut blocks);
-            let step_norm_sq = blocks.iter().map(|b| b.step_norm_sq).sum();
-            let ctx = RoundCtx {
-                round,
-                n,
-                d,
-                lr,
-                step_norm_sq,
-                blocks: std::mem::take(&mut blocks),
+                // 1. broadcast params, collect worker gradients (threads)
+                let (grads, losses, compute_seconds) =
+                    pool.compute_round(&self.params, round);
+
+                // 2. compress + aggregate: encode back on the worker
+                //    threads, reduce + decode on the leader. The blocks
+                //    tile the params, so the global step norm is their
+                //    fused sum.
+                self.block_infos(&mut blocks);
+                let step_norm_sq = blocks.iter().map(|b| b.step_norm_sq).sum();
+                let ctx = RoundCtx {
+                    round,
+                    n,
+                    d,
+                    lr,
+                    step_norm_sq,
+                    blocks: std::mem::take(&mut blocks),
+                };
+                let attempt = match &mut red {
+                    Some(r) => engine.round_parallel_over(pool, &mut **r, &grads, &ctx),
+                    None => Ok(engine.round_parallel(pool, &grads, &ctx)),
+                };
+                blocks = ctx.blocks; // reclaim the buffer for the next round
+                match attempt {
+                    Ok(result) => break (result, losses, compute_seconds, n),
+                    Err(e) if e.is_peer_dead() && e.rank() < n && n > 1 => {
+                        let dead = e.rank();
+                        failovers.push((round, dead));
+                        pool.remove_worker(dead);
+                        engine.remove_rank(dead);
+                        if let Some(r) = &mut red {
+                            r.remove_rank(dead);
+                        }
+                        // loop: recompute gradients and re-run at n - 1
+                    }
+                    Err(e) => panic!("unrecoverable collective failure: {e}"),
+                }
             };
-            let result = match &mut red {
-                Some(r) => engine.round_parallel_over(pool, &mut **r, &grads, &ctx),
-                None => engine.round_parallel(pool, &grads, &ctx),
-            };
-            blocks = ctx.blocks; // reclaim the buffer for the next round
 
             // 3. optimizer step
             self.prev_params.copy_from_slice(&self.params);
@@ -273,7 +310,64 @@ impl Coordinator {
                 }
             }
         }
-        TrainResult { records, evals, final_params: self.params.clone() }
+        TrainResult { records, evals, final_params: self.params.clone(), failovers }
+    }
+
+    /// Layout synthesized from the block dims ("block{i}"), or one "flat"
+    /// entry when the layout is unknown.
+    fn checkpoint_layout(&self) -> Vec<(String, u64)> {
+        if self.block_dims.is_empty() {
+            return vec![("flat".to_string(), self.params.len() as u64)];
+        }
+        self.block_dims
+            .iter()
+            .enumerate()
+            .map(|(i, &dim)| (format!("block{i}"), dim as u64))
+            .collect()
+    }
+
+    /// Snapshot the full training state into a v2 [`Checkpoint`]: params,
+    /// previous-round params (the scaling rules read `‖x^k − x^{k−1}‖²`),
+    /// the rule's moving average, per-rank EF residuals, and per-rank
+    /// encoder RNG streams — everything a bit-exact resume needs
+    /// (`runtime::checkpoint` module docs; pinned by `tests/chaos.rs`).
+    pub fn snapshot(&self, engine: &mut RoundEngine, round: u64) -> anyhow::Result<Checkpoint> {
+        let mut ck = Checkpoint::new(round, self.checkpoint_layout(), self.params.clone())?;
+        ck.prev_flat = Some(self.prev_params.clone());
+        ck.rule_state = engine.export_rule_state();
+        ck.ef_residuals = engine.export_ef();
+        ck.rng_streams = engine.export_rng_streams();
+        Ok(ck)
+    }
+
+    /// Restore a [`Checkpoint`] into this coordinator + a compatible
+    /// engine for an `n`-rank world. Builds the engine's encoders first
+    /// so per-rank state (EF residuals, RNG streams) has a home; resume
+    /// training with `TrainConfig::start_round = ck.round`.
+    pub fn restore(
+        &mut self,
+        engine: &mut RoundEngine,
+        n: usize,
+        ck: &Checkpoint,
+    ) -> anyhow::Result<()> {
+        ck.check_layout(&self.checkpoint_layout())?;
+        self.params.clone_from(&ck.flat);
+        match &ck.prev_flat {
+            Some(prev) => self.prev_params.clone_from(prev),
+            // v1 checkpoint: no previous params — start from a zero step
+            None => self.prev_params.clone_from(&ck.flat),
+        }
+        engine.ensure_world(n);
+        if let Some(rule) = &ck.rule_state {
+            engine.import_rule_state(rule)?;
+        }
+        if !ck.ef_residuals.is_empty() {
+            engine.import_ef(&ck.ef_residuals)?;
+        }
+        if !ck.rng_streams.is_empty() {
+            engine.import_rng_streams(&ck.rng_streams)?;
+        }
+        Ok(())
     }
 }
 

@@ -8,18 +8,34 @@
 //! deployment would. Afterwards the driver replays a few standalone
 //! rounds to print `netsim`'s **measured-vs-modeled** breakdown: real
 //! socket wall-clock next to the alpha-beta cost of the identical wire
-//! schedule ([`Network::round_breakdown_measured`]) — the first time the
-//! cost model is validated against actual wire time instead of standing
-//! unfalsifiable.
+//! schedule ([`Network::round_breakdown_net`]), plus the fault/retry
+//! account when chaos is injected.
 //!
 //!   repro net-bench workers=4 d=65536 rounds=20 transport=tcp algo=ring
+//!
+//! Knobs (`key=value`):
+//!
+//! | key | default | meaning |
+//! |-----|---------|---------|
+//! | `workers`, `d`, `rounds`, `lr`, `seed` | 4, 2^16, 20, 0.2, 100 | job shape |
+//! | `transport` | `tcp` | `tcp` or `channel` |
+//! | `algo` | `ring` | `ring` or `halving` |
+//! | `net.timeout_ms` | 30000 (env `INTSGD_NET_TIMEOUT_MS`) | blocking-IO deadline; expiry is a typed `NetError::Timeout`, not a generic error |
+//! | `net.retries` | 8 | retried attempts per collective before giving up |
+//! | `fault.drop` / `fault.dup` / `fault.corrupt` / `fault.truncate` / `fault.delay` | 0 | per-frame fault probabilities (seeded, deterministic) |
+//! | `fault.seed` | `seed` | fault-stream seed |
+//! | `fault.kill_rank` + `fault.kill_round` | off | kill that rank at that collective round: the run fails over to the survivors and keeps training |
+
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use crate::compress::intsgd::{IntSgd, Rounding, WireInt};
 use crate::compress::RoundEngine;
 use crate::config::Config;
-use crate::net::{StagedAlgo, Transport, TransportReducer};
+use crate::net::{
+    FaultPlan, KillAt, StagedAlgo, Transport, TransportReducer,
+};
 use crate::netsim::Network;
 use crate::scaling::MovingAverageRule;
 use crate::util::Rng;
@@ -31,8 +47,8 @@ use super::{
 /// Synthetic heterogeneous quadratic: f_i(x) = 0.5 ||x - c_i||^2 with
 /// optional gradient noise. Cheap enough that the round cost is
 /// dominated by what this driver exists to measure — the wire. Shared by
-/// the coordinator tests and the net parity/loopback suites (one oracle,
-/// not five copies).
+/// the coordinator tests and the net parity/loopback/chaos suites (one
+/// oracle, not five copies).
 pub struct Quad {
     center: Vec<f32>,
     noise: f32,
@@ -91,16 +107,73 @@ fn intsgd_engine(n: usize, seed: u64) -> RoundEngine {
     )))
 }
 
-/// Train + measure over a concrete transport (monomorphized per mesh).
-fn drive<T: Transport>(
-    red: &mut TransportReducer<T>,
-    label: &str,
+/// Fault plan from the `fault.*` knobs; None when no chaos is requested.
+/// A malformed or out-of-world `fault.kill_rank` is a typed error, not a
+/// silently different experiment (the driver's contract, like
+/// transport/algo).
+fn fault_plan(
+    cfg: &Config,
+    seed: u64,
+    workers: usize,
+) -> Result<(Option<FaultPlan>, Option<(usize, KillAt)>)> {
+    let plan = FaultPlan {
+        seed: cfg.u64_or("fault.seed", seed),
+        drop_p: cfg.f64_or("fault.drop", 0.0),
+        dup_p: cfg.f64_or("fault.dup", 0.0),
+        corrupt_p: cfg.f64_or("fault.corrupt", 0.0),
+        truncate_p: cfg.f64_or("fault.truncate", 0.0),
+        delay_p: cfg.f64_or("fault.delay", 0.0),
+    };
+    let ps = [plan.drop_p, plan.dup_p, plan.corrupt_p, plan.truncate_p, plan.delay_p];
+    if ps.iter().any(|p| !(0.0..=1.0).contains(p)) || ps.iter().sum::<f64>() > 1.0 {
+        return Err(anyhow!(
+            "fault.* probabilities must each lie in [0, 1] and sum to at most 1 \
+             (got drop={} dup={} corrupt={} truncate={} delay={})",
+            ps[0], ps[1], ps[2], ps[3], ps[4]
+        ));
+    }
+    let kill = match cfg.get("fault.kill_rank") {
+        None => None,
+        Some(r) => {
+            let rank: usize = r
+                .parse()
+                .map_err(|_| anyhow!("fault.kill_rank {r:?} is not a rank"))?;
+            if rank >= workers {
+                return Err(anyhow!(
+                    "fault.kill_rank {rank} outside the world of {workers} workers"
+                ));
+            }
+            let round = cfg.u64_or("fault.kill_round", 0) as u32;
+            Some((rank, KillAt::Round(round)))
+        }
+    };
+    let any = plan.drop_p + plan.dup_p + plan.corrupt_p + plan.truncate_p + plan.delay_p
+        > 0.0;
+    Ok((any.then_some(plan), kill))
+}
+
+/// One net-bench job's shape + failure-model knobs.
+#[derive(Clone, Copy)]
+struct Job {
     n: usize,
     d: usize,
     rounds: usize,
     lr: f32,
     seed: u64,
+    timeout: Duration,
+    max_retries: usize,
+}
+
+/// Train + measure over a concrete transport (monomorphized per mesh).
+fn drive<T: Transport>(
+    mut red: TransportReducer<T>,
+    label: &str,
+    job: &Job,
 ) -> Result<()> {
+    let Job { n, d, rounds, lr, seed, timeout, max_retries } = *job;
+    let red = &mut red;
+    red.set_timeout(timeout);
+    red.set_max_retries(max_retries);
     let net = Network::tcp_loopback();
     let mut pool = quad_pool(n, d, seed, 0.01);
     let mut coord = Coordinator::new(vec![0.0; d], vec![d], net.clone());
@@ -121,12 +194,17 @@ fn drive<T: Transport>(
     let modeled_int: f64 =
         res.records.iter().skip(1).map(|r| r.comm_seconds).sum();
     let measured = red.take_wire_seconds();
+    let retries = red.take_retries();
     println!(
         "  train loss {first:.4} -> {last:.4}; {} staged collectives \
-         (last wire {:?})",
+         (last wire {:?}, {retries} retried attempts, {} stale frames skipped)",
         red.calls(),
         red.last_wire(),
+        red.stale_skipped(),
     );
+    for (round, rank) in &res.failovers {
+        println!("  FAILOVER: rank {rank} died in round {round}; world shrank and trained on");
+    }
     println!(
         "  integer-round wire time: measured {:.3} ms, modeled {:.3} ms \
          (ratio {:.2})",
@@ -141,10 +219,12 @@ fn drive<T: Transport>(
     }
 
     // standalone rounds: the per-round measured-vs-modeled breakdown
+    // (run at the post-failover world size, if any rank died)
+    let n = pool.workers();
     println!("\n  round breakdown (seconds measured on this machine):");
     println!(
-        "  {:<8} {:>12} {:>12} {:>12} {:>14} {:>14}",
-        "round", "encode", "reduce", "decode", "comm_model", "comm_measured"
+        "  {:<8} {:>12} {:>12} {:>12} {:>14} {:>14} {:>8}",
+        "round", "encode", "reduce", "decode", "comm_model", "comm_measured", "retries"
     );
     let ctx = RoundCtx {
         round: rounds.max(1),
@@ -156,11 +236,18 @@ fn drive<T: Transport>(
     };
     for k in 0..3 {
         let (grads, _, _) = pool.compute_round(&coord.params, rounds + k);
-        let result = engine.round_parallel_over(&mut pool, &mut *red, &grads, &ctx);
-        let b = net.round_breakdown_measured(&result, n, red.take_wire_seconds());
+        let result = engine
+            .round_parallel_over(&mut pool, &mut *red, &grads, &ctx)
+            .map_err(|e| anyhow!("standalone breakdown round failed: {e}"))?;
+        let b = net.round_breakdown_net(
+            &result,
+            n,
+            red.take_wire_seconds(),
+            red.take_retries(),
+        );
         println!(
-            "  {:<8} {:>12.6} {:>12.6} {:>12.6} {:>14.6} {:>14.6}",
-            k, b.encode, b.reduce, b.decode, b.comm_model, b.comm_measured
+            "  {:<8} {:>12.6} {:>12.6} {:>12.6} {:>14.6} {:>14.6} {:>8}",
+            k, b.encode, b.reduce, b.decode, b.comm_model, b.comm_measured, b.comm_retries
         );
         engine.reclaim(result);
     }
@@ -179,14 +266,43 @@ pub fn run(cfg: &Config) -> Result<()> {
         "halving" => StagedAlgo::Halving,
         other => return Err(anyhow!("unknown staged algo {other:?} (ring|halving)")),
     };
+    let (plan, kill) = fault_plan(cfg, seed, n)?;
+    let chaos = plan.is_some() || kill.is_some();
+    let job = Job {
+        n,
+        d,
+        rounds,
+        lr,
+        seed,
+        timeout: Duration::from_millis(cfg.u64_or(
+            "net.timeout_ms",
+            crate::net::default_io_timeout().as_millis() as u64,
+        )),
+        max_retries: cfg.usize_or("net.retries", 8),
+    };
+    let plan = plan.unwrap_or_else(|| FaultPlan::clean(seed));
     match cfg.str_or("transport", "tcp") {
         "tcp" => {
-            let mut red = TransportReducer::tcp_loopback(n, algo)?;
-            drive(&mut red, "tcp-loopback", n, d, rounds, lr, seed)
+            let mesh = crate::net::TcpTransport::loopback_mesh(n)?;
+            if chaos {
+                let wrapped = crate::net::FaultTransport::wrap_mesh(mesh, &plan, kill);
+                drive(TransportReducer::new(wrapped, algo), "tcp-loopback+faults", &job)
+            } else {
+                drive(TransportReducer::new(mesh, algo), "tcp-loopback", &job)
+            }
         }
         "channel" => {
-            let mut red = TransportReducer::channel_mesh(n, algo);
-            drive(&mut red, "in-proc channels", n, d, rounds, lr, seed)
+            let mesh = crate::net::ChannelTransport::mesh(n);
+            if chaos {
+                let wrapped = crate::net::FaultTransport::wrap_mesh(mesh, &plan, kill);
+                drive(
+                    TransportReducer::new(wrapped, algo),
+                    "in-proc channels+faults",
+                    &job,
+                )
+            } else {
+                drive(TransportReducer::new(mesh, algo), "in-proc channels", &job)
+            }
         }
         other => Err(anyhow!("unknown transport {other:?} (tcp|channel)")),
     }
@@ -209,6 +325,27 @@ mod tests {
     }
 
     #[test]
+    fn net_bench_survives_injected_chaos() {
+        // seeded recoverable faults over the channel transport: the run
+        // must converge exactly as if the fabric were clean (bit-parity
+        // is pinned in tests/chaos.rs; here: end-to-end knob plumbing)
+        let mut cfg = Config::new();
+        for kv in [
+            "transport=channel",
+            "workers=3",
+            "d=256",
+            "rounds=6",
+            "fault.corrupt=0.02",
+            "fault.dup=0.02",
+            "net.timeout_ms=300",
+            "net.retries=64",
+        ] {
+            cfg.set_kv(kv).unwrap();
+        }
+        run(&cfg).expect("chaotic channel net-bench");
+    }
+
+    #[test]
     fn rejects_unknown_knobs() {
         let mut cfg = Config::new();
         cfg.set_kv("transport=carrier-pigeon").unwrap();
@@ -216,5 +353,15 @@ mod tests {
         let mut cfg = Config::new();
         cfg.set_kv("algo=butterfly").unwrap();
         assert!(run(&cfg).is_err());
+        // malformed / out-of-world kill targets are typed errors, not a
+        // silently different chaos experiment
+        let mut cfg = Config::new();
+        cfg.set_kv("fault.kill_rank=rank2").unwrap();
+        assert!(run(&cfg).unwrap_err().to_string().contains("not a rank"));
+        let mut cfg = Config::new();
+        for kv in ["workers=4", "fault.kill_rank=9"] {
+            cfg.set_kv(kv).unwrap();
+        }
+        assert!(run(&cfg).unwrap_err().to_string().contains("outside the world"));
     }
 }

@@ -269,6 +269,21 @@ impl WorkerPool {
         self.links.len()
     }
 
+    /// Remove one worker from the pool (failover: its rank died on the
+    /// fabric, so its gradient source leaves the job). The worker thread
+    /// itself is healthy — only its transport endpoint is gone — so it is
+    /// stopped and joined cleanly; surviving workers keep their ranks'
+    /// order (rank i > `rank` becomes rank i - 1, matching the reducer's
+    /// survivor re-keying and the engine's encoder removal).
+    pub fn remove_worker(&mut self, rank: usize) {
+        assert!(rank < self.links.len(), "no worker {rank} to remove");
+        assert!(self.links.len() > 1, "cannot remove the last worker");
+        let link = self.links.remove(rank);
+        link.job.put(ToWorker::Stop);
+        let handle = self.handles.remove(rank);
+        let _ = handle.join();
+    }
+
     /// Broadcast params, wait for all gradients. Returns per-rank grads &
     /// losses plus the straggler (max) compute time — what a synchronous
     /// round actually costs.
@@ -474,6 +489,20 @@ mod tests {
             assert_eq!(grads[0][0], round as f32);
             assert_eq!(grads[1][0], 1.0 + round as f32);
         }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn remove_worker_shrinks_the_pool_cleanly() {
+        let mut pool = echo_pool(3, 1);
+        let (grads, _, _) = pool.compute_round(&[0.0], 0);
+        assert_eq!(grads.len(), 3);
+        pool.remove_worker(2);
+        assert_eq!(pool.workers(), 2);
+        // survivors keep computing in rank order
+        let (grads, losses, _) = pool.compute_round(&[0.0], 1);
+        assert_eq!(grads.len(), 2);
+        assert_eq!(losses, vec![0.0, 1.0]);
         pool.shutdown();
     }
 

@@ -309,6 +309,7 @@ pub fn run_task(
     let warmup = cfg.usize_or("warmup_rounds", s.rounds / 20);
     let cfg_train = TrainConfig {
         rounds: s.rounds,
+        start_round: 0,
         schedule: LrSchedule {
             base: s.lr,
             warmup_rounds: warmup,

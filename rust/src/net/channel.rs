@@ -10,18 +10,25 @@
 //! channel carries is the price of in-process message passing and is
 //! documented as off the zero-alloc hot path (the engine's in-proc
 //! reducers remain the allocation-free default).
+//!
+//! Failure semantics ([`super::NetError`]): a dropped peer transport is
+//! [`NetError::PeerDead`] (the channel disconnects — exactly how a killed
+//! [`super::FaultTransport`] rank announces itself), an expired deadline
+//! is [`NetError::Timeout`], and a raised abort flag
+//! ([`super::Transport::set_abort`]) ends a blocked `recv` within one
+//! poll slice as [`NetError::Aborted`].
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use super::{default_io_timeout, NetError, Transport, UNKNOWN_ROUND};
 
-use super::Transport;
-
-/// Give up on a recv after this long: a rank that panicked mid-schedule
-/// without dropping its transport must fail the collective, not hang the
-/// surviving ranks forever (mirrors `TcpTransport`'s IO timeout).
-const RECV_TIMEOUT: Duration = Duration::from_secs(30);
+/// Abort-flag poll slice while blocked in `recv`: the condvar inside
+/// `recv_timeout` wakes instantly on arrival, so this bounds only the
+/// latency of noticing a peer's failure.
+const ABORT_POLL: Duration = Duration::from_millis(2);
 
 pub struct ChannelTransport {
     rank: usize,
@@ -31,6 +38,9 @@ pub struct ChannelTransport {
     /// `from[i]`: this rank's mailbox for messages sent by rank i
     /// (`None` at i = rank).
     from: Vec<Option<Receiver<Vec<u8>>>>,
+    /// Give up on a blocked recv after this long.
+    timeout: Duration,
+    abort: Option<Arc<AtomicBool>>,
 }
 
 impl ChannelTransport {
@@ -59,8 +69,18 @@ impl ChannelTransport {
             .into_iter()
             .zip(receivers)
             .enumerate()
-            .map(|(rank, (to, from))| ChannelTransport { rank, to, from })
+            .map(|(rank, (to, from))| ChannelTransport {
+                rank,
+                to,
+                from,
+                timeout: default_io_timeout(),
+                abort: None,
+            })
             .collect()
+    }
+
+    fn aborted(&self) -> bool {
+        self.abort.as_ref().is_some_and(|f| f.load(Ordering::Relaxed))
     }
 }
 
@@ -73,29 +93,51 @@ impl Transport for ChannelTransport {
         self.to.len()
     }
 
-    fn send(&mut self, to: usize, frame: &[u8]) -> Result<()> {
+    fn send(&mut self, to: usize, frame: &[u8]) -> Result<(), NetError> {
         let tx = self.to[to]
             .as_ref()
             .unwrap_or_else(|| panic!("rank {} sending to itself", self.rank));
         tx.send(frame.to_vec())
-            .map_err(|_| anyhow!("rank {to} hung up (its transport was dropped)"))
+            .map_err(|_| NetError::PeerDead { rank: to, round: UNKNOWN_ROUND })
     }
 
-    fn recv(&mut self, from: usize, out: &mut Vec<u8>) -> Result<()> {
+    fn recv(&mut self, from: usize, out: &mut Vec<u8>) -> Result<(), NetError> {
         let rx = self.from[from]
             .as_ref()
             .unwrap_or_else(|| panic!("rank {} receiving from itself", self.rank));
-        let msg = rx.recv_timeout(RECV_TIMEOUT).map_err(|e| match e {
-            RecvTimeoutError::Disconnected => {
-                anyhow!("rank {from} hung up (its transport was dropped)")
+        let deadline = Instant::now() + self.timeout;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(left.min(ABORT_POLL)) {
+                Ok(msg) => {
+                    // hand the message's buffer over rather than copying it
+                    *out = msg;
+                    return Ok(());
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(NetError::PeerDead { rank: from, round: UNKNOWN_ROUND });
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if self.aborted() {
+                        return Err(NetError::Aborted {
+                            rank: from,
+                            round: UNKNOWN_ROUND,
+                        });
+                    }
+                    if Instant::now() >= deadline {
+                        return Err(NetError::Timeout { rank: from, round: UNKNOWN_ROUND });
+                    }
+                }
             }
-            RecvTimeoutError::Timeout => {
-                anyhow!("timed out waiting on a message from rank {from}")
-            }
-        })?;
-        // hand the message's buffer over rather than copying it
-        *out = msg;
-        Ok(())
+        }
+    }
+
+    fn set_timeout(&mut self, timeout: Duration) {
+        self.timeout = timeout;
+    }
+
+    fn set_abort(&mut self, flag: Arc<AtomicBool>) {
+        self.abort = Some(flag);
     }
 }
 
@@ -119,12 +161,45 @@ mod tests {
     }
 
     #[test]
-    fn dropped_peer_is_an_error_not_a_hang() {
+    fn dropped_peer_is_peer_dead_not_a_hang() {
         let mut mesh = ChannelTransport::mesh(2);
         let b = mesh.pop().unwrap();
         drop(b);
         let a = &mut mesh[0];
-        assert!(a.send(1, &[1, 2, 3]).is_err());
-        assert!(a.recv(1, &mut Vec::new()).is_err());
+        assert!(a.send(1, &[1, 2, 3]).unwrap_err().is_peer_dead());
+        let e = a.recv(1, &mut Vec::new()).unwrap_err();
+        assert_eq!(e, NetError::PeerDead { rank: 1, round: UNKNOWN_ROUND });
+    }
+
+    #[test]
+    fn recv_times_out_typed_and_fast() {
+        let mut mesh = ChannelTransport::mesh(2);
+        let mut a = mesh.remove(0);
+        let _b = mesh.remove(0); // alive but silent
+        a.set_timeout(Duration::from_millis(30));
+        let t0 = Instant::now();
+        let e = a.recv(1, &mut Vec::new()).unwrap_err();
+        assert_eq!(e, NetError::Timeout { rank: 1, round: UNKNOWN_ROUND });
+        assert!(t0.elapsed() < Duration::from_secs(5), "timeout not honored");
+    }
+
+    #[test]
+    fn abort_flag_ends_a_blocked_recv() {
+        let mut mesh = ChannelTransport::mesh(2);
+        let mut a = mesh.remove(0);
+        let _b = mesh.remove(0);
+        let flag = Arc::new(AtomicBool::new(false));
+        a.set_abort(Arc::clone(&flag));
+        a.set_timeout(Duration::from_secs(30));
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(Duration::from_millis(10));
+                flag.store(true, Ordering::Relaxed);
+            });
+            let t0 = Instant::now();
+            let e = a.recv(1, &mut Vec::new()).unwrap_err();
+            assert!(matches!(e, NetError::Aborted { rank: 1, .. }), "{e}");
+            assert!(t0.elapsed() < Duration::from_secs(5), "abort not honored");
+        });
     }
 }

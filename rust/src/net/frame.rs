@@ -5,26 +5,44 @@
 //!
 //! ```text
 //!   offset  size  field
-//!   0       4     round id (u32 LE)   — collective-call sequence number
-//!   4       1     payload kind        — lane width or opaque codec bytes
-//!   5       4     element count (u32) — coordinates (lane kinds) or bytes
-//!   9       4     checksum (u32 LE)   — FNV-1a over the payload
-//!   13      ...   payload
+//!   0       4     round id (u32 LE)   — collective-attempt sequence number
+//!   4       4     seq (u32 LE)        — per-(sender, receiver) hop counter
+//!                                       within the round
+//!   8       1     payload kind        — lane width or opaque codec bytes
+//!   9       4     element count (u32) — coordinates (lane kinds) or bytes
+//!   13      4     checksum (u32 LE)   — FNV-1a over the payload
+//!   17      ...   payload
 //! ```
+//!
+//! The `(round, seq)` pair is the replay guard: the receiving collective
+//! knows exactly which frame it awaits from each peer, so a duplicated or
+//! reordered frame is a typed [`NetError::Replay`], a frame from an
+//! *older* round (a leftover of an aborted attempt, which the
+//! `TransportReducer` retries under a fresh round id) is silently skipped
+//! ([`check_frame`] → [`FrameCheck::Stale`]), and a frame from a round
+//! that has not started yet is rejected.
 //!
 //! The length prefix that delimits frames on a byte stream is *transport*
 //! framing, not message framing — `TcpTransport` adds it, the in-process
 //! channel (message-oriented) does not — so the same frame bytes flow over
-//! both. Every decode path returns `Err` rather than panicking: these
-//! bytes arrive from a socket and must be treated as hostile
-//! (`compress::wire` follows the same rule).
-
-use anyhow::{anyhow, Result};
+//! both. Every decode path returns a typed [`NetError`] rather than
+//! panicking: these bytes arrive from a socket and must be treated as
+//! hostile (`compress::wire` follows the same rule).
 
 use crate::compress::intvec::Lanes;
 
+use super::{NetError, UNKNOWN_RANK, UNKNOWN_ROUND};
+
 /// Header bytes preceding every payload.
-pub const HEADER_BYTES: usize = 13;
+pub const HEADER_BYTES: usize = 17;
+
+fn corrupt(detail: String) -> NetError {
+    NetError::Corrupt { rank: UNKNOWN_RANK, round: UNKNOWN_ROUND, detail }
+}
+
+fn replay(detail: String) -> NetError {
+    NetError::Replay { rank: UNKNOWN_RANK, round: UNKNOWN_ROUND, detail }
+}
 
 /// What a frame's payload holds: a lane width for integer partial sums,
 /// or opaque codec bytes (sparse / sign / QSGD / NatSGD wire streams,
@@ -57,13 +75,13 @@ impl PayloadKind {
         }
     }
 
-    fn of_tag(tag: u8) -> Result<PayloadKind> {
+    fn of_tag(tag: u8) -> Result<PayloadKind, NetError> {
         Ok(match tag {
             0 => PayloadKind::I8,
             1 => PayloadKind::I32,
             2 => PayloadKind::I64,
             3 => PayloadKind::Bytes,
-            other => return Err(anyhow!("unknown payload kind tag {other}")),
+            other => return Err(corrupt(format!("unknown payload kind tag {other}"))),
         })
     }
 
@@ -81,6 +99,8 @@ impl PayloadKind {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FrameHeader {
     pub round: u32,
+    /// Hop counter within the round, per ordered (sender, receiver) pair.
+    pub seq: u32,
     pub kind: PayloadKind,
     pub elems: u32,
 }
@@ -88,7 +108,7 @@ pub struct FrameHeader {
 /// FNV-1a over the payload: cheap, order-sensitive, and enough to catch
 /// the framing bugs a length-prefixed stream can produce (offset slips,
 /// truncation, interleaving). Not cryptographic — the threat model is a
-/// coding error, not an adversary on loopback.
+/// coding error or an injected fault, not an adversary on loopback.
 pub fn checksum(bytes: &[u8]) -> u32 {
     let mut h: u32 = 0x811C_9DC5;
     for &b in bytes {
@@ -109,6 +129,7 @@ pub fn encode_frame(header: FrameHeader, payload: &[u8], out: &mut Vec<u8>) {
     out.clear();
     out.reserve(HEADER_BYTES + payload.len());
     out.extend_from_slice(&header.round.to_le_bytes());
+    out.extend_from_slice(&header.seq.to_le_bytes());
     out.push(header.kind.tag());
     out.extend_from_slice(&header.elems.to_le_bytes());
     out.extend_from_slice(&checksum(payload).to_le_bytes());
@@ -118,51 +139,115 @@ pub fn encode_frame(header: FrameHeader, payload: &[u8], out: &mut Vec<u8>) {
 /// Parse and verify one frame, returning the header and a view of the
 /// payload. Rejects short frames, unknown kinds, element counts that
 /// disagree with the payload size, and checksum mismatches.
-pub fn decode_frame(frame: &[u8]) -> Result<(FrameHeader, &[u8])> {
+pub fn decode_frame(frame: &[u8]) -> Result<(FrameHeader, &[u8]), NetError> {
     if frame.len() < HEADER_BYTES {
-        return Err(anyhow!(
+        return Err(corrupt(format!(
             "frame underrun: {} bytes < {HEADER_BYTES}-byte header",
             frame.len()
-        ));
+        )));
     }
     let round = u32::from_le_bytes([frame[0], frame[1], frame[2], frame[3]]);
-    let kind = PayloadKind::of_tag(frame[4])?;
-    let elems = u32::from_le_bytes([frame[5], frame[6], frame[7], frame[8]]);
-    let want_sum = u32::from_le_bytes([frame[9], frame[10], frame[11], frame[12]]);
+    let seq = u32::from_le_bytes([frame[4], frame[5], frame[6], frame[7]]);
+    let kind = PayloadKind::of_tag(frame[8])?;
+    let elems = u32::from_le_bytes([frame[9], frame[10], frame[11], frame[12]]);
+    let want_sum = u32::from_le_bytes([frame[13], frame[14], frame[15], frame[16]]);
     let payload = &frame[HEADER_BYTES..];
     let want_len = elems as usize * kind.bytes_per_elem();
     if payload.len() != want_len {
-        return Err(anyhow!(
+        return Err(corrupt(format!(
             "frame payload {} bytes, header promises {want_len} ({elems} x {kind:?})",
             payload.len()
-        ));
+        )));
     }
     let got_sum = checksum(payload);
     if got_sum != want_sum {
-        return Err(anyhow!(
+        return Err(corrupt(format!(
             "frame checksum mismatch: payload {got_sum:#010x}, header {want_sum:#010x}"
-        ));
+        )));
     }
-    Ok((FrameHeader { round, kind, elems }, payload))
+    Ok((FrameHeader { round, seq, kind, elems }, payload))
+}
+
+/// Verdict of [`check_frame`] on a structurally valid frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameCheck {
+    /// The frame the collective awaits — consume its payload.
+    Fresh,
+    /// A leftover from an aborted earlier attempt (older round id) —
+    /// discard it and keep receiving.
+    Stale,
+}
+
+/// Round-age classification shared by every receive guard: an id
+/// strictly behind ours (wrapping distance) is a stale leftover of an
+/// aborted attempt, one ahead of ours announces a round this rank never
+/// started. One implementation, so the ring all-gather's variable-length
+/// guard cannot drift from [`check_frame`] on the wrap boundary.
+pub fn classify_round(frame_round: u32, round: u32) -> Result<FrameCheck, NetError> {
+    if frame_round == round {
+        return Ok(FrameCheck::Fresh);
+    }
+    let age = round.wrapping_sub(frame_round);
+    if age < u32::MAX / 2 {
+        return Ok(FrameCheck::Stale);
+    }
+    Err(replay(format!(
+        "frame from future round {frame_round} during round {round}"
+    )))
+}
+
+/// The per-peer round/sequence guard: validate a received frame against
+/// exactly what the collective awaits. Structural damage and shape
+/// mismatches are [`NetError::Corrupt`]; a duplicated / reordered /
+/// future-round frame is [`NetError::Replay`]; a frame from an *older*
+/// round is [`FrameCheck::Stale`] (skip — retried attempts run under a
+/// fresh round id and must not trip over the aborted attempt's leftovers).
+pub fn check_frame(
+    frame: &[u8],
+    round: u32,
+    seq: u32,
+    kind: PayloadKind,
+    elems: usize,
+) -> Result<FrameCheck, NetError> {
+    let (h, _) = decode_frame(frame)?;
+    if classify_round(h.round, round)? == FrameCheck::Stale {
+        return Ok(FrameCheck::Stale);
+    }
+    if h.seq != seq {
+        let what = if h.seq < seq { "duplicated/replayed" } else { "gap: missing" };
+        return Err(replay(format!(
+            "{what} frame (seq {}, expected {seq}) in round {round}",
+            h.seq
+        )));
+    }
+    if h.kind != kind {
+        return Err(corrupt(format!("expected {kind:?} payload, got {:?}", h.kind)));
+    }
+    if h.elems as usize != elems {
+        return Err(corrupt(format!("expected {elems} elements, got {}", h.elems)));
+    }
+    Ok(FrameCheck::Fresh)
 }
 
 /// Expect a frame of exactly this shape (the collectives know the kind,
-/// element count, and round of every message they await).
+/// element count, and round of every message they await). Ignores the
+/// sequence number — conformance tests and single-shot exchanges use
+/// this; the staged collectives go through [`check_frame`].
 pub fn expect_frame<'a>(
     frame: &'a [u8],
     round: u32,
     kind: PayloadKind,
     elems: usize,
-) -> Result<&'a [u8]> {
+) -> Result<&'a [u8], NetError> {
     let (h, payload) = decode_frame(frame)?;
     if h.round != round {
-        return Err(anyhow!("frame from round {} during round {round}", h.round));
+        return Err(replay(format!("frame from round {} during round {round}", h.round)));
     }
     if h.kind != kind {
-        return Err(anyhow!("expected {kind:?} payload, got {:?}", h.kind));
+        return Err(corrupt(format!("expected {kind:?} payload, got {:?}", h.kind)));
     }
     if h.elems as usize != elems {
-        return Err(anyhow!("expected {elems} elements, got {}", h.elems));
+        return Err(corrupt(format!("expected {elems} elements, got {}", h.elems)));
     }
     Ok(payload)
 }
@@ -171,21 +256,22 @@ pub fn expect_frame<'a>(
 /// per-element range check: the caller proves the bound (IntSGD's clip
 /// guarantee), the packer refuses to let a violated proof corrupt the
 /// stream silently.
-pub fn pack_partials(sums: &[i64], wire: Lanes, out: &mut Vec<u8>) -> Result<()> {
+pub fn pack_partials(sums: &[i64], wire: Lanes, out: &mut Vec<u8>) -> Result<(), NetError> {
     out.clear();
     out.reserve(sums.len() * wire.bytes());
     match wire {
         Lanes::I8 => {
             for &s in sums {
                 let v = i8::try_from(s)
-                    .map_err(|_| anyhow!("partial sum {s} exceeds the i8 wire"))?;
+                    .map_err(|_| corrupt(format!("partial sum {s} exceeds the i8 wire")))?;
                 out.push(v as u8);
             }
         }
         Lanes::I32 => {
             for &s in sums {
-                let v = i32::try_from(s)
-                    .map_err(|_| anyhow!("partial sum {s} exceeds the i32 wire"))?;
+                let v = i32::try_from(s).map_err(|_| {
+                    corrupt(format!("partial sum {s} exceeds the i32 wire"))
+                })?;
                 out.extend_from_slice(&v.to_le_bytes());
             }
         }
@@ -200,7 +286,7 @@ pub fn pack_partials(sums: &[i64], wire: Lanes, out: &mut Vec<u8>) -> Result<()>
 
 /// Widen a received partial-sum payload and **add** it into `acc`
 /// (reduce-scatter's combine step).
-pub fn add_partials(payload: &[u8], wire: Lanes, acc: &mut [i64]) -> Result<()> {
+pub fn add_partials(payload: &[u8], wire: Lanes, acc: &mut [i64]) -> Result<(), NetError> {
     check_payload(payload, wire, acc.len())?;
     match wire {
         Lanes::I8 => {
@@ -226,7 +312,7 @@ pub fn add_partials(payload: &[u8], wire: Lanes, acc: &mut [i64]) -> Result<()> 
 
 /// Widen a received payload of **final** sums and overwrite `dst`
 /// (all-gather's distribute step).
-pub fn copy_partials(payload: &[u8], wire: Lanes, dst: &mut [i64]) -> Result<()> {
+pub fn copy_partials(payload: &[u8], wire: Lanes, dst: &mut [i64]) -> Result<(), NetError> {
     check_payload(payload, wire, dst.len())?;
     match wire {
         Lanes::I8 => {
@@ -250,13 +336,13 @@ pub fn copy_partials(payload: &[u8], wire: Lanes, dst: &mut [i64]) -> Result<()>
     Ok(())
 }
 
-fn check_payload(payload: &[u8], wire: Lanes, elems: usize) -> Result<()> {
+fn check_payload(payload: &[u8], wire: Lanes, elems: usize) -> Result<(), NetError> {
     let want = elems * wire.bytes();
     if payload.len() != want {
-        return Err(anyhow!(
+        return Err(corrupt(format!(
             "payload {} bytes, expected {want} ({elems} x {wire:?})",
             payload.len()
-        ));
+        )));
     }
     Ok(())
 }
@@ -268,7 +354,7 @@ mod tests {
     #[test]
     fn frame_roundtrip() {
         let payload: Vec<u8> = (0..=255u8).collect();
-        let h = FrameHeader { round: 7, kind: PayloadKind::Bytes, elems: 256 };
+        let h = FrameHeader { round: 7, seq: 3, kind: PayloadKind::Bytes, elems: 256 };
         let mut buf = Vec::new();
         encode_frame(h, &payload, &mut buf);
         assert_eq!(buf.len(), HEADER_BYTES + 256);
@@ -276,12 +362,16 @@ mod tests {
         assert_eq!(back, h);
         assert_eq!(body, &payload[..]);
         assert_eq!(expect_frame(&buf, 7, PayloadKind::Bytes, 256).unwrap(), &payload[..]);
+        assert_eq!(
+            check_frame(&buf, 7, 3, PayloadKind::Bytes, 256).unwrap(),
+            FrameCheck::Fresh
+        );
     }
 
     #[test]
     fn corrupt_frames_are_rejected_not_panicked() {
         let payload = [1u8, 2, 3, 4];
-        let h = FrameHeader { round: 1, kind: PayloadKind::I32, elems: 1 };
+        let h = FrameHeader { round: 1, seq: 0, kind: PayloadKind::I32, elems: 1 };
         let mut buf = Vec::new();
         encode_frame(h, &payload, &mut buf);
         // short frame
@@ -292,7 +382,7 @@ mod tests {
         assert!(decode_frame(&bad).unwrap_err().to_string().contains("checksum"));
         // unknown kind tag
         let mut bad = buf.clone();
-        bad[4] = 99;
+        bad[8] = 99;
         assert!(decode_frame(&bad).is_err());
         // truncated payload vs promised element count
         let mut bad = buf.clone();
@@ -302,6 +392,53 @@ mod tests {
         assert!(expect_frame(&buf, 2, PayloadKind::I32, 1).is_err());
         assert!(expect_frame(&buf, 1, PayloadKind::I8, 4).is_err());
         assert!(expect_frame(&buf, 1, PayloadKind::I32, 2).is_err());
+    }
+
+    #[test]
+    fn replay_guard_classifies_round_and_seq() {
+        let payload = [9u8; 4];
+        let mut buf = Vec::new();
+        encode_frame(
+            FrameHeader { round: 5, seq: 2, kind: PayloadKind::Bytes, elems: 4 },
+            &payload,
+            &mut buf,
+        );
+        // exactly what we await
+        assert_eq!(
+            check_frame(&buf, 5, 2, PayloadKind::Bytes, 4).unwrap(),
+            FrameCheck::Fresh
+        );
+        // older round id: a leftover of an aborted attempt -> skip
+        assert_eq!(
+            check_frame(&buf, 6, 0, PayloadKind::Bytes, 4).unwrap(),
+            FrameCheck::Stale
+        );
+        // future round id: this rank never started round 5 yet
+        let e = check_frame(&buf, 4, 0, PayloadKind::Bytes, 4).unwrap_err();
+        assert!(matches!(e, NetError::Replay { .. }), "{e}");
+        assert!(e.to_string().contains("future"), "{e}");
+        // duplicated frame inside the round (seq already consumed)
+        let e = check_frame(&buf, 5, 3, PayloadKind::Bytes, 4).unwrap_err();
+        assert!(matches!(e, NetError::Replay { .. }), "{e}");
+        assert!(e.to_string().contains("duplicated"), "{e}");
+        // a frame from ahead of schedule: the awaited one was lost
+        let e = check_frame(&buf, 5, 1, PayloadKind::Bytes, 4).unwrap_err();
+        assert!(matches!(e, NetError::Replay { .. }), "{e}");
+        assert!(e.to_string().contains("gap"), "{e}");
+        // shape mismatches stay Corrupt, not Replay
+        let e = check_frame(&buf, 5, 2, PayloadKind::I32, 1).unwrap_err();
+        assert!(matches!(e, NetError::Corrupt { .. }), "{e}");
+        // round-id wraparound: u32::MAX is "just behind" round 3
+        let mut old = Vec::new();
+        encode_frame(
+            FrameHeader { round: u32::MAX, seq: 0, kind: PayloadKind::Bytes, elems: 4 },
+            &payload,
+            &mut old,
+        );
+        assert_eq!(
+            check_frame(&old, 3, 0, PayloadKind::Bytes, 4).unwrap(),
+            FrameCheck::Stale
+        );
     }
 
     #[test]

@@ -12,7 +12,11 @@
 //! - [`Transport`] — point-to-point framed messages between ranks, with
 //!   two implementations: [`ChannelTransport`] (in-process mailboxes,
 //!   tier-1 testable, no syscalls) and [`TcpTransport`] (loopback
-//!   `std::net` sockets, length-prefixed frames, no extra crates).
+//!   `std::net` sockets, length-prefixed frames, no extra crates) — plus
+//!   [`FaultTransport`], a deterministic seeded fault injector over any
+//!   transport (drop / duplicate / corrupt / truncate / delay frames,
+//!   kill a rank at a chosen round or op) so every failure mode is
+//!   reproducible in tier-1.
 //! - [`staged`] — ring all-reduce and recursive halving-doubling
 //!   all-reduce for integer messages, plus ring all-gather for the codec
 //!   byte streams. Integer addition is exactly associative, so every
@@ -24,12 +28,22 @@
 //!   training round (`Coordinator::train_over`, `repro net-bench`) runs
 //!   its integer aggregation over the wire.
 //!
-//! Frames are self-describing (`frame`: round id, lane width, element
-//! count, FNV-1a checksum over the payload) and reuse the byte layouts of
-//! `compress::wire` for codec payloads — the wire format here is the one
-//! the paper's byte counts are derived from, so `netsim`'s modeled bytes
-//! and the measured socket time compare like with like
-//! (`netsim::Network::round_breakdown_measured`).
+//! **Failure model** (DESIGN.md §7). Every fallible operation returns a
+//! typed [`NetError`] carrying the implicated rank and collective round id
+//! — never a hang, never an untyped string the caller cannot classify.
+//! Recoverable faults (timeouts, corrupt/replayed frames) fail the
+//! *round*; the [`TransportReducer`] retries the collective from the
+//! rank messages, which are untouched by the failed attempt, so a retried
+//! round is bit-identical to an unfaulted one. A [`NetError::PeerDead`]
+//! is permanent: it propagates to the `Coordinator`, which shrinks the
+//! world to the survivors and re-runs the round at the smaller n.
+//!
+//! Frames are self-describing (`frame`: round id, per-pair sequence
+//! number, lane width, element count, FNV-1a checksum over the payload)
+//! and reuse the byte layouts of `compress::wire` for codec payloads —
+//! the wire format here is the one the paper's byte counts are derived
+//! from, so `netsim`'s modeled bytes and the measured socket time compare
+//! like with like (`netsim::Network::round_breakdown_measured`).
 //!
 //! **Deadlock discipline.** Staged collectives make every rank send before
 //! it receives within a step. `ChannelTransport` mailboxes are unbounded,
@@ -39,17 +53,198 @@
 //! makes progress (see `tcp.rs`).
 
 pub mod channel;
+pub mod faults;
 pub mod frame;
 pub mod reducer;
 pub mod staged;
 pub mod tcp;
 
 pub use channel::ChannelTransport;
+pub use faults::{FaultPlan, FaultStats, FaultTransport, KillAt};
 pub use frame::{FrameHeader, PayloadKind, HEADER_BYTES};
 pub use reducer::{StagedAlgo, TransportReducer};
 pub use tcp::TcpTransport;
 
-use anyhow::Result;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Sentinel for "no rank attributed yet" in a [`NetError`] (stamped by the
+/// layer that knows the peer).
+pub const UNKNOWN_RANK: usize = usize::MAX;
+
+/// Sentinel for "no collective round attributed yet" in a [`NetError`]
+/// (transports don't know the round; the staged collectives stamp it).
+pub const UNKNOWN_ROUND: u32 = u32::MAX;
+
+/// Typed failure of a transport operation or staged collective. Every
+/// variant names the implicated rank and the collective round id, so the
+/// recovery layers can *classify* instead of parsing strings: everything
+/// except [`NetError::PeerDead`] is recoverable by retrying the round.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum NetError {
+    /// No frame arrived from `rank` before the deadline
+    /// (`Transport::set_timeout`, default 30 s, env
+    /// `INTSGD_NET_TIMEOUT_MS`).
+    Timeout { rank: usize, round: u32 },
+    /// A frame failed validation: framing underrun, bad length, unknown
+    /// kind, checksum mismatch, or a payload that disagrees with its
+    /// header.
+    Corrupt { rank: usize, round: u32, detail: String },
+    /// A duplicated, reordered, or otherwise out-of-sequence frame inside
+    /// the current round — the per-peer round/seq guard rejected it.
+    Replay { rank: usize, round: u32, detail: String },
+    /// The peer is gone for good (connection closed, endpoint dropped, or
+    /// killed by fault injection). Not recoverable by retry: the world
+    /// must shrink to the survivors.
+    PeerDead { rank: usize, round: u32 },
+    /// This rank bailed out because a peer already failed the round (the
+    /// cooperative abort flag, `Transport::set_abort`) — the interesting
+    /// error is the peer's.
+    Aborted { rank: usize, round: u32 },
+}
+
+impl NetError {
+    /// The implicated rank ([`UNKNOWN_RANK`] when unattributed).
+    pub fn rank(&self) -> usize {
+        match self {
+            NetError::Timeout { rank, .. }
+            | NetError::Corrupt { rank, .. }
+            | NetError::Replay { rank, .. }
+            | NetError::PeerDead { rank, .. }
+            | NetError::Aborted { rank, .. } => *rank,
+        }
+    }
+
+    /// The collective round id ([`UNKNOWN_ROUND`] when unattributed).
+    pub fn round(&self) -> u32 {
+        match self {
+            NetError::Timeout { round, .. }
+            | NetError::Corrupt { round, .. }
+            | NetError::Replay { round, .. }
+            | NetError::PeerDead { round, .. }
+            | NetError::Aborted { round, .. } => *round,
+        }
+    }
+
+    fn round_mut(&mut self) -> &mut u32 {
+        match self {
+            NetError::Timeout { round, .. }
+            | NetError::Corrupt { round, .. }
+            | NetError::Replay { round, .. }
+            | NetError::PeerDead { round, .. }
+            | NetError::Aborted { round, .. } => round,
+        }
+    }
+
+    fn rank_mut(&mut self) -> &mut usize {
+        match self {
+            NetError::Timeout { rank, .. }
+            | NetError::Corrupt { rank, .. }
+            | NetError::Replay { rank, .. }
+            | NetError::PeerDead { rank, .. }
+            | NetError::Aborted { rank, .. } => rank,
+        }
+    }
+
+    /// Stamp the collective round id if it is still unknown.
+    pub fn at_round(mut self, round: u32) -> NetError {
+        if self.round() == UNKNOWN_ROUND {
+            *self.round_mut() = round;
+        }
+        self
+    }
+
+    /// Stamp the implicated rank if it is still unknown.
+    pub fn with_rank(mut self, rank: usize) -> NetError {
+        if self.rank() == UNKNOWN_RANK {
+            *self.rank_mut() = rank;
+        }
+        self
+    }
+
+    /// Rewrite the rank through `f` (the world re-keying adapter uses this
+    /// to translate physical endpoint ranks back to survivor ranks).
+    pub fn map_rank(mut self, f: impl FnOnce(usize) -> usize) -> NetError {
+        let r = self.rank();
+        if r != UNKNOWN_RANK {
+            *self.rank_mut() = f(r);
+        }
+        self
+    }
+
+    /// Permanent failures shrink the world; everything else retries.
+    pub fn is_peer_dead(&self) -> bool {
+        matches!(self, NetError::PeerDead { .. })
+    }
+}
+
+fn fmt_rank(rank: usize) -> String {
+    if rank == UNKNOWN_RANK {
+        "?".into()
+    } else {
+        rank.to_string()
+    }
+}
+
+fn fmt_round(round: u32) -> String {
+    if round == UNKNOWN_ROUND {
+        "?".into()
+    } else {
+        round.to_string()
+    }
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Timeout { rank, round } => write!(
+                f,
+                "timed out waiting on rank {} in round {}",
+                fmt_rank(*rank),
+                fmt_round(*round)
+            ),
+            NetError::Corrupt { rank, round, detail } => write!(
+                f,
+                "corrupt frame from rank {} in round {}: {detail}",
+                fmt_rank(*rank),
+                fmt_round(*round)
+            ),
+            NetError::Replay { rank, round, detail } => write!(
+                f,
+                "replayed/out-of-order frame from rank {} in round {}: {detail}",
+                fmt_rank(*rank),
+                fmt_round(*round)
+            ),
+            NetError::PeerDead { rank, round } => write!(
+                f,
+                "rank {} is dead (connection closed) in round {}",
+                fmt_rank(*rank),
+                fmt_round(*round)
+            ),
+            NetError::Aborted { rank, round } => write!(
+                f,
+                "round {} aborted waiting on rank {} (a peer failed first)",
+                fmt_round(*round),
+                fmt_rank(*rank)
+            ),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+/// Default blocking-IO deadline: env `INTSGD_NET_TIMEOUT_MS` or 30 s. A
+/// dead or wedged peer must fail the collective with a typed
+/// [`NetError::Timeout`], not hang the survivors; CI sets the env var so a
+/// stalled rank burns milliseconds, not the full default.
+pub fn default_io_timeout() -> Duration {
+    std::env::var("INTSGD_NET_TIMEOUT_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .unwrap_or_else(|| Duration::from_secs(30))
+}
 
 /// Point-to-point message transport between the `world()` ranks of one
 /// job. A message is one frame (`frame::encode_frame` bytes); transports
@@ -60,6 +255,11 @@ use anyhow::Result;
 ///   while blocked (the staged collectives' deadlock-freedom rests on it);
 /// - `recv` blocks until the next frame *from that peer* arrives, leaving
 ///   frames from other peers queued;
+/// - blocking operations give up after the configured timeout
+///   ([`Transport::set_timeout`]) with [`NetError::Timeout`], and bail
+///   early with [`NetError::Aborted`] once the installed abort flag
+///   ([`Transport::set_abort`]) is raised — a failed peer must not cost
+///   the survivors a full timeout;
 /// - sending to or receiving from `self.rank()` is a caller bug
 ///   (collectives never schedule self-messages) and may panic.
 pub trait Transport: Send {
@@ -70,13 +270,23 @@ pub trait Transport: Send {
     fn world(&self) -> usize;
 
     /// Ship one framed message to `to`.
-    fn send(&mut self, to: usize, frame: &[u8]) -> Result<()>;
+    fn send(&mut self, to: usize, frame: &[u8]) -> Result<(), NetError>;
 
     /// Receive the next framed message from `from` into `out`. The
     /// previous contents of `out` are discarded; implementations may
     /// replace the buffer outright (handing over the arrival buffer)
     /// rather than copying into it.
-    fn recv(&mut self, from: usize, out: &mut Vec<u8>) -> Result<()>;
+    fn recv(&mut self, from: usize, out: &mut Vec<u8>) -> Result<(), NetError>;
+
+    /// Bound blocking sends/receives (default: implementation-defined,
+    /// see [`default_io_timeout`]). Implementations without blocking ops
+    /// may ignore it.
+    fn set_timeout(&mut self, _timeout: Duration) {}
+
+    /// Install a cooperative abort flag: blocking operations poll it and
+    /// return [`NetError::Aborted`] once raised, so one rank's failure
+    /// ends the whole round in milliseconds instead of a timeout.
+    fn set_abort(&mut self, _flag: Arc<AtomicBool>) {}
 }
 
 #[cfg(test)]
@@ -107,6 +317,7 @@ mod tests {
                             encode_frame(
                                 FrameHeader {
                                     round: seq,
+                                    seq,
                                     kind: PayloadKind::Bytes,
                                     elems: 4,
                                 },
@@ -132,5 +343,31 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn net_error_accessors_and_stamping() {
+        let e = NetError::Timeout { rank: UNKNOWN_RANK, round: UNKNOWN_ROUND };
+        let e = e.with_rank(3).at_round(7);
+        assert_eq!(e.rank(), 3);
+        assert_eq!(e.round(), 7);
+        // stamping never overwrites a known field
+        let e = e.with_rank(9).at_round(9);
+        assert_eq!((e.rank(), e.round()), (3, 7));
+        assert!(!e.is_peer_dead());
+        assert!(NetError::PeerDead { rank: 0, round: 0 }.is_peer_dead());
+        // rank remapping rewrites known ranks only
+        let e = e.map_rank(|r| r + 10);
+        assert_eq!(e.rank(), 13);
+        let u = NetError::Timeout { rank: UNKNOWN_RANK, round: 0 }.map_rank(|r| r + 10);
+        assert_eq!(u.rank(), UNKNOWN_RANK);
+    }
+
+    #[test]
+    fn net_error_displays_classifiably() {
+        let dead = NetError::PeerDead { rank: 2, round: 5 }.to_string();
+        assert!(dead.contains("closed") && dead.contains('2'), "{dead}");
+        let t = NetError::Timeout { rank: 1, round: UNKNOWN_ROUND }.to_string();
+        assert!(t.contains("timed out") && t.contains('?'), "{t}");
     }
 }

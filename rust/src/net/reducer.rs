@@ -1,5 +1,6 @@
 //! [`TransportReducer`]: the engine's integer reduce phase executed as a
-//! staged collective over a real transport.
+//! staged collective over a real transport — with **round-level
+//! recovery**.
 //!
 //! The third [`Reducer`] implementation next to `SerialReducer` (leader
 //! fold) and `PoolReducer` (coordinate-chunked fold): here each rank's
@@ -10,6 +11,23 @@
 //! cross-checks it). Bit-parity with the in-process folds is inherited
 //! from `net::staged` (exact integer associativity) and pinned end to
 //! end by `tests/net_parity.rs`.
+//!
+//! **Recovery.** A collective no longer panics or hangs on failure:
+//!
+//! - *Recoverable* faults (timeouts, corrupt / truncated / replayed
+//!   frames — everything [`FaultTransport`](super::FaultTransport)
+//!   injects short of a kill) fail the attempt. The first failing rank
+//!   raises the shared abort flag so blocked peers bail in milliseconds
+//!   ([`NetError::Aborted`]) instead of burning the timeout, and the
+//!   whole collective **retries under a fresh round id** — the rank
+//!   messages are untouched by the failed attempt, and stale frames from
+//!   it are discarded by the round/seq guard, so a retried round is
+//!   **bit-identical** to an unfaulted one (`tests/chaos.rs`).
+//! - A [`NetError::PeerDead`] is permanent: `sum_ints` returns it, and
+//!   the `Coordinator` shrinks the world — [`Reducer::remove_rank`]
+//!   re-keys the survivors onto contiguous ranks `0..m` over the same
+//!   physical endpoints (dead pairs are simply never addressed again)
+//!   and training re-runs the round at the smaller n.
 //!
 //! The partial-sum wire width is derived per round from the messages
 //! themselves ([`partial_sum_lanes`]): for IntSGD's clipped int8 wire the
@@ -22,11 +40,11 @@
 //! against real socket time, and the transport path is deliberately NOT
 //! part of the zero-allocation guarantee — it is the measured-wire
 //! reference the in-process paths are compared against
-//! (`RoundBreakdown::comm_measured`). A transport failure panics the
-//! round: a training loop must not silently continue on a torn
-//! collective.
+//! (`RoundBreakdown::comm_measured`, which also carries the retry count).
 
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::compress::engine::{RankMessages, Reducer};
 use crate::compress::intvec::Lanes;
@@ -34,7 +52,7 @@ use crate::compress::intvec::Lanes;
 use super::staged::{
     halving_allreduce_ints, partial_sum_lanes, ring_allreduce_ints, StagedScratch,
 };
-use super::{ChannelTransport, TcpTransport, Transport};
+use super::{ChannelTransport, NetError, TcpTransport, Transport};
 
 /// Which staged schedule the reducer runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,6 +65,10 @@ pub enum StagedAlgo {
     Halving,
 }
 
+/// Give up after this many retried attempts of one collective (a fault
+/// burst longer than this is indistinguishable from a dead fabric).
+const DEFAULT_MAX_RETRIES: usize = 8;
+
 /// Per-rank state the reducer owns across rounds.
 struct RankState<T> {
     endpoint: T,
@@ -55,14 +77,67 @@ struct RankState<T> {
     acc: Vec<i64>,
 }
 
+/// Survivor-world view of one physical endpoint: the staged schedule runs
+/// on contiguous virtual ranks `0..m`; this adapter translates them to the
+/// mesh's physical ranks (and failure ranks back to virtual).
+struct Remap<'a> {
+    inner: &'a mut dyn Transport,
+    /// `map[v]` = physical rank of virtual rank v.
+    map: &'a [usize],
+    vrank: usize,
+}
+
+impl Remap<'_> {
+    fn to_virtual(&self, e: NetError) -> NetError {
+        e.map_rank(|phys| {
+            // a physical rank outside the survivor map (e.g. a lingering
+            // error about an already-removed peer) must NOT alias a
+            // surviving virtual rank — surface it as unattributed
+            self.map
+                .iter()
+                .position(|&p| p == phys)
+                .unwrap_or(crate::net::UNKNOWN_RANK)
+        })
+    }
+}
+
+impl Transport for Remap<'_> {
+    fn rank(&self) -> usize {
+        self.vrank
+    }
+
+    fn world(&self) -> usize {
+        self.map.len()
+    }
+
+    fn send(&mut self, to: usize, frame: &[u8]) -> Result<(), NetError> {
+        let phys = self.map[to];
+        self.inner.send(phys, frame).map_err(|e| self.to_virtual(e))
+    }
+
+    fn recv(&mut self, from: usize, out: &mut Vec<u8>) -> Result<(), NetError> {
+        let phys = self.map[from];
+        self.inner.recv(phys, out).map_err(|e| self.to_virtual(e))
+    }
+}
+
 pub struct TransportReducer<T: Transport> {
+    /// Survivor states, indexed by virtual rank.
     ranks: Vec<RankState<T>>,
+    /// Virtual -> physical rank (identity until a failover).
+    map: Vec<usize>,
     algo: StagedAlgo,
-    /// Collective-call sequence number, stamped into every frame header.
+    /// Collective-attempt sequence number, stamped into every frame
+    /// header. Incremented per **attempt**, not per logical round, so a
+    /// retry runs under a fresh id and stale frames are skippable.
     round: u32,
     wire_seconds: f64,
     calls: u64,
+    retries: u64,
+    stale_skipped: u64,
+    max_retries: usize,
     last_wire: Option<Lanes>,
+    abort: Arc<AtomicBool>,
 }
 
 impl TransportReducer<ChannelTransport> {
@@ -86,23 +161,34 @@ impl<T: Transport> TransportReducer<T> {
         for (r, ep) in endpoints.iter().enumerate() {
             assert_eq!(ep.rank(), r, "endpoint order must match rank order");
         }
+        let abort = Arc::new(AtomicBool::new(false));
+        let map = (0..endpoints.len()).collect();
         TransportReducer {
             ranks: endpoints
                 .into_iter()
-                .map(|endpoint| RankState {
-                    endpoint,
-                    scratch: StagedScratch::default(),
-                    acc: Vec::new(),
+                .map(|mut endpoint| {
+                    endpoint.set_abort(Arc::clone(&abort));
+                    RankState {
+                        endpoint,
+                        scratch: StagedScratch::default(),
+                        acc: Vec::new(),
+                    }
                 })
                 .collect(),
+            map,
             algo,
             round: 0,
             wire_seconds: 0.0,
             calls: 0,
+            retries: 0,
+            stale_skipped: 0,
+            max_retries: DEFAULT_MAX_RETRIES,
             last_wire: None,
+            abort,
         }
     }
 
+    /// Surviving world size.
     pub fn world(&self) -> usize {
         self.ranks.len()
     }
@@ -111,9 +197,23 @@ impl<T: Transport> TransportReducer<T> {
         self.algo
     }
 
+    /// Bound every endpoint's blocking sends/receives (see
+    /// `Transport::set_timeout`; env default `INTSGD_NET_TIMEOUT_MS`).
+    pub fn set_timeout(&mut self, timeout: Duration) {
+        for state in &mut self.ranks {
+            state.endpoint.set_timeout(timeout);
+        }
+    }
+
+    /// Cap on retried attempts per collective (default 8).
+    pub fn set_max_retries(&mut self, max: usize) {
+        self.max_retries = max;
+    }
+
     /// Wall-clock seconds spent inside staged collectives since the last
     /// [`TransportReducer::take_wire_seconds`] — the *measured* side of
-    /// `netsim`'s measured-vs-modeled comparison.
+    /// `netsim`'s measured-vs-modeled comparison. Includes retried
+    /// attempts: a fault costs real wire time.
     pub fn wire_seconds(&self) -> f64 {
         self.wire_seconds
     }
@@ -124,59 +224,142 @@ impl<T: Transport> TransportReducer<T> {
         std::mem::take(&mut self.wire_seconds)
     }
 
-    /// Staged collectives executed so far.
+    /// Staged collectives executed so far (logical, not attempts).
     pub fn calls(&self) -> u64 {
         self.calls
+    }
+
+    /// Retried attempts so far (fault/retry accounting; netsim's
+    /// `RoundBreakdown::comm_retries`).
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// Read and reset the retry counter (per-round attribution).
+    pub fn take_retries(&mut self) -> u64 {
+        std::mem::take(&mut self.retries)
+    }
+
+    /// Stale frames discarded by the round/seq guard so far (leftovers of
+    /// aborted attempts — nonzero only after retries).
+    pub fn stale_skipped(&self) -> u64 {
+        self.stale_skipped
     }
 
     /// Wire width the last collective shipped its partial sums at.
     pub fn last_wire(&self) -> Option<Lanes> {
         self.last_wire
     }
+
+    /// One attempt of the collective across all survivor threads; returns
+    /// every rank failure (empty = success).
+    fn attempt(&mut self, msgs: &RankMessages, wire: Lanes, round: u32) -> Vec<NetError> {
+        self.abort.store(false, Ordering::Relaxed);
+        let algo = self.algo;
+        let map = &self.map;
+        let abort = &self.abort;
+        let errs: Vec<Option<NetError>> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .ranks
+                .iter_mut()
+                .enumerate()
+                .map(|(vrank, state)| {
+                    let msg = msgs.get(vrank).as_ints();
+                    s.spawn(move || {
+                        let mut t = Remap {
+                            inner: &mut state.endpoint,
+                            map,
+                            vrank,
+                        };
+                        let run = match algo {
+                            StagedAlgo::Ring => ring_allreduce_ints,
+                            StagedAlgo::Halving => halving_allreduce_ints,
+                        };
+                        let r = run(
+                            &mut t,
+                            msg,
+                            wire,
+                            round,
+                            &mut state.scratch,
+                            &mut state.acc,
+                        );
+                        if r.is_err() {
+                            // wake every peer blocked on this round
+                            abort.store(true, Ordering::Relaxed);
+                        }
+                        r.err()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        errs.into_iter().flatten().collect()
+    }
+}
+
+/// The most diagnostic error of a failed attempt: the root cause, not the
+/// cascade — peers that merely bailed out rank last.
+fn primary_error(errs: Vec<NetError>) -> NetError {
+    fn severity(e: &NetError) -> u8 {
+        match e {
+            NetError::PeerDead { .. } => 4,
+            NetError::Corrupt { .. } => 3,
+            NetError::Replay { .. } => 2,
+            NetError::Timeout { .. } => 1,
+            NetError::Aborted { .. } => 0,
+        }
+    }
+    errs.into_iter()
+        .max_by_key(severity)
+        .expect("primary_error on a successful attempt")
 }
 
 impl<T: Transport> Reducer for TransportReducer<T> {
-    fn sum_ints(&mut self, msgs: &RankMessages, out: &mut Vec<i64>) {
-        let n = self.ranks.len();
+    fn sum_ints(&mut self, msgs: &RankMessages, out: &mut Vec<i64>) -> Result<(), NetError> {
+        let m = self.ranks.len();
         assert!(!msgs.is_empty(), "at least one rank message");
-        assert_eq!(msgs.len(), n, "one transport endpoint per rank");
+        assert_eq!(msgs.len(), m, "one transport endpoint per rank");
         let d = msgs.get(0).as_ints().len();
-        for m in msgs.iter() {
-            assert_eq!(m.as_ints().len(), d, "mismatched message lengths");
+        for msg in msgs.iter() {
+            assert_eq!(msg.as_ints().len(), d, "mismatched message lengths");
         }
         // Narrowest width every partial sum provably fits: for IntSGD's
         // clipped messages this recovers the aggregate wire type itself.
-        let wire = partial_sum_lanes(msgs.iter().map(|m| m.as_ints()));
+        let wire = partial_sum_lanes(msgs.iter().map(|msg| msg.as_ints()));
         self.last_wire = Some(wire);
-        let round = self.round;
-        self.round = self.round.wrapping_add(1);
-        let algo = self.algo;
 
         let t0 = Instant::now();
-        std::thread::scope(|s| {
-            for (rank, state) in self.ranks.iter_mut().enumerate() {
-                let msg = msgs.get(rank).as_ints();
-                s.spawn(move || {
-                    let run = match algo {
-                        StagedAlgo::Ring => ring_allreduce_ints,
-                        StagedAlgo::Halving => halving_allreduce_ints,
-                    };
-                    run(
-                        &mut state.endpoint,
-                        msg,
-                        wire,
-                        round,
-                        &mut state.scratch,
-                        &mut state.acc,
-                    )
-                    .unwrap_or_else(|e| {
-                        panic!("staged reduce failed on rank {rank}: {e}")
-                    });
-                });
+        let mut attempts = 0usize;
+        let outcome = loop {
+            let round = self.round;
+            self.round = self.round.wrapping_add(1);
+            let errs = self.attempt(msgs, wire, round);
+            if errs.is_empty() {
+                break Ok(());
             }
-        });
+            // a dead *member* cannot be retried away: report it for
+            // failover. A death notice about a rank outside the current
+            // world (stale noise about an already-removed peer) is
+            // retried like any recoverable fault.
+            if let Some(dead) = errs.iter().find(|e| e.is_peer_dead() && e.rank() < m) {
+                break Err(dead.clone());
+            }
+            attempts += 1;
+            self.retries += 1;
+            if attempts > self.max_retries {
+                break Err(primary_error(errs));
+            }
+            // recoverable: rerun under a fresh round id; the messages are
+            // untouched and the seq guard discards this attempt's litter
+        };
         self.wire_seconds += t0.elapsed().as_secs_f64();
         self.calls += 1;
+        self.stale_skipped += self
+            .ranks
+            .iter_mut()
+            .map(|state| state.scratch.take_skipped())
+            .sum::<u64>();
+        outcome?;
 
         // every rank holds the identical aggregate; rank 0's is the result
         out.clear();
@@ -185,6 +368,17 @@ impl<T: Transport> Reducer for TransportReducer<T> {
             self.ranks.iter().all(|r| r.acc == self.ranks[0].acc),
             "ranks disagree on the aggregate — the collective is torn"
         );
+        Ok(())
+    }
+
+    /// Shrink the world to the survivors: drop the dead rank's endpoint
+    /// (its connections are already gone) and re-key the remaining
+    /// endpoints onto contiguous virtual ranks.
+    fn remove_rank(&mut self, rank: usize) {
+        assert!(rank < self.ranks.len(), "removing rank {rank} of {}", self.ranks.len());
+        assert!(self.ranks.len() > 1, "cannot remove the last rank");
+        self.ranks.remove(rank);
+        self.map.remove(rank);
     }
 }
 
@@ -193,6 +387,7 @@ mod tests {
     use super::*;
     use crate::compress::engine::{Message, PassPlan, RankEncoder, SerialReducer};
     use crate::compress::intvec::IntVec;
+    use crate::net::{FaultPlan, FaultTransport, KillAt};
     use crate::util::Rng;
 
     struct Fixed {
@@ -225,15 +420,17 @@ mod tests {
                 let encs = fixed_encoders(n, 129, 3 + n as u64);
                 let msgs = RankMessages::new(&encs);
                 let mut want = Vec::new();
-                SerialReducer.sum_ints(&msgs, &mut want);
+                SerialReducer.sum_ints(&msgs, &mut want).unwrap();
                 let mut red = TransportReducer::channel_mesh(n, algo);
                 let mut got = Vec::new();
                 // repeated rounds reuse endpoints and scratch
                 for _ in 0..3 {
-                    red.sum_ints(&msgs, &mut got);
+                    red.sum_ints(&msgs, &mut got).expect("clean fabric");
                     assert_eq!(got, want, "{algo:?} n={n}");
                 }
                 assert_eq!(red.calls(), 3);
+                assert_eq!(red.retries(), 0);
+                assert_eq!(red.stale_skipped(), 0);
                 assert!(red.wire_seconds() >= 0.0);
                 // |v| <= 7 per rank, so partials fit i8 up to n = 18
                 assert_eq!(red.last_wire(), Some(Lanes::I8), "{algo:?} n={n}");
@@ -247,7 +444,7 @@ mod tests {
         let msgs = RankMessages::new(&encs);
         let mut red = TransportReducer::channel_mesh(2, StagedAlgo::Ring);
         let mut out = Vec::new();
-        red.sum_ints(&msgs, &mut out);
+        red.sum_ints(&msgs, &mut out).unwrap();
         let t = red.take_wire_seconds();
         assert!(t >= 0.0);
         assert_eq!(red.wire_seconds(), 0.0);
@@ -260,6 +457,60 @@ mod tests {
         let msgs = RankMessages::new(&encs);
         let mut red = TransportReducer::channel_mesh(2, StagedAlgo::Ring);
         let mut out = Vec::new();
-        red.sum_ints(&msgs, &mut out);
+        let _ = red.sum_ints(&msgs, &mut out);
+    }
+
+    #[test]
+    fn injected_recoverable_faults_retry_to_the_exact_answer() {
+        let n = 4;
+        let encs = fixed_encoders(n, 257, 21);
+        let msgs = RankMessages::new(&encs);
+        let mut want = Vec::new();
+        SerialReducer.sum_ints(&msgs, &mut want).unwrap();
+
+        let mut plan = FaultPlan::clean(0xFA17);
+        plan.corrupt_p = 0.02;
+        plan.dup_p = 0.02;
+        plan.truncate_p = 0.01;
+        let mesh = FaultTransport::wrap_mesh(ChannelTransport::mesh(n), &plan, None);
+        let mut red = TransportReducer::new(mesh, StagedAlgo::Ring);
+        red.set_timeout(Duration::from_millis(300));
+        red.set_max_retries(64);
+        let mut got = Vec::new();
+        let mut total_retries = 0;
+        for _ in 0..20 {
+            red.sum_ints(&msgs, &mut got).expect("faults must be retried away");
+            assert_eq!(got, want, "retried collective must be bit-identical");
+            total_retries += red.take_retries();
+        }
+        assert!(total_retries > 0, "the fault plan never fired");
+    }
+
+    #[test]
+    fn dead_rank_reports_peer_dead_then_survivors_carry_on() {
+        let n = 3;
+        let encs = fixed_encoders(n, 64, 33);
+        let msgs = RankMessages::new(&encs);
+        // rank 2 dies on its very first frame
+        let mesh = FaultTransport::wrap_mesh(
+            ChannelTransport::mesh(n),
+            &FaultPlan::clean(1),
+            Some((2, KillAt::Round(0))),
+        );
+        let mut red = TransportReducer::new(mesh, StagedAlgo::Ring);
+        red.set_timeout(Duration::from_millis(500));
+        let mut out = Vec::new();
+        let e = red.sum_ints(&msgs, &mut out).expect_err("the death must surface");
+        assert!(e.is_peer_dead(), "{e}");
+        assert_eq!(e.rank(), 2);
+        // failover: shrink to the survivors and reduce their messages
+        red.remove_rank(2);
+        assert_eq!(red.world(), 2);
+        let surv = fixed_encoders(n, 64, 33).into_iter().take(2).collect::<Vec<_>>();
+        let smsgs = RankMessages::new(&surv);
+        let mut want = Vec::new();
+        SerialReducer.sum_ints(&smsgs, &mut want).unwrap();
+        red.sum_ints(&smsgs, &mut out).expect("survivor world must work");
+        assert_eq!(out, want);
     }
 }

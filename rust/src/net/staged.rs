@@ -12,6 +12,18 @@
 //! the identical bit pattern. `tests/net_parity.rs` pins this over real
 //! TCP sockets for the whole compressor zoo.
 //!
+//! **Failure model.** Every send/recv failure surfaces as a typed
+//! [`NetError`] stamped with the peer rank and the collective's round id.
+//! Each frame additionally carries a per-(sender, receiver) **sequence
+//! number** — the hop index of the schedule — checked on receive
+//! ([`frame::check_frame`]): a duplicated or reordered frame is a
+//! [`NetError::Replay`], a *gap* (the awaited frame was dropped and a
+//! later one arrived) fails immediately instead of burning the timeout,
+//! and a frame from an **older round id** is silently discarded — that is
+//! what makes round retry sound: the `TransportReducer` reruns a failed
+//! collective under a fresh round id, and the aborted attempt's leftovers
+//! are skipped, not misread ([`StagedScratch::take_skipped`] counts them).
+//!
 //! **Wire width of partial sums.** The caller passes the lane every
 //! *partial* sum provably fits. For IntSGD this is the aggregate wire
 //! type itself: each rank clips to `floor((2^{b-1}-1)/n)`, so any subset
@@ -25,15 +37,13 @@
 //! steady-state caller (the [`super::TransportReducer`]) reuses payload /
 //! frame / receive buffers across rounds.
 
-use anyhow::{anyhow, Result};
-
 use crate::compress::intvec::{IntVec, Lanes};
 
 use super::frame::{
-    add_partials, copy_partials, decode_frame, encode_frame, expect_frame, pack_partials,
-    FrameHeader, PayloadKind,
+    add_partials, check_frame, classify_round, copy_partials, decode_frame, encode_frame,
+    pack_partials, FrameCheck, FrameHeader, PayloadKind, HEADER_BYTES,
 };
-use super::Transport;
+use super::{NetError, Transport};
 
 /// Reused buffers for one endpoint's staged collectives.
 #[derive(Default)]
@@ -45,6 +55,52 @@ pub struct StagedScratch {
     /// Halving-doubling step log: (partner, keep_lo, keep_hi, give_lo,
     /// give_hi), replayed in reverse for the all-gather phase.
     steps: Vec<(usize, usize, usize, usize, usize)>,
+    /// Stale frames (older round ids, leftovers of aborted attempts)
+    /// discarded by the round/seq guard since the last `take_skipped`.
+    skipped: u64,
+}
+
+impl StagedScratch {
+    /// Read and reset the stale-frame counter (retry accounting).
+    pub fn take_skipped(&mut self) -> u64 {
+        std::mem::take(&mut self.skipped)
+    }
+}
+
+/// What one receive awaits: the `(round, seq)` guard plus the shape.
+#[derive(Clone, Copy)]
+struct Want {
+    round: u32,
+    seq: u32,
+    kind: PayloadKind,
+    elems: usize,
+}
+
+/// Receive the frame `want` describes from `from`, skipping stale frames
+/// (older round ids) and rejecting everything else with a typed error.
+/// On `Ok`, the payload is `&scratch.rx[HEADER_BYTES..]`.
+fn recv_expect(
+    t: &mut dyn Transport,
+    from: usize,
+    want: Want,
+    scratch: &mut StagedScratch,
+) -> Result<(), NetError> {
+    loop {
+        t.recv(from, &mut scratch.rx).map_err(|e| e.at_round(want.round))?;
+        match check_frame(&scratch.rx, want.round, want.seq, want.kind, want.elems) {
+            Ok(FrameCheck::Fresh) => return Ok(()),
+            Ok(FrameCheck::Stale) => {
+                scratch.skipped += 1;
+                continue;
+            }
+            Err(e) => return Err(e.with_rank(from).at_round(want.round)),
+        }
+    }
+}
+
+/// Stamp a local (frame/pack) error with this endpoint's context.
+fn local(e: NetError, rank: usize, round: u32) -> NetError {
+    e.with_rank(rank).at_round(round)
 }
 
 /// Narrowest lane provably holding every partial sum of `msgs` — the sum
@@ -73,7 +129,7 @@ pub fn ring_allreduce_ints(
     round: u32,
     scratch: &mut StagedScratch,
     out: &mut Vec<i64>,
-) -> Result<()> {
+) -> Result<(), NetError> {
     let n = t.world();
     let r = t.rank();
     let d = msg.len();
@@ -91,40 +147,49 @@ pub fn ring_allreduce_ints(
     scratch.starts.extend((0..=n).map(|c| c * d / n));
 
     // reduce-scatter: at step s, send accumulated chunk (r - s) right,
-    // fold received chunk (r - 1 - s) from the left
+    // fold received chunk (r - 1 - s) from the left; the hop index s is
+    // the frame's sequence number on the (r -> right) pair
     for s in 0..n - 1 {
         let send_c = (r + n - s) % n;
         let recv_c = (r + 2 * n - 1 - s) % n;
         let (slo, shi) = (scratch.starts[send_c], scratch.starts[send_c + 1]);
-        pack_partials(&out[slo..shi], wire, &mut scratch.payload)?;
+        pack_partials(&out[slo..shi], wire, &mut scratch.payload)
+            .map_err(|e| local(e, r, round))?;
         encode_frame(
-            FrameHeader { round, kind, elems: (shi - slo) as u32 },
+            FrameHeader { round, seq: s as u32, kind, elems: (shi - slo) as u32 },
             &scratch.payload,
             &mut scratch.frame,
         );
-        t.send(right, &scratch.frame)?;
-        t.recv(left, &mut scratch.rx)?;
+        t.send(right, &scratch.frame).map_err(|e| e.at_round(round))?;
         let (rlo, rhi) = (scratch.starts[recv_c], scratch.starts[recv_c + 1]);
-        let body = expect_frame(&scratch.rx, round, kind, rhi - rlo)?;
-        add_partials(body, wire, &mut out[rlo..rhi])?;
+        recv_expect(
+            t,
+            left,
+            Want { round, seq: s as u32, kind, elems: rhi - rlo },
+            scratch,
+        )?;
+        add_partials(&scratch.rx[HEADER_BYTES..], wire, &mut out[rlo..rhi])
+            .map_err(|e| local(e, left, round))?;
     }
     // all-gather: rank r owns the finished chunk (r + 1); circulate the
-    // finished chunks around the ring
+    // finished chunks around the ring (seq continues where phase 1 ended)
     for s in 0..n - 1 {
+        let seq = (n - 1 + s) as u32;
         let send_c = (r + 1 + n - s) % n;
         let recv_c = (r + n - s) % n;
         let (slo, shi) = (scratch.starts[send_c], scratch.starts[send_c + 1]);
-        pack_partials(&out[slo..shi], wire, &mut scratch.payload)?;
+        pack_partials(&out[slo..shi], wire, &mut scratch.payload)
+            .map_err(|e| local(e, r, round))?;
         encode_frame(
-            FrameHeader { round, kind, elems: (shi - slo) as u32 },
+            FrameHeader { round, seq, kind, elems: (shi - slo) as u32 },
             &scratch.payload,
             &mut scratch.frame,
         );
-        t.send(right, &scratch.frame)?;
-        t.recv(left, &mut scratch.rx)?;
+        t.send(right, &scratch.frame).map_err(|e| e.at_round(round))?;
         let (rlo, rhi) = (scratch.starts[recv_c], scratch.starts[recv_c + 1]);
-        let body = expect_frame(&scratch.rx, round, kind, rhi - rlo)?;
-        copy_partials(body, wire, &mut out[rlo..rhi])?;
+        recv_expect(t, left, Want { round, seq, kind, elems: rhi - rlo }, scratch)?;
+        copy_partials(&scratch.rx[HEADER_BYTES..], wire, &mut out[rlo..rhi])
+            .map_err(|e| local(e, left, round))?;
     }
     Ok(())
 }
@@ -142,7 +207,7 @@ pub fn halving_allreduce_ints(
     round: u32,
     scratch: &mut StagedScratch,
     out: &mut Vec<i64>,
-) -> Result<()> {
+) -> Result<(), NetError> {
     let n = t.world();
     if !n.is_power_of_two() {
         return ring_allreduce_ints(t, msg, wire, round, scratch, out);
@@ -158,10 +223,12 @@ pub fn halving_allreduce_ints(
     let kind = PayloadKind::of_lanes(wire);
 
     // reduce-scatter: each step, partner pairs split their common segment;
-    // each sends the half it gives up and folds the half it keeps
+    // each sends the half it gives up and folds the half it keeps. Both
+    // sides run the same step index, which doubles as the frame seq.
     scratch.steps.clear();
     let (mut lo, mut hi) = (0usize, d);
     let mut dist = n / 2;
+    let mut seq = 0u32;
     while dist >= 1 {
         let partner = r ^ dist;
         let mid = lo + (hi - lo) / 2;
@@ -170,35 +237,45 @@ pub fn halving_allreduce_ints(
         } else {
             ((mid, hi), (lo, mid))
         };
-        pack_partials(&out[give.0..give.1], wire, &mut scratch.payload)?;
+        pack_partials(&out[give.0..give.1], wire, &mut scratch.payload)
+            .map_err(|e| local(e, r, round))?;
         encode_frame(
-            FrameHeader { round, kind, elems: (give.1 - give.0) as u32 },
+            FrameHeader { round, seq, kind, elems: (give.1 - give.0) as u32 },
             &scratch.payload,
             &mut scratch.frame,
         );
-        t.send(partner, &scratch.frame)?;
-        t.recv(partner, &mut scratch.rx)?;
-        let body = expect_frame(&scratch.rx, round, kind, keep.1 - keep.0)?;
-        add_partials(body, wire, &mut out[keep.0..keep.1])?;
+        t.send(partner, &scratch.frame).map_err(|e| e.at_round(round))?;
+        recv_expect(
+            t,
+            partner,
+            Want { round, seq, kind, elems: keep.1 - keep.0 },
+            scratch,
+        )?;
+        add_partials(&scratch.rx[HEADER_BYTES..], wire, &mut out[keep.0..keep.1])
+            .map_err(|e| local(e, partner, round))?;
         scratch.steps.push((partner, keep.0, keep.1, give.0, give.1));
         lo = keep.0;
         hi = keep.1;
         dist /= 2;
+        seq += 1;
     }
     // all-gather: replay in reverse; I own my keep segment fully summed,
-    // the partner owns the give segment — exchange to own their union
+    // the partner owns the give segment — exchange to own their union.
+    // Both partners replay the identical order, so seq keeps counting up.
     for step in (0..scratch.steps.len()).rev() {
         let (partner, klo, khi, glo, ghi) = scratch.steps[step];
-        pack_partials(&out[klo..khi], wire, &mut scratch.payload)?;
+        pack_partials(&out[klo..khi], wire, &mut scratch.payload)
+            .map_err(|e| local(e, r, round))?;
         encode_frame(
-            FrameHeader { round, kind, elems: (khi - klo) as u32 },
+            FrameHeader { round, seq, kind, elems: (khi - klo) as u32 },
             &scratch.payload,
             &mut scratch.frame,
         );
-        t.send(partner, &scratch.frame)?;
-        t.recv(partner, &mut scratch.rx)?;
-        let body = expect_frame(&scratch.rx, round, kind, ghi - glo)?;
-        copy_partials(body, wire, &mut out[glo..ghi])?;
+        t.send(partner, &scratch.frame).map_err(|e| e.at_round(round))?;
+        recv_expect(t, partner, Want { round, seq, kind, elems: ghi - glo }, scratch)?;
+        copy_partials(&scratch.rx[HEADER_BYTES..], wire, &mut out[glo..ghi])
+            .map_err(|e| local(e, partner, round))?;
+        seq += 1;
     }
     Ok(())
 }
@@ -207,14 +284,15 @@ pub fn halving_allreduce_ints(
 /// NatSGD byte streams from `compress::wire`): after n-1 steps every rank
 /// holds every rank's bytes. `out[i]` receives rank i's payload into a
 /// reused buffer; payload sizes may differ per rank (the header carries
-/// each frame's own length).
+/// each frame's own length), so the guard checks `(round, seq, kind)` and
+/// takes the length from the validated header.
 pub fn ring_allgather_bytes(
     t: &mut dyn Transport,
     mine: &[u8],
     round: u32,
     scratch: &mut StagedScratch,
     out: &mut Vec<Vec<u8>>,
-) -> Result<()> {
+) -> Result<(), NetError> {
     let n = t.world();
     let r = t.rank();
     out.resize_with(n, Vec::new);
@@ -230,30 +308,59 @@ pub fn ring_allgather_bytes(
         let recv_origin = (r + 2 * n - 1 - s) % n;
         let payload = &out[send_origin];
         if payload.len() > u32::MAX as usize {
-            return Err(anyhow!("payload too large for a frame"));
+            return Err(NetError::Corrupt {
+                rank: r,
+                round,
+                detail: "payload too large for a frame".into(),
+            });
         }
         encode_frame(
             FrameHeader {
                 round,
+                seq: s as u32,
                 kind: PayloadKind::Bytes,
                 elems: payload.len() as u32,
             },
             payload,
             &mut scratch.frame,
         );
-        t.send(right, &scratch.frame)?;
-        t.recv(left, &mut scratch.rx)?;
-        let (h, body) = decode_frame(&scratch.rx)?;
-        if h.round != round || h.kind != PayloadKind::Bytes {
-            return Err(anyhow!(
-                "unexpected frame (round {}, {:?}) during all-gather round {round}",
-                h.round,
-                h.kind
-            ));
-        }
+        t.send(right, &scratch.frame).map_err(|e| e.at_round(round))?;
+        // lengths differ per origin, so validate the header first and
+        // take the payload length from it — round/stale classification is
+        // the same shared guard `check_frame` uses
+        let body_len = loop {
+            t.recv(left, &mut scratch.rx).map_err(|e| e.at_round(round))?;
+            let (h, body) =
+                decode_frame(&scratch.rx).map_err(|e| local(e, left, round))?;
+            match classify_round(h.round, round).map_err(|e| local(e, left, round))? {
+                FrameCheck::Stale => {
+                    scratch.skipped += 1;
+                    continue;
+                }
+                FrameCheck::Fresh => {}
+            }
+            if h.seq != s as u32 {
+                return Err(NetError::Replay {
+                    rank: left,
+                    round,
+                    detail: format!(
+                        "unexpected frame (seq {}, expected {s}) at all-gather step {s}",
+                        h.seq
+                    ),
+                });
+            }
+            if h.kind != PayloadKind::Bytes {
+                return Err(NetError::Corrupt {
+                    rank: left,
+                    round,
+                    detail: format!("expected Bytes payload, got {:?}", h.kind),
+                });
+            }
+            break body.len();
+        };
         let dst = &mut out[recv_origin];
         dst.clear();
-        dst.extend_from_slice(body);
+        dst.extend_from_slice(&scratch.rx[scratch.rx.len() - body_len..]);
     }
     Ok(())
 }
@@ -272,7 +379,7 @@ mod tests {
         u32,
         &mut StagedScratch,
         &mut Vec<i64>,
-    ) -> Result<()>;
+    ) -> Result<(), NetError>;
 
     /// Run one staged all-reduce across n threads and require every
     /// rank's result to be bit-identical to the leader-side fold.
@@ -305,6 +412,7 @@ mod tests {
                             algo(ep, msg, wire, round, &mut scratch, &mut out)
                                 .expect("staged all-reduce");
                         }
+                        assert_eq!(scratch.take_skipped(), 0, "no stale frames");
                         out
                     })
                 })
@@ -375,23 +483,27 @@ mod tests {
         let msgs: Vec<IntVec> =
             (0..n).map(|_| IntVec::from_i64(&[100i64; 8], Lanes::I8)).collect();
         let mut endpoints = ChannelTransport::mesh(n);
-        let errs: Vec<bool> = std::thread::scope(|s| {
+        let errs: Vec<Option<NetError>> = std::thread::scope(|s| {
             let handles: Vec<_> = endpoints
                 .iter_mut()
                 .zip(&msgs)
                 .map(|(ep, msg)| {
                     s.spawn(move || {
+                        ep.set_timeout(std::time::Duration::from_millis(200));
                         let mut scratch = StagedScratch::default();
                         let mut out = Vec::new();
                         // claim i8 although the sum reaches 200
                         ring_allreduce_ints(ep, msg, Lanes::I8, 0, &mut scratch, &mut out)
-                            .is_err()
+                            .err()
                     })
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().unwrap()).collect()
         });
-        assert!(errs.iter().any(|&e| e), "overflow went unnoticed");
+        assert!(
+            errs.iter().flatten().any(|e| matches!(e, NetError::Corrupt { .. })),
+            "overflow went unnoticed: {errs:?}"
+        );
     }
 
     #[test]
@@ -423,5 +535,60 @@ mod tests {
         let b = IntVec::from_i64(&[100], Lanes::I8);
         // 100 + 100 = 200 does not fit i8
         assert_eq!(partial_sum_lanes([&a, &b]), Lanes::I32);
+    }
+
+    #[test]
+    fn stale_frames_are_skipped_replays_are_rejected() {
+        // hand-drive a 2-rank exchange: rank 1 receives a stale frame
+        // (old round id) before the real one — skipped; then a duplicate
+        // of the real one — typed Replay error.
+        let mut mesh = ChannelTransport::mesh(2);
+        let mut b = mesh.pop().unwrap();
+        let mut a = mesh.pop().unwrap();
+        let msg = IntVec::from_i64(&[1, 2, 3, 4], Lanes::I8);
+        let mut scratch_a = StagedScratch::default();
+        let mut out = Vec::new();
+        // rank 0 first leaks a round-3 frame (an "aborted attempt"), then
+        // runs round 7 for real while rank 1 also runs round 7
+        let mut stale = Vec::new();
+        pack_partials(&[9, 9], Lanes::I8, &mut scratch_a.payload).unwrap();
+        encode_frame(
+            FrameHeader { round: 3, seq: 0, kind: PayloadKind::I8, elems: 2 },
+            &scratch_a.payload,
+            &mut stale,
+        );
+        a.send(1, &stale).unwrap();
+        std::thread::scope(|s| {
+            let msg_b = msg.clone();
+            let h = s.spawn(move || {
+                let mut scratch = StagedScratch::default();
+                let mut out = Vec::new();
+                ring_allreduce_ints(&mut b, &msg_b, Lanes::I8, 7, &mut scratch, &mut out)
+                    .expect("rank 1 must skip the stale frame");
+                (scratch.take_skipped(), out, b)
+            });
+            let msg_a = IntVec::from_i64(&[10, 20, 30, 40], Lanes::I8);
+            ring_allreduce_ints(&mut a, &msg_a, Lanes::I8, 7, &mut scratch_a, &mut out)
+                .expect("rank 0");
+            let (skipped, out_b, mut b) = h.join().unwrap();
+            assert_eq!(skipped, 1, "exactly the stale frame is discarded");
+            assert_eq!(out, out_b);
+            assert_eq!(out, vec![11, 22, 33, 44]);
+            // now a duplicate *within* the current round: replayed seq 0
+            let mut dup = Vec::new();
+            pack_partials(&[5, 5], Lanes::I8, &mut scratch_a.payload).unwrap();
+            encode_frame(
+                FrameHeader { round: 8, seq: 0, kind: PayloadKind::I8, elems: 2 },
+                &scratch_a.payload,
+                &mut dup,
+            );
+            a.send(1, &dup).unwrap();
+            a.send(1, &dup).unwrap();
+            let mut scratch = StagedScratch::default();
+            let mut out_b = Vec::new();
+            let e = ring_allreduce_ints(&mut b, &msg, Lanes::I8, 8, &mut scratch, &mut out_b)
+                .expect_err("duplicate must be rejected");
+            assert!(matches!(e, NetError::Replay { rank: 0, round: 8, .. }), "{e}");
+        });
     }
 }

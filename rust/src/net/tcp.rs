@@ -24,24 +24,29 @@
 //! also consuming, so some write in the mesh can always complete. `recv`
 //! pumps the same way while waiting, serving frames from the requested
 //! peer's inbox in arrival order and leaving other peers' frames queued.
+//!
+//! **Failure semantics** ([`super::NetError`]): EOF / reset / a closed
+//! connection is [`NetError::PeerDead`] (how a killed rank looks from the
+//! outside); a hostile length prefix is [`NetError::Corrupt`]; a deadline
+//! expiry ([`super::Transport::set_timeout`], env `INTSGD_NET_TIMEOUT_MS`,
+//! default 30 s) is [`NetError::Timeout`]; a raised abort flag ends the
+//! blocking loop as [`NetError::Aborted`] so one rank's failure does not
+//! cost the survivors a full timeout.
 
 use std::collections::VecDeque;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
-use super::Transport;
+use super::{default_io_timeout, NetError, Transport, UNKNOWN_ROUND};
 
 /// Upper bound on one frame's length prefix — a corrupt prefix must
 /// produce an error, not a multi-gigabyte allocation.
 pub const MAX_FRAME_BYTES: usize = 1 << 26; // 64 MiB
-
-/// Give up on a blocked send/recv after this long: a dead or wedged peer
-/// (e.g. a rank that panicked mid-schedule without dropping its
-/// transport) must fail the collective, not hang the surviving ranks.
-const IO_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// After this many fruitless nonblocking spins, start yielding the CPU
 /// between polls (latency-first at the start, cores-first when idle).
@@ -57,6 +62,20 @@ struct Peer {
     closed: bool,
 }
 
+fn io_error(peer: usize, what: &str, e: std::io::Error) -> NetError {
+    match e.kind() {
+        ErrorKind::ConnectionReset
+        | ErrorKind::ConnectionAborted
+        | ErrorKind::BrokenPipe
+        | ErrorKind::UnexpectedEof => NetError::PeerDead { rank: peer, round: UNKNOWN_ROUND },
+        _ => NetError::Corrupt {
+            rank: peer,
+            round: UNKNOWN_ROUND,
+            detail: format!("socket {what}: {e}"),
+        },
+    }
+}
+
 impl Peer {
     fn new(stream: TcpStream) -> Result<Peer> {
         stream.set_nodelay(true).context("set_nodelay")?;
@@ -66,7 +85,8 @@ impl Peer {
 
     /// Drain whatever the kernel has buffered for this peer (one pass of
     /// nonblocking reads), slicing complete frames into the inbox.
-    fn pump(&mut self) -> Result<()> {
+    /// `peer_rank` only labels errors.
+    fn pump(&mut self, peer_rank: usize) -> Result<(), NetError> {
         if self.closed {
             return Ok(());
         }
@@ -82,7 +102,25 @@ impl Peer {
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-                Err(e) => return Err(anyhow!("socket read: {e}")),
+                // A connection-fatal error (RST from a killed peer) is
+                // this stream's EOF, not the caller's problem: pumping is
+                // collateral draining, and failing an *unrelated*
+                // send/recv here would keep re-failing the survivors long
+                // after the dead rank left the world. Mark the peer
+                // closed; operations that address IT get PeerDead.
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        ErrorKind::ConnectionReset
+                            | ErrorKind::ConnectionAborted
+                            | ErrorKind::BrokenPipe
+                            | ErrorKind::UnexpectedEof
+                    ) =>
+                {
+                    self.closed = true;
+                    break;
+                }
+                Err(e) => return Err(io_error(peer_rank, "read", e)),
             }
         }
         // Slice complete frames off with a cursor and drain the consumed
@@ -114,9 +152,13 @@ impl Peer {
             self.rbuf.drain(..consumed);
         }
         if let Some(len) = bad_prefix {
-            return Err(anyhow!(
-                "frame length prefix {len} exceeds the {MAX_FRAME_BYTES}-byte cap"
-            ));
+            return Err(NetError::Corrupt {
+                rank: peer_rank,
+                round: UNKNOWN_ROUND,
+                detail: format!(
+                    "frame length prefix {len} exceeds the {MAX_FRAME_BYTES}-byte cap"
+                ),
+            });
         }
         Ok(())
     }
@@ -127,6 +169,9 @@ pub struct TcpTransport {
     peers: Vec<Option<Peer>>,
     /// Staging buffer for the length-prefixed write (reused per send).
     wbuf: Vec<u8>,
+    /// Give up on a blocked send/recv after this long.
+    timeout: Duration,
+    abort: Option<Arc<AtomicBool>>,
 }
 
 impl TcpTransport {
@@ -184,15 +229,23 @@ impl TcpTransport {
         Ok(peers
             .into_iter()
             .enumerate()
-            .map(|(rank, peers)| TcpTransport { rank, peers, wbuf: Vec::new() })
+            .map(|(rank, peers)| TcpTransport {
+                rank,
+                peers,
+                wbuf: Vec::new(),
+                timeout: default_io_timeout(),
+                abort: None,
+            })
             .collect())
     }
 
     /// One nonblocking drain pass over every connected peer — the
     /// progress guarantee both `send` and `recv` lean on.
-    fn pump_all(peers: &mut [Option<Peer>]) -> Result<()> {
-        for peer in peers.iter_mut().flatten() {
-            peer.pump()?;
+    fn pump_all(peers: &mut [Option<Peer>]) -> Result<(), NetError> {
+        for (rank, peer) in peers.iter_mut().enumerate() {
+            if let Some(peer) = peer {
+                peer.pump(rank)?;
+            }
         }
         Ok(())
     }
@@ -202,6 +255,10 @@ impl TcpTransport {
         if *spins > SPIN_BEFORE_YIELD {
             std::thread::yield_now();
         }
+    }
+
+    fn aborted(&self) -> bool {
+        self.abort.as_ref().is_some_and(|f| f.load(Ordering::Relaxed))
     }
 }
 
@@ -214,18 +271,22 @@ impl Transport for TcpTransport {
         self.peers.len()
     }
 
-    fn send(&mut self, to: usize, frame: &[u8]) -> Result<()> {
+    fn send(&mut self, to: usize, frame: &[u8]) -> Result<(), NetError> {
         assert!(to != self.rank, "rank {} sending to itself", self.rank);
         if frame.len() > MAX_FRAME_BYTES {
-            return Err(anyhow!(
-                "frame of {} bytes exceeds the {MAX_FRAME_BYTES}-byte cap",
-                frame.len()
-            ));
+            return Err(NetError::Corrupt {
+                rank: to,
+                round: UNKNOWN_ROUND,
+                detail: format!(
+                    "frame of {} bytes exceeds the {MAX_FRAME_BYTES}-byte cap",
+                    frame.len()
+                ),
+            });
         }
         self.wbuf.clear();
         self.wbuf.extend_from_slice(&(frame.len() as u32).to_le_bytes());
         self.wbuf.extend_from_slice(frame);
-        let deadline = Instant::now() + IO_TIMEOUT;
+        let deadline = Instant::now() + self.timeout;
         let mut written = 0usize;
         let mut spins = 0u32;
         while written < self.wbuf.len() {
@@ -233,28 +294,29 @@ impl Transport for TcpTransport {
                 .as_mut()
                 .unwrap_or_else(|| panic!("no stream to rank {to}"));
             match peer.stream.write(&self.wbuf[written..]) {
-                Ok(0) => return Err(anyhow!("rank {to} closed the connection")),
+                Ok(0) => return Err(NetError::PeerDead { rank: to, round: UNKNOWN_ROUND }),
                 Ok(k) => written += k,
                 Err(e) if e.kind() == ErrorKind::WouldBlock => {
                     // backpressure: drain inbound so the mesh keeps moving
                     Self::pump_all(&mut self.peers)?;
+                    if self.aborted() {
+                        return Err(NetError::Aborted { rank: to, round: UNKNOWN_ROUND });
+                    }
                     if Instant::now() > deadline {
-                        return Err(anyhow!(
-                            "timed out sending to rank {to} (peer not draining)"
-                        ));
+                        return Err(NetError::Timeout { rank: to, round: UNKNOWN_ROUND });
                     }
                     Self::backoff(&mut spins);
                 }
                 Err(e) if e.kind() == ErrorKind::Interrupted => {}
-                Err(e) => return Err(anyhow!("socket write to rank {to}: {e}")),
+                Err(e) => return Err(io_error(to, "write", e)),
             }
         }
         Ok(())
     }
 
-    fn recv(&mut self, from: usize, out: &mut Vec<u8>) -> Result<()> {
+    fn recv(&mut self, from: usize, out: &mut Vec<u8>) -> Result<(), NetError> {
         assert!(from != self.rank, "rank {} receiving from itself", self.rank);
-        let deadline = Instant::now() + IO_TIMEOUT;
+        let deadline = Instant::now() + self.timeout;
         let mut spins = 0u32;
         loop {
             {
@@ -268,15 +330,26 @@ impl Transport for TcpTransport {
                     return Ok(());
                 }
                 if peer.closed {
-                    return Err(anyhow!("rank {from} closed the connection"));
+                    return Err(NetError::PeerDead { rank: from, round: UNKNOWN_ROUND });
                 }
             }
             Self::pump_all(&mut self.peers)?;
+            if self.aborted() {
+                return Err(NetError::Aborted { rank: from, round: UNKNOWN_ROUND });
+            }
             if Instant::now() > deadline {
-                return Err(anyhow!("timed out waiting on a frame from rank {from}"));
+                return Err(NetError::Timeout { rank: from, round: UNKNOWN_ROUND });
             }
             Self::backoff(&mut spins);
         }
+    }
+
+    fn set_timeout(&mut self, timeout: Duration) {
+        self.timeout = timeout;
+    }
+
+    fn set_abort(&mut self, flag: Arc<AtomicBool>) {
+        self.abort = Some(flag);
     }
 }
 
@@ -304,17 +377,34 @@ mod tests {
         drop(a);
         let mut b = b;
         let err = b.recv(0, &mut Vec::new()).expect_err("cap must trip");
+        assert!(matches!(err, NetError::Corrupt { rank: 0, .. }), "{err}");
         assert!(err.to_string().contains("cap"), "{err}");
     }
 
     #[test]
-    fn closed_peer_errors_instead_of_hanging() {
+    fn closed_peer_is_peer_dead_instead_of_hanging() {
         let mut mesh = TcpTransport::loopback_mesh(2).unwrap();
         let b = mesh.pop().unwrap();
         let mut a = mesh.pop().unwrap();
         drop(b);
         let err = a.recv(1, &mut Vec::new()).expect_err("EOF must surface");
+        assert!(err.is_peer_dead(), "{err}");
         assert!(err.to_string().contains("closed"), "{err}");
+    }
+
+    #[test]
+    fn recv_timeout_is_typed_and_configurable() {
+        let mut mesh = TcpTransport::loopback_mesh(2).unwrap();
+        let _b = mesh.pop().unwrap(); // alive but silent
+        let mut a = mesh.pop().unwrap();
+        a.set_timeout(Duration::from_millis(40));
+        let t0 = Instant::now();
+        let err = a.recv(1, &mut Vec::new()).expect_err("deadline must expire");
+        assert_eq!(err, NetError::Timeout { rank: 1, round: UNKNOWN_ROUND });
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "stalled rank burned more than the configured timeout"
+        );
     }
 
     #[test]

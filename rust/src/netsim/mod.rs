@@ -133,12 +133,31 @@ impl Network {
         n: usize,
         comm_measured: f64,
     ) -> RoundBreakdown {
+        self.round_breakdown_net(result, n, comm_measured, 0)
+    }
+
+    /// [`Network::round_breakdown_measured`] plus the transport's
+    /// fault/retry account: `comm_retries` is how many collective
+    /// attempts were retried this round
+    /// (`net::TransportReducer::take_retries`). The model column prices a
+    /// fault-free fabric, so on a faulted round the measured column is
+    /// *expected* to exceed it by roughly `1 + retries / collectives` —
+    /// the breakdown makes that visible instead of letting injected
+    /// chaos masquerade as model drift.
+    pub fn round_breakdown_net(
+        &self,
+        result: &RoundResult,
+        n: usize,
+        comm_measured: f64,
+        comm_retries: u64,
+    ) -> RoundBreakdown {
         RoundBreakdown {
             encode: result.encode_seconds,
             reduce: result.reduce_seconds,
             decode: result.decode_seconds,
             comm_model: self.comm_seconds(&result.comm, n),
             comm_measured,
+            comm_retries,
         }
     }
 }
@@ -154,6 +173,9 @@ pub struct RoundBreakdown {
     /// the round ran on an in-process reducer — the model then stands in
     /// for a fabric that was never exercised).
     pub comm_measured: f64,
+    /// Collective attempts retried this round after recoverable faults
+    /// (0 on a healthy fabric or an in-process reducer).
+    pub comm_retries: u64,
 }
 
 impl RoundBreakdown {
@@ -253,9 +275,15 @@ mod tests {
         assert!((b.comm_model - model).abs() < 1e-15);
         // in-process reducers have no measured wire column
         assert_eq!(b.comm_measured, 0.0);
+        assert_eq!(b.comm_retries, 0);
         let m = net.round_breakdown_measured(&r, 8, 0.5);
         assert_eq!(m.comm_measured, 0.5);
         assert!((m.comm_model - model).abs() < 1e-15);
+        // fault/retry accounting rides the same breakdown
+        let f = net.round_breakdown_net(&r, 8, 0.7, 3);
+        assert_eq!(f.comm_retries, 3);
+        assert_eq!(f.comm_measured, 0.7);
+        assert_eq!(f.overhead(), 4.0);
     }
 
     #[test]

@@ -9,9 +9,28 @@ use crate::coordinator::RoundCtx;
 
 /// A rule producing the shared scale alpha_k (or one scale per parameter
 /// block for the Alg. 2 variant).
+///
+/// **Round idempotence.** Stateful rules update their moving averages at
+/// most once per `ctx.round`: a second call with the same round (a
+/// failover re-plans the round after the world shrank, possibly with a
+/// different `ctx.n`) recomputes alpha from the *same* state instead of
+/// decaying it twice — otherwise a failed-over run would diverge from a
+/// fresh run at the smaller n, which `tests/chaos.rs` pins.
 pub trait AlphaRule: Send {
     /// Scalar alpha for the whole gradient.
     fn alpha(&mut self, ctx: &RoundCtx) -> f64;
+
+    /// Serialize the rule's state for checkpoint v2 (None = stateless).
+    /// The encoding is rule-private; only [`AlphaRule::import_state`] of
+    /// the same rule needs to read it.
+    fn export_state(&self) -> Option<Vec<f64>> {
+        None
+    }
+
+    /// Restore state saved by [`AlphaRule::export_state`].
+    fn import_state(&mut self, _state: &[f64]) -> anyhow::Result<()> {
+        Err(anyhow::anyhow!("this alpha rule carries no state"))
+    }
 
     /// Per-block alphas written into a reused buffer (default: the scalar
     /// broadcast over all blocks). This is the engine's entry point — it
@@ -44,12 +63,15 @@ pub struct MovingAverageRule {
     pub eps: f64,
     r: f64,
     initialized: bool,
+    /// Last round whose step norm was folded into `r` (round idempotence:
+    /// a failover re-plan must not decay the average twice).
+    last_round: Option<usize>,
 }
 
 impl MovingAverageRule {
     pub fn new(beta: f64, eps: f64) -> Self {
         assert!((0.0..1.0).contains(&beta), "beta must be in [0,1)");
-        MovingAverageRule { beta, eps, r: 0.0, initialized: false }
+        MovingAverageRule { beta, eps, r: 0.0, initialized: false, last_round: None }
     }
 
     pub fn default_paper() -> Self {
@@ -57,21 +79,54 @@ impl MovingAverageRule {
     }
 }
 
+/// Shared Option<usize> <-> f64 encoding for the rules' checkpoint state
+/// (usize rounds are far below 2^53, so the f64 is exact; -1 = None).
+fn round_to_f64(r: Option<usize>) -> f64 {
+    r.map(|k| k as f64).unwrap_or(-1.0)
+}
+
+fn round_from_f64(x: f64) -> Option<usize> {
+    (x >= 0.0).then_some(x as usize)
+}
+
 impl AlphaRule for MovingAverageRule {
     fn alpha(&mut self, ctx: &RoundCtx) -> f64 {
-        // Warm-start the average at the first observed step so early alphas
-        // are not dominated by the zero initialisation.
-        if !self.initialized {
-            self.r = ctx.step_norm_sq;
-            self.initialized = true;
-        } else {
-            self.r = self.beta * self.r + (1.0 - self.beta) * ctx.step_norm_sq;
+        // Fold each round's step norm in exactly once; a repeated call
+        // for the same round (failover re-plan) reuses the state.
+        if self.last_round != Some(ctx.round) {
+            // Warm-start the average at the first observed step so early
+            // alphas are not dominated by the zero initialisation.
+            if !self.initialized {
+                self.r = ctx.step_norm_sq;
+                self.initialized = true;
+            } else {
+                self.r = self.beta * self.r + (1.0 - self.beta) * ctx.step_norm_sq;
+            }
+            self.last_round = Some(ctx.round);
         }
         let eta = ctx.lr as f64;
         let denom = (2.0 * ctx.n as f64 * self.r / (eta * eta)
             + self.eps * self.eps)
             .sqrt();
         (ctx.d as f64).sqrt() / denom
+    }
+
+    fn export_state(&self) -> Option<Vec<f64>> {
+        Some(vec![
+            self.r,
+            if self.initialized { 1.0 } else { 0.0 },
+            round_to_f64(self.last_round),
+        ])
+    }
+
+    fn import_state(&mut self, state: &[f64]) -> anyhow::Result<()> {
+        if state.len() != 3 {
+            anyhow::bail!("moving-average state has {} values, expected 3", state.len());
+        }
+        self.r = state[0];
+        self.initialized = state[1] != 0.0;
+        self.last_round = round_from_f64(state[2]);
+        Ok(())
     }
 
     fn name(&self) -> String {
@@ -108,11 +163,13 @@ pub struct BlockRule {
     pub eps: f64,
     r: Vec<f64>,
     initialized: bool,
+    /// Round idempotence, as [`MovingAverageRule::last_round`].
+    last_round: Option<usize>,
 }
 
 impl BlockRule {
     pub fn new(beta: f64, eps: f64) -> Self {
-        BlockRule { beta, eps, r: Vec::new(), initialized: false }
+        BlockRule { beta, eps, r: Vec::new(), initialized: false, last_round: None }
     }
 }
 
@@ -124,20 +181,43 @@ impl AlphaRule for BlockRule {
         alphas.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    fn export_state(&self) -> Option<Vec<f64>> {
+        let mut state = vec![
+            if self.initialized { 1.0 } else { 0.0 },
+            round_to_f64(self.last_round),
+        ];
+        state.extend_from_slice(&self.r);
+        Some(state)
+    }
+
+    fn import_state(&mut self, state: &[f64]) -> anyhow::Result<()> {
+        if state.len() < 2 {
+            anyhow::bail!("block-rule state has {} values, expected >= 2", state.len());
+        }
+        self.initialized = state[0] != 0.0;
+        self.last_round = round_from_f64(state[1]);
+        self.r = state[2..].to_vec();
+        Ok(())
+    }
+
     fn block_alphas_into(&mut self, ctx: &RoundCtx, out: &mut Vec<f64>) {
         if self.r.len() != ctx.blocks.len() {
             self.r = vec![0.0; ctx.blocks.len()];
             self.initialized = false;
+            self.last_round = None;
         }
-        if !self.initialized {
-            for (r, b) in self.r.iter_mut().zip(&ctx.blocks) {
-                *r = b.step_norm_sq;
+        if self.last_round != Some(ctx.round) {
+            if !self.initialized {
+                for (r, b) in self.r.iter_mut().zip(&ctx.blocks) {
+                    *r = b.step_norm_sq;
+                }
+                self.initialized = true;
+            } else {
+                for (r, b) in self.r.iter_mut().zip(&ctx.blocks) {
+                    *r = self.beta * *r + (1.0 - self.beta) * b.step_norm_sq;
+                }
             }
-            self.initialized = true;
-        } else {
-            for (r, b) in self.r.iter_mut().zip(&ctx.blocks) {
-                *r = self.beta * *r + (1.0 - self.beta) * b.step_norm_sq;
-            }
+            self.last_round = Some(ctx.round);
         }
         let eta = ctx.lr as f64;
         let d = ctx.d as f64;
@@ -168,15 +248,19 @@ mod tests {
     use crate::prop_assert;
     use crate::util::prop::prop_check;
 
-    fn ctx(d: usize, n: usize, lr: f32, step_sq: f64) -> RoundCtx {
+    fn ctx_at(round: usize, d: usize, n: usize, lr: f32, step_sq: f64) -> RoundCtx {
         RoundCtx {
-            round: 1,
+            round,
             n,
             d,
             lr,
             step_norm_sq: step_sq,
             blocks: vec![BlockInfo { dim: d, step_norm_sq: step_sq }],
         }
+    }
+
+    fn ctx(d: usize, n: usize, lr: f32, step_sq: f64) -> RoundCtx {
+        ctx_at(1, d, n, lr, step_sq)
     }
 
     #[test]
@@ -201,13 +285,74 @@ mod tests {
     #[test]
     fn moving_average_decays_towards_new_steps() {
         let mut rule = MovingAverageRule::new(0.9, 0.0);
-        let mut a_prev = rule.alpha(&ctx(100, 4, 0.1, 1.0));
+        let mut a_prev = rule.alpha(&ctx_at(0, 100, 4, 0.1, 1.0));
         // step norms shrink => alpha should grow monotonically
         for k in 1..20 {
-            let a = rule.alpha(&ctx(100, 4, 0.1, 1.0 / (1 << k) as f64));
+            let a = rule.alpha(&ctx_at(k, 100, 4, 0.1, 1.0 / (1 << k) as f64));
             assert!(a > a_prev, "alpha should grow as steps shrink");
             a_prev = a;
         }
+    }
+
+    #[test]
+    fn replanning_the_same_round_is_idempotent() {
+        // A failover re-plans the round after the world shrank: the moving
+        // average must fold each round's step in exactly once, and the
+        // recomputed alpha must match a fresh rule that saw the same
+        // history at the smaller n.
+        let mut rule = MovingAverageRule::new(0.9, 1e-8);
+        let _ = rule.alpha(&ctx_at(0, 100, 4, 0.1, 0.5));
+        let a1 = rule.alpha(&ctx_at(1, 100, 4, 0.1, 0.25));
+        // re-plan round 1 at n = 3 (rank died): same r, new n
+        let a1_shrunk = rule.alpha(&ctx_at(1, 100, 3, 0.1, 0.25));
+        assert_ne!(a1.to_bits(), a1_shrunk.to_bits(), "n must enter the formula");
+        // a fresh rule with identical history at n = 3 agrees bit for bit
+        let mut fresh = MovingAverageRule::new(0.9, 1e-8);
+        let _ = fresh.alpha(&ctx_at(0, 100, 4, 0.1, 0.5));
+        let b1 = fresh.alpha(&ctx_at(1, 100, 3, 0.1, 0.25));
+        assert_eq!(a1_shrunk.to_bits(), b1.to_bits());
+        // and a third call with the same round still does not decay r
+        assert_eq!(rule.alpha(&ctx_at(1, 100, 3, 0.1, 0.25)).to_bits(), b1.to_bits());
+    }
+
+    #[test]
+    fn rule_state_roundtrips_through_export() {
+        let mut rule = MovingAverageRule::new(0.9, 1e-8);
+        for k in 0..5 {
+            let _ = rule.alpha(&ctx_at(k, 64, 4, 0.1, 0.1 * (k + 1) as f64));
+        }
+        let state = rule.export_state().unwrap();
+        let mut back = MovingAverageRule::new(0.9, 1e-8);
+        back.import_state(&state).unwrap();
+        let a = rule.alpha(&ctx_at(5, 64, 4, 0.1, 0.33));
+        let b = back.alpha(&ctx_at(5, 64, 4, 0.1, 0.33));
+        assert_eq!(a.to_bits(), b.to_bits());
+
+        let mut block = BlockRule::new(0.9, 1e-8);
+        let blocks = vec![
+            BlockInfo { dim: 32, step_norm_sq: 0.5 },
+            BlockInfo { dim: 32, step_norm_sq: 0.1 },
+        ];
+        let cx = |round: usize| RoundCtx {
+            round,
+            n: 4,
+            d: 64,
+            lr: 0.1,
+            step_norm_sq: 0.6,
+            blocks: blocks.clone(),
+        };
+        for k in 0..5 {
+            let _ = block.block_alphas(&cx(k));
+        }
+        let state = block.export_state().unwrap();
+        let mut back = BlockRule::new(0.9, 1e-8);
+        back.import_state(&state).unwrap();
+        assert_eq!(block.block_alphas(&cx(5)), back.block_alphas(&cx(5)));
+
+        // malformed state is a typed error, not garbage
+        assert!(back.import_state(&[1.0]).is_err());
+        assert!(MovingAverageRule::new(0.9, 1e-8).import_state(&[1.0]).is_err());
+        assert!(Prop3Rule.export_state().is_none());
     }
 
     #[test]
@@ -226,7 +371,7 @@ mod tests {
             for k in 0..10 {
                 let step_sq = rng.uniform() * 10.0;
                 let lr = 0.01 + rng.uniform_f32();
-                let c = ctx(d, n, lr, step_sq);
+                let c = ctx_at(k, d, n, lr, step_sq);
                 let alpha = rule.alpha(&c);
                 if first {
                     r_manual = step_sq;

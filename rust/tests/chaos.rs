@@ -1,0 +1,423 @@
+//! Chaos suite: failure is a first-class, tested scenario.
+//!
+//! The invariants pinned here are the ones IntSGD's convergence proof
+//! actually needs (ISSUE 4):
+//!
+//! 1. **Chaos parity** — end-to-end training over a `FaultTransport`
+//!    injecting seeded recoverable faults (drop / duplicate / corrupt /
+//!    truncate / delay) is **bitwise-identical** to the fault-free run:
+//!    the reducer retries failed collectives from the unchanged rank
+//!    messages, and integer collectives are exact, so a retried round IS
+//!    the unfaulted round.
+//! 2. **Survivor-world parity** — when a rank dies for good, the world
+//!    shrinks and training continues; from the failover round on, the
+//!    run is bitwise-identical to a fresh run at the smaller n started
+//!    from the failover state (alpha-rule round idempotence + the dead
+//!    rank leaving the average).
+//! 3. **Bit-exact resume** — a v2 checkpoint (params, previous params,
+//!    scaling-rule moving average, EF residuals, encoder RNG streams)
+//!    restores a run that is bitwise-equal to never having stopped —
+//!    including the *stochastic* rounding stream and EF-SignSGD's
+//!    residual memory, both of which checkpoint v1 silently dropped.
+//!
+//! Everything runs over `ChannelTransport` (tier-1: no sockets, fully
+//! deterministic); `tests/net_loopback.rs` covers the TCP kill/timeout
+//! side.
+
+use std::time::Duration;
+
+use intsgd::compress::intsgd::{IntSgd, Rounding, WireInt};
+use intsgd::compress::{PhasedCompressor, RoundEngine, SignSgd};
+use intsgd::coordinator::net_driver::quad_pool;
+use intsgd::coordinator::{Coordinator, LrSchedule, TrainConfig, TrainResult};
+use intsgd::net::{
+    ChannelTransport, FaultPlan, FaultTransport, KillAt, StagedAlgo, TransportReducer,
+};
+use intsgd::netsim::Network;
+use intsgd::scaling::MovingAverageRule;
+
+fn intsgd_engine(rounding: Rounding, n: usize, seed: u64) -> RoundEngine {
+    RoundEngine::new(Box::new(IntSgd::new(
+        rounding,
+        WireInt::Int8,
+        Box::new(MovingAverageRule::default_paper()),
+        n,
+        seed,
+    )))
+}
+
+fn cfg(rounds: usize, start_round: usize, lr: f32) -> TrainConfig {
+    TrainConfig {
+        rounds,
+        start_round,
+        schedule: LrSchedule::constant(lr),
+        ..Default::default()
+    }
+}
+
+/// Bitwise comparison of two runs' record streams + final params.
+fn assert_runs_identical(a: &TrainResult, b: &TrainResult, label: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{label}: round counts differ");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.round, rb.round, "{label}");
+        assert_eq!(
+            ra.train_loss.to_bits(),
+            rb.train_loss.to_bits(),
+            "{label}: loss differs at round {}",
+            ra.round
+        );
+        assert_eq!(
+            ra.alpha.to_bits(),
+            rb.alpha.to_bits(),
+            "{label}: alpha differs at round {}",
+            ra.round
+        );
+        assert_eq!(
+            ra.max_abs_int, rb.max_abs_int,
+            "{label}: max_abs_int differs at round {}",
+            ra.round
+        );
+        assert_eq!(
+            ra.wire_bytes_per_worker, rb.wire_bytes_per_worker,
+            "{label}: wire bytes differ at round {}",
+            ra.round
+        );
+    }
+    assert_eq!(a.final_params, b.final_params, "{label}: final params diverge");
+}
+
+// --- 1. chaos parity -------------------------------------------------------
+
+#[test]
+fn chaos_training_under_recoverable_faults_is_bitwise_identical() {
+    let n = 3;
+    let d = 256;
+    let rounds = 12;
+    let seed = 500;
+
+    // reference: clean channel fabric
+    let mut pool_a = quad_pool(n, d, seed, 0.01);
+    let mut coord_a = Coordinator::new(vec![0.0; d], vec![d], Network::paper_cluster());
+    let mut engine_a = intsgd_engine(Rounding::Stochastic, n, 71);
+    let mut red_a = TransportReducer::channel_mesh(n, StagedAlgo::Ring);
+    let res_a =
+        coord_a.train_over(&mut pool_a, &mut engine_a, &mut red_a, &cfg(rounds, 0, 0.3), None);
+    pool_a.shutdown();
+    assert_eq!(red_a.retries(), 0, "clean fabric must not retry");
+
+    // chaos: the same job over a seeded fault injector
+    let mut plan = FaultPlan::clean(0xC0FFEE);
+    plan.drop_p = 0.015;
+    plan.dup_p = 0.02;
+    plan.corrupt_p = 0.03;
+    plan.truncate_p = 0.015;
+    plan.delay_p = 0.01;
+    let mesh = FaultTransport::wrap_mesh(ChannelTransport::mesh(n), &plan, None);
+    let mut red_b = TransportReducer::new(mesh, StagedAlgo::Ring);
+    red_b.set_timeout(Duration::from_millis(250));
+    red_b.set_max_retries(64);
+    let mut pool_b = quad_pool(n, d, seed, 0.01);
+    let mut coord_b = Coordinator::new(vec![0.0; d], vec![d], Network::paper_cluster());
+    let mut engine_b = intsgd_engine(Rounding::Stochastic, n, 71);
+    let res_b =
+        coord_b.train_over(&mut pool_b, &mut engine_b, &mut red_b, &cfg(rounds, 0, 0.3), None);
+    pool_b.shutdown();
+
+    // the fault plan actually fired, and retry erased every trace of it
+    assert!(red_b.retries() > 0, "no fault ever fired — weaken the plan's seed");
+    assert!(red_b.stale_skipped() > 0 || red_b.retries() > 0);
+    assert!(res_b.failovers.is_empty(), "recoverable faults must not shrink the world");
+    assert_runs_identical(&res_a, &res_b, "chaos parity");
+}
+
+/// Seeded fault matrix at the collective level: across a grid of world
+/// sizes and fault mixes, the retried staged reduce always lands on the
+/// serial fold's exact bits.
+#[test]
+fn chaos_fault_matrix_reduces_to_the_exact_sum() {
+    use intsgd::compress::engine::{Message, PassPlan, RankEncoder, RankMessages};
+    use intsgd::compress::engine::{Reducer, SerialReducer};
+    use intsgd::compress::intvec::{IntVec, Lanes};
+    use intsgd::util::Rng;
+
+    struct Fixed {
+        msg: Message,
+    }
+    impl RankEncoder for Fixed {
+        fn encode(&mut self, _grad: &[f32], _plan: &PassPlan) {}
+        fn message(&self) -> &Message {
+            &self.msg
+        }
+    }
+
+    for (case, &(n, drop, dup, corrupt, truncate, delay)) in [
+        (2usize, 0.04, 0.0, 0.0, 0.0, 0.0), // pure drops
+        (3, 0.0, 0.05, 0.0, 0.0, 0.0),      // pure duplicates
+        (4, 0.0, 0.0, 0.04, 0.0, 0.0),      // pure corruption
+        (3, 0.0, 0.0, 0.0, 0.05, 0.0),      // pure truncation
+        (3, 0.0, 0.0, 0.0, 0.0, 0.05),      // pure delays (reorders)
+        (4, 0.01, 0.01, 0.01, 0.01, 0.01),  // everything at once
+    ]
+    .iter()
+    .enumerate()
+    {
+        let d = 200;
+        let mut rng = Rng::new(900 + case as u64);
+        let encs: Vec<Box<dyn RankEncoder>> = (0..n)
+            .map(|_| {
+                let vals: Vec<i64> =
+                    (0..d).map(|_| rng.below(21) as i64 - 10).collect();
+                Box::new(Fixed { msg: Message::Ints(IntVec::from_i64(&vals, Lanes::I8)) })
+                    as Box<dyn RankEncoder>
+            })
+            .collect();
+        let msgs = RankMessages::new(&encs);
+        let mut want = Vec::new();
+        SerialReducer.sum_ints(&msgs, &mut want).unwrap();
+
+        let plan = FaultPlan {
+            seed: 4242 + case as u64,
+            drop_p: drop,
+            dup_p: dup,
+            corrupt_p: corrupt,
+            truncate_p: truncate,
+            delay_p: delay,
+        };
+        let mesh = FaultTransport::wrap_mesh(ChannelTransport::mesh(n), &plan, None);
+        let mut red = TransportReducer::new(mesh, StagedAlgo::Ring);
+        red.set_timeout(Duration::from_millis(250));
+        red.set_max_retries(64);
+        let mut got = Vec::new();
+        for round in 0..4 {
+            red.sum_ints(&msgs, &mut got)
+                .unwrap_or_else(|e| panic!("case {case} round {round}: {e}"));
+            assert_eq!(got, want, "case {case} round {round}: wrong bits");
+        }
+    }
+}
+
+// --- 2. survivor-world parity ----------------------------------------------
+
+#[test]
+fn chaos_failover_matches_a_fresh_run_at_the_smaller_world() {
+    let n = 4;
+    let d = 128;
+    let rounds = 10;
+    let kill_training_round = 5; // collective id 4 (round 0 is dense)
+    let seed = 600;
+    let lr = 0.3;
+
+    // Run A: rank 3 (the last — survivors keep their oracle seeds) dies
+    // mid-collective in training round 5; the world shrinks to 3 and the
+    // run finishes. Stochastic rounding on purpose: the failover
+    // re-encode reuses the round-keyed counter base, so even the random
+    // integer streams must line up with the fresh smaller-world run.
+    let mesh = FaultTransport::wrap_mesh(
+        ChannelTransport::mesh(n),
+        &FaultPlan::clean(7),
+        Some((3, KillAt::Round(kill_training_round as u32 - 1))),
+    );
+    let mut red_a = TransportReducer::new(mesh, StagedAlgo::Ring);
+    red_a.set_timeout(Duration::from_millis(400));
+    let mut pool_a = quad_pool(n, d, seed, 0.0);
+    let mut coord_a = Coordinator::new(vec![0.0; d], vec![d], Network::paper_cluster());
+    let mut engine_a = intsgd_engine(Rounding::Stochastic, n, 81);
+    let res_a =
+        coord_a.train_over(&mut pool_a, &mut engine_a, &mut red_a, &cfg(rounds, 0, lr), None);
+    pool_a.shutdown();
+    assert_eq!(res_a.failovers, vec![(kill_training_round, 3)]);
+    assert_eq!(red_a.world(), n - 1);
+    assert_eq!(res_a.records.len(), rounds);
+
+    // Reference prefix: the clean n=4 run up to the failover round is
+    // bit-identical to run A's (the fault fires only in round 5), and its
+    // snapshot is the state run A failed over FROM.
+    let mut pool_p = quad_pool(n, d, seed, 0.0);
+    let mut coord_p = Coordinator::new(vec![0.0; d], vec![d], Network::paper_cluster());
+    let mut engine_p = intsgd_engine(Rounding::Stochastic, n, 81);
+    let res_p = coord_p.train_over(
+        &mut pool_p,
+        &mut engine_p,
+        &mut TransportReducer::channel_mesh(n, StagedAlgo::Ring),
+        &cfg(kill_training_round, 0, lr),
+        None,
+    );
+    pool_p.shutdown();
+    for (ra, rp) in res_a.records.iter().zip(&res_p.records) {
+        assert_eq!(ra.train_loss.to_bits(), rp.train_loss.to_bits(), "prefix diverges");
+    }
+    let mut ck = coord_p
+        .snapshot(&mut engine_p, kill_training_round as u64)
+        .expect("snapshot");
+    // the dead rank's per-rank state dies with it: keep the survivors'
+    ck.rng_streams.truncate(n - 1);
+
+    // Run B: a fresh 3-rank world resumed from the failover state.
+    let mut pool_b = quad_pool(n - 1, d, seed, 0.0);
+    let mut coord_b = Coordinator::new(vec![0.0; d], vec![d], Network::paper_cluster());
+    let mut engine_b = intsgd_engine(Rounding::Stochastic, n - 1, 81);
+    coord_b
+        .restore(&mut engine_b, n - 1, &ck)
+        .expect("restore into the survivor world");
+    let res_b = coord_b.train_over(
+        &mut pool_b,
+        &mut engine_b,
+        &mut TransportReducer::channel_mesh(n - 1, StagedAlgo::Ring),
+        &cfg(rounds, kill_training_round, lr),
+        None,
+    );
+    pool_b.shutdown();
+
+    // from the failover round on, run A IS the fresh smaller-world run
+    assert_eq!(res_b.records.len(), rounds - kill_training_round);
+    for (ra, rb) in res_a.records[kill_training_round..].iter().zip(&res_b.records) {
+        assert_eq!(ra.round, rb.round);
+        assert_eq!(
+            ra.train_loss.to_bits(),
+            rb.train_loss.to_bits(),
+            "survivor parity: loss differs at round {}",
+            ra.round
+        );
+        assert_eq!(
+            ra.alpha.to_bits(),
+            rb.alpha.to_bits(),
+            "survivor parity: alpha differs at round {}",
+            ra.round
+        );
+        assert_eq!(ra.max_abs_int, rb.max_abs_int, "round {}", ra.round);
+    }
+    assert_eq!(res_a.final_params, res_b.final_params, "survivor worlds diverge");
+}
+
+// --- 3. bit-exact resume ----------------------------------------------------
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("intsgd_chaos_{name}_{}", std::process::id()))
+}
+
+#[test]
+fn chaos_v2_resume_is_bitwise_equal_to_an_uninterrupted_run() {
+    // stochastic IntSGD: the hardest case — the alpha rule's moving
+    // average AND the per-rank rounding streams must both survive the
+    // save/load cycle for the bits to line up
+    let n = 3;
+    let d = 96;
+    let rounds = 12;
+    let stop = 6;
+    let seed = 700;
+
+    let run = |upto: usize, from: usize, coord: &mut Coordinator, engine: &mut RoundEngine| {
+        let mut pool = quad_pool(n, d, seed, 0.0);
+        let res = coord.train(&mut pool, engine, &cfg(upto, from, 0.25), None);
+        pool.shutdown();
+        res
+    };
+
+    // A: straight through
+    let mut coord_a = Coordinator::new(vec![0.0; d], vec![d], Network::paper_cluster());
+    let mut engine_a = intsgd_engine(Rounding::Stochastic, n, 91);
+    let res_a = run(rounds, 0, &mut coord_a, &mut engine_a);
+
+    // B: stop at `stop`, checkpoint THROUGH DISK, resume in fresh objects
+    let mut coord_b = Coordinator::new(vec![0.0; d], vec![d], Network::paper_cluster());
+    let mut engine_b = intsgd_engine(Rounding::Stochastic, n, 91);
+    let res_b1 = run(stop, 0, &mut coord_b, &mut engine_b);
+    let path = tmp("resume");
+    coord_b
+        .snapshot(&mut engine_b, stop as u64)
+        .expect("snapshot")
+        .save(&path)
+        .expect("save");
+    let ck = intsgd::runtime::Checkpoint::load(&path).expect("load");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(ck.round, stop as u64);
+    assert!(ck.prev_flat.is_some() && ck.rule_state.is_some());
+    assert_eq!(ck.rng_streams.len(), n, "one rounding stream per rank");
+
+    let mut coord_c = Coordinator::new(vec![0.0; d], vec![d], Network::paper_cluster());
+    let mut engine_c = intsgd_engine(Rounding::Stochastic, n, 12345); // seed must not matter
+    coord_c.restore(&mut engine_c, n, &ck).expect("restore");
+    let res_b2 = run(rounds, stop, &mut coord_c, &mut engine_c);
+
+    // stitched B == A, bit for bit
+    assert_eq!(res_b1.records.len() + res_b2.records.len(), res_a.records.len());
+    for (ra, rb) in res_a
+        .records
+        .iter()
+        .zip(res_b1.records.iter().chain(&res_b2.records))
+    {
+        assert_eq!(
+            ra.train_loss.to_bits(),
+            rb.train_loss.to_bits(),
+            "resume parity: loss differs at round {}",
+            ra.round
+        );
+        assert_eq!(
+            ra.alpha.to_bits(),
+            rb.alpha.to_bits(),
+            "resume parity: alpha differs at round {} (rule state lost?)",
+            ra.round
+        );
+        assert_eq!(
+            ra.max_abs_int, rb.max_abs_int,
+            "resume parity: integers differ at round {} (RNG stream lost?)",
+            ra.round
+        );
+    }
+    assert_eq!(res_a.final_params, res_b2.final_params, "resumed run diverges");
+}
+
+#[test]
+fn chaos_v2_resume_restores_error_feedback_residuals() {
+    // EF-SignSGD: without the residual section, the resumed run re-starts
+    // EF from zero and silently diverges from the uninterrupted one
+    let n = 2;
+    let d = 64;
+    let rounds = 10;
+    let stop = 5;
+    let seed = 800;
+
+    let mk_engine = || RoundEngine::new(Box::new(SignSgd::new(n)) as Box<dyn PhasedCompressor>);
+    let run = |upto: usize, from: usize, coord: &mut Coordinator, engine: &mut RoundEngine| {
+        let mut pool = quad_pool(n, d, seed, 0.0);
+        let res = coord.train(&mut pool, engine, &cfg(upto, from, 0.2), None);
+        pool.shutdown();
+        res
+    };
+
+    let mut coord_a = Coordinator::new(vec![0.1; d], vec![d], Network::paper_cluster());
+    let mut engine_a = mk_engine();
+    let res_a = run(rounds, 0, &mut coord_a, &mut engine_a);
+
+    let mut coord_b = Coordinator::new(vec![0.1; d], vec![d], Network::paper_cluster());
+    let mut engine_b = mk_engine();
+    let _ = run(stop, 0, &mut coord_b, &mut engine_b);
+    let ck = coord_b.snapshot(&mut engine_b, stop as u64).expect("snapshot");
+    assert_eq!(ck.ef_residuals.len(), n, "one EF residual per rank");
+    assert!(
+        ck.ef_residuals.iter().any(|m| m.iter().any(|&x| x != 0.0)),
+        "EF residuals are all zero — the test would not detect a drop"
+    );
+
+    let mut coord_c = Coordinator::new(vec![0.1; d], vec![d], Network::paper_cluster());
+    let mut engine_c = mk_engine();
+    coord_c.restore(&mut engine_c, n, &ck).expect("restore");
+    let res_c = run(rounds, stop, &mut coord_c, &mut engine_c);
+    assert_eq!(
+        res_a.final_params, res_c.final_params,
+        "EF residual was not restored bit-exactly"
+    );
+
+    // and dropping the residuals (what v1 did) is OBSERVABLE: the resumed
+    // run diverges — this is the regression the v2 format exists to stop
+    let mut coord_d = Coordinator::new(vec![0.1; d], vec![d], Network::paper_cluster());
+    let mut engine_d = mk_engine();
+    let mut stripped = ck.clone();
+    stripped.ef_residuals.clear();
+    coord_d.restore(&mut engine_d, n, &stripped).expect("restore without EF");
+    let res_d = run(rounds, stop, &mut coord_d, &mut engine_d);
+    assert_ne!(
+        res_a.final_params, res_d.final_params,
+        "dropping EF residuals went unnoticed — the parity test is vacuous"
+    );
+}

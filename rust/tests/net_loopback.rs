@@ -3,6 +3,8 @@
 //! channel default). Everything here opens real sockets; keep the sizes
 //! CI-friendly.
 
+use std::time::{Duration, Instant};
+
 use intsgd::collective::allreduce_intvec;
 use intsgd::compress::intsgd::{IntSgd, Rounding, WireInt};
 use intsgd::compress::intvec::{IntVec, Lanes};
@@ -10,7 +12,10 @@ use intsgd::compress::RoundEngine;
 use intsgd::coordinator::{Coordinator, LrSchedule, TrainConfig};
 use intsgd::net::frame::{encode_frame, expect_frame, FrameHeader, PayloadKind};
 use intsgd::net::staged::{ring_allreduce_ints, StagedScratch};
-use intsgd::net::{StagedAlgo, TcpTransport, Transport, TransportReducer};
+use intsgd::net::{
+    FaultPlan, FaultTransport, KillAt, NetError, StagedAlgo, TcpTransport, Transport,
+    TransportReducer,
+};
 use intsgd::netsim::Network;
 use intsgd::scaling::MovingAverageRule;
 use intsgd::util::Rng;
@@ -30,7 +35,7 @@ fn net_loopback_mesh_exchanges_frames_between_ranks() {
                     }
                     let payload = [rank as u8; 16];
                     encode_frame(
-                        FrameHeader { round: 0, kind: PayloadKind::Bytes, elems: 16 },
+                        FrameHeader { round: 0, seq: 0, kind: PayloadKind::Bytes, elems: 16 },
                         &payload,
                         &mut buf,
                     );
@@ -116,6 +121,66 @@ fn net_loopback_full_intsgd_training_rounds() {
     assert!(last < first, "no progress over TCP: {first} -> {last}");
     assert_eq!(red.calls(), (rounds - 1) as u64, "one collective per int round");
     assert!(red.wire_seconds() > 0.0);
+    assert!(res.failovers.is_empty(), "healthy fabric must not fail over");
     // the int8 aggregate budget held on the wire too
     assert!(res.records.iter().all(|r| r.max_abs_int <= 127));
+}
+
+#[test]
+fn net_loopback_stalled_rank_times_out_typed_not_30s() {
+    // a rank that never answers must cost the configured deadline — and
+    // surface as NetError::Timeout with the stalled rank named — instead
+    // of a generic error after a hard-coded 30 s
+    let mut mesh = TcpTransport::loopback_mesh(2).expect("mesh");
+    let _silent = mesh.pop().unwrap();
+    let mut a = mesh.pop().unwrap();
+    a.set_timeout(Duration::from_millis(80));
+    let t0 = Instant::now();
+    let err = a.recv(1, &mut Vec::new()).expect_err("silent peer");
+    assert!(matches!(err, NetError::Timeout { rank: 1, .. }), "{err}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "stalled rank burned {:?}",
+        t0.elapsed()
+    );
+}
+
+#[test]
+fn net_loopback_rank_kill_fails_over_to_survivors() {
+    // kill the last rank mid-training over real sockets: the collective
+    // reports PeerDead, the coordinator shrinks the world, and training
+    // finishes on the survivors
+    let n = 3;
+    let d = 256;
+    let rounds = 8;
+    let mut pool = intsgd::coordinator::net_driver::quad_pool(n, d, 70, 0.0);
+    let mut coord = Coordinator::new(vec![0.0; d], vec![d], Network::tcp_loopback());
+    let mut engine = RoundEngine::new(Box::new(IntSgd::new(
+        Rounding::Deterministic,
+        WireInt::Int8,
+        Box::new(MovingAverageRule::default_paper()),
+        n,
+        9,
+    )));
+    // collective round ids count int rounds: id 3 <=> training round 4
+    let mesh = FaultTransport::wrap_mesh(
+        TcpTransport::loopback_mesh(n).expect("mesh"),
+        &FaultPlan::clean(4),
+        Some((2, KillAt::Round(3))),
+    );
+    let mut red = TransportReducer::new(mesh, StagedAlgo::Ring);
+    red.set_timeout(Duration::from_millis(500));
+    let cfg = TrainConfig {
+        rounds,
+        schedule: LrSchedule::constant(0.3),
+        ..Default::default()
+    };
+    let res = coord.train_over(&mut pool, &mut engine, &mut red, &cfg, None);
+    pool.shutdown();
+    assert_eq!(res.failovers, vec![(4, 2)], "rank 2 dies in training round 4");
+    assert_eq!(red.world(), 2, "the reducer shrank to the survivors");
+    assert_eq!(res.records.len(), rounds, "every round completed despite the death");
+    let first = res.records.first().unwrap().train_loss;
+    let last = res.records.last().unwrap().train_loss;
+    assert!(last < first, "survivors made no progress: {first} -> {last}");
 }

@@ -251,7 +251,9 @@ fn engine_rounds_over_tcp_match_the_sequential_reference_for_the_zoo() {
             let grads: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 0.5)).collect();
             let ctx = ctx_for(round, d, n);
             let a = seq.round_sequential(&grads, &ctx);
-            let b = net.round_parallel_over(&mut pool, &mut red, &grads, &ctx);
+            let b = net
+                .round_parallel_over(&mut pool, &mut red, &grads, &ctx)
+                .expect("clean fabric");
             assert_eq!(a.gtilde, b.gtilde, "{label} round {round}: gtilde differs");
             assert_eq!(
                 a.max_abs_int, b.max_abs_int,
@@ -302,8 +304,12 @@ fn halving_reducer_matches_ring_reducer_bitwise() {
             step_norm_sq: 1e-4,
             blocks: vec![BlockInfo { dim: d, step_norm_sq: 1e-4 }],
         };
-        let a = ring_engine.round_parallel_over(&mut pool, &mut ring, &grads, &ctx);
-        let b = halving_engine.round_parallel_over(&mut pool, &mut halving, &grads, &ctx);
+        let a = ring_engine
+            .round_parallel_over(&mut pool, &mut ring, &grads, &ctx)
+            .expect("ring");
+        let b = halving_engine
+            .round_parallel_over(&mut pool, &mut halving, &grads, &ctx)
+            .expect("halving");
         assert_eq!(a.gtilde, b.gtilde, "round {round}");
     }
     pool.shutdown();

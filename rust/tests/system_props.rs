@@ -93,7 +93,6 @@ fn unbiased_compressors_estimate_the_average() {
     let mut rng = Rng::new(7);
     let grads: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 1.0)).collect();
     let avg = average(&grads);
-    let c = ctx(1, d, n, 1e-3);
     let reps = 600;
 
     let mut cases: Vec<(String, Box<dyn DistributedCompressor>)> = vec![
@@ -112,7 +111,12 @@ fn unbiased_compressors_estimate_the_average() {
     ];
     for (name, comp) in cases.iter_mut() {
         let mut acc = vec![0.0f64; d];
-        for _ in 0..reps {
+        for rep in 0..reps {
+            // advance the round per rep: IntSGD's stochastic base is keyed
+            // by round (a re-encode of the SAME round is deliberately
+            // bit-identical — the failover invariant), so fresh draws per
+            // rep require fresh rounds, exactly as in a real run
+            let c = ctx(1 + rep, d, n, 1e-3);
             let r = comp.round(&grads, &c);
             for (a, &x) in acc.iter_mut().zip(&r.gtilde) {
                 *a += x as f64;

@@ -65,6 +65,7 @@ fn train_classifier(
     let mut coord = Coordinator::new(init, block_dims, Network::paper_cluster());
     let cfg = TrainConfig {
         rounds,
+        start_round: 0,
         schedule: LrSchedule::constant(0.1),
         momentum: 0.9,
         weight_decay: 1e-4,
@@ -186,6 +187,7 @@ fn lm_learns_through_pjrt() {
     )));
     let cfg = TrainConfig {
         rounds: 200,
+        start_round: 0,
         schedule: LrSchedule::constant(1.25),
         momentum: 0.9,
         weight_decay: 0.0,

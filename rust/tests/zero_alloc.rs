@@ -15,9 +15,10 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use intsgd::compress::intsgd::{IntSgd, Rounding, WireInt};
-use intsgd::compress::{PhasedCompressor, RoundEngine};
-use intsgd::coordinator::{BlockInfo, RoundCtx, WorkerPool};
+use intsgd::compress::{PhasedCompressor, RankMessages, Reducer, RoundEngine, SerialReducer};
+use intsgd::net::{NetError, UNKNOWN_RANK, UNKNOWN_ROUND};
 use intsgd::scaling::MovingAverageRule;
+use intsgd::coordinator::{BlockInfo, RoundCtx, WorkerPool};
 use intsgd::util::Rng;
 
 struct CountingAllocator;
@@ -146,5 +147,60 @@ fn steady_state_intsgd_rounds_allocate_nothing() {
     assert_eq!(
         plain_allocs, 0,
         "block-less steady-state rounds hit the allocator {plain_allocs} times"
+    );
+
+    // --- erroring-then-succeeding rounds (failure must not leak) -----------
+    // A reducer that fails its first call (a transport fault that retry
+    // could not fix): the engine must surface the error WITHOUT stranding
+    // its buffers — the encoders stay parked, the arena keeps its pooled
+    // outputs, and the rounds after the error are still allocation-free.
+    struct FailFirst {
+        remaining_failures: usize,
+    }
+    impl Reducer for FailFirst {
+        fn sum_ints(
+            &mut self,
+            msgs: &RankMessages,
+            out: &mut Vec<i64>,
+        ) -> Result<(), NetError> {
+            if self.remaining_failures > 0 {
+                self.remaining_failures -= 1;
+                return Err(NetError::Timeout {
+                    rank: UNKNOWN_RANK,
+                    round: UNKNOWN_ROUND,
+                });
+            }
+            SerialReducer.sum_ints(msgs, out)
+        }
+    }
+    let mut err_engine = engine(n, 11);
+    let mut err_pool = WorkerPool::for_encode(n);
+    let mut red = FailFirst { remaining_failures: 1 };
+    for round in 0..5 {
+        ctx.round = round;
+        // round 1 is the first to reach the reducer (round 0 is dense)
+        match err_engine.round_parallel_over(&mut err_pool, &mut red, &grads, &ctx) {
+            Ok(r) => err_engine.reclaim(r),
+            Err(e) => {
+                assert!(matches!(e, NetError::Timeout { .. }), "{e}");
+                assert_eq!(round, 1, "exactly the first integer round fails");
+            }
+        }
+    }
+    let before = allocations();
+    for round in 5..25 {
+        ctx.round = round;
+        let r = err_engine
+            .round_parallel_over(&mut err_pool, &mut red, &grads, &ctx)
+            .expect("no more injected failures");
+        assert_eq!(r.gtilde.len(), d);
+        err_engine.reclaim(r);
+    }
+    let err_allocs = allocations() - before;
+    err_pool.shutdown();
+    assert_eq!(
+        err_allocs, 0,
+        "steady state after an erroring round hit the allocator {err_allocs} times \
+         (the failed round leaked buffers)"
     );
 }
