@@ -1,20 +1,17 @@
 //! Systems example: what each algorithm actually puts on the wire, and
 //! what that costs on the modeled 100 Gb/s cluster (the paper's Table 1
-//! "supports all-reduce" column made quantitative).
+//! "supports all-reduce" column made quantitative). Every compressor is
+//! built through the typed `api::CompressorSpec` registry — the same
+//! front door every `Session` run uses.
 //!
 //!   cargo run --release --example comm_breakdown
 
 use anyhow::Result;
 
-use intsgd::compress::{
-    intsgd::{IntSgd, Rounding, WireInt},
-    powersgd::BlockShape,
-    HeuristicIntSgd, IdentitySgd, NatSgd, PhasedCompressor, PowerSgd, Qsgd,
-    RoundEngine, SignSgd, TopK,
-};
+use intsgd::api::CompressorSpec;
+use intsgd::compress::RoundEngine;
 use intsgd::coordinator::{BlockInfo, RoundCtx};
 use intsgd::netsim::Network;
-use intsgd::scaling::MovingAverageRule;
 use intsgd::util::Rng;
 
 fn main() -> Result<()> {
@@ -48,44 +45,29 @@ fn main() -> Result<()> {
             })
             .collect(),
     };
-    let shapes: Vec<BlockShape> =
-        layout.iter().map(|s| BlockShape { dims: s.clone() }).collect();
 
-    let algos: Vec<(&str, Box<dyn PhasedCompressor>)> = vec![
-        ("SGD fp32 (all-reduce)", Box::new(IdentitySgd::allreduce())),
-        ("SGD fp32 (all-gather)", Box::new(IdentitySgd::allgather())),
-        (
-            "IntSGD int8",
-            Box::new(IntSgd::new(
-                Rounding::Stochastic,
-                WireInt::Int8,
-                Box::new(MovingAverageRule::default_paper()),
-                n,
-                1,
-            )),
-        ),
-        ("Heuristic IntSGD int8", Box::new(HeuristicIntSgd::new(8))),
-        ("QSGD 64 levels", Box::new(Qsgd::new(64, numels.clone(), n, 2))),
-        ("NatSGD", Box::new(NatSgd::new(n, 3))),
-        ("PowerSGD rank-2", Box::new(PowerSgd::new(2, shapes, n, 4))),
-        ("Top-1%", Box::new(TopK::new(0.01, n))),
-        ("EF-SignSGD", Box::new(SignSgd::new(n))),
+    // the registry ids of the paper's Table 1 comparison set
+    let algos = [
+        "sgd_ar", "sgd_ag", "intsgd_random8", "heuristic8", "qsgd", "natsgd",
+        "powersgd", "topk", "signsgd",
     ];
 
     let net = Network::paper_cluster();
     println!(
-        "{:<24} {:>12} {:>8} {:>12} {:>14} {:>12}",
+        "{:<26} {:>12} {:>8} {:>12} {:>14} {:>12}",
         "algorithm", "bytes/worker", "vs fp32", "primitive", "comm model", "overhead"
     );
-    for (name, comp) in algos {
-        let mut engine = RoundEngine::new(comp);
+    for (i, id) in algos.iter().enumerate() {
+        let spec = CompressorSpec::parse(id)?;
+        let mut engine =
+            RoundEngine::new(spec.build(n, &layout, 0.9, 1e-8, 1 + i as u64)?);
         let r = engine.round_sequential(&grads, &ctx);
         let bytes = r.wire_bytes_per_worker();
         let comm = net.comm_seconds(&r.comm, n);
         let prim = format!("{:?}", r.comm[0].primitive);
         println!(
-            "{:<24} {:>12} {:>7.1}x {:>12} {:>11.3} ms {:>9.2} ms",
-            name,
+            "{:<26} {:>12} {:>7.1}x {:>12} {:>11.3} ms {:>9.2} ms",
+            spec.paper_name(),
             bytes,
             d as f64 * 4.0 / bytes as f64,
             prim,

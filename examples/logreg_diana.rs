@@ -2,6 +2,11 @@
 //! integer compression blows up on heterogeneous shards and how IntDIANA
 //! fixes it by compressing gradient *differences*.
 //!
+//! Note: IntDIANA is its own optimizer loop (shift-compressed full-batch
+//! rounds over `optim::IntDiana`), not a round-engine compressor — it is
+//! the one example that deliberately does NOT run through `api::Session`,
+//! whose facade covers the synchronous data-parallel round structure.
+//!
 //!   cargo run --release --example logreg_diana
 
 use anyhow::Result;

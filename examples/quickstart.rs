@@ -1,4 +1,5 @@
-//! Quickstart: distributed IntSGD over the full three-layer stack.
+//! Quickstart: distributed IntSGD over the full three-layer stack, in the
+//! form it should take — one typed `Session` per algorithm.
 //!
 //! Trains the MLP classifier on synthetic CIFAR-like data with 4 simulated
 //! workers, comparing full-precision SGD against IntSGD with the int8
@@ -7,110 +8,32 @@
 //!
 //!   make artifacts && cargo run --release --example quickstart
 
-use std::sync::Arc;
+use intsgd::api::CompressorSpec;
+use intsgd::config::Config;
+use intsgd::experiments::common::{setup, task_session, Task};
 
-use anyhow::Result;
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::new();
+    cfg.set_kv("workers=4")?;
+    if let Ok(dir) = std::env::var("INTSGD_ARTIFACTS") {
+        cfg.set_kv(&format!("artifacts={dir}"))?;
+    }
+    let s = setup(&cfg, 40, 0.1);
 
-use intsgd::compress::intsgd::{IntSgd, Rounding, WireInt};
-use intsgd::compress::IdentitySgd;
-use intsgd::coordinator::{
-    BatchSpec, Coordinator, GradientSource, LrSchedule, PjrtWorker, TrainConfig,
-    WorkerPool,
-};
-use intsgd::data::{shard_iid, CifarLike};
-use intsgd::netsim::Network;
-use intsgd::runtime::{init_params, Runtime};
-use intsgd::scaling::MovingAverageRule;
+    for algo in ["sgd_ar", "intsgd_random8"] {
+        let spec = CompressorSpec::parse(algo)?;
+        let mut session = task_session(Task::Classifier, &spec, &s, 0.9, 1e-8, 0, &cfg)?;
+        session.run(s.rounds)?;
 
-fn main() -> Result<()> {
-    let n = 4; // simulated workers
-    let rounds = 40;
-    let artifact_dir =
-        std::env::var("INTSGD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-
-    // inspect the manifest for the classifier model
-    let rt = Runtime::open(&artifact_dir)?;
-    let meta = rt.meta("classifier_train_step").expect("run `make artifacts`").clone();
-    println!(
-        "model: classifier ({} params over {} arrays)",
-        meta.grad_dim,
-        meta.params.len()
-    );
-
-    // shared synthetic dataset, one iid shard per worker
-    let data = Arc::new(CifarLike::generate(2048, 512, 1.2, 0));
-    let batch = meta.extra_usize("batch").unwrap_or(32);
-
-    for algo in ["sgd_fp32", "intsgd_random_int8"] {
-        // spawn the worker pool: each thread owns its own PJRT client
-        let shards = shard_iid(data.train_count(), n, 1);
-        let factories: Vec<Box<dyn FnOnce() -> Box<dyn GradientSource> + Send>> =
-            shards
-                .into_iter()
-                .enumerate()
-                .map(|(i, indices)| {
-                    let data = Arc::clone(&data);
-                    let dir = artifact_dir.clone();
-                    let f: Box<dyn FnOnce() -> Box<dyn GradientSource> + Send> =
-                        Box::new(move || {
-                            Box::new(
-                                PjrtWorker::new(
-                                    &dir,
-                                    "classifier",
-                                    BatchSpec::Classifier { data, indices, batch },
-                                    100 + i as u64,
-                                )
-                                .expect("worker"),
-                            )
-                        });
-                    f
-                })
-                .collect();
-        let mut pool = WorkerPool::spawn(factories);
-
-        // leader state: params from the manifest init specs
-        let init: Vec<f32> = init_params(&meta.params, 42).concat();
-        let block_dims: Vec<usize> = meta.params.iter().map(|p| p.numel()).collect();
-        let mut coord = Coordinator::new(init, block_dims, Network::paper_cluster());
-
-        // phased compressor behind the round engine: encode runs on the
-        // worker threads, reduce + decode on this (leader) thread
-        let compressor: Box<dyn intsgd::compress::PhasedCompressor> =
-            match algo {
-                "sgd_fp32" => Box::new(IdentitySgd::allreduce()),
-                _ => Box::new(IntSgd::new(
-                    Rounding::Stochastic,
-                    WireInt::Int8,
-                    Box::new(MovingAverageRule::default_paper()),
-                    n,
-                    7,
-                )),
-            };
-        let mut engine = intsgd::compress::RoundEngine::new(compressor);
-
-        let cfg = TrainConfig {
-            rounds,
-            start_round: 0,
-            schedule: LrSchedule::constant(0.1),
-            momentum: 0.9,
-            weight_decay: 1e-4,
-            eval_every: 0,
-        };
-        let res = coord.train(&mut pool, &mut engine, &cfg, None);
-        pool.shutdown();
-
-        println!("\n=== {algo} ===");
+        println!("\n=== {algo} ({}) ===", spec.paper_name());
         println!("round  train_loss  wire_bytes/worker  comm_model_ms");
-        for r in res.records.iter().step_by(8) {
+        for r in session.records().iter().step_by(8) {
             println!(
                 "{:>5}  {:>10.4}  {:>17}  {:>13.4}",
-                r.round,
-                r.train_loss,
-                r.wire_bytes_per_worker,
-                r.comm_seconds * 1e3
+                r.round, r.train_loss, r.wire_bytes_per_worker, r.comm_seconds * 1e3
             );
         }
-        let last = res.records.last().unwrap();
+        let last = session.finish().records.last().unwrap().clone();
         println!(
             "final: loss {:.4}, per-round comm {:.4} ms (modeled, 100 Gb/s cluster)",
             last.train_loss,

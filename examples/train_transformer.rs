@@ -3,7 +3,8 @@
 //! Pallas fused-linear kernels inside the JAX train step, AOT-lowered to
 //! HLO, executed by per-worker PJRT clients, gradients compressed with
 //! IntSGD int8, aggregated as integers, applied by the rust leader — and
-//! log the loss curve to results/e2e_transformer.csv.
+//! log the loss curve to results/e2e_transformer.csv. The run is wired
+//! through the typed `api::Session` builder (DESIGN.md §8).
 //!
 //!   make artifacts && cargo run --release --example train_transformer
 //!
@@ -13,16 +14,11 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use intsgd::compress::intsgd::{IntSgd, Rounding, WireInt};
-use intsgd::coordinator::{
-    BatchSpec, Coordinator, GradientSource, LrSchedule, PjrtEvaluator, PjrtWorker,
-    TrainConfig, WorkerPool,
-};
+use intsgd::api::{CompressorSpec, ModelSpec, Session, SourceFactory};
+use intsgd::coordinator::{BatchSpec, LrSchedule, PjrtEvaluator, PjrtWorker};
 use intsgd::data::MarkovText;
 use intsgd::metrics::Csv;
-use intsgd::netsim::Network;
 use intsgd::runtime::{init_params, lit_i32, Runtime};
-use intsgd::scaling::MovingAverageRule;
 use intsgd::util::Rng;
 
 fn env_usize(k: &str, d: usize) -> usize {
@@ -54,43 +50,30 @@ fn main() -> Result<()> {
     );
 
     let shard_len = text.train.len() / n;
-    let factories: Vec<Box<dyn FnOnce() -> Box<dyn GradientSource> + Send>> = (0..n)
+    let factories: Vec<SourceFactory> = (0..n)
         .map(|i| {
             let shard: Arc<Vec<u32>> =
                 Arc::new(text.train[i * shard_len..(i + 1) * shard_len].to_vec());
             let dir = artifact_dir.clone();
-            let f: Box<dyn FnOnce() -> Box<dyn GradientSource> + Send> =
-                Box::new(move || {
-                    Box::new(
-                        PjrtWorker::new(
-                            &dir,
-                            "transformer",
-                            BatchSpec::Lm { tokens: shard, batch, seq },
-                            500 + i as u64,
-                        )
-                        .expect("worker"),
+            let f: SourceFactory = Box::new(move || {
+                Box::new(
+                    PjrtWorker::new(
+                        &dir,
+                        "transformer",
+                        BatchSpec::Lm { tokens: shard, batch, seq },
+                        500 + i as u64,
                     )
-                });
+                    .expect("worker"),
+                )
+            });
             f
         })
         .collect();
-    let mut pool = WorkerPool::spawn(factories);
-
-    let init: Vec<f32> = init_params(&meta.params, 7).concat();
-    let block_dims: Vec<usize> = meta.params.iter().map(|p| p.numel()).collect();
-    let mut coord = Coordinator::new(init, block_dims, Network::paper_cluster());
-    let mut engine = intsgd::compress::RoundEngine::new(Box::new(IntSgd::new(
-        Rounding::Stochastic,
-        WireInt::Int8,
-        Box::new(MovingAverageRule::default_paper()),
-        n,
-        13,
-    )));
 
     let mut evaluator = PjrtEvaluator::new(&artifact_dir, "transformer")?;
     let test = Arc::clone(&text);
     let mut eval_rng = Rng::new(999);
-    let mut eval_hook = move |params: &[f32]| -> (f64, f64) {
+    let eval_hook = move |params: &[f32]| -> (f64, f64) {
         let w = MarkovText::batch_windows(&test.test, batch, seq, &mut eval_rng);
         let data = vec![lit_i32(&w, &[batch, seq + 1]).unwrap()];
         match evaluator.eval(params, data) {
@@ -99,22 +82,29 @@ fn main() -> Result<()> {
         }
     };
 
-    let cfg = TrainConfig {
-        rounds: steps,
-        start_round: 0,
-        schedule: LrSchedule {
+    let init: Vec<f32> = init_params(&meta.params, 7).concat();
+    let layout: Vec<Vec<usize>> = meta.params.iter().map(|p| p.shape.clone()).collect();
+    let mut session = Session::builder()
+        .world(n)
+        .model(ModelSpec::with_params(init, layout))
+        .sources(factories)
+        .compressor(CompressorSpec::parse("intsgd_random8")?)
+        .seed(13)
+        .schedule(LrSchedule {
             base: 0.5,
             warmup_rounds: steps / 20,
             milestones: vec![(steps * 2 / 3, 0.1)],
-        },
-        momentum: 0.9,
-        weight_decay: 1e-4,
-        eval_every: (steps / 20).max(1),
-    };
+        })
+        .momentum(0.9)
+        .weight_decay(1e-4)
+        .eval_every((steps / 20).max(1))
+        .eval_hook(Box::new(eval_hook))
+        .build()?;
+
     let t0 = std::time::Instant::now();
-    let res = coord.train(&mut pool, &mut engine, &cfg, Some(&mut eval_hook));
+    session.run(steps)?;
     let wall = t0.elapsed().as_secs_f64();
-    pool.shutdown();
+    let res = session.finish();
 
     let mut csv = Csv::create(
         "results/e2e_transformer.csv",

@@ -1,0 +1,82 @@
+//! Known-config-key schemas, one per `repro` subcommand.
+//!
+//! The launcher validates every parsed config against the schema of the
+//! subcommand it is about to run ([`crate::config::Config::validate_keys`]),
+//! so a typo'd knob (`workrs=16`) is an error with a "did you mean"
+//! suggestion instead of a silently different experiment. The lists live
+//! here — next to the `Session` builder that defines what the knobs mean —
+//! so adding a builder knob and registering its key happen in one place.
+
+/// `repro train` — the generic launcher (`experiments::train_cmd`).
+pub const TRAIN: &[&str] = &[
+    "model",
+    "algo",
+    "workers",
+    "rounds",
+    "seeds",
+    "seed",
+    "lr",
+    "momentum",
+    "weight_decay",
+    "eval_every",
+    "warmup_rounds",
+    "beta",
+    "eps",
+    "artifacts",
+    "out_dir",
+    "save",
+    "train_examples",
+    "test_examples",
+    "margin",
+    "corpus_len",
+];
+
+/// `repro exp <id>` — the experiment drivers (everything in TRAIN plus the
+/// driver-specific knobs of fig1/fig5/fig6).
+pub const EXP: &[&str] = &[
+    "model",
+    "algo",
+    "workers",
+    "rounds",
+    "seeds",
+    "seed",
+    "lr",
+    "momentum",
+    "weight_decay",
+    "eval_every",
+    "warmup_rounds",
+    "beta",
+    "eps",
+    "artifacts",
+    "out_dir",
+    "train_examples",
+    "test_examples",
+    "margin",
+    "corpus_len",
+    "task",
+    "dataset",
+    "fstar_iters",
+    "eta",
+];
+
+/// `repro net-bench` — training over a real transport
+/// (`coordinator::net_driver`).
+pub const NET: &[&str] = &[
+    "workers",
+    "d",
+    "rounds",
+    "lr",
+    "seed",
+    "transport",
+    "algo",
+    "net.timeout_ms",
+    "net.retries",
+    "fault.seed",
+    "fault.drop",
+    "fault.dup",
+    "fault.corrupt",
+    "fault.truncate",
+    "fault.delay",
+    "fault.kill_rank",
+    "fault.kill_round",
+];

@@ -1,0 +1,752 @@
+//! The public front door: a typed, validated [`Session`] over the whole
+//! stack (DESIGN.md §8).
+//!
+//! Before this module the repository had four ways to wire a run — the
+//! CLI `train` path, `net-bench`, `experiments::common`, and each example
+//! by hand — all funneling through a stringly-typed `Config` and a
+//! string-match compressor factory, each re-implementing the same
+//! validation (or skipping it). The paper's pitch is that IntSGD is a
+//! drop-in operator; the API should be too:
+//!
+//! ```text
+//! Session::builder()                         SessionBuilder (plain data)
+//!     .world(4)                                 │
+//!     .model(ModelSpec::flat(1 << 16))          │ build(): every invariant
+//!     .sources(quad_factories(...))             │ checked here — wire
+//!     .compressor(CompressorSpec::parse(        │ budget (int8 ⇒ n ≤ 127),
+//!         "intsgd_random8")?)                   │ pow2 world for halving,
+//!     .backend(Backend::Tcp { algo })           │ fault-knob ranges,
+//!     .faults(FaultSpec { .. })                 │ checkpoint plumbing —
+//!     .checkpoint_every(50)                     │ BEFORE any thread or
+//!     .build()?                                 ▼ socket exists
+//! Session ── run(k) / step() ──▶ Coordinator::run_round (the one loop)
+//!     │            │
+//!     │            └─▶ RoundObserver::on_round(RoundRecord, RoundBreakdown)
+//!     ├── snapshot() / resume_from(path)   (checkpoint v2, bit-exact)
+//!     └── finish() ──▶ TrainResult
+//! ```
+//!
+//! The `Session` drives the same internal layers as ever —
+//! `Coordinator`, `RoundEngine`, `WorkerPool`, and the `Reducer` family —
+//! so `Session::run` is **bitwise identical** to the legacy
+//! `Coordinator::train` path (pinned by `tests/session_api.rs`).
+
+pub mod keys;
+pub mod spec;
+
+pub use spec::{CompressorSpec, RuleSpec, ZOO};
+
+pub use crate::coordinator::{
+    GradientSource, LrSchedule, RoundObserver, RoundRecord, TrainResult,
+};
+pub use crate::net::StagedAlgo;
+pub use crate::netsim::{Network, RoundBreakdown};
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::compress::engine::{Reducer, SerialReducer};
+use crate::compress::{Lanes, RoundEngine};
+use crate::coordinator::{Coordinator, TrainConfig, TrainState, WorkerPool};
+use crate::net::{
+    default_io_timeout, ChannelTransport, FaultPlan, FaultTransport, KillAt,
+    TcpTransport, Transport, TransportReducer,
+};
+use crate::runtime::Checkpoint;
+
+/// A worker-rank gradient-source factory: runs once, inside the rank's
+/// thread (so non-`Send` resources like PJRT clients can live there).
+pub type SourceFactory = Box<dyn FnOnce() -> Box<dyn GradientSource> + Send>;
+
+/// Per-round eval hook: `params -> (loss, accuracy)`.
+pub type EvalHook = Box<dyn FnMut(&[f32]) -> (f64, f64)>;
+
+/// Where a round's integer reduction executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Leader-side rank-order fold (the parity reference).
+    Serial,
+    /// Coordinate-chunked fold across the worker pool's threads (the
+    /// in-process default — bit-identical to `Serial`).
+    Pool,
+    /// Staged collective over in-process channel mailboxes: the real
+    /// collective schedules without syscalls (tier-1 testable).
+    Channel { algo: StagedAlgo },
+    /// Staged collective over loopback TCP sockets: framed bytes between
+    /// ranks, the measured-wire reference.
+    Tcp { algo: StagedAlgo },
+}
+
+impl Backend {
+    fn is_transport(self) -> bool {
+        matches!(self, Backend::Channel { .. } | Backend::Tcp { .. })
+    }
+
+    fn staged_algo(self) -> Option<StagedAlgo> {
+        match self {
+            Backend::Channel { algo } | Backend::Tcp { algo } => Some(algo),
+            _ => None,
+        }
+    }
+}
+
+/// Deterministic seeded fault injection over a transport backend
+/// (`net::FaultTransport`). All knobs validated at [`SessionBuilder::build`].
+#[derive(Clone, Debug, Default)]
+pub struct FaultSpec {
+    /// Fault-stream seed (defaults to the session seed).
+    pub seed: Option<u64>,
+    /// Per-frame fault probabilities; each in [0, 1], summing to at most 1.
+    pub drop: f64,
+    pub dup: f64,
+    pub corrupt: f64,
+    pub truncate: f64,
+    pub delay: f64,
+    /// Kill `(rank, collective_round)`: that rank's transport dies for
+    /// good at that collective, and the run fails over to the survivors.
+    pub kill: Option<(usize, u32)>,
+}
+
+impl FaultSpec {
+    /// Whether this spec requests anything at all. Any nonzero knob —
+    /// including an *invalid* negative one — counts, so a malformed spec
+    /// reaches `validate()` instead of silently reading as "no chaos".
+    pub fn is_chaotic(&self) -> bool {
+        [self.drop, self.dup, self.corrupt, self.truncate, self.delay]
+            .iter()
+            .any(|&p| p != 0.0)
+            || self.kill.is_some()
+    }
+
+    fn probability_sum(&self) -> f64 {
+        self.drop + self.dup + self.corrupt + self.truncate + self.delay
+    }
+
+    fn validate(&self, world: usize) -> Result<()> {
+        let ps = [self.drop, self.dup, self.corrupt, self.truncate, self.delay];
+        if ps.iter().any(|p| !(0.0..=1.0).contains(p)) || self.probability_sum() > 1.0 {
+            return Err(anyhow!(
+                "fault probabilities must each lie in [0, 1] and sum to at most 1 \
+                 (got drop={} dup={} corrupt={} truncate={} delay={})",
+                ps[0], ps[1], ps[2], ps[3], ps[4]
+            ));
+        }
+        if let Some((rank, _)) = self.kill {
+            if rank >= world {
+                return Err(anyhow!(
+                    "fault kill rank {rank} outside the world of {world} workers"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn plan(&self, default_seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed: self.seed.unwrap_or(default_seed),
+            drop_p: self.drop,
+            dup_p: self.dup,
+            corrupt_p: self.corrupt,
+            truncate_p: self.truncate,
+            delay_p: self.delay,
+        }
+    }
+
+    fn kill_at(&self) -> Option<(usize, KillAt)> {
+        self.kill.map(|(rank, round)| (rank, KillAt::Round(round)))
+    }
+}
+
+/// What the leader optimizes: initial parameters plus the layout (shapes
+/// in flattening order) that drives per-block scaling (Alg. 2), PowerSGD
+/// matrix factorization, and checkpoint layouts.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    init: Option<Vec<f32>>,
+    layout: Vec<Vec<usize>>,
+}
+
+impl ModelSpec {
+    /// A zero-initialised flat vector of `d` coordinates (one block).
+    pub fn flat(d: usize) -> Self {
+        ModelSpec { init: None, layout: vec![vec![d]] }
+    }
+
+    /// Zero-initialised with an explicit 1-D block layout.
+    pub fn blocks(dims: Vec<usize>) -> Self {
+        ModelSpec { init: None, layout: dims.into_iter().map(|d| vec![d]).collect() }
+    }
+
+    /// Explicit initial parameters over a full shaped layout (what the
+    /// PJRT-manifest path provides).
+    pub fn with_params(init: Vec<f32>, layout: Vec<Vec<usize>>) -> Self {
+        ModelSpec { init: Some(init), layout }
+    }
+
+    /// Flattened per-block dims, in order.
+    pub fn block_dims(&self) -> Vec<usize> {
+        self.layout
+            .iter()
+            .map(|s| s.iter().product::<usize>().max(1))
+            .collect()
+    }
+
+    /// Total parameter count.
+    pub fn dim(&self) -> usize {
+        self.block_dims().iter().sum()
+    }
+}
+
+/// Wire-side counters of a transport-backed session (None on in-process
+/// backends).
+#[derive(Clone, Copy, Debug)]
+pub struct WireStats {
+    /// Staged collectives executed (logical, not attempts).
+    pub collectives: u64,
+    /// Stale frames the round/seq guard discarded (retry litter).
+    pub stale_skipped: u64,
+    /// Lane width the last collective shipped its partial sums at.
+    pub last_wire: Option<Lanes>,
+}
+
+/// The typed builder — plain data until [`SessionBuilder::build`], which
+/// validates everything and only then spawns threads/sockets.
+pub struct SessionBuilder {
+    world: Option<usize>,
+    model: Option<ModelSpec>,
+    compressor: CompressorSpec,
+    backend: Backend,
+    network: Option<Network>,
+    faults: Option<FaultSpec>,
+    sources: Vec<SourceFactory>,
+    eval_hook: Option<EvalHook>,
+    schedule: Option<LrSchedule>,
+    momentum: f32,
+    weight_decay: f32,
+    eval_every: usize,
+    beta: f64,
+    eps: f64,
+    seed: u64,
+    checkpoint_every: usize,
+    checkpoint_path: Option<String>,
+    net_timeout: Duration,
+    net_retries: usize,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            world: None,
+            model: None,
+            compressor: CompressorSpec::IntSgd {
+                rounding: crate::compress::intsgd::Rounding::Stochastic,
+                wire: crate::compress::intsgd::WireInt::Int8,
+                rule: RuleSpec::MovingAverage,
+            },
+            backend: Backend::Pool,
+            network: None,
+            faults: None,
+            sources: Vec::new(),
+            eval_hook: None,
+            schedule: None,
+            momentum: 0.0,
+            weight_decay: 0.0,
+            eval_every: 0,
+            beta: 0.9,
+            eps: 1e-8,
+            seed: 0,
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            net_timeout: default_io_timeout(),
+            net_retries: 8,
+        }
+    }
+}
+
+impl SessionBuilder {
+    /// Number of worker ranks. Optional when [`SessionBuilder::sources`]
+    /// is given (the source count is the world size); if both are set
+    /// they must agree.
+    pub fn world(mut self, n: usize) -> Self {
+        self.world = Some(n);
+        self
+    }
+
+    pub fn model(mut self, model: ModelSpec) -> Self {
+        self.model = Some(model);
+        self
+    }
+
+    /// Shorthand for `.model(ModelSpec::blocks(dims))`.
+    pub fn blocks(self, dims: Vec<usize>) -> Self {
+        self.model(ModelSpec::blocks(dims))
+    }
+
+    pub fn compressor(mut self, spec: CompressorSpec) -> Self {
+        self.compressor = spec;
+        self
+    }
+
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Network cost model for the `comm_seconds` account (default: the
+    /// paper cluster for in-process backends, loopback for transports).
+    pub fn network(mut self, network: Network) -> Self {
+        self.network = Some(network);
+        self
+    }
+
+    /// Inject deterministic seeded faults (transport backends only).
+    pub fn faults(mut self, faults: FaultSpec) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
+    /// One gradient-source factory per rank, run inside that rank's
+    /// worker thread.
+    pub fn sources(mut self, sources: Vec<SourceFactory>) -> Self {
+        self.sources = sources;
+        self
+    }
+
+    /// Eval hook, invoked every [`SessionBuilder::eval_every`] rounds.
+    pub fn eval_hook(mut self, hook: EvalHook) -> Self {
+        self.eval_hook = Some(hook);
+        self
+    }
+
+    /// Full learning-rate schedule (overrides [`SessionBuilder::lr`]).
+    pub fn schedule(mut self, schedule: LrSchedule) -> Self {
+        self.schedule = Some(schedule);
+        self
+    }
+
+    /// Constant learning rate (default 0.1).
+    pub fn lr(self, lr: f32) -> Self {
+        self.schedule(LrSchedule::constant(lr))
+    }
+
+    pub fn momentum(mut self, momentum: f32) -> Self {
+        self.momentum = momentum;
+        self
+    }
+
+    pub fn weight_decay(mut self, wd: f32) -> Self {
+        self.weight_decay = wd;
+        self
+    }
+
+    pub fn eval_every(mut self, every: usize) -> Self {
+        self.eval_every = every;
+        self
+    }
+
+    /// Moving-average decay for the IntSGD scaling rules (default 0.9).
+    pub fn beta(mut self, beta: f64) -> Self {
+        self.beta = beta;
+        self
+    }
+
+    /// Safeguard epsilon for the IntSGD scaling rules (default 1e-8).
+    pub fn eps(mut self, eps: f64) -> Self {
+        self.eps = eps;
+        self
+    }
+
+    /// Root seed for the compressor's per-rank RNG streams.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Snapshot the run to [`SessionBuilder::checkpoint_path`] every `k`
+    /// rounds (0 = never).
+    pub fn checkpoint_every(mut self, k: usize) -> Self {
+        self.checkpoint_every = k;
+        self
+    }
+
+    pub fn checkpoint_path(mut self, path: impl Into<String>) -> Self {
+        self.checkpoint_path = Some(path.into());
+        self
+    }
+
+    /// Blocking-IO deadline for transport backends (default
+    /// `INTSGD_NET_TIMEOUT_MS` or 30 s).
+    pub fn net_timeout(mut self, timeout: Duration) -> Self {
+        self.net_timeout = timeout;
+        self
+    }
+
+    /// Retried attempts per collective before giving up (default 8).
+    pub fn net_retries(mut self, retries: usize) -> Self {
+        self.net_retries = retries;
+        self
+    }
+
+    /// Validate the whole configuration, then — and only then — spawn the
+    /// worker pool and (for transport backends) the socket mesh. Every
+    /// invariant that used to assert deep inside a constructor or hang a
+    /// socket fails here as a typed error instead.
+    pub fn build(self) -> Result<Session> {
+        // -- world geometry ---------------------------------------------
+        if self.sources.is_empty() {
+            return Err(anyhow!(
+                "a Session needs gradient sources (SessionBuilder::sources): one \
+                 factory per rank"
+            ));
+        }
+        let n = match self.world {
+            Some(n) if n != self.sources.len() => {
+                return Err(anyhow!(
+                    "world({n}) disagrees with the {} gradient sources",
+                    self.sources.len()
+                ))
+            }
+            Some(n) => n,
+            None => self.sources.len(),
+        };
+        if n == 0 {
+            return Err(anyhow!("the world needs at least one rank"));
+        }
+
+        // -- model ------------------------------------------------------
+        let model = self
+            .model
+            .ok_or_else(|| anyhow!("a Session needs a model (SessionBuilder::model)"))?;
+        let block_dims = model.block_dims();
+        let d: usize = block_dims.iter().sum();
+        if d == 0 {
+            return Err(anyhow!("the model layout is empty"));
+        }
+        let init = match model.init {
+            Some(init) => {
+                if init.len() != d {
+                    return Err(anyhow!(
+                        "initial parameters ({}) do not tile the layout ({d})",
+                        init.len()
+                    ));
+                }
+                init
+            }
+            None => vec![0.0; d],
+        };
+
+        // -- compressor (wire budget etc.) ------------------------------
+        self.compressor.validate(n)?;
+        if matches!(
+            &self.compressor,
+            CompressorSpec::IntSgd { rule: RuleSpec::Switch, .. }
+        ) && self.backend.is_transport()
+        {
+            return Err(anyhow!(
+                "{}: in-network switch aggregation is a leader-side simulation \
+                 and would silently bypass the {:?} transport; use the Serial or \
+                 Pool backend",
+                self.compressor,
+                self.backend
+            ));
+        }
+
+        // -- backend ----------------------------------------------------
+        if self.backend.staged_algo() == Some(StagedAlgo::Halving)
+            && !n.is_power_of_two()
+        {
+            return Err(anyhow!(
+                "halving-doubling all-reduce needs a power-of-two world, got {n} \
+                 ranks; use StagedAlgo::Ring"
+            ));
+        }
+        if let Some(f) = &self.faults {
+            if !self.backend.is_transport() {
+                return Err(anyhow!(
+                    "fault injection wraps a transport; the {:?} backend has none \
+                     (use Backend::Channel or Backend::Tcp)",
+                    self.backend
+                ));
+            }
+            f.validate(n)?;
+        }
+        if self.net_timeout.is_zero() {
+            return Err(anyhow!("the net timeout must be positive"));
+        }
+
+        // -- checkpointing ----------------------------------------------
+        if self.checkpoint_every > 0 && self.checkpoint_path.is_none() {
+            return Err(anyhow!(
+                "checkpoint_every({}) needs a checkpoint_path",
+                self.checkpoint_every
+            ));
+        }
+
+        // -- construction: nothing below can fail on configuration ------
+        let comp = self.compressor.build(n, &model.layout, self.beta, self.eps, self.seed)?;
+        let engine = RoundEngine::new(comp);
+        let network = self.network.unwrap_or_else(|| {
+            if self.backend.is_transport() {
+                Network::tcp_loopback()
+            } else {
+                Network::paper_cluster()
+            }
+        });
+        let faults = self.faults.unwrap_or_default();
+        let mut red = match self.backend {
+            Backend::Pool => SessionReducer::Pool,
+            Backend::Serial => SessionReducer::Serial(SerialReducer),
+            Backend::Channel { algo } => {
+                let mesh = ChannelTransport::mesh(n);
+                if faults.is_chaotic() {
+                    let wrapped = FaultTransport::wrap_mesh(
+                        mesh,
+                        &faults.plan(self.seed),
+                        faults.kill_at(),
+                    );
+                    SessionReducer::ChannelFaulty(TransportReducer::new(wrapped, algo))
+                } else {
+                    SessionReducer::Channel(TransportReducer::new(mesh, algo))
+                }
+            }
+            Backend::Tcp { algo } => {
+                let mesh = TcpTransport::loopback_mesh(n)?;
+                if faults.is_chaotic() {
+                    let wrapped = FaultTransport::wrap_mesh(
+                        mesh,
+                        &faults.plan(self.seed),
+                        faults.kill_at(),
+                    );
+                    SessionReducer::TcpFaulty(TransportReducer::new(wrapped, algo))
+                } else {
+                    SessionReducer::Tcp(TransportReducer::new(mesh, algo))
+                }
+            }
+        };
+        red.configure(self.net_timeout, self.net_retries);
+
+        let cfg = TrainConfig {
+            rounds: 0,
+            start_round: 0,
+            schedule: self.schedule.unwrap_or_else(|| LrSchedule::constant(0.1)),
+            momentum: self.momentum,
+            weight_decay: self.weight_decay,
+            eval_every: self.eval_every,
+        };
+        let coord = Coordinator::new(init, block_dims, network);
+        let state = coord.begin(&cfg);
+        Ok(Session {
+            coord,
+            engine,
+            pool: WorkerPool::spawn(self.sources),
+            red,
+            cfg,
+            state,
+            eval: self.eval_hook,
+            checkpoint_every: self.checkpoint_every,
+            checkpoint_path: self.checkpoint_path,
+        })
+    }
+}
+
+/// The reducer a session was built with. The pool reducer borrows the
+/// worker pool per round, so it has no standalone value here.
+enum SessionReducer {
+    Pool,
+    Serial(SerialReducer),
+    Channel(TransportReducer<ChannelTransport>),
+    ChannelFaulty(TransportReducer<FaultTransport<ChannelTransport>>),
+    Tcp(TransportReducer<TcpTransport>),
+    TcpFaulty(TransportReducer<FaultTransport<TcpTransport>>),
+}
+
+impl SessionReducer {
+    fn as_dyn(&mut self) -> Option<&mut dyn Reducer> {
+        match self {
+            SessionReducer::Pool => None,
+            SessionReducer::Serial(r) => Some(r),
+            SessionReducer::Channel(r) => Some(r),
+            SessionReducer::ChannelFaulty(r) => Some(r),
+            SessionReducer::Tcp(r) => Some(r),
+            SessionReducer::TcpFaulty(r) => Some(r),
+        }
+    }
+
+    fn configure(&mut self, timeout: Duration, retries: usize) {
+        fn cfg<T: Transport>(r: &mut TransportReducer<T>, t: Duration, k: usize) {
+            r.set_timeout(t);
+            r.set_max_retries(k);
+        }
+        match self {
+            SessionReducer::Pool | SessionReducer::Serial(_) => {}
+            SessionReducer::Channel(r) => cfg(r, timeout, retries),
+            SessionReducer::ChannelFaulty(r) => cfg(r, timeout, retries),
+            SessionReducer::Tcp(r) => cfg(r, timeout, retries),
+            SessionReducer::TcpFaulty(r) => cfg(r, timeout, retries),
+        }
+    }
+
+    fn wire_stats(&self) -> Option<WireStats> {
+        fn stats<T: Transport>(r: &TransportReducer<T>) -> WireStats {
+            WireStats {
+                collectives: r.calls(),
+                stale_skipped: r.stale_skipped(),
+                last_wire: r.last_wire(),
+            }
+        }
+        match self {
+            SessionReducer::Pool | SessionReducer::Serial(_) => None,
+            SessionReducer::Channel(r) => Some(stats(r)),
+            SessionReducer::ChannelFaulty(r) => Some(stats(r)),
+            SessionReducer::Tcp(r) => Some(stats(r)),
+            SessionReducer::TcpFaulty(r) => Some(stats(r)),
+        }
+    }
+}
+
+/// A live run: worker threads up, transport (if any) connected, optimizer
+/// and compression state owned. Drive it with [`Session::run`] /
+/// [`Session::step`]; close it with [`Session::finish`].
+pub struct Session {
+    coord: Coordinator,
+    engine: RoundEngine,
+    pool: WorkerPool,
+    red: SessionReducer,
+    cfg: TrainConfig,
+    state: TrainState,
+    eval: Option<EvalHook>,
+    checkpoint_every: usize,
+    checkpoint_path: Option<String>,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// The next round this session will execute.
+    pub fn round(&self) -> usize {
+        self.state.round()
+    }
+
+    /// Current surviving world size (shrinks on failover).
+    pub fn world(&self) -> usize {
+        self.pool.workers()
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.coord.params
+    }
+
+    pub fn records(&self) -> &[RoundRecord] {
+        self.state.records()
+    }
+
+    pub fn evals(&self) -> &[(usize, f64, f64)] {
+        self.state.evals()
+    }
+
+    pub fn failovers(&self) -> &[(usize, usize)] {
+        self.state.failovers()
+    }
+
+    /// The compressor's display name.
+    pub fn algorithm(&self) -> String {
+        self.engine.name()
+    }
+
+    /// Wire counters of the transport backend (None for in-process
+    /// backends).
+    pub fn wire_stats(&self) -> Option<WireStats> {
+        self.red.wire_stats()
+    }
+
+    /// Run one synchronous round.
+    pub fn step(&mut self) -> Result<RoundRecord> {
+        self.step_with(None)
+    }
+
+    /// [`Session::step`] with a per-round observer.
+    pub fn step_observed(&mut self, obs: &mut dyn RoundObserver) -> Result<RoundRecord> {
+        self.step_with(Some(obs))
+    }
+
+    fn step_with(&mut self, obs: Option<&mut dyn RoundObserver>) -> Result<RoundRecord> {
+        let rec = self
+            .coord
+            .run_round(
+                &mut self.state,
+                &mut self.pool,
+                &mut self.engine,
+                self.red.as_dyn(),
+                &self.cfg,
+                self.eval.as_deref_mut(),
+                obs,
+            )
+            // keep the typed NetError downcastable: callers distinguish a
+            // retryable Timeout from a PeerDead that exhausted failover
+            .map_err(|e| {
+                anyhow::Error::new(e).context("unrecoverable collective failure")
+            })?;
+        if self.checkpoint_every > 0 && (rec.round + 1) % self.checkpoint_every == 0 {
+            let path = self
+                .checkpoint_path
+                .clone()
+                .expect("checkpoint_path validated at build()");
+            self.save_checkpoint(&path)?;
+        }
+        Ok(rec)
+    }
+
+    /// Run `rounds` more rounds.
+    pub fn run(&mut self, rounds: usize) -> Result<()> {
+        for _ in 0..rounds {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// [`Session::run`] with a per-round observer.
+    pub fn run_observed(
+        &mut self,
+        rounds: usize,
+        obs: &mut dyn RoundObserver,
+    ) -> Result<()> {
+        for _ in 0..rounds {
+            self.step_observed(obs)?;
+        }
+        Ok(())
+    }
+
+    /// Snapshot the full training state (checkpoint v2: params, prev
+    /// params, scaling-rule state, EF residuals, encoder RNG streams).
+    pub fn snapshot(&mut self) -> Result<Checkpoint> {
+        let round = self.state.round() as u64;
+        self.coord.snapshot(&mut self.engine, round)
+    }
+
+    pub fn save_checkpoint(&mut self, path: &str) -> Result<()> {
+        self.snapshot()?.save(path)
+    }
+
+    /// Restore a checkpoint into this session and position the run at its
+    /// round — together with deterministic sources this makes the resumed
+    /// run bit-exact (`tests/chaos.rs` semantics). Momentum restarts from
+    /// zero, exactly as on the legacy resume path.
+    pub fn resume_from(&mut self, path: &str) -> Result<()> {
+        let ck = Checkpoint::load(path)?;
+        let n = self.pool.workers();
+        self.coord.restore(&mut self.engine, n, &ck)?;
+        self.cfg.start_round = ck.round as usize;
+        self.state = self.coord.begin(&self.cfg);
+        Ok(())
+    }
+
+    /// Shut the worker pool down and return the run's full log.
+    pub fn finish(self) -> TrainResult {
+        let Session { coord, mut pool, state, .. } = self;
+        pool.shutdown();
+        coord.finish_run(state)
+    }
+}

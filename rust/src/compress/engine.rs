@@ -354,6 +354,14 @@ pub trait Reducer {
     /// In-process reducers fold whatever messages they are handed, so the
     /// default is a no-op; transport reducers re-key their endpoints.
     fn remove_rank(&mut self, _rank: usize) {}
+
+    /// Read-and-reset the (measured wire seconds, retried attempts) spent
+    /// since the last call, for reducers that move real bytes. `None` for
+    /// in-process folds — the caller then reports the modeled comm cost
+    /// instead (`Coordinator::run_round`'s observer breakdown).
+    fn take_wire_measure(&mut self) -> Option<(f64, u64)> {
+        None
+    }
 }
 
 /// Rank-order fold on the calling thread (the parity reference). The fold

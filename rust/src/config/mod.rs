@@ -4,8 +4,21 @@
 //! layered config system: defaults <- config file (`--config path`) <-
 //! `key=value` CLI overrides. Keys are flat dotted names, e.g.
 //! `train.lr = 0.1`, `net.bandwidth_gbps = 100`.
+//!
+//! Two levels of strictness:
+//!
+//! - the `*_or` getters are lenient (malformed values fall back to the
+//!   default) — legacy behaviour, kept for exploratory experiment knobs;
+//! - [`Config::parsed`] / [`Config::parsed_or`] are strict: a present but
+//!   malformed value is an error, which is what the `Session` front door
+//!   uses so misconfiguration fails before any thread or socket exists;
+//! - [`Config::validate_keys`] rejects unknown/typo'd keys against a
+//!   known-key schema (the `api::keys` lists), with a "did you mean"
+//!   suggestion — silent ignoring of a misspelt knob is how a run quietly
+//!   becomes a different experiment.
 
 use std::collections::BTreeMap;
+use std::str::FromStr;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -90,6 +103,74 @@ impl Config {
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.map.keys().map(|s| s.as_str())
     }
+
+    /// Strict typed access: `Ok(None)` when absent, `Err` when present but
+    /// malformed (the lenient `*_or` getters silently fall back instead).
+    pub fn parsed<T: FromStr>(&self, key: &str) -> Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                anyhow!(
+                    "config key {key} = {v:?} is not a valid {}",
+                    std::any::type_name::<T>()
+                )
+            }),
+        }
+    }
+
+    /// [`Config::parsed`] with a default for the absent case.
+    pub fn parsed_or<T: FromStr>(&self, key: &str, default: T) -> Result<T> {
+        Ok(self.parsed(key)?.unwrap_or(default))
+    }
+
+    /// Reject keys outside `known`, suggesting the closest known key when
+    /// one is plausibly a typo. All offenders are reported at once.
+    pub fn validate_keys(&self, known: &[&str]) -> Result<()> {
+        let mut bad = Vec::new();
+        for key in self.keys() {
+            if known.contains(&key) {
+                continue;
+            }
+            bad.push(match closest(key, known) {
+                Some(s) => format!("unknown config key {key:?}; did you mean {s:?}?"),
+                None => format!("unknown config key {key:?}"),
+            });
+        }
+        if bad.is_empty() {
+            Ok(())
+        } else {
+            Err(anyhow!("{}", bad.join("\n")))
+        }
+    }
+}
+
+/// The closest candidate within a plausible-typo distance, for "did you
+/// mean" suggestions (shared with the `api` compressor registry).
+pub(crate) fn closest<'a>(name: &str, candidates: &[&'a str]) -> Option<&'a str> {
+    candidates
+        .iter()
+        .map(|c| (edit_distance(name, c), *c))
+        .min()
+        .filter(|&(dist, _)| dist <= 2)
+        .map(|(_, c)| c)
+}
+
+/// Levenshtein distance. Names are a handful of characters, so the
+/// O(|a|·|b|) DP is plenty.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for i in 1..=a.len() {
+        cur[0] = i;
+        for j in 1..=b.len() {
+            let subst = usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = (prev[j] + 1).min(cur[j - 1] + 1).min(prev[j - 1] + subst);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -122,5 +203,43 @@ mod tests {
         assert!(Config::parse("no equals sign\n").is_err());
         let mut c = Config::new();
         assert!(c.set_kv("noequals").is_err());
+    }
+
+    #[test]
+    fn strict_getters_error_on_malformed_values() {
+        let c = Config::parse("workers = 8\ntimeout = soon\n").unwrap();
+        assert_eq!(c.parsed_or::<usize>("workers", 1).unwrap(), 8);
+        assert_eq!(c.parsed_or::<usize>("missing", 7).unwrap(), 7);
+        assert_eq!(c.parsed::<u64>("missing").unwrap(), None);
+        let err = c.parsed::<u64>("timeout").unwrap_err().to_string();
+        assert!(err.contains("timeout") && err.contains("soon"), "{err}");
+        // the lenient getter still falls back (legacy behaviour)
+        assert_eq!(c.u64_or("timeout", 5), 5);
+    }
+
+    #[test]
+    fn validate_keys_suggests_the_closest_known_key() {
+        let known = ["workers", "rounds", "net.timeout_ms"];
+        let c = Config::parse("workrs = 8\n").unwrap();
+        let err = c.validate_keys(&known).unwrap_err().to_string();
+        assert!(
+            err.contains("\"workrs\"") && err.contains("did you mean \"workers\""),
+            "{err}"
+        );
+        // far-off garbage gets no absurd suggestion
+        let c = Config::parse("zzzzzz = 1\n").unwrap();
+        let err = c.validate_keys(&known).unwrap_err().to_string();
+        assert!(err.contains("unknown config key") && !err.contains("did you mean"), "{err}");
+        // known keys pass
+        let c = Config::parse("workers = 8\nrounds = 2\n").unwrap();
+        c.validate_keys(&known).unwrap();
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("workers", "workers"), 0);
+        assert_eq!(edit_distance("workrs", "workers"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
     }
 }

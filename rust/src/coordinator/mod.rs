@@ -33,7 +33,8 @@ pub use pjrt_worker::{BatchSpec, PjrtEvaluator, PjrtWorker};
 pub use worker::{GradientSource, WorkerPool};
 
 use crate::compress::engine::{Reducer, RoundEngine};
-use crate::netsim::Network;
+use crate::net::NetError;
+use crate::netsim::{Network, RoundBreakdown};
 use crate::optim::Sgd;
 use crate::runtime::Checkpoint;
 use crate::util::stats::l2_diff_norm_sq;
@@ -135,6 +136,57 @@ impl Default for TrainConfig {
     }
 }
 
+/// Streaming per-round callbacks — the `api::Session` hook that replaces
+/// ad-hoc "collect vecs, post-process later" plumbing. Every method has a
+/// no-op default, so observers implement only what they watch.
+pub trait RoundObserver {
+    /// After every completed round: the record just logged, plus the
+    /// netsim breakdown for the round (carrying measured wire time and
+    /// the retry count when the reduce ran over a real transport, the
+    /// modeled comm cost otherwise).
+    fn on_round(&mut self, _record: &RoundRecord, _breakdown: &RoundBreakdown) {}
+
+    /// After each eval-hook invocation (`TrainConfig::eval_every`).
+    fn on_eval(&mut self, _round: usize, _loss: f64, _accuracy: f64) {}
+
+    /// A rank died mid-round; the world shrank to the survivors and the
+    /// round is being re-run at the smaller n.
+    fn on_failover(&mut self, _round: usize, _dead_rank: usize) {}
+}
+
+/// Per-run mutable state the round loop threads through: the optimizer
+/// (momentum), the accumulating log, and the reused block-norm buffer.
+/// Extracted from the monolithic training loop so single rounds can be
+/// driven externally ([`Coordinator::run_round`] — what `api::Session`'s
+/// `step()` is built on) without losing momentum state between calls.
+pub struct TrainState {
+    opt: Sgd,
+    records: Vec<RoundRecord>,
+    evals: Vec<(usize, f64, f64)>,
+    failovers: Vec<(usize, usize)>,
+    blocks: Vec<BlockInfo>,
+    next_round: usize,
+}
+
+impl TrainState {
+    /// The next round this run will execute.
+    pub fn round(&self) -> usize {
+        self.next_round
+    }
+
+    pub fn records(&self) -> &[RoundRecord] {
+        &self.records
+    }
+
+    pub fn evals(&self) -> &[(usize, f64, f64)] {
+        &self.evals
+    }
+
+    pub fn failovers(&self) -> &[(usize, usize)] {
+        &self.failovers
+    }
+}
+
 /// Result of a full training run.
 pub struct TrainResult {
     pub records: Vec<RoundRecord>,
@@ -220,97 +272,182 @@ impl Coordinator {
         cfg: &TrainConfig,
         mut eval: Option<&mut dyn FnMut(&[f32]) -> (f64, f64)>,
     ) -> TrainResult {
+        let mut st = self.begin(cfg);
+        while st.next_round < cfg.rounds {
+            if let Err(e) = self.run_round(
+                &mut st,
+                pool,
+                engine,
+                red.as_deref_mut(),
+                cfg,
+                eval.as_deref_mut(),
+                None,
+            ) {
+                panic!("unrecoverable collective failure: {e}");
+            }
+        }
+        self.finish_run(st)
+    }
+
+    /// Start a run: fresh optimizer (momentum lives here) and an empty
+    /// log, positioned at `cfg.start_round`. Pair with
+    /// [`Coordinator::run_round`] and [`Coordinator::finish_run`] — the
+    /// exact code path `train`/`train_over` loop over, exposed so
+    /// `api::Session` can drive rounds one at a time.
+    pub fn begin(&self, cfg: &TrainConfig) -> TrainState {
+        TrainState {
+            opt: Sgd::new(self.params.len(), cfg.momentum, cfg.weight_decay),
+            records: Vec::with_capacity(cfg.rounds.saturating_sub(cfg.start_round)),
+            evals: Vec::new(),
+            failovers: Vec::new(),
+            blocks: Vec::with_capacity(self.block_dims.len().max(1)),
+            next_round: cfg.start_round,
+        }
+    }
+
+    /// One synchronous round — the body of the training loop. On a
+    /// permanent rank death the world shrinks to the survivors and the
+    /// SAME round re-runs at the smaller n. The re-run is exactly a fresh
+    /// round at n-1 (tests/chaos.rs): the alpha rules are
+    /// round-idempotent, the stochastic-rounding base is round-keyed (a
+    /// re-encode reuses it), and the dead rank's gradient simply leaves
+    /// the average. Caveat: a *stateful noisy* GradientSource advances
+    /// its noise stream on the recompute — survivor-parity is exact for
+    /// the compression state, and for the data too whenever sources are
+    /// deterministic functions of (params, round).
+    ///
+    /// An unrecoverable collective failure surfaces as the typed
+    /// [`NetError`]; the state is left consistent (the failed round is
+    /// simply not logged), so the caller may retry, resume elsewhere, or
+    /// abort.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_round(
+        &mut self,
+        st: &mut TrainState,
+        pool: &mut WorkerPool,
+        engine: &mut RoundEngine,
+        mut red: Option<&mut dyn Reducer>,
+        cfg: &TrainConfig,
+        mut eval: Option<&mut dyn FnMut(&[f32]) -> (f64, f64)>,
+        mut obs: Option<&mut dyn RoundObserver>,
+    ) -> Result<RoundRecord, NetError> {
         let d = self.params.len();
-        let mut opt = Sgd::new(d, cfg.momentum, cfg.weight_decay);
-        let mut records = Vec::with_capacity(cfg.rounds.saturating_sub(cfg.start_round));
-        let mut evals = Vec::new();
-        let mut failovers = Vec::new();
-        let mut blocks = Vec::with_capacity(self.block_dims.len().max(1));
+        let round = st.next_round;
+        let lr = cfg.schedule.lr_at(round);
 
-        for round in cfg.start_round..cfg.rounds {
-            let lr = cfg.schedule.lr_at(round);
+        let (result, losses, compute_seconds, n) = loop {
+            let n = pool.workers();
 
-            // Run the round; on a permanent rank death, shrink the world
-            // to the survivors and re-run the SAME round at the smaller n.
-            // The re-run is exactly a fresh round at n-1 (tests/chaos.rs):
-            // the alpha rules are round-idempotent, the stochastic-
-            // rounding base is round-keyed (a re-encode reuses it), and
-            // the dead rank's gradient simply leaves the average. Caveat:
-            // a *stateful noisy* GradientSource advances its noise stream
-            // on the recompute — survivor-parity is exact for the
-            // compression state, and for the data too whenever sources
-            // are deterministic functions of (params, round).
-            let (result, losses, compute_seconds, n) = loop {
-                let n = pool.workers();
+            // 1. broadcast params, collect worker gradients (threads)
+            let (grads, losses, compute_seconds) =
+                pool.compute_round(&self.params, round);
 
-                // 1. broadcast params, collect worker gradients (threads)
-                let (grads, losses, compute_seconds) =
-                    pool.compute_round(&self.params, round);
-
-                // 2. compress + aggregate: encode back on the worker
-                //    threads, reduce + decode on the leader. The blocks
-                //    tile the params, so the global step norm is their
-                //    fused sum.
-                self.block_infos(&mut blocks);
-                let step_norm_sq = blocks.iter().map(|b| b.step_norm_sq).sum();
-                let ctx = RoundCtx {
-                    round,
-                    n,
-                    d,
-                    lr,
-                    step_norm_sq,
-                    blocks: std::mem::take(&mut blocks),
-                };
-                let attempt = match &mut red {
-                    Some(r) => engine.round_parallel_over(pool, &mut **r, &grads, &ctx),
-                    None => Ok(engine.round_parallel(pool, &grads, &ctx)),
-                };
-                blocks = ctx.blocks; // reclaim the buffer for the next round
-                match attempt {
-                    Ok(result) => break (result, losses, compute_seconds, n),
-                    Err(e) if e.is_peer_dead() && e.rank() < n && n > 1 => {
-                        let dead = e.rank();
-                        failovers.push((round, dead));
-                        pool.remove_worker(dead);
-                        engine.remove_rank(dead);
-                        if let Some(r) = &mut red {
-                            r.remove_rank(dead);
-                        }
-                        // loop: recompute gradients and re-run at n - 1
-                    }
-                    Err(e) => panic!("unrecoverable collective failure: {e}"),
-                }
-            };
-
-            // 3. optimizer step
-            self.prev_params.copy_from_slice(&self.params);
-            opt.step(&mut self.params, &result.gtilde, lr);
-
-            // 4. account
-            let comm_seconds = self.network.comm_seconds(&result.comm, n);
-            records.push(RoundRecord {
+            // 2. compress + aggregate: encode back on the worker
+            //    threads, reduce + decode on the leader. The blocks
+            //    tile the params, so the global step norm is their
+            //    fused sum.
+            self.block_infos(&mut st.blocks);
+            let step_norm_sq = st.blocks.iter().map(|b| b.step_norm_sq).sum();
+            let ctx = RoundCtx {
                 round,
-                train_loss: losses.iter().map(|&l| l as f64).sum::<f64>() / n as f64,
+                n,
+                d,
                 lr,
-                alpha: result.alpha,
-                max_abs_int: result.max_abs_int,
-                wire_bytes_per_worker: result.wire_bytes_per_worker(),
-                compute_seconds,
-                overhead_seconds: result.encode_seconds + result.decode_seconds,
-                comm_seconds,
-            });
-            // hand the round's buffers back so steady-state rounds stay
-            // off the allocator
-            engine.reclaim(result);
+                step_norm_sq,
+                blocks: std::mem::take(&mut st.blocks),
+            };
+            let attempt = match &mut red {
+                Some(r) => engine.round_parallel_over(pool, &mut **r, &grads, &ctx),
+                None => Ok(engine.round_parallel(pool, &grads, &ctx)),
+            };
+            st.blocks = ctx.blocks; // reclaim the buffer for the next round
+            match attempt {
+                Ok(result) => break (result, losses, compute_seconds, n),
+                Err(e) if e.is_peer_dead() && e.rank() < n && n > 1 => {
+                    let dead = e.rank();
+                    st.failovers.push((round, dead));
+                    if let Some(o) = obs.as_deref_mut() {
+                        o.on_failover(round, dead);
+                    }
+                    pool.remove_worker(dead);
+                    engine.remove_rank(dead);
+                    if let Some(r) = &mut red {
+                        r.remove_rank(dead);
+                    }
+                    // loop: recompute gradients and re-run at n - 1
+                }
+                Err(e) => {
+                    // discard the failed round's wire measure so a later
+                    // successful round's breakdown is not inflated by it
+                    // (failover re-runs above keep theirs: the re-run IS
+                    // the same logical round, and its retries are part of
+                    // that round's cost)
+                    if let Some(r) = &mut red {
+                        let _ = r.take_wire_measure();
+                    }
+                    return Err(e);
+                }
+            }
+        };
 
-            if cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0 {
-                if let Some(f) = eval.as_deref_mut() {
-                    let (l, a) = f(&self.params);
-                    evals.push((round, l, a));
+        // 3. optimizer step
+        self.prev_params.copy_from_slice(&self.params);
+        st.opt.step(&mut self.params, &result.gtilde, lr);
+
+        // 4. account
+        let comm_seconds = self.network.comm_seconds(&result.comm, n);
+        let record = RoundRecord {
+            round,
+            train_loss: losses.iter().map(|&l| l as f64).sum::<f64>() / n as f64,
+            lr,
+            alpha: result.alpha,
+            max_abs_int: result.max_abs_int,
+            wire_bytes_per_worker: result.wire_bytes_per_worker(),
+            compute_seconds,
+            overhead_seconds: result.encode_seconds + result.decode_seconds,
+            comm_seconds,
+        };
+        // drain the per-round wire measure unconditionally: an observer
+        // attached mid-run must see THIS round's wire time, not the
+        // accumulated backlog of every unobserved round before it
+        let wire = red.as_mut().and_then(|r| r.take_wire_measure());
+        if let Some(o) = obs.as_deref_mut() {
+            // measured wire time + retries when the reduce ran over a
+            // real transport, the modeled comm cost otherwise
+            let b = match wire {
+                Some((wire, retries)) => {
+                    self.network.round_breakdown_net(&result, n, wire, retries)
+                }
+                None => self.network.round_breakdown(&result, n),
+            };
+            o.on_round(&record, &b);
+        }
+        st.records.push(record.clone());
+        // hand the round's buffers back so steady-state rounds stay
+        // off the allocator
+        engine.reclaim(result);
+        st.next_round = round + 1;
+
+        if cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0 {
+            if let Some(f) = eval.as_deref_mut() {
+                let (l, a) = f(&self.params);
+                st.evals.push((round, l, a));
+                if let Some(o) = obs.as_deref_mut() {
+                    o.on_eval(round, l, a);
                 }
             }
         }
-        TrainResult { records, evals, final_params: self.params.clone(), failovers }
+        Ok(record)
+    }
+
+    /// Close a run started with [`Coordinator::begin`].
+    pub fn finish_run(&self, st: TrainState) -> TrainResult {
+        TrainResult {
+            records: st.records,
+            evals: st.evals,
+            final_params: self.params.clone(),
+            failovers: st.failovers,
+        }
     }
 
     /// Layout synthesized from the block dims ("block{i}"), or one "flat"

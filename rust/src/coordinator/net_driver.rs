@@ -1,25 +1,28 @@
-//! `repro net-bench` — full IntSGD training rounds over a real transport.
+//! `repro net-bench` — full IntSGD training rounds over a real transport,
+//! wired through the [`crate::api::Session`] front door.
 //!
 //! The multi-thread-loopback driver: n worker threads compute gradients
 //! and encode (as in every other driver), but the integer aggregation
-//! leaves the leader's address space — a `net::TransportReducer` runs the
-//! staged ring (or halving) all-reduce over loopback TCP sockets (or
-//! in-process channels), moving the same framed bytes a multi-node
-//! deployment would. Afterwards the driver replays a few standalone
-//! rounds to print `netsim`'s **measured-vs-modeled** breakdown: real
-//! socket wall-clock next to the alpha-beta cost of the identical wire
-//! schedule ([`Network::round_breakdown_net`]), plus the fault/retry
-//! account when chaos is injected.
+//! leaves the leader's address space — the session's transport backend
+//! runs the staged ring (or halving) all-reduce over loopback TCP sockets
+//! (or in-process channels), moving the same framed bytes a multi-node
+//! deployment would. A [`RoundObserver`] streams `netsim`'s
+//! **measured-vs-modeled** breakdown round by round (real socket
+//! wall-clock next to the alpha-beta cost of the identical wire schedule,
+//! plus the fault/retry account when chaos is injected) — no result-vec
+//! post-processing.
 //!
 //!   repro net-bench workers=4 d=65536 rounds=20 transport=tcp algo=ring
 //!
-//! Knobs (`key=value`):
+//! Knobs (`key=value`; validated against `api::keys::NET`, so a typo is
+//! an error with a suggestion, and malformed numbers fail parsing instead
+//! of silently becoming defaults):
 //!
 //! | key | default | meaning |
 //! |-----|---------|---------|
 //! | `workers`, `d`, `rounds`, `lr`, `seed` | 4, 2^16, 20, 0.2, 100 | job shape |
 //! | `transport` | `tcp` | `tcp` or `channel` |
-//! | `algo` | `ring` | `ring` or `halving` |
+//! | `algo` | `ring` | `ring` or `halving` (halving needs a pow2 world) |
 //! | `net.timeout_ms` | 30000 (env `INTSGD_NET_TIMEOUT_MS`) | blocking-IO deadline; expiry is a typed `NetError::Timeout`, not a generic error |
 //! | `net.retries` | 8 | retried attempts per collective before giving up |
 //! | `fault.drop` / `fault.dup` / `fault.corrupt` / `fault.truncate` / `fault.delay` | 0 | per-frame fault probabilities (seeded, deterministic) |
@@ -30,19 +33,14 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use crate::compress::intsgd::{IntSgd, Rounding, WireInt};
-use crate::compress::RoundEngine;
-use crate::config::Config;
-use crate::net::{
-    FaultPlan, KillAt, StagedAlgo, Transport, TransportReducer,
+use crate::api::{
+    Backend, CompressorSpec, FaultSpec, ModelSpec, RoundBreakdown, RoundObserver,
+    RoundRecord, Session, SourceFactory, StagedAlgo,
 };
-use crate::netsim::Network;
-use crate::scaling::MovingAverageRule;
+use crate::config::Config;
 use crate::util::Rng;
 
-use super::{
-    BlockInfo, Coordinator, GradientSource, LrSchedule, RoundCtx, TrainConfig, WorkerPool,
-};
+use super::{GradientSource, WorkerPool};
 
 /// Synthetic heterogeneous quadratic: f_i(x) = 0.5 ||x - c_i||^2 with
 /// optional gradient noise. Cheap enough that the round cost is
@@ -76,141 +74,153 @@ impl GradientSource for Quad {
     }
 }
 
-/// A worker pool of [`Quad`] oracles: rank i draws its center from
+/// One [`Quad`] factory per rank: rank i draws its center from
 /// `Rng::new(seed + i)` (so callers can recompute the optimum), then
 /// keeps the stream for its gradient noise.
-pub fn quad_pool(n: usize, d: usize, seed: u64, noise: f32) -> WorkerPool {
-    let factories: Vec<Box<dyn FnOnce() -> Box<dyn GradientSource> + Send>> = (0..n)
+pub fn quad_factories(n: usize, d: usize, seed: u64, noise: f32) -> Vec<SourceFactory> {
+    (0..n)
         .map(|i| {
-            let f: Box<dyn FnOnce() -> Box<dyn GradientSource> + Send> =
-                Box::new(move || {
-                    let mut rng = Rng::new(seed + i as u64);
-                    Box::new(Quad {
-                        center: rng.normal_vec(d, 1.0),
-                        noise,
-                        rng,
-                    }) as Box<dyn GradientSource>
-                });
+            let f: SourceFactory = Box::new(move || {
+                let mut rng = Rng::new(seed + i as u64);
+                Box::new(Quad { center: rng.normal_vec(d, 1.0), noise, rng })
+                    as Box<dyn GradientSource>
+            });
             f
         })
-        .collect();
-    WorkerPool::spawn(factories)
+        .collect()
 }
 
-fn intsgd_engine(n: usize, seed: u64) -> RoundEngine {
-    RoundEngine::new(Box::new(IntSgd::new(
-        Rounding::Stochastic,
-        WireInt::Int8,
-        Box::new(MovingAverageRule::default_paper()),
-        n,
-        seed,
-    )))
+/// A spawned pool of [`Quad`] oracles (the tests' shared fixture).
+pub fn quad_pool(n: usize, d: usize, seed: u64, noise: f32) -> WorkerPool {
+    WorkerPool::spawn(quad_factories(n, d, seed, noise))
 }
 
-/// Fault plan from the `fault.*` knobs; None when no chaos is requested.
-/// A malformed or out-of-world `fault.kill_rank` is a typed error, not a
-/// silently different experiment (the driver's contract, like
-/// transport/algo).
-fn fault_plan(
-    cfg: &Config,
-    seed: u64,
-    workers: usize,
-) -> Result<(Option<FaultPlan>, Option<(usize, KillAt)>)> {
-    let plan = FaultPlan {
-        seed: cfg.u64_or("fault.seed", seed),
-        drop_p: cfg.f64_or("fault.drop", 0.0),
-        dup_p: cfg.f64_or("fault.dup", 0.0),
-        corrupt_p: cfg.f64_or("fault.corrupt", 0.0),
-        truncate_p: cfg.f64_or("fault.truncate", 0.0),
-        delay_p: cfg.f64_or("fault.delay", 0.0),
-    };
-    let ps = [plan.drop_p, plan.dup_p, plan.corrupt_p, plan.truncate_p, plan.delay_p];
-    if ps.iter().any(|p| !(0.0..=1.0).contains(p)) || ps.iter().sum::<f64>() > 1.0 {
-        return Err(anyhow!(
-            "fault.* probabilities must each lie in [0, 1] and sum to at most 1 \
-             (got drop={} dup={} corrupt={} truncate={} delay={})",
-            ps[0], ps[1], ps[2], ps[3], ps[4]
-        ));
-    }
-    let kill = match cfg.get("fault.kill_rank") {
-        None => None,
-        Some(r) => {
-            let rank: usize = r
-                .parse()
-                .map_err(|_| anyhow!("fault.kill_rank {r:?} is not a rank"))?;
-            if rank >= workers {
-                return Err(anyhow!(
-                    "fault.kill_rank {rank} outside the world of {workers} workers"
-                ));
+/// Fault spec from the `fault.*` knobs; None when no chaos is requested.
+/// A malformed `fault.kill_rank` is a typed error, not a silently
+/// different experiment; range/world checks happen at `build()`.
+/// `job_seed` is the default fault-stream seed (the legacy contract).
+fn fault_spec(cfg: &Config, job_seed: u64) -> Result<Option<FaultSpec>> {
+    let spec = FaultSpec {
+        seed: Some(cfg.parsed_or("fault.seed", job_seed)?),
+        drop: cfg.parsed_or("fault.drop", 0.0)?,
+        dup: cfg.parsed_or("fault.dup", 0.0)?,
+        corrupt: cfg.parsed_or("fault.corrupt", 0.0)?,
+        truncate: cfg.parsed_or("fault.truncate", 0.0)?,
+        delay: cfg.parsed_or("fault.delay", 0.0)?,
+        kill: match cfg.get("fault.kill_rank") {
+            None => None,
+            Some(r) => {
+                let rank: usize = r
+                    .parse()
+                    .map_err(|_| anyhow!("fault.kill_rank {r:?} is not a rank"))?;
+                Some((rank, cfg.parsed_or("fault.kill_round", 0u32)?))
             }
-            let round = cfg.u64_or("fault.kill_round", 0) as u32;
-            Some((rank, KillAt::Round(round)))
+        },
+    };
+    Ok(spec.is_chaotic().then_some(spec))
+}
+
+/// Streams the training phase: accumulates measured wire time + retries
+/// from the per-round breakdown and reports failovers as they happen.
+#[derive(Default)]
+struct WireWatcher {
+    measured: f64,
+    retries: u64,
+    /// Modeled integer-round comm, skipping the exact fp32 round 0 (the
+    /// measured-vs-modeled ratio is about the integer wire).
+    modeled_int: f64,
+}
+
+impl RoundObserver for WireWatcher {
+    fn on_round(&mut self, rec: &RoundRecord, b: &RoundBreakdown) {
+        self.measured += b.comm_measured;
+        self.retries += b.comm_retries;
+        if rec.round >= 1 {
+            self.modeled_int += rec.comm_seconds;
         }
-    };
-    let any = plan.drop_p + plan.dup_p + plan.corrupt_p + plan.truncate_p + plan.delay_p
-        > 0.0;
-    Ok((any.then_some(plan), kill))
-}
+    }
 
-/// One net-bench job's shape + failure-model knobs.
-#[derive(Clone, Copy)]
-struct Job {
-    n: usize,
-    d: usize,
-    rounds: usize,
-    lr: f32,
-    seed: u64,
-    timeout: Duration,
-    max_retries: usize,
-}
-
-/// Train + measure over a concrete transport (monomorphized per mesh).
-fn drive<T: Transport>(
-    mut red: TransportReducer<T>,
-    label: &str,
-    job: &Job,
-) -> Result<()> {
-    let Job { n, d, rounds, lr, seed, timeout, max_retries } = *job;
-    let red = &mut red;
-    red.set_timeout(timeout);
-    red.set_max_retries(max_retries);
-    let net = Network::tcp_loopback();
-    let mut pool = quad_pool(n, d, seed, 0.01);
-    let mut coord = Coordinator::new(vec![0.0; d], vec![d], net.clone());
-    let mut engine = intsgd_engine(n, seed ^ 0x5EED);
-    let cfg = TrainConfig {
-        rounds,
-        schedule: LrSchedule::constant(lr),
-        ..Default::default()
-    };
-
-    println!(
-        "net-bench: intsgd_random_int8 over {label} ({:?}), n = {n}, d = {d}, {rounds} rounds",
-        red.algo()
-    );
-    let res = coord.train_over(&mut pool, &mut engine, &mut *red, &cfg, None);
-    let first = res.records.first().map(|r| r.train_loss).unwrap_or(f64::NAN);
-    let last = res.records.last().map(|r| r.train_loss).unwrap_or(f64::NAN);
-    let modeled_int: f64 =
-        res.records.iter().skip(1).map(|r| r.comm_seconds).sum();
-    let measured = red.take_wire_seconds();
-    let retries = red.take_retries();
-    println!(
-        "  train loss {first:.4} -> {last:.4}; {} staged collectives \
-         (last wire {:?}, {retries} retried attempts, {} stale frames skipped)",
-        red.calls(),
-        red.last_wire(),
-        red.stale_skipped(),
-    );
-    for (round, rank) in &res.failovers {
+    fn on_failover(&mut self, round: usize, rank: usize) {
         println!("  FAILOVER: rank {rank} died in round {round}; world shrank and trained on");
     }
+}
+
+/// Prints the per-round measured-vs-modeled table rows.
+struct BreakdownPrinter {
+    k: usize,
+}
+
+impl RoundObserver for BreakdownPrinter {
+    fn on_round(&mut self, _rec: &RoundRecord, b: &RoundBreakdown) {
+        println!(
+            "  {:<8} {:>12.6} {:>12.6} {:>12.6} {:>14.6} {:>14.6} {:>8}",
+            self.k, b.encode, b.reduce, b.decode, b.comm_model, b.comm_measured,
+            b.comm_retries
+        );
+        self.k += 1;
+    }
+}
+
+pub fn run(cfg: &Config) -> Result<()> {
+    let n = cfg.parsed_or("workers", 4usize)?;
+    let d = cfg.parsed_or("d", 1usize << 16)?;
+    let rounds = cfg.parsed_or("rounds", 20usize)?;
+    let lr = cfg.parsed_or("lr", 0.2f32)?;
+    let seed = cfg.parsed_or("seed", 100u64)?;
+    let algo = match cfg.str_or("algo", "ring") {
+        "ring" => StagedAlgo::Ring,
+        "halving" => StagedAlgo::Halving,
+        other => return Err(anyhow!("unknown staged algo {other:?} (ring|halving)")),
+    };
+    let (backend, label) = match cfg.str_or("transport", "tcp") {
+        "tcp" => (Backend::Tcp { algo }, "tcp-loopback"),
+        "channel" => (Backend::Channel { algo }, "in-proc channels"),
+        other => return Err(anyhow!("unknown transport {other:?} (tcp|channel)")),
+    };
+    let faults = fault_spec(cfg, seed)?;
+    let chaos = faults.is_some();
+
+    let mut builder = Session::builder()
+        .world(n)
+        .model(ModelSpec::flat(d))
+        .sources(quad_factories(n, d, seed, 0.01))
+        .compressor(CompressorSpec::parse("intsgd_random8")?)
+        .seed(seed ^ 0x5EED)
+        .lr(lr)
+        .backend(backend)
+        .net_timeout(Duration::from_millis(cfg.parsed_or(
+            "net.timeout_ms",
+            crate::net::default_io_timeout().as_millis() as u64,
+        )?))
+        .net_retries(cfg.parsed_or("net.retries", 8usize)?);
+    if let Some(f) = faults {
+        builder = builder.faults(f);
+    }
+    let mut session = builder.build()?;
+
+    println!(
+        "net-bench: {} over {label}{} ({algo:?}), n = {n}, d = {d}, {rounds} rounds",
+        session.algorithm(),
+        if chaos { "+faults" } else { "" },
+    );
+    let mut watch = WireWatcher::default();
+    session.run_observed(rounds, &mut watch)?;
+
+    let records = session.records();
+    let first = records.first().map(|r| r.train_loss).unwrap_or(f64::NAN);
+    let last = records.last().map(|r| r.train_loss).unwrap_or(f64::NAN);
+    let stats = session.wire_stats().expect("transport backend has wire stats");
+    println!(
+        "  train loss {first:.4} -> {last:.4}; {} staged collectives \
+         (last wire {:?}, {} retried attempts, {} stale frames skipped)",
+        stats.collectives, stats.last_wire, watch.retries, stats.stale_skipped,
+    );
     println!(
         "  integer-round wire time: measured {:.3} ms, modeled {:.3} ms \
          (ratio {:.2})",
-        measured * 1e3,
-        modeled_int * 1e3,
-        measured / modeled_int.max(1e-12)
+        watch.measured * 1e3,
+        watch.modeled_int * 1e3,
+        watch.measured / watch.modeled_int.max(1e-12)
     );
     if last.is_nan() || last >= first {
         return Err(anyhow!(
@@ -218,94 +228,17 @@ fn drive<T: Transport>(
         ));
     }
 
-    // standalone rounds: the per-round measured-vs-modeled breakdown
-    // (run at the post-failover world size, if any rank died)
-    let n = pool.workers();
+    // a few more observed rounds: the per-round measured-vs-modeled
+    // breakdown table (at the post-failover world size, if a rank died)
     println!("\n  round breakdown (seconds measured on this machine):");
     println!(
         "  {:<8} {:>12} {:>12} {:>12} {:>14} {:>14} {:>8}",
         "round", "encode", "reduce", "decode", "comm_model", "comm_measured", "retries"
     );
-    let ctx = RoundCtx {
-        round: rounds.max(1),
-        n,
-        d,
-        lr,
-        step_norm_sq: 1e-4,
-        blocks: vec![BlockInfo { dim: d, step_norm_sq: 1e-4 }],
-    };
-    for k in 0..3 {
-        let (grads, _, _) = pool.compute_round(&coord.params, rounds + k);
-        let result = engine
-            .round_parallel_over(&mut pool, &mut *red, &grads, &ctx)
-            .map_err(|e| anyhow!("standalone breakdown round failed: {e}"))?;
-        let b = net.round_breakdown_net(
-            &result,
-            n,
-            red.take_wire_seconds(),
-            red.take_retries(),
-        );
-        println!(
-            "  {:<8} {:>12.6} {:>12.6} {:>12.6} {:>14.6} {:>14.6} {:>8}",
-            k, b.encode, b.reduce, b.decode, b.comm_model, b.comm_measured, b.comm_retries
-        );
-        engine.reclaim(result);
-    }
-    pool.shutdown();
+    let mut printer = BreakdownPrinter { k: 0 };
+    session.run_observed(3, &mut printer)?;
+    session.finish();
     Ok(())
-}
-
-pub fn run(cfg: &Config) -> Result<()> {
-    let n = cfg.usize_or("workers", 4);
-    let d = cfg.usize_or("d", 1 << 16);
-    let rounds = cfg.usize_or("rounds", 20);
-    let lr = cfg.f32_or("lr", 0.2);
-    let seed = cfg.u64_or("seed", 100);
-    let algo = match cfg.str_or("algo", "ring") {
-        "ring" => StagedAlgo::Ring,
-        "halving" => StagedAlgo::Halving,
-        other => return Err(anyhow!("unknown staged algo {other:?} (ring|halving)")),
-    };
-    let (plan, kill) = fault_plan(cfg, seed, n)?;
-    let chaos = plan.is_some() || kill.is_some();
-    let job = Job {
-        n,
-        d,
-        rounds,
-        lr,
-        seed,
-        timeout: Duration::from_millis(cfg.u64_or(
-            "net.timeout_ms",
-            crate::net::default_io_timeout().as_millis() as u64,
-        )),
-        max_retries: cfg.usize_or("net.retries", 8),
-    };
-    let plan = plan.unwrap_or_else(|| FaultPlan::clean(seed));
-    match cfg.str_or("transport", "tcp") {
-        "tcp" => {
-            let mesh = crate::net::TcpTransport::loopback_mesh(n)?;
-            if chaos {
-                let wrapped = crate::net::FaultTransport::wrap_mesh(mesh, &plan, kill);
-                drive(TransportReducer::new(wrapped, algo), "tcp-loopback+faults", &job)
-            } else {
-                drive(TransportReducer::new(mesh, algo), "tcp-loopback", &job)
-            }
-        }
-        "channel" => {
-            let mesh = crate::net::ChannelTransport::mesh(n);
-            if chaos {
-                let wrapped = crate::net::FaultTransport::wrap_mesh(mesh, &plan, kill);
-                drive(
-                    TransportReducer::new(wrapped, algo),
-                    "in-proc channels+faults",
-                    &job,
-                )
-            } else {
-                drive(TransportReducer::new(mesh, algo), "in-proc channels", &job)
-            }
-        }
-        other => Err(anyhow!("unknown transport {other:?} (tcp|channel)")),
-    }
 }
 
 #[cfg(test)]
@@ -363,5 +296,23 @@ mod tests {
             cfg.set_kv(kv).unwrap();
         }
         assert!(run(&cfg).unwrap_err().to_string().contains("outside the world"));
+        // a malformed numeric knob is a parse error, not a silent default
+        let mut cfg = Config::new();
+        cfg.set_kv("net.timeout_ms=soon").unwrap();
+        assert!(run(&cfg).unwrap_err().to_string().contains("net.timeout_ms"));
+        // a negative fault probability is an error, not silently "no chaos"
+        // (even when the knobs sum to zero)
+        let mut cfg = Config::new();
+        for kv in ["transport=channel", "fault.drop=-0.3", "fault.dup=0.3"] {
+            cfg.set_kv(kv).unwrap();
+        }
+        assert!(run(&cfg).unwrap_err().to_string().contains("[0, 1]"));
+        // halving-doubling needs a power-of-two world — at build(), before
+        // any socket exists
+        let mut cfg = Config::new();
+        for kv in ["transport=channel", "workers=3", "algo=halving"] {
+            cfg.set_kv(kv).unwrap();
+        }
+        assert!(run(&cfg).unwrap_err().to_string().contains("power-of-two"));
     }
 }

@@ -1,6 +1,7 @@
-//! Shared experiment infrastructure: algorithm factory, task builders, and
-//! the generic "train task X with algorithm Y" runner used by every
-//! table/figure driver.
+//! Shared experiment infrastructure: task builders and the generic
+//! "train task X with algorithm Y" runner used by every table/figure
+//! driver — all thin layers over the [`crate::api::Session`] front door
+//! (the compressor zoo itself lives in [`crate::api::CompressorSpec`]).
 //!
 //! Scale note: the paper ran 16 V100s for 90-300 epochs; this repo runs
 //! synthetic stand-ins on CPU (see DESIGN.md). Experiment defaults are
@@ -12,20 +13,11 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::compress::{
-    powersgd::BlockShape, HeuristicIntSgd, IdentitySgd, IntSgd, NatSgd,
-    PhasedCompressor, PowerSgd, Qsgd, RoundEngine, SignSgd, TopK,
-};
-use crate::compress::intsgd::{Rounding, WireInt};
+use crate::api::{CompressorSpec, ModelSpec, Session, SourceFactory};
 use crate::config::Config;
-use crate::coordinator::{
-    BatchSpec, Coordinator, LrSchedule, PjrtEvaluator, PjrtWorker, TrainConfig,
-    TrainResult, WorkerPool,
-};
+use crate::coordinator::{BatchSpec, LrSchedule, PjrtEvaluator, PjrtWorker, TrainResult};
 use crate::data::{shard_iid, CifarLike, MarkovText};
-use crate::netsim::Network;
 use crate::runtime::{init_params, lit_f32, lit_i32, Runtime};
-use crate::scaling::{BlockRule, MovingAverageRule, Prop3Rule};
 
 /// The two deep-learning tasks of §5.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -81,119 +73,9 @@ pub fn model_layout(rt: &Runtime, model: &str) -> Result<Vec<Vec<usize>>> {
     Ok(meta.params.iter().map(|p| p.shape.clone()).collect())
 }
 
-/// Build a compressor by its experiment id. The result drives either
-/// `RoundEngine` entry point (parallel in `run_task`, sequential in the
-/// standalone examples).
-pub fn make_compressor(
-    name: &str,
-    n: usize,
-    layout: &[Vec<usize>],
-    beta: f64,
-    eps: f64,
-    seed: u64,
-) -> Result<Box<dyn PhasedCompressor>> {
-    let numels: Vec<usize> = layout
-        .iter()
-        .map(|s| s.iter().product::<usize>().max(1))
-        .collect();
-    Ok(match name {
-        "sgd_ar" => Box::new(IdentitySgd::allreduce()),
-        "sgd_ag" => Box::new(IdentitySgd::allgather()),
-        "intsgd_random8" => Box::new(IntSgd::new(
-            Rounding::Stochastic,
-            WireInt::Int8,
-            Box::new(MovingAverageRule::new(beta, eps)),
-            n,
-            seed,
-        )),
-        "intsgd_random32" => Box::new(IntSgd::new(
-            Rounding::Stochastic,
-            WireInt::Int32,
-            Box::new(MovingAverageRule::new(beta, eps)),
-            n,
-            seed,
-        )),
-        "intsgd_determ8" => Box::new(IntSgd::new(
-            Rounding::Deterministic,
-            WireInt::Int8,
-            Box::new(MovingAverageRule::new(beta, eps)),
-            n,
-            seed,
-        )),
-        "intsgd_determ32" => Box::new(IntSgd::new(
-            Rounding::Deterministic,
-            WireInt::Int32,
-            Box::new(MovingAverageRule::new(beta, eps)),
-            n,
-            seed,
-        )),
-        "intsgd_prop3_32" => Box::new(IntSgd::new(
-            Rounding::Stochastic,
-            WireInt::Int32,
-            Box::new(Prop3Rule),
-            n,
-            seed,
-        )),
-        "intsgd_block8" => Box::new({
-            let mut c = IntSgd::new(
-                Rounding::Stochastic,
-                WireInt::Int8,
-                Box::new(BlockRule::new(beta, eps)),
-                n,
-                seed,
-            );
-            c.use_switch = false;
-            c
-        }),
-        "intsgd_switch8" => Box::new({
-            let mut c = IntSgd::new(
-                Rounding::Stochastic,
-                WireInt::Int8,
-                Box::new(MovingAverageRule::new(beta, eps)),
-                n,
-                seed,
-            );
-            c.use_switch = true;
-            c
-        }),
-        "heuristic8" => Box::new(HeuristicIntSgd::new(8)),
-        "heuristic32" => Box::new(HeuristicIntSgd::new(32)),
-        "qsgd" => Box::new(Qsgd::new(64, numels, n, seed)),
-        "natsgd" => Box::new(NatSgd::new(n, seed)),
-        "powersgd" => Box::new(PowerSgd::new(
-            2,
-            layout.iter().map(|s| BlockShape { dims: s.clone() }).collect(),
-            n,
-            seed,
-        )),
-        "powersgd_rank4" => Box::new(PowerSgd::new(
-            4,
-            layout.iter().map(|s| BlockShape { dims: s.clone() }).collect(),
-            n,
-            seed,
-        )),
-        "topk" => Box::new(TopK::new(0.01, n)),
-        "signsgd" => Box::new(SignSgd::new(n)),
-        other => return Err(anyhow!("unknown algorithm {other:?}")),
-    })
-}
-
-/// The display names used in the paper's tables.
+/// The display names used in the paper's tables (by experiment id).
 pub fn paper_name(algo: &str) -> &'static str {
-    match algo {
-        "sgd_ag" => "SGD (All-gather)",
-        "sgd_ar" => "SGD (All-reduce)",
-        "qsgd" => "QSGD",
-        "natsgd" => "NatSGD",
-        "powersgd" | "powersgd_rank4" => "PowerSGD (EF)",
-        "intsgd_determ8" | "intsgd_determ32" => "IntSGD (Determ.)",
-        "intsgd_random8" | "intsgd_random32" => "IntSGD (Random)",
-        "heuristic8" => "Heuristic IntSGD (8-bit)",
-        "heuristic32" => "Heuristic IntSGD (32-bit)",
-        "topk" => "Top-k (EF)",
-        "signsgd" => "SignSGD (EF)",
-        _ => "?",
-    }
+    CompressorSpec::parse(algo).map(|s| s.paper_name()).unwrap_or("?")
 }
 
 /// Output of one (task, algorithm, seed) run.
@@ -214,6 +96,32 @@ pub fn run_task(
     seed: u64,
     cfg: &Config,
 ) -> Result<RunOutput> {
+    let spec = CompressorSpec::parse(algo)?;
+    let mut session = task_session(task, &spec, s, beta, eps, seed, cfg)?;
+    session.run(s.rounds)?;
+    let result = session.finish();
+    let test = result
+        .evals
+        .last()
+        .map(|&(_, l, a)| (l, a))
+        .unwrap_or((f64::NAN, 0.0));
+    Ok(RunOutput { result, test })
+}
+
+/// Build a ready-to-run [`Session`] for one of the paper's PJRT-backed
+/// tasks: manifest-derived model layout and init, per-rank PJRT worker
+/// factories over sharded synthetic data, the paper's warmup + /10
+/// milestone schedule, and an eval hook bound to the task's test split.
+#[allow(clippy::too_many_arguments)]
+pub fn task_session(
+    task: Task,
+    spec: &CompressorSpec,
+    s: &Setup,
+    beta: f64,
+    eps: f64,
+    seed: u64,
+    cfg: &Config,
+) -> Result<Session> {
     let model = task.model_name();
     let rt = Runtime::open(&s.artifact_dir)?;
     let layout = model_layout(&rt, model)?;
@@ -221,7 +129,7 @@ pub fn run_task(
 
     // -- data ----------------------------------------------------------
     let n = s.workers;
-    let factories: Vec<Box<dyn FnOnce() -> Box<dyn crate::coordinator::GradientSource> + Send>> =
+    let factories: Vec<SourceFactory> =
         match task {
             Task::Classifier => {
                 let train = cfg.usize_or("train_examples", 4096);
@@ -295,34 +203,7 @@ pub fn run_task(
     // -- eval hook -------------------------------------------------------
     let mut evaluator = PjrtEvaluator::new(&s.artifact_dir, model)?;
     let mut eval_data_provider = make_eval_provider(task, &meta, cfg, seed)?;
-
-    // -- leader ----------------------------------------------------------
-    let specs = meta.params.clone();
-    let init: Vec<f32> = init_params(&specs, 42 + seed).concat();
-    let block_dims: Vec<usize> = layout
-        .iter()
-        .map(|s| s.iter().product::<usize>().max(1))
-        .collect();
-    let mut coord = Coordinator::new(init, block_dims, Network::paper_cluster());
-    let mut engine = RoundEngine::new(make_compressor(algo, n, &layout, beta, eps, 77 + seed)?);
-    let mut pool = WorkerPool::spawn(factories);
-    let warmup = cfg.usize_or("warmup_rounds", s.rounds / 20);
-    let cfg_train = TrainConfig {
-        rounds: s.rounds,
-        start_round: 0,
-        schedule: LrSchedule {
-            base: s.lr,
-            warmup_rounds: warmup,
-            milestones: vec![
-                (s.rounds / 2, 0.1),
-                (s.rounds * 5 / 6, 0.1),
-            ],
-        },
-        momentum: s.momentum,
-        weight_decay: s.weight_decay,
-        eval_every: s.eval_every,
-    };
-    let mut eval_hook = |params: &[f32]| -> (f64, f64) {
+    let eval_hook = move |params: &[f32]| -> (f64, f64) {
         let data = eval_data_provider();
         match evaluator.eval(params, data) {
             Ok(outs) => (
@@ -335,15 +216,28 @@ pub fn run_task(
             }
         }
     };
-    let result = coord.train(&mut pool, &mut engine, &cfg_train, Some(&mut eval_hook));
-    pool.shutdown();
 
-    let test = result
-        .evals
-        .last()
-        .map(|&(_, l, a)| (l, a))
-        .unwrap_or((f64::NAN, 0.0));
-    Ok(RunOutput { result, test })
+    // -- the session ----------------------------------------------------
+    let init: Vec<f32> = init_params(&meta.params, 42 + seed).concat();
+    let warmup = cfg.usize_or("warmup_rounds", s.rounds / 20);
+    Session::builder()
+        .world(n)
+        .model(ModelSpec::with_params(init, layout))
+        .sources(factories)
+        .compressor(spec.clone())
+        .beta(beta)
+        .eps(eps)
+        .seed(77 + seed)
+        .schedule(LrSchedule {
+            base: s.lr,
+            warmup_rounds: warmup,
+            milestones: vec![(s.rounds / 2, 0.1), (s.rounds * 5 / 6, 0.1)],
+        })
+        .momentum(s.momentum)
+        .weight_decay(s.weight_decay)
+        .eval_every(s.eval_every)
+        .eval_hook(Box::new(eval_hook))
+        .build()
 }
 
 /// Builds a closure producing fresh eval-batch literals each call.

@@ -1,9 +1,12 @@
 //! `repro train` — the generic launcher: train any model with any
-//! algorithm, with checkpointing. This is the "framework" entrypoint
-//! (experiment drivers are canned protocols on top of the same API).
+//! algorithm, with checkpointing. A thin wrapper over
+//! `common::task_session` / the `api::Session` front door (experiment
+//! drivers are canned protocols on top of the same API); the algorithm id
+//! parses through `api::CompressorSpec`, so an unknown id fails with a
+//! suggestion before any worker spawns.
 //!
 //!   repro train model=classifier algo=intsgd_random8 rounds=200 \
-//!        workers=8 lr=0.1 save=ckpt/cls.intsgd resume=ckpt/cls.intsgd
+//!        workers=8 lr=0.1 save=ckpt/cls.intsgd
 
 use anyhow::{anyhow, Result};
 

@@ -12,9 +12,15 @@
 //!   cost model, optimizers, data substrates, and the experiment drivers
 //!   that regenerate every table and figure of the paper.
 //!
+//! The public entry point is [`api::Session`]: a typed, validated builder
+//! over train / net / fault / checkpoint paths (DESIGN.md §8). The CLI
+//! subcommands, experiment drivers, and examples are all thin layers over
+//! it.
+//!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for
 //! paper-vs-measured results.
 
+pub mod api;
 pub mod collective;
 pub mod compress;
 pub mod config;

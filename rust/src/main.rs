@@ -1,7 +1,15 @@
 //! `repro` — the IntSGD reproduction launcher.
+//!
+//! Every subcommand is a thin layer over the typed `api::Session` front
+//! door: the CLI's only jobs are to assemble a `Config` (one shared
+//! `--config`/`key=value` parser for all subcommands) and to validate it
+//! against the subcommand's known-key schema (`api::keys`) so a typo'd
+//! knob fails loudly — with a suggestion — instead of silently running a
+//! different experiment.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
+use intsgd::api;
 use intsgd::config::Config;
 
 const USAGE: &str = "\
@@ -18,53 +26,46 @@ USAGE:
   repro list                                       list experiments
   repro artifacts                                  show artifact manifest
 
-Experiments write results/<id>*.csv; see DESIGN.md §4 for the index.
+Experiments write results/<id>*.csv; see DESIGN.md §4 for the index and
+§8 for the Session API the subcommands drive.
 ";
+
+/// The one `--config file` / `key=value` parser every subcommand shares.
+fn cli_config(args: &[String]) -> Result<Config> {
+    let mut cfg = Config::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--config" {
+            i += 1;
+            let path = args
+                .get(i)
+                .ok_or_else(|| anyhow!("--config expects a file path"))?;
+            cfg.merge(Config::load(path)?);
+        } else {
+            cfg.set_kv(&args[i])?;
+        }
+        i += 1;
+    }
+    Ok(cfg)
+}
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(|s| s.as_str()) {
         Some("exp") => {
             let id = args.get(1).map(|s| s.as_str()).unwrap_or("");
-            let mut cfg = Config::new();
-            let mut i = 2;
-            while i < args.len() {
-                if args[i] == "--config" {
-                    i += 1;
-                    cfg.merge(Config::load(&args[i])?);
-                } else {
-                    cfg.set_kv(&args[i])?;
-                }
-                i += 1;
-            }
+            let cfg = cli_config(&args[2.min(args.len())..])?;
+            cfg.validate_keys(api::keys::EXP)?;
             intsgd::experiments::run(id, &cfg)
         }
         Some("train") => {
-            let mut cfg = Config::new();
-            let mut i = 1;
-            while i < args.len() {
-                if args[i] == "--config" {
-                    i += 1;
-                    cfg.merge(Config::load(&args[i])?);
-                } else {
-                    cfg.set_kv(&args[i])?;
-                }
-                i += 1;
-            }
+            let cfg = cli_config(&args[1..])?;
+            cfg.validate_keys(api::keys::TRAIN)?;
             intsgd::experiments::train_cmd::run(&cfg)
         }
         Some("net-bench") => {
-            let mut cfg = Config::new();
-            let mut i = 1;
-            while i < args.len() {
-                if args[i] == "--config" {
-                    i += 1;
-                    cfg.merge(Config::load(&args[i])?);
-                } else {
-                    cfg.set_kv(&args[i])?;
-                }
-                i += 1;
-            }
+            let cfg = cli_config(&args[1..])?;
+            cfg.validate_keys(api::keys::NET)?;
             intsgd::coordinator::net_driver::run(&cfg)
         }
         Some("list") => {

@@ -138,6 +138,12 @@ pub struct TransportReducer<T: Transport> {
     max_retries: usize,
     last_wire: Option<Lanes>,
     abort: Arc<AtomicBool>,
+    /// High-water marks of `wire_seconds`/`retries` at the last
+    /// [`Reducer::take_wire_measure`] — per-round deltas for the observer
+    /// breakdown without resetting the cumulative counters the tests and
+    /// summary reports read.
+    wire_mark: f64,
+    retries_mark: u64,
 }
 
 impl TransportReducer<ChannelTransport> {
@@ -185,6 +191,8 @@ impl<T: Transport> TransportReducer<T> {
             max_retries: DEFAULT_MAX_RETRIES,
             last_wire: None,
             abort,
+            wire_mark: 0.0,
+            retries_mark: 0,
         }
     }
 
@@ -221,6 +229,7 @@ impl<T: Transport> TransportReducer<T> {
     /// Read and reset the measured wire time (drivers call this once per
     /// training round to attribute socket time round by round).
     pub fn take_wire_seconds(&mut self) -> f64 {
+        self.wire_mark = 0.0;
         std::mem::take(&mut self.wire_seconds)
     }
 
@@ -237,6 +246,7 @@ impl<T: Transport> TransportReducer<T> {
 
     /// Read and reset the retry counter (per-round attribution).
     pub fn take_retries(&mut self) -> u64 {
+        self.retries_mark = 0;
         std::mem::take(&mut self.retries)
     }
 
@@ -369,6 +379,19 @@ impl<T: Transport> Reducer for TransportReducer<T> {
             "ranks disagree on the aggregate — the collective is torn"
         );
         Ok(())
+    }
+
+    /// The measured side of netsim's measured-vs-modeled comparison: this
+    /// reducer moves real bytes, so per-round wire wall-clock and retry
+    /// counts are attributable (`Network::round_breakdown_net`). Deltas
+    /// are tracked against high-water marks, so the cumulative
+    /// `wire_seconds()`/`retries()` readers keep their totals.
+    fn take_wire_measure(&mut self) -> Option<(f64, u64)> {
+        let wire = self.wire_seconds - self.wire_mark;
+        let retries = self.retries - self.retries_mark;
+        self.wire_mark = self.wire_seconds;
+        self.retries_mark = self.retries;
+        Some((wire, retries))
     }
 
     /// Shrink the world to the survivors: drop the dead rank's endpoint
