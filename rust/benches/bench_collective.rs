@@ -22,12 +22,19 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use intsgd::collective::{allreduce_i64, allreduce_intvec, ring_allreduce_f32, InaSwitch};
-use intsgd::compress::intsgd::WireInt;
+use intsgd::compress::intsgd::{IntSgd, Rounding, WireInt};
 use intsgd::compress::intvec::{IntVec, Lanes};
-use intsgd::compress::Primitive;
-use intsgd::net::staged::{ring_allreduce_ints, StagedScratch};
-use intsgd::net::{ChannelTransport, TcpTransport, Transport};
+use intsgd::compress::{PhasedCompressor, Primitive, RoundEngine};
+use intsgd::coordinator::{BlockInfo, RoundCtx, WorkerPool};
+use intsgd::net::staged::{
+    halving_allreduce_ints, ring_allreduce_ints, two_level_allreduce_ints,
+    StagedScratch,
+};
+use intsgd::net::{
+    ChannelTransport, StagedAlgo, TcpTransport, Transport, TransportReducer,
+};
 use intsgd::netsim::Network;
+use intsgd::scaling::MovingAverageRule;
 use intsgd::util::json::{self, Json};
 use intsgd::util::stats::median;
 use intsgd::util::Rng;
@@ -194,6 +201,203 @@ fn net_cases(iters: usize, d: usize, worlds: &[usize]) -> Json {
     Json::Arr(rows)
 }
 
+/// One timed staged all-reduce under any of the three schedules.
+fn staged_round_algo<T: Transport>(
+    endpoints: &mut [T],
+    msgs: &[IntVec],
+    states: &mut [(StagedScratch, Vec<i64>)],
+    round: u32,
+    algo: &str,
+    group: usize,
+    wire: Lanes,
+) -> f64 {
+    let t = Instant::now();
+    std::thread::scope(|s| {
+        for ((ep, msg), state) in endpoints.iter_mut().zip(msgs).zip(states.iter_mut()) {
+            s.spawn(move || {
+                let (scratch, out) = state;
+                match algo {
+                    "ring" => ring_allreduce_ints(ep, msg, wire, round, scratch, out),
+                    "halving" => {
+                        halving_allreduce_ints(ep, msg, wire, round, scratch, out)
+                    }
+                    "two_level" => two_level_allreduce_ints(
+                        ep, msg, wire, round, group, scratch, out,
+                    ),
+                    _ => unreachable!("unknown schedule"),
+                }
+                .expect("staged collective");
+            });
+        }
+    });
+    t.elapsed().as_secs_f64()
+}
+
+/// Part 3: schedule scaling past the flat-ring wall — ring vs
+/// halving-doubling vs two-level hierarchical over in-process channels at
+/// growing world sizes. Every exact all-reduce moves the same total
+/// payload (~2(n-1)d wire bytes — conservation); what the hierarchy buys
+/// is the hop count, O(n) on the flat ring vs O(log n) for the others,
+/// which is exactly the latency wall the channel mesh exposes (no
+/// bandwidth cost in-process, schedule cost only). `worlds` pairs each n
+/// with the two-level group size g (ranks per simulated "node").
+fn scaling_cases(iters: usize, d: usize, worlds: &[(usize, usize)]) -> Json {
+    let mut rows = Vec::new();
+    for &(n, group) in worlds {
+        // wide enough values to be honest work, i32 partials provably fit
+        let mut rng = Rng::new(23);
+        let msgs: Vec<IntVec> = (0..n)
+            .map(|_| {
+                let vals: Vec<i64> =
+                    (0..d).map(|_| rng.below(2001) as i64 - 1000).collect();
+                IntVec::from_i64(&vals, Lanes::I32)
+            })
+            .collect();
+        let views: Vec<&IntVec> = msgs.iter().collect();
+        let mut want = Vec::new();
+        allreduce_intvec(&views, &mut want);
+        println!(
+            "\nschedule scaling: d = 2^{}, n = {n}, group = {group}",
+            d.trailing_zeros()
+        );
+
+        let mut algo_s = Vec::new();
+        for algo in ["ring", "halving", "two_level"] {
+            let mut mesh = ChannelTransport::mesh(n);
+            let mut states: Vec<(StagedScratch, Vec<i64>)> =
+                (0..n).map(|_| Default::default()).collect();
+            let mut round = 0u32;
+            let s = bench(&format!("{algo:<18} n={n}"), iters, || {
+                let s = staged_round_algo(
+                    &mut mesh, &msgs, &mut states, round, algo, group, Lanes::I32,
+                );
+                round += 1;
+                s
+            });
+            assert_eq!(states[0].1, want, "{algo} n={n}: wrong bits");
+            algo_s.push(s);
+        }
+
+        let log2 = |x: usize| x.trailing_zeros() as usize;
+        let bytes_total = 2 * (n - 1) * d * Lanes::I32.bytes();
+        rows.push(obj(vec![
+            ("d", num(d as f64)),
+            ("n", num(n as f64)),
+            ("group", num(group as f64)),
+            ("wire_bytes_total", num(bytes_total as f64)),
+            ("ring_ms", num(algo_s[0] * 1e3)),
+            ("halving_ms", num(algo_s[1] * 1e3)),
+            ("two_level_ms", num(algo_s[2] * 1e3)),
+            ("ring_hops", num((2 * (n - 1)) as f64)),
+            ("halving_hops", num((2 * log2(n)) as f64)),
+            ("two_level_hops", num((2 + 2 * log2(n / group)) as f64)),
+        ]));
+    }
+    Json::Arr(rows)
+}
+
+/// Part 4: full engine rounds, streamed pipeline vs barrier, IntSGD int8
+/// over a `ChannelTransport` ring reducer — the tentpole's acceptance
+/// measurement. Bit-parity is asserted every round; the wall-clock ratio
+/// and the overlap-aware vs sequential model columns are *reported* (the
+/// CI smoke runs at tiny d where the split is expected to lose — the
+/// full-size run is where streamed must win).
+fn pipeline_cases(iters: usize, d: usize) -> Json {
+    let n = 16;
+    let nblocks = 8usize;
+    let mut rng = Rng::new(11);
+    let grads: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 0.05)).collect();
+    let dims: Vec<usize> = vec![d / nblocks; nblocks];
+    let mk = || {
+        RoundEngine::new(Box::new(IntSgd::new(
+            Rounding::Stochastic,
+            WireInt::Int8,
+            Box::new(MovingAverageRule::default_paper()),
+            n,
+            21,
+        )) as Box<dyn PhasedCompressor>)
+    };
+    let mut barrier = mk();
+    let mut streamed = mk();
+    let mut pool = WorkerPool::for_encode(n);
+    let mut red_b = TransportReducer::channel_mesh(n, StagedAlgo::Ring);
+    let mut red_s = TransportReducer::channel_mesh(n, StagedAlgo::Ring);
+    println!(
+        "\nstreamed vs barrier engine rounds: d = 2^{}, n = {n}, {nblocks} blocks \
+         (ChannelTransport ring)",
+        d.trailing_zeros()
+    );
+
+    let (mut wall_b, mut wall_s) = (Vec::new(), Vec::new());
+    let (mut enc, mut dec) = (Vec::new(), Vec::new());
+    for round in 0..iters + 2 {
+        let ctx = RoundCtx {
+            round,
+            n,
+            d,
+            lr: 0.1,
+            step_norm_sq: 1e-4,
+            blocks: dims
+                .iter()
+                .map(|&dim| BlockInfo { dim, step_norm_sq: 1e-4 / nblocks as f64 })
+                .collect(),
+        };
+        let t = Instant::now();
+        let rb = barrier
+            .round_parallel_over(&mut pool, &mut red_b, &grads, &ctx)
+            .expect("barrier round");
+        let tb = t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let rs = streamed
+            .round_streamed_over(&mut pool, &mut red_s, &grads, &ctx)
+            .expect("streamed round");
+        let ts = t.elapsed().as_secs_f64();
+        assert_eq!(rb.gtilde, rs.gtilde, "pipeline parity broke at round {round}");
+        // rounds 0 (dense) and 1 (buffers first sized) are warmup
+        if round >= 2 {
+            wall_b.push(tb);
+            wall_s.push(ts);
+            enc.push(rs.encode_seconds);
+            dec.push(rs.decode_seconds);
+        }
+        barrier.reclaim(rb);
+        streamed.reclaim(rs);
+    }
+    pool.shutdown();
+
+    let (b_med, s_med) = (median(&wall_b), median(&wall_s));
+    let (e_med, d_med) = (median(&enc), median(&dec));
+    // the overlap-aware model next to the sequential one, anchored on the
+    // loopback preset (the closest fabric with a calibrated alpha-beta)
+    let net = Network::tcp_loopback();
+    let model_b = net.barrier_round_seconds(e_med, d_med, d, n);
+    let model_s = net.streamed_round_seconds(e_med, d_med, d, n, nblocks);
+    println!(
+        "barrier  round {:>9.3} ms  (modeled loopback {:>9.3} ms)",
+        b_med * 1e3,
+        model_b * 1e3
+    );
+    println!(
+        "streamed round {:>9.3} ms  (modeled loopback {:>9.3} ms)",
+        s_med * 1e3,
+        model_s * 1e3
+    );
+    println!(
+        "streamed/barrier wall ratio: {:.2} (< 1 means the pipeline wins)",
+        s_med / b_med.max(1e-12)
+    );
+    obj(vec![
+        ("d", num(d as f64)),
+        ("n", num(n as f64)),
+        ("blocks", num(nblocks as f64)),
+        ("barrier_ms", num(b_med * 1e3)),
+        ("streamed_ms", num(s_med * 1e3)),
+        ("streamed_over_barrier", num(s_med / b_med.max(1e-12))),
+        ("model_barrier_ms", num(model_b * 1e3)),
+        ("model_streamed_ms", num(model_s * 1e3)),
+    ])
+}
+
 fn main() {
     let smoke = smoke();
     let (iters, d_net, legacy_sizes): (usize, usize, Vec<usize>) = if smoke {
@@ -206,10 +410,20 @@ fn main() {
     }
     legacy_cases(iters, &legacy_sizes);
     let cases = net_cases(iters, d_net, &[4, 16]);
+    // schedule scaling: pow2 worlds (halving), group divides n (two-level)
+    let (d_scale, scale_worlds): (usize, Vec<(usize, usize)>) = if smoke {
+        (1 << 10, vec![(4, 2), (8, 2)])
+    } else {
+        (1 << 16, vec![(16, 4), (64, 8), (128, 8)])
+    };
+    let scaling = scaling_cases(iters, d_scale, &scale_worlds);
+    let pipeline = pipeline_cases(iters, d_net);
     let report = obj(vec![
         ("bench", Json::Str("bench_collective".into())),
         ("smoke", Json::Bool(smoke)),
         ("net", cases),
+        ("scaling", scaling),
+        ("pipeline", pipeline),
     ]);
     let path = "BENCH_net.json";
     std::fs::write(path, json::to_string(&report)).expect("write bench report");

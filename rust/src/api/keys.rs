@@ -69,6 +69,8 @@ pub const NET: &[&str] = &[
     "seed",
     "transport",
     "algo",
+    "pipeline",
+    "hierarchy.group_size",
     "net.timeout_ms",
     "net.retries",
     "fault.seed",

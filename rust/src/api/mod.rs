@@ -39,6 +39,7 @@ pub use spec::{CompressorSpec, RuleSpec, ZOO};
 pub use crate::coordinator::{
     GradientSource, LrSchedule, RoundObserver, RoundRecord, TrainResult,
 };
+pub use crate::compress::Pipeline;
 pub use crate::net::StagedAlgo;
 pub use crate::netsim::{Network, RoundBreakdown};
 
@@ -232,6 +233,7 @@ pub struct SessionBuilder {
     checkpoint_path: Option<String>,
     net_timeout: Duration,
     net_retries: usize,
+    pipeline: Pipeline,
 }
 
 impl Default for SessionBuilder {
@@ -260,6 +262,7 @@ impl Default for SessionBuilder {
             checkpoint_path: None,
             net_timeout: default_io_timeout(),
             net_retries: 8,
+            pipeline: Pipeline::Barrier,
         }
     }
 }
@@ -388,6 +391,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Round driver: [`Pipeline::Barrier`] (default) or
+    /// [`Pipeline::Streamed`], the double-buffered block pipeline that
+    /// overlaps encode, the collective, and decode (bit-identical output;
+    /// rounds the compressor cannot stream fall back to barrier).
+    pub fn pipeline(mut self, pipeline: Pipeline) -> Self {
+        self.pipeline = pipeline;
+        self
+    }
+
     /// Validate the whole configuration, then — and only then — spawn the
     /// worker pool and (for transport backends) the socket mesh. Every
     /// invariant that used to assert deep inside a constructor or hang a
@@ -459,6 +471,21 @@ impl SessionBuilder {
             return Err(anyhow!(
                 "halving-doubling all-reduce needs a power-of-two world, got {n} \
                  ranks; use StagedAlgo::Ring"
+            ));
+        }
+        if let Some(StagedAlgo::TwoLevel { group }) = self.backend.staged_algo() {
+            if group == 0 || group > n || n % group != 0 {
+                return Err(anyhow!(
+                    "two-level all-reduce needs a group size in 1..={n} that \
+                     divides the world evenly, got group {group} over {n} ranks"
+                ));
+            }
+        }
+        if self.pipeline == Pipeline::Streamed && self.backend == Backend::Pool {
+            return Err(anyhow!(
+                "the streamed pipeline reduces each block through an explicit \
+                 reducer; the Pool backend folds inside the worker pool and has \
+                 none (use Backend::Serial, Channel, or Tcp)"
             ));
         }
         if let Some(f) = &self.faults {
@@ -533,6 +560,7 @@ impl SessionBuilder {
             momentum: self.momentum,
             weight_decay: self.weight_decay,
             eval_every: self.eval_every,
+            pipeline: self.pipeline,
         };
         let coord = Coordinator::new(init, block_dims, network);
         let state = coord.begin(&cfg);

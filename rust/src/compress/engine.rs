@@ -51,7 +51,7 @@ use crate::coordinator::RoundCtx;
 use crate::net::NetError;
 
 use super::intsgd::Rounding;
-use super::intvec::{IntVec, Lanes};
+use super::intvec::{BlockSlots, IntVec, Lanes};
 use super::natsgd::NatMsg;
 use super::qsgd::QsgdBucket;
 use super::signsgd::SignMsg;
@@ -296,6 +296,34 @@ pub trait RankEncoder: Send + Sync {
     fn set_rng_state(&mut self, _state: [u64; 6]) -> bool {
         false
     }
+
+    /// Encode only block `block` of the plan into `out` — the streamed
+    /// driver's per-block fill. Must write exactly the lanes a whole-plan
+    /// [`RankEncoder::encode`] writes for that block's span (IntSGD keys
+    /// its stochastic draws by absolute coordinate, so this holds by
+    /// construction), and must consume the SAME per-round RNG amount as
+    /// one whole-plan encode in total. Returns `false` when unsupported
+    /// (the default) — the engine then keeps the round on the barrier
+    /// path.
+    fn encode_block(
+        &mut self,
+        _grad: &[f32],
+        _plan: &PassPlan,
+        _block: usize,
+        _out: &mut IntVec,
+    ) -> bool {
+        false
+    }
+}
+
+/// What a [`RankMessages`] view reads through: the parked encoders (every
+/// barrier pass), or a bare per-rank `IntVec` slice (the streamed driver's
+/// per-block collectives, where the payloads live in block slots instead
+/// of encoder messages).
+#[derive(Clone, Copy)]
+enum MsgBacking<'a> {
+    Encoders(&'a [Box<dyn RankEncoder>]),
+    Ints(&'a [IntVec]),
 }
 
 /// The n rank messages of one pass, viewed straight through the parked
@@ -303,35 +331,72 @@ pub trait RankEncoder: Send + Sync {
 /// materialized.
 #[derive(Clone, Copy)]
 pub struct RankMessages<'a> {
-    encs: &'a [Box<dyn RankEncoder>],
+    back: MsgBacking<'a>,
 }
 
 impl<'a> RankMessages<'a> {
     pub fn new(encs: &'a [Box<dyn RankEncoder>]) -> Self {
-        RankMessages { encs }
+        RankMessages { back: MsgBacking::Encoders(encs) }
+    }
+
+    /// A view over bare per-rank integer buffers — one pipelined block of
+    /// the streamed driver. Only the integer accessors ([`Self::ints`],
+    /// [`Self::iter_ints`]) are valid on this backing, which is exactly
+    /// what every [`Reducer`] reads.
+    pub fn from_ints(ints: &'a [IntVec]) -> Self {
+        RankMessages { back: MsgBacking::Ints(ints) }
     }
 
     pub fn len(&self) -> usize {
-        self.encs.len()
+        match self.back {
+            MsgBacking::Encoders(e) => e.len(),
+            MsgBacking::Ints(v) => v.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.encs.is_empty()
+        self.len() == 0
     }
 
     pub fn get(&self, rank: usize) -> &'a Message {
-        self.encs[rank].message()
+        match self.back {
+            MsgBacking::Encoders(e) => e[rank].message(),
+            MsgBacking::Ints(_) => {
+                panic!("per-block integer views carry no full rank messages")
+            }
+        }
+    }
+
+    /// Rank `rank`'s integer payload — valid on both backings, and the
+    /// accessor every integer reducer goes through.
+    pub fn ints(&self, rank: usize) -> &'a IntVec {
+        match self.back {
+            MsgBacking::Encoders(e) => e[rank].message().as_ints(),
+            MsgBacking::Ints(v) => &v[rank],
+        }
     }
 
     /// Messages in rank order (Clone so multi-sweep folds can re-iterate).
     pub fn iter(&self) -> impl Iterator<Item = &'a Message> + Clone {
-        self.encs.iter().map(|e| e.message())
+        let this = *self;
+        (0..this.len()).map(move |rank| this.get(rank))
+    }
+
+    /// Integer payloads in rank order (both backings).
+    pub fn iter_ints(&self) -> impl Iterator<Item = &'a IntVec> + Clone {
+        let this = *self;
+        (0..this.len()).map(move |rank| this.ints(rank))
     }
 
     /// The raw encoder slice (the pool's chunked reduce reads messages on
     /// its worker threads through this).
     pub fn encoders(&self) -> &'a [Box<dyn RankEncoder>] {
-        self.encs
+        match self.back {
+            MsgBacking::Encoders(e) => e,
+            MsgBacking::Ints(_) => {
+                panic!("per-block integer views carry no encoders")
+            }
+        }
     }
 }
 
@@ -355,6 +420,13 @@ pub trait Reducer {
     /// default is a no-op; transport reducers re-key their endpoints.
     fn remove_rank(&mut self, _rank: usize) {}
 
+    /// Announce the pipeline block index of the next [`Reducer::sum_ints`]
+    /// call (the streamed driver stamps each per-block collective so the
+    /// frame guard can reject cross-block frames). In-process reducers
+    /// fold leader-owned slices and need no stamp — the default is a
+    /// no-op; transport reducers thread it into their frame headers.
+    fn begin_block(&mut self, _block: usize) {}
+
     /// Read-and-reset the (measured wire seconds, retried attempts) spent
     /// since the last call, for reducers that move real bytes. `None` for
     /// in-process folds — the caller then reports the modeled comm cost
@@ -372,7 +444,24 @@ pub struct SerialReducer;
 impl Reducer for SerialReducer {
     fn sum_ints(&mut self, msgs: &RankMessages, out: &mut Vec<i64>) -> Result<(), NetError> {
         assert!(!msgs.is_empty(), "at least one rank message");
-        crate::collective::allreduce_intvec_iter(msgs.iter().map(|m| m.as_ints()), out);
+        crate::collective::allreduce_intvec_iter(msgs.iter_ints(), out);
+        Ok(())
+    }
+}
+
+/// A [`Reducer`] whose "sum" was already computed — the streamed driver
+/// assembles the round aggregate block by block over the wire, then runs
+/// the compressor's normal `reduce` bookkeeping (max-int tracking, comm
+/// accounting) against this, so the leader-side state ends bit-identical
+/// to a barrier round without folding anything twice.
+struct PrecomputedReducer<'a> {
+    sum: &'a [i64],
+}
+
+impl Reducer for PrecomputedReducer<'_> {
+    fn sum_ints(&mut self, _msgs: &RankMessages, out: &mut Vec<i64>) -> Result<(), NetError> {
+        out.clear();
+        out.extend_from_slice(self.sum);
         Ok(())
     }
 }
@@ -402,9 +491,9 @@ impl Reducer for PoolReducer<'_> {
 /// the disjoint chunks fan out.
 fn prepare_sum(msgs: &RankMessages, out: &mut Vec<i64>) -> usize {
     assert!(!msgs.is_empty(), "at least one rank message");
-    let d = msgs.get(0).as_ints().len();
-    for m in msgs.iter() {
-        assert_eq!(m.as_ints().len(), d, "mismatched message lengths");
+    let d = msgs.ints(0).len();
+    for m in msgs.iter_ints() {
+        assert_eq!(m.len(), d, "mismatched message lengths");
     }
     out.clear();
     out.resize(d, 0);
@@ -504,6 +593,32 @@ pub trait PhasedCompressor: Send {
     /// Produce the round result from the reduced state, drawing output
     /// buffers from the arena. Timing fields are filled by the driver.
     fn decode(&mut self, ctx: &RoundCtx, arena: &mut RoundArena) -> RoundResult;
+
+    /// Whether `reduce` for this plan is expressible as ONE integer sum
+    /// over the full coordinate range — the contract the streamed driver
+    /// needs to run the collective block by block: a single encode pass,
+    /// `reduce` reading the rank messages only through
+    /// [`Reducer::sum_ints`] (exactly once, whole range), and a decode
+    /// whose per-block body is [`decode_span_ints`]. Default `false`
+    /// keeps a compressor on the barrier path.
+    fn streams(&self, _plan: &PassPlan) -> bool {
+        false
+    }
+
+    /// Close a streamed round: build the [`RoundResult`] around `gtilde`,
+    /// which the driver already decoded block by block as the aggregates
+    /// landed ([`decode_span_ints`] per block — bit-identical to this
+    /// compressor's `decode` by the [`PhasedCompressor::streams`]
+    /// contract). Only called after `streams` returned `true` for the
+    /// round's plan and `reduce` ran over the assembled aggregate.
+    fn finish_streamed(
+        &mut self,
+        _ctx: &RoundCtx,
+        _arena: &mut RoundArena,
+        _gtilde: Vec<f32>,
+    ) -> RoundResult {
+        unreachable!("compressor declared streams() but did not implement finish_streamed")
+    }
 
     /// Opaque scaling-rule state for checkpoint v2 (None = no such
     /// state). IntSGD's moving average lives here — dropping it on resume
@@ -629,9 +744,16 @@ pub(crate) fn decode_block_ints(
     out.clear();
     out.reserve(sum.len());
     for (span, &alpha) in blocks.iter().zip(alphas) {
-        let inv = 1.0 / (n as f64 * alpha);
-        out.extend(sum[span.range()].iter().map(|&s| (s as f64 * inv) as f32));
+        decode_span_ints(&sum[span.range()], alpha, n, out);
     }
+}
+
+/// One block of the Alg. 2 decode: append `sum / (n * alpha)` to `out`.
+/// Shared between the whole-round decode above and the streamed driver's
+/// per-block drain, so the two cannot drift (bit-parity by construction).
+pub(crate) fn decode_span_ints(sum: &[i64], alpha: f64, n: usize, out: &mut Vec<f32>) {
+    let inv = 1.0 / (n as f64 * alpha);
+    out.extend(sum.iter().map(|&s| (s as f64 * inv) as f32));
 }
 
 /// Drive one round with every phase on the caller thread — the sequential
@@ -725,15 +847,42 @@ enum ReduceVia<'a> {
     External(&'a mut dyn Reducer),
 }
 
+/// Which round driver a session runs: the classic three-barrier path, or
+/// the double-buffered block pipeline ([`RoundEngine::round_streamed_over`]
+/// — bit-identical output, overlapped encode/wire/decode).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pipeline {
+    Barrier,
+    Streamed,
+}
+
+impl Default for Pipeline {
+    fn default() -> Self {
+        Pipeline::Barrier
+    }
+}
+
+/// The streamed driver's reused leader-side buffers: the double-buffered
+/// per-rank block slots and the (block, whole-round) aggregate scratch.
+/// All of it survives across rounds, so streamed steady state allocates
+/// nothing (`tests/zero_alloc.rs`).
+#[derive(Default)]
+struct StreamScratch {
+    slots: BlockSlots,
+    block_sum: Vec<i64>,
+    sum: Vec<i64>,
+}
+
 /// The round driver owning a phased compressor and the round arena.
 pub struct RoundEngine {
     comp: Box<dyn PhasedCompressor>,
     arena: RoundArena,
+    stream: StreamScratch,
 }
 
 impl RoundEngine {
     pub fn new(comp: Box<dyn PhasedCompressor>) -> Self {
-        RoundEngine { comp, arena: RoundArena::default() }
+        RoundEngine { comp, arena: RoundArena::default(), stream: StreamScratch::default() }
     }
 
     pub fn name(&self) -> String {
@@ -799,7 +948,7 @@ impl RoundEngine {
 
     /// One round with every phase inline on this thread.
     pub fn round_sequential(&mut self, grads: &[Vec<f32>], ctx: &RoundCtx) -> RoundResult {
-        let RoundEngine { comp, arena } = self;
+        let RoundEngine { comp, arena, .. } = self;
         sequential_round(comp.as_mut(), grads, ctx, arena)
     }
 
@@ -840,6 +989,142 @@ impl RoundEngine {
         self.round_parallel_via(pool, ReduceVia::External(red), grads, ctx)
     }
 
+    /// [`RoundEngine::round_parallel_over`] rebuilt as a double-buffered
+    /// block pipeline: the pool's encoders fill block k+1's `IntVec`
+    /// slots while the reducer's collective moves block k, and the decode
+    /// drains each landed block immediately — no global barrier until the
+    /// last block. Output is bit-identical to the barrier path (integer
+    /// sums are exactly associative, the stochastic draws are keyed by
+    /// absolute coordinate, and the per-block decode shares
+    /// [`decode_span_ints`] with the whole-round decode), pinned by
+    /// `tests/net_parity.rs`.
+    ///
+    /// Rounds whose plan cannot stream — dense round 0, multi-pass
+    /// schemes, all-gather codecs, the switch simulation
+    /// ([`PhasedCompressor::streams`]) — fall back to the barrier driver,
+    /// so this is safe to call for the whole compressor zoo.
+    ///
+    /// Failure discipline matches the barrier path: a mid-pipeline error
+    /// (above all `PeerDead`) first drains the in-flight encode (every
+    /// worker ack collected), then parks the encoders and returns the
+    /// typed error — the coordinator's retry/failover re-runs the round
+    /// and the round-keyed stochastic bases make the re-encode
+    /// bit-identical.
+    pub fn round_streamed_over(
+        &mut self,
+        pool: &mut WorkerPool,
+        red: &mut dyn Reducer,
+        grads: &[Vec<f32>],
+        ctx: &RoundCtx,
+    ) -> Result<RoundResult, NetError> {
+        let n = grads.len();
+        assert!(n > 0, "at least one rank");
+        assert_eq!(pool.workers(), n, "one worker thread per rank");
+        assert_eq!(n, ctx.n, "ctx.n must match the gradient count (decode scales by it)");
+        // probe the plan; `begin` is idempotent per round, so re-planning
+        // on the barrier fallback (or below) repeats no state update
+        let eligible = {
+            let comp = self.comp.as_mut();
+            ensure_encoders(comp, n);
+            let plan = comp.begin(ctx);
+            comp.streams(&plan)
+        };
+        if !eligible {
+            return self.round_parallel_via(pool, ReduceVia::External(red), grads, ctx);
+        }
+        let RoundEngine { comp, arena, stream } = self;
+        let comp = comp.as_mut();
+        let plan = comp.begin(ctx);
+        let (blocks, alphas) = match &plan {
+            PassPlan::IntBlocks { blocks, alphas, .. } => {
+                (Arc::clone(blocks), Arc::clone(alphas))
+            }
+            _ => unreachable!("streams() promised a single-pass integer-block plan"),
+        };
+        let nblocks = blocks.len();
+        stream.slots.ensure(n);
+        stream.sum.clear();
+        stream.sum.resize(ctx.d, 0);
+        let mut gtilde = arena.take_f32();
+        let mut encs = std::mem::take(comp.encoders());
+        let mut encode_seconds = 0.0f64;
+        let mut reduce_total = 0.0f64;
+        let mut leader_seconds = 0.0f64;
+
+        // prologue: block 0 must exist before the wire can start
+        pool.post_encode_block(&plan, 0, &mut encs, grads, stream.slots.block_mut(0));
+        encode_seconds += pool.collect_encode_block();
+
+        let mut failure: Option<NetError> = None;
+        for k in 0..nblocks {
+            // double buffer: the pool fills block k+1's slots (opposite
+            // parity — disjoint from everything read below) while the
+            // collective moves block k and the leader drains its decode
+            if k + 1 < nblocks {
+                pool.post_encode_block(
+                    &plan,
+                    k + 1,
+                    &mut encs,
+                    grads,
+                    stream.slots.block_mut(k + 1),
+                );
+            }
+            red.begin_block(k);
+            let bmsgs = RankMessages::from_ints(stream.slots.block(k));
+            let t0 = Instant::now();
+            let folded = red.sum_ints(&bmsgs, &mut stream.block_sum);
+            reduce_total += t0.elapsed().as_secs_f64();
+            match folded {
+                Ok(()) => {
+                    // drain the landed block: assemble the aggregate and
+                    // decode it while block k+1 is still encoding
+                    let t1 = Instant::now();
+                    stream.sum[blocks[k].range()].copy_from_slice(&stream.block_sum);
+                    decode_span_ints(&stream.block_sum, alphas[k], ctx.n, &mut gtilde);
+                    leader_seconds += t1.elapsed().as_secs_f64();
+                }
+                Err(e) => failure = Some(e),
+            }
+            if k + 1 < nblocks {
+                encode_seconds += pool.collect_encode_block();
+            }
+            if let Some(e) = failure {
+                // the in-flight encode was drained above (every ack
+                // collected), so the borrowed views are dead: park the
+                // encoders, hand the decode buffer back, reset the block
+                // stamp — the next round over this engine starts clean
+                red.begin_block(0);
+                *comp.encoders() = encs;
+                arena.put_f32(gtilde);
+                return Err(e);
+            }
+        }
+        red.begin_block(0);
+
+        // the aggregate is assembled: run the compressor's normal reduce
+        // bookkeeping (max-int tracking, comm accounting) against it,
+        // then close the round around the drained decode
+        let outcome = {
+            let msgs = RankMessages::new(&encs);
+            let mut pre = PrecomputedReducer { sum: &stream.sum };
+            comp.reduce(&msgs, &plan, ctx, &mut pre)
+        };
+        *comp.encoders() = encs;
+        match outcome.expect("a precomputed reduce cannot fail") {
+            PassOutcome::Done => {}
+            PassOutcome::Next(_) => {
+                unreachable!("streams() promised a single-pass plan")
+            }
+        }
+        let t2 = Instant::now();
+        let mut result = comp.finish_streamed(ctx, arena, gtilde);
+        leader_seconds += t2.elapsed().as_secs_f64();
+        result.encode_seconds = encode_seconds;
+        result.reduce_seconds = reduce_total;
+        result.decode_seconds = leader_seconds;
+        Ok(result)
+    }
+
     fn round_parallel_via(
         &mut self,
         pool: &mut WorkerPool,
@@ -851,7 +1136,7 @@ impl RoundEngine {
         assert!(n > 0, "at least one rank");
         assert_eq!(pool.workers(), n, "one worker thread per rank");
         assert_eq!(n, ctx.n, "ctx.n must match the gradient count (decode scales by it)");
-        let RoundEngine { comp, arena } = self;
+        let RoundEngine { comp, arena, .. } = self;
         let comp = comp.as_mut();
         ensure_encoders(comp, n);
         let edge_decode = !comp.supports_allreduce();

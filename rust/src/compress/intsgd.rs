@@ -199,6 +199,26 @@ pub fn encode_blocks(
     }
 }
 
+/// [`encode_span`] into a typed wire buffer — one block of the streamed
+/// driver's per-block fill. `offset` is the block's absolute coordinate
+/// offset, which keys the uniforms, so this is bit-identical to the same
+/// block's slice of a whole-gradient [`encode_blocks`].
+fn encode_span_into(
+    rounding: Rounding,
+    grad: &[f32],
+    alpha: f64,
+    clip: i64,
+    base: u64,
+    offset: usize,
+    out: &mut IntVec,
+) {
+    match out {
+        IntVec::I8(v) => encode_span(rounding, grad, alpha, clip, base, offset, v),
+        IntVec::I32(v) => encode_span(rounding, grad, alpha, clip, base, offset, v),
+        IntVec::I64(v) => encode_span(rounding, grad, alpha, clip, base, offset, v),
+    }
+}
+
 pub struct IntSgd {
     pub rounding: Rounding,
     pub wire: WireInt,
@@ -307,6 +327,30 @@ impl IntSgd {
         };
         encode_span(rounding, grad, alpha, clip, base, 0, out);
     }
+
+    /// Close an integer round around an already-decoded `gtilde`: both the
+    /// barrier decode and the streamed drain end here, so the comm ledger
+    /// and diagnostics cannot drift between the two drivers.
+    fn int_round_result(&self, gtilde: Vec<f32>, arena: &mut RoundArena) -> RoundResult {
+        let mut comm = arena.take_comm();
+        comm.push(CommOp {
+            primitive: if self.use_switch {
+                Primitive::Switch
+            } else {
+                Primitive::AllReduce
+            },
+            bytes_per_worker: self.d * self.wire.bytes(),
+        });
+        RoundResult {
+            gtilde,
+            comm,
+            encode_seconds: 0.0,
+            reduce_seconds: 0.0,
+            decode_seconds: 0.0,
+            max_abs_int: self.max_abs_int,
+            alpha: self.alphas.iter().copied().fold(f64::INFINITY, f64::min),
+        }
+    }
 }
 
 /// One rank's IntSGD state: its RNG stream and reusable typed message
@@ -321,6 +365,26 @@ struct IntEncoder {
     base: Option<(usize, u64)>,
 }
 
+impl IntEncoder {
+    /// The round-keyed counter base: drawn once per round from the rank's
+    /// stream, reused by every same-round encode (the streamed driver's
+    /// per-block fills, a failover re-encode) — the stream position after
+    /// the round is identical however the round was scheduled.
+    fn round_base(&mut self, rounding: Rounding, round: usize) -> u64 {
+        match rounding {
+            Rounding::Stochastic => match self.base {
+                Some((at, base)) if at == round => base,
+                _ => {
+                    let base = self.rng.next_u64();
+                    self.base = Some((round, base));
+                    base
+                }
+            },
+            Rounding::Deterministic => 0,
+        }
+    }
+}
+
 impl RankEncoder for IntEncoder {
     fn encode(&mut self, grad: &[f32], plan: &PassPlan) {
         match plan {
@@ -331,21 +395,38 @@ impl RankEncoder for IntEncoder {
                 out.extend_from_slice(grad);
             }
             PassPlan::IntBlocks { rounding, blocks, alphas, clip, lanes, round } => {
-                let base = match rounding {
-                    Rounding::Stochastic => match self.base {
-                        Some((at, base)) if at == *round => base,
-                        _ => {
-                            let base = self.rng.next_u64();
-                            self.base = Some((*round, base));
-                            base
-                        }
-                    },
-                    Rounding::Deterministic => 0,
-                };
+                let base = self.round_base(*rounding, *round);
                 let out = self.msg.ints_mut(*lanes);
                 encode_blocks(*rounding, blocks, alphas, *clip, grad, base, out);
             }
             _ => panic!("IntSgd encoder: unexpected plan"),
+        }
+    }
+
+    fn encode_block(
+        &mut self,
+        grad: &[f32],
+        plan: &PassPlan,
+        block: usize,
+        out: &mut IntVec,
+    ) -> bool {
+        match plan {
+            PassPlan::IntBlocks { rounding, blocks, alphas, clip, lanes, round } => {
+                let base = self.round_base(*rounding, *round);
+                let span = blocks[block];
+                out.reset(*lanes);
+                encode_span_into(
+                    *rounding,
+                    &grad[span.range()],
+                    alphas[block],
+                    *clip,
+                    base,
+                    span.offset,
+                    out,
+                );
+                true
+            }
+            _ => false,
         }
     }
 
@@ -470,8 +551,8 @@ impl PhasedCompressor for IntSgd {
     }
 
     fn decode(&mut self, ctx: &RoundCtx, arena: &mut RoundArena) -> RoundResult {
-        let mut comm = arena.take_comm();
         if self.exact_round {
+            let mut comm = arena.take_comm();
             let mut gtilde = arena.take_f32();
             std::mem::swap(&mut gtilde, &mut self.exact);
             comm.push(CommOp {
@@ -490,23 +571,27 @@ impl PhasedCompressor for IntSgd {
         }
         let mut gtilde = arena.take_f32();
         decode_block_ints(&self.sum, &self.blocks, &self.alphas, ctx.n, &mut gtilde);
-        comm.push(CommOp {
-            primitive: if self.use_switch {
-                Primitive::Switch
-            } else {
-                Primitive::AllReduce
-            },
-            bytes_per_worker: self.d * self.wire.bytes(),
-        });
-        RoundResult {
-            gtilde,
-            comm,
-            encode_seconds: 0.0,
-            reduce_seconds: 0.0,
-            decode_seconds: 0.0,
-            max_abs_int: self.max_abs_int,
-            alpha: self.alphas.iter().copied().fold(f64::INFINITY, f64::min),
-        }
+        self.int_round_result(gtilde, arena)
+    }
+
+    /// Streamable exactly when the round is a plain integer sum: one
+    /// encode pass, `reduce` == `sum_ints` over the full range, per-block
+    /// decode. Round 0 is dense, and the switch data plane is a
+    /// saturating (order-sensitive) leader-side simulation — both stay on
+    /// the barrier path.
+    fn streams(&self, plan: &PassPlan) -> bool {
+        matches!(plan, PassPlan::IntBlocks { .. }) && !self.use_switch
+    }
+
+    fn finish_streamed(
+        &mut self,
+        _ctx: &RoundCtx,
+        arena: &mut RoundArena,
+        gtilde: Vec<f32>,
+    ) -> RoundResult {
+        debug_assert!(!self.exact_round, "round 0 never streams");
+        debug_assert_eq!(gtilde.len(), self.d, "drained decode must cover the gradient");
+        self.int_round_result(gtilde, arena)
     }
 
     // checkpoint v2: the scaling rule's moving-average state is part of

@@ -194,9 +194,69 @@ impl IntVec {
     }
 }
 
+/// Double-buffered per-rank block slots for the streamed round driver:
+/// slot (k mod 2, rank) holds rank's encoded block k. Two parities are
+/// exactly enough readiness state for the pipeline — block k is being
+/// reduced and drained while block k+1 is being filled, and slot reuse is
+/// sound precisely because block k-1 has fully left the wire before
+/// block k+1 (same parity) starts encoding: the leader collects every
+/// k+1 encode ack only after block k's collective returned.
+///
+/// The two parities live in two separate `Vec`s, so the worker threads'
+/// writes into one parity's slots never alias the leader's concurrent
+/// reads of the other (the `WorkerPool` borrowed-views argument applies
+/// per `Vec`). The inner `IntVec`s are reused via [`IntVec::reset`], so
+/// streamed steady state allocates nothing (`tests/zero_alloc.rs`).
+#[derive(Default)]
+pub struct BlockSlots {
+    bufs: [Vec<IntVec>; 2],
+    ranks: usize,
+}
+
+impl BlockSlots {
+    /// Size both parities for an `n`-rank world. Existing slot buffers
+    /// survive (growing only appends empty slots; a failover shrink keeps
+    /// the spares — they are skipped by the `..ranks` views).
+    pub fn ensure(&mut self, ranks: usize) {
+        self.ranks = ranks;
+        for bufs in &mut self.bufs {
+            if bufs.len() < ranks {
+                bufs.resize_with(ranks, IntVec::default);
+            }
+        }
+    }
+
+    /// Block `block`'s per-rank slots, mutable (the encode fill).
+    pub fn block_mut(&mut self, block: usize) -> &mut [IntVec] {
+        &mut self.bufs[block % 2][..self.ranks]
+    }
+
+    /// Block `block`'s per-rank slots, read-only (the collective's view).
+    pub fn block(&self, block: usize) -> &[IntVec] {
+        &self.bufs[block % 2][..self.ranks]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn block_slots_alternate_parities_and_survive_shrink() {
+        let mut s = BlockSlots::default();
+        s.ensure(3);
+        assert_eq!(s.block(0).len(), 3);
+        s.block_mut(0)[1] = IntVec::from_i64(&[7], Lanes::I8);
+        s.block_mut(1)[1] = IntVec::from_i64(&[9], Lanes::I8);
+        // parity 2 aliases parity 0, parity 3 aliases parity 1
+        assert_eq!(s.block(2)[1].get(0), 7);
+        assert_eq!(s.block(3)[1].get(0), 9);
+        // failover shrink: views narrow, spare slots stay allocated
+        s.ensure(2);
+        assert_eq!(s.block(0).len(), 2);
+        s.ensure(3);
+        assert_eq!(s.block(0)[1].get(0), 7);
+    }
 
     #[test]
     fn lane_selection_matches_bounds() {

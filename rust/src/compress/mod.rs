@@ -45,8 +45,8 @@ pub mod wire;
 
 pub use engine::{
     sequential_round, BlockSpan, Message, PassOutcome, PassPlan, PhasedCompressor,
-    PoolReducer, RankEncoder, RankMessages, Reducer, RoundArena, RoundEngine,
-    SerialReducer,
+    Pipeline, PoolReducer, RankEncoder, RankMessages, Reducer, RoundArena,
+    RoundEngine, SerialReducer,
 };
 pub use intvec::{IntVec, Lanes};
 pub use error_feedback::ErrorFeedback;

@@ -32,7 +32,7 @@ pub mod worker;
 pub use pjrt_worker::{BatchSpec, PjrtEvaluator, PjrtWorker};
 pub use worker::{GradientSource, WorkerPool};
 
-use crate::compress::engine::{Reducer, RoundEngine};
+use crate::compress::engine::{Pipeline, Reducer, RoundEngine};
 use crate::net::NetError;
 use crate::netsim::{Network, RoundBreakdown};
 use crate::optim::Sgd;
@@ -121,6 +121,12 @@ pub struct TrainConfig {
     pub weight_decay: f32,
     /// Evaluate every `eval_every` rounds (0 = never).
     pub eval_every: usize,
+    /// Round driver: classic barrier phases, or the double-buffered block
+    /// pipeline overlapping encode/reduce/decode. Streamed requires an
+    /// external reducer (`train_over`); rounds a compressor cannot stream
+    /// (round 0, multi-pass, all-gather, switch) fall back to barrier
+    /// per-round, bit-identically.
+    pub pipeline: Pipeline,
 }
 
 impl Default for TrainConfig {
@@ -132,6 +138,7 @@ impl Default for TrainConfig {
             momentum: 0.0,
             weight_decay: 0.0,
             eval_every: 0,
+            pipeline: Pipeline::Barrier,
         }
     }
 }
@@ -356,9 +363,14 @@ impl Coordinator {
                 step_norm_sq,
                 blocks: std::mem::take(&mut st.blocks),
             };
-            let attempt = match &mut red {
-                Some(r) => engine.round_parallel_over(pool, &mut **r, &grads, &ctx),
-                None => Ok(engine.round_parallel(pool, &grads, &ctx)),
+            let attempt = match (&mut red, cfg.pipeline) {
+                (Some(r), Pipeline::Streamed) => {
+                    engine.round_streamed_over(pool, &mut **r, &grads, &ctx)
+                }
+                (Some(r), Pipeline::Barrier) => {
+                    engine.round_parallel_over(pool, &mut **r, &grads, &ctx)
+                }
+                (None, _) => Ok(engine.round_parallel(pool, &grads, &ctx)),
             };
             st.blocks = ctx.blocks; // reclaim the buffer for the next round
             match attempt {

@@ -22,7 +22,9 @@
 //! |-----|---------|---------|
 //! | `workers`, `d`, `rounds`, `lr`, `seed` | 4, 2^16, 20, 0.2, 100 | job shape |
 //! | `transport` | `tcp` | `tcp` or `channel` |
-//! | `algo` | `ring` | `ring` or `halving` (halving needs a pow2 world) |
+//! | `algo` | `ring` | `ring`, `halving` (pow2 world), or `two-level` (hierarchical leader fold; see `hierarchy.group_size`) |
+//! | `hierarchy.group_size` | 4 | ranks per "node" for `algo=two-level`; must divide `workers` |
+//! | `pipeline` | `barrier` | `barrier` or `streamed` (double-buffered block pipeline: encode block k+1 while block k is on the wire — bit-identical) |
 //! | `net.timeout_ms` | 30000 (env `INTSGD_NET_TIMEOUT_MS`) | blocking-IO deadline; expiry is a typed `NetError::Timeout`, not a generic error |
 //! | `net.retries` | 8 | retried attempts per collective before giving up |
 //! | `fault.drop` / `fault.dup` / `fault.corrupt` / `fault.truncate` / `fault.delay` | 0 | per-frame fault probabilities (seeded, deterministic) |
@@ -34,8 +36,8 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::api::{
-    Backend, CompressorSpec, FaultSpec, ModelSpec, RoundBreakdown, RoundObserver,
-    RoundRecord, Session, SourceFactory, StagedAlgo,
+    Backend, CompressorSpec, FaultSpec, ModelSpec, Pipeline, RoundBreakdown,
+    RoundObserver, RoundRecord, Session, SourceFactory, StagedAlgo,
 };
 use crate::config::Config;
 use crate::util::Rng;
@@ -170,7 +172,19 @@ pub fn run(cfg: &Config) -> Result<()> {
     let algo = match cfg.str_or("algo", "ring") {
         "ring" => StagedAlgo::Ring,
         "halving" => StagedAlgo::Halving,
-        other => return Err(anyhow!("unknown staged algo {other:?} (ring|halving)")),
+        "two-level" => StagedAlgo::TwoLevel {
+            group: cfg.parsed_or("hierarchy.group_size", 4usize)?,
+        },
+        other => {
+            return Err(anyhow!(
+                "unknown staged algo {other:?} (ring|halving|two-level)"
+            ))
+        }
+    };
+    let pipeline = match cfg.str_or("pipeline", "barrier") {
+        "barrier" => Pipeline::Barrier,
+        "streamed" => Pipeline::Streamed,
+        other => return Err(anyhow!("unknown pipeline {other:?} (barrier|streamed)")),
     };
     let (backend, label) = match cfg.str_or("transport", "tcp") {
         "tcp" => (Backend::Tcp { algo }, "tcp-loopback"),
@@ -188,6 +202,7 @@ pub fn run(cfg: &Config) -> Result<()> {
         .seed(seed ^ 0x5EED)
         .lr(lr)
         .backend(backend)
+        .pipeline(pipeline)
         .net_timeout(Duration::from_millis(cfg.parsed_or(
             "net.timeout_ms",
             crate::net::default_io_timeout().as_millis() as u64,
@@ -258,6 +273,25 @@ mod tests {
     }
 
     #[test]
+    fn net_bench_streamed_two_level_runs_end_to_end() {
+        // the streamed pipeline + hierarchical collective, over in-proc
+        // channels: the full knob path of the overlap benchmarks
+        let mut cfg = Config::new();
+        for kv in [
+            "transport=channel",
+            "workers=4",
+            "d=512",
+            "rounds=8",
+            "algo=two-level",
+            "hierarchy.group_size=2",
+            "pipeline=streamed",
+        ] {
+            cfg.set_kv(kv).unwrap();
+        }
+        run(&cfg).expect("streamed two-level net-bench");
+    }
+
+    #[test]
     fn net_bench_survives_injected_chaos() {
         // seeded recoverable faults over the channel transport: the run
         // must converge exactly as if the fabric were clean (bit-parity
@@ -314,5 +348,20 @@ mod tests {
             cfg.set_kv(kv).unwrap();
         }
         assert!(run(&cfg).unwrap_err().to_string().contains("power-of-two"));
+        // a two-level group must divide the world — at build()
+        let mut cfg = Config::new();
+        for kv in [
+            "transport=channel",
+            "workers=4",
+            "algo=two-level",
+            "hierarchy.group_size=3",
+        ] {
+            cfg.set_kv(kv).unwrap();
+        }
+        assert!(run(&cfg).unwrap_err().to_string().contains("divides the world"));
+        // unknown pipeline names are rejected before anything spawns
+        let mut cfg = Config::new();
+        cfg.set_kv("pipeline=warp").unwrap();
+        assert!(run(&cfg).unwrap_err().to_string().contains("barrier|streamed"));
     }
 }

@@ -36,6 +36,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::compress::engine::{PassPlan, RankEncoder};
+use crate::compress::intvec::IntVec;
 
 /// What a worker computes each round: the local stochastic gradient.
 pub trait GradientSource {
@@ -123,9 +124,19 @@ struct SumChunk {
 // does not touch the buffer until every worker acks.
 unsafe impl Send for SumChunk {}
 
+/// Borrowed view of one rank's exclusive block slot (streamed encode).
+#[derive(Clone, Copy)]
+struct BlockSlotMut(*mut IntVec);
+// SAFETY: slots handed to different workers are distinct elements of a
+// leader-owned buffer that only the receiving worker touches until the
+// leader has collected that worker's ack (the streamed driver reads the
+// OTHER parity's slots in the meantime — a different `Vec` entirely).
+unsafe impl Send for BlockSlotMut {}
+
 enum ToWorker {
     Round { params: Arc<Vec<f32>>, round: usize },
     Encode { enc: EncoderMut, grad: GradRef, plan: PlanRef },
+    EncodeBlock { enc: EncoderMut, grad: GradRef, plan: PlanRef, block: usize, out: BlockSlotMut },
     SumInts { encs: EncodersRef, chunk: SumChunk },
     Stop,
 }
@@ -179,6 +190,18 @@ fn run_job(source: &mut dyn GradientSource, job: ToWorker) -> FromWorker {
             let plan = unsafe { &*plan.0 };
             let t0 = Instant::now();
             enc.encode(grad, plan);
+            FromWorker::Encoded { seconds: t0.elapsed().as_secs_f64() }
+        }
+        ToWorker::EncodeBlock { enc, grad, plan, block, out } => {
+            // SAFETY: as Encode, plus the block slot is exclusive to this
+            // worker until its ack is collected (see BlockSlotMut).
+            let enc = unsafe { &mut *enc.0 };
+            let grad = unsafe { std::slice::from_raw_parts(grad.ptr, grad.len) };
+            let plan = unsafe { &*plan.0 };
+            let out = unsafe { &mut *out.0 };
+            let t0 = Instant::now();
+            let ok = enc.encode_block(grad, plan, block, out);
+            assert!(ok, "encoder does not support per-block encode (streams() lied)");
             FromWorker::Encoded { seconds: t0.elapsed().as_secs_f64() }
         }
         ToWorker::SumInts { encs, chunk } => {
@@ -353,6 +376,65 @@ impl WorkerPool {
         let mut failed: Option<(usize, String)> = None;
         // Collect EVERY ack before reporting a failure: the borrowed views
         // must not outlive this call while a worker still holds them.
+        for (rank, link) in self.links.iter().enumerate() {
+            match link.reply.take() {
+                FromWorker::Encoded { seconds } => straggler = straggler.max(seconds),
+                FromWorker::Panicked(msg) => {
+                    if failed.is_none() {
+                        failed = Some((rank, msg));
+                    }
+                }
+                _ => panic!("unexpected gradient reply during encode phase"),
+            }
+        }
+        if let Some((rank, msg)) = failed {
+            panic!("worker result unavailable: encode rank {rank} panicked: {msg}");
+        }
+        straggler
+    }
+
+    /// Post one per-block encode job per worker WITHOUT collecting the
+    /// acks — the fan-out half of the streamed driver's double buffer:
+    /// rank i's encoder fills its block slot on worker thread i while the
+    /// leader runs the previous block's collective. Every post MUST be
+    /// paired with a [`WorkerPool::collect_encode_block`] before the
+    /// leader touches `encoders`, `grads`, the plan, or the `slots`
+    /// parity handed out here — the same borrowed-views contract as
+    /// [`WorkerPool::encode_round`], split in two.
+    pub fn post_encode_block(
+        &mut self,
+        plan: &PassPlan,
+        block: usize,
+        encoders: &mut [Box<dyn RankEncoder>],
+        grads: &[Vec<f32>],
+        slots: &mut [IntVec],
+    ) {
+        let n = self.workers();
+        assert_eq!(encoders.len(), n, "one encoder per worker");
+        assert_eq!(grads.len(), n, "one gradient per worker");
+        assert_eq!(slots.len(), n, "one block slot per worker");
+        let plan_ref = PlanRef(plan as *const PassPlan);
+        for (((enc_slot, grad), out), link) in encoders
+            .iter_mut()
+            .zip(grads.iter())
+            .zip(slots.iter_mut())
+            .zip(self.links.iter())
+        {
+            let enc = EncoderMut(enc_slot as *mut Box<dyn RankEncoder>);
+            let grad = GradRef { ptr: grad.as_ptr(), len: grad.len() };
+            let out = BlockSlotMut(out as *mut IntVec);
+            link.job.put(ToWorker::EncodeBlock { enc, grad, plan: plan_ref, block, out });
+        }
+    }
+
+    /// The fan-in half of [`WorkerPool::post_encode_block`]: block until
+    /// every worker acked its block encode, returning the straggler (max)
+    /// encode time. Collects EVERY ack before surfacing a failure — the
+    /// borrowed views must be dead before this call returns, panic or
+    /// not.
+    pub fn collect_encode_block(&mut self) -> f64 {
+        let mut straggler = 0.0f64;
+        let mut failed: Option<(usize, String)> = None;
         for (rank, link) in self.links.iter().enumerate() {
             match link.reply.take() {
                 FromWorker::Encoded { seconds } => straggler = straggler.max(seconds),

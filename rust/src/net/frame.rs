@@ -168,6 +168,32 @@ pub fn decode_frame(frame: &[u8]) -> Result<(FrameHeader, &[u8]), NetError> {
     Ok((FrameHeader { round, seq, kind, elems }, payload))
 }
 
+/// Bits of the frame sequence number reserved for the pipeline block
+/// index (see [`block_seq`]).
+pub const BLOCK_SEQ_BITS: u32 = 8;
+
+/// Hop bits left under the block index.
+pub const BLOCK_SEQ_SHIFT: u32 = 32 - BLOCK_SEQ_BITS;
+
+/// Compose a frame sequence number from a pipeline block index and the
+/// hop counter within that block's collective.
+///
+/// The streamed round driver runs one staged collective *per gradient
+/// block*, with up to two blocks in flight (double buffering). Each
+/// per-block collective already gets a fresh attempt round id, but the
+/// block index is folded into the seq's high bits as a second guard
+/// axis: a frame that strays from one block's schedule into another's
+/// can never present a valid `(round, seq)` pair, and the resulting
+/// [`NetError::Replay`] names a seq whose high bits identify the block.
+/// The index is taken modulo 2^[`BLOCK_SEQ_BITS`] — only the in-flight
+/// window (depth 2) must be distinguishable, and 256 blocks is far past
+/// any pipeline depth. Hop counters stay well under 2^24 (a hop per
+/// schedule step; the longest schedule is the flat ring's 2(n-1) steps).
+pub fn block_seq(block: u32, hop: u32) -> u32 {
+    debug_assert!(hop < (1 << BLOCK_SEQ_SHIFT), "hop counter {hop} overflows the seq");
+    ((block & ((1 << BLOCK_SEQ_BITS) - 1)) << BLOCK_SEQ_SHIFT) | hop
+}
+
 /// Verdict of [`check_frame`] on a structurally valid frame.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FrameCheck {
@@ -471,5 +497,32 @@ mod tests {
     fn checksum_detects_reorder() {
         assert_ne!(checksum(&[1, 2, 3]), checksum(&[3, 2, 1]));
         assert_ne!(checksum(&[0, 0]), checksum(&[0]));
+    }
+
+    #[test]
+    fn block_seq_separates_blocks_and_preserves_hops() {
+        // block 0 is the plain hop counter (barrier-path frames unchanged)
+        assert_eq!(block_seq(0, 0), 0);
+        assert_eq!(block_seq(0, 5), 5);
+        // hops stay ordered within a block, blocks never collide on seq
+        assert!(block_seq(1, 0) > block_seq(0, 1 << 20));
+        assert_ne!(block_seq(1, 3), block_seq(2, 3));
+        // the index wraps modulo 2^BLOCK_SEQ_BITS (in-flight window is 2)
+        assert_eq!(block_seq(256, 7), block_seq(0, 7));
+        // a frame carrying a cross-block seq is rejected by the guard
+        let payload = [1u8; 4];
+        let mut buf = Vec::new();
+        encode_frame(
+            FrameHeader {
+                round: 2,
+                seq: block_seq(1, 0),
+                kind: PayloadKind::Bytes,
+                elems: 4,
+            },
+            &payload,
+            &mut buf,
+        );
+        let e = check_frame(&buf, 2, block_seq(2, 0), PayloadKind::Bytes, 4).unwrap_err();
+        assert!(matches!(e, NetError::Replay { .. }), "{e}");
     }
 }

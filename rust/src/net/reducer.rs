@@ -50,7 +50,8 @@ use crate::compress::engine::{RankMessages, Reducer};
 use crate::compress::intvec::Lanes;
 
 use super::staged::{
-    halving_allreduce_ints, partial_sum_lanes, ring_allreduce_ints, StagedScratch,
+    halving_allreduce_ints, partial_sum_lanes, ring_allreduce_ints,
+    two_level_allreduce_ints, StagedScratch,
 };
 use super::{ChannelTransport, NetError, TcpTransport, Transport};
 
@@ -63,6 +64,11 @@ pub enum StagedAlgo {
     /// Recursive halving-doubling (latency-optimal; power-of-two worlds,
     /// ring fallback otherwise).
     Halving,
+    /// Two-level hierarchical: intra-"node" leader fold over groups of
+    /// `group` ranks, halving-doubling across the n/group leaders, then
+    /// broadcast-down — the schedule that scales past the flat ring's
+    /// (n-1)-hop latency wall (degenerate groupings ring-fallback).
+    TwoLevel { group: usize },
 }
 
 /// Give up after this many retried attempts of one collective (a fault
@@ -137,6 +143,10 @@ pub struct TransportReducer<T: Transport> {
     stale_skipped: u64,
     max_retries: usize,
     last_wire: Option<Lanes>,
+    /// Pipeline block index of the *next* collective, stamped into every
+    /// rank's frame seqs ([`Reducer::begin_block`]); reset to 0 after each
+    /// `sum_ints` so barrier-path collectives always run as block 0.
+    block: u32,
     abort: Arc<AtomicBool>,
     /// High-water marks of `wire_seconds`/`retries` at the last
     /// [`Reducer::take_wire_measure`] — per-round deltas for the observer
@@ -190,6 +200,7 @@ impl<T: Transport> TransportReducer<T> {
             stale_skipped: 0,
             max_retries: DEFAULT_MAX_RETRIES,
             last_wire: None,
+            block: 0,
             abort,
             wire_mark: 0.0,
             retries_mark: 0,
@@ -266,6 +277,7 @@ impl<T: Transport> TransportReducer<T> {
     fn attempt(&mut self, msgs: &RankMessages, wire: Lanes, round: u32) -> Vec<NetError> {
         self.abort.store(false, Ordering::Relaxed);
         let algo = self.algo;
+        let block = self.block;
         let map = &self.map;
         let abort = &self.abort;
         let errs: Vec<Option<NetError>> = std::thread::scope(|s| {
@@ -274,25 +286,41 @@ impl<T: Transport> TransportReducer<T> {
                 .iter_mut()
                 .enumerate()
                 .map(|(vrank, state)| {
-                    let msg = msgs.get(vrank).as_ints();
+                    let msg = msgs.ints(vrank);
+                    state.scratch.set_block(block);
                     s.spawn(move || {
                         let mut t = Remap {
                             inner: &mut state.endpoint,
                             map,
                             vrank,
                         };
-                        let run = match algo {
-                            StagedAlgo::Ring => ring_allreduce_ints,
-                            StagedAlgo::Halving => halving_allreduce_ints,
+                        let r = match algo {
+                            StagedAlgo::Ring => ring_allreduce_ints(
+                                &mut t,
+                                msg,
+                                wire,
+                                round,
+                                &mut state.scratch,
+                                &mut state.acc,
+                            ),
+                            StagedAlgo::Halving => halving_allreduce_ints(
+                                &mut t,
+                                msg,
+                                wire,
+                                round,
+                                &mut state.scratch,
+                                &mut state.acc,
+                            ),
+                            StagedAlgo::TwoLevel { group } => two_level_allreduce_ints(
+                                &mut t,
+                                msg,
+                                wire,
+                                round,
+                                group,
+                                &mut state.scratch,
+                                &mut state.acc,
+                            ),
                         };
-                        let r = run(
-                            &mut t,
-                            msg,
-                            wire,
-                            round,
-                            &mut state.scratch,
-                            &mut state.acc,
-                        );
                         if r.is_err() {
                             // wake every peer blocked on this round
                             abort.store(true, Ordering::Relaxed);
@@ -329,13 +357,13 @@ impl<T: Transport> Reducer for TransportReducer<T> {
         let m = self.ranks.len();
         assert!(!msgs.is_empty(), "at least one rank message");
         assert_eq!(msgs.len(), m, "one transport endpoint per rank");
-        let d = msgs.get(0).as_ints().len();
-        for msg in msgs.iter() {
-            assert_eq!(msg.as_ints().len(), d, "mismatched message lengths");
+        let d = msgs.ints(0).len();
+        for msg in msgs.iter_ints() {
+            assert_eq!(msg.len(), d, "mismatched message lengths");
         }
         // Narrowest width every partial sum provably fits: for IntSGD's
         // clipped messages this recovers the aggregate wire type itself.
-        let wire = partial_sum_lanes(msgs.iter().map(|msg| msg.as_ints()));
+        let wire = partial_sum_lanes(msgs.iter_ints());
         self.last_wire = Some(wire);
 
         let t0 = Instant::now();
@@ -364,6 +392,9 @@ impl<T: Transport> Reducer for TransportReducer<T> {
         };
         self.wire_seconds += t0.elapsed().as_secs_f64();
         self.calls += 1;
+        // the block stamp is per-collective: the next caller re-announces
+        // its block (or stays on the barrier path's block 0)
+        self.block = 0;
         self.stale_skipped += self
             .ranks
             .iter_mut()
@@ -379,6 +410,13 @@ impl<T: Transport> Reducer for TransportReducer<T> {
             "ranks disagree on the aggregate — the collective is torn"
         );
         Ok(())
+    }
+
+    /// Stamp the pipeline block index of the next collective into every
+    /// frame's seq high bits ([`crate::net::frame::block_seq`]): a frame
+    /// straying between in-flight blocks can never satisfy the guard.
+    fn begin_block(&mut self, block: usize) {
+        self.block = block as u32;
     }
 
     /// The measured side of netsim's measured-vs-modeled comparison: this
@@ -438,7 +476,11 @@ mod tests {
 
     #[test]
     fn matches_serial_reducer_over_channels() {
-        for algo in [StagedAlgo::Ring, StagedAlgo::Halving] {
+        for algo in [
+            StagedAlgo::Ring,
+            StagedAlgo::Halving,
+            StagedAlgo::TwoLevel { group: 2 },
+        ] {
             for n in [1usize, 3, 4] {
                 let encs = fixed_encoders(n, 129, 3 + n as u64);
                 let msgs = RankMessages::new(&encs);

@@ -40,8 +40,8 @@
 use crate::compress::intvec::{IntVec, Lanes};
 
 use super::frame::{
-    add_partials, check_frame, classify_round, copy_partials, decode_frame, encode_frame,
-    pack_partials, FrameCheck, FrameHeader, PayloadKind, HEADER_BYTES,
+    add_partials, block_seq, check_frame, classify_round, copy_partials, decode_frame,
+    encode_frame, pack_partials, FrameCheck, FrameHeader, PayloadKind, HEADER_BYTES,
 };
 use super::{NetError, Transport};
 
@@ -58,12 +58,23 @@ pub struct StagedScratch {
     /// Stale frames (older round ids, leftovers of aborted attempts)
     /// discarded by the round/seq guard since the last `take_skipped`.
     skipped: u64,
+    /// Pipeline block index folded into every frame seq
+    /// ([`super::frame::block_seq`]). Zero for barrier-path collectives;
+    /// the streamed driver stamps the gradient-block index here so frames
+    /// of adjacent in-flight blocks can never satisfy each other's guard.
+    block: u32,
 }
 
 impl StagedScratch {
     /// Read and reset the stale-frame counter (retry accounting).
     pub fn take_skipped(&mut self) -> u64 {
         std::mem::take(&mut self.skipped)
+    }
+
+    /// Stamp the pipeline block index into subsequent collectives' frame
+    /// seqs. Every rank of one collective must agree on it.
+    pub fn set_block(&mut self, block: u32) {
+        self.block = block;
     }
 }
 
@@ -130,16 +141,31 @@ pub fn ring_allreduce_ints(
     scratch: &mut StagedScratch,
     out: &mut Vec<i64>,
 ) -> Result<(), NetError> {
+    out.clear();
+    out.resize(msg.len(), 0);
+    msg.add_range_to(0, out);
+    ring_allreduce_partials(t, wire, round, scratch, out)
+}
+
+/// The ring schedule over an already-widened local contribution: on entry
+/// `out` holds this rank's summand, on return the exact aggregate. The
+/// two-level collective's inter-leader stage reuses this with partial
+/// group sums as the contributions.
+fn ring_allreduce_partials(
+    t: &mut dyn Transport,
+    wire: Lanes,
+    round: u32,
+    scratch: &mut StagedScratch,
+    out: &mut Vec<i64>,
+) -> Result<(), NetError> {
     let n = t.world();
     let r = t.rank();
-    let d = msg.len();
-    out.clear();
-    out.resize(d, 0);
-    msg.add_range_to(0, out);
+    let d = out.len();
     if n == 1 {
         return Ok(());
     }
     let kind = PayloadKind::of_lanes(wire);
+    let block = scratch.block;
     let right = (r + 1) % n;
     let left = (r + n - 1) % n;
     // chunk c covers starts[c]..starts[c + 1]
@@ -153,28 +179,24 @@ pub fn ring_allreduce_ints(
         let send_c = (r + n - s) % n;
         let recv_c = (r + 2 * n - 1 - s) % n;
         let (slo, shi) = (scratch.starts[send_c], scratch.starts[send_c + 1]);
+        let seq = block_seq(block, s as u32);
         pack_partials(&out[slo..shi], wire, &mut scratch.payload)
             .map_err(|e| local(e, r, round))?;
         encode_frame(
-            FrameHeader { round, seq: s as u32, kind, elems: (shi - slo) as u32 },
+            FrameHeader { round, seq, kind, elems: (shi - slo) as u32 },
             &scratch.payload,
             &mut scratch.frame,
         );
         t.send(right, &scratch.frame).map_err(|e| e.at_round(round))?;
         let (rlo, rhi) = (scratch.starts[recv_c], scratch.starts[recv_c + 1]);
-        recv_expect(
-            t,
-            left,
-            Want { round, seq: s as u32, kind, elems: rhi - rlo },
-            scratch,
-        )?;
+        recv_expect(t, left, Want { round, seq, kind, elems: rhi - rlo }, scratch)?;
         add_partials(&scratch.rx[HEADER_BYTES..], wire, &mut out[rlo..rhi])
             .map_err(|e| local(e, left, round))?;
     }
     // all-gather: rank r owns the finished chunk (r + 1); circulate the
     // finished chunks around the ring (seq continues where phase 1 ended)
     for s in 0..n - 1 {
-        let seq = (n - 1 + s) as u32;
+        let seq = block_seq(block, (n - 1 + s) as u32);
         let send_c = (r + 1 + n - s) % n;
         let recv_c = (r + n - s) % n;
         let (slo, shi) = (scratch.starts[send_c], scratch.starts[send_c + 1]);
@@ -208,19 +230,33 @@ pub fn halving_allreduce_ints(
     scratch: &mut StagedScratch,
     out: &mut Vec<i64>,
 ) -> Result<(), NetError> {
+    out.clear();
+    out.resize(msg.len(), 0);
+    msg.add_range_to(0, out);
+    halving_allreduce_partials(t, wire, round, scratch, out)
+}
+
+/// Halving-doubling over an already-widened local contribution (see
+/// [`ring_allreduce_partials`]); non-power-of-two worlds fall back to the
+/// ring schedule.
+fn halving_allreduce_partials(
+    t: &mut dyn Transport,
+    wire: Lanes,
+    round: u32,
+    scratch: &mut StagedScratch,
+    out: &mut Vec<i64>,
+) -> Result<(), NetError> {
     let n = t.world();
     if !n.is_power_of_two() {
-        return ring_allreduce_ints(t, msg, wire, round, scratch, out);
+        return ring_allreduce_partials(t, wire, round, scratch, out);
     }
     let r = t.rank();
-    let d = msg.len();
-    out.clear();
-    out.resize(d, 0);
-    msg.add_range_to(0, out);
+    let d = out.len();
     if n == 1 {
         return Ok(());
     }
     let kind = PayloadKind::of_lanes(wire);
+    let block = scratch.block;
 
     // reduce-scatter: each step, partner pairs split their common segment;
     // each sends the half it gives up and folds the half it keeps. Both
@@ -240,7 +276,12 @@ pub fn halving_allreduce_ints(
         pack_partials(&out[give.0..give.1], wire, &mut scratch.payload)
             .map_err(|e| local(e, r, round))?;
         encode_frame(
-            FrameHeader { round, seq, kind, elems: (give.1 - give.0) as u32 },
+            FrameHeader {
+                round,
+                seq: block_seq(block, seq),
+                kind,
+                elems: (give.1 - give.0) as u32,
+            },
             &scratch.payload,
             &mut scratch.frame,
         );
@@ -248,7 +289,7 @@ pub fn halving_allreduce_ints(
         recv_expect(
             t,
             partner,
-            Want { round, seq, kind, elems: keep.1 - keep.0 },
+            Want { round, seq: block_seq(block, seq), kind, elems: keep.1 - keep.0 },
             scratch,
         )?;
         add_partials(&scratch.rx[HEADER_BYTES..], wire, &mut out[keep.0..keep.1])
@@ -267,15 +308,167 @@ pub fn halving_allreduce_ints(
         pack_partials(&out[klo..khi], wire, &mut scratch.payload)
             .map_err(|e| local(e, r, round))?;
         encode_frame(
-            FrameHeader { round, seq, kind, elems: (khi - klo) as u32 },
+            FrameHeader {
+                round,
+                seq: block_seq(block, seq),
+                kind,
+                elems: (khi - klo) as u32,
+            },
             &scratch.payload,
             &mut scratch.frame,
         );
         t.send(partner, &scratch.frame).map_err(|e| e.at_round(round))?;
-        recv_expect(t, partner, Want { round, seq, kind, elems: ghi - glo }, scratch)?;
+        recv_expect(
+            t,
+            partner,
+            Want { round, seq: block_seq(block, seq), kind, elems: ghi - glo },
+            scratch,
+        )?;
         copy_partials(&scratch.rx[HEADER_BYTES..], wire, &mut out[glo..ghi])
             .map_err(|e| local(e, partner, round))?;
         seq += 1;
+    }
+    Ok(())
+}
+
+/// Leader-subworld view for the two-level schedule: virtual rank v is
+/// physical rank `v * group`. Inner-transport errors carry physical
+/// ranks; they are translated into leader space so the staged guard logic
+/// stays in one rank space, and [`two_level_allreduce_ints`] maps every
+/// leader-stage error back to physical ranks before surfacing it.
+struct LeaderView<'a> {
+    inner: &'a mut dyn Transport,
+    group: usize,
+    world: usize,
+    vrank: usize,
+}
+
+impl LeaderView<'_> {
+    fn to_leader_space(&self, e: NetError) -> NetError {
+        let (group, world) = (self.group, self.world);
+        e.map_rank(|phys| {
+            if phys % group == 0 && phys / group < world {
+                phys / group
+            } else {
+                // an error about a non-leader rank must not alias a
+                // leader once mapped back out — surface it unattributed
+                super::UNKNOWN_RANK
+            }
+        })
+    }
+}
+
+impl Transport for LeaderView<'_> {
+    fn rank(&self) -> usize {
+        self.vrank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(&mut self, to: usize, frame: &[u8]) -> Result<(), NetError> {
+        let phys = to * self.group;
+        self.inner.send(phys, frame).map_err(|e| self.to_leader_space(e))
+    }
+
+    fn recv(&mut self, from: usize, out: &mut Vec<u8>) -> Result<(), NetError> {
+        let phys = from * self.group;
+        self.inner.recv(phys, out).map_err(|e| self.to_leader_space(e))
+    }
+}
+
+/// Two-level hierarchical all-reduce: group members stream their whole
+/// message to their group leader (rank `r - r % group`), the leader folds
+/// them in **ascending rank order** onto its own message, the n/group
+/// leaders run recursive halving-doubling over a [`LeaderView`] (ring
+/// fallback when the leader count is not a power of two), and finally
+/// each leader broadcasts the finished aggregate back down its group.
+///
+/// This trades the flat ring's (n-1)-hop latency wall for
+/// `(group-1) + log2(n/group) + 1` hop generations — the schedule that
+/// keeps scaling at n ∈ {64, 128} where every flat schedule stalls on
+/// per-hop latency. Bit-parity with the leader-side fold holds by the
+/// module-level associativity argument, and every *partial group sum*
+/// still fits the caller's `wire` lane by IntSGD's clip proof: each rank
+/// clips to `floor((2^{b-1}-1)/n)`, so any subset of ranks — a group, a
+/// union of groups mid-halving — sums within the full-aggregate bound
+/// (`pack_partials` still range-checks every element).
+///
+/// Degenerate groupings (`group <= 1`, `group > n`, or `group` not
+/// dividing n) fall back to the flat ring — same bits either way.
+pub fn two_level_allreduce_ints(
+    t: &mut dyn Transport,
+    msg: &IntVec,
+    wire: Lanes,
+    round: u32,
+    group: usize,
+    scratch: &mut StagedScratch,
+    out: &mut Vec<i64>,
+) -> Result<(), NetError> {
+    let n = t.world();
+    if group <= 1 || group > n || n % group != 0 {
+        return ring_allreduce_ints(t, msg, wire, round, scratch, out);
+    }
+    let r = t.rank();
+    let d = msg.len();
+    out.clear();
+    out.resize(d, 0);
+    msg.add_range_to(0, out);
+    let kind = PayloadKind::of_lanes(wire);
+    let block = scratch.block;
+    let leader = r - r % group;
+    if r != leader {
+        // member: ship the whole message up, await the finished aggregate.
+        // Up-hop and down-hop run on distinct ordered pairs, so both are
+        // hop 0 of their pair.
+        pack_partials(out, wire, &mut scratch.payload).map_err(|e| local(e, r, round))?;
+        encode_frame(
+            FrameHeader { round, seq: block_seq(block, 0), kind, elems: d as u32 },
+            &scratch.payload,
+            &mut scratch.frame,
+        );
+        t.send(leader, &scratch.frame).map_err(|e| e.at_round(round))?;
+        recv_expect(
+            t,
+            leader,
+            Want { round, seq: block_seq(block, 0), kind, elems: d },
+            scratch,
+        )?;
+        copy_partials(&scratch.rx[HEADER_BYTES..], wire, out)
+            .map_err(|e| local(e, leader, round))?;
+        return Ok(());
+    }
+    // leader: fold the group's messages in ascending rank order — the
+    // pinned fold order (any order gives the same bits; pinning it keeps
+    // the schedule deterministic and the docs honest)
+    for m in r + 1..r + group {
+        recv_expect(
+            t,
+            m,
+            Want { round, seq: block_seq(block, 0), kind, elems: d },
+            scratch,
+        )?;
+        add_partials(&scratch.rx[HEADER_BYTES..], wire, out)
+            .map_err(|e| local(e, m, round))?;
+    }
+    // inter-node stage: halving-doubling across the leaders, partial
+    // group sums as contributions (they fit `wire` — doc comment above)
+    {
+        let mut leaders =
+            LeaderView { inner: t, group, world: n / group, vrank: r / group };
+        halving_allreduce_partials(&mut leaders, wire, round, scratch, out)
+            .map_err(|e| e.map_rank(|v| v * group))?;
+    }
+    // broadcast-down: the finished aggregate, one frame per member
+    pack_partials(out, wire, &mut scratch.payload).map_err(|e| local(e, r, round))?;
+    encode_frame(
+        FrameHeader { round, seq: block_seq(block, 0), kind, elems: d as u32 },
+        &scratch.payload,
+        &mut scratch.frame,
+    );
+    for m in r + 1..r + group {
+        t.send(m, &scratch.frame).map_err(|e| e.at_round(round))?;
     }
     Ok(())
 }
@@ -303,6 +496,7 @@ pub fn ring_allgather_bytes(
     }
     let right = (r + 1) % n;
     let left = (r + n - 1) % n;
+    let block = scratch.block;
     for s in 0..n - 1 {
         let send_origin = (r + n - s) % n;
         let recv_origin = (r + 2 * n - 1 - s) % n;
@@ -317,7 +511,7 @@ pub fn ring_allgather_bytes(
         encode_frame(
             FrameHeader {
                 round,
-                seq: s as u32,
+                seq: block_seq(block, s as u32),
                 kind: PayloadKind::Bytes,
                 elems: payload.len() as u32,
             },
@@ -339,7 +533,7 @@ pub fn ring_allgather_bytes(
                 }
                 FrameCheck::Fresh => {}
             }
-            if h.seq != s as u32 {
+            if h.seq != block_seq(block, s as u32) {
                 return Err(NetError::Replay {
                     rank: left,
                     round,
@@ -438,6 +632,142 @@ mod tests {
         for (n, d) in [(1usize, 16usize), (2, 33), (4, 100), (8, 257), (3, 50), (5, 64)] {
             assert_staged_matches_fold(halving_allreduce_ints, n, d, 77 + n as u64);
         }
+    }
+
+    #[test]
+    fn two_level_matches_leader_fold() {
+        // fn items (not closures) so the shared harness's `Staged` alias
+        // still fits; each pins one group size
+        fn g2(
+            t: &mut dyn Transport,
+            m: &IntVec,
+            w: Lanes,
+            r: u32,
+            s: &mut StagedScratch,
+            o: &mut Vec<i64>,
+        ) -> Result<(), NetError> {
+            two_level_allreduce_ints(t, m, w, r, 2, s, o)
+        }
+        fn g4(
+            t: &mut dyn Transport,
+            m: &IntVec,
+            w: Lanes,
+            r: u32,
+            s: &mut StagedScratch,
+            o: &mut Vec<i64>,
+        ) -> Result<(), NetError> {
+            two_level_allreduce_ints(t, m, w, r, 4, s, o)
+        }
+        fn g3(
+            t: &mut dyn Transport,
+            m: &IntVec,
+            w: Lanes,
+            r: u32,
+            s: &mut StagedScratch,
+            o: &mut Vec<i64>,
+        ) -> Result<(), NetError> {
+            two_level_allreduce_ints(t, m, w, r, 3, s, o)
+        }
+        // power-of-two leader counts take halving; n=12/g=2 exercises the
+        // six-leader ring fallback inside the leader stage; n=2/g=2 is a
+        // single group (fold + broadcast, no inter-leader exchange)
+        for (n, d) in [(4usize, 100usize), (8, 257), (2, 16), (12, 40)] {
+            assert_staged_matches_fold(g2, n, d, 131 + n as u64);
+        }
+        for (n, d) in [(8usize, 129usize), (4, 64), (16, 1000)] {
+            assert_staged_matches_fold(g4, n, d, 151 + n as u64);
+        }
+        // degenerate groupings (g > n, g does not divide n) fall back to
+        // the ring; n=3/g=3 is a legitimate single group
+        for (n, d) in [(4usize, 50usize), (3, 64), (1, 8)] {
+            assert_staged_matches_fold(g3, n, d, 171 + n as u64);
+        }
+    }
+
+    #[test]
+    fn two_level_i8_wire_carries_clipped_group_partials() {
+        // IntSGD's clip proof extends to the hierarchy: per-rank
+        // |v| <= floor(127 / n) keeps every *group* partial sum (and
+        // every union of groups mid-halving) inside i8
+        let n = 8;
+        let group = 4;
+        let d = 333;
+        let clip = 127 / n as i64;
+        let mut rng = Rng::new(29);
+        let msgs: Vec<IntVec> = (0..n)
+            .map(|_| {
+                let vals: Vec<i64> = (0..d)
+                    .map(|_| rng.below(2 * clip as u64 + 1) as i64 - clip)
+                    .collect();
+                IntVec::from_i64(&vals, Lanes::I8)
+            })
+            .collect();
+        let views: Vec<&IntVec> = msgs.iter().collect();
+        let mut want = Vec::new();
+        allreduce_intvec(&views, &mut want);
+        let mut endpoints = ChannelTransport::mesh(n);
+        std::thread::scope(|s| {
+            for (ep, msg) in endpoints.iter_mut().zip(&msgs) {
+                let want = &want;
+                s.spawn(move || {
+                    let mut scratch = StagedScratch::default();
+                    let mut out = Vec::new();
+                    two_level_allreduce_ints(
+                        ep, msg, Lanes::I8, 0, group, &mut scratch, &mut out,
+                    )
+                    .expect("i8 two-level");
+                    assert_eq!(&out, want);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn block_index_guards_cross_block_frames() {
+        // both ranks on block 3: the collective runs normally
+        let msg = IntVec::from_i64(&[1, 2, 3, 4], Lanes::I8);
+        let mut mesh = ChannelTransport::mesh(2);
+        let mut b = mesh.pop().unwrap();
+        let mut a = mesh.pop().unwrap();
+        std::thread::scope(|s| {
+            let msg_b = msg.clone();
+            let h = s.spawn(move || {
+                let mut scratch = StagedScratch::default();
+                scratch.set_block(3);
+                let mut out = Vec::new();
+                ring_allreduce_ints(&mut b, &msg_b, Lanes::I8, 0, &mut scratch, &mut out)
+                    .expect("same-block ranks agree");
+                (out, b)
+            });
+            let mut scratch = StagedScratch::default();
+            scratch.set_block(3);
+            let mut out = Vec::new();
+            ring_allreduce_ints(&mut a, &msg, Lanes::I8, 0, &mut scratch, &mut out)
+                .expect("same-block ranks agree");
+            let (out_b, mut b) = h.join().unwrap();
+            assert_eq!(out, out_b);
+            assert_eq!(out, vec![2, 4, 6, 8]);
+            // ranks disagreeing on the block index: the stray frame can
+            // never satisfy the guard — typed Replay, not a wrong sum
+            let msg_b = msg.clone();
+            let h = s.spawn(move || {
+                let mut scratch = StagedScratch::default();
+                scratch.set_block(4);
+                let mut out = Vec::new();
+                let e = ring_allreduce_ints(
+                    &mut b, &msg_b, Lanes::I8, 1, &mut scratch, &mut out,
+                )
+                .expect_err("cross-block frame must be rejected");
+                assert!(matches!(e, NetError::Replay { .. }), "{e}");
+            });
+            let mut scratch = StagedScratch::default();
+            scratch.set_block(5);
+            let mut out = Vec::new();
+            let e = ring_allreduce_ints(&mut a, &msg, Lanes::I8, 1, &mut scratch, &mut out)
+                .expect_err("cross-block frame must be rejected");
+            assert!(matches!(e, NetError::Replay { .. }), "{e}");
+            h.join().unwrap();
+        });
     }
 
     #[test]

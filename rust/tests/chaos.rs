@@ -27,7 +27,7 @@
 use std::time::Duration;
 
 use intsgd::compress::intsgd::{IntSgd, Rounding, WireInt};
-use intsgd::compress::{PhasedCompressor, RoundEngine, SignSgd};
+use intsgd::compress::{PhasedCompressor, Pipeline, RoundEngine, SignSgd};
 use intsgd::coordinator::net_driver::quad_pool;
 use intsgd::coordinator::{Coordinator, LrSchedule, TrainConfig, TrainResult};
 use intsgd::net::{
@@ -128,6 +128,97 @@ fn chaos_training_under_recoverable_faults_is_bitwise_identical() {
     assert!(red_b.stale_skipped() > 0 || red_b.retries() > 0);
     assert!(res_b.failovers.is_empty(), "recoverable faults must not shrink the world");
     assert_runs_identical(&res_a, &res_b, "chaos parity");
+}
+
+#[test]
+fn chaos_streamed_training_under_recoverable_faults_is_bitwise_identical() {
+    // The streamed pipeline under seeded recoverable faults: a per-block
+    // collective that faults retries from the unchanged block slots (the
+    // encoders for block k+1 keep running meanwhile), so the whole run
+    // must land on the clean *barrier* run's exact bits — fault recovery
+    // and the pipeline are both invisible in the output.
+    let n = 3;
+    let d = 256; // two blocks of 128: a real multi-block pipeline
+    let rounds = 12;
+    let seed = 520;
+    let dims = vec![128usize, 128];
+
+    let mut pool_a = quad_pool(n, d, seed, 0.01);
+    let mut coord_a =
+        Coordinator::new(vec![0.0; d], dims.clone(), Network::paper_cluster());
+    let mut engine_a = intsgd_engine(Rounding::Stochastic, n, 73);
+    let mut red_a = TransportReducer::channel_mesh(n, StagedAlgo::Ring);
+    let res_a =
+        coord_a.train_over(&mut pool_a, &mut engine_a, &mut red_a, &cfg(rounds, 0, 0.3), None);
+    pool_a.shutdown();
+
+    let mut plan = FaultPlan::clean(0x57EA3);
+    plan.drop_p = 0.015;
+    plan.dup_p = 0.02;
+    plan.corrupt_p = 0.03;
+    plan.truncate_p = 0.015;
+    let mesh = FaultTransport::wrap_mesh(ChannelTransport::mesh(n), &plan, None);
+    let mut red_b = TransportReducer::new(mesh, StagedAlgo::Ring);
+    red_b.set_timeout(Duration::from_millis(250));
+    red_b.set_max_retries(64);
+    let mut pool_b = quad_pool(n, d, seed, 0.01);
+    let mut coord_b = Coordinator::new(vec![0.0; d], dims, Network::paper_cluster());
+    let mut engine_b = intsgd_engine(Rounding::Stochastic, n, 73);
+    let mut streamed_cfg = cfg(rounds, 0, 0.3);
+    streamed_cfg.pipeline = Pipeline::Streamed;
+    let res_b =
+        coord_b.train_over(&mut pool_b, &mut engine_b, &mut red_b, &streamed_cfg, None);
+    pool_b.shutdown();
+
+    assert!(red_b.retries() > 0, "no fault ever fired — weaken the plan's seed");
+    assert!(res_b.failovers.is_empty(), "recoverable faults must not shrink the world");
+    // the pipeline really ran per-block: one collective per block per
+    // integer round, vs one per round on the barrier path
+    assert_eq!(red_b.calls(), 2 * red_a.calls(), "streamed must reduce per block");
+    assert_runs_identical(&res_a, &res_b, "streamed chaos parity");
+}
+
+#[test]
+fn chaos_streamed_failover_matches_barrier_failover_bitwise() {
+    // A rank dies while the pipeline is in flight: the driver must drain
+    // the posted encode, park the encoders, and surface the PeerDead so
+    // the coordinator fails over — landing on the exact bits of the
+    // barrier run killed at the same training round.
+    let n = 4;
+    let d = 128; // two blocks of 64
+    let rounds = 8;
+    let seed = 650;
+    let lr = 0.3;
+
+    // Collective-id bookkeeping for the kill: round 0 is dense (no
+    // collective); the barrier path pays one collective per integer round
+    // (training round r -> id r-1), the streamed path one per block
+    // (round r -> ids 2(r-1), 2(r-1)+1). Both kills below land in
+    // training round 4 — the streamed one during block 0, with block 1's
+    // encode already posted.
+    let run = |pipeline: Pipeline, kill_id: u32| {
+        let mesh = FaultTransport::wrap_mesh(
+            ChannelTransport::mesh(n),
+            &FaultPlan::clean(7),
+            Some((3, KillAt::Round(kill_id))),
+        );
+        let mut red = TransportReducer::new(mesh, StagedAlgo::Ring);
+        red.set_timeout(Duration::from_millis(400));
+        let mut pool = quad_pool(n, d, seed, 0.0);
+        let mut coord =
+            Coordinator::new(vec![0.0; d], vec![64, 64], Network::paper_cluster());
+        let mut engine = intsgd_engine(Rounding::Stochastic, n, 83);
+        let mut c = cfg(rounds, 0, lr);
+        c.pipeline = pipeline;
+        let res = coord.train_over(&mut pool, &mut engine, &mut red, &c, None);
+        pool.shutdown();
+        res
+    };
+    let barrier = run(Pipeline::Barrier, 3);
+    let streamed = run(Pipeline::Streamed, 6);
+    assert_eq!(barrier.failovers, vec![(4, 3)]);
+    assert_eq!(streamed.failovers, vec![(4, 3)]);
+    assert_runs_identical(&barrier, &streamed, "streamed failover parity");
 }
 
 /// Seeded fault matrix at the collective level: across a grid of world

@@ -15,8 +15,8 @@ use intsgd::compress::intsgd::{IntSgd, Rounding, WireInt};
 use intsgd::compress::intvec::{IntVec, Lanes};
 use intsgd::compress::powersgd::BlockShape;
 use intsgd::compress::{
-    HeuristicIntSgd, IdentitySgd, NatSgd, PhasedCompressor, PowerSgd, Qsgd,
-    RoundEngine, SignSgd, TopK,
+    HeuristicIntSgd, IdentitySgd, NatSgd, PhasedCompressor, Pipeline, PowerSgd,
+    Qsgd, RoundEngine, SerialReducer, SignSgd, TopK,
 };
 use intsgd::coordinator::{BlockInfo, Coordinator, RoundCtx, WorkerPool};
 use intsgd::coordinator::{LrSchedule, TrainConfig};
@@ -272,6 +272,112 @@ fn engine_rounds_over_tcp_match_the_sequential_reference_for_the_zoo() {
         }
     }
     pool.shutdown();
+}
+
+#[test]
+fn streamed_rounds_match_the_barrier_drivers_bitwise_for_the_zoo() {
+    // The double-buffered block pipeline must be invisible in the output:
+    // for every compressor, a streamed round equals the sequential
+    // reference bit for bit — whether the per-block collectives run on
+    // the leader fold (SerialReducer) or over a real transport with the
+    // two-level hierarchical schedule. Compressors that cannot stream
+    // (dense round 0, multi-pass, all-gather codecs) exercise the
+    // fallback: `round_streamed_over` must quietly run the barrier path.
+    let n = 4;
+    let d = 96;
+    let mut pool = WorkerPool::for_encode(n);
+    let mut serial = SerialReducer;
+    let mut chan =
+        TransportReducer::channel_mesh(n, StagedAlgo::TwoLevel { group: 2 });
+    for (label, mk) in zoo(n, d) {
+        let mut seq = RoundEngine::new(mk());
+        let mut str_serial = RoundEngine::new(mk());
+        let mut str_chan = RoundEngine::new(mk());
+        let mut rng = Rng::new(0x57E0);
+        for round in 0..3 {
+            let grads: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 0.5)).collect();
+            let ctx = ctx_for(round, d, n);
+            let a = seq.round_sequential(&grads, &ctx);
+            let b = str_serial
+                .round_streamed_over(&mut pool, &mut serial, &grads, &ctx)
+                .expect("leader fold cannot fail");
+            let c = str_chan
+                .round_streamed_over(&mut pool, &mut chan, &grads, &ctx)
+                .expect("clean fabric");
+            for (tag, r) in [("serial", &b), ("two-level", &c)] {
+                assert_eq!(
+                    a.gtilde, r.gtilde,
+                    "{label} round {round} ({tag}): gtilde differs"
+                );
+                assert_eq!(
+                    a.max_abs_int, r.max_abs_int,
+                    "{label} round {round} ({tag}): max_abs_int differs"
+                );
+                assert_eq!(
+                    a.alpha.to_bits(),
+                    r.alpha.to_bits(),
+                    "{label} round {round} ({tag}): alpha differs"
+                );
+                assert_eq!(
+                    a.wire_bytes_per_worker(),
+                    r.wire_bytes_per_worker(),
+                    "{label} round {round} ({tag}): wire bytes differ"
+                );
+            }
+        }
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn streamed_training_matches_barrier_training_bitwise() {
+    // End to end through the coordinator's dispatch: the same run with
+    // `pipeline=streamed` (per-block collectives over channels) must
+    // reproduce the barrier run exactly — params, losses, diagnostics.
+    let n = 4;
+    let d = 256;
+    let rounds = 10;
+    let mk_engine = || {
+        RoundEngine::new(Box::new(IntSgd::new(
+            Rounding::Stochastic,
+            WireInt::Int8,
+            Box::new(MovingAverageRule::default_paper()),
+            n,
+            29,
+        )) as Box<dyn PhasedCompressor>)
+    };
+    let run = |pipeline: Pipeline| {
+        let cfg = TrainConfig {
+            rounds,
+            schedule: LrSchedule::constant(0.3),
+            pipeline,
+            ..Default::default()
+        };
+        let mut pool = quad_pool(n, d);
+        let mut coord =
+            Coordinator::new(vec![0.0; d], vec![d], Network::paper_cluster());
+        let mut engine = mk_engine();
+        let mut red = TransportReducer::channel_mesh(n, StagedAlgo::Ring);
+        let res = coord.train_over(&mut pool, &mut engine, &mut red, &cfg, None);
+        pool.shutdown();
+        res
+    };
+    let barrier = run(Pipeline::Barrier);
+    let streamed = run(Pipeline::Streamed);
+    assert_eq!(
+        barrier.final_params, streamed.final_params,
+        "final params diverge"
+    );
+    for (ra, rb) in barrier.records.iter().zip(&streamed.records) {
+        assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits(), "round {}", ra.round);
+        assert_eq!(ra.max_abs_int, rb.max_abs_int, "round {}", ra.round);
+        assert_eq!(ra.alpha.to_bits(), rb.alpha.to_bits(), "round {}", ra.round);
+        assert_eq!(
+            ra.wire_bytes_per_worker, rb.wire_bytes_per_worker,
+            "round {}",
+            ra.round
+        );
+    }
 }
 
 #[test]

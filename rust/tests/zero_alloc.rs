@@ -203,4 +203,35 @@ fn steady_state_intsgd_rounds_allocate_nothing() {
         "steady state after an erroring round hit the allocator {err_allocs} times \
          (the failed round leaked buffers)"
     );
+
+    // --- streamed driver (double-buffered block pipeline) -------------------
+    // The pipeline adds its own reused state — the per-rank block slots
+    // (both parities), the per-block aggregate scratch, and the drained
+    // whole-round sum. After warmup a streamed round must be exactly as
+    // allocation-free as the barrier drivers it is bit-identical to.
+    let mut str_engine = engine(n, 11);
+    let mut str_pool = WorkerPool::for_encode(n);
+    let mut str_red = SerialReducer;
+    for round in 0..5 {
+        ctx.round = round;
+        let r = str_engine
+            .round_streamed_over(&mut str_pool, &mut str_red, &grads, &ctx)
+            .expect("serial reducer cannot fail");
+        str_engine.reclaim(r);
+    }
+    let before = allocations();
+    for round in 5..25 {
+        ctx.round = round;
+        let r = str_engine
+            .round_streamed_over(&mut str_pool, &mut str_red, &grads, &ctx)
+            .expect("serial reducer cannot fail");
+        assert_eq!(r.gtilde.len(), d);
+        str_engine.reclaim(r);
+    }
+    let str_allocs = allocations() - before;
+    str_pool.shutdown();
+    assert_eq!(
+        str_allocs, 0,
+        "streamed steady-state rounds hit the allocator {str_allocs} times"
+    );
 }

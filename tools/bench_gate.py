@@ -1,0 +1,150 @@
+#!/usr/bin/env python3
+"""Fail CI when a committed bench baseline regresses.
+
+Usage:
+    python3 tools/bench_gate.py --baseline rust/BENCH_net.baseline.json \
+        --fresh rust/BENCH_net.json [--threshold 0.15] [--floor-ms 0.05]
+
+Compares the timing leaves of a fresh bench report (written by
+`cargo bench --bench bench_compress` / `bench_collective`) against the
+committed baseline and exits non-zero when any hot-path value regressed
+past the threshold. Improvements and schema drift never fail the gate:
+a PR that reshapes a report is expected to refresh the baseline next to
+it, and a missing counterpart key is reported but not fatal.
+
+Noise handling, deliberately conservative so the gate stays green on
+shared CI runners:
+
+  * Only timing leaves are gated — numeric keys ending in `_ms`.
+    Config echo columns (d, n, group, hops, bytes) and derived
+    speedups/ratios are ignored.
+  * Values where BOTH sides sit under the floor (default 0.05 ms) are
+    skipped: sub-tick timings are scheduler noise, not signal.
+  * Smoke-mode reports (`"smoke": true` — single iteration at tiny
+    sizes) are gated with a relaxed threshold (default 2.0, i.e. fail
+    only past 3x) because a 1-iteration median at d=2^12 jitters far
+    beyond any honest regression bound. The strict threshold applies
+    to full runs, whose medians at d=2^20 are stable.
+  * A smoke/full mismatch between baseline and fresh report skips the
+    gate entirely (exit 0, loud message) — comparing the two shapes
+    would be meaningless.
+
+Refreshing a baseline after an intentional perf or schema change:
+
+    (cd rust && BENCH_SMOKE=1 cargo bench --bench bench_compress)
+    cp rust/BENCH_compress.json rust/BENCH_compress.baseline.json
+
+and likewise for bench_collective -> BENCH_net.baseline.json.
+"""
+
+import argparse
+import json
+import sys
+
+def is_timing_key(key):
+    # `*model*` columns are deterministic netsim-preset functions (already
+    # pinned by unit tests), not wall-clock — only measured time is gated.
+    return key.endswith("_ms") and "model" not in key
+
+
+def walk(base, fresh, path, pairs, missing):
+    """Collect (path, baseline, fresh) timing pairs from both trees."""
+    if isinstance(base, dict) and isinstance(fresh, dict):
+        for k in sorted(set(base) | set(fresh)):
+            p = f"{path}.{k}" if path else k
+            if k not in base or k not in fresh:
+                if is_timing_key(k):
+                    missing.append(p)
+                continue
+            walk(base[k], fresh[k], p, pairs, missing)
+    elif isinstance(base, list) and isinstance(fresh, list):
+        if len(base) != len(fresh):
+            missing.append(f"{path}[] (len {len(base)} vs {len(fresh)})")
+        for i, (b, f) in enumerate(zip(base, fresh)):
+            walk(b, f, f"{path}[{i}]", pairs, missing)
+    elif isinstance(base, (int, float)) and isinstance(fresh, (int, float)):
+        leaf = path.rsplit(".", 1)[-1]
+        if is_timing_key(leaf) and not isinstance(base, bool):
+            pairs.append((path, float(base), float(fresh)))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True, help="committed baseline json")
+    ap.add_argument("--fresh", required=True, help="freshly written bench json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.15,
+        help="max tolerated relative regression on full runs (0.15 = +15%%)",
+    )
+    ap.add_argument(
+        "--smoke-threshold",
+        type=float,
+        default=2.0,
+        help="relaxed threshold when both reports are smoke runs",
+    )
+    ap.add_argument(
+        "--floor-ms",
+        type=float,
+        default=0.05,
+        help="skip pairs where both sides are under this many ms (noise)",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.baseline) as f:
+            base = json.load(f)
+        with open(args.fresh) as f:
+            fresh = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_gate: cannot load reports: {e}", file=sys.stderr)
+        return 2
+
+    base_smoke = bool(base.get("smoke", False))
+    fresh_smoke = bool(fresh.get("smoke", False))
+    if base_smoke != fresh_smoke:
+        print(
+            f"bench_gate: smoke mismatch (baseline smoke={base_smoke}, "
+            f"fresh smoke={fresh_smoke}) — shapes are not comparable, skipping"
+        )
+        return 0
+    threshold = args.smoke_threshold if fresh_smoke else args.threshold
+
+    pairs, missing = [], []
+    walk(base, fresh, "", pairs, missing)
+    if not pairs:
+        print("bench_gate: no comparable timing keys found", file=sys.stderr)
+        return 2
+
+    regressions, compared, skipped = [], 0, 0
+    for path, b, f in pairs:
+        if b < args.floor_ms and f < args.floor_ms:
+            skipped += 1
+            continue
+        compared += 1
+        ratio = f / b if b > 0 else float("inf")
+        if f > b * (1.0 + threshold):
+            regressions.append((path, b, f, ratio))
+
+    mode = "smoke" if fresh_smoke else "full"
+    print(
+        f"bench_gate [{mode}]: {compared} timing keys gated at +{threshold:.0%}, "
+        f"{skipped} under the {args.floor_ms} ms noise floor"
+    )
+    for p in missing:
+        print(f"  note: no counterpart for {p} (schema drift — refresh baseline?)")
+    if regressions:
+        print("bench_gate: REGRESSIONS past the threshold:", file=sys.stderr)
+        for path, b, f, ratio in sorted(regressions, key=lambda r: -r[3]):
+            print(
+                f"  {path}: {b:.3f} -> {f:.3f} ({ratio:.2f}x)",
+                file=sys.stderr,
+            )
+        return 1
+    print("bench_gate: ok — no hot-path regression past the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
