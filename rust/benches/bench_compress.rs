@@ -382,6 +382,91 @@ fn parallel_vs_sequential(iters: usize, d: usize) -> Json {
     ])
 }
 
+/// Median milliseconds of `iters` runs of `f` (after one warmup).
+fn bench_ms<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    f();
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    median(&samples) * 1e3
+}
+
+/// Part 4: the kernel layer head-to-head — each dispatched kernel
+/// (`intsgd::simd`, whatever backend detection picked) against the
+/// scalar spec (`intsgd::simd::scalar`) on the d = 2^20, n = 16 hot
+/// shape. GB/s counts bytes read + written by the kernel. Without
+/// `--features simd` (or under INTSGD_FORCE_SCALAR) both columns time
+/// the same code and the speedup sits at ~1.0 — the rows then serve as
+/// the scalar-regression guard for `tools/bench_gate.py`.
+fn kernel_rows(iters: usize, d: usize) -> Json {
+    use intsgd::simd::{self, scalar};
+    let n = 16usize;
+    let mut rng = Rng::new(0xBE9C);
+    let grad = rng.normal_vec(d, 0.05);
+    let grad_b = rng.normal_vec(d, 0.05);
+    let msgs: Vec<Vec<i8>> = (0..n)
+        .map(|_| (0..d).map(|_| (rng.below(15) as i64 - 7) as i8).collect())
+        .collect();
+    let views: Vec<&[i8]> = msgs.iter().map(|m| m.as_slice()).collect();
+    let sum: Vec<i64> = (0..d).map(|_| rng.below(2000) as i64 - 1000).collect();
+    let mut f32_out = vec![0.0f32; d];
+    let mut acc = vec![0i64; d];
+    println!(
+        "\nkernel layer: d = {d}, n = {n}, backend = {} \
+         (dispatched vs scalar spec)\n",
+        simd::backend_name()
+    );
+
+    let mut rows = Vec::new();
+    let row = |name: &str, bytes: usize, simd_ms: f64, scalar_ms: f64| {
+        let gbps = bytes as f64 / (simd_ms / 1e3).max(1e-12) / 1e9;
+        let speedup = scalar_ms / simd_ms.max(1e-9);
+        println!(
+            "{name:<22} dispatched {simd_ms:>8.3} ms  scalar {scalar_ms:>8.3} ms  \
+             {gbps:>7.2} GB/s  {speedup:>5.2}x"
+        );
+        obj(vec![
+            ("name", Json::Str(name.to_string())),
+            ("simd_ms", num(simd_ms)),
+            ("scalar_ms", num(scalar_ms)),
+            ("gbps", num(gbps)),
+            ("speedup", num(speedup)),
+        ])
+    };
+    let mut sink = 0.0f64;
+
+    // encode: read 4d bytes of f32, write 4d
+    let s = bench_ms(iters, || simd::round_stoch(&grad, 7.5, 0x5EED, 0, &mut f32_out));
+    let sc = bench_ms(iters, || scalar::round_stoch(&grad, 7.5, 0x5EED, 0, &mut f32_out));
+    rows.push(row("encode_round_stoch", 8 * d, s, sc));
+
+    // reduce: read n*d bytes of i8 + 8d of acc, write 8d
+    let s = bench_ms(iters, || simd::sum_ranks_i8(&views, &mut acc));
+    let sc = bench_ms(iters, || scalar::sum_ranks_i8(&views, &mut acc));
+    rows.push(row("reduce_sum_ranks_i8", (n + 16) * d, s, sc));
+
+    // decode: read 8d bytes of i64, write 4d of f32
+    let s = bench_ms(iters, || simd::decode_scale_i64(&sum, 1.0 / 48.0, &mut f32_out));
+    let sc = bench_ms(iters, || scalar::decode_scale_i64(&sum, 1.0 / 48.0, &mut f32_out));
+    rows.push(row("decode_scale_i64", 12 * d, s, sc));
+
+    // norm fold: read 4d + 4d bytes of f32
+    let s = bench_ms(iters, || sink += simd::sq_diff_norm(&grad, &grad_b));
+    let sc = bench_ms(iters, || sink += scalar::sq_diff_norm(&grad, &grad_b));
+    rows.push(row("norm_sq_diff", 8 * d, s, sc));
+
+    std::hint::black_box((&f32_out, &acc, sink));
+    obj(vec![
+        ("d", num(d as f64)),
+        ("n", num(n as f64)),
+        ("backend", Json::Str(simd::backend_name().into())),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
 fn main() {
     let smoke = smoke();
     let (iters, shrink, d_hot) = if smoke {
@@ -395,12 +480,14 @@ fn main() {
     let zoo = zoo_rounds(if smoke { 1 } else { 5 }, shrink);
     let hot = hotpath(iters, d_hot);
     let par = parallel_vs_sequential(iters, d_hot);
+    let kernels = kernel_rows(if smoke { 1 } else { 25 }, d_hot);
     let report = obj(vec![
         ("bench", Json::Str("bench_compress".into())),
         ("smoke", Json::Bool(smoke)),
         ("zoo", zoo),
         ("intsgd_int8_hotpath", hot),
         ("parallel_engine", par),
+        ("kernels", kernels),
     ]);
     let path = "BENCH_compress.json";
     std::fs::write(path, json::to_string(&report)).expect("write bench report");

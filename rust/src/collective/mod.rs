@@ -38,10 +38,18 @@ pub fn allreduce_i64(msgs: &[&[i64]], out: &mut Vec<i64>) {
 /// an i8 message costs an eighth of the memory traffic of the widened
 /// fold above (`benches/bench_collective.rs` measures the difference).
 ///
-/// This is THE serial rank-order fold body: the engine's `SerialReducer`
-/// delegates here, so the benchmark and the production reduce cannot
-/// drift apart. Folds in rank order (the parity guarantee); reuses
-/// `out`'s capacity (the zero-allocation guarantee).
+/// This is THE serial fold body: the engine's `SerialReducer` delegates
+/// here, so the benchmark and the production reduce cannot drift apart.
+/// Exact integer arithmetic, so every fold order yields the same bits
+/// (the parity guarantee); reuses `out`'s capacity (the zero-allocation
+/// guarantee).
+///
+/// Up to [`crate::simd::SUM_RANKS_MAX`] all-i8 messages take the fused
+/// multi-rank kernel ([`crate::simd::sum_ranks_i8`]): one pass over the
+/// aggregate with the cross-rank sum held in an i16 intermediate — sound
+/// because the i8 wire proves n ≤ 127 ranks of |v| ≤ 127 — instead of
+/// one widening read-modify-write sweep per rank. Mixed lanes, wide
+/// lanes, or an over-long world fold message-at-a-time as before.
 pub fn allreduce_intvec_iter<'a, I>(msgs: I, out: &mut Vec<i64>)
 where
     I: IntoIterator<Item = &'a IntVec>,
@@ -51,10 +59,40 @@ where
     let d = first.len();
     out.clear();
     out.resize(d, 0);
-    first.add_range_to(0, out);
-    for m in iter {
+    // Stash candidate i8 messages for the fused fold on the stack (no
+    // allocation); anything that disqualifies the batch — a non-i8 lane,
+    // more than SUM_RANKS_MAX messages — folds immediately.
+    let mut stash: [&IntVec; crate::simd::SUM_RANKS_MAX] = [first; crate::simd::SUM_RANKS_MAX];
+    let mut stashed = 0usize;
+    let mut fused = true;
+    for m in std::iter::once(first).chain(iter) {
         assert_eq!(m.len(), d, "mismatched message lengths");
+        if fused && matches!(m, IntVec::I8(_)) && stashed < stash.len() {
+            stash[stashed] = m;
+            stashed += 1;
+            continue;
+        }
+        if fused {
+            // disqualified: drain the stash message-at-a-time
+            for s in &stash[..stashed] {
+                s.add_range_to(0, out);
+            }
+            stashed = 0;
+            fused = false;
+        }
         m.add_range_to(0, out);
+    }
+    if stashed == 1 {
+        stash[0].add_range_to(0, out);
+    } else if stashed > 1 {
+        let mut views: [&[i8]; crate::simd::SUM_RANKS_MAX] = [&[]; crate::simd::SUM_RANKS_MAX];
+        for (v, m) in views.iter_mut().zip(&stash[..stashed]) {
+            match m {
+                IntVec::I8(b) => *v = b.as_slice(),
+                _ => unreachable!("stash holds only i8 messages"),
+            }
+        }
+        crate::simd::sum_ranks_i8(&views[..stashed], out);
     }
 }
 

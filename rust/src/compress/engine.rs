@@ -751,9 +751,12 @@ pub(crate) fn decode_block_ints(
 /// One block of the Alg. 2 decode: append `sum / (n * alpha)` to `out`.
 /// Shared between the whole-round decode above and the streamed driver's
 /// per-block drain, so the two cannot drift (bit-parity by construction).
+/// The int→f32 scale runs through the dispatched decode kernel.
 pub(crate) fn decode_span_ints(sum: &[i64], alpha: f64, n: usize, out: &mut Vec<f32>) {
     let inv = 1.0 / (n as f64 * alpha);
-    out.extend(sum.iter().map(|&s| (s as f64 * inv) as f32));
+    let start = out.len();
+    out.resize(start + sum.len(), 0.0);
+    crate::simd::decode_scale_i64(sum, inv, &mut out[start..]);
 }
 
 /// Drive one round with every phase on the caller thread — the sequential

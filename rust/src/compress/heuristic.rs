@@ -178,7 +178,7 @@ impl PhasedCompressor for HeuristicIntSgd {
             }
             PassPlan::ScaledRound { .. } => {
                 red.sum_ints(msgs, &mut self.sum)?;
-                self.max_abs_int = self.sum.iter().map(|&x| x.abs()).max().unwrap_or(0);
+                self.max_abs_int = crate::simd::max_abs_i64(&self.sum);
                 PassOutcome::Done
             }
             _ => unreachable!("HeuristicIntSgd planned no such pass"),

@@ -24,7 +24,7 @@
 use crate::collective::InaSwitch;
 use crate::coordinator::{BlockInfo, RoundCtx};
 use crate::scaling::AlphaRule;
-use crate::util::rng::splitmix64_at;
+use crate::simd;
 use crate::util::Rng;
 
 use std::sync::Arc;
@@ -74,9 +74,22 @@ impl WireInt {
 /// `of_f32`/`of_f64` is already rounded and bounded to the lane's range
 /// by the caller's clip/budget proof, so the `as` casts are
 /// value-preserving (NaN maps to 0, same as the old `as i64` path).
+///
+/// `of_rounded` is the clip+pack step of the fused encode: it takes the
+/// *rounded but unclipped* f32 from the rounding kernel and clamps it to
+/// `±clip`. For the narrow i8 lane the clamp runs in f32 (`clip <= 127`
+/// is always exactly representable); for the wide i32/i64 lanes it runs
+/// in the *integer* domain, because a clip bound above 2^24 need not be
+/// f32-representable — `clip as f32` can round up and admit an
+/// aggregate one past the proved wire bound (see the large-clip
+/// property test in `tests/fused_encode.rs`). Either way a NaN packs to
+/// 0 (f32 clamp propagates NaN and `as` maps it to 0; `as i64` maps it
+/// to 0 directly).
 pub trait WireLane: Copy + Send {
     fn of_f32(x: f32) -> Self;
     fn of_f64(x: f64) -> Self;
+    /// Clamp a rounded value to `±clip` and pack it into the lane.
+    fn of_rounded(x: f32, clip: i64) -> Self;
 }
 
 impl WireLane for i8 {
@@ -87,6 +100,12 @@ impl WireLane for i8 {
     #[inline]
     fn of_f64(x: f64) -> i8 {
         x as i8
+    }
+    #[inline]
+    fn of_rounded(x: f32, clip: i64) -> i8 {
+        debug_assert!(clip <= i8::MAX as i64);
+        let c = clip as f32; // <= 127: exact
+        x.clamp(-c, c) as i8
     }
 }
 
@@ -99,6 +118,11 @@ impl WireLane for i32 {
     fn of_f64(x: f64) -> i32 {
         x as i32
     }
+    #[inline]
+    fn of_rounded(x: f32, clip: i64) -> i32 {
+        // integer-domain clamp: clip may not be f32-representable
+        (x as i64).clamp(-clip, clip) as i32
+    }
 }
 
 impl WireLane for i64 {
@@ -110,10 +134,15 @@ impl WireLane for i64 {
     fn of_f64(x: f64) -> i64 {
         x as i64
     }
+    #[inline]
+    fn of_rounded(x: f32, clip: i64) -> i64 {
+        (x as i64).clamp(-clip, clip)
+    }
 }
 
-/// Coordinates per fused-encode chunk: enough for the auto-vectorizer to
-/// amortize the loop, small enough that a chunk's lanes stay in L1.
+/// Coordinates per fused-encode chunk: enough to amortize the kernel
+/// dispatch, small enough that the 4 KiB rounded-value scratch and the
+/// chunk's lanes stay in L1.
 const ENCODE_CHUNK: usize = 1024;
 
 /// Round one block of coordinates into a typed lane buffer — the fused
@@ -125,8 +154,12 @@ const ENCODE_CHUNK: usize = 1024;
 /// All arithmetic is f32 to match the Pallas kernel exactly (`alpha * g`,
 /// `floor(t + u)` / round-ties-even, clip); the uniform draws are
 /// counter-based off one generator step per round, so there is no
-/// loop-carried RNG dependency and the whole chain auto-vectorizes
-/// (§Perf: this path is the paper's "computation overhead" column).
+/// loop-carried RNG dependency (§Perf: this path is the paper's
+/// "computation overhead" column). The scale→round fill runs through the
+/// dispatched kernel layer (`crate::simd`) into a fixed stack scratch;
+/// the clip+pack step is the *same* scalar `WireLane::of_rounded` loop on
+/// every backend, so encode bit-identity reduces to the rounding kernels'
+/// contract (DESIGN.md §10).
 fn encode_span<T: WireLane>(
     rounding: Rounding,
     grad: &[f32],
@@ -137,30 +170,16 @@ fn encode_span<T: WireLane>(
     out: &mut Vec<T>,
 ) {
     let a = alpha as f32;
-    let c = clip as f32; // clip <= 2^31: exactly representable ranges we use
-    match rounding {
-        Rounding::Stochastic => {
-            const SCALE: f32 = 1.0 / (1u32 << 24) as f32;
-            let mut j = offset as u64;
-            for chunk in grad.chunks(ENCODE_CHUNK) {
-                let start = j;
-                out.extend(chunk.iter().enumerate().map(|(k, &g)| {
-                    let u = (splitmix64_at(base, start + k as u64) >> 40) as f32 * SCALE;
-                    T::of_f32((g * a + u).floor().clamp(-c, c))
-                }));
-                j += chunk.len() as u64;
-            }
+    let mut rounded = [0.0f32; ENCODE_CHUNK];
+    let mut j = offset as u64;
+    for chunk in grad.chunks(ENCODE_CHUNK) {
+        let r = &mut rounded[..chunk.len()];
+        match rounding {
+            Rounding::Stochastic => simd::round_stoch(chunk, a, base, j, r),
+            Rounding::Deterministic => simd::round_determ(chunk, a, r),
         }
-        Rounding::Deterministic => {
-            for chunk in grad.chunks(ENCODE_CHUNK) {
-                // f32 round-ties-even mirrors jnp.round in the kernel
-                out.extend(
-                    chunk
-                        .iter()
-                        .map(|&g| T::of_f32((g * a).round_ties_even().clamp(-c, c))),
-                );
-            }
-        }
+        out.extend(r.iter().map(|&x| T::of_rounded(x, clip)));
+        j += chunk.len() as u64;
     }
 }
 
@@ -543,7 +562,7 @@ impl PhasedCompressor for IntSgd {
                 } else {
                     red.sum_ints(msgs, &mut self.sum)?;
                 }
-                self.max_abs_int = self.sum.iter().map(|&x| x.abs()).max().unwrap_or(0);
+                self.max_abs_int = simd::max_abs_i64(&self.sum);
             }
             _ => unreachable!("IntSgd planned no such pass"),
         }

@@ -19,6 +19,7 @@
 //! stores never saturate: every value fits by construction.
 
 use super::intsgd::WireInt;
+use crate::simd;
 
 /// Native storage width of one integer message.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -128,19 +129,21 @@ impl IntVec {
         }
     }
 
-    /// Largest |value| (paper Fig. 6 diagnostics).
+    /// Largest |value| (paper Fig. 6 diagnostics), through the dispatched
+    /// max-abs fold.
     pub fn max_abs(&self) -> i64 {
         match self {
-            IntVec::I8(v) => v.iter().map(|&x| (x as i64).abs()).max().unwrap_or(0),
-            IntVec::I32(v) => v.iter().map(|&x| (x as i64).abs()).max().unwrap_or(0),
-            IntVec::I64(v) => v.iter().map(|&x| x.abs()).max().unwrap_or(0),
+            IntVec::I8(v) => simd::max_abs_i8(v),
+            IntVec::I32(v) => simd::max_abs_i32(v),
+            IntVec::I64(v) => simd::max_abs_i64(v),
         }
     }
 
     /// out[k] += self[lo + k]: the widening accumulate at the heart of the
-    /// integer reduce. One tight loop per lane width — no per-element
-    /// `try_from`, no dispatch inside the loop — so LLVM vectorizes the
-    /// widen+add chain.
+    /// integer reduce. One dispatched kernel per lane width — no
+    /// per-element `try_from`, no dispatch inside the loop — widening once
+    /// into the `i64` accumulator (exact integer arithmetic, so every
+    /// backend is bit-identical).
     #[inline]
     pub fn add_range_to(&self, lo: usize, out: &mut [i64]) {
         assert!(
@@ -150,22 +153,11 @@ impl IntVec {
             lo + out.len(),
             self.len()
         );
+        let hi = lo + out.len();
         match self {
-            IntVec::I8(v) => {
-                for (o, &x) in out.iter_mut().zip(&v[lo..]) {
-                    *o += x as i64;
-                }
-            }
-            IntVec::I32(v) => {
-                for (o, &x) in out.iter_mut().zip(&v[lo..]) {
-                    *o += x as i64;
-                }
-            }
-            IntVec::I64(v) => {
-                for (o, &x) in out.iter_mut().zip(&v[lo..]) {
-                    *o += x;
-                }
-            }
+            IntVec::I8(v) => simd::add_widen_i8(&v[lo..hi], out),
+            IntVec::I32(v) => simd::add_widen_i32(&v[lo..hi], out),
+            IntVec::I64(v) => simd::add_i64(&v[lo..hi], out),
         }
     }
 

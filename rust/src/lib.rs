@@ -34,4 +34,5 @@ pub mod netsim;
 pub mod optim;
 pub mod runtime;
 pub mod scaling;
+pub mod simd;
 pub mod util;

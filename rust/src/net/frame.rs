@@ -310,16 +310,25 @@ pub fn pack_partials(sums: &[i64], wire: Lanes, out: &mut Vec<u8>) -> Result<(),
     Ok(())
 }
 
+/// A received i8-lane payload viewed as signed lanes: `u8` and `i8`
+/// have identical layout, so the reinterpretation is free and the i8
+/// kernels can run straight off the wire bytes.
+#[inline]
+fn payload_as_i8(payload: &[u8]) -> &[i8] {
+    // SAFETY: i8 and u8 have the same size/alignment; any bit pattern
+    // is a valid i8.
+    unsafe { std::slice::from_raw_parts(payload.as_ptr() as *const i8, payload.len()) }
+}
+
 /// Widen a received partial-sum payload and **add** it into `acc`
-/// (reduce-scatter's combine step).
+/// (reduce-scatter's combine step). The i8 arm runs the dispatched
+/// widening-add kernel directly on the wire bytes; the wider lanes stay
+/// scalar (`from_le_bytes` per element — the payload carries no
+/// alignment guarantee).
 pub fn add_partials(payload: &[u8], wire: Lanes, acc: &mut [i64]) -> Result<(), NetError> {
     check_payload(payload, wire, acc.len())?;
     match wire {
-        Lanes::I8 => {
-            for (a, &b) in acc.iter_mut().zip(payload) {
-                *a += (b as i8) as i64;
-            }
-        }
+        Lanes::I8 => crate::simd::add_widen_i8(payload_as_i8(payload), acc),
         Lanes::I32 => {
             for (a, c) in acc.iter_mut().zip(payload.chunks_exact(4)) {
                 *a += i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as i64;
@@ -337,15 +346,12 @@ pub fn add_partials(payload: &[u8], wire: Lanes, acc: &mut [i64]) -> Result<(), 
 }
 
 /// Widen a received payload of **final** sums and overwrite `dst`
-/// (all-gather's distribute step).
+/// (all-gather's distribute step). i8 runs the dispatched widening
+/// copy; wider lanes stay scalar (unaligned payload).
 pub fn copy_partials(payload: &[u8], wire: Lanes, dst: &mut [i64]) -> Result<(), NetError> {
     check_payload(payload, wire, dst.len())?;
     match wire {
-        Lanes::I8 => {
-            for (a, &b) in dst.iter_mut().zip(payload) {
-                *a = (b as i8) as i64;
-            }
-        }
+        Lanes::I8 => crate::simd::copy_widen_i8(payload_as_i8(payload), dst),
         Lanes::I32 => {
             for (a, c) in dst.iter_mut().zip(payload.chunks_exact(4)) {
                 *a = i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as i64;

@@ -1,0 +1,366 @@
+//! The kernel layer: every hot-path fold in the crate — the fused
+//! scale→round encode fill, the widening reduce accumulates, the decode
+//! tail, and the squared-norm / max-abs folds the alpha rules run every
+//! round — goes through the dispatched functions in this module.
+//!
+//! Layout (DESIGN.md §10 has the full dispatch diagram):
+//!
+//! ```text
+//!   caller (compress/, net/, util/stats, scaling inputs)
+//!        │
+//!        ▼
+//!   simd::<kernel>()  ── asserts slice-length safety preconditions
+//!        │
+//!        ├─ feature "simd" off ──────────────► scalar::<kernel>
+//!        └─ feature "simd" on: backend() (OnceLock, detected once)
+//!             ├─ INTSGD_FORCE_SCALAR set ────► scalar::<kernel>
+//!             ├─ x86_64 + avx2 detected ─────► x86::<kernel>      (AVX2)
+//!             ├─ x86_64 otherwise ───────────► x86::<kernel>_sse2 (int8
+//!             │                                trio; rest scalar)
+//!             └─ aarch64 ────────────────────► neon::<kernel>
+//! ```
+//!
+//! **Bit-identity is the contract.** [`scalar`] is the specification —
+//! not a fallback to be merely approximated. Integer kernels are exact
+//! in every backend (integer add/widen/abs have one right answer in any
+//! fold order). Float kernels are pinned by two mechanisms: per-lane
+//! IEEE ops that correspond one-to-one to the scalar operators (vector
+//! mul/add/floor/round-ties-even/convert, never FMA), and — for the f64
+//! norm reductions, where addition is *not* associative — a shared
+//! 8-stripe accumulation layout (element `i` → stripe `i mod 8`) folded
+//! by one shared `combine_stripes`, so scalar and vector evaluate the
+//! same expression rather than a reassociation of it.
+//! `tests/kernel_parity.rs` sweeps every dispatched kernel against the
+//! scalar spec bitwise; `fused_encode` / `engine_parity` / `net_parity`
+//! pin the end-to-end paths.
+//!
+//! All kernels are allocation-free (fixed-size stack scratch only);
+//! `tests/zero_alloc.rs` pins the dispatched steady state at zero
+//! allocations. Backend detection reads the environment exactly once
+//! (first kernel call) through a `OnceLock`.
+
+pub mod scalar;
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86;
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod neon;
+
+/// Upper bound on the rank count accepted by [`sum_ranks_i8`]: the
+/// fused fold accumulates cross-rank partial sums in i16 lanes, and
+/// `128 ranks * |v| <= 127` gives `16256 < i16::MAX`, so the
+/// intermediate cannot overflow. The wire itself enforces n <= 127 for
+/// the i8 lane (`max_aggregate / n >= 1`), so this bound is never the
+/// binding constraint in production.
+pub const SUM_RANKS_MAX: usize = 128;
+
+/// Environment override: set to any non-empty value other than `"0"` to
+/// force the scalar backend even when the `simd` feature is compiled in
+/// and the CPU supports a vector backend. Read once, at first dispatch.
+pub const FORCE_SCALAR_ENV: &str = "INTSGD_FORCE_SCALAR";
+
+/// The backend the dispatcher selected (or would select) for this
+/// process.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Backend {
+    /// The chunked scalar spec in [`scalar`] — feature off, override
+    /// set, or no vector unit.
+    Scalar,
+    /// x86_64 baseline vectors: only the int8-wire trio (widening add,
+    /// fused rank fold, max-abs) beats scalar here, the rest dispatches
+    /// to [`scalar`].
+    Sse2,
+    /// Full 256-bit path, selected when `is_x86_feature_detected!`
+    /// proves AVX2 at runtime.
+    Avx2,
+    /// aarch64 baseline (always available on that target).
+    Neon,
+}
+
+impl Backend {
+    /// Stable lowercase name (bench reports, logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Sse2 => "sse2",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+}
+
+#[cfg(feature = "simd")]
+fn force_scalar() -> bool {
+    std::env::var(FORCE_SCALAR_ENV)
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn arch_backend() -> Backend {
+    if is_x86_feature_detected!("avx2") {
+        Backend::Avx2
+    } else {
+        Backend::Sse2
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+fn arch_backend() -> Backend {
+    Backend::Neon
+}
+
+#[cfg(all(
+    feature = "simd",
+    not(any(target_arch = "x86_64", target_arch = "aarch64"))
+))]
+fn arch_backend() -> Backend {
+    Backend::Scalar
+}
+
+/// The selected backend, detected once per process (CPUID + env).
+#[cfg(feature = "simd")]
+pub fn backend() -> Backend {
+    static BACKEND: std::sync::OnceLock<Backend> = std::sync::OnceLock::new();
+    *BACKEND.get_or_init(|| {
+        if force_scalar() {
+            Backend::Scalar
+        } else {
+            arch_backend()
+        }
+    })
+}
+
+/// The selected backend: always [`Backend::Scalar`] without the `simd`
+/// feature.
+#[cfg(not(feature = "simd"))]
+pub fn backend() -> Backend {
+    Backend::Scalar
+}
+
+/// Stable name of the selected backend (bench reports, logs).
+pub fn backend_name() -> &'static str {
+    backend().name()
+}
+
+// ---------------------------------------------------------------------
+// Dispatched kernels. Without a vector backend compiled in, the names
+// re-export the scalar spec directly (zero indirection); with one, thin
+// wrappers assert the slice-length safety preconditions and branch on
+// the detected backend.
+// ---------------------------------------------------------------------
+
+#[cfg(not(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub use scalar::{
+    add_i64, add_widen_i32, add_widen_i8, copy_widen_i8, decode_scale_i64, max_abs_i32,
+    max_abs_i64, max_abs_i8, round_determ, round_stoch, sq_diff_norm, sq_norm, sum_ranks_i8,
+};
+
+#[cfg(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod dispatch {
+    use super::*;
+
+    /// Stochastic-rounding fill (spec: [`scalar::round_stoch`]).
+    pub fn round_stoch(grad: &[f32], a: f32, base: u64, j0: u64, out: &mut [f32]) {
+        assert_eq!(grad.len(), out.len());
+        match backend() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Avx2 is only selected after runtime detection;
+            // lengths checked above.
+            Backend::Avx2 => unsafe { x86::round_stoch(grad, a, base, j0, out) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is baseline on aarch64; lengths checked.
+            Backend::Neon => unsafe { neon::round_stoch(grad, a, base, j0, out) },
+            _ => scalar::round_stoch(grad, a, base, j0, out),
+        }
+    }
+
+    /// Deterministic-rounding fill (spec: [`scalar::round_determ`]).
+    pub fn round_determ(grad: &[f32], a: f32, out: &mut [f32]) {
+        assert_eq!(grad.len(), out.len());
+        match backend() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: as in `round_stoch`.
+            Backend::Avx2 => unsafe { x86::round_determ(grad, a, out) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: as in `round_stoch`.
+            Backend::Neon => unsafe { neon::round_determ(grad, a, out) },
+            _ => scalar::round_determ(grad, a, out),
+        }
+    }
+
+    /// `acc[k] += src[k]` widening i8→i64 (spec:
+    /// [`scalar::add_widen_i8`]).
+    pub fn add_widen_i8(src: &[i8], acc: &mut [i64]) {
+        assert_eq!(src.len(), acc.len());
+        match backend() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: lengths checked; AVX2 detected.
+            Backend::Avx2 => unsafe { x86::add_widen_i8(src, acc) },
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: lengths checked; SSE2 is x86_64 baseline.
+            Backend::Sse2 => unsafe { x86::add_widen_i8_sse2(src, acc) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: lengths checked; NEON is aarch64 baseline.
+            Backend::Neon => unsafe { neon::add_widen_i8(src, acc) },
+            _ => scalar::add_widen_i8(src, acc),
+        }
+    }
+
+    /// `acc[k] += src[k]` widening i32→i64 (spec:
+    /// [`scalar::add_widen_i32`]).
+    pub fn add_widen_i32(src: &[i32], acc: &mut [i64]) {
+        assert_eq!(src.len(), acc.len());
+        match backend() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: lengths checked; AVX2 detected.
+            Backend::Avx2 => unsafe { x86::add_widen_i32(src, acc) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: lengths checked; NEON is aarch64 baseline.
+            Backend::Neon => unsafe { neon::add_widen_i32(src, acc) },
+            _ => scalar::add_widen_i32(src, acc),
+        }
+    }
+
+    /// `acc[k] += src[k]` at full width (spec: [`scalar::add_i64`]).
+    pub fn add_i64(src: &[i64], acc: &mut [i64]) {
+        assert_eq!(src.len(), acc.len());
+        match backend() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: lengths checked; AVX2 detected.
+            Backend::Avx2 => unsafe { x86::add_i64(src, acc) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: lengths checked; NEON is aarch64 baseline.
+            Backend::Neon => unsafe { neon::add_i64(src, acc) },
+            _ => scalar::add_i64(src, acc),
+        }
+    }
+
+    /// `dst[k] = src[k]` widening i8→i64 (spec:
+    /// [`scalar::copy_widen_i8`]).
+    pub fn copy_widen_i8(src: &[i8], dst: &mut [i64]) {
+        assert_eq!(src.len(), dst.len());
+        match backend() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: lengths checked; AVX2 detected.
+            Backend::Avx2 => unsafe { x86::copy_widen_i8(src, dst) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: lengths checked; NEON is aarch64 baseline.
+            Backend::Neon => unsafe { neon::copy_widen_i8(src, dst) },
+            _ => scalar::copy_widen_i8(src, dst),
+        }
+    }
+
+    /// Fused multi-rank i8 fold through an i16 intermediate (spec:
+    /// [`scalar::sum_ranks_i8`]). Panics if `msgs.len() >`
+    /// [`SUM_RANKS_MAX`] or any message length mismatches `acc`.
+    pub fn sum_ranks_i8(msgs: &[&[i8]], acc: &mut [i64]) {
+        assert!(
+            msgs.len() <= SUM_RANKS_MAX,
+            "{} ranks exceed the fused i16-intermediate bound",
+            msgs.len()
+        );
+        for m in msgs {
+            assert_eq!(m.len(), acc.len());
+        }
+        match backend() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: rank bound + lengths checked; AVX2 detected.
+            Backend::Avx2 => unsafe { x86::sum_ranks_i8(msgs, acc) },
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: rank bound + lengths checked; SSE2 baseline.
+            Backend::Sse2 => unsafe { x86::sum_ranks_i8_sse2(msgs, acc) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: rank bound + lengths checked; NEON baseline.
+            Backend::Neon => unsafe { neon::sum_ranks_i8(msgs, acc) },
+            _ => scalar::sum_ranks_i8(msgs, acc),
+        }
+    }
+
+    /// Decode fill `out[k] = (sum[k] as f64 * inv) as f32` (spec:
+    /// [`scalar::decode_scale_i64`]).
+    pub fn decode_scale_i64(sum: &[i64], inv: f64, out: &mut [f32]) {
+        assert_eq!(sum.len(), out.len());
+        match backend() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: lengths checked; AVX2 detected.
+            Backend::Avx2 => unsafe { x86::decode_scale_i64(sum, inv, out) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: lengths checked; NEON is aarch64 baseline.
+            Backend::Neon => unsafe { neon::decode_scale_i64(sum, inv, out) },
+            _ => scalar::decode_scale_i64(sum, inv, out),
+        }
+    }
+
+    /// Striped squared L2 norm (spec: [`scalar::sq_norm`]).
+    pub fn sq_norm(v: &[f32]) -> f64 {
+        match backend() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: AVX2 detected; no other precondition.
+            Backend::Avx2 => unsafe { x86::sq_norm(v) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is aarch64 baseline.
+            Backend::Neon => unsafe { neon::sq_norm(v) },
+            _ => scalar::sq_norm(v),
+        }
+    }
+
+    /// Striped squared distance (spec: [`scalar::sq_diff_norm`]).
+    pub fn sq_diff_norm(a: &[f32], b: &[f32]) -> f64 {
+        assert_eq!(a.len(), b.len());
+        match backend() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: lengths checked; AVX2 detected.
+            Backend::Avx2 => unsafe { x86::sq_diff_norm(a, b) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: lengths checked; NEON is aarch64 baseline.
+            Backend::Neon => unsafe { neon::sq_diff_norm(a, b) },
+            _ => scalar::sq_diff_norm(a, b),
+        }
+    }
+
+    /// Largest |lane| of an i8 buffer (spec: [`scalar::max_abs_i8`]).
+    pub fn max_abs_i8(v: &[i8]) -> i64 {
+        match backend() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: AVX2 detected.
+            Backend::Avx2 => unsafe { x86::max_abs_i8(v) },
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: SSE2 is x86_64 baseline.
+            Backend::Sse2 => unsafe { x86::max_abs_i8_sse2(v) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is aarch64 baseline.
+            Backend::Neon => unsafe { neon::max_abs_i8(v) },
+            _ => scalar::max_abs_i8(v),
+        }
+    }
+
+    /// Largest |lane| of an i32 buffer (spec: [`scalar::max_abs_i32`]).
+    pub fn max_abs_i32(v: &[i32]) -> i64 {
+        match backend() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: AVX2 detected.
+            Backend::Avx2 => unsafe { x86::max_abs_i32(v) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is aarch64 baseline.
+            Backend::Neon => unsafe { neon::max_abs_i32(v) },
+            _ => scalar::max_abs_i32(v),
+        }
+    }
+
+    /// Largest |lane| of an i64 buffer, saturating at `i64::MIN` (spec:
+    /// [`scalar::max_abs_i64`]). aarch64 keeps the scalar fold (NEON has
+    /// no 64-bit max; the scalar loop is already one `csel` per lane).
+    pub fn max_abs_i64(v: &[i64]) -> i64 {
+        match backend() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: AVX2 detected.
+            Backend::Avx2 => unsafe { x86::max_abs_i64(v) },
+            _ => scalar::max_abs_i64(v),
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub use dispatch::*;

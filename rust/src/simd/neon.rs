@@ -1,0 +1,275 @@
+//! aarch64 NEON kernels. NEON is part of the aarch64 baseline, so no
+//! runtime detection is needed — the dispatch table selects this module
+//! whenever the `simd` feature is on and the target is aarch64.
+//!
+//! Bit-identity follows the same argument as the x86 module: integer
+//! kernels are exact; float kernels use per-lane IEEE ops that mirror
+//! the scalar operators (`fmul`/`fadd` = `*`/`+`, `frintm` =
+//! `f32::floor`, `frintn` = `f32::round_ties_even`, `scvtf`/`fcvtn`
+//! round to nearest-even under the default FPCR, matching Rust `as`),
+//! no FMA contraction, and the f64 norm folds accumulate into the same
+//! 8 stripes as the scalar spec. The stochastic uniforms are drawn from
+//! the scalar `splitmix64_at` (NEON lacks a 64-bit lane multiply, so
+//! vectorizing the mix buys nothing); only the u32→f32 convert and the
+//! round itself are vectorized — the stream is the scalar stream.
+
+use core::arch::aarch64::*;
+
+use super::scalar;
+use crate::util::rng::splitmix64_at;
+
+/// Safety: NEON (aarch64 baseline); equal slice lengths (dispatch
+/// wrapper).
+pub(super) unsafe fn round_stoch(grad: &[f32], a: f32, base: u64, j0: u64, out: &mut [f32]) {
+    let n4 = grad.len() / 4 * 4;
+    let av = vdupq_n_f32(a);
+    let scalev = vdupq_n_f32(scalar::UNIFORM_SCALE);
+    let mut ubuf = [0u32; 4];
+    let mut i = 0;
+    while i < n4 {
+        for (k, u) in ubuf.iter_mut().enumerate() {
+            *u = (splitmix64_at(base, j0.wrapping_add((i + k) as u64)) >> 40) as u32;
+        }
+        let uf = vmulq_f32(vcvtq_f32_u32(vld1q_u32(ubuf.as_ptr())), scalev);
+        let g = vld1q_f32(grad.as_ptr().add(i));
+        let t = vaddq_f32(vmulq_f32(g, av), uf);
+        vst1q_f32(out.as_mut_ptr().add(i), vrndmq_f32(t));
+        i += 4;
+    }
+    scalar::round_stoch(&grad[n4..], a, base, j0.wrapping_add(n4 as u64), &mut out[n4..]);
+}
+
+/// Safety: NEON; equal slice lengths (dispatch wrapper).
+pub(super) unsafe fn round_determ(grad: &[f32], a: f32, out: &mut [f32]) {
+    let n4 = grad.len() / 4 * 4;
+    let av = vdupq_n_f32(a);
+    let mut i = 0;
+    while i < n4 {
+        let g = vld1q_f32(grad.as_ptr().add(i));
+        vst1q_f32(out.as_mut_ptr().add(i), vrndnq_f32(vmulq_f32(g, av)));
+        i += 4;
+    }
+    scalar::round_determ(&grad[n4..], a, &mut out[n4..]);
+}
+
+/// Widen one i16x8 to 4 x i64x2 and add into `acc[0..8]`.
+/// Safety: `acc` must be valid for 8 i64 writes.
+#[inline]
+unsafe fn add16x8_to_i64(acc: *mut i64, w: int16x8_t) {
+    let lo32 = vmovl_s16(vget_low_s16(w));
+    let hi32 = vmovl_s16(vget_high_s16(w));
+    let q = [
+        vmovl_s32(vget_low_s32(lo32)),
+        vmovl_s32(vget_high_s32(lo32)),
+        vmovl_s32(vget_low_s32(hi32)),
+        vmovl_s32(vget_high_s32(hi32)),
+    ];
+    for (j, qv) in q.iter().enumerate() {
+        let p = acc.add(2 * j);
+        vst1q_s64(p, vaddq_s64(vld1q_s64(p), *qv));
+    }
+}
+
+/// Safety: NEON; equal slice lengths (dispatch wrapper).
+pub(super) unsafe fn add_widen_i8(src: &[i8], acc: &mut [i64]) {
+    let n16 = src.len() / 16 * 16;
+    let mut i = 0;
+    while i < n16 {
+        let x = vld1q_s8(src.as_ptr().add(i));
+        add16x8_to_i64(acc.as_mut_ptr().add(i), vmovl_s8(vget_low_s8(x)));
+        add16x8_to_i64(acc.as_mut_ptr().add(i + 8), vmovl_s8(vget_high_s8(x)));
+        i += 16;
+    }
+    scalar::add_widen_i8(&src[n16..], &mut acc[n16..]);
+}
+
+/// Safety: NEON; equal slice lengths (dispatch wrapper).
+pub(super) unsafe fn add_widen_i32(src: &[i32], acc: &mut [i64]) {
+    let n4 = src.len() / 4 * 4;
+    let mut i = 0;
+    while i < n4 {
+        let x = vld1q_s32(src.as_ptr().add(i));
+        let p0 = acc.as_mut_ptr().add(i);
+        let p1 = acc.as_mut_ptr().add(i + 2);
+        vst1q_s64(p0, vaddq_s64(vld1q_s64(p0), vmovl_s32(vget_low_s32(x))));
+        vst1q_s64(p1, vaddq_s64(vld1q_s64(p1), vmovl_s32(vget_high_s32(x))));
+        i += 4;
+    }
+    scalar::add_widen_i32(&src[n4..], &mut acc[n4..]);
+}
+
+/// Safety: NEON; equal slice lengths (dispatch wrapper).
+pub(super) unsafe fn add_i64(src: &[i64], acc: &mut [i64]) {
+    let n2 = src.len() / 2 * 2;
+    let mut i = 0;
+    while i < n2 {
+        let p = acc.as_mut_ptr().add(i);
+        vst1q_s64(p, vaddq_s64(vld1q_s64(p), vld1q_s64(src.as_ptr().add(i))));
+        i += 2;
+    }
+    scalar::add_i64(&src[n2..], &mut acc[n2..]);
+}
+
+/// Safety: NEON; equal slice lengths (dispatch wrapper).
+pub(super) unsafe fn copy_widen_i8(src: &[i8], dst: &mut [i64]) {
+    let n16 = src.len() / 16 * 16;
+    let mut i = 0;
+    while i < n16 {
+        let x = vld1q_s8(src.as_ptr().add(i));
+        for (off, half) in [(0, vget_low_s8(x)), (8, vget_high_s8(x))] {
+            let w = vmovl_s8(half);
+            let lo32 = vmovl_s16(vget_low_s16(w));
+            let hi32 = vmovl_s16(vget_high_s16(w));
+            let base = dst.as_mut_ptr().add(i + off);
+            vst1q_s64(base, vmovl_s32(vget_low_s32(lo32)));
+            vst1q_s64(base.add(2), vmovl_s32(vget_high_s32(lo32)));
+            vst1q_s64(base.add(4), vmovl_s32(vget_low_s32(hi32)));
+            vst1q_s64(base.add(6), vmovl_s32(vget_high_s32(hi32)));
+        }
+        i += 16;
+    }
+    scalar::copy_widen_i8(&src[n16..], &mut dst[n16..]);
+}
+
+/// Safety: the dispatch wrapper checks the rank bound and lengths.
+pub(super) unsafe fn sum_ranks_i8(msgs: &[&[i8]], acc: &mut [i64]) {
+    let d = acc.len();
+    let n16 = d / 16 * 16;
+    let mut i = 0;
+    while i < n16 {
+        let mut s_lo = vdupq_n_s16(0);
+        let mut s_hi = vdupq_n_s16(0);
+        for m in msgs {
+            let x = vld1q_s8(m.as_ptr().add(i));
+            s_lo = vaddq_s16(s_lo, vmovl_s8(vget_low_s8(x)));
+            s_hi = vaddq_s16(s_hi, vmovl_s8(vget_high_s8(x)));
+        }
+        add16x8_to_i64(acc.as_mut_ptr().add(i), s_lo);
+        add16x8_to_i64(acc.as_mut_ptr().add(i + 8), s_hi);
+        i += 16;
+    }
+    for m in msgs {
+        scalar::add_widen_i8(&m[n16..], &mut acc[n16..]);
+    }
+}
+
+/// Safety: NEON; equal slice lengths (dispatch wrapper).
+pub(super) unsafe fn decode_scale_i64(sum: &[i64], inv: f64, out: &mut [f32]) {
+    let n4 = sum.len() / 4 * 4;
+    let invv = vdupq_n_f64(inv);
+    let mut i = 0;
+    while i < n4 {
+        // scvtf and fcvtn both round to nearest-even (default FPCR),
+        // matching `as f64` / `as f32` exactly
+        let d0 = vcvtq_f64_s64(vld1q_s64(sum.as_ptr().add(i)));
+        let d1 = vcvtq_f64_s64(vld1q_s64(sum.as_ptr().add(i + 2)));
+        let f0 = vcvt_f32_f64(vmulq_f64(d0, invv));
+        let f1 = vcvt_f32_f64(vmulq_f64(d1, invv));
+        vst1q_f32(out.as_mut_ptr().add(i), vcombine_f32(f0, f1));
+        i += 4;
+    }
+    scalar::decode_scale_i64(&sum[n4..], inv, &mut out[n4..]);
+}
+
+/// Horizontal fold of the 4 f64x2 stripe accumulators plus the
+/// remainder, via the shared stripe combiner.
+#[inline]
+unsafe fn finish_stripes(acc: [float64x2_t; 4], tail: impl Iterator<Item = f64>) -> f64 {
+    let mut s = [0.0f64; 8];
+    for (j, a) in acc.iter().enumerate() {
+        s[2 * j] = vgetq_lane_f64(*a, 0);
+        s[2 * j + 1] = vgetq_lane_f64(*a, 1);
+    }
+    for (sj, d) in s.iter_mut().zip(tail) {
+        *sj += d * d;
+    }
+    scalar::combine_stripes(&s)
+}
+
+/// Safety: NEON.
+pub(super) unsafe fn sq_norm(v: &[f32]) -> f64 {
+    let n8 = v.len() / 8 * 8;
+    let mut acc = [vdupq_n_f64(0.0); 4]; // acc[j] = stripes 2j, 2j+1
+    let mut i = 0;
+    while i < n8 {
+        let x = vld1q_f32(v.as_ptr().add(i));
+        let y = vld1q_f32(v.as_ptr().add(i + 4));
+        for (j, half) in [
+            vget_low_f32(x),
+            vget_high_f32(x),
+            vget_low_f32(y),
+            vget_high_f32(y),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let d = vcvt_f64_f32(half);
+            acc[j] = vaddq_f64(acc[j], vmulq_f64(d, d));
+        }
+        i += 8;
+    }
+    finish_stripes(acc, v[n8..].iter().map(|&x| x as f64))
+}
+
+/// Safety: NEON; equal slice lengths (dispatch wrapper).
+pub(super) unsafe fn sq_diff_norm(a: &[f32], b: &[f32]) -> f64 {
+    let n8 = a.len() / 8 * 8;
+    let mut acc = [vdupq_n_f64(0.0); 4];
+    let mut i = 0;
+    while i < n8 {
+        let dx = vsubq_f32(vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i)));
+        let dy = vsubq_f32(vld1q_f32(a.as_ptr().add(i + 4)), vld1q_f32(b.as_ptr().add(i + 4)));
+        for (j, half) in [
+            vget_low_f32(dx),
+            vget_high_f32(dx),
+            vget_low_f32(dy),
+            vget_high_f32(dy),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let d = vcvt_f64_f32(half);
+            acc[j] = vaddq_f64(acc[j], vmulq_f64(d, d));
+        }
+        i += 8;
+    }
+    finish_stripes(acc, a[n8..].iter().zip(&b[n8..]).map(|(&x, &y)| (x - y) as f64))
+}
+
+/// Safety: NEON.
+pub(super) unsafe fn max_abs_i8(v: &[i8]) -> i64 {
+    let n16 = v.len() / 16 * 16;
+    let mut m = vdupq_n_s16(0);
+    let mut i = 0;
+    while i < n16 {
+        let x = vld1q_s8(v.as_ptr().add(i));
+        // widen before abs so |-128| = 128 is exact in i16
+        m = vmaxq_s16(m, vabsq_s16(vmovl_s8(vget_low_s8(x))));
+        m = vmaxq_s16(m, vabsq_s16(vmovl_s8(vget_high_s8(x))));
+        i += 16;
+    }
+    let mut best = vmaxvq_s16(m) as i64;
+    for &x in &v[n16..] {
+        best = best.max((x as i32).abs() as i64);
+    }
+    best
+}
+
+/// Safety: NEON.
+pub(super) unsafe fn max_abs_i32(v: &[i32]) -> i64 {
+    let n4 = v.len() / 4 * 4;
+    let mut m = vdupq_n_u32(0);
+    let mut i = 0;
+    while i < n4 {
+        let x = vld1q_s32(v.as_ptr().add(i));
+        // sabs(i32::MIN) wraps to 0x80000000 = |i32::MIN| under the
+        // unsigned max
+        m = vmaxq_u32(m, vreinterpretq_u32_s32(vabsq_s32(x)));
+        i += 4;
+    }
+    let mut best = vmaxvq_u32(m) as i64;
+    for &x in &v[n4..] {
+        best = best.max((x as i64).abs());
+    }
+    best
+}

@@ -1,0 +1,234 @@
+//! Scalar reference kernels: the canonical definition of every hot-path
+//! fold, written as fixed-width chunked loops.
+//!
+//! These are not "slow paths" — they are the *specification*. Every SIMD
+//! implementation in `x86`/`neon` must reproduce these functions
+//! bit-for-bit (see the module docs of [`crate::simd`] for the per-kernel
+//! argument), and `tests/kernel_parity.rs` sweeps the dispatched kernels
+//! against this module directly. The chunked structure (width
+//! [`STRIPES`] = 8) serves two purposes: it hands LLVM's auto-vectorizer
+//! loops with no cross-iteration dependencies, and — for the f64
+//! reduction folds, where float addition is *not* associative — it fixes
+//! the accumulation association that the SIMD lanes use, so "scalar" and
+//! "vector" are the same mathematical expression, not merely close.
+//!
+//! Kept `pub` (not `pub(crate)`) so the benches can time the fallback
+//! against the dispatched kernel on the same machine.
+
+use crate::util::rng::splitmix64_at;
+
+/// Fixed chunk width shared by the scalar fallbacks and the widest SIMD
+/// path (AVX2: 8 f32 lanes / 8 u64 splitmix streams per iteration).
+pub const STRIPES: usize = 8;
+
+/// Uniform scale: the top 24 bits of a SplitMix64 draw, mapped to [0, 1).
+/// Mirrors the Pallas kernel's `u` input resolution exactly.
+pub const UNIFORM_SCALE: f32 = 1.0 / (1u32 << 24) as f32;
+
+/// Fold the 8 stripe accumulators of a striped f64 reduction, in stripe
+/// order. Shared by the scalar and SIMD norm kernels so the final
+/// combine is one expression: `((((((((0+s0)+s1)+s2)+...)+s7)`.
+#[inline]
+pub(crate) fn combine_stripes(s: &[f64; STRIPES]) -> f64 {
+    s.iter().sum()
+}
+
+/// Stochastic-rounding fill: `out[k] = floor(grad[k] * a + u_k)` with
+/// `u_k` drawn from the counter-based SplitMix64 stream at `(base,
+/// j0 + k)`. Clamping and lane packing happen in the caller (see
+/// `WireLane::of_rounded`), so this kernel is lane-agnostic.
+pub fn round_stoch(grad: &[f32], a: f32, base: u64, j0: u64, out: &mut [f32]) {
+    debug_assert_eq!(grad.len(), out.len());
+    let mut j = j0;
+    for (g8, o8) in grad.chunks_exact(STRIPES).zip(out.chunks_exact_mut(STRIPES)) {
+        for (k, (o, &g)) in o8.iter_mut().zip(g8).enumerate() {
+            let u = (splitmix64_at(base, j.wrapping_add(k as u64)) >> 40) as f32 * UNIFORM_SCALE;
+            *o = (g * a + u).floor();
+        }
+        j = j.wrapping_add(STRIPES as u64);
+    }
+    let done = grad.len() / STRIPES * STRIPES;
+    for (k, (o, &g)) in out[done..].iter_mut().zip(&grad[done..]).enumerate() {
+        let u = (splitmix64_at(base, j.wrapping_add(k as u64)) >> 40) as f32 * UNIFORM_SCALE;
+        *o = (g * a + u).floor();
+    }
+}
+
+/// Deterministic-rounding fill: `out[k] = round_ties_even(grad[k] * a)`
+/// (the f32 mirror of `jnp.round`).
+pub fn round_determ(grad: &[f32], a: f32, out: &mut [f32]) {
+    debug_assert_eq!(grad.len(), out.len());
+    for (g8, o8) in grad.chunks_exact(STRIPES).zip(out.chunks_exact_mut(STRIPES)) {
+        for (o, &g) in o8.iter_mut().zip(g8) {
+            *o = (g * a).round_ties_even();
+        }
+    }
+    let done = grad.len() / STRIPES * STRIPES;
+    for (o, &g) in out[done..].iter_mut().zip(&grad[done..]) {
+        *o = (g * a).round_ties_even();
+    }
+}
+
+/// `acc[k] += src[k]`, widening one i8 message into the i64 aggregate.
+pub fn add_widen_i8(src: &[i8], acc: &mut [i64]) {
+    debug_assert_eq!(src.len(), acc.len());
+    for (o, &x) in acc.iter_mut().zip(src) {
+        *o += x as i64;
+    }
+}
+
+/// `acc[k] += src[k]`, widening one i32 message into the i64 aggregate.
+pub fn add_widen_i32(src: &[i32], acc: &mut [i64]) {
+    debug_assert_eq!(src.len(), acc.len());
+    for (o, &x) in acc.iter_mut().zip(src) {
+        *o += x as i64;
+    }
+}
+
+/// `acc[k] += src[k]` at full width.
+pub fn add_i64(src: &[i64], acc: &mut [i64]) {
+    debug_assert_eq!(src.len(), acc.len());
+    for (o, &x) in acc.iter_mut().zip(src) {
+        *o += x;
+    }
+}
+
+/// `dst[k] = src[k]`, widening (all-gather's distribute step).
+pub fn copy_widen_i8(src: &[i8], dst: &mut [i64]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (o, &x) in dst.iter_mut().zip(src) {
+        *o = x as i64;
+    }
+}
+
+/// Fused multi-rank i8 fold: `acc[k] += Σ_r msgs[r][k]`, accumulated
+/// through an i16 intermediate. The caller proves `msgs.len() <=`
+/// [`crate::simd::SUM_RANKS_MAX`] (= 128): each lane is `|v| <= 127`, so
+/// the cross-rank partial sum is bounded by `128 * 127 = 16256 <
+/// i16::MAX` — the i16 chunk cannot overflow. Exact integer arithmetic,
+/// so the result is bit-identical to folding the ranks one
+/// `add_widen_i8` at a time (in any order).
+pub fn sum_ranks_i8(msgs: &[&[i8]], acc: &mut [i64]) {
+    assert!(
+        msgs.len() <= crate::simd::SUM_RANKS_MAX,
+        "{} ranks exceed the fused i16-intermediate bound",
+        msgs.len()
+    );
+    const CHUNK: usize = 64;
+    let d = acc.len();
+    for m in msgs {
+        debug_assert_eq!(m.len(), d);
+    }
+    let mut tmp = [0i16; CHUNK];
+    let mut lo = 0;
+    while lo < d {
+        let len = CHUNK.min(d - lo);
+        let t = &mut tmp[..len];
+        t.fill(0);
+        for m in msgs {
+            for (a, &x) in t.iter_mut().zip(&m[lo..lo + len]) {
+                *a += x as i16;
+            }
+        }
+        for (o, &x) in acc[lo..lo + len].iter_mut().zip(t.iter()) {
+            *o += x as i64;
+        }
+        lo += len;
+    }
+}
+
+/// Decode fill: `out[k] = (sum[k] as f64 * inv) as f32` — the int→f32
+/// scale by `1/(n·α)`. The f64 intermediate is part of the contract (an
+/// i64 aggregate is not exactly representable in f32).
+pub fn decode_scale_i64(sum: &[i64], inv: f64, out: &mut [f32]) {
+    debug_assert_eq!(sum.len(), out.len());
+    for (s8, o8) in sum.chunks_exact(STRIPES).zip(out.chunks_exact_mut(STRIPES)) {
+        for (o, &s) in o8.iter_mut().zip(s8) {
+            *o = (s as f64 * inv) as f32;
+        }
+    }
+    let done = sum.len() / STRIPES * STRIPES;
+    for (o, &s) in out[done..].iter_mut().zip(&sum[done..]) {
+        *o = (s as f64 * inv) as f32;
+    }
+}
+
+/// Striped squared euclidean norm, f64 accumulation: element `i` is
+/// squared into stripe accumulator `i mod 8`, and the stripes are folded
+/// by [`combine_stripes`]. This *is* the definition of `l2_norm_sq` —
+/// the SIMD kernels compute the identical expression lane-wise.
+pub fn sq_norm(v: &[f32]) -> f64 {
+    let mut s = [0.0f64; STRIPES];
+    for c in v.chunks_exact(STRIPES) {
+        for (sj, &x) in s.iter_mut().zip(c) {
+            let x = x as f64;
+            *sj += x * x;
+        }
+    }
+    let done = v.len() / STRIPES * STRIPES;
+    for (sj, &x) in s.iter_mut().zip(&v[done..]) {
+        let x = x as f64;
+        *sj += x * x;
+    }
+    combine_stripes(&s)
+}
+
+/// Striped squared distance `||a - b||^2`: the difference is taken in
+/// f32 (matching the two-pass subtract-then-norm form bit-for-bit), the
+/// square is accumulated in f64 with the same striping as [`sq_norm`].
+pub fn sq_diff_norm(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = [0.0f64; STRIPES];
+    for (a8, b8) in a.chunks_exact(STRIPES).zip(b.chunks_exact(STRIPES)) {
+        for (sj, (&x, &y)) in s.iter_mut().zip(a8.iter().zip(b8)) {
+            let d = (x - y) as f64;
+            *sj += d * d;
+        }
+    }
+    let done = a.len() / STRIPES * STRIPES;
+    for (sj, (&x, &y)) in s.iter_mut().zip(a[done..].iter().zip(&b[done..])) {
+        let d = (x - y) as f64;
+        *sj += d * d;
+    }
+    combine_stripes(&s)
+}
+
+/// Largest |lane| of an i8 buffer, widened before the abs so
+/// `|i8::MIN| = 128` is exact.
+pub fn max_abs_i8(v: &[i8]) -> i64 {
+    let mut m = 0i32;
+    for c in v.chunks_exact(STRIPES) {
+        for &x in c {
+            m = m.max((x as i32).abs());
+        }
+    }
+    for &x in &v[v.len() / STRIPES * STRIPES..] {
+        m = m.max((x as i32).abs());
+    }
+    m as i64
+}
+
+/// Largest |lane| of an i32 buffer, widened before the abs.
+pub fn max_abs_i32(v: &[i32]) -> i64 {
+    let mut m = 0i64;
+    for c in v.chunks_exact(STRIPES) {
+        for &x in c {
+            m = m.max((x as i64).abs());
+        }
+    }
+    for &x in &v[v.len() / STRIPES * STRIPES..] {
+        m = m.max((x as i64).abs());
+    }
+    m
+}
+
+/// Largest |lane| of an i64 buffer. Saturating at `i64::MIN` (whose true
+/// magnitude does not fit i64); production aggregates are bounded far
+/// below by the wire budget, so the saturation is unobservable.
+pub fn max_abs_i64(v: &[i64]) -> i64 {
+    let mut m = 0i64;
+    for &x in v {
+        m = m.max(x.saturating_abs());
+    }
+    m
+}

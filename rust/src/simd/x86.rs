@@ -1,0 +1,505 @@
+//! x86_64 kernels: AVX2 implementations of all four hot folds, plus an
+//! SSE2 subset (the int8-wire trio) for pre-AVX2 hardware. SSE2 is part
+//! of the x86_64 baseline, so those functions need no runtime detection;
+//! the AVX2 functions carry `#[target_feature]` and are only reached
+//! after `is_x86_feature_detected!("avx2")` (see [`super::backend`]).
+//!
+//! Bit-identity notes (the contract with [`super::scalar`]):
+//! - integer kernels (widening adds, the fused i16-intermediate rank
+//!   fold, max-abs) are exact arithmetic — identical by construction;
+//! - f32/f64 kernels use only per-lane IEEE ops that match the scalar
+//!   operators one-for-one: `vmulps`/`vaddps` = `*`/`+`, `vroundps(0x9)`
+//!   = `f32::floor`, `vroundps(0x8)` = `f32::round_ties_even`,
+//!   `vcvtps2pd` = `as f64`, `vcvtpd2ps` = `as f32` (both sides round to
+//!   nearest-even under the default MXCSR/FPCR, which nothing in this
+//!   crate changes). No FMA contraction anywhere: intrinsics are not
+//!   re-associated by LLVM;
+//! - the f64 reduction folds accumulate into the same 8 stripes as the
+//!   scalar kernels and share `combine_stripes`, so the addition order
+//!   is the *same expression*, not merely close;
+//! - the SplitMix64 stream is mixed with 64-bit lane arithmetic built
+//!   from `pmuludq` 32x32 products (`mullo_epu64` below) — exact mod
+//!   2^64, so the uniforms equal `splitmix64_at` bit-for-bit.
+
+use core::arch::x86_64::*;
+
+use super::scalar;
+
+// ---------------------------------------------------------------------
+// fused encode: vectorized SplitMix64 counter stream + round
+// ---------------------------------------------------------------------
+
+const GOLD: u64 = 0x9E3779B97F4A7C15;
+const MIX1: u64 = 0xBF58476D1CE4E5B9;
+const MIX2: u64 = 0x94D049BB133111EB;
+
+/// 64-bit lane-wise `a * b mod 2^64` on AVX2 (which has no `pmullq`):
+/// `lo32(a)*lo32(b) + ((lo32(a)*hi32(b) + hi32(a)*lo32(b)) << 32)`.
+/// `b_hi` is `b >> 32`, precomputed once per constant.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn mullo_epu64(a: __m256i, b: __m256i, b_hi: __m256i) -> __m256i {
+    let lo = _mm256_mul_epu32(a, b);
+    let a_hi = _mm256_srli_epi64(a, 32);
+    let cross = _mm256_add_epi64(_mm256_mul_epu32(a_hi, b), _mm256_mul_epu32(a, b_hi));
+    _mm256_add_epi64(lo, _mm256_slli_epi64(cross, 32))
+}
+
+/// The SplitMix64 finalizer on 4 u64 lanes (`util::rng::splitmix64_at`
+/// minus the counter add, which the caller folds into `z`).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn splitmix_mix(
+    z: __m256i,
+    m1: __m256i,
+    m1h: __m256i,
+    m2: __m256i,
+    m2h: __m256i,
+) -> __m256i {
+    let z = _mm256_xor_si256(z, _mm256_srli_epi64(z, 30));
+    let z = mullo_epu64(z, m1, m1h);
+    let z = _mm256_xor_si256(z, _mm256_srli_epi64(z, 27));
+    let z = mullo_epu64(z, m2, m2h);
+    _mm256_xor_si256(z, _mm256_srli_epi64(z, 31))
+}
+
+/// Safety: caller must have verified AVX2 support. `grad.len() ==
+/// out.len()` (checked by the dispatch wrapper).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn round_stoch(grad: &[f32], a: f32, base: u64, j0: u64, out: &mut [f32]) {
+    let n8 = grad.len() / 8 * 8;
+    let m1 = _mm256_set1_epi64x(MIX1 as i64);
+    let m1h = _mm256_srli_epi64(m1, 32);
+    let m2 = _mm256_set1_epi64x(MIX2 as i64);
+    let m2h = _mm256_srli_epi64(m2, 32);
+    let basev = _mm256_set1_epi64x(base as i64);
+    let av = _mm256_set1_ps(a);
+    let scalev = _mm256_set1_ps(scalar::UNIFORM_SCALE);
+    // picks the low dword of each u64 lane (the >>40 mix result is 24
+    // bits, entirely in the low dword)
+    let idx = _mm256_setr_epi32(0, 2, 4, 6, 0, 2, 4, 6);
+    // counter lanes pre-multiplied by the golden step: lane k holds
+    // (j0 + k) * GOLD mod 2^64, advanced by 8*GOLD per iteration —
+    // wrapping adds in the vector domain equal wrapping_mul in the
+    // scalar domain, so z = base + j*GOLD is exact per lane.
+    let jc = |k: u64| j0.wrapping_add(k).wrapping_mul(GOLD) as i64;
+    let mut jc_lo = _mm256_setr_epi64x(jc(0), jc(1), jc(2), jc(3));
+    let mut jc_hi = _mm256_setr_epi64x(jc(4), jc(5), jc(6), jc(7));
+    let step = _mm256_set1_epi64x(GOLD.wrapping_mul(8) as i64);
+    let mut i = 0;
+    while i < n8 {
+        let z0 = splitmix_mix(_mm256_add_epi64(basev, jc_lo), m1, m1h, m2, m2h);
+        let z1 = splitmix_mix(_mm256_add_epi64(basev, jc_hi), m1, m1h, m2, m2h);
+        let u0 = _mm256_srli_epi64(z0, 40);
+        let u1 = _mm256_srli_epi64(z1, 40);
+        let p0 = _mm256_permutevar8x32_epi32(u0, idx);
+        let p1 = _mm256_permutevar8x32_epi32(u1, idx);
+        // [p0.low128 | p1.low128]: 8 u24 counters in element order
+        let u24 = _mm256_permute2x128_si256(p0, p1, 0x20);
+        let uf = _mm256_mul_ps(_mm256_cvtepi32_ps(u24), scalev);
+        let g = _mm256_loadu_ps(grad.as_ptr().add(i));
+        let t = _mm256_add_ps(_mm256_mul_ps(g, av), uf);
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_floor_ps(t));
+        jc_lo = _mm256_add_epi64(jc_lo, step);
+        jc_hi = _mm256_add_epi64(jc_hi, step);
+        i += 8;
+    }
+    scalar::round_stoch(&grad[n8..], a, base, j0.wrapping_add(n8 as u64), &mut out[n8..]);
+}
+
+/// Safety: AVX2; equal slice lengths (dispatch wrapper).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn round_determ(grad: &[f32], a: f32, out: &mut [f32]) {
+    let n8 = grad.len() / 8 * 8;
+    let av = _mm256_set1_ps(a);
+    let mut i = 0;
+    while i < n8 {
+        let g = _mm256_loadu_ps(grad.as_ptr().add(i));
+        let t = _mm256_mul_ps(g, av);
+        let r = _mm256_round_ps(t, _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC);
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+        i += 8;
+    }
+    scalar::round_determ(&grad[n8..], a, &mut out[n8..]);
+}
+
+// ---------------------------------------------------------------------
+// widening reduce
+// ---------------------------------------------------------------------
+
+/// Safety: AVX2; equal slice lengths (dispatch wrapper).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn add_widen_i8(src: &[i8], acc: &mut [i64]) {
+    let n16 = src.len() / 16 * 16;
+    let mut i = 0;
+    while i < n16 {
+        let x = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+        let q = [
+            _mm256_cvtepi8_epi64(x),
+            _mm256_cvtepi8_epi64(_mm_srli_si128(x, 4)),
+            _mm256_cvtepi8_epi64(_mm_srli_si128(x, 8)),
+            _mm256_cvtepi8_epi64(_mm_srli_si128(x, 12)),
+        ];
+        for (j, qv) in q.iter().enumerate() {
+            let p = acc.as_mut_ptr().add(i + 4 * j) as *mut __m256i;
+            _mm256_storeu_si256(p, _mm256_add_epi64(_mm256_loadu_si256(p), *qv));
+        }
+        i += 16;
+    }
+    scalar::add_widen_i8(&src[n16..], &mut acc[n16..]);
+}
+
+/// Safety: AVX2; equal slice lengths (dispatch wrapper).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn add_widen_i32(src: &[i32], acc: &mut [i64]) {
+    let n8 = src.len() / 8 * 8;
+    let mut i = 0;
+    while i < n8 {
+        let x0 = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+        let x1 = _mm_loadu_si128(src.as_ptr().add(i + 4) as *const __m128i);
+        let p0 = acc.as_mut_ptr().add(i) as *mut __m256i;
+        let p1 = acc.as_mut_ptr().add(i + 4) as *mut __m256i;
+        _mm256_storeu_si256(
+            p0,
+            _mm256_add_epi64(_mm256_loadu_si256(p0), _mm256_cvtepi32_epi64(x0)),
+        );
+        _mm256_storeu_si256(
+            p1,
+            _mm256_add_epi64(_mm256_loadu_si256(p1), _mm256_cvtepi32_epi64(x1)),
+        );
+        i += 8;
+    }
+    scalar::add_widen_i32(&src[n8..], &mut acc[n8..]);
+}
+
+/// Safety: AVX2; equal slice lengths (dispatch wrapper).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn add_i64(src: &[i64], acc: &mut [i64]) {
+    let n4 = src.len() / 4 * 4;
+    let mut i = 0;
+    while i < n4 {
+        let x = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+        let p = acc.as_mut_ptr().add(i) as *mut __m256i;
+        _mm256_storeu_si256(p, _mm256_add_epi64(_mm256_loadu_si256(p), x));
+        i += 4;
+    }
+    scalar::add_i64(&src[n4..], &mut acc[n4..]);
+}
+
+/// Safety: AVX2; equal slice lengths (dispatch wrapper).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn copy_widen_i8(src: &[i8], dst: &mut [i64]) {
+    let n16 = src.len() / 16 * 16;
+    let mut i = 0;
+    while i < n16 {
+        let x = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+        let q = [
+            _mm256_cvtepi8_epi64(x),
+            _mm256_cvtepi8_epi64(_mm_srli_si128(x, 4)),
+            _mm256_cvtepi8_epi64(_mm_srli_si128(x, 8)),
+            _mm256_cvtepi8_epi64(_mm_srli_si128(x, 12)),
+        ];
+        for (j, qv) in q.iter().enumerate() {
+            _mm256_storeu_si256(dst.as_mut_ptr().add(i + 4 * j) as *mut __m256i, *qv);
+        }
+        i += 16;
+    }
+    scalar::copy_widen_i8(&src[n16..], &mut dst[n16..]);
+}
+
+/// Safety: AVX2; the dispatch wrapper checks `msgs.len() <=`
+/// [`super::SUM_RANKS_MAX`] (the i16-intermediate bound) and equal
+/// lengths.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn sum_ranks_i8(msgs: &[&[i8]], acc: &mut [i64]) {
+    let d = acc.len();
+    let n16 = d / 16 * 16;
+    let mut i = 0;
+    while i < n16 {
+        // cross-rank partial sum in i16 lanes: <= 128 ranks * |127| each
+        let mut s16 = _mm256_setzero_si256();
+        for m in msgs {
+            let x = _mm_loadu_si128(m.as_ptr().add(i) as *const __m128i);
+            s16 = _mm256_add_epi16(s16, _mm256_cvtepi8_epi16(x));
+        }
+        // widen the 16 i16 partial sums once and add into the aggregate
+        let lo = _mm256_castsi256_si128(s16);
+        let hi = _mm256_extracti128_si256(s16, 1);
+        let q = [
+            _mm256_cvtepi16_epi64(lo),
+            _mm256_cvtepi16_epi64(_mm_srli_si128(lo, 8)),
+            _mm256_cvtepi16_epi64(hi),
+            _mm256_cvtepi16_epi64(_mm_srli_si128(hi, 8)),
+        ];
+        for (j, qv) in q.iter().enumerate() {
+            let p = acc.as_mut_ptr().add(i + 4 * j) as *mut __m256i;
+            _mm256_storeu_si256(p, _mm256_add_epi64(_mm256_loadu_si256(p), *qv));
+        }
+        i += 16;
+    }
+    // tail: rank-at-a-time (exact integers — order-independent)
+    for m in msgs {
+        scalar::add_widen_i8(&m[n16..], &mut acc[n16..]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// decode tail
+// ---------------------------------------------------------------------
+
+/// Safety: AVX2; equal slice lengths (dispatch wrapper).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn decode_scale_i64(sum: &[i64], inv: f64, out: &mut [f32]) {
+    let n4 = sum.len() / 4 * 4;
+    // exponent-trick i64 -> f64: valid for |x| <= 2^51 - 1, guarded per
+    // group (aggregates are bounded far below by the wire budget; the
+    // guard only trips on the i64 escape hatch with extreme sums)
+    let magic_i = _mm256_set1_epi64x(0x4338000000000000u64 as i64);
+    let magic_d = _mm256_set1_pd(6755399441055744.0); // 2^52 + 2^51
+    let invv = _mm256_set1_pd(inv);
+    let lim = _mm256_set1_epi64x((1i64 << 51) - 1);
+    let zero = _mm256_setzero_si256();
+    let mut i = 0;
+    while i < n4 {
+        let x = _mm256_loadu_si256(sum.as_ptr().add(i) as *const __m256i);
+        let negm = _mm256_cmpgt_epi64(zero, x);
+        let ax = _mm256_sub_epi64(_mm256_xor_si256(x, negm), negm);
+        // ax < 0 catches the i64::MIN wraparound
+        let bad = _mm256_or_si256(_mm256_cmpgt_epi64(ax, lim), _mm256_cmpgt_epi64(zero, ax));
+        if _mm256_movemask_epi8(bad) != 0 {
+            scalar::decode_scale_i64(&sum[i..i + 4], inv, &mut out[i..i + 4]);
+        } else {
+            let d = _mm256_sub_pd(_mm256_castsi256_pd(_mm256_add_epi64(x, magic_i)), magic_d);
+            let f = _mm256_cvtpd_ps(_mm256_mul_pd(d, invv));
+            _mm_storeu_ps(out.as_mut_ptr().add(i), f);
+        }
+        i += 4;
+    }
+    scalar::decode_scale_i64(&sum[n4..], inv, &mut out[n4..]);
+}
+
+// ---------------------------------------------------------------------
+// norm and max-abs folds
+// ---------------------------------------------------------------------
+
+/// Safety: AVX2.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn sq_norm(v: &[f32]) -> f64 {
+    let n8 = v.len() / 8 * 8;
+    let mut acc0 = _mm256_setzero_pd(); // stripes 0..4
+    let mut acc1 = _mm256_setzero_pd(); // stripes 4..8
+    let mut i = 0;
+    while i < n8 {
+        let x = _mm256_loadu_ps(v.as_ptr().add(i));
+        let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(x));
+        let hi = _mm256_cvtps_pd(_mm256_extractf128_ps(x, 1));
+        acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(lo, lo));
+        acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(hi, hi));
+        i += 8;
+    }
+    let mut s = [0.0f64; 8];
+    _mm256_storeu_pd(s.as_mut_ptr(), acc0);
+    _mm256_storeu_pd(s.as_mut_ptr().add(4), acc1);
+    for (sj, &x) in s.iter_mut().zip(&v[n8..]) {
+        let x = x as f64;
+        *sj += x * x;
+    }
+    scalar::combine_stripes(&s)
+}
+
+/// Safety: AVX2; equal slice lengths (dispatch wrapper).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn sq_diff_norm(a: &[f32], b: &[f32]) -> f64 {
+    let n8 = a.len() / 8 * 8;
+    let mut acc0 = _mm256_setzero_pd();
+    let mut acc1 = _mm256_setzero_pd();
+    let mut i = 0;
+    while i < n8 {
+        let xa = _mm256_loadu_ps(a.as_ptr().add(i));
+        let xb = _mm256_loadu_ps(b.as_ptr().add(i));
+        let d = _mm256_sub_ps(xa, xb); // f32 subtract first, like scalar
+        let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(d));
+        let hi = _mm256_cvtps_pd(_mm256_extractf128_ps(d, 1));
+        acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(lo, lo));
+        acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(hi, hi));
+        i += 8;
+    }
+    let mut s = [0.0f64; 8];
+    _mm256_storeu_pd(s.as_mut_ptr(), acc0);
+    _mm256_storeu_pd(s.as_mut_ptr().add(4), acc1);
+    for (sj, (&x, &y)) in s.iter_mut().zip(a[n8..].iter().zip(&b[n8..])) {
+        let d = (x - y) as f64;
+        *sj += d * d;
+    }
+    scalar::combine_stripes(&s)
+}
+
+/// Safety: AVX2.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn max_abs_i8(v: &[i8]) -> i64 {
+    let n16 = v.len() / 16 * 16;
+    let mut m = _mm256_setzero_si256();
+    let mut i = 0;
+    while i < n16 {
+        let x = _mm_loadu_si128(v.as_ptr().add(i) as *const __m128i);
+        // widen before abs so |-128| = 128 is exact in the i16 lanes
+        let w = _mm256_cvtepi8_epi16(x);
+        m = _mm256_max_epu16(m, _mm256_abs_epi16(w));
+        i += 16;
+    }
+    let mut buf = [0u16; 16];
+    _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, m);
+    let mut best = buf.iter().copied().max().unwrap_or(0) as i64;
+    for &x in &v[n16..] {
+        best = best.max((x as i32).abs() as i64);
+    }
+    best
+}
+
+/// Safety: AVX2.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn max_abs_i32(v: &[i32]) -> i64 {
+    let n8 = v.len() / 8 * 8;
+    let mut m = _mm256_setzero_si256();
+    let mut i = 0;
+    while i < n8 {
+        let x = _mm256_loadu_si256(v.as_ptr().add(i) as *const __m256i);
+        // pabsd(i32::MIN) wraps to 0x80000000, which IS |i32::MIN| when
+        // the max runs unsigned
+        m = _mm256_max_epu32(m, _mm256_abs_epi32(x));
+        i += 8;
+    }
+    let mut buf = [0u32; 8];
+    _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, m);
+    let mut best = buf.iter().copied().max().unwrap_or(0) as i64;
+    for &x in &v[n8..] {
+        best = best.max((x as i64).abs());
+    }
+    best
+}
+
+/// Safety: AVX2.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn max_abs_i64(v: &[i64]) -> i64 {
+    let n4 = v.len() / 4 * 4;
+    let zero = _mm256_setzero_si256();
+    let minv = _mm256_set1_epi64x(i64::MIN);
+    let mut m = _mm256_setzero_si256();
+    let mut saw_min = _mm256_setzero_si256();
+    let mut i = 0;
+    while i < n4 {
+        let x = _mm256_loadu_si256(v.as_ptr().add(i) as *const __m256i);
+        saw_min = _mm256_or_si256(saw_min, _mm256_cmpeq_epi64(x, minv));
+        let negm = _mm256_cmpgt_epi64(zero, x);
+        let ax = _mm256_sub_epi64(_mm256_xor_si256(x, negm), negm);
+        let gt = _mm256_cmpgt_epi64(ax, m);
+        m = _mm256_blendv_epi8(m, ax, gt);
+        i += 4;
+    }
+    if _mm256_movemask_epi8(saw_min) != 0 {
+        // |i64::MIN| saturates, matching scalar `saturating_abs`
+        return i64::MAX;
+    }
+    let mut buf = [0i64; 4];
+    _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, m);
+    let mut best = buf.iter().copied().max().unwrap_or(0);
+    for &x in &v[n4..] {
+        best = best.max(x.saturating_abs());
+    }
+    best
+}
+
+// ---------------------------------------------------------------------
+// SSE2 subset: the int8-wire trio (x86_64 baseline, no detection needed)
+// ---------------------------------------------------------------------
+
+/// Sign-extend the low 8 bytes of `x` to i16 lanes (SSE2 has no
+/// `pmovsxbw`): self-interleave then arithmetic-shift the copies out.
+#[inline]
+unsafe fn widen16_lo(x: __m128i) -> __m128i {
+    _mm_srai_epi16(_mm_unpacklo_epi8(x, x), 8)
+}
+
+#[inline]
+unsafe fn widen16_hi(x: __m128i) -> __m128i {
+    _mm_srai_epi16(_mm_unpackhi_epi8(x, x), 8)
+}
+
+/// Widen one i16x8 to 4 x i64x2 (sign-interleave twice) and add into
+/// `acc[0..8]`. Safety: `acc` must be valid for 8 i64 writes.
+#[inline]
+unsafe fn add16x8_to_i64(acc: *mut i64, w: __m128i) {
+    let s16 = _mm_srai_epi16(w, 15);
+    let lo32 = _mm_unpacklo_epi16(w, s16);
+    let hi32 = _mm_unpackhi_epi16(w, s16);
+    let s_lo = _mm_srai_epi32(lo32, 31);
+    let s_hi = _mm_srai_epi32(hi32, 31);
+    let q = [
+        _mm_unpacklo_epi32(lo32, s_lo),
+        _mm_unpackhi_epi32(lo32, s_lo),
+        _mm_unpacklo_epi32(hi32, s_hi),
+        _mm_unpackhi_epi32(hi32, s_hi),
+    ];
+    for (j, qv) in q.iter().enumerate() {
+        let p = acc.add(2 * j) as *mut __m128i;
+        _mm_storeu_si128(p, _mm_add_epi64(_mm_loadu_si128(p), *qv));
+    }
+}
+
+/// Safety: equal slice lengths (dispatch wrapper).
+pub(super) unsafe fn add_widen_i8_sse2(src: &[i8], acc: &mut [i64]) {
+    let n16 = src.len() / 16 * 16;
+    let mut i = 0;
+    while i < n16 {
+        let x = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+        add16x8_to_i64(acc.as_mut_ptr().add(i), widen16_lo(x));
+        add16x8_to_i64(acc.as_mut_ptr().add(i + 8), widen16_hi(x));
+        i += 16;
+    }
+    scalar::add_widen_i8(&src[n16..], &mut acc[n16..]);
+}
+
+/// Safety: the dispatch wrapper checks the rank bound and lengths.
+pub(super) unsafe fn sum_ranks_i8_sse2(msgs: &[&[i8]], acc: &mut [i64]) {
+    let d = acc.len();
+    let n16 = d / 16 * 16;
+    let mut i = 0;
+    while i < n16 {
+        let mut s_lo = _mm_setzero_si128();
+        let mut s_hi = _mm_setzero_si128();
+        for m in msgs {
+            let x = _mm_loadu_si128(m.as_ptr().add(i) as *const __m128i);
+            s_lo = _mm_add_epi16(s_lo, widen16_lo(x));
+            s_hi = _mm_add_epi16(s_hi, widen16_hi(x));
+        }
+        add16x8_to_i64(acc.as_mut_ptr().add(i), s_lo);
+        add16x8_to_i64(acc.as_mut_ptr().add(i + 8), s_hi);
+        i += 16;
+    }
+    for m in msgs {
+        scalar::add_widen_i8(&m[n16..], &mut acc[n16..]);
+    }
+}
+
+/// Safety: none beyond slice validity (SSE2 is x86_64 baseline).
+pub(super) unsafe fn max_abs_i8_sse2(v: &[i8]) -> i64 {
+    let n16 = v.len() / 16 * 16;
+    let mut m = _mm_setzero_si128();
+    let mut i = 0;
+    while i < n16 {
+        let x = _mm_loadu_si128(v.as_ptr().add(i) as *const __m128i);
+        for w in [widen16_lo(x), widen16_hi(x)] {
+            let s = _mm_srai_epi16(w, 15);
+            let a = _mm_sub_epi16(_mm_xor_si128(w, s), s);
+            m = _mm_max_epi16(m, a); // values <= 128: signed max is safe
+        }
+        i += 16;
+    }
+    let mut buf = [0i16; 8];
+    _mm_storeu_si128(buf.as_mut_ptr() as *mut __m128i, m);
+    let mut best = buf.iter().copied().max().unwrap_or(0) as i64;
+    for &x in &v[n16..] {
+        best = best.max((x as i32).abs() as i64);
+    }
+    best
+}

@@ -20,26 +20,26 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 
 /// Euclidean norm of an f32 slice, accumulated in f64.
 pub fn l2_norm(v: &[f32]) -> f64 {
-    v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    l2_norm_sq(v).sqrt()
 }
 
-/// Squared euclidean norm, accumulated in f64.
+/// Squared euclidean norm, accumulated in f64 through the dispatched
+/// striped fold (`crate::simd::sq_norm`): element `i` lands in stripe
+/// accumulator `i mod 8`, stripes folded in order. The striping *is* the
+/// definition — scalar and SIMD backends evaluate the same expression,
+/// so the alpha rules fed by this norm see identical bits either way.
 pub fn l2_norm_sq(v: &[f32]) -> f64 {
-    v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+    crate::simd::sq_norm(v)
 }
 
 /// Squared euclidean distance ||a - b||^2, accumulated in f64 with the
 /// difference fused into the pass — no temporary diff vector (this runs
-/// on the coordinator hot path every round).
+/// on the coordinator hot path every round). Same striping as
+/// [`l2_norm_sq`], with the difference taken in f32 first, so the fused
+/// form equals the two-pass subtract-then-norm form bit-for-bit.
 pub fn l2_diff_norm_sq(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    a.iter()
-        .zip(b)
-        .map(|(&x, &y)| {
-            let d = (x - y) as f64;
-            d * d
-        })
-        .sum()
+    crate::simd::sq_diff_norm(a, b)
 }
 
 /// Max |x|.

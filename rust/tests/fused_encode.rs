@@ -28,7 +28,6 @@ fn naive_reference(
     let mut out = Vec::with_capacity(grad.len());
     for (span, &alpha) in blocks.iter().zip(alphas) {
         let a = alpha as f32;
-        let c = clip as f32;
         for (k, &g) in grad[span.range()].iter().enumerate() {
             let t = g * a;
             let rounded = match rounding {
@@ -39,7 +38,12 @@ fn naive_reference(
                 }
                 Rounding::Deterministic => t.round_ties_even(),
             };
-            out.push(rounded.clamp(-c, c) as i64);
+            // clamp in the integer domain: the widened bound itself, not
+            // its f32 rounding (for clip > 2^24 the two can differ —
+            // `clip_clamp_is_integer_exact_at_the_i32_boundary` below).
+            // `as i64` saturates and maps NaN to 0, matching the
+            // production `WireLane::of_rounded` contract.
+            out.push((rounded as i64).clamp(-clip, clip));
         }
     }
     out
@@ -132,6 +136,74 @@ fn block_layout_is_transparent_under_equal_alphas() {
                  {} blocks)",
                 split.len()
             );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn clip_clamp_is_integer_exact_at_the_i32_boundary() {
+    // clip = i32::MAX/4 = 536870911 is not f32-representable; `clip as
+    // f32` rounds UP to 536870912.0. A rounded value of exactly that
+    // f32 passed the old f32-domain clamp one past the proved wire
+    // bound; the integer-domain clamp must pin it to the bound itself.
+    let clip = i32::MAX as i64 / 4;
+    let g = clip as f32; // 536870912.0 — one past the true bound
+    let blocks = vec![BlockSpan { offset: 0, dim: 1 }];
+    for (sign, want) in [(1.0f32, clip), (-1.0, -clip)] {
+        let mut out = IntVec::new(Lanes::I32);
+        intsgd::compress::intsgd::encode_blocks(
+            Rounding::Deterministic,
+            &blocks,
+            &[1.0],
+            clip,
+            &[sign * g],
+            0,
+            &mut out,
+        );
+        assert_eq!(out.get(0), want);
+    }
+}
+
+#[test]
+fn clip_bound_holds_for_unrepresentable_clips() {
+    // Satellite audit of `encode_span`'s clip handling: sweep clip
+    // bounds that are deliberately NOT f32-representable (odd values
+    // above 2^24, for the i32 and i64 lanes) with gradients straddling
+    // the boundary, and assert no encoded value ever exceeds the
+    // *widened* bound — the wire-fit proof the reducer relies on.
+    prop_check(0xC11F, 80, |rng| {
+        let shift = 25 + rng.usize_below(30) as u32;
+        let clip = (1i64 << shift) + 1 + 2 * rng.below(1 << 20) as i64;
+        let lanes = Lanes::for_bound(clip);
+        let d = 64;
+        let grad: Vec<f32> = (0..d)
+            .map(|_| {
+                let sign = if rng.bernoulli(0.5) { 1.0f32 } else { -1.0 };
+                // near the bound (where the f32 rounding of clip bites),
+                // or well past it (plain saturation)
+                let mag = if rng.bernoulli(0.5) {
+                    clip as f32 + rng.range(-1e4, 1e4) as f32
+                } else {
+                    clip as f32 * (1.0 + rng.uniform_f32())
+                };
+                sign * mag
+            })
+            .collect();
+        let blocks = vec![BlockSpan { offset: 0, dim: d }];
+        let base = rng.next_u64();
+        for rounding in [Rounding::Stochastic, Rounding::Deterministic] {
+            let mut out = IntVec::new(lanes);
+            intsgd::compress::intsgd::encode_blocks(
+                rounding, &blocks, &[1.0], clip, &grad, base, &mut out,
+            );
+            for j in 0..d {
+                let v = out.get(j);
+                prop_assert!(
+                    v.abs() <= clip,
+                    "coord {j}: |{v}| exceeds clip {clip} ({rounding:?}, {lanes:?})"
+                );
+            }
         }
         Ok(())
     });

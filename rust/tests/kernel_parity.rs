@@ -1,0 +1,311 @@
+//! SIMD-vs-scalar kernel parity: every dispatched kernel in
+//! `intsgd::simd` must reproduce the scalar spec (`intsgd::simd::scalar`)
+//! **bit-for-bit** — integer kernels because integer arithmetic is exact,
+//! float kernels because the backends use per-lane-identical IEEE ops and
+//! a shared stripe association (DESIGN.md §10).
+//!
+//! The sweeps exercise exactly the shapes where a vector implementation
+//! diverges from its spec if anything is off: d = 0 and d = 1, lengths
+//! one below / at / one above every chunk width in play (4, 8, 16), odd
+//! remainders, and *unaligned slice starts* (kernels take unaligned
+//! loads; slicing a few elements off the front of a buffer must change
+//! nothing).
+//!
+//! Without `--features simd`, the dispatched names re-export the scalar
+//! spec, so this suite degenerates to `x == x` — it earns its keep under
+//! the CI `simd` job, which runs it once with the vector backend live
+//! and once with `INTSGD_FORCE_SCALAR=1`.
+
+use intsgd::simd::{self, scalar};
+use intsgd::util::Rng;
+
+/// Lengths that straddle every chunk boundary the backends use (4/8/16
+/// lanes per iteration, 64-coordinate scalar fused-fold chunks), plus
+/// degenerate and large-odd shapes.
+const LENS: &[usize] = &[
+    0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 128, 129, 1000,
+];
+
+/// Slice-start offsets: 0 (aligned with the allocation) and small odd
+/// cuts that guarantee misaligned vector loads.
+const OFFS: &[usize] = &[0, 1, 3];
+
+fn f32_vec(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| (rng.uniform() as f32 - 0.5) * scale).collect()
+}
+
+fn i8_vec(rng: &mut Rng, len: usize) -> Vec<i8> {
+    (0..len).map(|_| (rng.below(255) as i64 - 127) as i8).collect()
+}
+
+#[test]
+fn round_stoch_matches_scalar_bitwise() {
+    let mut rng = Rng::new(0xA001);
+    for &len in LENS {
+        for &off in OFFS {
+            let g = f32_vec(&mut rng, len + off, 4000.0);
+            let g = &g[off..];
+            let a = 0.37f32 + rng.uniform() as f32;
+            let base = rng.next_u64();
+            let j0 = rng.below(1 << 20);
+            let mut want = vec![0.0f32; g.len()];
+            let mut got = vec![0.0f32; g.len()];
+            scalar::round_stoch(g, a, base, j0, &mut want);
+            simd::round_stoch(g, a, base, j0, &mut got);
+            assert_eq!(
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "len={len} off={off} backend={}",
+                simd::backend_name()
+            );
+        }
+    }
+}
+
+#[test]
+fn round_stoch_counter_wraps_like_scalar() {
+    // the counter stream must wrap mod 2^64 identically in both domains
+    let mut rng = Rng::new(0xA00B);
+    let g = f32_vec(&mut rng, 67, 100.0);
+    for j0 in [u64::MAX - 100, u64::MAX - 8, u64::MAX - 1] {
+        let mut want = vec![0.0f32; g.len()];
+        let mut got = vec![0.0f32; g.len()];
+        scalar::round_stoch(&g, 1.5, 42, j0, &mut want);
+        simd::round_stoch(&g, 1.5, 42, j0, &mut got);
+        assert_eq!(
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "j0={j0}"
+        );
+    }
+}
+
+#[test]
+fn round_determ_matches_scalar_bitwise() {
+    let mut rng = Rng::new(0xA002);
+    for &len in LENS {
+        for &off in OFFS {
+            let g = f32_vec(&mut rng, len + off, 4000.0);
+            let g = &g[off..];
+            let a = 0.11f32 + rng.uniform() as f32;
+            let mut want = vec![0.0f32; g.len()];
+            let mut got = vec![0.0f32; g.len()];
+            scalar::round_determ(g, a, &mut want);
+            simd::round_determ(g, a, &mut got);
+            assert_eq!(
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "len={len} off={off}"
+            );
+        }
+    }
+}
+
+#[test]
+fn round_determ_ties_go_to_even() {
+    // halfway cases are where round-ties-even implementations diverge:
+    // every t = k + 0.5 must land on the even neighbour in all backends
+    let g: Vec<f32> = (-16..16).map(|k| k as f32 + 0.5).collect();
+    let mut want = vec![0.0f32; g.len()];
+    let mut got = vec![0.0f32; g.len()];
+    scalar::round_determ(&g, 1.0, &mut want);
+    simd::round_determ(&g, 1.0, &mut got);
+    assert_eq!(want, got);
+    assert_eq!(want[16], 0.0); // 0.5 -> 0
+    assert_eq!(want[17], 2.0); // 1.5 -> 2
+}
+
+#[test]
+fn widening_adds_match_scalar() {
+    let mut rng = Rng::new(0xA003);
+    for &len in LENS {
+        for &off in OFFS {
+            let src8 = i8_vec(&mut rng, len + off);
+            let src8 = &src8[off..];
+            let src32: Vec<i32> = (0..len).map(|_| rng.next_u64() as i32).collect();
+            let src64: Vec<i64> = (0..len).map(|_| rng.next_u64() as i64 >> 8).collect();
+            let seed: Vec<i64> = (0..len).map(|_| rng.next_u64() as i64 >> 32).collect();
+
+            let mut want = seed.clone();
+            let mut got = seed.clone();
+            scalar::add_widen_i8(src8, &mut want);
+            simd::add_widen_i8(src8, &mut got);
+            assert_eq!(want, got, "i8 len={len} off={off}");
+
+            let mut want = seed.clone();
+            let mut got = seed.clone();
+            scalar::add_widen_i32(&src32, &mut want);
+            simd::add_widen_i32(&src32, &mut got);
+            assert_eq!(want, got, "i32 len={len}");
+
+            let mut want = seed.clone();
+            let mut got = seed.clone();
+            scalar::add_i64(&src64, &mut want);
+            simd::add_i64(&src64, &mut got);
+            assert_eq!(want, got, "i64 len={len}");
+
+            let mut want = vec![0i64; len];
+            let mut got = vec![0i64; len];
+            scalar::copy_widen_i8(src8, &mut want);
+            simd::copy_widen_i8(src8, &mut got);
+            assert_eq!(want, got, "copy len={len} off={off}");
+        }
+    }
+}
+
+#[test]
+fn sum_ranks_matches_rank_at_a_time_fold() {
+    let mut rng = Rng::new(0xA004);
+    for &len in LENS {
+        for n in [1usize, 2, 3, 16, 127] {
+            let msgs: Vec<Vec<i8>> = (0..n).map(|_| i8_vec(&mut rng, len)).collect();
+            let views: Vec<&[i8]> = msgs.iter().map(|m| m.as_slice()).collect();
+            let mut want = vec![0i64; len];
+            for m in &msgs {
+                scalar::add_widen_i8(m, &mut want);
+            }
+            let mut got_scalar = vec![0i64; len];
+            scalar::sum_ranks_i8(&views, &mut got_scalar);
+            assert_eq!(want, got_scalar, "scalar fused len={len} n={n}");
+            let mut got = vec![0i64; len];
+            simd::sum_ranks_i8(&views, &mut got);
+            assert_eq!(want, got, "dispatched fused len={len} n={n}");
+        }
+    }
+}
+
+#[test]
+fn sum_ranks_survives_the_i16_bound_edge() {
+    // 128 ranks, every lane at +-127: the cross-rank partial sum hits
+    // +-16256, just inside i16 — the widening-bound proof's worst case
+    for v in [127i8, -127] {
+        let msgs: Vec<Vec<i8>> = (0..simd::SUM_RANKS_MAX).map(|_| vec![v; 50]).collect();
+        let views: Vec<&[i8]> = msgs.iter().map(|m| m.as_slice()).collect();
+        let mut got = vec![0i64; 50];
+        simd::sum_ranks_i8(&views, &mut got);
+        assert!(got.iter().all(|&s| s == 128 * v as i64));
+    }
+}
+
+#[test]
+fn decode_matches_scalar_bitwise() {
+    let mut rng = Rng::new(0xA005);
+    for &len in LENS {
+        for &off in OFFS {
+            let sum: Vec<i64> = (0..len + off)
+                .map(|_| (rng.next_u64() as i64) >> 40) // |s| < 2^24: typical aggregates
+                .collect();
+            let sum = &sum[off..];
+            let inv = 1.0 / (16.0 * (0.01 + rng.uniform()));
+            let mut want = vec![0.0f32; sum.len()];
+            let mut got = vec![0.0f32; sum.len()];
+            scalar::decode_scale_i64(sum, inv, &mut want);
+            simd::decode_scale_i64(sum, inv, &mut got);
+            assert_eq!(
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "len={len} off={off}"
+            );
+        }
+    }
+}
+
+#[test]
+fn decode_handles_out_of_trick_range_sums() {
+    // the AVX2 backend converts via the 2^52 exponent trick, valid only
+    // for |x| < 2^51 — these values straddle its guard, including the
+    // extremes the guard must catch
+    let sum: Vec<i64> = vec![
+        0,
+        1,
+        -1,
+        (1 << 51) - 1,
+        1 << 51,
+        -(1 << 51),
+        (1 << 51) + 1,
+        i64::MAX,
+        i64::MIN,
+        i64::MIN + 1,
+        (1 << 62) + 12345,
+        -(1 << 62) - 12345,
+    ];
+    for inv in [1.0, 1.0 / 3.0, 1e-9] {
+        let mut want = vec![0.0f32; sum.len()];
+        let mut got = vec![0.0f32; sum.len()];
+        scalar::decode_scale_i64(&sum, inv, &mut want);
+        simd::decode_scale_i64(&sum, inv, &mut got);
+        assert_eq!(
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "inv={inv}"
+        );
+    }
+}
+
+#[test]
+fn norm_folds_match_scalar_bitwise() {
+    let mut rng = Rng::new(0xA006);
+    for &len in LENS {
+        for &off in OFFS {
+            let a = f32_vec(&mut rng, len + off, 3.0);
+            let b = f32_vec(&mut rng, len + off, 3.0);
+            let (a, b) = (&a[off..], &b[off..]);
+            assert_eq!(
+                scalar::sq_norm(a).to_bits(),
+                simd::sq_norm(a).to_bits(),
+                "sq_norm len={len} off={off}"
+            );
+            assert_eq!(
+                scalar::sq_diff_norm(a, b).to_bits(),
+                simd::sq_diff_norm(a, b).to_bits(),
+                "sq_diff_norm len={len} off={off}"
+            );
+        }
+    }
+}
+
+#[test]
+fn max_abs_matches_scalar_including_type_extremes() {
+    let mut rng = Rng::new(0xA007);
+    for &len in LENS {
+        let mut v8 = i8_vec(&mut rng, len);
+        let mut v32: Vec<i32> = (0..len).map(|_| rng.next_u64() as i32).collect();
+        // i64::MIN excluded: scalar saturates there by documented
+        // contract, pinned separately below
+        let mut v64: Vec<i64> = (0..len)
+            .map(|_| (rng.next_u64() as i64).max(i64::MIN + 1))
+            .collect();
+        if len > 2 {
+            v8[len / 2] = i8::MIN; // |MIN| = 128 must be exact
+            v32[len / 2] = i32::MIN;
+            v64[len / 2] = i64::MIN + 1;
+        }
+        assert_eq!(scalar::max_abs_i8(&v8), simd::max_abs_i8(&v8), "i8 len={len}");
+        assert_eq!(scalar::max_abs_i32(&v32), simd::max_abs_i32(&v32), "i32 len={len}");
+        assert_eq!(scalar::max_abs_i64(&v64), simd::max_abs_i64(&v64), "i64 len={len}");
+    }
+}
+
+#[test]
+fn max_abs_i64_saturates_at_min() {
+    let v = vec![5i64, i64::MIN, -7];
+    assert_eq!(scalar::max_abs_i64(&v), i64::MAX);
+    assert_eq!(simd::max_abs_i64(&v), i64::MAX);
+}
+
+#[test]
+fn backend_name_is_coherent_with_feature_state() {
+    let name = simd::backend_name();
+    if cfg!(feature = "simd") {
+        // forced-scalar override or a real vector backend — both valid
+        assert!(["scalar", "sse2", "avx2", "neon"].contains(&name), "{name}");
+        let forced = std::env::var(simd::FORCE_SCALAR_ENV)
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        if forced {
+            assert_eq!(name, "scalar");
+        }
+    } else {
+        assert_eq!(name, "scalar");
+    }
+}

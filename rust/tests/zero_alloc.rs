@@ -234,4 +234,47 @@ fn steady_state_intsgd_rounds_allocate_nothing() {
         str_allocs, 0,
         "streamed steady-state rounds hit the allocator {str_allocs} times"
     );
+
+    // --- dispatched kernels, driven directly --------------------------------
+    // The kernel layer's own contract (DESIGN.md §10): every dispatched
+    // kernel runs on caller buffers plus fixed-size stack scratch. The
+    // rounds above already exercised them indirectly (and warmed the
+    // one-time backend detection, which reads the environment); this
+    // drives each one explicitly so a future backend cannot smuggle in a
+    // heap temporary without tripping the counter.
+    use intsgd::simd;
+    let g: Vec<f32> = grads[0].clone();
+    let h: Vec<f32> = grads[1].clone();
+    let msgs: Vec<Vec<i8>> = (0..8)
+        .map(|r| g.iter().map(|&x| (x as i64 % 100 + r) as i8).collect())
+        .collect();
+    let views: Vec<&[i8]> = msgs.iter().map(|m| m.as_slice()).collect();
+    let mut f32_out = vec![0.0f32; d];
+    let mut i64_acc = vec![0i64; d];
+    let src32: Vec<i32> = (0..d as i32).collect();
+    let src64: Vec<i64> = (0..d as i64).collect();
+    let before = allocations();
+    let mut sink = 0.0f64;
+    let mut isink = 0i64;
+    for _ in 0..10 {
+        simd::round_stoch(&g, 7.5, 0x5EED, 0, &mut f32_out);
+        simd::round_determ(&g, 7.5, &mut f32_out);
+        simd::add_widen_i8(views[0], &mut i64_acc);
+        simd::add_widen_i32(&src32, &mut i64_acc);
+        simd::add_i64(&src64, &mut i64_acc);
+        simd::copy_widen_i8(views[1], &mut i64_acc);
+        simd::sum_ranks_i8(&views, &mut i64_acc);
+        simd::decode_scale_i64(&src64, 1.0 / 48.0, &mut f32_out);
+        sink += simd::sq_norm(&g) + simd::sq_diff_norm(&g, &h);
+        isink += simd::max_abs_i8(views[0])
+            + simd::max_abs_i32(&src32)
+            + simd::max_abs_i64(&i64_acc);
+    }
+    let kernel_allocs = allocations() - before;
+    assert!(sink.is_finite() && isink >= 0);
+    assert_eq!(
+        kernel_allocs, 0,
+        "dispatched kernels ({}) hit the allocator {kernel_allocs} times",
+        simd::backend_name()
+    );
 }

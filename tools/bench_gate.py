@@ -35,11 +35,36 @@ Refreshing a baseline after an intentional perf or schema change:
     cp rust/BENCH_compress.json rust/BENCH_compress.baseline.json
 
 and likewise for bench_collective -> BENCH_net.baseline.json.
+
+Every invocation ends with one machine-readable line on stdout,
+
+    BENCH_GATE status=<pass|fail|skipped|error> mode=<full|smoke|mismatch|->
+        compared=N regressed=N missing=N skipped=N threshold=X worst=X
+
+so CI annotations and the PR driver can grep `^BENCH_GATE ` instead of
+parsing the human-oriented prose.
 """
 
 import argparse
 import json
 import sys
+
+
+def summary(status, mode="-", compared=0, regressed=0, missing=0, skipped=0,
+            threshold=None, worst=None):
+    """One machine-readable line, emitted on EVERY exit path.
+
+    CI and the PR driver grep for the `BENCH_GATE ` prefix instead of
+    parsing the prose above it; keep the key=value grammar stable.
+    """
+    thr = f"{threshold:.2f}" if threshold is not None else "-"
+    wst = f"{worst:.3f}" if worst is not None else "-"
+    print(
+        f"BENCH_GATE status={status} mode={mode} compared={compared} "
+        f"regressed={regressed} missing={missing} skipped={skipped} "
+        f"threshold={thr} worst={wst}"
+    )
+
 
 def is_timing_key(key):
     # `*model*` columns are deterministic netsim-preset functions (already
@@ -99,6 +124,7 @@ def main():
             fresh = json.load(f)
     except (OSError, ValueError) as e:
         print(f"bench_gate: cannot load reports: {e}", file=sys.stderr)
+        summary("error")
         return 2
 
     base_smoke = bool(base.get("smoke", False))
@@ -108,26 +134,31 @@ def main():
             f"bench_gate: smoke mismatch (baseline smoke={base_smoke}, "
             f"fresh smoke={fresh_smoke}) — shapes are not comparable, skipping"
         )
+        summary("skipped", mode="mismatch")
         return 0
     threshold = args.smoke_threshold if fresh_smoke else args.threshold
 
     pairs, missing = [], []
     walk(base, fresh, "", pairs, missing)
+    mode = "smoke" if fresh_smoke else "full"
     if not pairs:
         print("bench_gate: no comparable timing keys found", file=sys.stderr)
+        summary("error", mode=mode, missing=len(missing))
         return 2
 
     regressions, compared, skipped = [], 0, 0
+    worst = None
     for path, b, f in pairs:
         if b < args.floor_ms and f < args.floor_ms:
             skipped += 1
             continue
         compared += 1
         ratio = f / b if b > 0 else float("inf")
+        if worst is None or ratio > worst:
+            worst = ratio
         if f > b * (1.0 + threshold):
             regressions.append((path, b, f, ratio))
 
-    mode = "smoke" if fresh_smoke else "full"
     print(
         f"bench_gate [{mode}]: {compared} timing keys gated at +{threshold:.0%}, "
         f"{skipped} under the {args.floor_ms} ms noise floor"
@@ -141,8 +172,13 @@ def main():
                 f"  {path}: {b:.3f} -> {f:.3f} ({ratio:.2f}x)",
                 file=sys.stderr,
             )
+        summary("fail", mode=mode, compared=compared,
+                regressed=len(regressions), missing=len(missing),
+                skipped=skipped, threshold=threshold, worst=worst)
         return 1
     print("bench_gate: ok — no hot-path regression past the threshold")
+    summary("pass", mode=mode, compared=compared, missing=len(missing),
+            skipped=skipped, threshold=threshold, worst=worst)
     return 0
 
 
