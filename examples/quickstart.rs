@@ -7,9 +7,14 @@
 //! through PJRT; compression, aggregation and optimization run in rust.
 //!
 //!   make artifacts && cargo run --release --example quickstart
+//!
+//! Ends with a traced run: the same Session, with the telemetry knobs
+//! on — phase spans land in a Chrome trace and the metrics are one
+//! `curl` away (DESIGN.md §11).
 
-use intsgd::api::CompressorSpec;
+use intsgd::api::{Backend, CompressorSpec, ModelSpec, Pipeline, Session, StagedAlgo};
 use intsgd::config::Config;
+use intsgd::coordinator::net_driver::quad_factories;
 use intsgd::experiments::common::{setup, task_session, Task};
 
 fn main() -> anyhow::Result<()> {
@@ -41,5 +46,30 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\nIntSGD ships 4x fewer bytes with the same convergence — the paper's headline.");
+
+    // --- a traced run: same front door, telemetry on --------------------
+    // trace_path() journals every phase span (encode/reduce/drain/decode,
+    // per block) and writes chrome://tracing JSON at finish();
+    // metrics_listen() serves Prometheus text for the session's lifetime.
+    let (n, d) = (4, 1 << 14);
+    let mut traced = Session::builder()
+        .world(n)
+        .model(ModelSpec::blocks(vec![d / 2, d / 2]))
+        .sources(quad_factories(n, d, 42, 0.01))
+        .compressor(CompressorSpec::parse("intsgd_random8")?)
+        .backend(Backend::Channel { algo: StagedAlgo::Ring })
+        .pipeline(Pipeline::Streamed)
+        .lr(0.2)
+        .trace_path("quickstart_trace.json")
+        .metrics_listen("127.0.0.1:0")
+        .build()?;
+    let addr = traced.metrics_addr().expect("endpoint bound");
+    traced.run(16)?;
+    traced.finish();
+    println!(
+        "\ntraced 16 streamed rounds -> quickstart_trace.json \
+         (open in chrome://tracing; metrics served on http://{addr}/metrics \
+         while the session lived)"
+    );
     Ok(())
 }

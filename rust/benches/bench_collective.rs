@@ -365,6 +365,15 @@ fn pipeline_cases(iters: usize, d: usize) -> Json {
     }
     pool.shutdown();
 
+    // wire occupancy: bytes per coordinate per worker at the lane the
+    // partial sums actually shipped on (int8 + clipped sums -> 1.0; a
+    // compressor change that silently widens the lane shows up here and
+    // trips the bench gate)
+    let bytes_per_coord = red_s
+        .last_wire()
+        .map(|l| l.bytes() as f64)
+        .expect("streamed rounds used the wire");
+
     let (b_med, s_med) = (median(&wall_b), median(&wall_s));
     let (e_med, d_med) = (median(&enc), median(&dec));
     // the overlap-aware model next to the sequential one, anchored on the
@@ -395,6 +404,7 @@ fn pipeline_cases(iters: usize, d: usize) -> Json {
         ("streamed_over_barrier", num(s_med / b_med.max(1e-12))),
         ("model_barrier_ms", num(model_b * 1e3)),
         ("model_streamed_ms", num(model_s * 1e3)),
+        ("wire_bytes_per_coord", num(bytes_per_coord)),
     ])
 }
 

@@ -81,4 +81,34 @@ pub const NET: &[&str] = &[
     "fault.delay",
     "fault.kill_rank",
     "fault.kill_round",
+    "telemetry.trace_path",
+    "telemetry.listen",
+];
+
+/// `repro trace` — a traced run (`coordinator::trace_cmd`): everything the
+/// net path takes, plus the trace output and the optional serve window.
+pub const TRACE: &[&str] = &[
+    "workers",
+    "d",
+    "rounds",
+    "lr",
+    "seed",
+    "transport",
+    "algo",
+    "pipeline",
+    "hierarchy.group_size",
+    "net.timeout_ms",
+    "net.retries",
+    "fault.seed",
+    "fault.drop",
+    "fault.dup",
+    "fault.corrupt",
+    "fault.truncate",
+    "fault.delay",
+    "fault.kill_rank",
+    "fault.kill_round",
+    "telemetry.trace_path",
+    "telemetry.listen",
+    "out",
+    "serve_ms",
 ];

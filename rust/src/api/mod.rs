@@ -234,6 +234,8 @@ pub struct SessionBuilder {
     net_timeout: Duration,
     net_retries: usize,
     pipeline: Pipeline,
+    trace_path: Option<String>,
+    metrics_listen: Option<String>,
 }
 
 impl Default for SessionBuilder {
@@ -263,6 +265,8 @@ impl Default for SessionBuilder {
             net_timeout: default_io_timeout(),
             net_retries: 8,
             pipeline: Pipeline::Barrier,
+            trace_path: None,
+            metrics_listen: None,
         }
     }
 }
@@ -391,6 +395,22 @@ impl SessionBuilder {
         self
     }
 
+    /// Record phase spans (encode / reduce / drain / decode, per block)
+    /// into the telemetry journal and write them to `path` as a Chrome
+    /// `chrome://tracing` trace when the session finishes
+    /// ([`Session::finish`], or earlier via [`Session::write_trace`]).
+    pub fn trace_path(mut self, path: impl Into<String>) -> Self {
+        self.trace_path = Some(path.into());
+        self
+    }
+
+    /// Serve the Prometheus text endpoint on `addr` (e.g. `127.0.0.1:0`
+    /// for an OS-assigned port) for the life of the session.
+    pub fn metrics_listen(mut self, addr: impl Into<String>) -> Self {
+        self.metrics_listen = Some(addr.into());
+        self
+    }
+
     /// Round driver: [`Pipeline::Barrier`] (default) or
     /// [`Pipeline::Streamed`], the double-buffered block pipeline that
     /// overlaps encode, the collective, and decode (bit-identical output;
@@ -510,6 +530,20 @@ impl SessionBuilder {
             ));
         }
 
+        // -- telemetry ---------------------------------------------------
+        // Bind first: a bad listen address is a configuration error and
+        // should fail before the journal flips on or any thread spawns.
+        let metrics = match &self.metrics_listen {
+            Some(addr) => Some(
+                crate::telemetry::MetricsServer::bind(addr)
+                    .map_err(|e| anyhow!("telemetry.listen {addr}: {e}"))?,
+            ),
+            None => None,
+        };
+        if self.trace_path.is_some() {
+            crate::telemetry::journal::enable(crate::telemetry::journal::DEFAULT_CAPACITY);
+        }
+
         // -- construction: nothing below can fail on configuration ------
         let comp = self.compressor.build(n, &model.layout, self.beta, self.eps, self.seed)?;
         let engine = RoundEngine::new(comp);
@@ -574,6 +608,8 @@ impl SessionBuilder {
             eval: self.eval_hook,
             checkpoint_every: self.checkpoint_every,
             checkpoint_path: self.checkpoint_path,
+            trace_path: self.trace_path,
+            metrics,
         })
     }
 }
@@ -646,6 +682,8 @@ pub struct Session {
     eval: Option<EvalHook>,
     checkpoint_every: usize,
     checkpoint_path: Option<String>,
+    trace_path: Option<String>,
+    metrics: Option<crate::telemetry::MetricsServer>,
 }
 
 impl Session {
@@ -688,6 +726,22 @@ impl Session {
     /// backends).
     pub fn wire_stats(&self) -> Option<WireStats> {
         self.red.wire_stats()
+    }
+
+    /// Address the Prometheus endpoint is listening on (None unless
+    /// [`SessionBuilder::metrics_listen`] was set).
+    pub fn metrics_addr(&self) -> Option<std::net::SocketAddr> {
+        self.metrics.as_ref().map(|m| m.addr())
+    }
+
+    /// Flush the phase-span journal to [`SessionBuilder::trace_path`] as a
+    /// Chrome trace now, mid-run. [`Session::finish`] does this
+    /// automatically.
+    pub fn write_trace(&self) -> std::io::Result<()> {
+        match &self.trace_path {
+            Some(path) => crate::telemetry::write_trace(path),
+            None => Ok(()),
+        }
     }
 
     /// Run one synchronous round.
@@ -771,9 +825,15 @@ impl Session {
         Ok(())
     }
 
-    /// Shut the worker pool down and return the run's full log.
+    /// Shut the worker pool down and return the run's full log. Writes the
+    /// Chrome trace (best effort) when a trace path was configured.
     pub fn finish(self) -> TrainResult {
-        let Session { coord, mut pool, state, .. } = self;
+        let Session { coord, mut pool, state, trace_path, .. } = self;
+        if let Some(path) = &trace_path {
+            if let Err(e) = crate::telemetry::write_trace(path) {
+                eprintln!("warning: could not write trace {path}: {e}");
+            }
+        }
         pool.shutdown();
         coord.finish_run(state)
     }

@@ -49,6 +49,7 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::worker::WorkerPool;
 use crate::coordinator::RoundCtx;
 use crate::net::NetError;
+use crate::telemetry::journal::{self, Phase, ALL};
 
 use super::intsgd::Rounding;
 use super::intvec::{BlockSlots, IntVec, Lanes};
@@ -785,8 +786,10 @@ pub fn sequential_round(
     let mut encode_total = 0.0f64;
     let mut reduce_total = 0.0f64;
     let mut leader_seconds = 0.0f64;
+    let round = ctx.round as u32;
     loop {
         let mut encs = std::mem::take(comp.encoders());
+        let span_t = journal::start();
         let t0 = Instant::now();
         for (enc, grad) in encs.iter_mut().zip(grads) {
             enc.encode(grad, &plan);
@@ -796,12 +799,15 @@ pub fn sequential_round(
         // collective, so the staging copy is not compression overhead.
         if !matches!(plan, PassPlan::Dense) {
             encode_total += t0.elapsed().as_secs_f64();
+            journal::record(Phase::Encode, round, ALL, ALL, span_t);
         }
         let outcome = {
             let msgs = RankMessages::new(&encs);
+            let span_t = journal::start();
             let t1 = Instant::now();
             let outcome = comp.reduce(&msgs, &plan, ctx, &mut SerialReducer);
             let dt = t1.elapsed().as_secs_f64();
+            journal::record(Phase::Reduce, round, ALL, ALL, span_t);
             reduce_total += dt;
             if edge_decode {
                 leader_seconds += dt;
@@ -814,9 +820,11 @@ pub fn sequential_round(
             PassOutcome::Next(next) => plan = next,
         }
     }
+    let span_t = journal::start();
     let t2 = Instant::now();
     let mut result = comp.decode(ctx, arena);
     leader_seconds += t2.elapsed().as_secs_f64();
+    journal::record(Phase::Decode, round, ALL, ALL, span_t);
     result.encode_seconds = encode_total / n as f64;
     result.reduce_seconds = reduce_total;
     result.decode_seconds = leader_seconds;
@@ -1054,9 +1062,13 @@ impl RoundEngine {
         let mut reduce_total = 0.0f64;
         let mut leader_seconds = 0.0f64;
 
+        let round = ctx.round as u32;
+
         // prologue: block 0 must exist before the wire can start
+        let mut enc_span_t = journal::start();
         pool.post_encode_block(&plan, 0, &mut encs, grads, stream.slots.block_mut(0));
         encode_seconds += pool.collect_encode_block();
+        journal::record(Phase::Encode, round, 0, ALL, enc_span_t);
 
         let mut failure: Option<NetError> = None;
         for k in 0..nblocks {
@@ -1064,6 +1076,7 @@ impl RoundEngine {
             // parity — disjoint from everything read below) while the
             // collective moves block k and the leader drains its decode
             if k + 1 < nblocks {
+                enc_span_t = journal::start();
                 pool.post_encode_block(
                     &plan,
                     k + 1,
@@ -1074,22 +1087,30 @@ impl RoundEngine {
             }
             red.begin_block(k);
             let bmsgs = RankMessages::from_ints(stream.slots.block(k));
+            let red_span_t = journal::start();
             let t0 = Instant::now();
             let folded = red.sum_ints(&bmsgs, &mut stream.block_sum);
             reduce_total += t0.elapsed().as_secs_f64();
+            journal::record(Phase::Reduce, round, k as u16, ALL, red_span_t);
             match folded {
                 Ok(()) => {
                     // drain the landed block: assemble the aggregate and
                     // decode it while block k+1 is still encoding
+                    let drain_span_t = journal::start();
                     let t1 = Instant::now();
                     stream.sum[blocks[k].range()].copy_from_slice(&stream.block_sum);
                     decode_span_ints(&stream.block_sum, alphas[k], ctx.n, &mut gtilde);
                     leader_seconds += t1.elapsed().as_secs_f64();
+                    journal::record(Phase::Drain, round, k as u16, ALL, drain_span_t);
                 }
                 Err(e) => failure = Some(e),
             }
             if k + 1 < nblocks {
                 encode_seconds += pool.collect_encode_block();
+                // the encode span for block k+1 covers post -> collect:
+                // in the trace it sits on the encode lane directly above
+                // the reduce span for block k — the overlap, visible
+                journal::record(Phase::Encode, round, (k + 1) as u16, ALL, enc_span_t);
             }
             if let Some(e) = failure {
                 // the in-flight encode was drained above (every ack
@@ -1119,9 +1140,11 @@ impl RoundEngine {
                 unreachable!("streams() promised a single-pass plan")
             }
         }
+        let span_t = journal::start();
         let t2 = Instant::now();
         let mut result = comp.finish_streamed(ctx, arena, gtilde);
         leader_seconds += t2.elapsed().as_secs_f64();
+        journal::record(Phase::Decode, round, ALL, ALL, span_t);
         result.encode_seconds = encode_seconds;
         result.reduce_seconds = reduce_total;
         result.decode_seconds = leader_seconds;
@@ -1147,16 +1170,20 @@ impl RoundEngine {
         let mut encode_seconds = 0.0f64;
         let mut reduce_total = 0.0f64;
         let mut leader_seconds = 0.0f64;
+        let round = ctx.round as u32;
         loop {
             let mut encs = std::mem::take(comp.encoders());
+            let span_t = journal::start();
             let straggler = pool.encode_round(&plan, &mut encs, grads);
             // Dense staging is data-plane work, not compression overhead
             // (see sequential_round) — keep the drivers' accounting equal.
             if !matches!(plan, PassPlan::Dense) {
                 encode_seconds += straggler;
+                journal::record(Phase::Encode, round, ALL, ALL, span_t);
             }
             let outcome = {
                 let msgs = RankMessages::new(&encs);
+                let span_t = journal::start();
                 let t0 = Instant::now();
                 let outcome = match &mut via {
                     ReduceVia::Pool => {
@@ -1166,6 +1193,7 @@ impl RoundEngine {
                     ReduceVia::External(red) => comp.reduce(&msgs, &plan, ctx, &mut **red),
                 };
                 let dt = t0.elapsed().as_secs_f64();
+                journal::record(Phase::Reduce, round, ALL, ALL, span_t);
                 reduce_total += dt;
                 if edge_decode {
                     leader_seconds += dt;
@@ -1182,9 +1210,11 @@ impl RoundEngine {
                 PassOutcome::Next(next) => plan = next,
             }
         }
+        let span_t = journal::start();
         let t1 = Instant::now();
         let mut result = comp.decode(ctx, arena);
         leader_seconds += t1.elapsed().as_secs_f64();
+        journal::record(Phase::Decode, round, ALL, ALL, span_t);
         result.encode_seconds = encode_seconds;
         result.reduce_seconds = reduce_total;
         result.decode_seconds = leader_seconds;

@@ -25,6 +25,7 @@ use crate::collective::InaSwitch;
 use crate::coordinator::{BlockInfo, RoundCtx};
 use crate::scaling::AlphaRule;
 use crate::simd;
+use crate::telemetry;
 use crate::util::Rng;
 
 use std::sync::Arc;
@@ -528,6 +529,7 @@ impl PhasedCompressor for IntSgd {
             self.rule.block_alphas_into(ctx, alphas);
         }
         assert_eq!(self.alphas.len(), self.blocks.len(), "one alpha per block");
+        telemetry::m::ALPHA_BLOCK.set_all(&self.alphas);
         let clip = self.local_clip(ctx.n);
         PassPlan::IntBlocks {
             rounding: self.rounding,
@@ -545,7 +547,7 @@ impl PhasedCompressor for IntSgd {
         &mut self,
         msgs: &RankMessages,
         plan: &PassPlan,
-        _ctx: &RoundCtx,
+        ctx: &RoundCtx,
         red: &mut dyn Reducer,
     ) -> Result<PassOutcome, crate::net::NetError> {
         match plan {
@@ -563,6 +565,17 @@ impl PhasedCompressor for IntSgd {
                     red.sum_ints(msgs, &mut self.sum)?;
                 }
                 self.max_abs_int = simd::max_abs_i64(&self.sum);
+                // clip headroom: |aggregate| against the proved wire bound
+                // n * clip (Lemma 5 — the reason the sum cannot overflow).
+                // A utilization of 1.0 means the clip actually bit.
+                let bound = self.local_clip(ctx.n) * ctx.n as i64;
+                if bound > 0 {
+                    let util = self.max_abs_int as f64 / bound as f64;
+                    telemetry::m::CLIP_UTILIZATION.set(util);
+                    if self.max_abs_int >= bound {
+                        telemetry::m::CLIP_SATURATED_ROUNDS.inc();
+                    }
+                }
             }
             _ => unreachable!("IntSgd planned no such pass"),
         }

@@ -27,6 +27,7 @@
 
 pub mod net_driver;
 pub mod pjrt_worker;
+pub mod trace_cmd;
 pub mod worker;
 
 pub use pjrt_worker::{BatchSpec, PjrtEvaluator, PjrtWorker};
@@ -37,6 +38,7 @@ use crate::net::NetError;
 use crate::netsim::{Network, RoundBreakdown};
 use crate::optim::Sgd;
 use crate::runtime::Checkpoint;
+use crate::telemetry;
 use crate::util::stats::l2_diff_norm_sq;
 
 /// Per-parameter-block geometry handed to scaling rules (Alg. 2).
@@ -341,13 +343,22 @@ impl Coordinator {
         let d = self.params.len();
         let round = st.next_round;
         let lr = cfg.schedule.lr_at(round);
+        let round_t0 = telemetry::journal::start();
 
         let (result, losses, compute_seconds, n) = loop {
             let n = pool.workers();
 
             // 1. broadcast params, collect worker gradients (threads)
+            let compute_t0 = telemetry::journal::start();
             let (grads, losses, compute_seconds) =
                 pool.compute_round(&self.params, round);
+            telemetry::journal::record(
+                telemetry::Phase::Compute,
+                round as u32,
+                telemetry::ALL,
+                telemetry::ALL,
+                compute_t0,
+            );
 
             // 2. compress + aggregate: encode back on the worker
             //    threads, reduce + decode on the leader. The blocks
@@ -377,6 +388,7 @@ impl Coordinator {
                 Ok(result) => break (result, losses, compute_seconds, n),
                 Err(e) if e.is_peer_dead() && e.rank() < n && n > 1 => {
                     let dead = e.rank();
+                    telemetry::m::FAILOVERS.inc();
                     st.failovers.push((round, dead));
                     if let Some(o) = obs.as_deref_mut() {
                         o.on_failover(round, dead);
@@ -419,10 +431,31 @@ impl Coordinator {
             overhead_seconds: result.encode_seconds + result.decode_seconds,
             comm_seconds,
         };
+        // feed the static registry — every driver, observer or not
+        telemetry::observe_round(&telemetry::RoundStats {
+            train_loss: record.train_loss,
+            alpha: record.alpha,
+            wire_bytes_per_worker: record.wire_bytes_per_worker,
+            d,
+            n,
+            encode_seconds: result.encode_seconds,
+            reduce_seconds: result.reduce_seconds,
+            decode_seconds: result.decode_seconds,
+        });
+        telemetry::journal::record(
+            telemetry::Phase::Round,
+            round as u32,
+            telemetry::ALL,
+            telemetry::ALL,
+            round_t0,
+        );
         // drain the per-round wire measure unconditionally: an observer
         // attached mid-run must see THIS round's wire time, not the
         // accumulated backlog of every unobserved round before it
         let wire = red.as_mut().and_then(|r| r.take_wire_measure());
+        if let Some((measured, _)) = wire {
+            telemetry::m::COMM_SECONDS.record_secs(measured);
+        }
         if let Some(o) = obs.as_deref_mut() {
             // measured wire time + retries when the reduce ran over a
             // real transport, the modeled comm cost otherwise

@@ -30,16 +30,19 @@
 //! | `fault.drop` / `fault.dup` / `fault.corrupt` / `fault.truncate` / `fault.delay` | 0 | per-frame fault probabilities (seeded, deterministic) |
 //! | `fault.seed` | `seed` | fault-stream seed |
 //! | `fault.kill_rank` + `fault.kill_round` | off | kill that rank at that collective round: the run fails over to the survivors and keeps training |
+//! | `telemetry.trace_path` | off | write the phase-span journal as a Chrome `chrome://tracing` trace when the run finishes |
+//! | `telemetry.listen` | off | serve the Prometheus text endpoint on this address (e.g. `127.0.0.1:0`) for the life of the run |
 
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use crate::api::{
-    Backend, CompressorSpec, FaultSpec, ModelSpec, Pipeline, RoundBreakdown,
-    RoundObserver, RoundRecord, Session, SourceFactory, StagedAlgo,
+    Backend, CompressorSpec, FaultSpec, ModelSpec, Pipeline, Session, SourceFactory,
+    StagedAlgo,
 };
 use crate::config::Config;
+use crate::telemetry::TelemetrySink;
 use crate::util::Rng;
 
 use super::{GradientSource, WorkerPool};
@@ -101,7 +104,7 @@ pub fn quad_pool(n: usize, d: usize, seed: u64, noise: f32) -> WorkerPool {
 /// A malformed `fault.kill_rank` is a typed error, not a silently
 /// different experiment; range/world checks happen at `build()`.
 /// `job_seed` is the default fault-stream seed (the legacy contract).
-fn fault_spec(cfg: &Config, job_seed: u64) -> Result<Option<FaultSpec>> {
+pub(crate) fn fault_spec(cfg: &Config, job_seed: u64) -> Result<Option<FaultSpec>> {
     let spec = FaultSpec {
         seed: Some(cfg.parsed_or("fault.seed", job_seed)?),
         drop: cfg.parsed_or("fault.drop", 0.0)?,
@@ -122,54 +125,9 @@ fn fault_spec(cfg: &Config, job_seed: u64) -> Result<Option<FaultSpec>> {
     Ok(spec.is_chaotic().then_some(spec))
 }
 
-/// Streams the training phase: accumulates measured wire time + retries
-/// from the per-round breakdown and reports failovers as they happen.
-#[derive(Default)]
-struct WireWatcher {
-    measured: f64,
-    retries: u64,
-    /// Modeled integer-round comm, skipping the exact fp32 round 0 (the
-    /// measured-vs-modeled ratio is about the integer wire).
-    modeled_int: f64,
-}
-
-impl RoundObserver for WireWatcher {
-    fn on_round(&mut self, rec: &RoundRecord, b: &RoundBreakdown) {
-        self.measured += b.comm_measured;
-        self.retries += b.comm_retries;
-        if rec.round >= 1 {
-            self.modeled_int += rec.comm_seconds;
-        }
-    }
-
-    fn on_failover(&mut self, round: usize, rank: usize) {
-        println!("  FAILOVER: rank {rank} died in round {round}; world shrank and trained on");
-    }
-}
-
-/// Prints the per-round measured-vs-modeled table rows.
-struct BreakdownPrinter {
-    k: usize,
-}
-
-impl RoundObserver for BreakdownPrinter {
-    fn on_round(&mut self, _rec: &RoundRecord, b: &RoundBreakdown) {
-        println!(
-            "  {:<8} {:>12.6} {:>12.6} {:>12.6} {:>14.6} {:>14.6} {:>8}",
-            self.k, b.encode, b.reduce, b.decode, b.comm_model, b.comm_measured,
-            b.comm_retries
-        );
-        self.k += 1;
-    }
-}
-
-pub fn run(cfg: &Config) -> Result<()> {
-    let n = cfg.parsed_or("workers", 4usize)?;
-    let d = cfg.parsed_or("d", 1usize << 16)?;
-    let rounds = cfg.parsed_or("rounds", 20usize)?;
-    let lr = cfg.parsed_or("lr", 0.2f32)?;
-    let seed = cfg.parsed_or("seed", 100u64)?;
-    let algo = match cfg.str_or("algo", "ring") {
+/// `algo=` knob (shared with `repro trace`).
+pub(crate) fn staged_algo(cfg: &Config) -> Result<StagedAlgo> {
+    Ok(match cfg.str_or("algo", "ring") {
         "ring" => StagedAlgo::Ring,
         "halving" => StagedAlgo::Halving,
         "two-level" => StagedAlgo::TwoLevel {
@@ -180,17 +138,40 @@ pub fn run(cfg: &Config) -> Result<()> {
                 "unknown staged algo {other:?} (ring|halving|two-level)"
             ))
         }
-    };
-    let pipeline = match cfg.str_or("pipeline", "barrier") {
-        "barrier" => Pipeline::Barrier,
-        "streamed" => Pipeline::Streamed,
-        other => return Err(anyhow!("unknown pipeline {other:?} (barrier|streamed)")),
-    };
-    let (backend, label) = match cfg.str_or("transport", "tcp") {
-        "tcp" => (Backend::Tcp { algo }, "tcp-loopback"),
-        "channel" => (Backend::Channel { algo }, "in-proc channels"),
-        other => return Err(anyhow!("unknown transport {other:?} (tcp|channel)")),
-    };
+    })
+}
+
+/// `pipeline=` knob (shared with `repro trace`, which defaults streamed).
+pub(crate) fn pipeline_knob(cfg: &Config, default: &str) -> Result<Pipeline> {
+    match cfg.str_or("pipeline", default) {
+        "barrier" => Ok(Pipeline::Barrier),
+        "streamed" => Ok(Pipeline::Streamed),
+        other => Err(anyhow!("unknown pipeline {other:?} (barrier|streamed)")),
+    }
+}
+
+/// `transport=` knob (shared with `repro trace`, which defaults channel).
+pub(crate) fn transport_knob(
+    cfg: &Config,
+    default: &str,
+    algo: StagedAlgo,
+) -> Result<(Backend, &'static str)> {
+    match cfg.str_or("transport", default) {
+        "tcp" => Ok((Backend::Tcp { algo }, "tcp-loopback")),
+        "channel" => Ok((Backend::Channel { algo }, "in-proc channels")),
+        other => Err(anyhow!("unknown transport {other:?} (tcp|channel)")),
+    }
+}
+
+pub fn run(cfg: &Config) -> Result<()> {
+    let n = cfg.parsed_or("workers", 4usize)?;
+    let d = cfg.parsed_or("d", 1usize << 16)?;
+    let rounds = cfg.parsed_or("rounds", 20usize)?;
+    let lr = cfg.parsed_or("lr", 0.2f32)?;
+    let seed = cfg.parsed_or("seed", 100u64)?;
+    let algo = staged_algo(cfg)?;
+    let pipeline = pipeline_knob(cfg, "barrier")?;
+    let (backend, label) = transport_knob(cfg, "tcp", algo)?;
     let faults = fault_spec(cfg, seed)?;
     let chaos = faults.is_some();
 
@@ -211,6 +192,12 @@ pub fn run(cfg: &Config) -> Result<()> {
     if let Some(f) = faults {
         builder = builder.faults(f);
     }
+    if let Some(path) = cfg.get("telemetry.trace_path") {
+        builder = builder.trace_path(path);
+    }
+    if let Some(addr) = cfg.get("telemetry.listen") {
+        builder = builder.metrics_listen(addr);
+    }
     let mut session = builder.build()?;
 
     println!(
@@ -218,8 +205,11 @@ pub fn run(cfg: &Config) -> Result<()> {
         session.algorithm(),
         if chaos { "+faults" } else { "" },
     );
-    let mut watch = WireWatcher::default();
-    session.run_observed(rounds, &mut watch)?;
+    if let Some(addr) = session.metrics_addr() {
+        println!("  metrics: http://{addr}/metrics");
+    }
+    let mut sink = TelemetrySink::new();
+    session.run_observed(rounds, &mut sink)?;
 
     let records = session.records();
     let first = records.first().map(|r| r.train_loss).unwrap_or(f64::NAN);
@@ -228,14 +218,14 @@ pub fn run(cfg: &Config) -> Result<()> {
     println!(
         "  train loss {first:.4} -> {last:.4}; {} staged collectives \
          (last wire {:?}, {} retried attempts, {} stale frames skipped)",
-        stats.collectives, stats.last_wire, watch.retries, stats.stale_skipped,
+        stats.collectives, stats.last_wire, sink.retries(), stats.stale_skipped,
     );
     println!(
         "  integer-round wire time: measured {:.3} ms, modeled {:.3} ms \
          (ratio {:.2})",
-        watch.measured * 1e3,
-        watch.modeled_int * 1e3,
-        watch.measured / watch.modeled_int.max(1e-12)
+        sink.measured() * 1e3,
+        sink.modeled_int() * 1e3,
+        sink.measured() / sink.modeled_int().max(1e-12)
     );
     if last.is_nan() || last >= first {
         return Err(anyhow!(
@@ -246,12 +236,8 @@ pub fn run(cfg: &Config) -> Result<()> {
     // a few more observed rounds: the per-round measured-vs-modeled
     // breakdown table (at the post-failover world size, if a rank died)
     println!("\n  round breakdown (seconds measured on this machine):");
-    println!(
-        "  {:<8} {:>12} {:>12} {:>12} {:>14} {:>14} {:>8}",
-        "round", "encode", "reduce", "decode", "comm_model", "comm_measured", "retries"
-    );
-    let mut printer = BreakdownPrinter { k: 0 };
-    session.run_observed(3, &mut printer)?;
+    sink.begin_table();
+    session.run_observed(3, &mut sink)?;
     session.finish();
     Ok(())
 }
@@ -275,7 +261,10 @@ mod tests {
     #[test]
     fn net_bench_streamed_two_level_runs_end_to_end() {
         // the streamed pipeline + hierarchical collective, over in-proc
-        // channels: the full knob path of the overlap benchmarks
+        // channels, with the telemetry knobs on: the full knob path of
+        // the overlap benchmarks, ending in a parseable Chrome trace
+        let trace = std::env::temp_dir()
+            .join(format!("intsgd_netbench_trace_{}.json", std::process::id()));
         let mut cfg = Config::new();
         for kv in [
             "transport=channel",
@@ -285,10 +274,15 @@ mod tests {
             "algo=two-level",
             "hierarchy.group_size=2",
             "pipeline=streamed",
+            "telemetry.listen=127.0.0.1:0",
         ] {
             cfg.set_kv(kv).unwrap();
         }
+        cfg.set_kv(&format!("telemetry.trace_path={}", trace.display())).unwrap();
         run(&cfg).expect("streamed two-level net-bench");
+        let text = std::fs::read_to_string(&trace).expect("trace written");
+        crate::util::json::Json::parse(&text).expect("trace is valid JSON");
+        let _ = std::fs::remove_file(&trace);
     }
 
     #[test]

@@ -1,0 +1,147 @@
+//! `repro trace` — a short traced training run: every phase span
+//! (encode / reduce / drain / decode, per block and rank) lands in the
+//! telemetry journal and is written out as a Chrome `chrome://tracing`
+//! trace, so the streamed pipeline's encode-over-wire overlap is visible
+//! as overlapping bars instead of a number in a table.
+//!
+//!   repro trace out=trace.json pipeline=streamed rounds=12
+//!
+//! Defaults differ from `net-bench` where tracing wants them to: the
+//! transport is `channel` (deterministic, no sockets needed to see the
+//! schedule) and the pipeline is `streamed` (the overlap is the point).
+//! All `net-bench` knobs are accepted (validated against
+//! `api::keys::TRACE`), plus:
+//!
+//! | key | default | meaning |
+//! |-----|---------|---------|
+//! | `out` | `trace.json` | trace output path (alias of `telemetry.trace_path`, which wins if both are set) |
+//! | `serve_ms` | 0 | keep the Prometheus endpoint up this long after the run (needs `telemetry.listen`) |
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::api::{CompressorSpec, ModelSpec, Session};
+use crate::config::Config;
+use crate::telemetry::{self, TelemetrySink};
+
+use super::net_driver::{fault_spec, pipeline_knob, quad_factories, staged_algo, transport_knob};
+
+pub fn run(cfg: &Config) -> Result<()> {
+    let n = cfg.parsed_or("workers", 4usize)?;
+    let d = cfg.parsed_or("d", 1usize << 14)?;
+    let rounds = cfg.parsed_or("rounds", 12usize)?;
+    let lr = cfg.parsed_or("lr", 0.2f32)?;
+    let seed = cfg.parsed_or("seed", 100u64)?;
+    let algo = staged_algo(cfg)?;
+    let pipeline = pipeline_knob(cfg, "streamed")?;
+    let (backend, label) = transport_knob(cfg, "channel", algo)?;
+    let out = cfg
+        .get("telemetry.trace_path")
+        .unwrap_or_else(|| cfg.str_or("out", "trace.json"))
+        .to_string();
+    let faults = fault_spec(cfg, seed)?;
+
+    let mut builder = Session::builder()
+        .world(n)
+        .model(ModelSpec::flat(d))
+        .sources(quad_factories(n, d, seed, 0.01))
+        .compressor(CompressorSpec::parse("intsgd_random8")?)
+        .seed(seed ^ 0x5EED)
+        .lr(lr)
+        .backend(backend)
+        .pipeline(pipeline)
+        .net_timeout(Duration::from_millis(cfg.parsed_or(
+            "net.timeout_ms",
+            crate::net::default_io_timeout().as_millis() as u64,
+        )?))
+        .net_retries(cfg.parsed_or("net.retries", 8usize)?)
+        .trace_path(out.clone());
+    if let Some(f) = faults {
+        builder = builder.faults(f);
+    }
+    if let Some(addr) = cfg.get("telemetry.listen") {
+        builder = builder.metrics_listen(addr);
+    }
+    let mut session = builder.build()?;
+
+    println!(
+        "trace: {} over {label} ({algo:?}, {pipeline:?}), n = {n}, d = {d}, \
+         {rounds} rounds -> {out}",
+        session.algorithm(),
+    );
+    if let Some(addr) = session.metrics_addr() {
+        println!("  metrics: http://{addr}/metrics");
+    }
+    let mut sink = TelemetrySink::new();
+    session.run_observed(rounds, &mut sink)?;
+    // write before any serve window so the file exists while scraping
+    session.write_trace()?;
+    println!(
+        "  {} phase spans journaled; wire time measured {:.3} ms \
+         (open the trace in chrome://tracing or ui.perfetto.dev)",
+        telemetry::journal::snapshot().len(),
+        sink.measured() * 1e3,
+    );
+
+    let serve_ms = cfg.parsed_or("serve_ms", 0u64)?;
+    if serve_ms > 0 {
+        if session.metrics_addr().is_none() {
+            return Err(anyhow!("serve_ms needs telemetry.listen=<addr>"));
+        }
+        println!("  serving metrics for {serve_ms} ms ...");
+        std::thread::sleep(Duration::from_millis(serve_ms));
+    }
+    session.finish();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn trace_cmd_writes_a_parseable_trace_with_phase_events() {
+        let out = std::env::temp_dir()
+            .join(format!("intsgd_trace_cmd_{}.json", std::process::id()));
+        let mut cfg = Config::new();
+        for kv in ["workers=3", "d=768", "rounds=6", "serve_ms=0"] {
+            cfg.set_kv(kv).unwrap();
+        }
+        cfg.set_kv(&format!("out={}", out.display())).unwrap();
+        run(&cfg).expect("trace run");
+
+        let text = std::fs::read_to_string(&out).expect("trace written");
+        let json = Json::parse(&text).expect("valid JSON");
+        let events = json
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .expect("traceEvents array");
+        // the journal is process-global, so other tests may contribute
+        // events too — assert presence, not exact counts
+        let has = |name: &str| {
+            events.iter().any(|e| {
+                e.get("name").and_then(Json::as_str).is_some_and(|s| s.starts_with(name))
+            })
+        };
+        assert!(has("round"), "no round spans in trace");
+        assert!(has("reduce"), "no reduce spans in trace");
+        assert!(has("encode"), "no encode spans in trace");
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn serve_without_listen_is_a_typed_error() {
+        let out = std::env::temp_dir()
+            .join(format!("intsgd_trace_cmd_err_{}.json", std::process::id()));
+        let mut cfg = Config::new();
+        for kv in ["workers=2", "d=64", "rounds=2", "serve_ms=5"] {
+            cfg.set_kv(kv).unwrap();
+        }
+        cfg.set_kv(&format!("out={}", out.display())).unwrap();
+        let err = run(&cfg).unwrap_err().to_string();
+        assert!(err.contains("telemetry.listen"), "{err}");
+        let _ = std::fs::remove_file(&out);
+    }
+}

@@ -35,4 +35,5 @@ pub mod optim;
 pub mod runtime;
 pub mod scaling;
 pub mod simd;
+pub mod telemetry;
 pub mod util;

@@ -23,11 +23,21 @@ USAGE:
   repro net-bench [key=value ...] [--config file]  IntSGD rounds over a
         real transport (transport=tcp|channel algo=ring|halving
         workers=... d=... rounds=...), measured-vs-modeled wire time
+  repro trace [key=value ...] [--config file]      traced run: phase spans
+        (encode/reduce/drain/decode per block) -> Chrome trace
+        (out=trace.json pipeline=streamed telemetry.listen=127.0.0.1:0
+         serve_ms=...); net-bench also takes telemetry.trace_path/.listen
   repro list                                       list experiments
   repro artifacts                                  show artifact manifest
 
-Experiments write results/<id>*.csv; see DESIGN.md §4 for the index and
-§8 for the Session API the subcommands drive.
+ENV:
+  INTSGD_NET_TIMEOUT_MS   default blocking-IO deadline for transport
+                          backends (the net.timeout_ms knob overrides)
+  INTSGD_FORCE_SCALAR     set to 1 to pin the scalar encode/reduce kernels
+                          (bit-parity debugging for the simd feature)
+
+Experiments write results/<id>*.csv; see DESIGN.md §4 for the index,
+§8 for the Session API the subcommands drive, and §11 for telemetry.
 ";
 
 /// The one `--config file` / `key=value` parser every subcommand shares.
@@ -67,6 +77,11 @@ fn main() -> Result<()> {
             let cfg = cli_config(&args[1..])?;
             cfg.validate_keys(api::keys::NET)?;
             intsgd::coordinator::net_driver::run(&cfg)
+        }
+        Some("trace") => {
+            let cfg = cli_config(&args[1..])?;
+            cfg.validate_keys(api::keys::TRACE)?;
+            intsgd::coordinator::trace_cmd::run(&cfg)
         }
         Some("list") => {
             for (id, desc) in intsgd::experiments::list() {

@@ -42,6 +42,14 @@ impl Csv {
     }
 }
 
+impl Drop for Csv {
+    /// `BufWriter` flushes on drop but swallows the error; a driver that
+    /// early-returns between rows still gets its partial CSV on disk.
+    fn drop(&mut self) {
+        let _ = self.w.flush();
+    }
+}
+
 /// Format seconds as milliseconds with 2 decimals (the paper's unit).
 pub fn ms(seconds: f64) -> String {
     format!("{:.2}", seconds * 1e3)
@@ -81,6 +89,20 @@ mod tests {
         let dir = std::env::temp_dir().join("intsgd_test_metrics2");
         let mut c = Csv::create(dir.join("t.csv"), &["a", "b"]).unwrap();
         let _ = c.row(&["only one".into()]);
+    }
+
+    #[test]
+    fn drop_flushes_unflushed_rows() {
+        let dir = std::env::temp_dir().join("intsgd_test_metrics3");
+        let path = dir.join("t.csv");
+        {
+            let mut c = Csv::create(&path, &["a"]).unwrap();
+            c.rowf(&[7.0]).unwrap();
+            // no explicit flush: Drop must push the row to disk
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a\n7\n");
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

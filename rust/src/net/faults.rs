@@ -254,12 +254,15 @@ impl<T: Transport> Transport for FaultTransport<T> {
         let inner = self.inner.as_mut().expect("checked alive above");
         if u < t_drop {
             self.stats.dropped += 1;
+            crate::telemetry::m::FAULTS_INJECTED.inc();
         } else if u < t_dup {
             self.stats.duplicated += 1;
+            crate::telemetry::m::FAULTS_INJECTED.inc();
             inner.send(to, frame)?;
             inner.send(to, frame)?;
         } else if u < t_corrupt {
             self.stats.corrupted += 1;
+            crate::telemetry::m::FAULTS_INJECTED.inc();
             let mut bad = frame.to_vec();
             if !bad.is_empty() {
                 let at = self.rng.usize_below(bad.len());
@@ -269,12 +272,14 @@ impl<T: Transport> Transport for FaultTransport<T> {
             inner.send(to, &bad)?;
         } else if u < t_truncate {
             self.stats.truncated += 1;
+            crate::telemetry::m::FAULTS_INJECTED.inc();
             let keep = self.rng.usize_below(frame.len().max(1));
             inner.send(to, &frame[..keep])?;
         } else if u < t_delay {
             // hold the frame back; it leaves on the NEXT transport op,
             // after whatever that op ships — a reorder within the pair
             self.stats.delayed += 1;
+            crate::telemetry::m::FAULTS_INJECTED.inc();
             self.delayed.push((to, frame.to_vec()));
             self.ops += 1;
             return Ok(());

@@ -48,6 +48,8 @@ use std::time::{Duration, Instant};
 
 use crate::compress::engine::{RankMessages, Reducer};
 use crate::compress::intvec::Lanes;
+use crate::telemetry::journal::{self, Phase};
+use crate::telemetry::m;
 
 use super::staged::{
     halving_allreduce_ints, partial_sum_lanes, ring_allreduce_ints,
@@ -294,6 +296,7 @@ impl<T: Transport> TransportReducer<T> {
                             map,
                             vrank,
                         };
+                        let span_t = journal::start();
                         let r = match algo {
                             StagedAlgo::Ring => ring_allreduce_ints(
                                 &mut t,
@@ -321,6 +324,10 @@ impl<T: Transport> TransportReducer<T> {
                                 &mut state.acc,
                             ),
                         };
+                        // one span per rank leg of the collective — in the
+                        // trace these are the per-rank lanes under the
+                        // leader's reduce span
+                        journal::record(Phase::Reduce, round, block as u16, vrank as u16, span_t);
                         if r.is_err() {
                             // wake every peer blocked on this round
                             abort.store(true, Ordering::Relaxed);
@@ -365,6 +372,7 @@ impl<T: Transport> Reducer for TransportReducer<T> {
         // clipped messages this recovers the aggregate wire type itself.
         let wire = partial_sum_lanes(msgs.iter_ints());
         self.last_wire = Some(wire);
+        m::WIRE_LANE.bump(wire);
 
         let t0 = Instant::now();
         let mut attempts = 0usize;
@@ -375,6 +383,14 @@ impl<T: Transport> Reducer for TransportReducer<T> {
             if errs.is_empty() {
                 break Ok(());
             }
+            for e in &errs {
+                match e {
+                    NetError::Timeout { .. } => m::NET_TIMEOUTS.inc(),
+                    NetError::Replay { .. } => m::NET_REPLAYS.inc(),
+                    NetError::Corrupt { .. } => m::NET_CORRUPT.inc(),
+                    _ => {}
+                }
+            }
             // a dead *member* cannot be retried away: report it for
             // failover. A death notice about a rank outside the current
             // world (stale noise about an already-removed peer) is
@@ -384,6 +400,7 @@ impl<T: Transport> Reducer for TransportReducer<T> {
             }
             attempts += 1;
             self.retries += 1;
+            m::NET_RETRIES.inc();
             if attempts > self.max_retries {
                 break Err(primary_error(errs));
             }
@@ -392,14 +409,17 @@ impl<T: Transport> Reducer for TransportReducer<T> {
         };
         self.wire_seconds += t0.elapsed().as_secs_f64();
         self.calls += 1;
+        m::NET_COLLECTIVES.inc();
         // the block stamp is per-collective: the next caller re-announces
         // its block (or stays on the barrier path's block 0)
         self.block = 0;
-        self.stale_skipped += self
+        let stale: u64 = self
             .ranks
             .iter_mut()
             .map(|state| state.scratch.take_skipped())
-            .sum::<u64>();
+            .sum();
+        self.stale_skipped += stale;
+        m::NET_STALE_FRAMES.add(stale);
         outcome?;
 
         // every rank holds the identical aggregate; rank 0's is the result

@@ -1,0 +1,165 @@
+//! Chrome trace-event exporter: renders the span journal as the JSON
+//! the `chrome://tracing` / Perfetto UI loads, so streamed-vs-barrier
+//! overlap is *visible* — encode spans for block k+1 drawn on top of the
+//! wire span for block k — instead of inferred from summed timings.
+//!
+//! Format: the "JSON object" flavor of the trace-event spec — an object
+//! with a `traceEvents` array of `"ph":"X"` complete events (`ts`/`dur`
+//! in microseconds) plus `"ph":"M"` `thread_name` metadata rows naming
+//! the lanes.
+//!
+//! Lane (tid) scheme: leader-side spans (`rank == ALL`) land on one lane
+//! per phase (tid = the [`Phase`] discriminant), so the round/encode/
+//! reduce/drain/decode rows stack like a flame graph; rank-attributed
+//! spans (per-rank collective legs) land on `tid = 16 + rank`, one lane
+//! per rank, below the leader lanes.
+//!
+//! Determinism: events are sorted by `(start_ns, phase, block, rank,
+//! round)` and timestamps are formatted from integer nanoseconds
+//! (`ts`/`dur` strings are `ns/1000 . ns%1000` — no float formatting),
+//! so identical journals render byte-identical files; the golden test
+//! pins exactly that.
+
+use std::fmt::Write as _;
+
+use super::journal::{Phase, SpanEvent, ALL};
+
+/// First rank lane; leaves room for the six phase lanes plus headroom.
+const RANK_LANE_BASE: u32 = 16;
+
+fn lane(ev: &SpanEvent) -> u32 {
+    if ev.rank == ALL {
+        ev.phase as u32
+    } else {
+        RANK_LANE_BASE + ev.rank as u32
+    }
+}
+
+/// Microseconds with fixed 3-decimal nanosecond precision, formatted
+/// from integers (deterministic across platforms).
+fn micros(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1_000, ns % 1_000)
+}
+
+fn event_name(ev: &SpanEvent) -> String {
+    if ev.block == ALL {
+        ev.phase.name().to_string()
+    } else {
+        format!("{} b{}", ev.phase.name(), ev.block)
+    }
+}
+
+/// Render spans as a complete Chrome trace JSON document. The caller
+/// passes a [`crate::telemetry::journal::snapshot`] (or a hand-built
+/// list, as the golden test does).
+pub fn render(events: &[SpanEvent]) -> String {
+    let mut evs: Vec<&SpanEvent> = events.iter().collect();
+    evs.sort_by_key(|e| (e.start_ns, e.phase, e.block, e.rank, e.round));
+
+    // lanes in use, phase lanes first then ranks ascending
+    let mut lanes: Vec<u32> = evs.iter().map(|e| lane(e)).collect();
+    lanes.sort_unstable();
+    lanes.dedup();
+
+    let mut out = String::with_capacity(64 + 160 * evs.len());
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    let mut first = true;
+    for tid in &lanes {
+        let name = if *tid < RANK_LANE_BASE {
+            match *tid {
+                0 => "round".to_string(),
+                1 => "compute".to_string(),
+                2 => "encode".to_string(),
+                3 => "reduce".to_string(),
+                4 => "drain".to_string(),
+                _ => "decode".to_string(),
+            }
+        } else {
+            format!("rank {}", tid - RANK_LANE_BASE)
+        };
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(
+            out,
+            "{{\"ph\":\"M\",\"pid\":0,\"tid\":{tid},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":\"{name}\"}}}}"
+        );
+    }
+    for ev in &evs {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(
+            out,
+            "{{\"ph\":\"X\",\"pid\":0,\"tid\":{tid},\"name\":\"{name}\",\
+             \"cat\":\"{cat}\",\"ts\":{ts},\"dur\":{dur},\
+             \"args\":{{\"round\":{round},\"block\":{block},\"rank\":{rank}}}}}",
+            tid = lane(ev),
+            name = event_name(ev),
+            cat = ev.phase.name(),
+            ts = micros(ev.start_ns),
+            dur = micros(ev.dur_ns),
+            round = ev.round,
+            block = ev.block as i64,
+            rank = ev.rank as i64,
+        );
+    }
+    out.push_str("]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn span(phase: Phase, start: u64, dur: u64, block: u16, rank: u16) -> SpanEvent {
+        SpanEvent { start_ns: start, dur_ns: dur, round: 3, phase, block, rank }
+    }
+
+    #[test]
+    fn render_is_valid_json_with_sorted_events() {
+        let events = vec![
+            span(Phase::Decode, 9_000, 500, ALL, ALL),
+            span(Phase::Encode, 1_000, 2_500, 0, ALL),
+            span(Phase::Reduce, 3_500, 4_000, 0, ALL),
+            span(Phase::Reduce, 3_600, 3_000, 0, 1),
+        ];
+        let text = render(&events);
+        let doc = Json::parse(&text).expect("exporter must emit valid JSON");
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // 4 lanes in use (encode/reduce/decode + rank 1) -> 4 metadata
+        // rows, then the 4 spans sorted by start time
+        assert_eq!(evs.len(), 8);
+        let xs: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .collect();
+        let starts: Vec<f64> =
+            xs.iter().map(|e| e.get("ts").and_then(Json::as_f64).unwrap()).collect();
+        assert_eq!(starts, vec![1.0, 3.5, 3.6, 9.0]);
+        // timestamps are integer-formatted us.ns, never float-printed
+        assert!(text.contains("\"ts\":1.000,"), "{text}");
+        assert!(text.contains("\"dur\":2.500,"), "{text}");
+        // leader spans ride the phase lanes; the rank span rides 16+rank
+        let tids: Vec<f64> =
+            xs.iter().map(|e| e.get("tid").and_then(Json::as_f64).unwrap()).collect();
+        assert_eq!(tids, vec![2.0, 3.0, 17.0, 5.0]);
+    }
+
+    #[test]
+    fn identical_journals_render_identical_bytes() {
+        let events = vec![
+            span(Phase::Round, 0, 10_000, ALL, ALL),
+            span(Phase::Encode, 100, 2_000, 1, ALL),
+        ];
+        assert_eq!(render(&events), render(&events));
+        // order of the input list must not matter
+        let mut rev = events.clone();
+        rev.reverse();
+        assert_eq!(render(&events), render(&rev));
+    }
+}

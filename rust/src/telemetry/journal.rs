@@ -1,0 +1,241 @@
+//! The span journal: a fixed-capacity ring buffer of phase spans
+//! (encode / reduce / drain / decode, per round, per block, per rank)
+//! behind a process-global switch.
+//!
+//! Hot-path contract: when the journal is disabled (the default),
+//! [`start`] is one vDSO clock read and [`record`] is one relaxed atomic
+//! load — nothing else. When enabled, [`record`] takes an uncontended
+//! mutex (a futex word on Linux — no allocation) and writes one
+//! [`SpanEvent`] into a ring pre-allocated by [`enable`]; a full ring
+//! overwrites the oldest span and bumps `intsgd_journal_dropped_total`.
+//! Either way the round loop never touches the allocator, which is
+//! exactly what `tests/zero_alloc.rs` pins with the journal switched on.
+//!
+//! Timestamps are nanoseconds since the journal epoch (the first
+//! [`enable`]/[`start`] call), so spans from different threads share one
+//! clock and the Chrome exporter can lay them on a common axis.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use super::registry::m;
+
+/// Which phase of a round a span covers. The discriminants are the
+/// Chrome-trace lane order (see [`crate::telemetry::chrome`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Phase {
+    /// The whole round, wall to wall.
+    Round = 0,
+    /// Worker forward/backward (gradient production).
+    Compute = 1,
+    /// Encode: float gradient -> integer message (straggler span on the
+    /// barrier paths; per-block overlap window on the streamed path).
+    Encode = 2,
+    /// The integer all-reduce (logical collective, retries included).
+    Reduce = 3,
+    /// Streamed-path drain: folding a finished block's aggregate into
+    /// the round sum while later blocks are still on the wire.
+    Drain = 4,
+    /// Leader decode: integer aggregate -> float step.
+    Decode = 5,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Round => "round",
+            Phase::Compute => "compute",
+            Phase::Encode => "encode",
+            Phase::Reduce => "reduce",
+            Phase::Drain => "drain",
+            Phase::Decode => "decode",
+        }
+    }
+}
+
+/// Span scope marker: "not attributable to one rank" / "not one block".
+pub const ALL: u16 = u16::MAX;
+
+/// One recorded phase span. 24 bytes, `Copy` — the ring holds these by
+/// value, so recording never chases a pointer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanEvent {
+    /// Nanoseconds since the journal epoch.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub round: u32,
+    pub phase: Phase,
+    /// Parameter-block index, or [`ALL`] for whole-round spans.
+    pub block: u16,
+    /// Rank the span belongs to, or [`ALL`] for leader-side spans.
+    pub rank: u16,
+}
+
+struct Ring {
+    buf: Vec<SpanEvent>,
+    cap: usize,
+    /// Next write position (wraps).
+    head: usize,
+}
+
+impl Ring {
+    fn push(&mut self, ev: SpanEvent) -> bool {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+            true
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            false
+        }
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static JOURNAL: Mutex<Option<Ring>> = Mutex::new(None);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Default ring capacity: 6 phases x 64 blocks x ~170 rounds of streamed
+/// spans before the ring wraps — plenty for a trace window, bounded for
+/// a long run (~1.5 MiB).
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the journal epoch (monotonic, shared by all
+/// threads). Cheap: one vDSO `clock_gettime`.
+#[inline]
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Switch the journal on with a pre-allocated ring of `capacity` spans.
+/// All allocation happens here, off the hot path; re-enabling keeps the
+/// existing ring if the capacity already matches, else re-allocates.
+pub fn enable(capacity: usize) {
+    assert!(capacity > 0, "journal capacity must be positive");
+    let _ = epoch(); // pin the epoch before the first span
+    let mut guard = JOURNAL.lock().unwrap();
+    let keep = matches!(&*guard, Some(r) if r.cap == capacity);
+    if !keep {
+        *guard = Some(Ring { buf: Vec::with_capacity(capacity), cap: capacity, head: 0 });
+    }
+    drop(guard);
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Stop recording (the ring and its contents are kept for export).
+pub fn disable() {
+    ENABLED.store(false, Ordering::Release);
+}
+
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Timestamp the start of a span. Call unconditionally — it is one clock
+/// read — and hand the result to [`record`] when the phase ends.
+#[inline]
+pub fn start() -> u64 {
+    now_ns()
+}
+
+/// Close a span opened with [`start`] and journal it (no-op while
+/// disabled). `block`/`rank` take [`ALL`] when the span is not scoped to
+/// one block / one rank.
+#[inline]
+pub fn record(phase: Phase, round: u32, block: u16, rank: u16, start_ns: u64) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let dur_ns = now_ns().saturating_sub(start_ns);
+    push(SpanEvent { start_ns, dur_ns, round, phase, block, rank });
+}
+
+/// Journal a fully-formed span (exporter tests and replay tooling; the
+/// engine uses [`record`]).
+pub fn push(ev: SpanEvent) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let mut guard = JOURNAL.lock().unwrap();
+    if let Some(ring) = guard.as_mut() {
+        let fit = ring.push(ev);
+        m::JOURNAL_EVENTS.inc();
+        if !fit {
+            m::JOURNAL_DROPPED.inc();
+        }
+    }
+}
+
+/// Copy out the journal contents in chronological order (oldest first).
+/// Allocates — export path only.
+pub fn snapshot() -> Vec<SpanEvent> {
+    let guard = JOURNAL.lock().unwrap();
+    match &*guard {
+        Some(ring) => {
+            let mut out = Vec::with_capacity(ring.buf.len());
+            out.extend_from_slice(&ring.buf[ring.head..]);
+            out.extend_from_slice(&ring.buf[..ring.head]);
+            out
+        }
+        None => Vec::new(),
+    }
+}
+
+/// Drop every recorded span (the ring's storage is kept).
+pub fn clear() {
+    let mut guard = JOURNAL.lock().unwrap();
+    if let Some(ring) = guard.as_mut() {
+        ring.buf.clear();
+        ring.head = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(start_ns: u64, round: u32) -> SpanEvent {
+        SpanEvent {
+            start_ns,
+            dur_ns: 10,
+            round,
+            phase: Phase::Encode,
+            block: 0,
+            rank: ALL,
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_snapshot_is_chronological() {
+        let mut ring = Ring { buf: Vec::with_capacity(3), cap: 3, head: 0 };
+        assert!(ring.push(ev(1, 1)));
+        assert!(ring.push(ev(2, 2)));
+        assert!(ring.push(ev(3, 3)));
+        // full: the next two pushes evict rounds 1 and 2
+        assert!(!ring.push(ev(4, 4)));
+        assert!(!ring.push(ev(5, 5)));
+        let mut out = Vec::new();
+        out.extend_from_slice(&ring.buf[ring.head..]);
+        out.extend_from_slice(&ring.buf[..ring.head]);
+        let rounds: Vec<u32> = out.iter().map(|e| e.round).collect();
+        assert_eq!(rounds, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn disabled_journal_records_nothing() {
+        // the global switch defaults to off; record/push must be no-ops
+        // (the process-global journal itself is exercised by
+        // tests/telemetry.rs, which owns the enable/clear lifecycle)
+        if is_enabled() {
+            return; // another test in this process enabled it — skip
+        }
+        record(Phase::Round, 0, ALL, ALL, start());
+        assert!(!is_enabled());
+    }
+}

@@ -1,0 +1,78 @@
+//! Observability for every round (DESIGN.md §11): what the parity tests
+//! *assert*, this subsystem lets you *watch* — alpha trajectories, clip
+//! headroom, wire-lane occupancy, bytes per coordinate, retry storms,
+//! and the streamed pipeline's encode/wire overlap — on a live run, with
+//! zero crates and zero hot-path allocations.
+//!
+//! Three layers:
+//!
+//! - [`registry`] — pre-registered static atomics (counters, gauges,
+//!   log2 histograms). The round loop updates them with relaxed atomic
+//!   ops; `tests/zero_alloc.rs` runs with telemetry enabled to pin that
+//!   the instrumented hot path still never allocates.
+//! - [`journal`] — a fixed-capacity ring of phase spans (encode /
+//!   reduce / drain / decode, per round / block / rank), off by default,
+//!   pre-allocated at [`journal::enable`].
+//! - exporters — [`chrome`] renders the journal as `chrome://tracing`
+//!   trace-event JSON (the streamed pipeline's overlap becomes visible
+//!   lanes); [`prom`] renders the registry as Prometheus text format
+//!   0.0.4 and serves it from a `std::net` listener.
+//!
+//! Wiring: `Coordinator::run_round` calls [`observe_round`] once per
+//! completed round (every driver, every backend), the engine drivers and
+//! `TransportReducer` record phase spans and transport counters at their
+//! own seams, and `api::Session` exposes the knobs
+//! (`telemetry.trace_path`, `telemetry.listen`). `repro trace` runs a
+//! traced job from the CLI.
+
+pub mod chrome;
+pub mod journal;
+pub mod prom;
+pub mod registry;
+pub mod sink;
+
+pub use journal::{Phase, SpanEvent, ALL};
+pub use prom::MetricsServer;
+pub use registry::m;
+pub use sink::TelemetrySink;
+
+/// Everything [`observe_round`] folds into the registry after one
+/// completed round. Plain scalars the caller already has — building one
+/// is a stack write, keeping the call zero-alloc.
+pub struct RoundStats {
+    pub train_loss: f64,
+    /// Min per-block alpha (the `RoundRecord` scalar).
+    pub alpha: f64,
+    pub wire_bytes_per_worker: usize,
+    /// Gradient dimension (bytes-per-coordinate denominator).
+    pub d: usize,
+    /// World size this round ran at.
+    pub n: usize,
+    pub encode_seconds: f64,
+    pub reduce_seconds: f64,
+    pub decode_seconds: f64,
+}
+
+/// Fold one completed round into the static registry. Called by
+/// `Coordinator::run_round` for every driver and backend; relaxed atomic
+/// stores only.
+pub fn observe_round(s: &RoundStats) {
+    m::ROUNDS.inc();
+    m::TRAIN_LOSS.set(s.train_loss);
+    m::ALPHA_MIN.set(s.alpha);
+    if s.d > 0 {
+        m::BYTES_PER_COORD.set(s.wire_bytes_per_worker as f64 / s.d as f64);
+    }
+    m::WIRE_BYTES.add(s.wire_bytes_per_worker as u64 * s.n as u64);
+    m::ENCODE_SECONDS.record_secs(s.encode_seconds);
+    m::REDUCE_SECONDS.record_secs(s.reduce_seconds);
+    m::DECODE_SECONDS.record_secs(s.decode_seconds);
+}
+
+/// Export the span journal as a Chrome trace-event JSON file (load it in
+/// `chrome://tracing` or Perfetto). Snapshot + render + write — call it
+/// after the run, not inside it.
+pub fn write_trace(path: &str) -> std::io::Result<()> {
+    let events = journal::snapshot();
+    std::fs::write(path, chrome::render(&events))
+}

@@ -1,0 +1,198 @@
+//! Prometheus text-format exporter: renders the static registry as
+//! exposition format 0.0.4 (`# HELP` / `# TYPE` + samples) and serves it
+//! over a minimal `std::net` HTTP listener — enough for a real
+//! Prometheus scraper or a `curl` in CI, with zero crates.
+//!
+//! Rendering walks [`registry::all`] off the hot path; the hot path only
+//! ever touches the atomics. Histograms are recorded in nanoseconds and
+//! exported in seconds (cumulative `_bucket{le=...}` + `_sum` +
+//! `_count`, per the exposition spec); `le` bounds are the log2 bucket
+//! bounds `2^(i+1) ns`, printed with Rust's `f64` `Display`, which never
+//! uses scientific notation — the output is deterministic.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::registry::{self, Histogram, Metric, HISTOGRAM_BUCKETS};
+
+fn render_histogram(out: &mut String, name: &str, h: &Histogram) {
+    use std::fmt::Write as _;
+    let mut cum = 0u64;
+    for i in 0..HISTOGRAM_BUCKETS {
+        cum += h.bucket(i);
+        let le = Histogram::bucket_bound(i) as f64 / 1e9;
+        let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count());
+    let _ = writeln!(out, "{name}_sum {}", h.sum() as f64 / 1e9);
+    let _ = writeln!(out, "{name}_count {}", h.count());
+}
+
+/// Render every registered instrument as one exposition document.
+pub fn render() -> String {
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(8 * 1024);
+    for def in registry::all() {
+        let kind = match def.metric {
+            Metric::C(_) | Metric::L(_) => "counter",
+            Metric::G(_) | Metric::V(_) => "gauge",
+            Metric::H(_) => "histogram",
+        };
+        // help strings are written as wrapped literals; re-join them
+        let help = def.help.split_whitespace().collect::<Vec<_>>().join(" ");
+        let _ = writeln!(out, "# HELP {} {}", def.name, help);
+        let _ = writeln!(out, "# TYPE {} {}", def.name, kind);
+        match def.metric {
+            Metric::C(c) => {
+                let _ = writeln!(out, "{} {}", def.name, c.get());
+            }
+            Metric::G(g) => {
+                let _ = writeln!(out, "{} {}", def.name, g.get());
+            }
+            Metric::H(h) => render_histogram(&mut out, def.name, h),
+            Metric::V(v) => {
+                for i in 0..v.used() {
+                    let _ = writeln!(out, "{}{{block=\"{i}\"}} {}", def.name, v.get(i));
+                }
+            }
+            Metric::L(l) => {
+                let _ = writeln!(out, "{}{{lane=\"i8\"}} {}", def.name, l.i8.get());
+                let _ = writeln!(out, "{}{{lane=\"i32\"}} {}", def.name, l.i32.get());
+                let _ = writeln!(out, "{}{{lane=\"i64\"}} {}", def.name, l.i64.get());
+            }
+        }
+    }
+    out
+}
+
+/// A one-thread HTTP/1.0 scrape endpoint: every connection gets the
+/// current [`render`] back, whatever the request line says. Binding
+/// `127.0.0.1:0` picks a free port ([`MetricsServer::addr`] reports it).
+/// The listener thread exits on drop.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    pub fn bind(addr: &str) -> io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("intsgd-metrics".into())
+            .spawn(move || serve(listener, &stop2))?;
+        Ok(MetricsServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (with the OS-assigned port when `:0` was asked).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // wake the blocking accept so the thread observes the stop flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve(listener: TcpListener, stop: &AtomicBool) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        if let Ok(mut stream) = conn {
+            let _ = handle_conn(&mut stream);
+        }
+    }
+}
+
+fn handle_conn(stream: &mut TcpStream) -> io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    // drain the request head (best effort — the response is the same for
+    // every path; a scraper that pipelines more than 4 KiB of headers
+    // gets its answer anyway)
+    let mut head = [0u8; 4096];
+    let mut n = 0;
+    while n < head.len() {
+        match stream.read(&mut head[n..]) {
+            Ok(0) => break,
+            Ok(k) => {
+                n += k;
+                if head[..n].windows(4).any(|w| w == b"\r\n\r\n") {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let body = render();
+    let header = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4; \
+         charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(header.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_covers_every_family_with_help_and_type() {
+        let text = render();
+        for def in registry::all() {
+            assert!(
+                text.contains(&format!("# HELP {} ", def.name)),
+                "missing HELP for {}",
+                def.name
+            );
+            assert!(
+                text.contains(&format!("# TYPE {} ", def.name)),
+                "missing TYPE for {}",
+                def.name
+            );
+        }
+        // histograms carry the spec'd sample suffixes
+        assert!(text.contains("intsgd_encode_seconds_bucket{le=\"+Inf\"}"));
+        assert!(text.contains("intsgd_encode_seconds_sum "));
+        assert!(text.contains("intsgd_encode_seconds_count "));
+        // labeled lane family lists all three widths
+        for lane in ["i8", "i32", "i64"] {
+            assert!(text.contains(&format!("intsgd_wire_lane_rounds_total{{lane=\"{lane}\"}}")));
+        }
+        // no float ever renders in scientific notation on a sample line
+        // (help prose may legitimately hyphenate, e.g. "duplicate-frame")
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(!line.contains("e-"), "scientific notation leaked: {line}");
+        }
+    }
+
+    #[test]
+    fn server_answers_a_scrape() {
+        let server = MetricsServer::bind("127.0.0.1:0").expect("bind");
+        let mut conn = TcpStream::connect(server.addr()).expect("connect");
+        conn.write_all(b"GET /metrics HTTP/1.0\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.0 200 OK\r\n"), "{resp}");
+        assert!(resp.contains("text/plain; version=0.0.4"), "{resp}");
+        assert!(resp.contains("intsgd_rounds_total"), "{resp}");
+        drop(server); // the listener thread must join without hanging
+    }
+}

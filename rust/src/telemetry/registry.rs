@@ -1,0 +1,487 @@
+//! The static instrument registry: every metric the system exports is
+//! pre-registered here as a `static` with a `const` constructor, so the
+//! round hot path updates plain atomics — no map lookup, no string
+//! hashing, no heap. The exporters ([`crate::telemetry::prom`],
+//! [`crate::telemetry::chrome`]) iterate [`all`] off the hot path and may
+//! allocate freely.
+//!
+//! Instrument kinds:
+//!
+//! - [`Counter`] — monotone `u64` (`_total` families).
+//! - [`Gauge`] — last-write-wins `f64` (stored as bits in an `AtomicU64`).
+//! - [`Histogram`] — log2-bucketed distribution of `u64` samples
+//!   (durations in nanoseconds, exported in seconds); bucket index is
+//!   `ilog2(value)`, so recording is a shift + two `fetch_add`s.
+//! - [`GaugeVec`] — a fixed block-indexed gauge array (the per-block
+//!   alpha trajectory) with a high-water `used` mark; blocks past
+//!   [`GaugeVec::CAPACITY`] are counted, not stored.
+//! - [`LaneCounters`] — one counter per wire lane (i8/i32/i64), exported
+//!   as a single family with a `lane` label.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::compress::intvec::Lanes;
+
+/// Monotonically increasing event count.
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new() -> Self {
+        Counter { v: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Counter::new()
+    }
+}
+
+/// Last-write-wins scalar (an `f64` stored as bits — one atomic store).
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Gauge { bits: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge::new()
+    }
+}
+
+/// Log2 bucket count: bucket i holds samples with `ilog2(v) == i`, i.e.
+/// `v < 2^(i+1)`. 40 buckets cover 1 ns .. ~18 min — every phase duration
+/// this system can produce.
+pub const HISTOGRAM_BUCKETS: usize = 40;
+
+/// Log2-bucketed histogram of `u64` samples. The recorded unit is
+/// nanoseconds; the Prometheus exporter converts bucket bounds and the
+/// sum to seconds (the metric names carry `_seconds`).
+pub struct Histogram {
+    count: AtomicU64,
+    /// Sum of all recorded samples (ns — u64 holds ~584 years of it).
+    sum: AtomicU64,
+    buckets: [AtomicU64; HISTOGRAM_BUCKETS],
+}
+
+impl Histogram {
+    pub const fn new() -> Self {
+        // `AtomicU64` is not `Copy`; build the array element by element
+        // via the const-friendly `[const { ... }; N]` form
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: [const { AtomicU64::new(0) }; HISTOGRAM_BUCKETS],
+        }
+    }
+
+    /// Record one sample. Two `fetch_add`s and an indexed third — no
+    /// allocation, no lock.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        let idx = (v.max(1).ilog2() as usize).min(HISTOGRAM_BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration given in seconds (stored as nanoseconds).
+    #[inline]
+    pub fn record_secs(&self, secs: f64) {
+        if secs >= 0.0 {
+            self.record((secs * 1e9) as u64);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn bucket(&self, i: usize) -> u64 {
+        self.buckets[i].load(Ordering::Relaxed)
+    }
+
+    /// Upper bound of bucket i in the recorded unit (ns): `2^(i+1)`.
+    pub fn bucket_bound(i: usize) -> u64 {
+        1u64 << (i as u32 + 1).min(63)
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// A fixed-capacity array of gauges indexed by parameter block — the
+/// per-block alpha trajectory. `set_all` records the active block count
+/// as a high-water mark; the exporter emits one labeled sample per slot
+/// in use. Blocks past the capacity update [`GaugeVec::overflowed`]
+/// instead of silently vanishing.
+pub struct GaugeVec {
+    slots: [Gauge; GaugeVec::CAPACITY],
+    used: AtomicUsize,
+    overflow: AtomicU64,
+}
+
+impl GaugeVec {
+    /// Block slots held statically. 64 covers every model layout in the
+    /// repo (the transformer has 13 blocks); larger layouts keep the
+    /// first 64 and count the rest in `overflowed`.
+    pub const CAPACITY: usize = 64;
+
+    pub const fn new() -> Self {
+        GaugeVec {
+            slots: [const { Gauge::new() }; GaugeVec::CAPACITY],
+            used: AtomicUsize::new(0),
+            overflow: AtomicU64::new(0),
+        }
+    }
+
+    /// Store one value per block (zero-alloc: a store per slot).
+    #[inline]
+    pub fn set_all(&self, values: &[f64]) {
+        let n = values.len().min(Self::CAPACITY);
+        for (slot, &v) in self.slots[..n].iter().zip(values) {
+            slot.set(v);
+        }
+        if values.len() > Self::CAPACITY {
+            self.overflow
+                .fetch_add((values.len() - Self::CAPACITY) as u64, Ordering::Relaxed);
+        }
+        self.used.fetch_max(n, Ordering::Relaxed);
+    }
+
+    /// Slots in use (high-water mark across rounds).
+    pub fn used(&self) -> usize {
+        self.used.load(Ordering::Relaxed)
+    }
+
+    pub fn get(&self, i: usize) -> f64 {
+        self.slots[i].get()
+    }
+
+    /// Values that had no slot (layouts wider than the capacity).
+    pub fn overflowed(&self) -> u64 {
+        self.overflow.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for GaugeVec {
+    fn default() -> Self {
+        GaugeVec::new()
+    }
+}
+
+/// One counter per wire lane — how often each integer width carried a
+/// collective's partial sums (`TransportReducer`'s `partial_sum_lanes`
+/// choice, the byte count the paper's all-reduce argument is about).
+pub struct LaneCounters {
+    pub i8: Counter,
+    pub i32: Counter,
+    pub i64: Counter,
+}
+
+impl LaneCounters {
+    pub const fn new() -> Self {
+        LaneCounters { i8: Counter::new(), i32: Counter::new(), i64: Counter::new() }
+    }
+
+    #[inline]
+    pub fn bump(&self, lanes: Lanes) {
+        match lanes {
+            Lanes::I8 => self.i8.inc(),
+            Lanes::I32 => self.i32.inc(),
+            Lanes::I64 => self.i64.inc(),
+        }
+    }
+}
+
+impl Default for LaneCounters {
+    fn default() -> Self {
+        LaneCounters::new()
+    }
+}
+
+/// The pre-registered instruments, grouped for call-site readability:
+/// `m::ROUNDS.inc()` reads like the metric name it feeds.
+pub mod m {
+    use super::{Counter, Gauge, GaugeVec, Histogram, LaneCounters};
+
+    // -- round progress --------------------------------------------------
+    pub static ROUNDS: Counter = Counter::new();
+    pub static FAILOVERS: Counter = Counter::new();
+    pub static TRAIN_LOSS: Gauge = Gauge::new();
+
+    // -- IntSGD instruments (paper-specific) -----------------------------
+    /// Per-block alpha gauge (Alg. 2 trajectory), labeled `block="i"`.
+    pub static ALPHA_BLOCK: GaugeVec = GaugeVec::new();
+    /// min over blocks — the round's `RoundRecord::alpha`.
+    pub static ALPHA_MIN: Gauge = Gauge::new();
+    /// `max|sum|` over the aggregate relative to the proved wire bound
+    /// `n*clip` — 1.0 means the clip actually bit this round.
+    pub static CLIP_UTILIZATION: Gauge = Gauge::new();
+    pub static CLIP_SATURATED_ROUNDS: Counter = Counter::new();
+
+    // -- wire accounting -------------------------------------------------
+    /// Per-worker payload bytes divided by the gradient dimension — the
+    /// headline "1 byte per coordinate" number, per round.
+    pub static BYTES_PER_COORD: Gauge = Gauge::new();
+    /// Total payload bytes shipped (per-worker bytes × world size).
+    pub static WIRE_BYTES: Counter = Counter::new();
+    pub static WIRE_LANE: LaneCounters = LaneCounters::new();
+
+    // -- phase durations -------------------------------------------------
+    pub static ENCODE_SECONDS: Histogram = Histogram::new();
+    pub static REDUCE_SECONDS: Histogram = Histogram::new();
+    pub static DECODE_SECONDS: Histogram = Histogram::new();
+    /// Measured wall-clock inside staged collectives, per round
+    /// (transport backends only).
+    pub static COMM_SECONDS: Histogram = Histogram::new();
+
+    // -- transport health (fed from TransportReducer / FaultTransport) ---
+    pub static NET_COLLECTIVES: Counter = Counter::new();
+    pub static NET_RETRIES: Counter = Counter::new();
+    pub static NET_TIMEOUTS: Counter = Counter::new();
+    pub static NET_REPLAYS: Counter = Counter::new();
+    pub static NET_CORRUPT: Counter = Counter::new();
+    pub static NET_STALE_FRAMES: Counter = Counter::new();
+    pub static FAULTS_INJECTED: Counter = Counter::new();
+
+    // -- the journal's own health ----------------------------------------
+    pub static JOURNAL_EVENTS: Counter = Counter::new();
+    pub static JOURNAL_DROPPED: Counter = Counter::new();
+}
+
+/// A registered metric, as the exporters see it.
+pub enum Metric {
+    C(&'static Counter),
+    G(&'static Gauge),
+    H(&'static Histogram),
+    V(&'static GaugeVec),
+    L(&'static LaneCounters),
+}
+
+pub struct Def {
+    /// Prometheus family name (`intsgd_` prefixed, `_total` on counters).
+    pub name: &'static str,
+    pub help: &'static str,
+    pub metric: Metric,
+}
+
+/// Every instrument, in export order. Adding an instrument = one static
+/// in [`m`] plus one row here; the scrape test pins that the two stay in
+/// sync by asserting the family list.
+pub fn all() -> &'static [Def] {
+    use Metric::{C, G, H, L, V};
+    static DEFS: &[Def] = &[
+        Def {
+            name: "intsgd_rounds_total",
+            help: "Completed training rounds.",
+            metric: C(&m::ROUNDS),
+        },
+        Def {
+            name: "intsgd_failovers_total",
+            help: "World shrinks after a permanent rank death.",
+            metric: C(&m::FAILOVERS),
+        },
+        Def {
+            name: "intsgd_train_loss",
+            help: "Mean worker training loss of the last round.",
+            metric: G(&m::TRAIN_LOSS),
+        },
+        Def {
+            name: "intsgd_alpha",
+            help: "Per-block IntSGD scaling alpha (Alg. 2), last round.",
+            metric: V(&m::ALPHA_BLOCK),
+        },
+        Def {
+            name: "intsgd_alpha_min",
+            help: "Min alpha over blocks, last round.",
+            metric: G(&m::ALPHA_MIN),
+        },
+        Def {
+            name: "intsgd_clip_utilization",
+            help: "max|aggregate| over the proved wire bound n*clip, last \
+                   integer round (1.0 = the clip saturated).",
+            metric: G(&m::CLIP_UTILIZATION),
+        },
+        Def {
+            name: "intsgd_clip_saturated_rounds_total",
+            help: "Integer rounds whose aggregate reached the clip bound.",
+            metric: C(&m::CLIP_SATURATED_ROUNDS),
+        },
+        Def {
+            name: "intsgd_wire_bytes_per_coord",
+            help: "Per-worker payload bytes / gradient dimension, last round.",
+            metric: G(&m::BYTES_PER_COORD),
+        },
+        Def {
+            name: "intsgd_wire_bytes_total",
+            help: "Total payload bytes shipped (per-worker bytes x world).",
+            metric: C(&m::WIRE_BYTES),
+        },
+        Def {
+            name: "intsgd_wire_lane_rounds_total",
+            help: "Collectives whose partial sums shipped at each lane width.",
+            metric: L(&m::WIRE_LANE),
+        },
+        Def {
+            name: "intsgd_encode_seconds",
+            help: "Encode phase duration per round (straggler max).",
+            metric: H(&m::ENCODE_SECONDS),
+        },
+        Def {
+            name: "intsgd_reduce_seconds",
+            help: "Reduce phase duration per round.",
+            metric: H(&m::REDUCE_SECONDS),
+        },
+        Def {
+            name: "intsgd_decode_seconds",
+            help: "Leader decode/fold duration per round.",
+            metric: H(&m::DECODE_SECONDS),
+        },
+        Def {
+            name: "intsgd_comm_measured_seconds",
+            help: "Measured wall-clock inside staged collectives per round.",
+            metric: H(&m::COMM_SECONDS),
+        },
+        Def {
+            name: "intsgd_net_collectives_total",
+            help: "Staged collectives executed (logical, not attempts).",
+            metric: C(&m::NET_COLLECTIVES),
+        },
+        Def {
+            name: "intsgd_net_retries_total",
+            help: "Retried collective attempts.",
+            metric: C(&m::NET_RETRIES),
+        },
+        Def {
+            name: "intsgd_net_timeouts_total",
+            help: "Rank-level timeout errors observed inside attempts.",
+            metric: C(&m::NET_TIMEOUTS),
+        },
+        Def {
+            name: "intsgd_net_replays_total",
+            help: "Rank-level replay (duplicate-frame) errors observed.",
+            metric: C(&m::NET_REPLAYS),
+        },
+        Def {
+            name: "intsgd_net_corrupt_total",
+            help: "Rank-level corrupt/truncated-frame errors observed.",
+            metric: C(&m::NET_CORRUPT),
+        },
+        Def {
+            name: "intsgd_net_stale_frames_total",
+            help: "Stale frames the round/seq guard discarded.",
+            metric: C(&m::NET_STALE_FRAMES),
+        },
+        Def {
+            name: "intsgd_faults_injected_total",
+            help: "Frames the fault injector tampered with (all kinds).",
+            metric: C(&m::FAULTS_INJECTED),
+        },
+        Def {
+            name: "intsgd_journal_events_total",
+            help: "Span events recorded into the telemetry journal.",
+            metric: C(&m::JOURNAL_EVENTS),
+        },
+        Def {
+            name: "intsgd_journal_dropped_total",
+            help: "Journal ring overwrites (oldest span evicted).",
+            metric: C(&m::JOURNAL_DROPPED),
+        },
+    ];
+    DEFS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_are_log2() {
+        let h = Histogram::new();
+        h.record(1); // bucket 0 (2^0)
+        h.record(2); // bucket 1
+        h.record(3); // bucket 1
+        h.record(1024); // bucket 10
+        h.record(0); // clamped to 1 -> bucket 0
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 1 + 2 + 3 + 1024);
+        assert_eq!(h.bucket(0), 2);
+        assert_eq!(h.bucket(1), 2);
+        assert_eq!(h.bucket(10), 1);
+        assert_eq!(Histogram::bucket_bound(0), 2);
+        assert_eq!(Histogram::bucket_bound(10), 2048);
+        // a sample past the last bound lands in the final bucket
+        h.record(u64::MAX);
+        assert_eq!(h.bucket(HISTOGRAM_BUCKETS - 1), 1);
+    }
+
+    #[test]
+    fn gauge_vec_tracks_used_and_overflow() {
+        let v = GaugeVec::new();
+        v.set_all(&[1.5, 2.5]);
+        assert_eq!(v.used(), 2);
+        assert_eq!(v.get(0), 1.5);
+        assert_eq!(v.get(1), 2.5);
+        // shrinking layouts keep the high-water mark
+        v.set_all(&[9.0]);
+        assert_eq!(v.used(), 2);
+        assert_eq!(v.get(0), 9.0);
+        let wide = vec![0.25; GaugeVec::CAPACITY + 3];
+        v.set_all(&wide);
+        assert_eq!(v.used(), GaugeVec::CAPACITY);
+        assert_eq!(v.overflowed(), 3);
+    }
+
+    #[test]
+    fn every_def_name_is_unique_and_prefixed() {
+        let defs = all();
+        for (i, d) in defs.iter().enumerate() {
+            assert!(d.name.starts_with("intsgd_"), "{}", d.name);
+            assert!(!d.help.is_empty(), "{}", d.name);
+            for other in &defs[i + 1..] {
+                assert_ne!(d.name, other.name, "duplicate family");
+            }
+            if let Metric::C(_) | Metric::L(_) = d.metric {
+                assert!(d.name.ends_with("_total"), "counter {} needs _total", d.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! [`TelemetrySink`]: the one [`RoundObserver`] the drivers attach.
+//!
+//! Before this existed, `net_driver` ran two ad-hoc observers with
+//! duplicated per-round accounting (a `WireWatcher` summing wire time
+//! and a `BreakdownPrinter` re-reading the same breakdown to print it).
+//! The sink does both jobs from a single stream of `on_round` calls:
+//! always accumulates the measured/modeled/retry totals the summary
+//! lines need, and optionally prints the per-round breakdown table rows
+//! (switched on with [`TelemetrySink::begin_table`]). The *registry* is
+//! not fed here — `Coordinator::run_round` feeds it for every driver,
+//! observer or not — so attaching the sink never double-counts.
+
+use crate::coordinator::{RoundObserver, RoundRecord};
+use crate::netsim::RoundBreakdown;
+
+#[derive(Default)]
+pub struct TelemetrySink {
+    measured: f64,
+    retries: u64,
+    modeled_int: f64,
+    /// `Some(next_row)` while the breakdown table is being printed.
+    table_row: Option<usize>,
+}
+
+impl TelemetrySink {
+    pub fn new() -> Self {
+        TelemetrySink::default()
+    }
+
+    /// Measured transport wall-clock summed over observed rounds.
+    pub fn measured(&self) -> f64 {
+        self.measured
+    }
+
+    /// Retried collective attempts summed over observed rounds.
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// Modeled comm seconds summed over observed *integer* rounds
+    /// (round 0 ships exact fp32 and is excluded — the
+    /// measured-vs-modeled ratio is about the integer wire).
+    pub fn modeled_int(&self) -> f64 {
+        self.modeled_int
+    }
+
+    /// Print the breakdown table header and a row per round from here on.
+    pub fn begin_table(&mut self) {
+        println!(
+            "  {:<8} {:>12} {:>12} {:>12} {:>14} {:>14} {:>8}",
+            "round", "encode", "reduce", "decode", "comm_model", "comm_measured", "retries"
+        );
+        self.table_row = Some(0);
+    }
+}
+
+impl RoundObserver for TelemetrySink {
+    fn on_round(&mut self, rec: &RoundRecord, b: &RoundBreakdown) {
+        self.measured += b.comm_measured;
+        self.retries += b.comm_retries;
+        if rec.round >= 1 {
+            self.modeled_int += rec.comm_seconds;
+        }
+        if let Some(row) = &mut self.table_row {
+            println!(
+                "  {:<8} {:>12.6} {:>12.6} {:>12.6} {:>14.6} {:>14.6} {:>8}",
+                row, b.encode, b.reduce, b.decode, b.comm_model, b.comm_measured,
+                b.comm_retries
+            );
+            *row += 1;
+        }
+    }
+
+    fn on_failover(&mut self, round: usize, rank: usize) {
+        println!("  FAILOVER: rank {rank} died in round {round}; world shrank and trained on");
+    }
+}

@@ -1,0 +1,166 @@
+//! Telemetry integration: the golden Chrome-trace bytes, the Prometheus
+//! exposition over a real scrape, and the span journal of a live
+//! streamed session (per-block encode/wire overlap, the thing the trace
+//! exists to show).
+
+use std::io::{Read as _, Write as _};
+
+use intsgd::api::{Backend, ModelSpec, Pipeline, Session, StagedAlgo};
+use intsgd::coordinator::net_driver::quad_factories;
+use intsgd::telemetry::{chrome, journal, registry, MetricsServer, Phase, SpanEvent, ALL};
+use intsgd::util::json::Json;
+
+fn span(
+    phase: Phase,
+    start_ns: u64,
+    dur_ns: u64,
+    round: u32,
+    block: u16,
+    rank: u16,
+) -> SpanEvent {
+    SpanEvent { start_ns, dur_ns, round, phase, block, rank }
+}
+
+/// A synthetic streamed round: encode b1 is posted while reduce b0 is on
+/// the wire, so its span overlaps — the golden bytes pin exactly how the
+/// exporter draws that.
+fn streamed_round_fixture() -> Vec<SpanEvent> {
+    vec![
+        span(Phase::Round, 0, 12_000, 1, ALL, ALL),
+        span(Phase::Encode, 500, 1_500, 1, 0, ALL),
+        span(Phase::Reduce, 2_000, 3_000, 1, 0, ALL),
+        span(Phase::Encode, 2_250, 1_750, 1, 1, ALL), // overlaps reduce b0
+        span(Phase::Reduce, 2_500, 2_000, 1, 0, 0),
+        span(Phase::Reduce, 2_600, 1_900, 1, 0, 1),
+        span(Phase::Drain, 5_000, 400, 1, 0, ALL),
+        span(Phase::Reduce, 5_500, 2_800, 1, 1, ALL),
+        span(Phase::Drain, 8_400, 350, 1, 1, ALL),
+        span(Phase::Decode, 9_000, 1_200, 1, ALL, ALL),
+    ]
+}
+
+#[test]
+fn chrome_trace_matches_golden_bytes() {
+    let events = streamed_round_fixture();
+    let rendered = chrome::render(&events);
+    let golden = include_str!("golden/chrome_trace.json");
+    assert_eq!(
+        rendered, golden,
+        "exporter output drifted from tests/golden/chrome_trace.json — if \
+         the format change is intentional, regenerate the golden file"
+    );
+    // and the overlap the fixture encodes is real: encode b1 starts while
+    // reduce b0 is still on the wire
+    let enc1 = &events[3];
+    let red0 = &events[2];
+    assert!(enc1.start_ns > red0.start_ns);
+    assert!(enc1.start_ns < red0.start_ns + red0.dur_ns);
+}
+
+#[test]
+fn prometheus_scrape_serves_every_family_and_type() {
+    let server = MetricsServer::bind("127.0.0.1:0").expect("bind :0");
+    let mut conn = std::net::TcpStream::connect(server.addr()).expect("connect");
+    conn.write_all(b"GET /metrics HTTP/1.0\r\nHost: t\r\n\r\n").unwrap();
+    let mut resp = String::new();
+    conn.read_to_string(&mut resp).unwrap();
+    assert!(resp.starts_with("HTTP/1.0 200 OK\r\n"), "{resp}");
+    assert!(resp.contains("text/plain; version=0.0.4"), "{resp}");
+
+    let body = resp.split("\r\n\r\n").nth(1).expect("body");
+    for def in registry::all() {
+        assert!(
+            body.contains(&format!("# HELP {} ", def.name)),
+            "scrape is missing HELP for {}",
+            def.name
+        );
+        assert!(
+            body.contains(&format!("# TYPE {} ", def.name)),
+            "scrape is missing TYPE for {}",
+            def.name
+        );
+    }
+    // spot-pin the type mapping the dashboards depend on
+    assert!(body.contains("# TYPE intsgd_rounds_total counter"), "{body}");
+    assert!(body.contains("# TYPE intsgd_train_loss gauge"), "{body}");
+    assert!(body.contains("# TYPE intsgd_encode_seconds histogram"), "{body}");
+    assert!(body.contains("# TYPE intsgd_wire_lane_rounds_total counter"), "{body}");
+}
+
+/// The one test that owns the process-global journal: a short streamed
+/// multi-block run over in-proc channels must journal per-block encode /
+/// reduce / drain spans, with the block-k+1 encode overlapping block-k's
+/// wire span (the streamed pipeline's whole point).
+#[test]
+fn streamed_session_journals_per_block_overlap() {
+    let trace = std::env::temp_dir()
+        .join(format!("intsgd_telemetry_it_{}.json", std::process::id()));
+    let n = 3;
+    let d = 768;
+    let mut session = Session::builder()
+        .world(n)
+        .model(ModelSpec::blocks(vec![256, 256, 256]))
+        .sources(quad_factories(n, d, 7, 0.01))
+        .backend(Backend::Channel { algo: StagedAlgo::Ring })
+        .pipeline(Pipeline::Streamed)
+        .lr(0.2)
+        .trace_path(trace.display().to_string())
+        .build()
+        .expect("build streamed channel session");
+    journal::clear(); // build() enabled the journal; start from empty
+    session.run(5).expect("run");
+    session.write_trace().expect("write trace");
+
+    let events = journal::snapshot();
+    let blocks = |phase: Phase| -> Vec<u16> {
+        let mut b: Vec<u16> = events
+            .iter()
+            .filter(|e| e.phase == phase && e.block != ALL)
+            .map(|e| e.block)
+            .collect();
+        b.sort_unstable();
+        b.dedup();
+        b
+    };
+    // round 0 ships dense fp32 over the barrier path; the integer rounds
+    // stream all three blocks through encode -> wire -> drain
+    assert_eq!(blocks(Phase::Reduce), vec![0, 1, 2], "per-block reduce spans");
+    assert_eq!(blocks(Phase::Drain), vec![0, 1, 2], "per-block drain spans");
+    let enc = blocks(Phase::Encode);
+    assert!(enc.contains(&1) && enc.contains(&2), "per-block encode spans: {enc:?}");
+
+    // overlap: in some round, the encode span for block k+1 starts while
+    // the leader-side reduce span for block k is still open
+    let overlapping = events.iter().any(|e| {
+        e.phase == Phase::Encode
+            && e.block != ALL
+            && e.block > 0
+            && events.iter().any(|r| {
+                r.phase == Phase::Reduce
+                    && r.rank == ALL
+                    && r.round == e.round
+                    && r.block + 1 == e.block
+                    && r.start_ns >= e.start_ns
+                    && r.start_ns <= e.start_ns + e.dur_ns
+            })
+    });
+    assert!(overlapping, "no encode-over-wire overlap span found");
+
+    // the written trace is valid JSON and draws those same spans
+    session.finish();
+    let text = std::fs::read_to_string(&trace).expect("trace file");
+    let doc = Json::parse(&text).expect("valid trace JSON");
+    let evs = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+    let has = |name: &str| {
+        evs.iter()
+            .any(|e| e.get("name").and_then(Json::as_str) == Some(name))
+    };
+    assert!(has("encode b1"), "trace should show per-block encode lanes");
+    assert!(has("reduce b0"), "trace should show per-block wire lanes");
+    let _ = std::fs::remove_file(&trace);
+
+    // the run also fed the static registry through the coordinator
+    use intsgd::telemetry::m;
+    assert!(m::ROUNDS.get() >= 5, "rounds counter fed");
+    assert!(m::BYTES_PER_COORD.get() > 0.0, "bytes-per-coordinate gauge fed");
+}

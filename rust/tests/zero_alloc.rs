@@ -65,6 +65,13 @@ fn engine(n: usize, seed: u64) -> RoundEngine {
 
 #[test]
 fn steady_state_intsgd_rounds_allocate_nothing() {
+    // telemetry ON for the whole measurement: the span journal records
+    // into a ring pre-allocated here, and every instrument is a static
+    // atomic — the windows below prove the round hot path stays
+    // allocation-free with observability enabled, which is the journal's
+    // design contract (telemetry::journal docs)
+    intsgd::telemetry::journal::enable(intsgd::telemetry::journal::DEFAULT_CAPACITY);
+
     let n = 4;
     // large enough that the parallel driver's integer reduce fans out
     // across the pool threads (instead of the small-d inline path)
@@ -276,5 +283,31 @@ fn steady_state_intsgd_rounds_allocate_nothing() {
         kernel_allocs, 0,
         "dispatched kernels ({}) hit the allocator {kernel_allocs} times",
         simd::backend_name()
+    );
+
+    // --- telemetry instruments, driven directly -----------------------------
+    // The rounds above journaled spans and fed counters as a side effect;
+    // this drives every instrument kind explicitly so a future instrument
+    // cannot smuggle a heap temporary (string label, map node, lazy init)
+    // onto the hot path without tripping the counter.
+    use intsgd::compress::Lanes;
+    use intsgd::telemetry::{journal, m, Phase, ALL};
+    let alphas = [0.25f64, 0.5];
+    let before = allocations();
+    for i in 0..1_000u64 {
+        m::ROUNDS.inc();
+        m::WIRE_BYTES.add(i);
+        m::TRAIN_LOSS.set(i as f64 * 0.5);
+        m::ENCODE_SECONDS.record_secs(1e-6 * i as f64);
+        m::ALPHA_BLOCK.set_all(&alphas);
+        m::WIRE_LANE.bump(Lanes::I8);
+        let t = journal::start();
+        journal::record(Phase::Encode, i as u32, (i % 4) as u16, ALL, t);
+    }
+    let telemetry_allocs = allocations() - before;
+    assert_eq!(
+        telemetry_allocs, 0,
+        "telemetry instruments hit the allocator {telemetry_allocs} times \
+         (counters/gauges/histograms/journal must be allocation-free)"
     );
 }

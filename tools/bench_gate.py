@@ -15,8 +15,10 @@ it, and a missing counterpart key is reported but not fatal.
 Noise handling, deliberately conservative so the gate stays green on
 shared CI runners:
 
-  * Only timing leaves are gated — numeric keys ending in `_ms`.
-    Config echo columns (d, n, group, hops, bytes) and derived
+  * Gated leaves are numeric keys ending in `_ms` (measured time) and
+    `_bytes_per_coord` (wire occupancy — deterministic, so gated with
+    the strict threshold and no noise floor even in smoke mode).
+    Config echo columns (d, n, group, hops, bytes totals) and derived
     speedups/ratios are ignored.
   * Values where BOTH sides sit under the floor (default 0.05 ms) are
     skipped: sub-tick timings are scheduler noise, not signal.
@@ -72,13 +74,25 @@ def is_timing_key(key):
     return key.endswith("_ms") and "model" not in key
 
 
+def is_bytes_key(key):
+    # Wire-occupancy leaves (`*_bytes_per_coord`): deterministic — a
+    # compressor change that widens the wire lane must trip the gate even
+    # in smoke mode, so these are compared with the strict threshold and
+    # no noise floor.
+    return key.endswith("_bytes_per_coord")
+
+
+def is_gated_key(key):
+    return is_timing_key(key) or is_bytes_key(key)
+
+
 def walk(base, fresh, path, pairs, missing):
     """Collect (path, baseline, fresh) timing pairs from both trees."""
     if isinstance(base, dict) and isinstance(fresh, dict):
         for k in sorted(set(base) | set(fresh)):
             p = f"{path}.{k}" if path else k
             if k not in base or k not in fresh:
-                if is_timing_key(k):
+                if is_gated_key(k):
                     missing.append(p)
                 continue
             walk(base[k], fresh[k], p, pairs, missing)
@@ -89,7 +103,7 @@ def walk(base, fresh, path, pairs, missing):
             walk(b, f, f"{path}[{i}]", pairs, missing)
     elif isinstance(base, (int, float)) and isinstance(fresh, (int, float)):
         leaf = path.rsplit(".", 1)[-1]
-        if is_timing_key(leaf) and not isinstance(base, bool):
+        if is_gated_key(leaf) and not isinstance(base, bool):
             pairs.append((path, float(base), float(fresh)))
 
 
@@ -149,6 +163,16 @@ def main():
     regressions, compared, skipped = [], 0, 0
     worst = None
     for path, b, f in pairs:
+        leaf = path.rsplit(".", 1)[-1]
+        if is_bytes_key(leaf):
+            # deterministic wire-occupancy leaf: strict threshold, no floor
+            compared += 1
+            ratio = f / b if b > 0 else float("inf")
+            if worst is None or ratio > worst:
+                worst = ratio
+            if f > b * (1.0 + args.threshold):
+                regressions.append((path, b, f, ratio))
+            continue
         if b < args.floor_ms and f < args.floor_ms:
             skipped += 1
             continue
