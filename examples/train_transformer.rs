@@ -101,6 +101,8 @@ fn main() -> Result<()> {
         .eval_hook(Box::new(eval_hook))
         .build()?;
 
+    // Wall-time report for the run summary (clippy.toml wall-clock rule).
+    #[allow(clippy::disallowed_methods)]
     let t0 = std::time::Instant::now();
     session.run(steps)?;
     let wall = t0.elapsed().as_secs_f64();

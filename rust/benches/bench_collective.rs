@@ -18,6 +18,9 @@
 //!
 //! Custom harness: criterion is not in the offline vendor set.
 
+// Benches are an allowed zone for wall-clock reads (clippy.toml).
+#![allow(clippy::disallowed_methods)]
+
 use std::collections::BTreeMap;
 use std::time::Instant;
 

@@ -3,6 +3,9 @@
 //! `cargo bench` keeps this tractable (2 workers, 12 rounds); the full
 //! protocol is `repro exp fig1 workers=16 rounds=600 seeds=3`.
 
+// Benches are an allowed zone for wall-clock reads (clippy.toml).
+#![allow(clippy::disallowed_methods)]
+
 use intsgd::config::Config;
 
 fn main() {

@@ -1,6 +1,9 @@
 //! Figure 2 regeneration bench: the FP32-vs-Int8 all-reduce time table
 //! from the network cost model (exactly the figure's series).
 
+// Benches are an allowed zone for wall-clock reads (clippy.toml).
+#![allow(clippy::disallowed_methods)]
+
 use intsgd::config::Config;
 
 fn main() {

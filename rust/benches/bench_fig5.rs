@@ -1,6 +1,9 @@
 //! Figure 5 regeneration bench: a reduced beta x epsilon sensitivity grid
 //! on the classifier task. Full protocol: `repro exp fig5 rounds=600`.
 
+// Benches are an allowed zone for wall-clock reads (clippy.toml).
+#![allow(clippy::disallowed_methods)]
+
 use intsgd::config::Config;
 
 fn main() {

@@ -2,6 +2,9 @@
 //! a5a-geometry dataset (abbreviated). Full protocol:
 //! `repro exp fig6 rounds=400 seeds=3` (all four datasets).
 
+// Benches are an allowed zone for wall-clock reads (clippy.toml).
+#![allow(clippy::disallowed_methods)]
+
 use intsgd::config::Config;
 
 fn main() {

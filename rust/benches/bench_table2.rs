@@ -2,6 +2,9 @@
 //! algorithms on the classifier task, printing the paper-style table.
 //! Full protocol: `repro exp table2 workers=16 rounds=600 seeds=3`.
 
+// Benches are an allowed zone for wall-clock reads (clippy.toml).
+#![allow(clippy::disallowed_methods)]
+
 use intsgd::config::Config;
 
 fn main() {

@@ -1,0 +1,306 @@
+//! A lightweight Rust lexer: just enough to separate *code* from
+//! *comments and string contents* so the rules never fire on a banned
+//! token inside a string literal or a doc comment.
+//!
+//! The output keeps column alignment: every stripped character is
+//! replaced by a space in the `code` channel, so byte offsets into
+//! `code` line up with the original source and excerpts stay readable.
+
+/// One source line, split into channels.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Code with comments and string/char contents blanked to spaces.
+    /// String delimiters themselves are kept so tokens do not merge.
+    pub code: String,
+    /// Concatenated comment text on this line (line, block, and doc
+    /// comments), without the `//` / `/*` markers.
+    pub comment: String,
+    /// The raw line, verbatim (for excerpts).
+    pub raw: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Code,
+    LineComment,
+    Block(u32),
+    Str,
+    RawStr(u32),
+    Char,
+}
+
+/// Lex a whole file into per-line code/comment channels.
+pub fn clean(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines: Vec<Line> = Vec::new();
+    let mut cur = Line::default();
+    let mut state = State::Code;
+    let mut i = 0usize;
+
+    // Push `c` to the raw channel and to either code or comment.
+    macro_rules! emit {
+        (code $c:expr) => {{
+            cur.raw.push($c);
+            cur.code.push($c);
+        }};
+        (blank $c:expr) => {{
+            cur.raw.push($c);
+            cur.code.push(' ');
+        }};
+        (comment $c:expr) => {{
+            cur.raw.push($c);
+            cur.code.push(' ');
+            cur.comment.push($c);
+        }};
+    }
+
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            // A newline ends the line in every state; multi-line
+            // constructs carry their state into the next line.
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    state = State::LineComment;
+                    emit!(blank c);
+                    emit!(blank '/');
+                    i += 2;
+                    // skip doc-comment markers so `comment` is the text
+                    while chars.get(i) == Some(&'/') || chars.get(i) == Some(&'!') {
+                        emit!(blank chars[i]);
+                        i += 1;
+                    }
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::Block(1);
+                    emit!(blank c);
+                    emit!(blank '*');
+                    i += 2;
+                } else if c == '"' {
+                    // Possibly the opening quote of a raw string whose
+                    // `r#`-prefix we already emitted as code.
+                    let hashes = raw_prefix_hashes(&cur.code);
+                    if let Some(n) = hashes {
+                        state = State::RawStr(n);
+                    } else {
+                        state = State::Str;
+                    }
+                    emit!(code c);
+                    i += 1;
+                } else if c == '\'' {
+                    // Char literal vs lifetime: after `'`, a backslash
+                    // means a char escape; a closing quote two ahead
+                    // means a plain char; otherwise it is a lifetime.
+                    let next = chars.get(i + 1);
+                    let after = chars.get(i + 2);
+                    if next == Some(&'\\') || (next.is_some() && after == Some(&'\'')) {
+                        state = State::Char;
+                        emit!(code c);
+                        i += 1;
+                    } else {
+                        emit!(code c);
+                        i += 1;
+                    }
+                } else {
+                    emit!(code c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                emit!(comment c);
+                i += 1;
+            }
+            State::Block(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    emit!(blank '*');
+                    emit!(blank '/');
+                    state = if depth == 1 { State::Code } else { State::Block(depth - 1) };
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    emit!(comment c);
+                    emit!(comment '*');
+                    state = State::Block(depth + 1);
+                    i += 2;
+                } else {
+                    emit!(comment c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    emit!(blank c);
+                    if let Some(&esc) = chars.get(i + 1) {
+                        if esc != '\n' {
+                            emit!(blank esc);
+                            i += 1;
+                        }
+                    }
+                    i += 1;
+                } else if c == '"' {
+                    emit!(code c);
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    emit!(blank c);
+                    i += 1;
+                }
+            }
+            State::RawStr(n) => {
+                if c == '"' && closes_raw(&chars, i, n) {
+                    emit!(code c);
+                    for _ in 0..n {
+                        emit!(code '#');
+                    }
+                    i += 1 + n as usize;
+                    state = State::Code;
+                } else {
+                    emit!(blank c);
+                    i += 1;
+                }
+            }
+            State::Char => {
+                if c == '\\' {
+                    emit!(blank c);
+                    if chars.get(i + 1).is_some() {
+                        emit!(blank chars[i + 1]);
+                        i += 1;
+                    }
+                    i += 1;
+                } else if c == '\'' {
+                    emit!(code c);
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    emit!(blank c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.raw.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+/// If the code emitted so far ends with a raw-string prefix (`r`, `r#`,
+/// `br##`, ...), return the hash count; the caller just saw the `"`.
+fn raw_prefix_hashes(code_so_far: &str) -> Option<u32> {
+    let b = code_so_far.as_bytes();
+    let mut i = b.len();
+    let mut hashes = 0u32;
+    while i > 0 && b[i - 1] == b'#' {
+        hashes += 1;
+        i -= 1;
+    }
+    if i == 0 || b[i - 1] != b'r' {
+        return None;
+    }
+    i -= 1;
+    // `r` must itself start a token (`br"` is also a raw string).
+    if i > 0 && b[i - 1] == b'b' {
+        i -= 1;
+    }
+    if i > 0 && is_ident_byte(b[i - 1]) {
+        return None; // identifier ending in r, e.g. `var"` can't occur
+    }
+    Some(hashes)
+}
+
+/// Does the `"` at `chars[i]` close a raw string with `n` hashes?
+fn closes_raw(chars: &[char], i: usize, n: u32) -> bool {
+    (1..=n as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Byte offsets where `token` occurs in `code` as a whole word (the
+/// characters on both sides, if any, are not identifier characters).
+pub fn token_positions(code: &str, token: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (pos, _) in code.match_indices(token) {
+        let before_ok = match code[..pos].chars().next_back() {
+            Some(c) => !is_ident_char(c),
+            None => true,
+        };
+        let after_ok = match code[pos + token.len()..].chars().next() {
+            Some(c) => !is_ident_char(c),
+            None => true,
+        };
+        if before_ok && after_ok {
+            out.push(pos);
+        }
+    }
+    out
+}
+
+/// Does `code` contain `token` as a whole word?
+pub fn has_token(code: &str, token: &str) -> bool {
+    !token_positions(code, token).is_empty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_leave_code_channel() {
+        let lines = clean("let x = \"unsafe stuff\"; // unsafe note\n");
+        assert!(!has_token(&lines[0].code, "unsafe"));
+        assert!(lines[0].comment.contains("unsafe note"));
+    }
+
+    #[test]
+    fn block_comments_span_lines() {
+        let lines = clean("a /* one\nunsafe two */ b\n");
+        assert!(lines[0].code.contains('a'));
+        assert!(!has_token(&lines[1].code, "unsafe"));
+        assert!(lines[1].code.contains('b'));
+        assert!(lines[1].comment.contains("unsafe two"));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let lines = clean("let s = r#\"panic!(\"x\")\"#;\nlet t = 1;\n");
+        assert!(!lines[0].code.contains("panic"));
+        assert!(lines[1].code.contains("let t = 1;"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let lines = clean("fn f<'a>(x: &'a str) -> &'a str { x }\nlet c = 'y';\n");
+        assert!(lines[0].code.contains("fn f<'a>"));
+        assert!(lines[1].code.contains("let c ="));
+        assert!(!lines[1].code.contains('y'));
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert!(has_token("unsafe {", "unsafe"));
+        assert!(!has_token("unsafely()", "unsafe"));
+        assert!(!has_token("an_unsafe_flag", "unsafe"));
+        // `GaugeVec::new` must not register as `Vec::new`
+        assert!(token_positions("GaugeVec::new()", "Vec::new").is_empty());
+        assert!(!token_positions("std::vec::Vec::new()", "Vec::new").is_empty());
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let lines = clean("let s = \"a\\\"unsafe\\\"b\"; let k = 2;\n");
+        assert!(!has_token(&lines[0].code, "unsafe"));
+        assert!(lines[0].code.contains("let k = 2;"));
+    }
+}

@@ -1,0 +1,210 @@
+//! `intlint` — repo-invariant static analysis for the intsgd tree.
+//!
+//! Six rules, each the static twin of a dynamic test (DESIGN.md §12):
+//!
+//! | rule | invariant                                   | dynamic twin          |
+//! |------|---------------------------------------------|-----------------------|
+//! | R1   | `unsafe` carries a `// SAFETY:` argument    | Miri job              |
+//! | R2   | hot-path modules never allocate             | tests/zero_alloc.rs   |
+//! | R3   | no narrowing `as` in decode paths           | tests/wire_props.rs   |
+//! | R4   | socket-reachable code never panics          | tests/chaos.rs        |
+//! | R5   | intrinsics only under `#[target_feature]`   | tests/kernel_parity.rs|
+//! | R6   | every instrument is pinned in the scrape    | tests/telemetry.rs    |
+//!
+//! Violations are waivable inline — `// intlint: allow(R2,
+//! reason="...")` — and the binary prints a greppable `INTLINT
+//! status=...` line mirroring `tools/bench_gate.py`.
+
+pub mod lex;
+pub mod rules;
+
+use std::fmt::Write as _;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One rule violation (waived or not) at a source line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule id, `"R1"`..`"R6"`.
+    pub rule: &'static str,
+    /// Repo-relative path (`rust/src/...`).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Human-readable statement of the violation.
+    pub message: String,
+    /// The offending source line, trimmed.
+    pub excerpt: String,
+    /// An inline waiver covers this finding.
+    pub waived: bool,
+    /// The waiver's mandatory `reason="..."`.
+    pub reason: String,
+}
+
+/// The result of a full tree scan.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Files scanned under `rust/src`.
+    pub files: usize,
+    /// All findings, waived ones included, ordered by (file, line).
+    pub findings: Vec<Finding>,
+}
+
+/// Rule ids in reporting order.
+pub const RULES: &[&str] = &["R1", "R2", "R3", "R4", "R5", "R6"];
+
+impl Report {
+    /// Unwaived violations (what fails the build).
+    pub fn violations(&self) -> usize {
+        self.findings.iter().filter(|f| !f.waived).count()
+    }
+
+    /// Waivers spent (the budget the summary prints).
+    pub fn waivers(&self) -> usize {
+        self.findings.iter().filter(|f| f.waived).count()
+    }
+
+    /// The greppable one-line summary, mirroring `BENCH_GATE status=`.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "INTLINT status={} rules={} violations={} waivers={} files={}",
+            if self.violations() == 0 { "ok" } else { "fail" },
+            RULES.len(),
+            self.violations(),
+            self.waivers(),
+            self.files,
+        )
+    }
+
+    /// Machine-readable report for the CI artifact (std-only JSON).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        let _ = write!(
+            out,
+            "  \"status\": \"{}\",\n  \"files\": {},\n  \"violations\": {},\n  \"waivers\": {},\n",
+            if self.violations() == 0 { "ok" } else { "fail" },
+            self.files,
+            self.violations(),
+            self.waivers(),
+        );
+        out.push_str("  \"findings\": [\n");
+        for (i, f) in self.findings.iter().enumerate() {
+            let _ = write!(
+                out,
+                "    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"waived\": {}, \
+                 \"message\": \"{}\", \"excerpt\": \"{}\", \"reason\": \"{}\"}}{}\n",
+                f.rule,
+                json_escape(&f.file),
+                f.line,
+                f.waived,
+                json_escape(&f.message),
+                json_escape(&f.excerpt),
+                json_escape(&f.reason),
+                if i + 1 == self.findings.len() { "" } else { "," },
+            );
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Lint one file's source; `rel` is its path relative to `rust/src/`
+/// (scope decisions — hot module, decode path — key off it).
+pub fn analyze_file(rel: &str, src: &str) -> Vec<Finding> {
+    let lines = lex::clean(src);
+    let ctx = rules::FileCtx::new(rel, &lines);
+    let mut findings = rules::run_file_rules(&ctx);
+    rules::apply_waivers(&lines, &mut findings);
+    findings
+}
+
+/// R6 across the registry and its golden scrape test; waivers come from
+/// the registry source.
+pub fn analyze_r6(registry_src: &str, test_src: &str) -> Vec<Finding> {
+    let mut findings = rules::r6_registry_coverage(registry_src, test_src);
+    let lines = lex::clean(registry_src);
+    rules::apply_waivers(&lines, &mut findings);
+    findings
+}
+
+/// Walk `root/rust/src/**/*.rs` (sorted, deterministic) plus the R6
+/// pair, and produce the full report.
+pub fn run(root: &Path) -> io::Result<Report> {
+    let src_root = root.join("rust").join("src");
+    let mut files = Vec::new();
+    walk(&src_root, &mut files)?;
+    files.sort();
+
+    let mut report = Report::default();
+    let mut registry_src = None;
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src_root)
+            .expect("walked under src_root")
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(path)?;
+        report.findings.extend(analyze_file(&rel, &src));
+        if rel == "telemetry/registry.rs" {
+            registry_src = Some(src);
+        }
+        report.files += 1;
+    }
+    if let Some(registry_src) = registry_src {
+        let test_path = root.join("rust").join("tests").join("telemetry.rs");
+        let test_src = std::fs::read_to_string(test_path)?;
+        report.findings.extend(analyze_r6(&registry_src, &test_src));
+    }
+    report
+        .findings
+        .sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(report)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Locate the repo root: `--root` wins; otherwise walk up from the
+/// current directory looking for `rust/src`.
+pub fn find_root(explicit: Option<&str>) -> Option<PathBuf> {
+    if let Some(r) = explicit {
+        let p = PathBuf::from(r);
+        return p.join("rust").join("src").is_dir().then_some(p);
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        if cur.join("rust").join("src").is_dir() {
+            return Some(cur);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! `intlint` CLI: scan the tree, print findings, end with the
+//! greppable `INTLINT status=...` line, exit non-zero on any unwaived
+//! violation. `--json` writes the machine-readable report to stdout
+//! instead (the summary line still goes to stderr so CI can grep it
+//! either way).
+
+use std::process::ExitCode;
+
+const USAGE: &str = "\
+intlint — repo-invariant static analysis for the intsgd tree
+
+USAGE:
+  intlint [--json] [--root <repo-root>] [--list-waivers]
+
+  --json          print the machine-readable report to stdout
+  --root <path>   repo root (default: walk up from cwd to find rust/src)
+  --list-waivers  print every spent waiver with its reason
+
+Rules R1-R6 and the waiver grammar are documented in DESIGN.md §12.
+Exit status: 0 when every finding is waived, 1 otherwise.
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut json = false;
+    let mut list_waivers = false;
+    let mut root_arg: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--json" => json = true,
+            "--list-waivers" => list_waivers = true,
+            "--root" => {
+                i += 1;
+                match args.get(i) {
+                    Some(p) => root_arg = Some(p.clone()),
+                    None => {
+                        eprintln!("--root expects a path\n{USAGE}");
+                        return ExitCode::from(2);
+                    }
+                }
+            }
+            "--help" | "-h" => {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("unknown argument `{other}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+        i += 1;
+    }
+
+    let Some(root) = intlint::find_root(root_arg.as_deref()) else {
+        eprintln!("intlint: could not locate a repo root containing rust/src");
+        return ExitCode::from(2);
+    };
+    let report = match intlint::run(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("intlint: scan failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if json {
+        print!("{}", report.to_json());
+    } else {
+        for f in &report.findings {
+            if !f.waived {
+                println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+                println!("    {}", f.excerpt);
+            }
+        }
+        if list_waivers {
+            for f in &report.findings {
+                if f.waived {
+                    println!(
+                        "waived {}:{}: [{}] reason=\"{}\"",
+                        f.file, f.line, f.rule, f.reason
+                    );
+                }
+            }
+        }
+    }
+    // The summary goes to both streams: stdout for humans, stderr so
+    // `--json` runs can still grep it without parsing the report.
+    let summary = report.summary_line();
+    if !json {
+        println!("{summary}");
+    }
+    eprintln!("{summary}");
+
+    if report.violations() == 0 {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

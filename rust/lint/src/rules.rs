@@ -1,0 +1,607 @@
+//! The six repo-invariant rules (DESIGN.md §12).
+//!
+//! Each rule is a pure function over a lexed file: it sees only the
+//! code channel (comments and string contents already blanked by
+//! [`crate::lex`]), plus the masks computed here — `#[cfg(test)]` /
+//! `macro_rules!` regions, and "cold" delimiter groups for R2.
+
+use crate::lex::{self, has_token, token_positions, Line};
+use crate::Finding;
+
+/// Hot-path modules for R2 (paths relative to `rust/src/`). `simd/` is
+/// matched by prefix below. The list mirrors `tests/zero_alloc.rs`.
+const HOT_MODULES: &[&str] = &[
+    "compress/engine.rs",
+    "compress/intsgd.rs",
+    "net/staged.rs",
+    "net/frame.rs",
+    "net/reducer.rs",
+    "telemetry/journal.rs",
+    "telemetry/registry.rs",
+];
+
+/// Files whose decode paths parse attacker-controlled bytes: R3 (no
+/// narrowing `as`) and R4 (no panics) apply here.
+fn in_r3_scope(rel: &str) -> bool {
+    rel.starts_with("net/") || rel == "compress/wire.rs" || rel == "compress/intvec.rs"
+}
+
+fn in_r4_scope(rel: &str) -> bool {
+    rel.starts_with("net/") || rel == "compress/wire.rs"
+}
+
+fn is_hot(rel: &str) -> bool {
+    HOT_MODULES.contains(&rel) || rel.starts_with("simd/")
+}
+
+/// Delimiter groups opened on a line carrying one of these markers are
+/// "cold": error construction, assertion, and panic paths may allocate
+/// (the round loop never reaches them on success).
+const COLD_MARKERS: &[&str] = &[
+    "Err(",
+    "map_err",
+    "ok_or",
+    "unwrap_or_else",
+    "unwrap_or(",
+    "expect_err",
+    "panic!",
+    "unreachable!",
+    "assert!",
+    "assert_eq!",
+    "assert_ne!",
+    "debug_assert",
+];
+
+/// Per-file derived context shared by the rules.
+pub struct FileCtx<'a> {
+    pub rel: &'a str,
+    pub lines: &'a [Line],
+    /// Line is inside a `#[cfg(test)]` item or a `macro_rules!` body.
+    pub exempt: Vec<bool>,
+    /// Per-line, per-byte (into `code`): inside a cold delimiter group.
+    pub cold: Vec<Vec<bool>>,
+}
+
+impl<'a> FileCtx<'a> {
+    pub fn new(rel: &'a str, lines: &'a [Line]) -> Self {
+        FileCtx { rel, lines, exempt: exempt_mask(lines), cold: cold_masks(lines) }
+    }
+}
+
+/// Mark lines inside `#[cfg(test)]` items and `macro_rules!` bodies.
+fn exempt_mask(lines: &[Line]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut stack: Vec<bool> = Vec::new();
+    let mut pending = false;
+    for (idx, line) in lines.iter().enumerate() {
+        if stack.iter().any(|&e| e) {
+            mask[idx] = true;
+        }
+        let code = &line.code;
+        if code.contains("#[cfg(test)]")
+            || code.contains("#[cfg(all(test")
+            || code.contains("#[cfg(any(test")
+            || has_token(code, "macro_rules")
+        {
+            pending = true;
+        }
+        let mut group = 0i32;
+        for c in code.chars() {
+            match c {
+                '(' | '[' => group += 1,
+                ')' | ']' => group -= 1,
+                '{' => {
+                    let parent = stack.last().copied().unwrap_or(false);
+                    let e = parent || pending;
+                    if pending {
+                        pending = false;
+                    }
+                    if e {
+                        mask[idx] = true;
+                    }
+                    stack.push(e);
+                }
+                '}' => {
+                    stack.pop();
+                }
+                // an attribute that ends in an item-free statement
+                // (`#[cfg(test)] use ...;`) never opens a body
+                ';' if group <= 0 => pending = false,
+                _ => {}
+            }
+        }
+    }
+    mask
+}
+
+/// Per-byte cold mask for every line (see [`COLD_MARKERS`]).
+fn cold_masks(lines: &[Line]) -> Vec<Vec<bool>> {
+    let mut out = Vec::with_capacity(lines.len());
+    let mut stack: Vec<bool> = Vec::new();
+    for line in lines {
+        let code = &line.code;
+        let line_cold = COLD_MARKERS.iter().any(|m| code.contains(m));
+        let mut mask = vec![false; code.len()];
+        for (pos, c) in code.char_indices() {
+            match c {
+                '(' | '[' | '{' => {
+                    let parent = stack.last().copied().unwrap_or(false);
+                    stack.push(parent || line_cold);
+                }
+                ')' | ']' | '}' => {
+                    stack.pop();
+                }
+                _ => {}
+            }
+            let now = stack.last().copied().unwrap_or(false);
+            for b in mask.iter_mut().skip(pos).take(c.len_utf8()) {
+                *b = now;
+            }
+        }
+        out.push(mask);
+    }
+    out
+}
+
+fn finding(ctx: &FileCtx, rule: &'static str, idx: usize, message: String) -> Finding {
+    Finding {
+        rule,
+        file: format!("rust/src/{}", ctx.rel),
+        line: idx + 1,
+        message,
+        excerpt: ctx.lines[idx].raw.trim().to_string(),
+        waived: false,
+        reason: String::new(),
+    }
+}
+
+fn comment_has_safety(comment: &str) -> bool {
+    let lower = comment.to_lowercase();
+    lower.contains("safety:") || lower.contains("# safety")
+}
+
+/// R1: every `unsafe` block/fn/impl is immediately preceded by (or
+/// carries) a `// SAFETY:` comment. A covered `unsafe` line extends its
+/// coverage to a directly following `unsafe` line (back-to-back blocks
+/// under one argument).
+pub fn r1_safety_comments(ctx: &FileCtx) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut covered_unsafe: Vec<bool> = vec![false; ctx.lines.len()];
+    for idx in 0..ctx.lines.len() {
+        if ctx.exempt[idx] || !has_token(&ctx.lines[idx].code, "unsafe") {
+            continue;
+        }
+        let mut covered = comment_has_safety(&ctx.lines[idx].comment);
+        if !covered {
+            let mut j = idx;
+            while j > 0 {
+                j -= 1;
+                let l = &ctx.lines[j];
+                let t = l.code.trim();
+                if t.is_empty() || t.starts_with("#[") || t.starts_with("#!") {
+                    if comment_has_safety(&l.comment) {
+                        covered = true;
+                        break;
+                    }
+                    continue;
+                }
+                covered = covered_unsafe[j];
+                break;
+            }
+        }
+        if covered {
+            covered_unsafe[idx] = true;
+        } else {
+            findings.push(finding(
+                ctx,
+                "R1",
+                idx,
+                "`unsafe` without an immediately preceding `// SAFETY:` comment".to_string(),
+            ));
+        }
+    }
+    findings
+}
+
+/// R2: no allocation calls in hot-path modules outside cold groups —
+/// the static twin of `tests/zero_alloc.rs`.
+pub fn r2_hot_path_alloc(ctx: &FileCtx) -> Vec<Finding> {
+    if !is_hot(ctx.rel) {
+        return Vec::new();
+    }
+    // (token, needs word boundary before the token)
+    const BANNED: &[(&str, bool)] = &[
+        ("Vec::new", true),
+        ("String::new", true),
+        ("Box::new", true),
+        (".collect(", false),
+        (".collect::<", false),
+        (".to_vec(", false),
+        (".to_owned(", false),
+        (".to_string(", false),
+        (".clone()", false),
+        ("format!", true),
+        ("vec![", true),
+    ];
+    let mut findings = Vec::new();
+    for (idx, line) in ctx.lines.iter().enumerate() {
+        if ctx.exempt[idx] {
+            continue;
+        }
+        for &(tok, bounded) in BANNED {
+            let positions = if bounded {
+                bounded_positions(&line.code, tok)
+            } else {
+                line.code.match_indices(tok).map(|(p, _)| p).collect()
+            };
+            for pos in positions {
+                if ctx.cold[idx].get(pos).copied().unwrap_or(false) {
+                    continue;
+                }
+                findings.push(finding(
+                    ctx,
+                    "R2",
+                    idx,
+                    format!("allocation in hot-path module: `{tok}`"),
+                ));
+            }
+        }
+    }
+    findings
+}
+
+/// Positions of `tok` in `code` where the preceding char is not an
+/// identifier char (so `GaugeVec::new` never matches `Vec::new`, while
+/// `std::vec::Vec::new` does).
+fn bounded_positions(code: &str, tok: &str) -> Vec<usize> {
+    code.match_indices(tok)
+        .filter(|&(pos, _)| match code[..pos].chars().next_back() {
+            Some(c) => !(c.is_alphanumeric() || c == '_'),
+            None => true,
+        })
+        .map(|(pos, _)| pos)
+        .collect()
+}
+
+const NARROW_TARGETS: &[&str] = &["u8", "i8", "u16", "i16", "u32", "i32", "usize"];
+
+/// R3: no `as` casts to a narrower integer type in the hostile-input
+/// decode scope — use `util::cast` instead.
+pub fn r3_narrowing_casts(ctx: &FileCtx) -> Vec<Finding> {
+    if !in_r3_scope(ctx.rel) {
+        return Vec::new();
+    }
+    let mut findings = Vec::new();
+    for (idx, line) in ctx.lines.iter().enumerate() {
+        if ctx.exempt[idx] {
+            continue;
+        }
+        for pos in token_positions(&line.code, "as") {
+            let rest = line.code[pos + 2..].trim_start();
+            let target = if rest.is_empty() {
+                // rustfmt can wrap `as\n    u32` on long expressions
+                ctx.lines
+                    .get(idx + 1)
+                    .map(|l| leading_ident(l.code.trim_start()))
+                    .unwrap_or_default()
+            } else {
+                leading_ident(rest)
+            };
+            if NARROW_TARGETS.contains(&target.as_str()) {
+                findings.push(finding(
+                    ctx,
+                    "R3",
+                    idx,
+                    format!("narrowing `as {target}` in decode scope — use util::cast"),
+                ));
+            }
+        }
+    }
+    findings
+}
+
+fn leading_ident(s: &str) -> String {
+    s.chars()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect()
+}
+
+/// R4: no `unwrap`/`expect`/explicit panic in library code that parses
+/// socket bytes. (Panicking indexing is Miri's job — DESIGN.md §12.)
+pub fn r4_no_panic_decode(ctx: &FileCtx) -> Vec<Finding> {
+    if !in_r4_scope(ctx.rel) {
+        return Vec::new();
+    }
+    const BANNED: &[(&str, bool)] = &[
+        (".unwrap()", false),
+        (".expect(", false),
+        ("panic!", true),
+        ("unreachable!", true),
+        ("todo!", true),
+        ("unimplemented!", true),
+    ];
+    let mut findings = Vec::new();
+    for (idx, line) in ctx.lines.iter().enumerate() {
+        if ctx.exempt[idx] {
+            continue;
+        }
+        for &(tok, bounded) in BANNED {
+            let hit = if bounded {
+                !bounded_positions(&line.code, tok).is_empty()
+            } else {
+                line.code.contains(tok)
+            };
+            if hit {
+                findings.push(finding(
+                    ctx,
+                    "R4",
+                    idx,
+                    format!("panic path in socket-reachable code: `{tok}`"),
+                ));
+            }
+        }
+    }
+    findings
+}
+
+/// R5: `core::arch` intrinsics only under `#[target_feature]` (in
+/// `simd/x86.rs`) or behind the dispatch front door `simd/mod.rs`;
+/// nothing outside `simd/` touches intrinsics at all.
+pub fn r5_intrinsic_hygiene(ctx: &FileCtx) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    if !ctx.rel.starts_with("simd/") {
+        for (idx, line) in ctx.lines.iter().enumerate() {
+            if ctx.exempt[idx] {
+                continue;
+            }
+            if line.code.contains("core::arch")
+                || line.code.contains("std::arch")
+                || !bounded_positions(&line.code, "_mm").is_empty()
+            {
+                findings.push(finding(
+                    ctx,
+                    "R5",
+                    idx,
+                    "core::arch intrinsics outside simd/ — go through the dispatch front door"
+                        .to_string(),
+                ));
+            }
+        }
+        return findings;
+    }
+    if ctx.rel != "simd/x86.rs" {
+        // mod.rs is the sanctioned front door; neon.rs targets baseline
+        // aarch64 NEON; scalar.rs has no intrinsics by construction.
+        return findings;
+    }
+    // x86.rs: every fn whose body touches AVX2/AVX-512 intrinsics must
+    // carry #[target_feature] (SSE2 `_mm_...` is x86_64 baseline).
+    for (idx, line) in ctx.lines.iter().enumerate() {
+        if ctx.exempt[idx] || !has_token(&line.code, "fn") {
+            continue;
+        }
+        let Some((open, close)) = brace_span(ctx.lines, idx) else { continue };
+        let body_has_wide = (open..=close).any(|k| {
+            let c = &ctx.lines[k].code;
+            c.contains("_mm256_") || c.contains("_mm512_")
+        });
+        if !body_has_wide {
+            continue;
+        }
+        let mut has_tf = false;
+        let mut j = idx;
+        while j > 0 {
+            j -= 1;
+            let t = ctx.lines[j].code.trim();
+            if t.is_empty() {
+                continue;
+            }
+            if t.starts_with("#[") {
+                if t.contains("target_feature") {
+                    has_tf = true;
+                }
+                continue;
+            }
+            break;
+        }
+        if !has_tf {
+            findings.push(finding(
+                ctx,
+                "R5",
+                idx,
+                "fn uses AVX2/AVX-512 intrinsics without #[target_feature]".to_string(),
+            ));
+        }
+    }
+    findings
+}
+
+/// The `{`..`}` span of the body starting at or after `start` (line
+/// indexes of the opening and closing brace lines).
+pub fn brace_span(lines: &[Line], start: usize) -> Option<(usize, usize)> {
+    let mut depth = 0i32;
+    let mut group = 0i32;
+    let mut open_line = None;
+    for (idx, line) in lines.iter().enumerate().skip(start) {
+        for c in line.code.chars() {
+            match c {
+                '(' | '[' => group += 1,
+                ')' | ']' => group -= 1,
+                '{' => {
+                    if open_line.is_none() {
+                        open_line = Some(idx);
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        if let Some(open) = open_line {
+                            return Some((open, idx));
+                        }
+                    }
+                }
+                // an item that ends before any body opens (a trait
+                // method signature, a `use`) has no span; `;` inside
+                // `[u8; 4]` and the like does not count
+                ';' if open_line.is_none() && group <= 0 => return None,
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+/// R6: every instrument registered in `telemetry/registry.rs` appears
+/// literally in the Prometheus golden scrape test, so a new metric
+/// cannot ship unpinned.
+pub fn r6_registry_coverage(registry_src: &str, test_src: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for (idx, raw) in registry_src.lines().enumerate() {
+        let mut rest = raw;
+        while let Some(p) = rest.find("name: \"") {
+            let tail = &rest[p + 7..];
+            let Some(q) = tail.find('"') else { break };
+            let name = &tail[..q];
+            if name.starts_with("intsgd_") && !test_src.contains(name) {
+                findings.push(Finding {
+                    rule: "R6",
+                    file: "rust/src/telemetry/registry.rs".to_string(),
+                    line: idx + 1,
+                    message: format!(
+                        "instrument `{name}` is not pinned in rust/tests/telemetry.rs"
+                    ),
+                    excerpt: raw.trim().to_string(),
+                    waived: false,
+                    reason: String::new(),
+                });
+            }
+            rest = &tail[q..];
+        }
+    }
+    findings
+}
+
+/// Run R1–R5 on one lexed file.
+pub fn run_file_rules(ctx: &FileCtx) -> Vec<Finding> {
+    let mut out = Vec::new();
+    out.extend(r1_safety_comments(ctx));
+    out.extend(r2_hot_path_alloc(ctx));
+    out.extend(r3_narrowing_casts(ctx));
+    out.extend(r4_no_panic_decode(ctx));
+    out.extend(r5_intrinsic_hygiene(ctx));
+    out
+}
+
+/// Parse and apply `// intlint: allow(...)` waivers to `findings`.
+pub fn apply_waivers(lines: &[Line], findings: &mut [Finding]) {
+    let spans = waiver_spans(lines);
+    for f in findings.iter_mut() {
+        for w in &spans {
+            if w.rules.iter().any(|r| r == f.rule) && (w.start..=w.end).contains(&(f.line - 1)) {
+                f.waived = true;
+                f.reason.clone_from(&w.reason);
+                break;
+            }
+        }
+    }
+}
+
+struct WaiverSpan {
+    rules: Vec<String>,
+    start: usize,
+    end: usize,
+    reason: String,
+}
+
+/// Waiver grammar: `// intlint: allow(R2, R3, reason="...")`. A
+/// trailing waiver covers its own line; a standalone waiver covers the
+/// next code line — or, when that line opens a `fn` (skipping
+/// attributes), the whole fn body. A waiver without a `reason` is
+/// invalid and waives nothing.
+fn waiver_spans(lines: &[Line]) -> Vec<WaiverSpan> {
+    let mut spans = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let Some((rules, reason)) = parse_waiver(&line.comment) else { continue };
+        if !line.code.trim().is_empty() {
+            spans.push(WaiverSpan { rules, start: idx, end: idx, reason });
+            continue;
+        }
+        // standalone: skip blanks and attributes to the governed item
+        let mut j = idx + 1;
+        let mut item = None;
+        while j < lines.len() {
+            let t = lines[j].code.trim();
+            if t.is_empty() || t.starts_with("#[") || t.starts_with("#!") {
+                j += 1;
+                continue;
+            }
+            item = Some(j);
+            break;
+        }
+        let Some(item) = item else { continue };
+        let end = if has_token(&lines[item].code, "fn") {
+            brace_span(lines, item).map(|(_, close)| close).unwrap_or(item)
+        } else {
+            item
+        };
+        spans.push(WaiverSpan { rules, start: idx, end, reason });
+    }
+    spans
+}
+
+/// Parse one waiver comment; `None` if absent or malformed (no reason).
+pub fn parse_waiver(comment: &str) -> Option<(Vec<String>, String)> {
+    let p = comment.find("intlint: allow(")?;
+    let rest = &comment[p + "intlint: allow(".len()..];
+    let reason_at = rest.find("reason=\"")?;
+    let after = &rest[reason_at + "reason=\"".len()..];
+    let endq = after.find('"')?;
+    let reason = after[..endq].to_string();
+    let rules: Vec<String> = rest[..reason_at]
+        .split(',')
+        .map(str::trim)
+        .filter(|t| t.len() == 2 && t.starts_with('R') && t[1..].chars().all(|c| c.is_ascii_digit()))
+        .map(str::to_string)
+        .collect();
+    if rules.is_empty() {
+        return None;
+    }
+    Some((rules, reason))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx_of<'a>(rel: &'a str, lines: &'a [Line]) -> FileCtx<'a> {
+        FileCtx::new(rel, lines)
+    }
+
+    #[test]
+    fn waiver_parsing() {
+        let (rules, reason) =
+            parse_waiver(" intlint: allow(R2, R3, reason=\"export path, off the hot loop\")")
+                .unwrap();
+        assert_eq!(rules, vec!["R2", "R3"]);
+        assert_eq!(reason, "export path, off the hot loop");
+        assert!(parse_waiver(" intlint: allow(R2)").is_none(), "reason is mandatory");
+        assert!(parse_waiver("nothing here").is_none());
+    }
+
+    #[test]
+    fn cold_groups_span_lines() {
+        let src = "fn f() {\n    Err(NetError::Corrupt {\n        msg: format!(\"x\"),\n    })\n}\n";
+        let lines = lex::clean(src);
+        let ctx = ctx_of("net/frame.rs", &lines);
+        assert!(r2_hot_path_alloc(&ctx).is_empty(), "format! inside Err( is cold");
+    }
+
+    #[test]
+    fn test_mod_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { let v = Vec::new(); v.unwrap() }\n}\n";
+        let lines = lex::clean(src);
+        let ctx = ctx_of("net/frame.rs", &lines);
+        assert!(run_file_rules(&ctx).is_empty());
+    }
+}

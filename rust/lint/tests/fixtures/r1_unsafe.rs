@@ -1,0 +1,41 @@
+//! R1 fixture: SAFETY-comment coverage, the run rule, and the
+//! false-positive guards (strings, comments, test mods).
+
+pub fn covered(p: *const u8) -> u8 {
+    // SAFETY: p is valid for reads by caller contract.
+    unsafe { *p }
+}
+
+pub fn run_rule(p: *const u8) -> (u8, u8) {
+    // SAFETY: both reads are in bounds by caller contract.
+    let a = unsafe { *p };
+    let b = unsafe { *p };
+    (a, b)
+}
+
+/// # Safety
+/// Doc-heading style coverage also counts.
+pub unsafe fn doc_covered(p: *const u8) -> u8 {
+    // SAFETY: forwarded caller contract.
+    unsafe { *p }
+}
+
+pub fn uncovered(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+
+pub fn false_positives() -> &'static str {
+    let s = "unsafe { inside a string is not code }";
+    // a comment mentioning unsafe is not a violation either
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unsafe_in_tests_is_exempt() {
+        let x = 3u8;
+        let p = &x as *const u8;
+        let _ = unsafe { *p };
+    }
+}

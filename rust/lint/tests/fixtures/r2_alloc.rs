@@ -1,0 +1,54 @@
+//! R2 fixture: allocations in a hot module — two live violations, one
+//! trailing waiver, one fn-scoped waiver, cold groups, and the
+//! `GaugeVec::new` / `collect_encode_block` boundary guards.
+
+pub struct GaugeVec;
+impl GaugeVec {
+    pub const fn new() -> Self {
+        GaugeVec
+    }
+}
+
+pub fn hot(n: usize, data: &[u8]) -> usize {
+    let v: Vec<u8> = Vec::new();
+    let s = format!("x{n}");
+    let _ = (v, s, data);
+    n
+}
+
+pub fn cold_paths(n: usize) -> Result<usize, String> {
+    if n == 0 {
+        return Err(format!("empty input of {n} lanes"));
+    }
+    Ok(n)
+}
+
+pub fn waived_inline(data: &[u8]) -> Vec<u8> {
+    data.to_vec() // intlint: allow(R2, reason="startup copy, not the round loop")
+}
+
+// intlint: allow(R2, reason="constructor; steady state reuses the buffers")
+pub fn waived_fn_scope(n: usize) -> Box<Vec<u8>> {
+    let inner = vec![0u8; n];
+    Box::new(inner)
+}
+
+pub fn boundary_guards() -> GaugeVec {
+    let pool = Pool;
+    pool.collect_encode_block();
+    GaugeVec::new()
+}
+
+pub struct Pool;
+impl Pool {
+    pub fn collect_encode_block(&self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_allocate_freely() {
+        let v: Vec<u8> = (0..9u8).collect();
+        assert_eq!(v.len(), 9);
+    }
+}

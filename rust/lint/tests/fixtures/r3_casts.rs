@@ -1,0 +1,36 @@
+//! R3 fixture: narrowing `as` casts in decode scope — one live
+//! violation, one waived, widening/float/pointer casts allowed, and the
+//! `as_slice` identifier guard.
+
+pub fn narrow(x: u64) -> u32 {
+    x as u32
+}
+
+pub fn widen(x: u32) -> u64 {
+    x as u64
+}
+
+pub fn float(x: u64) -> f64 {
+    x as f64
+}
+
+pub fn pointer(p: &u8) -> *const u8 {
+    p as *const u8
+}
+
+pub fn waived(x: u64) -> u8 {
+    (x & 0xFF) as u8 // intlint: allow(R3, reason="masked to the low byte on this line")
+}
+
+pub fn ident_guard(v: &[u8]) -> usize {
+    let as_slice = v.len();
+    as_slice
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn casts_in_tests_are_fine() {
+        assert_eq!(300u64 as u8, 44);
+    }
+}

@@ -1,0 +1,32 @@
+//! R4 fixture: panic paths in socket-reachable code — three live
+//! violations, plus the `.unwrap_or(` and string/comment guards.
+
+pub fn bad_unwrap(o: Option<u8>) -> u8 {
+    o.unwrap()
+}
+
+pub fn bad_expect(r: Result<u8, ()>) -> u8 {
+    r.expect("boom")
+}
+
+pub fn bad_panic(kind: u8) -> u8 {
+    if kind > 7 {
+        panic!("unknown frame kind {kind}");
+    }
+    kind
+}
+
+pub fn guards(r: Result<u8, u8>) -> u8 {
+    // talking about .unwrap() in a comment is fine
+    let v = r.unwrap_or(0);
+    let _ = "panic! and .unwrap() inside a string are fine";
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap() {
+        assert_eq!(Some(3u8).unwrap(), 3);
+    }
+}

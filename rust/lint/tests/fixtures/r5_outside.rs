@@ -1,0 +1,5 @@
+//! R5 fixture: intrinsics outside simd/ — one violation.
+
+use core::arch::x86_64::_mm256_add_epi64;
+
+pub fn nothing_here() {}

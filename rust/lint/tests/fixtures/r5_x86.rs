@@ -1,0 +1,19 @@
+//! R5 fixture for simd/x86.rs scope: AVX2 bodies need
+//! `#[target_feature]`; SSE2-free scalar helpers do not.
+
+use core::arch::x86_64::*;
+
+/// Safety: caller must ensure AVX2 is available.
+#[target_feature(enable = "avx2")]
+pub unsafe fn good(a: __m256i, b: __m256i) -> __m256i {
+    _mm256_add_epi64(a, b)
+}
+
+/// Safety: caller must ensure AVX2 is available.
+pub unsafe fn bad(a: __m256i, b: __m256i) -> __m256i {
+    _mm256_add_epi64(a, b)
+}
+
+pub fn no_intrinsics(x: i64) -> i64 {
+    x.wrapping_add(1)
+}

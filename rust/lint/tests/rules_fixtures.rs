@@ -1,0 +1,116 @@
+//! Golden fixture tests: one tiny source file per rule with known
+//! violations, waiver parsing, and the false-positive guards (strings
+//! and comments containing banned tokens, `GaugeVec::new`,
+//! `collect_encode_block`, `as_slice`, test mods).
+
+use intlint::{analyze_file, analyze_r6, Finding};
+
+fn by_rule<'a>(findings: &'a [Finding], rule: &str) -> Vec<&'a Finding> {
+    findings.iter().filter(|f| f.rule == rule).collect()
+}
+
+fn unwaived<'a>(findings: &'a [Finding], rule: &str) -> Vec<&'a Finding> {
+    findings.iter().filter(|f| f.rule == rule && !f.waived).collect()
+}
+
+#[test]
+fn r1_uncovered_unsafe_is_the_only_violation() {
+    let src = include_str!("fixtures/r1_unsafe.rs");
+    let findings = analyze_file("coordinator/worker.rs", src);
+    let r1 = unwaived(&findings, "R1");
+    assert_eq!(r1.len(), 1, "{findings:?}");
+    assert!(r1[0].excerpt.contains("unsafe { *p }"));
+    // the covered fns, the run rule, the doc-heading style, the string,
+    // the comment, and the test mod all stay quiet
+    assert_eq!(findings.len(), 1, "{findings:?}");
+}
+
+#[test]
+fn r2_hot_allocs_flagged_cold_and_waived_allocs_not() {
+    let src = include_str!("fixtures/r2_alloc.rs");
+    let findings = analyze_file("compress/engine.rs", src);
+    let live = unwaived(&findings, "R2");
+    assert_eq!(live.len(), 2, "{findings:?}");
+    assert!(live.iter().any(|f| f.message.contains("Vec::new")));
+    assert!(live.iter().any(|f| f.message.contains("format!")));
+    // trailing waiver (.to_vec) + fn-scope waiver (vec![ and Box::new)
+    let waived: Vec<_> = by_rule(&findings, "R2").into_iter().filter(|f| f.waived).collect();
+    assert_eq!(waived.len(), 3, "{findings:?}");
+    assert!(waived.iter().all(|f| !f.reason.is_empty()), "waivers carry reasons");
+}
+
+#[test]
+fn r3_narrowing_cast_flagged_widening_and_waived_not() {
+    let src = include_str!("fixtures/r3_casts.rs");
+    let findings = analyze_file("net/frame.rs", src);
+    let live = unwaived(&findings, "R3");
+    assert_eq!(live.len(), 1, "{findings:?}");
+    assert!(live[0].message.contains("as u32"));
+    let waived: Vec<_> = by_rule(&findings, "R3").into_iter().filter(|f| f.waived).collect();
+    assert_eq!(waived.len(), 1);
+    assert!(waived[0].message.contains("as u8"));
+}
+
+#[test]
+fn r4_panic_paths_flagged_guards_not() {
+    let src = include_str!("fixtures/r4_panics.rs");
+    let findings = analyze_file("net/tcp.rs", src);
+    let live = unwaived(&findings, "R4");
+    assert_eq!(live.len(), 3, "{findings:?}");
+    assert!(live.iter().any(|f| f.message.contains(".unwrap()")));
+    assert!(live.iter().any(|f| f.message.contains(".expect(")));
+    assert!(live.iter().any(|f| f.message.contains("panic!")));
+}
+
+#[test]
+fn r5_intrinsics_outside_simd_flagged() {
+    let src = include_str!("fixtures/r5_outside.rs");
+    let findings = analyze_file("optim/sgd.rs", src);
+    let live = unwaived(&findings, "R5");
+    assert_eq!(live.len(), 1, "{findings:?}");
+}
+
+#[test]
+fn r5_avx2_body_without_target_feature_flagged() {
+    let src = include_str!("fixtures/r5_x86.rs");
+    let findings = analyze_file("simd/x86.rs", src);
+    let live = unwaived(&findings, "R5");
+    assert_eq!(live.len(), 1, "{findings:?}");
+    assert!(live[0].excerpt.contains("fn bad"));
+    // and the Safety: doc comments cover R1 for both unsafe fns
+    assert!(by_rule(&findings, "R1").is_empty(), "{findings:?}");
+}
+
+#[test]
+fn r6_unpinned_instrument_flagged_pinned_and_waived_not() {
+    let registry = r#"
+        Def { name: "intsgd_rounds_total", help: "rounds" },
+        Def { name: "intsgd_missing_total", help: "oops" },
+        Def { name: "intsgd_internal_total", help: "x" }, // intlint: allow(R6, reason="internal-only counter")
+    "#;
+    let test_src = r#"assert!(body.contains("intsgd_rounds_total"));"#;
+    let findings = analyze_r6(registry, test_src);
+    let live = unwaived(&findings, "R6");
+    assert_eq!(live.len(), 1, "{findings:?}");
+    assert!(live[0].message.contains("intsgd_missing_total"));
+    let waived: Vec<_> = findings.iter().filter(|f| f.waived).collect();
+    assert_eq!(waived.len(), 1);
+    assert!(waived[0].message.contains("intsgd_internal_total"));
+}
+
+#[test]
+fn summary_line_is_greppable_and_json_is_wellformed() {
+    let src = include_str!("fixtures/r3_casts.rs");
+    let report =
+        intlint::Report { files: 1, findings: analyze_file("net/frame.rs", src) };
+    let line = report.summary_line();
+    assert!(line.starts_with("INTLINT status=fail "), "{line}");
+    assert!(line.contains("rules=6"), "{line}");
+    assert!(line.contains("violations=1"), "{line}");
+    assert!(line.contains("waivers=1"), "{line}");
+    let json = report.to_json();
+    assert!(json.contains("\"status\": \"fail\""), "{json}");
+    assert!(json.contains("\"rule\": \"R3\""), "{json}");
+    // escaping: excerpts with quotes must not break the document
+    assert!(!json.contains("\"excerpt\": \"\"\""), "{json}");
+}

@@ -269,6 +269,7 @@ pub struct IntSgd {
 }
 
 impl IntSgd {
+    // intlint: allow(R2, reason="constructor: state is built once, before the round loop")
     pub fn new(
         rounding: Rounding,
         wire: WireInt,
@@ -476,7 +477,7 @@ impl PhasedCompressor for IntSgd {
             WireInt::Int8 => 8,
             WireInt::Int32 => 32,
         };
-        format!("intsgd_{r}_{w}bit[{}]", self.rule.name())
+        format!("intsgd_{r}_{w}bit[{}]", self.rule.name()) // intlint: allow(R2, reason="display name, called for reports, not per round")
     }
 
     fn supports_allreduce(&self) -> bool {
@@ -491,7 +492,7 @@ impl PhasedCompressor for IntSgd {
             .unwrap_or_else(|| {
                 panic!("rank {rank} exceeds the configured worker count {}", self.n)
             });
-        Box::new(IntEncoder { rng, msg: Message::Empty, base: None })
+        Box::new(IntEncoder { rng, msg: Message::Empty, base: None }) // intlint: allow(R2, reason="encoder factory runs once at setup")
     }
 
     fn encoders(&mut self) -> &mut Vec<Box<dyn RankEncoder>> {

@@ -10,6 +10,8 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::util::cast;
+
 use super::intvec::{IntVec, Lanes};
 use super::natsgd::{NatMsg, EXP_ZERO};
 use super::qsgd::QsgdBucket;
@@ -42,7 +44,7 @@ impl BitWriter {
         self.cur |= value << self.bits;
         self.bits += nbits;
         while self.bits >= 8 {
-            self.buf.push((self.cur & 0xFF) as u8);
+            self.buf.push(cast::low_u8(self.cur));
             self.cur >>= 8;
             self.bits -= 8;
         }
@@ -50,7 +52,7 @@ impl BitWriter {
 
     pub fn finish(mut self) -> Vec<u8> {
         if self.bits > 0 {
-            self.buf.push((self.cur & 0xFF) as u8);
+            self.buf.push(cast::low_u8(self.cur));
         }
         self.buf
     }
@@ -97,7 +99,7 @@ impl<'a> BitReader<'a> {
 /// Unsigned LEB128 varint.
 pub fn write_varint(out: &mut Vec<u8>, mut v: u64) {
     loop {
-        let byte = (v & 0x7F) as u8;
+        let byte = cast::low_u8(v & 0x7F);
         v >>= 7;
         if v == 0 {
             out.push(byte);
@@ -146,13 +148,13 @@ pub fn unzigzag(v: u64) -> i64 {
 pub fn encode_int8(ints: &IntVec) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(ints.len());
     match ints {
-        IntVec::I8(v) => out.extend(v.iter().map(|&x| x as u8)),
+        IntVec::I8(v) => out.extend(v.iter().map(|&x| cast::byte_of_i8(x))),
         _ => {
             for j in 0..ints.len() {
                 let v = ints.get(j);
                 let x =
                     i8::try_from(v).map_err(|_| anyhow!("{v} out of int8 range"))?;
-                out.push(x as u8);
+                out.push(cast::byte_of_i8(x));
             }
         }
     }
@@ -160,7 +162,7 @@ pub fn encode_int8(ints: &IntVec) -> Result<Vec<u8>> {
 }
 
 pub fn decode_int8(bytes: &[u8]) -> IntVec {
-    IntVec::I8(bytes.iter().map(|&b| b as i8).collect())
+    IntVec::I8(bytes.iter().map(|&b| cast::i8_of_byte(b)).collect())
 }
 
 /// Pack an integer message as int32 LE; i8/i32 lanes need no range check.
@@ -169,7 +171,7 @@ pub fn encode_int32(ints: &IntVec) -> Result<Vec<u8>> {
     match ints {
         IntVec::I8(v) => {
             for &x in v {
-                out.extend_from_slice(&(x as i32).to_le_bytes());
+                out.extend_from_slice(&i32::from(x).to_le_bytes());
             }
         }
         IntVec::I32(v) => {
@@ -233,7 +235,8 @@ pub fn decode_nat(bytes: &[u8], d: usize) -> Result<NatMsg> {
         exps.push(if biased == 0 {
             EXP_ZERO
         } else {
-            biased as i16 - 1 - 127
+            // 9-bit field: biased <= 511, so the checked cast never fires
+            cast::to_i16(biased)? - 1 - 127
         });
     }
     Ok(NatMsg { signs, exps })
@@ -250,12 +253,12 @@ pub fn encode_qsgd(msg: &[QsgdBucket]) -> Result<Vec<u8>> {
         write_varint(&mut out, b.levels.len() as u64);
         out.extend_from_slice(&b.norm.to_le_bytes());
         for &l in &b.levels {
-            let sign = (l < 0) as u8;
+            let sign = u8::from(l < 0);
             let mag = l.unsigned_abs();
             if mag > 127 {
                 return Err(anyhow!("level {l} exceeds 7 bits"));
             }
-            out.push((sign << 7) | mag as u8);
+            out.push((sign << 7) | cast::to_u8(mag)?);
         }
     }
     Ok(out)
@@ -271,14 +274,14 @@ pub fn decode_qsgd(bytes: &[u8]) -> Result<Vec<QsgdBucket>> {
     if nbuckets > ((bytes.len() - pos) / 5) as u64 {
         return Err(anyhow!("qsgd bucket count {nbuckets} exceeds the buffer"));
     }
-    let nbuckets = nbuckets as usize;
+    let nbuckets = cast::to_usize(nbuckets)?;
     let mut out = Vec::with_capacity(nbuckets);
     for _ in 0..nbuckets {
         let len = read_varint(bytes, &mut pos)?;
         if len > (bytes.len() - pos) as u64 {
             return Err(anyhow!("qsgd bucket length {len} exceeds the buffer"));
         }
-        let len = len as usize;
+        let len = cast::to_usize(len)?;
         let norm_bytes = bytes
             .get(pos..pos + 4)
             .ok_or_else(|| anyhow!("qsgd underrun"))?;
@@ -289,7 +292,7 @@ pub fn decode_qsgd(bytes: &[u8]) -> Result<Vec<QsgdBucket>> {
         for _ in 0..len {
             let b = *bytes.get(pos).ok_or_else(|| anyhow!("qsgd underrun"))?;
             pos += 1;
-            let mag = (b & 0x7F) as i16;
+            let mag = i16::from(b & 0x7F);
             levels.push(if b & 0x80 != 0 { -mag } else { mag });
         }
         out.push(QsgdBucket { norm, levels });
@@ -312,18 +315,18 @@ pub fn encode_sparse_with(
     out: &mut Vec<u8>,
 ) {
     order.clear();
-    order.extend(0..entries.len() as u32);
-    order.sort_unstable_by_key(|&k| entries[k as usize].0);
+    order.extend(0..entries.len() as u32); // intlint: allow(R3, reason="top-k support is u32-indexed by type; len() <= u32::MAX by construction")
+    order.sort_unstable_by_key(|&k| entries[cast::usize_from(k)].0);
     out.clear();
     write_varint(out, entries.len() as u64);
     let mut prev = 0u32;
     for &k in order.iter() {
-        let i = entries[k as usize].0;
+        let i = entries[cast::usize_from(k)].0;
         write_varint(out, (i - prev) as u64);
         prev = i;
     }
     for &k in order.iter() {
-        out.extend_from_slice(&entries[k as usize].1.to_le_bytes());
+        out.extend_from_slice(&entries[cast::usize_from(k)].1.to_le_bytes());
     }
 }
 
@@ -343,7 +346,7 @@ pub fn decode_sparse(bytes: &[u8]) -> Result<Vec<(u32, f32)>> {
     if k > ((bytes.len() - pos) / 5) as u64 {
         return Err(anyhow!("sparse entry count {k} exceeds the buffer"));
     }
-    let k = k as usize;
+    let k = cast::to_usize(k)?;
     let mut idx = Vec::with_capacity(k);
     let mut prev = 0u64;
     for i in 0..k {

@@ -36,8 +36,18 @@ ENV:
   INTSGD_FORCE_SCALAR     set to 1 to pin the scalar encode/reduce kernels
                           (bit-parity debugging for the simd feature)
 
+TOOLING:
+  cargo run -p intlint      repo-invariant static analysis (SAFETY
+                            comments, hot-path allocation, checked casts,
+                            socket-reachable panics, intrinsic gating,
+                            telemetry registration); --json for the
+                            machine report, greppable `INTLINT status=`
+                            line, waivers via `// intlint: allow(Rn,
+                            reason=\"...\")` — see DESIGN.md §12
+
 Experiments write results/<id>*.csv; see DESIGN.md §4 for the index,
-§8 for the Session API the subcommands drive, and §11 for telemetry.
+§8 for the Session API the subcommands drive, §11 for telemetry, and
+§12 for static analysis & soundness (intlint, clippy.toml, Miri/ASan).
 ";
 
 /// The one `--config file` / `key=value` parser every subcommand shares.

@@ -224,7 +224,11 @@ impl<T: Transport> FaultTransport<T> {
         if self.delayed.is_empty() {
             return Ok(());
         }
-        let inner = self.inner.as_mut().expect("flushed after death");
+        // only reachable alive (check_kill ran first), but a typed error
+        // beats a panic if that ordering ever breaks
+        let Some(inner) = self.inner.as_mut() else {
+            return Err(NetError::PeerDead { rank: self.rank, round: UNKNOWN_ROUND });
+        };
         for (to, frame) in std::mem::take(&mut self.delayed) {
             inner.send(to, &frame)?;
         }
@@ -251,7 +255,9 @@ impl<T: Transport> Transport for FaultTransport<T> {
         let t_corrupt = t_dup + self.plan.corrupt_p;
         let t_truncate = t_corrupt + self.plan.truncate_p;
         let t_delay = t_truncate + self.plan.delay_p;
-        let inner = self.inner.as_mut().expect("checked alive above");
+        let Some(inner) = self.inner.as_mut() else {
+            return Err(NetError::PeerDead { rank: self.rank, round: UNKNOWN_ROUND });
+        };
         if u < t_drop {
             self.stats.dropped += 1;
             crate::telemetry::m::FAULTS_INJECTED.inc();
@@ -293,7 +299,10 @@ impl<T: Transport> Transport for FaultTransport<T> {
     fn recv(&mut self, from: usize, out: &mut Vec<u8>) -> Result<(), NetError> {
         self.check_kill(None)?;
         self.flush_delayed()?;
-        let r = self.inner.as_mut().expect("checked alive above").recv(from, out);
+        let Some(inner) = self.inner.as_mut() else {
+            return Err(NetError::PeerDead { rank: self.rank, round: UNKNOWN_ROUND });
+        };
+        let r = inner.recv(from, out);
         if r.is_ok() {
             self.ops += 1;
         }

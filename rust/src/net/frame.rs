@@ -30,6 +30,7 @@
 //! hostile (`compress::wire` follows the same rule).
 
 use crate::compress::intvec::Lanes;
+use crate::util::cast;
 
 use super::{NetError, UNKNOWN_RANK, UNKNOWN_ROUND};
 
@@ -112,7 +113,7 @@ pub struct FrameHeader {
 pub fn checksum(bytes: &[u8]) -> u32 {
     let mut h: u32 = 0x811C_9DC5;
     for &b in bytes {
-        h ^= b as u32;
+        h ^= u32::from(b);
         h = h.wrapping_mul(0x0100_0193);
     }
     h
@@ -123,7 +124,7 @@ pub fn checksum(bytes: &[u8]) -> u32 {
 pub fn encode_frame(header: FrameHeader, payload: &[u8], out: &mut Vec<u8>) {
     debug_assert_eq!(
         payload.len(),
-        header.elems as usize * header.kind.bytes_per_elem(),
+        cast::usize_from(header.elems) * header.kind.bytes_per_elem(),
         "element count disagrees with payload size"
     );
     out.clear();
@@ -152,7 +153,7 @@ pub fn decode_frame(frame: &[u8]) -> Result<(FrameHeader, &[u8]), NetError> {
     let elems = u32::from_le_bytes([frame[9], frame[10], frame[11], frame[12]]);
     let want_sum = u32::from_le_bytes([frame[13], frame[14], frame[15], frame[16]]);
     let payload = &frame[HEADER_BYTES..];
-    let want_len = elems as usize * kind.bytes_per_elem();
+    let want_len = cast::usize_from(elems) * kind.bytes_per_elem();
     if payload.len() != want_len {
         return Err(corrupt(format!(
             "frame payload {} bytes, header promises {want_len} ({elems} x {kind:?})",
@@ -249,7 +250,7 @@ pub fn check_frame(
     if h.kind != kind {
         return Err(corrupt(format!("expected {kind:?} payload, got {:?}", h.kind)));
     }
-    if h.elems as usize != elems {
+    if cast::usize_from(h.elems) != elems {
         return Err(corrupt(format!("expected {elems} elements, got {}", h.elems)));
     }
     Ok(FrameCheck::Fresh)
@@ -272,7 +273,7 @@ pub fn expect_frame<'a>(
     if h.kind != kind {
         return Err(corrupt(format!("expected {kind:?} payload, got {:?}", h.kind)));
     }
-    if h.elems as usize != elems {
+    if cast::usize_from(h.elems) != elems {
         return Err(corrupt(format!("expected {elems} elements, got {}", h.elems)));
     }
     Ok(payload)
@@ -290,7 +291,7 @@ pub fn pack_partials(sums: &[i64], wire: Lanes, out: &mut Vec<u8>) -> Result<(),
             for &s in sums {
                 let v = i8::try_from(s)
                     .map_err(|_| corrupt(format!("partial sum {s} exceeds the i8 wire")))?;
-                out.push(v as u8);
+                out.push(cast::byte_of_i8(v));
             }
         }
         Lanes::I32 => {

@@ -177,6 +177,14 @@ impl NetError {
     pub fn is_peer_dead(&self) -> bool {
         matches!(self, NetError::PeerDead { .. })
     }
+
+    /// Wrap a failed narrowing cast (`util::cast`) as a corrupt-frame
+    /// error: an element count, lane tag, or seq that overflows its wire
+    /// type can only come from hostile or damaged bytes, never from a
+    /// well-formed peer.
+    pub fn from_cast(e: crate::util::cast::CastError, rank: usize, round: u32) -> NetError {
+        NetError::Corrupt { rank, round, detail: e.to_string() }
+    }
 }
 
 fn fmt_rank(rank: usize) -> String {

@@ -50,12 +50,13 @@ use crate::compress::engine::{RankMessages, Reducer};
 use crate::compress::intvec::Lanes;
 use crate::telemetry::journal::{self, Phase};
 use crate::telemetry::m;
+use crate::util::cast;
 
 use super::staged::{
     halving_allreduce_ints, partial_sum_lanes, ring_allreduce_ints,
     two_level_allreduce_ints, StagedScratch,
 };
-use super::{ChannelTransport, NetError, TcpTransport, Transport};
+use super::{ChannelTransport, NetError, TcpTransport, Transport, UNKNOWN_RANK, UNKNOWN_ROUND};
 
 /// Which staged schedule the reducer runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -174,6 +175,7 @@ impl TransportReducer<TcpTransport> {
 
 impl<T: Transport> TransportReducer<T> {
     /// Endpoint r becomes rank r's end of every staged collective.
+    // intlint: allow(R2, reason="constructor: per-rank state is built once, before the round loop")
     pub fn new(endpoints: Vec<T>, algo: StagedAlgo) -> Self {
         assert!(!endpoints.is_empty(), "at least one endpoint");
         for (r, ep) in endpoints.iter().enumerate() {
@@ -276,6 +278,7 @@ impl<T: Transport> TransportReducer<T> {
 
     /// One attempt of the collective across all survivor threads; returns
     /// every rank failure (empty = success).
+    // intlint: allow(R2, R4, reason="scoped-thread fan-out: spawn/join allocate per attempt (documented off the zero-alloc path), and a panicked rank thread is propagated, not handled")
     fn attempt(&mut self, msgs: &RankMessages, wire: Lanes, round: u32) -> Vec<NetError> {
         self.abort.store(false, Ordering::Relaxed);
         let algo = self.algo;
@@ -327,7 +330,13 @@ impl<T: Transport> TransportReducer<T> {
                         // one span per rank leg of the collective — in the
                         // trace these are the per-rank lanes under the
                         // leader's reduce span
-                        journal::record(Phase::Reduce, round, block as u16, vrank as u16, span_t);
+                        journal::record(
+                            Phase::Reduce,
+                            round,
+                            cast::sat_u16(cast::usize_from(block)),
+                            cast::sat_u16(vrank),
+                            span_t,
+                        );
                         if r.is_err() {
                             // wake every peer blocked on this round
                             abort.store(true, Ordering::Relaxed);
@@ -343,7 +352,9 @@ impl<T: Transport> TransportReducer<T> {
 }
 
 /// The most diagnostic error of a failed attempt: the root cause, not the
-/// cascade — peers that merely bailed out rank last.
+/// cascade — peers that merely bailed out rank last. An empty input
+/// (never produced by a failed attempt) degrades to an unattributed
+/// `Aborted` rather than a panic.
 fn primary_error(errs: Vec<NetError>) -> NetError {
     fn severity(e: &NetError) -> u8 {
         match e {
@@ -356,7 +367,7 @@ fn primary_error(errs: Vec<NetError>) -> NetError {
     }
     errs.into_iter()
         .max_by_key(severity)
-        .expect("primary_error on a successful attempt")
+        .unwrap_or(NetError::Aborted { rank: UNKNOWN_RANK, round: UNKNOWN_ROUND })
 }
 
 impl<T: Transport> Reducer for TransportReducer<T> {
@@ -374,6 +385,9 @@ impl<T: Transport> Reducer for TransportReducer<T> {
         self.last_wire = Some(wire);
         m::WIRE_LANE.bump(wire);
 
+        // Telemetry timing: feeds intsgd_comm_measured_seconds, never
+        // round arithmetic (clippy.toml).
+        #[allow(clippy::disallowed_methods)]
         let t0 = Instant::now();
         let mut attempts = 0usize;
         let outcome = loop {
@@ -436,7 +450,7 @@ impl<T: Transport> Reducer for TransportReducer<T> {
     /// frame's seq high bits ([`crate::net::frame::block_seq`]): a frame
     /// straying between in-flight blocks can never satisfy the guard.
     fn begin_block(&mut self, block: usize) {
-        self.block = block as u32;
+        self.block = cast::sat_u32(block);
     }
 
     /// The measured side of netsim's measured-vs-modeled comparison: this

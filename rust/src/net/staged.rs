@@ -38,6 +38,7 @@
 //! frame / receive buffers across rounds.
 
 use crate::compress::intvec::{IntVec, Lanes};
+use crate::util::cast;
 
 use super::frame::{
     add_partials, block_seq, check_frame, classify_round, copy_partials, decode_frame,
@@ -166,6 +167,7 @@ fn ring_allreduce_partials(
     }
     let kind = PayloadKind::of_lanes(wire);
     let block = scratch.block;
+    let cfail = |e: cast::CastError| NetError::from_cast(e, r, round);
     let right = (r + 1) % n;
     let left = (r + n - 1) % n;
     // chunk c covers starts[c]..starts[c + 1]
@@ -179,11 +181,11 @@ fn ring_allreduce_partials(
         let send_c = (r + n - s) % n;
         let recv_c = (r + 2 * n - 1 - s) % n;
         let (slo, shi) = (scratch.starts[send_c], scratch.starts[send_c + 1]);
-        let seq = block_seq(block, s as u32);
+        let seq = block_seq(block, cast::to_u32(s).map_err(cfail)?);
         pack_partials(&out[slo..shi], wire, &mut scratch.payload)
             .map_err(|e| local(e, r, round))?;
         encode_frame(
-            FrameHeader { round, seq, kind, elems: (shi - slo) as u32 },
+            FrameHeader { round, seq, kind, elems: cast::to_u32(shi - slo).map_err(cfail)? },
             &scratch.payload,
             &mut scratch.frame,
         );
@@ -196,14 +198,14 @@ fn ring_allreduce_partials(
     // all-gather: rank r owns the finished chunk (r + 1); circulate the
     // finished chunks around the ring (seq continues where phase 1 ended)
     for s in 0..n - 1 {
-        let seq = block_seq(block, (n - 1 + s) as u32);
+        let seq = block_seq(block, cast::to_u32(n - 1 + s).map_err(cfail)?);
         let send_c = (r + 1 + n - s) % n;
         let recv_c = (r + n - s) % n;
         let (slo, shi) = (scratch.starts[send_c], scratch.starts[send_c + 1]);
         pack_partials(&out[slo..shi], wire, &mut scratch.payload)
             .map_err(|e| local(e, r, round))?;
         encode_frame(
-            FrameHeader { round, seq, kind, elems: (shi - slo) as u32 },
+            FrameHeader { round, seq, kind, elems: cast::to_u32(shi - slo).map_err(cfail)? },
             &scratch.payload,
             &mut scratch.frame,
         );
@@ -257,6 +259,7 @@ fn halving_allreduce_partials(
     }
     let kind = PayloadKind::of_lanes(wire);
     let block = scratch.block;
+    let cfail = |e: cast::CastError| NetError::from_cast(e, r, round);
 
     // reduce-scatter: each step, partner pairs split their common segment;
     // each sends the half it gives up and folds the half it keeps. Both
@@ -280,7 +283,7 @@ fn halving_allreduce_partials(
                 round,
                 seq: block_seq(block, seq),
                 kind,
-                elems: (give.1 - give.0) as u32,
+                elems: cast::to_u32(give.1 - give.0).map_err(cfail)?,
             },
             &scratch.payload,
             &mut scratch.frame,
@@ -312,7 +315,7 @@ fn halving_allreduce_partials(
                 round,
                 seq: block_seq(block, seq),
                 kind,
-                elems: (khi - klo) as u32,
+                elems: cast::to_u32(khi - klo).map_err(cfail)?,
             },
             &scratch.payload,
             &mut scratch.frame,
@@ -417,6 +420,7 @@ pub fn two_level_allreduce_ints(
     msg.add_range_to(0, out);
     let kind = PayloadKind::of_lanes(wire);
     let block = scratch.block;
+    let d32 = cast::to_u32(d).map_err(|e| NetError::from_cast(e, r, round))?;
     let leader = r - r % group;
     if r != leader {
         // member: ship the whole message up, await the finished aggregate.
@@ -424,7 +428,7 @@ pub fn two_level_allreduce_ints(
         // hop 0 of their pair.
         pack_partials(out, wire, &mut scratch.payload).map_err(|e| local(e, r, round))?;
         encode_frame(
-            FrameHeader { round, seq: block_seq(block, 0), kind, elems: d as u32 },
+            FrameHeader { round, seq: block_seq(block, 0), kind, elems: d32 },
             &scratch.payload,
             &mut scratch.frame,
         );
@@ -463,7 +467,7 @@ pub fn two_level_allreduce_ints(
     // broadcast-down: the finished aggregate, one frame per member
     pack_partials(out, wire, &mut scratch.payload).map_err(|e| local(e, r, round))?;
     encode_frame(
-        FrameHeader { round, seq: block_seq(block, 0), kind, elems: d as u32 },
+        FrameHeader { round, seq: block_seq(block, 0), kind, elems: d32 },
         &scratch.payload,
         &mut scratch.frame,
     );
@@ -488,6 +492,8 @@ pub fn ring_allgather_bytes(
 ) -> Result<(), NetError> {
     let n = t.world();
     let r = t.rank();
+    let cfail = |e: cast::CastError| NetError::from_cast(e, r, round);
+    // intlint: allow(R2, reason="grows out to world size on first call; steady state reuses the per-rank buffers")
     out.resize_with(n, Vec::new);
     out[r].clear();
     out[r].extend_from_slice(mine);
@@ -498,22 +504,18 @@ pub fn ring_allgather_bytes(
     let left = (r + n - 1) % n;
     let block = scratch.block;
     for s in 0..n - 1 {
+        let s32 = cast::to_u32(s).map_err(cfail)?;
         let send_origin = (r + n - s) % n;
         let recv_origin = (r + 2 * n - 1 - s) % n;
         let payload = &out[send_origin];
-        if payload.len() > u32::MAX as usize {
-            return Err(NetError::Corrupt {
-                rank: r,
-                round,
-                detail: "payload too large for a frame".into(),
-            });
-        }
+        // an over-long payload fails the checked cast (a frame's length
+        // field is u32) instead of silently truncating on the wire
         encode_frame(
             FrameHeader {
                 round,
-                seq: block_seq(block, s as u32),
+                seq: block_seq(block, s32),
                 kind: PayloadKind::Bytes,
-                elems: payload.len() as u32,
+                elems: cast::to_u32(payload.len()).map_err(cfail)?,
             },
             payload,
             &mut scratch.frame,
@@ -533,7 +535,7 @@ pub fn ring_allgather_bytes(
                 }
                 FrameCheck::Fresh => {}
             }
-            if h.seq != block_seq(block, s as u32) {
+            if h.seq != block_seq(block, s32) {
                 return Err(NetError::Replay {
                     rank: left,
                     round,

@@ -33,6 +33,11 @@
 //! blocking loop as [`NetError::Aborted`] so one rank's failure does not
 //! cost the survivors a full timeout.
 
+// Transport deadline/timeout machinery is an allowed zone for
+// wall-clock reads (clippy.toml): socket deadlines are wall time by
+// nature and never feed round arithmetic.
+#![allow(clippy::disallowed_methods)]
+
 use std::collections::VecDeque;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -43,6 +48,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use super::{default_io_timeout, NetError, Transport, UNKNOWN_ROUND};
+use crate::util::cast;
 
 /// Upper bound on one frame's length prefix — a corrupt prefix must
 /// produce an error, not a multi-gigabyte allocation.
@@ -134,7 +140,7 @@ impl Peer {
             if rem.len() < 4 {
                 break;
             }
-            let len = u32::from_le_bytes([rem[0], rem[1], rem[2], rem[3]]) as usize;
+            let len = cast::usize_from(u32::from_le_bytes([rem[0], rem[1], rem[2], rem[3]]));
             if len > MAX_FRAME_BYTES {
                 // error AFTER draining what was already sliced: bailing
                 // here with the cursor unapplied would re-parse (and
@@ -207,7 +213,7 @@ impl TcpTransport {
                 let mut stream =
                     TcpStream::connect(addrs[j]).with_context(|| format!("rank {i} -> {j}"))?;
                 stream
-                    .write_all(&(i as u32).to_le_bytes())
+                    .write_all(&cast::to_u32(i)?.to_le_bytes())
                     .context("send hello")?;
                 peers[i][j] = Some(Peer::new(stream)?);
             }
@@ -219,7 +225,7 @@ impl TcpTransport {
                 let (mut stream, _) = listener.accept().context("accept")?;
                 let mut hello = [0u8; 4];
                 stream.read_exact(&mut hello).context("read hello")?;
-                let i = u32::from_le_bytes(hello) as usize;
+                let i = cast::usize_from(u32::from_le_bytes(hello));
                 if i >= n || peers[j][i].is_some() {
                     return Err(anyhow!("bogus hello rank {i} at listener {j}"));
                 }
@@ -283,8 +289,10 @@ impl Transport for TcpTransport {
                 ),
             });
         }
+        let len32 = cast::to_u32(frame.len())
+            .map_err(|e| NetError::from_cast(e, to, UNKNOWN_ROUND))?;
         self.wbuf.clear();
-        self.wbuf.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+        self.wbuf.extend_from_slice(&len32.to_le_bytes());
         self.wbuf.extend_from_slice(frame);
         let deadline = Instant::now() + self.timeout;
         let mut written = 0usize;
@@ -292,6 +300,7 @@ impl Transport for TcpTransport {
         while written < self.wbuf.len() {
             let peer = self.peers[to]
                 .as_mut()
+                // intlint: allow(R4, reason="a missing stream is a mesh-construction bug, not a wire-reachable state")
                 .unwrap_or_else(|| panic!("no stream to rank {to}"));
             match peer.stream.write(&self.wbuf[written..]) {
                 Ok(0) => return Err(NetError::PeerDead { rank: to, round: UNKNOWN_ROUND }),
@@ -322,6 +331,7 @@ impl Transport for TcpTransport {
             {
                 let peer = self.peers[from]
                     .as_mut()
+                    // intlint: allow(R4, reason="a missing stream is a mesh-construction bug, not a wire-reachable state")
                     .unwrap_or_else(|| panic!("no stream from rank {from}"));
                 if let Some(frame) = peer.inbox.pop_front() {
                     // hand the inbox's buffer over instead of memcpying a

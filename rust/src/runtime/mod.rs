@@ -59,6 +59,9 @@ pub struct Runtime {
 
 impl Runtime {
     /// Open `artifacts/` (or the dir named by INTSGD_ARTIFACTS).
+    // The executable cache is keyed lookup only — nothing iterates it, so
+    // HashMap's randomized order cannot leak anywhere (clippy.toml).
+    #[allow(clippy::disallowed_methods)]
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.json");

@@ -162,6 +162,14 @@ mod dispatch {
     use super::*;
 
     /// Stochastic-rounding fill (spec: [`scalar::round_stoch`]).
+    ///
+    /// Contract: bit-identical to the scalar spec for every input — each
+    /// lane is `floor(grad[k]*a) + (u < frac)` with the splitmix64 draw
+    /// for counter `base + j0 + k`, evaluated with per-lane IEEE
+    /// mul/floor/convert (no FMA), so lanes never interact.
+    /// `kernel_parity` pins the edges: lengths straddling the 4/8/16-lane
+    /// chunk boundaries (0..=67), and `j0` within 8 of `u64::MAX` so the
+    /// per-lane counter wraps mod 2^64 inside one vector.
     pub fn round_stoch(grad: &[f32], a: f32, base: u64, j0: u64, out: &mut [f32]) {
         assert_eq!(grad.len(), out.len());
         match backend() {
@@ -177,6 +185,12 @@ mod dispatch {
     }
 
     /// Deterministic-rounding fill (spec: [`scalar::round_determ`]).
+    ///
+    /// Contract: bit-identical to the scalar spec — each lane is
+    /// `round_ties_even(grad[k]*a)` via the hardware round-to-nearest
+    /// instruction, which matches `f32::round_ties_even` exactly (never
+    /// the away-from-zero `f32::round`). `kernel_parity` pins exact
+    /// `.5` ties in both directions and chunk-straddling lengths.
     pub fn round_determ(grad: &[f32], a: f32, out: &mut [f32]) {
         assert_eq!(grad.len(), out.len());
         match backend() {
@@ -192,6 +206,11 @@ mod dispatch {
 
     /// `acc[k] += src[k]` widening i8→i64 (spec:
     /// [`scalar::add_widen_i8`]).
+    ///
+    /// Contract: exact in every backend — sign-extension then wrapping
+    /// i64 add has one right answer per lane regardless of vector width.
+    /// `kernel_parity` pins `i8::MIN`/`i8::MAX` lanes and lengths
+    /// straddling the 8/16-lane widen chunks.
     pub fn add_widen_i8(src: &[i8], acc: &mut [i64]) {
         assert_eq!(src.len(), acc.len());
         match backend() {
@@ -210,6 +229,10 @@ mod dispatch {
 
     /// `acc[k] += src[k]` widening i32→i64 (spec:
     /// [`scalar::add_widen_i32`]).
+    ///
+    /// Contract: exact in every backend (sign-extend + wrapping i64
+    /// add, lane-local). `kernel_parity` pins `i32::MIN`/`i32::MAX`
+    /// lanes and the 4-lane chunk boundary tails.
     pub fn add_widen_i32(src: &[i32], acc: &mut [i64]) {
         assert_eq!(src.len(), acc.len());
         match backend() {
@@ -224,6 +247,10 @@ mod dispatch {
     }
 
     /// `acc[k] += src[k]` at full width (spec: [`scalar::add_i64`]).
+    ///
+    /// Contract: exact in every backend — wrapping two's-complement add
+    /// per lane, identical to the scalar `wrapping_add`. `kernel_parity`
+    /// pins wraparound lanes (`i64::MAX + 1`) and chunk-tail lengths.
     pub fn add_i64(src: &[i64], acc: &mut [i64]) {
         assert_eq!(src.len(), acc.len());
         match backend() {
@@ -239,6 +266,10 @@ mod dispatch {
 
     /// `dst[k] = src[k]` widening i8→i64 (spec:
     /// [`scalar::copy_widen_i8`]).
+    ///
+    /// Contract: exact in every backend — pure sign-extension, every
+    /// prior `dst` value overwritten. `kernel_parity` pins
+    /// `i8::MIN`/`i8::MAX` lanes and widen-chunk boundary tails.
     pub fn copy_widen_i8(src: &[i8], dst: &mut [i64]) {
         assert_eq!(src.len(), dst.len());
         match backend() {
@@ -255,6 +286,13 @@ mod dispatch {
     /// Fused multi-rank i8 fold through an i16 intermediate (spec:
     /// [`scalar::sum_ranks_i8`]). Panics if `msgs.len() >`
     /// [`SUM_RANKS_MAX`] or any message length mismatches `acc`.
+    ///
+    /// Contract: exact in every backend. The i16 intermediate cannot
+    /// saturate: `128 ranks * 127 = 16256 < i16::MAX`, so the fused fold
+    /// equals the one-rank-at-a-time widen-and-add bit for bit.
+    /// `kernel_parity` pins the worst case — [`SUM_RANKS_MAX`] ranks of
+    /// all-`i8::MIN` lanes (`128 * -128 = -16384`, still in range) —
+    /// plus empty `msgs` and chunk-straddling lengths.
     pub fn sum_ranks_i8(msgs: &[&[i8]], acc: &mut [i64]) {
         assert!(
             msgs.len() <= SUM_RANKS_MAX,
@@ -280,6 +318,15 @@ mod dispatch {
 
     /// Decode fill `out[k] = (sum[k] as f64 * inv) as f32` (spec:
     /// [`scalar::decode_scale_i64`]).
+    ///
+    /// Contract: bit-identical to the scalar spec — per-lane i64→f64
+    /// convert, one IEEE f64 mul, one f64→f32 round (no FMA). The AVX2
+    /// path uses the 2^52 magic-number convert, exact for
+    /// `|sum[k]| <= 2^51 - 1`, with a per-group guard that routes any
+    /// lane outside that range (i64::MIN included) through the scalar
+    /// spec — so extreme aggregates stay bit-identical too.
+    /// `kernel_parity` pins lanes at the ±(2^51 - 1) guard edge and
+    /// chunk-straddling lengths.
     pub fn decode_scale_i64(sum: &[i64], inv: f64, out: &mut [f32]) {
         assert_eq!(sum.len(), out.len());
         match backend() {
@@ -294,6 +341,14 @@ mod dispatch {
     }
 
     /// Striped squared L2 norm (spec: [`scalar::sq_norm`]).
+    ///
+    /// Contract: bit-identical to the scalar spec *by construction*,
+    /// not by accident — f64 addition is non-associative, so every
+    /// backend accumulates element `i` into stripe `i mod 8` and folds
+    /// the 8 stripes through the one shared
+    /// [`scalar::combine_stripes`]; scalar and vector evaluate the same
+    /// expression tree. `kernel_parity` pins lengths straddling the
+    /// 8-lane stripe period and catastrophic-cancellation inputs.
     pub fn sq_norm(v: &[f32]) -> f64 {
         match backend() {
             #[cfg(target_arch = "x86_64")]
@@ -307,6 +362,13 @@ mod dispatch {
     }
 
     /// Striped squared distance (spec: [`scalar::sq_diff_norm`]).
+    ///
+    /// Contract: same stripe discipline as [`sq_norm`] — element `i` →
+    /// stripe `i mod 8`, folded by the shared
+    /// [`scalar::combine_stripes`] — with the per-lane difference
+    /// computed as one f32 subtract before the f64 widen, exactly as
+    /// the scalar spec writes it. `kernel_parity` sweeps
+    /// stripe-boundary lengths against the spec bitwise.
     pub fn sq_diff_norm(a: &[f32], b: &[f32]) -> f64 {
         assert_eq!(a.len(), b.len());
         match backend() {
@@ -321,6 +383,11 @@ mod dispatch {
     }
 
     /// Largest |lane| of an i8 buffer (spec: [`scalar::max_abs_i8`]).
+    ///
+    /// Contract: exact in every backend — lanes are widened before the
+    /// abs, so `|i8::MIN| = 128` is returned exactly (a naive
+    /// same-width `abs` would wrap it to -128). `kernel_parity` pins an
+    /// all-`i8::MIN` buffer, the empty buffer (→ 0), and chunk tails.
     pub fn max_abs_i8(v: &[i8]) -> i64 {
         match backend() {
             #[cfg(target_arch = "x86_64")]
@@ -337,6 +404,10 @@ mod dispatch {
     }
 
     /// Largest |lane| of an i32 buffer (spec: [`scalar::max_abs_i32`]).
+    ///
+    /// Contract: exact in every backend — widen to i64 before the abs,
+    /// so `|i32::MIN| = 2^31` is exact. `kernel_parity` pins
+    /// `i32::MIN` lanes, the empty buffer, and chunk-tail lengths.
     pub fn max_abs_i32(v: &[i32]) -> i64 {
         match backend() {
             #[cfg(target_arch = "x86_64")]
@@ -352,6 +423,11 @@ mod dispatch {
     /// Largest |lane| of an i64 buffer, saturating at `i64::MIN` (spec:
     /// [`scalar::max_abs_i64`]). aarch64 keeps the scalar fold (NEON has
     /// no 64-bit max; the scalar loop is already one `csel` per lane).
+    ///
+    /// Contract: exact in every backend, including the one lane with no
+    /// true answer — `|i64::MIN|` does not fit i64, and both spec and
+    /// vector paths saturate it to `i64::MAX`. `kernel_parity` pins an
+    /// `i64::MIN` lane, the empty buffer, and chunk-tail lengths.
     pub fn max_abs_i64(v: &[i64]) -> i64 {
         match backend() {
             #[cfg(target_arch = "x86_64")]

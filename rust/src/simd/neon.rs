@@ -173,6 +173,8 @@ pub(super) unsafe fn decode_scale_i64(sum: &[i64], inv: f64, out: &mut [f32]) {
 
 /// Horizontal fold of the 4 f64x2 stripe accumulators plus the
 /// remainder, via the shared stripe combiner.
+///
+/// Safety: NEON (aarch64 baseline).
 #[inline]
 unsafe fn finish_stripes(acc: [float64x2_t; 4], tail: impl Iterator<Item = f64>) -> f64 {
     let mut s = [0.0f64; 8];

@@ -36,6 +36,9 @@ const MIX2: u64 = 0x94D049BB133111EB;
 /// 64-bit lane-wise `a * b mod 2^64` on AVX2 (which has no `pmullq`):
 /// `lo32(a)*lo32(b) + ((lo32(a)*hi32(b) + hi32(a)*lo32(b)) << 32)`.
 /// `b_hi` is `b >> 32`, precomputed once per constant.
+///
+/// Safety: AVX2 only — reachable solely from the `target_feature`-gated
+/// kernels below, whose callers verified support.
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn mullo_epu64(a: __m256i, b: __m256i, b_hi: __m256i) -> __m256i {
@@ -47,6 +50,9 @@ unsafe fn mullo_epu64(a: __m256i, b: __m256i, b_hi: __m256i) -> __m256i {
 
 /// The SplitMix64 finalizer on 4 u64 lanes (`util::rng::splitmix64_at`
 /// minus the counter add, which the caller folds into `z`).
+///
+/// Safety: AVX2 only — reachable solely from the `target_feature`-gated
+/// kernels below, whose callers verified support.
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn splitmix_mix(
@@ -415,11 +421,16 @@ pub(super) unsafe fn max_abs_i64(v: &[i64]) -> i64 {
 
 /// Sign-extend the low 8 bytes of `x` to i16 lanes (SSE2 has no
 /// `pmovsxbw`): self-interleave then arithmetic-shift the copies out.
+///
+/// Safety: SSE2 is the x86_64 baseline, unconditionally present.
 #[inline]
 unsafe fn widen16_lo(x: __m128i) -> __m128i {
     _mm_srai_epi16(_mm_unpacklo_epi8(x, x), 8)
 }
 
+/// Sign-extend the high 8 bytes of `x` to i16 lanes.
+///
+/// Safety: SSE2 is the x86_64 baseline, unconditionally present.
 #[inline]
 unsafe fn widen16_hi(x: __m128i) -> __m128i {
     _mm_srai_epi16(_mm_unpackhi_epi8(x, x), 8)

@@ -1,0 +1,171 @@
+//! Checked narrowing casts — the one audited home for integer narrowing.
+//!
+//! intlint rule R3 bans raw `as` casts to narrower integer types inside
+//! the hostile-input decode paths (`net/`, `compress/wire.rs`,
+//! `compress/intvec.rs`): a silent wrap on an attacker-chosen element
+//! count or lane tag is how "provably exact" becomes "quietly wrong".
+//! Every narrowing in those files goes through this module instead —
+//! either a checked `to_*` helper that errors on overflow (surfaced as
+//! `NetError::Corrupt` via [`crate::net::NetError::from_cast`], or
+//! through `anyhow` in the wire codecs), or one of the named infallible
+//! reinterpretations below whose correctness is proved here once.
+//!
+//! This module itself is *outside* R3's scope by design: raw `as` is
+//! reviewed in one place rather than at a hundred call sites.
+
+use std::fmt;
+
+/// A narrowing conversion failed: `value` does not fit in the target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CastError {
+    /// The offending value, widened for display. Saturates at
+    /// `i128::MAX` for `u128` sources beyond the signed range.
+    pub value: i128,
+    /// Name of the target type that could not hold it.
+    pub target: &'static str,
+}
+
+impl fmt::Display for CastError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "value {} does not fit in {}", self.value, self.target)
+    }
+}
+
+impl std::error::Error for CastError {}
+
+macro_rules! checked_cast {
+    ($(#[$doc:meta])* $name:ident => $target:ty) => {
+        $(#[$doc])*
+        pub fn $name<T>(v: T) -> Result<$target, CastError>
+        where
+            T: Copy + TryInto<$target> + TryInto<i128>,
+        {
+            TryInto::<$target>::try_into(v).map_err(|_| CastError {
+                value: TryInto::<i128>::try_into(v).unwrap_or(i128::MAX),
+                target: stringify!($target),
+            })
+        }
+    };
+}
+
+checked_cast!(
+    /// Checked conversion to `i8`; `Err` if the value is out of range.
+    to_i8 => i8
+);
+checked_cast!(
+    /// Checked conversion to `u8`; `Err` if the value is out of range.
+    to_u8 => u8
+);
+checked_cast!(
+    /// Checked conversion to `i16`; `Err` if the value is out of range.
+    to_i16 => i16
+);
+checked_cast!(
+    /// Checked conversion to `u16`; `Err` if the value is out of range.
+    to_u16 => u16
+);
+checked_cast!(
+    /// Checked conversion to `i32`; `Err` if the value is out of range.
+    to_i32 => i32
+);
+checked_cast!(
+    /// Checked conversion to `u32`; `Err` if the value is out of range.
+    to_u32 => u32
+);
+checked_cast!(
+    /// Checked conversion to `usize`; `Err` if the value is out of range.
+    to_usize => usize
+);
+
+// Supported targets are at least 32-bit; `usize_from` relies on it.
+const _: () = assert!(usize::BITS >= 32, "intsgd requires a 32-bit-or-wider usize");
+
+/// Infallible `u32 -> usize` widening (the build asserts
+/// `usize::BITS >= 32` above, so this can never truncate).
+#[inline]
+pub fn usize_from(v: u32) -> usize {
+    v as usize
+}
+
+/// Intentional truncation to the low byte — the wire writers emit
+/// little-endian bytes by shifting, and the `& 0xFF` mask makes the
+/// truncation explicit rather than incidental.
+#[inline]
+pub fn low_u8(v: u64) -> u8 {
+    (v & 0xFF) as u8
+}
+
+/// Bit-reinterpret an `i8` lane as its wire byte (two's complement,
+/// value-preserving mod 256; the inverse of [`i8_of_byte`]).
+#[inline]
+pub fn byte_of_i8(v: i8) -> u8 {
+    u8::from_ne_bytes(v.to_ne_bytes())
+}
+
+/// Bit-reinterpret a wire byte as an `i8` lane (two's complement; the
+/// inverse of [`byte_of_i8`]).
+#[inline]
+pub fn i8_of_byte(b: u8) -> i8 {
+    i8::from_ne_bytes(b.to_ne_bytes())
+}
+
+/// Saturating conversion to `u16` for telemetry labels (a journal block
+/// id beyond 65534 clamps rather than wraps; `u16::MAX` is the journal's
+/// `ALL` sentinel, so saturate one below it).
+#[inline]
+pub fn sat_u16(v: usize) -> u16 {
+    v.try_into().unwrap_or(u16::MAX - 1)
+}
+
+/// Saturating conversion to `u32` for telemetry labels and round
+/// counters that only feed displays, never the wire.
+#[inline]
+pub fn sat_u32(v: usize) -> u32 {
+    v.try_into().unwrap_or(u32::MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checked_casts_accept_in_range_values() {
+        assert_eq!(to_i8(-128i32), Ok(-128i8));
+        assert_eq!(to_u8(255u16), Ok(255u8));
+        assert_eq!(to_i16(255u8), Ok(255i16));
+        assert_eq!(to_u16(65_535u32), Ok(65_535u16));
+        assert_eq!(to_i32(i64::from(i32::MAX)), Ok(i32::MAX));
+        assert_eq!(to_u32(4_294_967_295u64), Ok(u32::MAX));
+        assert_eq!(to_usize(7u64), Ok(7usize));
+    }
+
+    #[test]
+    fn checked_casts_error_with_value_and_target() {
+        let e = to_i8(200i32).unwrap_err();
+        assert_eq!(e, CastError { value: 200, target: "i8" });
+        assert_eq!(e.to_string(), "value 200 does not fit in i8");
+        assert!(to_u8(-1i32).is_err());
+        assert!(to_i16(40_000u32).is_err());
+        assert!(to_u32(u64::MAX).is_err());
+        assert!(to_usize(-1i64).is_err());
+    }
+
+    #[test]
+    fn reinterpretations_round_trip() {
+        for b in 0..=u8::MAX {
+            assert_eq!(byte_of_i8(i8_of_byte(b)), b);
+        }
+        assert_eq!(byte_of_i8(-1), 0xFF);
+        assert_eq!(i8_of_byte(0x80), i8::MIN);
+        assert_eq!(low_u8(0x1234_5678_9ABC_DEF0), 0xF0);
+        assert_eq!(usize_from(u32::MAX), u32::MAX as usize);
+    }
+
+    #[test]
+    fn saturating_casts_clamp() {
+        assert_eq!(sat_u16(3), 3);
+        assert_eq!(sat_u16(usize::MAX), u16::MAX - 1);
+        assert_eq!(sat_u32(9), 9);
+        assert_eq!(sat_u32(usize::MAX), u32::MAX);
+    }
+}

@@ -3,6 +3,7 @@
 //! These modules exist because the offline vendor set carries no `rand`,
 //! `serde`/`serde_json`, or `proptest`; the repository is self-contained.
 
+pub mod cast;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -57,6 +57,59 @@ fn chrome_trace_matches_golden_bytes() {
     assert!(enc1.start_ns < red0.start_ns + red0.dur_ns);
 }
 
+/// The golden family list: every instrument registered in
+/// `telemetry/registry.rs` must be named here, literally, and nothing
+/// else may be registered. This is the anchor for intlint rule R6 — a
+/// new instrument that is not added to this scrape test (and therefore
+/// never verified over a real `/metrics` scrape) fails static analysis
+/// before it fails in a dashboard.
+const FAMILIES: [&str; 23] = [
+    "intsgd_rounds_total",
+    "intsgd_failovers_total",
+    "intsgd_train_loss",
+    "intsgd_alpha",
+    "intsgd_alpha_min",
+    "intsgd_clip_utilization",
+    "intsgd_clip_saturated_rounds_total",
+    "intsgd_wire_bytes_per_coord",
+    "intsgd_wire_bytes_total",
+    "intsgd_wire_lane_rounds_total",
+    "intsgd_encode_seconds",
+    "intsgd_reduce_seconds",
+    "intsgd_decode_seconds",
+    "intsgd_comm_measured_seconds",
+    "intsgd_net_collectives_total",
+    "intsgd_net_retries_total",
+    "intsgd_net_timeouts_total",
+    "intsgd_net_replays_total",
+    "intsgd_net_corrupt_total",
+    "intsgd_net_stale_frames_total",
+    "intsgd_faults_injected_total",
+    "intsgd_journal_events_total",
+    "intsgd_journal_dropped_total",
+];
+
+#[test]
+fn registry_families_match_the_golden_list() {
+    let registered: Vec<&str> = registry::all().iter().map(|d| d.name).collect();
+    for name in FAMILIES {
+        assert!(
+            registered.contains(&name),
+            "golden family {name} is no longer registered — update FAMILIES \
+             (and DESIGN.md §12) if the removal is intentional"
+        );
+    }
+    for name in &registered {
+        assert!(
+            FAMILIES.contains(name),
+            "instrument {name} is registered but missing from the golden \
+             FAMILIES list — add it here so the scrape test covers it \
+             (intlint R6 enforces this statically)"
+        );
+    }
+    assert_eq!(registered.len(), FAMILIES.len(), "duplicate registration");
+}
+
 #[test]
 fn prometheus_scrape_serves_every_family_and_type() {
     let server = MetricsServer::bind("127.0.0.1:0").expect("bind :0");
