@@ -34,7 +34,7 @@ use intsgd::net::staged::{
     StagedScratch,
 };
 use intsgd::net::{
-    ChannelTransport, StagedAlgo, TcpTransport, Transport, TransportReducer,
+    ChannelTransport, MuxTransport, StagedAlgo, TcpTransport, Transport, TransportReducer,
 };
 use intsgd::netsim::Network;
 use intsgd::scaling::MovingAverageRule;
@@ -411,6 +411,90 @@ fn pipeline_cases(iters: usize, d: usize) -> Json {
     ])
 }
 
+/// Part 5: multi-job serving capacity — 1 vs many concurrent staged
+/// rings over ONE shared multiplexed mesh (`net::poll`), each job on its
+/// own logical channel of the same sockets. Bit-parity per job is
+/// asserted every pass; the per-job round rate and the wire occupancy
+/// (i8 payload + the 8-byte mux envelope per frame, per coordinate) are
+/// the numbers the serve-smoke CI gate watches.
+fn mux_cases(iters: usize, d: usize, n: usize, job_counts: &[usize]) -> Json {
+    let clip = (i8::MAX as usize / n) as u64;
+    let mut rows = Vec::new();
+    for &jobs in job_counts {
+        let mut rng = Rng::new(31);
+        let per_job: Vec<Vec<IntVec>> = (0..jobs)
+            .map(|_| {
+                (0..n)
+                    .map(|_| {
+                        let vals: Vec<i64> = (0..d)
+                            .map(|_| rng.below(2 * clip + 1) as i64 - clip as i64)
+                            .collect();
+                        IntVec::from_i64(&vals, Lanes::I8)
+                    })
+                    .collect()
+            })
+            .collect();
+        let wants: Vec<Vec<i64>> = per_job
+            .iter()
+            .map(|msgs| {
+                let views: Vec<&IntVec> = msgs.iter().collect();
+                let mut want = Vec::new();
+                allreduce_intvec(&views, &mut want);
+                want
+            })
+            .collect();
+        println!(
+            "\nmux serving: d = 2^{}, n = {n}, {jobs} concurrent job(s), one mesh",
+            d.trailing_zeros()
+        );
+
+        let mut mesh = MuxTransport::loopback_mesh(n, jobs).expect("mux mesh");
+        let mut states: Vec<Vec<(StagedScratch, Vec<i64>)>> = (0..jobs)
+            .map(|_| (0..n).map(|_| Default::default()).collect())
+            .collect();
+        let mut round = 0u32;
+        let s = bench(&format!("mux_ring jobs={jobs:<3}   n={n}"), iters, || {
+            let t = Instant::now();
+            std::thread::scope(|scope| {
+                for ((eps, msgs), job_states) in
+                    mesh.iter_mut().zip(&per_job).zip(states.iter_mut())
+                {
+                    for ((ep, msg), state) in
+                        eps.iter_mut().zip(msgs).zip(job_states.iter_mut())
+                    {
+                        scope.spawn(move || {
+                            let (scratch, out) = state;
+                            ring_allreduce_ints(ep, msg, Lanes::I8, round, scratch, out)
+                                .expect("mux ring");
+                        });
+                    }
+                }
+            });
+            round += 1;
+            t.elapsed().as_secs_f64()
+        });
+        for (j, job_states) in states.iter().enumerate() {
+            assert_eq!(job_states[0].1, wants[j], "job {j}: wrong bits over the mux");
+        }
+        // analytic occupancy (deterministic, so the gate holds it exactly):
+        // the ring ships 2(n-1) chunks of d/n i8 coords per rank, each in
+        // one mux envelope of 8 bytes
+        let frames_per_rank = 2 * (n - 1);
+        let bytes_per_coord = frames_per_rank as f64 / n as f64
+            * Lanes::I8.bytes() as f64
+            + frames_per_rank as f64 * 8.0 / d as f64;
+        rows.push(obj(vec![
+            ("jobs", num(jobs as f64)),
+            ("n", num(n as f64)),
+            ("d", num(d as f64)),
+            ("round_ms", num(s * 1e3)),
+            ("rounds_per_sec_per_job", num(1.0 / s.max(1e-12))),
+            ("mux_bytes_per_coord", num(bytes_per_coord)),
+        ]));
+    }
+    Json::Arr(rows)
+}
+
 fn main() {
     let smoke = smoke();
     let (iters, d_net, legacy_sizes): (usize, usize, Vec<usize>) = if smoke {
@@ -431,12 +515,14 @@ fn main() {
     };
     let scaling = scaling_cases(iters, d_scale, &scale_worlds);
     let pipeline = pipeline_cases(iters, d_net);
+    let mux = mux_cases(iters, d_net, 4, &[1, 4]);
     let report = obj(vec![
         ("bench", Json::Str("bench_collective".into())),
         ("smoke", Json::Bool(smoke)),
         ("net", cases),
         ("scaling", scaling),
         ("pipeline", pipeline),
+        ("mux", mux),
     ]);
     let path = "BENCH_net.json";
     std::fs::write(path, json::to_string(&report)).expect("write bench report");

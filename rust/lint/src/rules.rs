@@ -16,6 +16,8 @@ const HOT_MODULES: &[&str] = &[
     "net/staged.rs",
     "net/frame.rs",
     "net/reducer.rs",
+    "net/poll/sys.rs",
+    "net/poll/conn.rs",
     "telemetry/journal.rs",
     "telemetry/registry.rs",
 ];

@@ -112,3 +112,25 @@ pub const TRACE: &[&str] = &[
     "out",
     "serve_ms",
 ];
+
+/// `repro serve` — N concurrent jobs over one shared mux mesh
+/// (`coordinator::serve_cmd`).
+pub const SERVE: &[&str] = &[
+    "jobs",
+    "workers",
+    "d",
+    "rounds",
+    "lr",
+    "seed",
+    "algo",
+    "pipeline",
+    "hierarchy.group_size",
+    "net.timeout_ms",
+    "net.retries",
+    "net.mux.queue_frames",
+    "server.schedule",
+    "server.jitter_seed",
+    "telemetry.trace_path",
+    "telemetry.listen",
+    "serve_ms",
+];

@@ -32,8 +32,10 @@
 //! `Coordinator::train` path (pinned by `tests/session_api.rs`).
 
 pub mod keys;
+pub mod serve;
 pub mod spec;
 
+pub use serve::{JobHandle, JobSchedule, SessionServer};
 pub use spec::{CompressorSpec, RuleSpec, ZOO};
 
 pub use crate::coordinator::{
@@ -52,7 +54,7 @@ use crate::compress::{Lanes, RoundEngine};
 use crate::coordinator::{Coordinator, TrainConfig, TrainState, WorkerPool};
 use crate::net::{
     default_io_timeout, ChannelTransport, FaultPlan, FaultTransport, KillAt,
-    TcpTransport, Transport, TransportReducer,
+    MuxTransport, TcpTransport, Transport, TransportReducer,
 };
 use crate::runtime::Checkpoint;
 
@@ -77,16 +79,25 @@ pub enum Backend {
     /// Staged collective over loopback TCP sockets: framed bytes between
     /// ranks, the measured-wire reference.
     Tcp { algo: StagedAlgo },
+    /// Staged collective over one channel of the multiplexed nonblocking
+    /// runtime (`net::poll`): by default a private single-channel
+    /// loopback mesh, or — via [`SessionBuilder::mux_endpoints`] — one
+    /// channel of a mesh shared with other concurrent jobs
+    /// ([`SessionServer`]).
+    Mux { algo: StagedAlgo },
 }
 
 impl Backend {
     fn is_transport(self) -> bool {
-        matches!(self, Backend::Channel { .. } | Backend::Tcp { .. })
+        matches!(
+            self,
+            Backend::Channel { .. } | Backend::Tcp { .. } | Backend::Mux { .. }
+        )
     }
 
     fn staged_algo(self) -> Option<StagedAlgo> {
         match self {
-            Backend::Channel { algo } | Backend::Tcp { algo } => Some(algo),
+            Backend::Channel { algo } | Backend::Tcp { algo } | Backend::Mux { algo } => Some(algo),
             _ => None,
         }
     }
@@ -236,6 +247,7 @@ pub struct SessionBuilder {
     pipeline: Pipeline,
     trace_path: Option<String>,
     metrics_listen: Option<String>,
+    mux: Option<Vec<MuxTransport>>,
 }
 
 impl Default for SessionBuilder {
@@ -267,6 +279,7 @@ impl Default for SessionBuilder {
             pipeline: Pipeline::Barrier,
             trace_path: None,
             metrics_listen: None,
+            mux: None,
         }
     }
 }
@@ -411,6 +424,17 @@ impl SessionBuilder {
         self
     }
 
+    /// Run this session over pre-built mux endpoints — one
+    /// [`MuxTransport`] per rank, all on the same channel of a shared
+    /// [`MuxTransport::loopback_mesh`]. This is how a [`SessionServer`]
+    /// gives each job its own logical channel of one physical socket
+    /// mesh; requires [`Backend::Mux`]. Without this, `Backend::Mux`
+    /// builds a private single-channel mesh.
+    pub fn mux_endpoints(mut self, endpoints: Vec<MuxTransport>) -> Self {
+        self.mux = Some(endpoints);
+        self
+    }
+
     /// Round driver: [`Pipeline::Barrier`] (default) or
     /// [`Pipeline::Streamed`], the double-buffered block pipeline that
     /// overlaps encode, the collective, and decode (bit-identical output;
@@ -505,14 +529,14 @@ impl SessionBuilder {
             return Err(anyhow!(
                 "the streamed pipeline reduces each block through an explicit \
                  reducer; the Pool backend folds inside the worker pool and has \
-                 none (use Backend::Serial, Channel, or Tcp)"
+                 none (use Backend::Serial, Channel, Tcp, or Mux)"
             ));
         }
         if let Some(f) = &self.faults {
             if !self.backend.is_transport() {
                 return Err(anyhow!(
                     "fault injection wraps a transport; the {:?} backend has none \
-                     (use Backend::Channel or Backend::Tcp)",
+                     (use Backend::Channel, Backend::Tcp, or Backend::Mux)",
                     self.backend
                 ));
             }
@@ -520,6 +544,36 @@ impl SessionBuilder {
         }
         if self.net_timeout.is_zero() {
             return Err(anyhow!("the net timeout must be positive"));
+        }
+        if let Some(eps) = &self.mux {
+            if !matches!(self.backend, Backend::Mux { .. }) {
+                return Err(anyhow!(
+                    "mux_endpoints were provided but the backend is {:?}; shared \
+                     mux channels need Backend::Mux",
+                    self.backend
+                ));
+            }
+            if eps.len() != n {
+                return Err(anyhow!(
+                    "mux_endpoints holds {} transports for a world of {n} ranks",
+                    eps.len()
+                ));
+            }
+            for (r, ep) in eps.iter().enumerate() {
+                if ep.world() != n {
+                    return Err(anyhow!(
+                        "mux endpoint {r} belongs to a {}-rank mesh, not {n}",
+                        ep.world()
+                    ));
+                }
+                if ep.rank() != r {
+                    return Err(anyhow!(
+                        "mux endpoint at position {r} reports rank {}; pass the \
+                         channel's endpoints in rank order",
+                        ep.rank()
+                    ));
+                }
+            }
         }
 
         // -- checkpointing ----------------------------------------------
@@ -584,6 +638,27 @@ impl SessionBuilder {
                     SessionReducer::Tcp(TransportReducer::new(mesh, algo))
                 }
             }
+            Backend::Mux { algo } => {
+                // either one channel of a shared mesh (SessionServer) or a
+                // private single-channel mesh of our own
+                let mesh = match self.mux {
+                    Some(endpoints) => endpoints,
+                    None => {
+                        let mut channels = MuxTransport::loopback_mesh(n, 1)?;
+                        channels.remove(0)
+                    }
+                };
+                if faults.is_chaotic() {
+                    let wrapped = FaultTransport::wrap_mesh(
+                        mesh,
+                        &faults.plan(self.seed),
+                        faults.kill_at(),
+                    );
+                    SessionReducer::MuxFaulty(TransportReducer::new(wrapped, algo))
+                } else {
+                    SessionReducer::Mux(TransportReducer::new(mesh, algo))
+                }
+            }
         };
         red.configure(self.net_timeout, self.net_retries);
 
@@ -623,6 +698,8 @@ enum SessionReducer {
     ChannelFaulty(TransportReducer<FaultTransport<ChannelTransport>>),
     Tcp(TransportReducer<TcpTransport>),
     TcpFaulty(TransportReducer<FaultTransport<TcpTransport>>),
+    Mux(TransportReducer<MuxTransport>),
+    MuxFaulty(TransportReducer<FaultTransport<MuxTransport>>),
 }
 
 impl SessionReducer {
@@ -634,6 +711,8 @@ impl SessionReducer {
             SessionReducer::ChannelFaulty(r) => Some(r),
             SessionReducer::Tcp(r) => Some(r),
             SessionReducer::TcpFaulty(r) => Some(r),
+            SessionReducer::Mux(r) => Some(r),
+            SessionReducer::MuxFaulty(r) => Some(r),
         }
     }
 
@@ -648,6 +727,8 @@ impl SessionReducer {
             SessionReducer::ChannelFaulty(r) => cfg(r, timeout, retries),
             SessionReducer::Tcp(r) => cfg(r, timeout, retries),
             SessionReducer::TcpFaulty(r) => cfg(r, timeout, retries),
+            SessionReducer::Mux(r) => cfg(r, timeout, retries),
+            SessionReducer::MuxFaulty(r) => cfg(r, timeout, retries),
         }
     }
 
@@ -665,6 +746,8 @@ impl SessionReducer {
             SessionReducer::ChannelFaulty(r) => Some(stats(r)),
             SessionReducer::Tcp(r) => Some(stats(r)),
             SessionReducer::TcpFaulty(r) => Some(stats(r)),
+            SessionReducer::Mux(r) => Some(stats(r)),
+            SessionReducer::MuxFaulty(r) => Some(stats(r)),
         }
     }
 }

@@ -1,0 +1,288 @@
+//! Multi-job serving: one [`SessionServer`] schedules many built
+//! [`Session`]s over a shared physical mesh (DESIGN.md §13).
+//!
+//! The mux runtime (`net::poll`) already lets N jobs share one socket
+//! mesh — each job drives its own logical channel of a
+//! [`crate::net::MuxTransport::loopback_mesh`]. This module adds the
+//! serving layer on top:
+//!
+//! ```text
+//! SessionServer::new(JobSchedule::RoundRobin)
+//!     ├── add_job("tuning-a", session_a, 200)?   channel 0 of the mesh
+//!     ├── add_job("tuning-b", session_b, 200)?   channel 1 of the mesh
+//!     ├── run_to_completion()?     interleaved rounds, fair quanta
+//!     └── shutdown()               graceful: finish() every session
+//! ```
+//!
+//! The scheduler is cooperative and single-threaded: a quantum is one
+//! job running `priority` rounds (weighted round-robin), or one round
+//! of a uniformly drawn runnable job ([`JobSchedule::Jitter`], seeded —
+//! so any interleaving the scheduler can produce is reproducible, and
+//! `tests/serve.rs` pins that *every* interleaving yields bit-identical
+//! per-job results). Isolation is the transport's: each job's frames
+//! ride a private channel with its own round/seq guard, so a fault —
+//! even a killed rank — in one job never perturbs a sibling's bytes.
+//!
+//! Job lifecycle feeds the registry: `SERVER_JOBS_ACTIVE` (gauge) and
+//! `SERVER_JOBS_COMPLETED` (counter), alongside the per-channel
+//! `intsgd_mux_queue_depth` gauge the transport maintains.
+
+use anyhow::{anyhow, Result};
+
+use super::Session;
+use crate::coordinator::{RoundObserver, TrainResult};
+use crate::telemetry::m;
+use crate::util::Rng;
+
+/// How the server picks the next job to run a quantum for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobSchedule {
+    /// Cycle through runnable jobs in admission order; each visit runs
+    /// the job's `priority` rounds (so priority 2 gets twice the rounds
+    /// per cycle of priority 1).
+    RoundRobin,
+    /// Seeded uniform pick among runnable jobs, one round per pick —
+    /// deterministic scheduler chaos for interleaving-independence
+    /// tests.
+    Jitter { seed: u64 },
+}
+
+/// An admission ticket for one job, valid only on the server that
+/// issued it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JobHandle(usize);
+
+struct Job {
+    name: String,
+    session: Session,
+    remaining: usize,
+    priority: usize,
+    observer: Option<Box<dyn RoundObserver>>,
+    error: Option<String>,
+}
+
+impl Job {
+    fn runnable(&self) -> bool {
+        self.remaining > 0 && self.error.is_none()
+    }
+}
+
+/// A cooperative multi-job scheduler over already-built [`Session`]s.
+/// See the module docs for the model; the expected wiring gives every
+/// job [`super::Backend::Mux`] endpoints on its own channel of one
+/// shared mesh ([`super::SessionBuilder::mux_endpoints`]), though any
+/// mix of backends is accepted.
+pub struct SessionServer {
+    jobs: Vec<Job>,
+    schedule: JobSchedule,
+    rng: Rng,
+    cursor: usize,
+    draining: bool,
+}
+
+impl SessionServer {
+    pub fn new(schedule: JobSchedule) -> SessionServer {
+        let seed = match schedule {
+            JobSchedule::Jitter { seed } => seed,
+            JobSchedule::RoundRobin => 0,
+        };
+        SessionServer {
+            jobs: Vec::new(),
+            schedule,
+            rng: Rng::new(seed),
+            cursor: 0,
+            draining: false,
+        }
+    }
+
+    /// Admit a job at priority 1 with no observer.
+    pub fn add_job(
+        &mut self,
+        name: impl Into<String>,
+        session: Session,
+        rounds: usize,
+    ) -> Result<JobHandle> {
+        self.add_job_with(name, session, rounds, 1, None)
+    }
+
+    /// Admit a job: run `session` for `rounds` rounds, `priority`
+    /// consecutive rounds per round-robin visit, streaming each round
+    /// to `observer`. Fails once [`SessionServer::drain`] has begun.
+    pub fn add_job_with(
+        &mut self,
+        name: impl Into<String>,
+        session: Session,
+        rounds: usize,
+        priority: usize,
+        observer: Option<Box<dyn RoundObserver>>,
+    ) -> Result<JobHandle> {
+        let name = name.into();
+        if self.draining {
+            return Err(anyhow!("server is draining; job {name} refused"));
+        }
+        if rounds == 0 {
+            return Err(anyhow!("job {name} wants zero rounds"));
+        }
+        if priority == 0 {
+            return Err(anyhow!("job {name} wants priority 0; the minimum share is 1"));
+        }
+        let handle = JobHandle(self.jobs.len());
+        self.jobs.push(Job {
+            name,
+            session,
+            remaining: rounds,
+            priority,
+            observer,
+            error: None,
+        });
+        self.publish_active();
+        Ok(handle)
+    }
+
+    /// Jobs admitted so far (any state).
+    pub fn jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Whether the job ran all its rounds (an errored job is *not*
+    /// done — see [`SessionServer::error`]).
+    pub fn is_done(&self, handle: JobHandle) -> bool {
+        let job = &self.jobs[handle.0];
+        job.remaining == 0 && job.error.is_none()
+    }
+
+    /// The error that stopped this job, if any. One job's failure never
+    /// stops its siblings; it is reported here and summarized by
+    /// [`SessionServer::run_to_completion`]'s return value.
+    pub fn error(&self, handle: JobHandle) -> Option<&str> {
+        self.jobs[handle.0].error.as_deref()
+    }
+
+    pub fn name(&self, handle: JobHandle) -> &str {
+        &self.jobs[handle.0].name
+    }
+
+    /// The job's live session (parameters, records, failovers, wire
+    /// stats — everything [`Session`] exposes).
+    pub fn session(&self, handle: JobHandle) -> &Session {
+        &self.jobs[handle.0].session
+    }
+
+    /// Shorthand for `session(handle).params()`.
+    pub fn params(&self, handle: JobHandle) -> &[f32] {
+        self.jobs[handle.0].session.params()
+    }
+
+    fn publish_active(&self) {
+        let active = self.jobs.iter().filter(|j| j.runnable()).count();
+        m::SERVER_JOBS_ACTIVE.set(crate::util::cast::sat_u32(active).into());
+    }
+
+    /// Pick the next job index per the schedule, or None when no job is
+    /// runnable.
+    fn pick(&mut self) -> Option<usize> {
+        let runnable = self.jobs.iter().filter(|j| j.runnable()).count();
+        if runnable == 0 {
+            return None;
+        }
+        match self.schedule {
+            JobSchedule::RoundRobin => {
+                for _ in 0..self.jobs.len() {
+                    let idx = self.cursor % self.jobs.len();
+                    self.cursor += 1;
+                    if self.jobs[idx].runnable() {
+                        return Some(idx);
+                    }
+                }
+                None
+            }
+            JobSchedule::Jitter { .. } => {
+                let mut nth = self.rng.below(runnable as u64);
+                for (idx, job) in self.jobs.iter().enumerate() {
+                    if job.runnable() {
+                        if nth == 0 {
+                            return Some(idx);
+                        }
+                        nth -= 1;
+                    }
+                }
+                None
+            }
+        }
+    }
+
+    /// Run one scheduling quantum: the picked job executes up to
+    /// `priority` rounds (always exactly one under
+    /// [`JobSchedule::Jitter`]). Returns whether any job is still
+    /// runnable afterwards. A round error parks the job with its error
+    /// recorded; siblings are untouched.
+    pub fn step(&mut self) -> bool {
+        let Some(idx) = self.pick() else {
+            return false;
+        };
+        let quantum = match self.schedule {
+            JobSchedule::RoundRobin => self.jobs[idx].priority,
+            JobSchedule::Jitter { .. } => 1,
+        };
+        let job = &mut self.jobs[idx];
+        for _ in 0..quantum.min(job.remaining) {
+            let stepped = match job.observer.as_deref_mut() {
+                Some(obs) => job.session.step_observed(obs),
+                None => job.session.step(),
+            };
+            match stepped {
+                Ok(_) => {
+                    job.remaining -= 1;
+                    if job.remaining == 0 {
+                        m::SERVER_JOBS_COMPLETED.inc();
+                    }
+                }
+                Err(e) => {
+                    job.error = Some(format!("{e:#}"));
+                    break;
+                }
+            }
+        }
+        self.publish_active();
+        self.jobs.iter().any(Job::runnable)
+    }
+
+    /// Drive every job to completion (or to its first error). Errors
+    /// are isolated per job and summarized in the returned `Err` once
+    /// everything runnable has finished; `Ok` means every job ran all
+    /// its rounds.
+    pub fn run_to_completion(&mut self) -> Result<()> {
+        while self.step() {}
+        let failed: Vec<String> = self
+            .jobs
+            .iter()
+            .filter_map(|j| j.error.as_ref().map(|e| format!("{}: {e}", j.name)))
+            .collect();
+        if failed.is_empty() {
+            Ok(())
+        } else {
+            Err(anyhow!(
+                "{} of {} jobs failed — {}",
+                failed.len(),
+                self.jobs.len(),
+                failed.join("; ")
+            ))
+        }
+    }
+
+    /// Graceful drain: refuse new admissions, then run what remains to
+    /// completion.
+    pub fn drain(&mut self) -> Result<()> {
+        self.draining = true;
+        self.run_to_completion()
+    }
+
+    /// Shut down: finish every session (worker pools join, traces
+    /// flush) and hand back each job's full result, in admission order.
+    pub fn shutdown(self) -> Vec<(String, TrainResult)> {
+        self.jobs
+            .into_iter()
+            .map(|j| (j.name, j.session.finish()))
+            .collect()
+    }
+}

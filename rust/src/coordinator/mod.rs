@@ -27,6 +27,7 @@
 
 pub mod net_driver;
 pub mod pjrt_worker;
+pub mod serve_cmd;
 pub mod trace_cmd;
 pub mod worker;
 

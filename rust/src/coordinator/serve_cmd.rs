@@ -1,0 +1,199 @@
+//! `repro serve` — N concurrent training jobs over ONE shared socket
+//! mesh, the [`crate::api::SessionServer`] demonstrator.
+//!
+//!   repro serve jobs=3 workers=4 d=8192 rounds=10 algo=ring
+//!
+//! One [`MuxTransport::loopback_mesh`] is built with `jobs` logical
+//! channels; each job is an independent [`Session`] (its own model,
+//! sources, compressor state, and seed) whose collective runs over its
+//! own channel of the shared sockets. The server interleaves their
+//! rounds per `server.schedule`; because channel framing is stripped
+//! below the round/seq guard, every job's result is bit-identical to a
+//! solo run (pinned in `tests/serve.rs`).
+//!
+//! Knobs (`key=value`; validated against `api::keys::SERVE`):
+//!
+//! | key | default | meaning |
+//! |-----|---------|---------|
+//! | `jobs` | 2 | concurrent jobs = logical channels on the one mesh |
+//! | `workers`, `d`, `rounds`, `lr`, `seed` | 4, 2^13, 10, 0.2, 100 | per-job shape (job j trains on sources seeded `seed + 1000·j`) |
+//! | `algo` | `ring` | staged collective (`ring`, `halving`, `two-level`) |
+//! | `pipeline` | `barrier` | `barrier` or `streamed` |
+//! | `hierarchy.group_size` | 4 | ranks per group for `algo=two-level` |
+//! | `net.timeout_ms` | 30000 (env `INTSGD_NET_TIMEOUT_MS`) | per-logical-op deadline |
+//! | `net.retries` | 8 | retried attempts per collective |
+//! | `net.mux.queue_frames` | 64 | per-(channel, peer) send-queue bound; a full queue is typed backpressure, counted in `intsgd_net_backpressure_events_total` |
+//! | `server.schedule` | `rr` | `rr` (weighted round-robin) or `jitter` (seeded uniform pick) |
+//! | `server.jitter_seed` | `seed` | scheduler seed for `server.schedule=jitter` |
+//! | `telemetry.trace_path` | off | write the phase-span journal as a Chrome trace at the end |
+//! | `telemetry.listen` | off | serve one Prometheus endpoint for all jobs |
+//! | `serve_ms` | 0 | keep the metrics endpoint up this long after the run (needs `telemetry.listen`) |
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::api::{
+    Backend, CompressorSpec, JobSchedule, ModelSpec, Session, SessionServer,
+};
+use crate::config::Config;
+use crate::net::MuxTransport;
+use crate::telemetry;
+
+use super::net_driver::{pipeline_knob, quad_factories, staged_algo};
+
+pub fn run(cfg: &Config) -> Result<()> {
+    let jobs = cfg.parsed_or("jobs", 2usize)?;
+    let n = cfg.parsed_or("workers", 4usize)?;
+    let d = cfg.parsed_or("d", 1usize << 13)?;
+    let rounds = cfg.parsed_or("rounds", 10usize)?;
+    let lr = cfg.parsed_or("lr", 0.2f32)?;
+    let seed = cfg.parsed_or("seed", 100u64)?;
+    let algo = staged_algo(cfg)?;
+    let pipeline = pipeline_knob(cfg, "barrier")?;
+    let queue_frames =
+        cfg.parsed_or("net.mux.queue_frames", crate::net::poll::DEFAULT_QUEUE_FRAMES)?;
+    let timeout = Duration::from_millis(cfg.parsed_or(
+        "net.timeout_ms",
+        crate::net::default_io_timeout().as_millis() as u64,
+    )?);
+    let retries = cfg.parsed_or("net.retries", 8usize)?;
+    let schedule = match cfg.str_or("server.schedule", "rr") {
+        "rr" | "round-robin" => JobSchedule::RoundRobin,
+        "jitter" => JobSchedule::Jitter {
+            seed: cfg.parsed_or("server.jitter_seed", seed)?,
+        },
+        other => return Err(anyhow!("unknown server.schedule {other:?} (rr|jitter)")),
+    };
+    if jobs == 0 {
+        return Err(anyhow!("jobs must be at least 1"));
+    }
+
+    // One metrics endpoint and one trace journal for the whole server —
+    // jobs share the process-global registry (distinguished where the
+    // instruments carry a channel label).
+    let metrics = match cfg.get("telemetry.listen") {
+        Some(addr) => Some(
+            telemetry::MetricsServer::bind(addr)
+                .map_err(|e| anyhow!("telemetry.listen {addr}: {e}"))?,
+        ),
+        None => None,
+    };
+    if cfg.get("telemetry.trace_path").is_some() {
+        telemetry::journal::enable(telemetry::journal::DEFAULT_CAPACITY);
+    }
+
+    // The one shared physical mesh: `jobs` channels over n(n-1)/2 sockets.
+    let mut mesh = MuxTransport::loopback_mesh_with(n, jobs, queue_frames)?;
+    let mut server = SessionServer::new(schedule);
+    let mut handles = Vec::new();
+    for j in 0..jobs {
+        let endpoints = mesh.remove(0); // channel j, rank-ordered
+        let session = Session::builder()
+            .world(n)
+            .model(ModelSpec::flat(d))
+            .sources(quad_factories(n, d, seed + 1000 * j as u64, 0.01))
+            .compressor(CompressorSpec::parse("intsgd_random8")?)
+            .seed(seed ^ 0x5EED ^ j as u64)
+            .lr(lr)
+            .backend(Backend::Mux { algo })
+            .mux_endpoints(endpoints)
+            .pipeline(pipeline)
+            .net_timeout(timeout)
+            .net_retries(retries)
+            .build()?;
+        handles.push(server.add_job(format!("job-{j}"), session, rounds)?);
+    }
+
+    println!(
+        "serve: {jobs} jobs x {rounds} rounds over one {n}-rank mux mesh \
+         ({algo:?}, {pipeline:?}, {schedule:?})"
+    );
+    if let Some(m) = &metrics {
+        println!("  metrics: http://{}/metrics", m.addr());
+    }
+    server.run_to_completion()?;
+
+    for &h in &handles {
+        let records = server.session(h).records();
+        let first = records.first().map(|r| r.train_loss).unwrap_or(f64::NAN);
+        let last = records.last().map(|r| r.train_loss).unwrap_or(f64::NAN);
+        let stats = server
+            .session(h)
+            .wire_stats()
+            .ok_or_else(|| anyhow!("mux job without wire stats"))?;
+        println!(
+            "  {}: train loss {first:.4} -> {last:.4} ({} collectives, \
+             last wire {:?})",
+            server.name(h),
+            stats.collectives,
+            stats.last_wire,
+        );
+        if last.is_nan() || last >= first {
+            return Err(anyhow!(
+                "{} made no progress over the shared mesh: {first} -> {last}",
+                server.name(h)
+            ));
+        }
+    }
+
+    if let Some(path) = cfg.get("telemetry.trace_path") {
+        telemetry::write_trace(path)?;
+        println!("  phase spans -> {path}");
+    }
+    let serve_ms = cfg.parsed_or("serve_ms", 0u64)?;
+    if serve_ms > 0 {
+        if metrics.is_none() {
+            return Err(anyhow!("serve_ms needs telemetry.listen=<addr>"));
+        }
+        println!("  serving metrics for {serve_ms} ms ...");
+        std::thread::sleep(Duration::from_millis(serve_ms));
+    }
+    server.shutdown();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_runs_two_jobs_over_one_mesh() {
+        let mut cfg = Config::new();
+        for kv in ["jobs=2", "workers=3", "d=256", "rounds=6"] {
+            cfg.set_kv(kv).unwrap();
+        }
+        run(&cfg).expect("two-job serve");
+    }
+
+    #[test]
+    fn serve_jitter_schedule_runs() {
+        let mut cfg = Config::new();
+        for kv in [
+            "jobs=2",
+            "workers=2",
+            "d=128",
+            "rounds=4",
+            "server.schedule=jitter",
+            "server.jitter_seed=7",
+        ] {
+            cfg.set_kv(kv).unwrap();
+        }
+        run(&cfg).expect("jitter serve");
+    }
+
+    #[test]
+    fn rejects_bad_knobs() {
+        let mut cfg = Config::new();
+        cfg.set_kv("server.schedule=lottery").unwrap();
+        assert!(run(&cfg).unwrap_err().to_string().contains("rr|jitter"));
+        let mut cfg = Config::new();
+        cfg.set_kv("jobs=0").unwrap();
+        assert!(run(&cfg).unwrap_err().to_string().contains("at least 1"));
+        let mut cfg = Config::new();
+        for kv in ["jobs=1", "workers=2", "d=64", "rounds=2", "serve_ms=5"] {
+            cfg.set_kv(kv).unwrap();
+        }
+        assert!(run(&cfg).unwrap_err().to_string().contains("telemetry.listen"));
+    }
+}

@@ -27,6 +27,13 @@ USAGE:
         (encode/reduce/drain/decode per block) -> Chrome trace
         (out=trace.json pipeline=streamed telemetry.listen=127.0.0.1:0
          serve_ms=...); net-bench also takes telemetry.trace_path/.listen
+  repro serve [key=value ...] [--config file]      N concurrent jobs over
+        ONE shared socket mesh, multiplexed by logical channel
+        (jobs=... workers=... d=... rounds=... algo=ring|halving|two-level
+         server.schedule=rr|jitter server.jitter_seed=...
+         net.mux.queue_frames=... net.timeout_ms=... net.retries=...
+         telemetry.listen=... serve_ms=...); each job's result is
+        bit-identical to a solo run
   repro list                                       list experiments
   repro artifacts                                  show artifact manifest
 
@@ -92,6 +99,11 @@ fn main() -> Result<()> {
             let cfg = cli_config(&args[1..])?;
             cfg.validate_keys(api::keys::TRACE)?;
             intsgd::coordinator::trace_cmd::run(&cfg)
+        }
+        Some("serve") => {
+            let cfg = cli_config(&args[1..])?;
+            cfg.validate_keys(api::keys::SERVE)?;
+            intsgd::coordinator::serve_cmd::run(&cfg)
         }
         Some("list") => {
             for (id, desc) in intsgd::experiments::list() {

@@ -55,6 +55,7 @@
 pub mod channel;
 pub mod faults;
 pub mod frame;
+pub mod poll;
 pub mod reducer;
 pub mod staged;
 pub mod tcp;
@@ -62,6 +63,7 @@ pub mod tcp;
 pub use channel::ChannelTransport;
 pub use faults::{FaultPlan, FaultStats, FaultTransport, KillAt};
 pub use frame::{FrameHeader, PayloadKind, HEADER_BYTES};
+pub use poll::MuxTransport;
 pub use reducer::{StagedAlgo, TransportReducer};
 pub use tcp::TcpTransport;
 
@@ -287,8 +289,13 @@ pub trait Transport: Send {
     fn recv(&mut self, from: usize, out: &mut Vec<u8>) -> Result<(), NetError>;
 
     /// Bound blocking sends/receives (default: implementation-defined,
-    /// see [`default_io_timeout`]). Implementations without blocking ops
-    /// may ignore it.
+    /// see [`default_io_timeout`]). The deadline applies **per logical
+    /// operation**: one `send` or `recv` call as a whole must fail with
+    /// [`NetError::Timeout`] once the duration elapses, even if every
+    /// individual syscall keeps making partial progress — a peer that
+    /// accepts one byte per pump iteration is still a timeout, not a
+    /// live connection. Implementations without blocking ops may ignore
+    /// it.
     fn set_timeout(&mut self, _timeout: Duration) {}
 
     /// Install a cooperative abort flag: blocking operations poll it and

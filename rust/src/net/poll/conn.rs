@@ -1,0 +1,272 @@
+//! Per-connection state for the mux event loop: one nonblocking
+//! `TcpStream` per rank pair carries every logical channel's frames as
+//! interleaved envelopes, with single-cursor reassembly on the read
+//! side and one batched staging buffer on the write side.
+//!
+//! **Envelope format** (transport framing, invisible to `net::frame`):
+//! `[u32 LE body_len][u32 LE channel_word][body bytes]`. The body is a
+//! complete message frame, bit-identical to what `TcpTransport` would
+//! carry, which is what keeps single-job mux runs bitwise equal to the
+//! dedicated-socket path. `channel_word`'s top bit ([`CLOSE_FLAG`])
+//! marks a zero-body control envelope announcing that the sender's
+//! endpoint for that channel is gone for good — the mux equivalent of
+//! a per-channel EOF, so one job's dead rank reads as `PeerDead` on its
+//! own channel while every other job's traffic keeps flowing over the
+//! same socket.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{Context, Result};
+
+use super::super::{NetError, UNKNOWN_ROUND};
+use crate::net::tcp::MAX_FRAME_BYTES;
+use crate::util::cast;
+
+/// Bytes of envelope header preceding every body.
+pub(crate) const ENVELOPE_BYTES: usize = 8;
+/// Top bit of `channel_word`: a zero-body per-channel close control.
+pub(crate) const CLOSE_FLAG: u32 = 0x8000_0000;
+
+fn fatal_kind(kind: ErrorKind) -> bool {
+    matches!(
+        kind,
+        ErrorKind::ConnectionReset
+            | ErrorKind::ConnectionAborted
+            | ErrorKind::BrokenPipe
+            | ErrorKind::UnexpectedEof
+    )
+}
+
+/// One multiplexed rank-pair connection.
+pub(crate) struct Conn {
+    stream: TcpStream,
+    /// Raw inbound bytes, possibly ending mid-envelope.
+    rbuf: Vec<u8>,
+    /// Complete demuxed frames per channel, in arrival order.
+    inboxes: Vec<VecDeque<Vec<u8>>>,
+    /// Channels whose peer endpoint announced close ([`CLOSE_FLAG`]).
+    peer_closed: Vec<bool>,
+    /// Staged outbound bytes — every queued envelope, all channels, in
+    /// enqueue order; flushed with one `write` per event-loop pass so
+    /// concurrent jobs' frames batch into shared syscalls.
+    wbuf: Vec<u8>,
+    /// Bytes of `wbuf` the kernel has already accepted.
+    wstart: usize,
+    /// Envelope boundaries still in flight: (end offset in `wbuf`,
+    /// channel_word) — drives the per-channel pending accounting.
+    inflight: VecDeque<(usize, u32)>,
+    /// Frames enqueued but not yet fully written, per channel: the
+    /// bounded-queue account behind send backpressure.
+    pending: Vec<usize>,
+    /// Connection-level EOF or fatal/poisoning IO error seen.
+    pub(crate) closed: bool,
+}
+
+impl Conn {
+    // intlint: allow(R2, reason="mesh construction runs once per process, off the round path")
+    pub(crate) fn new(stream: TcpStream, channels: usize) -> Result<Conn> {
+        stream.set_nodelay(true).context("set_nodelay")?;
+        stream.set_nonblocking(true).context("set_nonblocking")?;
+        Ok(Conn {
+            stream,
+            rbuf: Vec::new(),
+            inboxes: (0..channels).map(|_| VecDeque::new()).collect(),
+            peer_closed: vec![false; channels],
+            wbuf: Vec::new(),
+            wstart: 0,
+            inflight: VecDeque::new(),
+            pending: vec![0; channels],
+            closed: false,
+        })
+    }
+
+    /// Raw descriptor for the poll set.
+    #[cfg(target_os = "linux")]
+    pub(crate) fn raw_fd(&self) -> i32 {
+        use std::os::unix::io::AsRawFd;
+        self.stream.as_raw_fd()
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    pub(crate) fn raw_fd(&self) -> i32 {
+        -1
+    }
+
+    /// Bytes staged but not yet accepted by the kernel.
+    pub(crate) fn wants_write(&self) -> bool {
+        self.wstart < self.wbuf.len()
+    }
+
+    /// Frames queued-but-unwritten on `channel`.
+    pub(crate) fn pending(&self, channel: usize) -> usize {
+        self.pending.get(channel).copied().unwrap_or(0)
+    }
+
+    /// True once this connection (or this channel's peer endpoint) can
+    /// never deliver again: frames may still be queued in the inbox.
+    pub(crate) fn channel_down(&self, channel: usize) -> bool {
+        self.closed || self.peer_closed.get(channel).copied().unwrap_or(true)
+    }
+
+    /// Pop the next complete frame for `channel`, if any.
+    pub(crate) fn take_frame(&mut self, channel: usize) -> Option<Vec<u8>> {
+        self.inboxes.get_mut(channel).and_then(|q| q.pop_front())
+    }
+
+    /// Stage one frame for `channel`. The caller enforces the bounded
+    /// queue (checks [`Conn::pending`] against the cap first) and the
+    /// [`MAX_FRAME_BYTES`] body cap.
+    pub(crate) fn enqueue(&mut self, channel: usize, body: &[u8]) {
+        debug_assert!(body.len() <= MAX_FRAME_BYTES);
+        let word = cast::sat_u32(channel);
+        self.wbuf.extend_from_slice(&cast::sat_u32(body.len()).to_le_bytes());
+        self.wbuf.extend_from_slice(&word.to_le_bytes());
+        self.wbuf.extend_from_slice(body);
+        self.inflight.push_back((self.wbuf.len(), word));
+        if let Some(p) = self.pending.get_mut(channel) {
+            *p += 1;
+        }
+    }
+
+    /// Stage the zero-body close control for `channel` (bypasses the
+    /// bounded queue: controls must go out even under backpressure).
+    pub(crate) fn enqueue_close(&mut self, channel: usize) {
+        let word = cast::sat_u32(channel) | CLOSE_FLAG;
+        self.wbuf.extend_from_slice(&0u32.to_le_bytes());
+        self.wbuf.extend_from_slice(&word.to_le_bytes());
+        self.inflight.push_back((self.wbuf.len(), word));
+    }
+
+    /// One nonblocking write pass over the staged buffer. All failures
+    /// poison the connection (`closed`) rather than erroring, so a
+    /// collateral flush on behalf of an unrelated channel never surfaces
+    /// another job's broken peer; the owning channel observes the
+    /// condition as `PeerDead` via [`Conn::channel_down`]. Returns
+    /// whether any bytes moved.
+    pub(crate) fn flush(&mut self) -> bool {
+        if self.closed {
+            return false;
+        }
+        let mut progressed = false;
+        while self.wstart < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wstart..]) {
+                Ok(0) => {
+                    self.closed = true;
+                    break;
+                }
+                Ok(k) => {
+                    self.wstart += k;
+                    progressed = true;
+                    while let Some(&(end, word)) = self.inflight.front() {
+                        if end > self.wstart {
+                            break;
+                        }
+                        self.inflight.pop_front();
+                        if word & CLOSE_FLAG == 0 {
+                            let ch = cast::usize_from(word);
+                            if let Some(p) = self.pending.get_mut(ch) {
+                                *p = p.saturating_sub(1);
+                            }
+                        }
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.closed = true;
+                    break;
+                }
+            }
+        }
+        if self.wstart > 0 && self.wstart == self.wbuf.len() {
+            debug_assert!(self.inflight.is_empty());
+            self.wbuf.clear();
+            self.wstart = 0;
+        }
+        progressed
+    }
+
+    /// Drain whatever the kernel has buffered (one pass of nonblocking
+    /// reads), then slice complete envelopes into per-channel inboxes.
+    /// `peer_rank` only labels errors. A hostile envelope (oversized
+    /// length, unknown channel, non-empty close) poisons the connection
+    /// and surfaces `Corrupt` exactly once — after that every channel
+    /// reads `PeerDead`, mirroring a torn socket.
+    pub(crate) fn pump(&mut self, peer_rank: usize) -> Result<bool, NetError> {
+        if self.closed {
+            return Ok(false);
+        }
+        let mut progressed = false;
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.closed = true;
+                    break;
+                }
+                Ok(k) => {
+                    self.rbuf.extend_from_slice(&chunk[..k]);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) if fatal_kind(e.kind()) => {
+                    self.closed = true;
+                    break;
+                }
+                Err(e) => {
+                    self.closed = true;
+                    return Err(NetError::Corrupt {
+                        rank: peer_rank,
+                        round: UNKNOWN_ROUND,
+                        detail: format!("socket read: {e}"),
+                    });
+                }
+            }
+        }
+        // Slice complete envelopes with one cursor and drain the
+        // consumed prefix once at the end (same discipline as
+        // tcp::Peer::pump): partially-parsed bytes stay put until the
+        // rest of their envelope arrives.
+        let mut consumed = 0usize;
+        loop {
+            let rem = &self.rbuf[consumed..];
+            if rem.len() < ENVELOPE_BYTES {
+                break;
+            }
+            let len = cast::usize_from(u32::from_le_bytes([rem[0], rem[1], rem[2], rem[3]]));
+            let word = u32::from_le_bytes([rem[4], rem[5], rem[6], rem[7]]);
+            let ch = cast::usize_from(word & !CLOSE_FLAG);
+            let hostile_close = word & CLOSE_FLAG != 0 && len != 0;
+            if len > MAX_FRAME_BYTES || ch >= self.inboxes.len() || hostile_close {
+                self.rbuf.drain(..consumed);
+                self.closed = true;
+                return Err(NetError::Corrupt {
+                    rank: peer_rank,
+                    round: UNKNOWN_ROUND,
+                    detail: format!(
+                        "hostile mux envelope: len {len} (cap {MAX_FRAME_BYTES}), \
+                         channel {ch} (mesh has {})",
+                        self.inboxes.len()
+                    ),
+                });
+            }
+            if rem.len() < ENVELOPE_BYTES + len {
+                break;
+            }
+            if word & CLOSE_FLAG != 0 {
+                self.peer_closed[ch] = true;
+            } else {
+                let body = &rem[ENVELOPE_BYTES..ENVELOPE_BYTES + len];
+                self.inboxes[ch].push_back(body.to_vec()); // intlint: allow(R2, reason="one owned buffer per arriving frame, handed to recv without a further copy (same cost as the tcp.rs inbox)")
+                progressed = true;
+            }
+            consumed += ENVELOPE_BYTES + len;
+        }
+        if consumed > 0 {
+            self.rbuf.drain(..consumed);
+        }
+        Ok(progressed)
+    }
+}

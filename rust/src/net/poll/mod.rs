@@ -1,0 +1,28 @@
+//! `net::poll` — the nonblocking multiplexed runtime (DESIGN.md §13).
+//!
+//! Three layers, bottom up:
+//!
+//! * [`sys`] — a std-only readiness shim over the `poll(2)` syscall
+//!   (no new crates; non-Linux builds degrade to a timed sleep).
+//! * [`conn`] (private) — per-rank-pair connection state: envelope
+//!   reassembly on the read side, one batched staging buffer plus
+//!   bounded per-channel queues on the write side.
+//! * [`mux`] — [`MuxTransport`], one (rank, channel) endpoint over a
+//!   shared per-rank event-loop core; a drop-in [`crate::net::Transport`]
+//!   backend, so `TransportReducer` and every staged collective run on
+//!   it unchanged while many logical channels (= concurrent jobs)
+//!   interleave over one socket mesh.
+//!
+//! Isolation story: the channel id is transport framing, checked and
+//! stripped before a frame reaches a channel's inbox, so the existing
+//! round-id/seq frame guard keeps operating per job exactly as it does
+//! on dedicated sockets — cross-job frames cannot reach a job's guard
+//! in the first place.
+
+pub mod sys;
+
+pub(crate) mod conn;
+
+pub mod mux;
+
+pub use mux::{MuxTransport, DEFAULT_QUEUE_FRAMES, MAX_CHANNELS};

@@ -1,0 +1,514 @@
+//! The multiplexed nonblocking transport: one socket per rank pair,
+//! many logical channels, one readiness-polled event loop per rank.
+//!
+//! Every rank owns a [`MuxIo`] core — the set of per-peer [`Conn`]s
+//! plus a reusable poll set — behind an `Arc<Mutex<_>>`. A
+//! [`MuxTransport`] is one (rank, channel) endpoint on that core and
+//! implements [`Transport`] verbatim, so `TransportReducer` drives it
+//! like any dedicated-socket backend: channel 0 of a single-channel
+//! mesh is bit-identical to `TcpTransport` (pinned in `tests/serve.rs`)
+//! while additional channels carry other jobs' rounds over the same
+//! sockets. Blocked operations never spin: after a short yield phase
+//! they park in `poll(2)` slices ([`WAIT_SLICE`]) with the core lock
+//! released between slices so sibling channels keep making progress.
+//!
+//! Backpressure is explicit and typed: each (channel, peer) write queue
+//! is bounded ([`DEFAULT_QUEUE_FRAMES`] frames, tunable per mesh), and
+//! a sender that finds the queue full observes it as
+//! [`MuxTransport::try_send`] returning `false` (blocking `send` keeps
+//! servicing the loop until space frees or the per-logical-op deadline
+//! passes). Every such stall increments `NET_BACKPRESSURE_EVENTS`.
+
+// Wall-clock reads below are the transport deadline machinery — one of
+// clippy.toml's allowed zones (net deadlines, telemetry, benches).
+#![allow(clippy::disallowed_methods)]
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::super::{default_io_timeout, NetError, Transport, UNKNOWN_RANK, UNKNOWN_ROUND};
+use super::conn::Conn;
+use super::sys::{self, PollFd, POLLIN, POLLOUT};
+use crate::net::tcp::MAX_FRAME_BYTES;
+use crate::telemetry::m;
+use crate::util::cast;
+
+/// Default bound on frames queued per (channel, peer) before senders
+/// observe backpressure.
+pub const DEFAULT_QUEUE_FRAMES: usize = 64;
+
+/// Hard cap on logical channels per mesh (the envelope channel word
+/// reserves its top bit for the close control).
+pub const MAX_CHANNELS: usize = 4096;
+
+/// Loopback mesh size cap — mirrors `TcpTransport::loopback_mesh`.
+const MAX_LOOPBACK_RANKS: usize = 64;
+
+/// Fruitless passes before a blocked op parks in poll slices instead of
+/// yielding (latency-first at the start, cores-first when idle).
+const SPIN_BEFORE_WAIT: u32 = 64;
+
+/// One parked wait: short enough that sibling channels contend for the
+/// core lock at sub-millisecond granularity, long enough to stay off
+/// the CPU while idle.
+const WAIT_SLICE: Duration = Duration::from_millis(1);
+
+/// Per-channel endpoint census shared by one mesh: how many endpoints
+/// of each channel are still open, which feeds `MUX_CHANNELS_ACTIVE`
+/// (channels with at least one live endpoint in this process).
+struct Census {
+    counts: Vec<AtomicUsize>,
+}
+
+impl Census {
+    fn channels_active(&self) -> usize {
+        self.counts.iter().filter(|c| c.load(Ordering::Relaxed) > 0).count()
+    }
+}
+
+/// One rank's event-loop core: per-peer connections plus the reusable
+/// poll set. Shared by every channel endpoint of that rank.
+struct MuxIo {
+    /// Index = peer rank; `None` at this rank's own slot.
+    conns: Vec<Option<Conn>>,
+    /// Reused poll request buffer (no per-pass allocation).
+    pfds: Vec<PollFd>,
+}
+
+impl MuxIo {
+    /// One event-loop pass: optionally park (≤ `wait`) for readiness,
+    /// then flush every writable connection and pump every readable
+    /// one. Returns whether any bytes or frames moved. A hostile frame
+    /// surfaces `Corrupt` once (attributed to the offending peer) and
+    /// poisons that connection; unrelated channels keep running.
+    fn service(&mut self, wait: Duration) -> Result<bool, NetError> {
+        if !wait.is_zero() {
+            self.pfds.clear();
+            for conn in self.conns.iter().flatten() {
+                if conn.closed {
+                    continue;
+                }
+                let mut events = POLLIN;
+                if conn.wants_write() {
+                    events |= POLLOUT;
+                }
+                self.pfds.push(PollFd::new(conn.raw_fd(), events));
+            }
+            if !self.pfds.is_empty() {
+                sys::wait(&mut self.pfds, wait).map_err(|e| NetError::Corrupt {
+                    rank: UNKNOWN_RANK,
+                    round: UNKNOWN_ROUND,
+                    detail: format!("poll: {e}"),
+                })?;
+            }
+        }
+        let mut progressed = false;
+        for peer in 0..self.conns.len() {
+            if let Some(conn) = self.conns[peer].as_mut() {
+                progressed |= conn.flush();
+                progressed |= conn.pump(peer)?;
+            }
+        }
+        Ok(progressed)
+    }
+}
+
+/// One (rank, channel) endpoint of a multiplexed mesh. See the module
+/// docs for the runtime model; see [`Transport`] for the contract it
+/// honors — including per-logical-op deadlines: `set_timeout` bounds
+/// each `send`/`recv` call as a whole, never individual syscalls.
+pub struct MuxTransport {
+    rank: usize,
+    world: usize,
+    channel: usize,
+    queue_cap: usize,
+    io: Arc<Mutex<MuxIo>>,
+    census: Arc<Census>,
+    timeout: Duration,
+    abort: Option<Arc<AtomicBool>>,
+    open: bool,
+}
+
+impl MuxTransport {
+    /// A loopback mesh of `n` ranks × `channels` logical channels with
+    /// the default queue bound. Returns endpoint vectors indexed
+    /// `[channel][rank]` — each inner vector is a rank-ordered mesh
+    /// ready for `TransportReducer::new`.
+    pub fn loopback_mesh(n: usize, channels: usize) -> Result<Vec<Vec<MuxTransport>>> {
+        Self::loopback_mesh_with(n, channels, DEFAULT_QUEUE_FRAMES)
+    }
+
+    /// [`MuxTransport::loopback_mesh`] with an explicit per-channel
+    /// write-queue bound (`net.mux.queue_frames` on the CLI).
+    pub fn loopback_mesh_with(
+        n: usize,
+        channels: usize,
+        queue_frames: usize,
+    ) -> Result<Vec<Vec<MuxTransport>>> {
+        if n == 0 || n > MAX_LOOPBACK_RANKS {
+            return Err(anyhow!("mux loopback mesh wants 1..={MAX_LOOPBACK_RANKS} ranks, got {n}"));
+        }
+        if channels == 0 || channels > MAX_CHANNELS {
+            return Err(anyhow!("mux mesh wants 1..={MAX_CHANNELS} channels, got {channels}"));
+        }
+        if queue_frames == 0 {
+            return Err(anyhow!("net.mux.queue_frames must be at least 1"));
+        }
+        let listeners: Vec<TcpListener> = (0..n)
+            .map(|_| TcpListener::bind("127.0.0.1:0").context("bind"))
+            .collect::<Result<_>>()?;
+        let addrs: Vec<_> = listeners
+            .iter()
+            .map(|l| l.local_addr().context("listener addr"))
+            .collect::<Result<_>>()?;
+
+        let mut conns: Vec<Vec<Option<Conn>>> =
+            (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+
+        // Dial every pair i < j (the connect completes into j's listen
+        // backlog — no concurrent accept loop needed on loopback), then
+        // accept and attribute each inbound stream by its hello. Same
+        // handshake as TcpTransport::loopback_mesh.
+        for i in 0..n {
+            for j in i + 1..n {
+                let mut stream =
+                    TcpStream::connect(addrs[j]).with_context(|| format!("rank {i} -> {j}"))?;
+                stream
+                    .write_all(&cast::to_u32(i)?.to_le_bytes())
+                    .context("send hello")?;
+                conns[i][j] = Some(Conn::new(stream, channels)?);
+            }
+        }
+        for (j, listener) in listeners.iter().enumerate() {
+            for _ in 0..j {
+                let (mut stream, _) = listener.accept().context("accept")?;
+                let mut hello = [0u8; 4];
+                stream.read_exact(&mut hello).context("read hello")?;
+                let i = cast::usize_from(u32::from_le_bytes(hello));
+                if i >= n || conns[j][i].is_some() {
+                    return Err(anyhow!("bogus hello rank {i} at listener {j}"));
+                }
+                conns[j][i] = Some(Conn::new(stream, channels)?);
+            }
+        }
+
+        let census = Arc::new(Census {
+            counts: (0..channels).map(|_| AtomicUsize::new(n)).collect(),
+        });
+        m::MUX_CHANNELS_ACTIVE.set(cast::sat_u32(census.channels_active()).into());
+
+        let cores: Vec<Arc<Mutex<MuxIo>>> = conns
+            .into_iter()
+            .map(|conns| Arc::new(Mutex::new(MuxIo { conns, pfds: Vec::new() })))
+            .collect();
+
+        Ok((0..channels)
+            .map(|channel| {
+                (0..n)
+                    .map(|rank| MuxTransport {
+                        rank,
+                        world: n,
+                        channel,
+                        queue_cap: queue_frames,
+                        io: Arc::clone(&cores[rank]),
+                        census: Arc::clone(&census),
+                        timeout: default_io_timeout(),
+                        abort: None,
+                        open: true,
+                    })
+                    .collect()
+            })
+            .collect())
+    }
+
+    /// The channel this endpoint multiplexes over.
+    pub fn channel(&self) -> usize {
+        self.channel
+    }
+
+    fn lock_io(&self) -> Result<MutexGuard<'_, MuxIo>, NetError> {
+        self.io.lock().map_err(|_| NetError::Corrupt {
+            rank: UNKNOWN_RANK,
+            round: UNKNOWN_ROUND,
+            detail: "mux event loop poisoned by a panicked sibling".to_string(),
+        })
+    }
+
+    fn aborted(&self) -> bool {
+        self.abort.as_ref().is_some_and(|f| f.load(Ordering::Relaxed))
+    }
+
+    /// Nonblocking send: stage `frame` on the peer's bounded channel
+    /// queue if there is room. `Ok(false)` is typed backpressure — the
+    /// queue is full *right now*; the caller decides whether to retry,
+    /// park, or shed load. Counted in `NET_BACKPRESSURE_EVENTS`.
+    pub fn try_send(&mut self, to: usize, frame: &[u8]) -> Result<bool, NetError> {
+        assert!(to != self.rank, "rank {} sending to itself", self.rank);
+        if frame.len() > MAX_FRAME_BYTES {
+            return Err(NetError::Corrupt {
+                rank: to,
+                round: UNKNOWN_ROUND,
+                detail: format!(
+                    "frame of {} bytes exceeds the {MAX_FRAME_BYTES}-byte cap",
+                    frame.len()
+                ),
+            });
+        }
+        let mut io = self.lock_io()?;
+        // Keep draining inbound while waiting to send — the progress
+        // guarantee every Transport impl honors (deadlock freedom).
+        io.service(Duration::ZERO)?;
+        let Some(conn) = io.conns.get_mut(to).and_then(|c| c.as_mut()) else {
+            return Err(NetError::PeerDead { rank: to, round: UNKNOWN_ROUND });
+        };
+        if conn.channel_down(self.channel) {
+            return Err(NetError::PeerDead { rank: to, round: UNKNOWN_ROUND });
+        }
+        if conn.pending(self.channel) >= self.queue_cap {
+            m::NET_BACKPRESSURE_EVENTS.inc();
+            return Ok(false);
+        }
+        conn.enqueue(self.channel, frame);
+        m::MUX_QUEUE_DEPTH.set(self.channel, cast::sat_u32(conn.pending(self.channel)).into());
+        conn.flush();
+        Ok(true)
+    }
+
+    /// Park until the next service pass is warranted: yield for the
+    /// first [`SPIN_BEFORE_WAIT`] passes, then hold the core in one
+    /// [`WAIT_SLICE`] poll (lock released again before the caller's
+    /// next pass, so sibling channels interleave at slice granularity).
+    fn wait_pass(&self, spins: &mut u32) -> Result<(), NetError> {
+        *spins += 1;
+        if *spins <= SPIN_BEFORE_WAIT {
+            std::thread::yield_now();
+        } else {
+            self.lock_io()?.service(WAIT_SLICE)?;
+        }
+        Ok(())
+    }
+
+    /// Announce this endpoint's permanent departure on its channel.
+    /// Peers drain frames already queued, then observe `PeerDead` on
+    /// this (rank, channel) pair only — sibling channels on the same
+    /// sockets are untouched. Idempotent; called on drop.
+    fn close(&mut self) {
+        if !self.open {
+            return;
+        }
+        self.open = false;
+        if let Some(c) = self.census.counts.get(self.channel) {
+            c.fetch_sub(1, Ordering::Relaxed);
+        }
+        m::MUX_CHANNELS_ACTIVE.set(cast::sat_u32(self.census.channels_active()).into());
+        if let Ok(mut io) = self.io.lock() {
+            for peer in 0..io.conns.len() {
+                if let Some(conn) = io.conns[peer].as_mut() {
+                    conn.enqueue_close(self.channel);
+                    conn.flush();
+                }
+            }
+        }
+    }
+}
+
+impl Drop for MuxTransport {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+impl Transport for MuxTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(&mut self, to: usize, frame: &[u8]) -> Result<(), NetError> {
+        // One deadline for the whole logical op: a peer that keeps the
+        // queue full (or keeps accepting bytes slowly) still times out.
+        let deadline = Instant::now() + self.timeout;
+        let mut spins = 0u32;
+        loop {
+            if self.try_send(to, frame)? {
+                return Ok(());
+            }
+            if self.aborted() {
+                return Err(NetError::Aborted { rank: to, round: UNKNOWN_ROUND });
+            }
+            if Instant::now() > deadline {
+                return Err(NetError::Timeout { rank: to, round: UNKNOWN_ROUND });
+            }
+            self.wait_pass(&mut spins)?;
+        }
+    }
+
+    fn recv(&mut self, from: usize, out: &mut Vec<u8>) -> Result<(), NetError> {
+        assert!(from != self.rank, "rank {} receiving from itself", self.rank);
+        let deadline = Instant::now() + self.timeout;
+        let mut spins = 0u32;
+        loop {
+            {
+                let mut io = self.lock_io()?;
+                let serviced = io.service(Duration::ZERO);
+                let Some(conn) = io.conns.get_mut(from).and_then(|c| c.as_mut()) else {
+                    return Err(NetError::PeerDead { rank: from, round: UNKNOWN_ROUND });
+                };
+                if let Some(frame) = conn.take_frame(self.channel) {
+                    // Hand the arrival buffer over (Transport allows it).
+                    *out = frame;
+                    return Ok(());
+                }
+                serviced?;
+                if conn.channel_down(self.channel) {
+                    return Err(NetError::PeerDead { rank: from, round: UNKNOWN_ROUND });
+                }
+            }
+            if self.aborted() {
+                return Err(NetError::Aborted { rank: from, round: UNKNOWN_ROUND });
+            }
+            if Instant::now() > deadline {
+                return Err(NetError::Timeout { rank: from, round: UNKNOWN_ROUND });
+            }
+            self.wait_pass(&mut spins)?;
+        }
+    }
+
+    fn set_timeout(&mut self, timeout: Duration) {
+        self.timeout = timeout;
+    }
+
+    fn set_abort(&mut self, flag: Arc<AtomicBool>) {
+        self.abort = Some(flag);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::tests::exercise_mesh;
+    use super::*;
+
+    #[test]
+    fn single_channel_mesh_passes_the_conformance_suite() {
+        for n in [2, 3, 4] {
+            let mesh = MuxTransport::loopback_mesh(n, 1).expect("mesh").remove(0);
+            exercise_mesh(mesh);
+        }
+    }
+
+    #[test]
+    fn channels_interleave_without_crosstalk() {
+        let mesh = MuxTransport::loopback_mesh(2, 3).expect("mesh");
+        let mut handles = Vec::new();
+        for (ch, mut endpoints) in mesh.into_iter().enumerate() {
+            let mut r1 = endpoints.remove(1);
+            let mut r0 = endpoints.remove(0);
+            handles.push(std::thread::spawn(move || {
+                for seq in 0..16u8 {
+                    let payload = [ch as u8, seq, 0x5A];
+                    r0.send(1, &payload).unwrap();
+                    let mut out = Vec::new();
+                    r1.recv(0, &mut out).unwrap();
+                    assert_eq!(out, payload, "channel {ch} frame {seq}");
+                    r1.send(0, &[seq, ch as u8]).unwrap();
+                    r0.recv(1, &mut out).unwrap();
+                    assert_eq!(out, [seq, ch as u8], "echo on channel {ch}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn full_queue_is_typed_backpressure_then_drains() {
+        let mut mesh = MuxTransport::loopback_mesh_with(2, 1, 1).expect("mesh");
+        let mut chan = mesh.remove(0);
+        let mut r1 = chan.remove(1);
+        let mut r0 = chan.remove(0);
+        // 4 MiB cannot be swallowed by loopback kernel buffers in one
+        // write, so the cap-1 queue stays occupied after the first frame.
+        let frame = vec![0xCD_u8; 4 << 20];
+        let before = m::NET_BACKPRESSURE_EVENTS.get();
+        assert!(r0.try_send(1, &frame).unwrap(), "first frame fits the queue");
+        assert!(!r0.try_send(1, &frame).unwrap(), "second frame observes backpressure");
+        assert!(m::NET_BACKPRESSURE_EVENTS.get() > before, "stall must be counted");
+        let want = frame.clone();
+        let reader = std::thread::spawn(move || {
+            let mut out = Vec::new();
+            r1.recv(0, &mut out).unwrap();
+            assert_eq!(out, want, "first frame intact");
+            r1.recv(0, &mut out).unwrap();
+            assert_eq!(out, want, "second frame intact");
+        });
+        // The blocking send completes once the reader drains the queue.
+        r0.send(1, &frame).unwrap();
+        reader.join().unwrap();
+    }
+
+    #[test]
+    fn endpoint_drop_is_a_per_channel_peer_dead() {
+        let mut mesh = MuxTransport::loopback_mesh(2, 2).expect("mesh");
+        let mut ch1 = mesh.remove(1);
+        let mut ch0 = mesh.remove(0);
+        let mut a1 = ch0.remove(1);
+        let mut a0 = ch0.remove(0);
+        let mut b1 = ch1.remove(1);
+        let mut b0 = ch1.remove(0);
+        a0.send(1, b"bye").unwrap();
+        drop(a0);
+        let mut out = Vec::new();
+        a1.recv(0, &mut out).unwrap();
+        assert_eq!(out, b"bye", "frames sent before the close still drain");
+        let err = a1.recv(0, &mut out).unwrap_err();
+        assert!(err.is_peer_dead(), "{err:?}");
+        let err = a1.send(0, b"x").unwrap_err();
+        assert!(err.is_peer_dead(), "{err:?}");
+        // The sibling channel rides the same sockets, unperturbed.
+        b0.send(1, b"alive").unwrap();
+        b1.recv(0, &mut out).unwrap();
+        assert_eq!(out, b"alive");
+        b1.send(0, b"back").unwrap();
+        b0.recv(1, &mut out).unwrap();
+        assert_eq!(out, b"back");
+    }
+
+    #[test]
+    fn recv_deadline_is_a_typed_timeout() {
+        let mut mesh = MuxTransport::loopback_mesh(2, 1).expect("mesh");
+        let mut chan = mesh.remove(0);
+        let mut r1 = chan.remove(1);
+        r1.set_timeout(Duration::from_millis(40));
+        let mut out = Vec::new();
+        let err = r1.recv(0, &mut out).unwrap_err();
+        assert!(matches!(err, NetError::Timeout { rank: 0, .. }), "{err:?}");
+    }
+
+    #[test]
+    fn abort_flag_ends_a_blocked_recv() {
+        let mut mesh = MuxTransport::loopback_mesh(2, 1).expect("mesh");
+        let mut chan = mesh.remove(0);
+        let mut r1 = chan.remove(1);
+        let flag = Arc::new(AtomicBool::new(false));
+        r1.set_abort(Arc::clone(&flag));
+        r1.set_timeout(Duration::from_secs(30));
+        let armed = Arc::clone(&flag);
+        let arm = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            armed.store(true, Ordering::Relaxed);
+        });
+        let mut out = Vec::new();
+        let err = r1.recv(0, &mut out).unwrap_err();
+        assert!(matches!(err, NetError::Aborted { .. }), "{err:?}");
+        arm.join().unwrap();
+    }
+}

@@ -1,0 +1,132 @@
+//! Thin readiness-polling shim over the platform `poll(2)` syscall.
+//!
+//! `std::net` owns the sockets but exposes no readiness API, so the mux
+//! event loop declares the one libc symbol it needs itself — `std`
+//! already links libc on every supported unix target, which keeps the
+//! runtime std-only (no new crates). Non-Linux builds fall back to a
+//! timed sleep that reports every descriptor ready: callers always
+//! follow up with strictly nonblocking IO, so the fallback costs wasted
+//! wakeups, never correctness.
+
+use std::time::Duration;
+
+/// Readiness bit: the descriptor has bytes to read (or a pending EOF).
+pub const POLLIN: i16 = 0x001;
+/// Readiness bit: the descriptor's send buffer can accept bytes.
+pub const POLLOUT: i16 = 0x004;
+
+/// One descriptor's poll request/result — the C `struct pollfd` layout.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct PollFd {
+    /// Raw socket descriptor.
+    pub fd: i32,
+    /// Requested readiness ([`POLLIN`] | [`POLLOUT`]).
+    pub events: i16,
+    /// Kernel-reported readiness; error/hangup bits may appear here
+    /// unrequested, which callers treat like readiness (the following
+    /// nonblocking read/write surfaces the actual condition).
+    pub revents: i16,
+}
+
+impl PollFd {
+    /// A request for `events` on `fd`, `revents` cleared.
+    pub fn new(fd: i32, events: i16) -> PollFd {
+        PollFd { fd, events, revents: 0 }
+    }
+}
+
+/// Block until at least one descriptor in `fds` is ready or `timeout`
+/// elapses; returns how many descriptors reported readiness (0 on
+/// timeout). EINTR is retried internally so callers never see it.
+#[cfg(target_os = "linux")]
+pub fn wait(fds: &mut [PollFd], timeout: Duration) -> std::io::Result<usize> {
+    use std::ffi::{c_int, c_ulong};
+    extern "C" {
+        // `poll(2)` — exported by both glibc and musl, which std links.
+        fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+    }
+    // The event loop only ever waits in short slices; clamp defensively
+    // so a caller-provided Duration can never overflow the C int.
+    let ms: c_int = crate::util::cast::to_i32(timeout.as_millis().min(60_000)).unwrap_or(60_000);
+    loop {
+        // SAFETY: `fds` is an exclusive, live slice of #[repr(C)] PollFd
+        // (the C `struct pollfd` layout) and its length is passed
+        // alongside the pointer; poll(2) writes only the `revents`
+        // fields inside that bound and keeps no reference past the call.
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as c_ulong, ms) };
+        if rc >= 0 {
+            return Ok(crate::util::cast::to_usize(rc).unwrap_or(0));
+        }
+        let err = std::io::Error::last_os_error();
+        if err.kind() != std::io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+/// Portable fallback: sleep one short slice, then report everything
+/// ready so the caller's nonblocking IO pass makes whatever progress
+/// the kernel allows. Busy-ish, but bounded by the slice length.
+#[cfg(not(target_os = "linux"))]
+pub fn wait(fds: &mut [PollFd], timeout: Duration) -> std::io::Result<usize> {
+    if !timeout.is_zero() {
+        std::thread::sleep(timeout.min(Duration::from_millis(1)));
+    }
+    for fd in fds.iter_mut() {
+        fd.revents = fd.events;
+    }
+    Ok(fds.len())
+}
+
+#[cfg(test)]
+// Wall-clock reads here only time the poll wait itself (clippy.toml's
+// net-deadline allowed zone).
+#[allow(clippy::disallowed_methods)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    #[cfg(unix)]
+    use std::os::unix::io::AsRawFd;
+
+    #[cfg(target_os = "linux")]
+    fn pair() -> (std::net::TcpStream, std::net::TcpStream) {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let a = std::net::TcpStream::connect(addr).unwrap();
+        let (b, _) = l.accept().unwrap();
+        (a, b)
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn connected_socket_is_writable_and_becomes_readable() {
+        let (mut a, b) = pair();
+        let mut fds = [PollFd::new(b.as_raw_fd(), POLLIN | POLLOUT)];
+        let n = wait(&mut fds, Duration::from_millis(200)).unwrap();
+        assert_eq!(n, 1, "a fresh socket should be writable");
+        assert_ne!(fds[0].revents & POLLOUT, 0);
+        assert_eq!(fds[0].revents & POLLIN, 0, "nothing sent yet");
+
+        a.write_all(b"ping").unwrap();
+        let mut fds = [PollFd::new(b.as_raw_fd(), POLLIN)];
+        let n = wait(&mut fds, Duration::from_millis(2000)).unwrap();
+        assert_eq!(n, 1);
+        assert_ne!(fds[0].revents & POLLIN, 0);
+        let mut buf = [0u8; 4];
+        let mut b = b;
+        b.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"ping");
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn idle_socket_times_out_with_zero_ready() {
+        let (_a, b) = pair();
+        let mut fds = [PollFd::new(b.as_raw_fd(), POLLIN)];
+        let t0 = std::time::Instant::now();
+        let n = wait(&mut fds, Duration::from_millis(20)).unwrap();
+        assert_eq!(n, 0);
+        assert!(t0.elapsed() >= Duration::from_millis(15), "must actually sleep");
+    }
+}

@@ -298,6 +298,13 @@ impl Transport for TcpTransport {
         let mut written = 0usize;
         let mut spins = 0u32;
         while written < self.wbuf.len() {
+            // The deadline bounds the logical op, not one syscall: check
+            // it on every iteration so a slow-but-progressing peer (a
+            // few bytes accepted per pass, never a clean WouldBlock)
+            // still surfaces a typed timeout (Transport::set_timeout).
+            if Instant::now() > deadline {
+                return Err(NetError::Timeout { rank: to, round: UNKNOWN_ROUND });
+            }
             let peer = self.peers[to]
                 .as_mut()
                 // intlint: allow(R4, reason="a missing stream is a mesh-construction bug, not a wire-reachable state")
@@ -415,6 +422,40 @@ mod tests {
             t0.elapsed() < Duration::from_secs(5),
             "stalled rank burned more than the configured timeout"
         );
+    }
+
+    #[test]
+    fn slow_but_progressing_peer_still_times_out() {
+        let mut mesh = TcpTransport::loopback_mesh(2).unwrap();
+        let b = mesh.pop().unwrap(); // alive: its kernel socket keeps accepting
+        let mut a = mesh.pop().unwrap();
+        a.set_timeout(Duration::from_millis(60));
+        // Trickle-drain rank 1's end on the raw socket so the sender
+        // keeps seeing partial-progress Ok(k) writes instead of a clean
+        // WouldBlock; the per-logical-op deadline must still trip.
+        let raw = b.peers[0].as_ref().unwrap().stream.try_clone().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let done = Arc::clone(&stop);
+        let drain = std::thread::spawn(move || {
+            let mut raw = raw;
+            let mut sink = [0u8; 1024];
+            while !done.load(Ordering::Relaxed) {
+                let _ = raw.read(&mut sink); // nonblocking: WouldBlock is fine
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        });
+        // 32 MiB cannot drain at ~1 KiB/ms within any plausible socket
+        // buffer + 60 ms budget.
+        let frame = vec![0u8; 32 << 20];
+        let t0 = Instant::now();
+        let err = a.send(1, &frame).expect_err("slow progress must still deadline");
+        assert_eq!(err, NetError::Timeout { rank: 1, round: UNKNOWN_ROUND });
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "deadline enforcement took far longer than the configured timeout"
+        );
+        stop.store(true, Ordering::Relaxed);
+        drain.join().unwrap();
     }
 
     #[test]

@@ -39,7 +39,7 @@ pub fn render() -> String {
     for def in registry::all() {
         let kind = match def.metric {
             Metric::C(_) | Metric::L(_) => "counter",
-            Metric::G(_) | Metric::V(_) => "gauge",
+            Metric::G(_) | Metric::V(..) => "gauge",
             Metric::H(_) => "histogram",
         };
         // help strings are written as wrapped literals; re-join them
@@ -54,9 +54,9 @@ pub fn render() -> String {
                 let _ = writeln!(out, "{} {}", def.name, g.get());
             }
             Metric::H(h) => render_histogram(&mut out, def.name, h),
-            Metric::V(v) => {
+            Metric::V(v, label) => {
                 for i in 0..v.used() {
-                    let _ = writeln!(out, "{}{{block=\"{i}\"}} {}", def.name, v.get(i));
+                    let _ = writeln!(out, "{}{{{label}=\"{i}\"}} {}", def.name, v.get(i));
                 }
             }
             Metric::L(l) => {

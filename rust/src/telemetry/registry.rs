@@ -186,6 +186,19 @@ impl GaugeVec {
         self.used.fetch_max(n, Ordering::Relaxed);
     }
 
+    /// Store one slot (zero-alloc: a single store). Indices past the
+    /// capacity update [`GaugeVec::overflowed`] instead of silently
+    /// vanishing — same contract as [`GaugeVec::set_all`].
+    #[inline]
+    pub fn set(&self, i: usize, v: f64) {
+        if let Some(slot) = self.slots.get(i) {
+            slot.set(v);
+            self.used.fetch_max(i + 1, Ordering::Relaxed);
+        } else {
+            self.overflow.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// Slots in use (high-water mark across rounds).
     pub fn used(&self) -> usize {
         self.used.load(Ordering::Relaxed)
@@ -285,6 +298,13 @@ pub mod m {
     // -- the journal's own health ----------------------------------------
     pub static JOURNAL_EVENTS: Counter = Counter::new();
     pub static JOURNAL_DROPPED: Counter = Counter::new();
+
+    // -- mux runtime / multi-job serving ---------------------------------
+    pub static NET_BACKPRESSURE_EVENTS: Counter = Counter::new();
+    pub static MUX_CHANNELS_ACTIVE: Gauge = Gauge::new();
+    pub static MUX_QUEUE_DEPTH: GaugeVec = GaugeVec::new();
+    pub static SERVER_JOBS_ACTIVE: Gauge = Gauge::new();
+    pub static SERVER_JOBS_COMPLETED: Counter = Counter::new();
 }
 
 /// A registered metric, as the exporters see it.
@@ -292,7 +312,10 @@ pub enum Metric {
     C(&'static Counter),
     G(&'static Gauge),
     H(&'static Histogram),
-    V(&'static GaugeVec),
+    /// A slot-indexed gauge family; the `&str` is the Prometheus label
+    /// the exporter keys each slot by (`block` for per-block alpha,
+    /// `channel` for per-channel mux queue depth).
+    V(&'static GaugeVec, &'static str),
     L(&'static LaneCounters),
 }
 
@@ -327,7 +350,7 @@ pub fn all() -> &'static [Def] {
         Def {
             name: "intsgd_alpha",
             help: "Per-block IntSGD scaling alpha (Alg. 2), last round.",
-            metric: V(&m::ALPHA_BLOCK),
+            metric: V(&m::ALPHA_BLOCK, "block"),
         },
         Def {
             name: "intsgd_alpha_min",
@@ -425,6 +448,31 @@ pub fn all() -> &'static [Def] {
             help: "Journal ring overwrites (oldest span evicted).",
             metric: C(&m::JOURNAL_DROPPED),
         },
+        Def {
+            name: "intsgd_net_backpressure_events_total",
+            help: "Sends that observed a full bounded channel queue.",
+            metric: C(&m::NET_BACKPRESSURE_EVENTS),
+        },
+        Def {
+            name: "intsgd_mux_channels_active",
+            help: "Mux channels with at least one live endpoint.",
+            metric: G(&m::MUX_CHANNELS_ACTIVE),
+        },
+        Def {
+            name: "intsgd_mux_queue_depth",
+            help: "Frames queued but unwritten, per mux channel (last send).",
+            metric: V(&m::MUX_QUEUE_DEPTH, "channel"),
+        },
+        Def {
+            name: "intsgd_server_jobs_active",
+            help: "Jobs currently scheduled by the SessionServer.",
+            metric: G(&m::SERVER_JOBS_ACTIVE),
+        },
+        Def {
+            name: "intsgd_server_jobs_completed_total",
+            help: "Jobs the SessionServer drove to completion.",
+            metric: C(&m::SERVER_JOBS_COMPLETED),
+        },
     ];
     DEFS
 }
@@ -468,6 +516,19 @@ mod tests {
         v.set_all(&wide);
         assert_eq!(v.used(), GaugeVec::CAPACITY);
         assert_eq!(v.overflowed(), 3);
+    }
+
+    #[test]
+    fn gauge_vec_single_slot_set_tracks_used_and_overflow() {
+        let v = GaugeVec::new();
+        v.set(3, 7.5);
+        assert_eq!(v.used(), 4, "used is a high-water mark over indices");
+        assert_eq!(v.get(3), 7.5);
+        v.set(0, 1.0);
+        assert_eq!(v.used(), 4, "lower slots keep the mark");
+        v.set(GaugeVec::CAPACITY, 2.0);
+        assert_eq!(v.overflowed(), 1, "out-of-capacity slots are counted");
+        assert_eq!(v.used(), 4);
     }
 
     #[test]

@@ -1,0 +1,189 @@
+//! Multi-job serving over one multiplexed mesh: the isolation and
+//! parity guarantees of DESIGN.md §13.
+//!
+//! 1. **Shared-mesh parity** — two concurrent jobs scheduled by a
+//!    [`SessionServer`] over one `MuxTransport::loopback_mesh` each end
+//!    bitwise-identical to a solo run of the same job (and the mux solo
+//!    run itself matches the in-proc channel backend bitwise — channel
+//!    framing is transport plumbing, invisible to the collective).
+//! 2. **Interleaving independence** — seeded scheduler jitter produces
+//!    different round interleavings; every one of them yields the same
+//!    bits (each job's frames ride a private channel with its own
+//!    round/seq guard).
+//! 3. **Fault isolation** — a seeded kill of one rank in job A makes A
+//!    fail over to the survivors while job B's result does not change
+//!    by a single bit.
+
+use intsgd::api::{
+    Backend, CompressorSpec, FaultSpec, JobSchedule, ModelSpec, Session, SessionBuilder,
+    SessionServer, StagedAlgo,
+};
+use intsgd::coordinator::net_driver::quad_factories;
+use intsgd::net::MuxTransport;
+
+const ALGO: StagedAlgo = StagedAlgo::Ring;
+
+/// The shared job shape: what job `seed` trains, regardless of which
+/// transport carries its collective.
+fn job_builder(n: usize, d: usize, seed: u64) -> SessionBuilder {
+    Session::builder()
+        .world(n)
+        .model(ModelSpec::flat(d))
+        .sources(quad_factories(n, d, seed, 0.01))
+        .compressor(CompressorSpec::parse("intsgd_random8").expect("spec"))
+        .seed(seed ^ 0xA5)
+        .lr(0.25)
+}
+
+/// Reference run: the job alone on a fresh backend of its own.
+fn solo_params(n: usize, d: usize, seed: u64, rounds: usize, backend: Backend) -> Vec<f32> {
+    let mut session = job_builder(n, d, seed).backend(backend).build().expect("solo build");
+    session.run(rounds).expect("solo run");
+    let params = session.params().to_vec();
+    session.finish();
+    params
+}
+
+#[test]
+fn two_concurrent_jobs_match_their_solo_runs_bitwise() {
+    let (n, d, rounds) = (3, 384, 8);
+    let (seed_a, seed_b) = (7, 21);
+
+    // solo references on private single-channel mux meshes ...
+    let solo_a = solo_params(n, d, seed_a, rounds, Backend::Mux { algo: ALGO });
+    let solo_b = solo_params(n, d, seed_b, rounds, Backend::Mux { algo: ALGO });
+    // ... which are themselves bit-identical to the in-proc channel
+    // backend: the mux envelope is stripped below the frame guard
+    let chan_a = solo_params(n, d, seed_a, rounds, Backend::Channel { algo: ALGO });
+    assert_eq!(solo_a, chan_a, "mux solo run differs from the channel backend");
+
+    // the same two jobs, concurrently, over ONE shared two-channel mesh
+    let mut mesh = MuxTransport::loopback_mesh(n, 2).expect("shared mesh");
+    let mut server = SessionServer::new(JobSchedule::RoundRobin);
+    let mut add = |seed: u64, channel: Vec<MuxTransport>, name: &str| {
+        let session = job_builder(n, d, seed)
+            .backend(Backend::Mux { algo: ALGO })
+            .mux_endpoints(channel)
+            .build()
+            .expect("job build");
+        server.add_job(name.to_string(), session, rounds).expect("admit")
+    };
+    let h_a = add(seed_a, mesh.remove(0), "job-a");
+    let h_b = add(seed_b, mesh.remove(0), "job-b");
+    server.run_to_completion().expect("both jobs complete");
+
+    assert!(server.is_done(h_a) && server.is_done(h_b));
+    assert_eq!(server.params(h_a), &solo_a[..], "job A perturbed by sharing the mesh");
+    assert_eq!(server.params(h_b), &solo_b[..], "job B perturbed by sharing the mesh");
+}
+
+#[test]
+fn any_seeded_jitter_interleaving_yields_the_same_bits() {
+    let (n, d, rounds) = (2, 256, 6);
+    let (seed_a, seed_b) = (3, 11);
+    let solo_a = solo_params(n, d, seed_a, rounds, Backend::Mux { algo: ALGO });
+    let solo_b = solo_params(n, d, seed_b, rounds, Backend::Mux { algo: ALGO });
+
+    for jitter in [1u64, 42, 9001] {
+        let mut mesh = MuxTransport::loopback_mesh(n, 2).expect("shared mesh");
+        let mut server = SessionServer::new(JobSchedule::Jitter { seed: jitter });
+        let a = job_builder(n, d, seed_a)
+            .backend(Backend::Mux { algo: ALGO })
+            .mux_endpoints(mesh.remove(0))
+            .build()
+            .expect("job a");
+        let b = job_builder(n, d, seed_b)
+            .backend(Backend::Mux { algo: ALGO })
+            .mux_endpoints(mesh.remove(0))
+            .build()
+            .expect("job b");
+        let h_a = server.add_job("job-a", a, rounds).expect("admit a");
+        let h_b = server.add_job("job-b", b, rounds).expect("admit b");
+        server.run_to_completion().expect("jittered schedule completes");
+        assert_eq!(server.params(h_a), &solo_a[..], "jitter seed {jitter} changed job A");
+        assert_eq!(server.params(h_b), &solo_b[..], "jitter seed {jitter} changed job B");
+    }
+}
+
+#[test]
+fn a_killed_rank_in_one_job_leaves_the_sibling_job_bit_unchanged() {
+    let (n, d, rounds) = (4, 256, 8);
+    let (seed_a, seed_b) = (5, 17);
+    let solo_b = solo_params(n, d, seed_b, rounds, Backend::Mux { algo: ALGO });
+
+    let mut mesh = MuxTransport::loopback_mesh(n, 2).expect("shared mesh");
+    let mut server = SessionServer::new(JobSchedule::RoundRobin);
+    // job A: rank 2's transport dies for good at collective round 3 —
+    // FaultTransport wraps the mux endpoints, so the death closes A's
+    // channel only, never the shared sockets under it
+    let a = job_builder(n, d, seed_a)
+        .backend(Backend::Mux { algo: ALGO })
+        .mux_endpoints(mesh.remove(0))
+        .faults(FaultSpec { kill: Some((2, 3)), ..FaultSpec::default() })
+        .net_timeout(std::time::Duration::from_millis(2_000))
+        .net_retries(16)
+        .build()
+        .expect("job a");
+    let b = job_builder(n, d, seed_b)
+        .backend(Backend::Mux { algo: ALGO })
+        .mux_endpoints(mesh.remove(0))
+        .build()
+        .expect("job b");
+    let h_a = server.add_job("chaotic", a, rounds).expect("admit a");
+    let h_b = server.add_job("clean", b, rounds).expect("admit b");
+    server.run_to_completion().expect("failover must keep both jobs running");
+
+    // A failed over: the world shrank and training kept going
+    assert!(
+        !server.session(h_a).failovers().is_empty(),
+        "the kill never fired — the chaos scenario did not happen"
+    );
+    assert_eq!(server.session(h_a).world(), n - 1, "job A runs on the survivors");
+    let recs = server.session(h_a).records();
+    let first = recs.first().expect("rounds").train_loss;
+    let last = recs.last().expect("rounds").train_loss;
+    assert!(last < first, "job A stopped making progress after failover");
+
+    // B never noticed: bitwise-identical to its solo run
+    assert_eq!(
+        server.params(h_b),
+        &solo_b[..],
+        "job B's bits changed when its mesh-sharing sibling lost a rank"
+    );
+    assert!(server.session(h_b).failovers().is_empty(), "job B saw a phantom failover");
+}
+
+#[test]
+fn mux_endpoint_validation_is_typed() {
+    // endpoints demand the Mux backend
+    let mut mesh = MuxTransport::loopback_mesh(2, 1).expect("mesh");
+    let err = job_builder(2, 64, 1)
+        .backend(Backend::Channel { algo: ALGO })
+        .mux_endpoints(mesh.remove(0))
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("Backend::Mux"), "{err}");
+
+    // endpoint count must match the world
+    let mut mesh = MuxTransport::loopback_mesh(3, 1).expect("mesh");
+    let err = job_builder(2, 64, 1)
+        .backend(Backend::Mux { algo: ALGO })
+        .mux_endpoints(mesh.remove(0))
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("world"), "{err}");
+
+    // endpoints must arrive rank-ordered
+    let mut mesh = MuxTransport::loopback_mesh(2, 1).expect("mesh");
+    let mut eps = mesh.remove(0);
+    eps.swap(0, 1);
+    let err = job_builder(2, 64, 1)
+        .backend(Backend::Mux { algo: ALGO })
+        .mux_endpoints(eps)
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("rank order"), "{err}");
+}

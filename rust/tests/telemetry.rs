@@ -63,7 +63,7 @@ fn chrome_trace_matches_golden_bytes() {
 /// new instrument that is not added to this scrape test (and therefore
 /// never verified over a real `/metrics` scrape) fails static analysis
 /// before it fails in a dashboard.
-const FAMILIES: [&str; 23] = [
+const FAMILIES: [&str; 28] = [
     "intsgd_rounds_total",
     "intsgd_failovers_total",
     "intsgd_train_loss",
@@ -87,6 +87,11 @@ const FAMILIES: [&str; 23] = [
     "intsgd_faults_injected_total",
     "intsgd_journal_events_total",
     "intsgd_journal_dropped_total",
+    "intsgd_net_backpressure_events_total",
+    "intsgd_mux_channels_active",
+    "intsgd_mux_queue_depth",
+    "intsgd_server_jobs_active",
+    "intsgd_server_jobs_completed_total",
 ];
 
 #[test]
